@@ -1,0 +1,91 @@
+//! End-to-end driver (DESIGN.md §5): proves all three layers compose on a
+//! real workload.
+//!
+//! 1. Generate a synthetic corpus, train a BPE tokenizer (L3 data pipeline)
+//! 2. Pretrain the decoder for a few hundred steps via the AOT train-step
+//!    HLO (L2 graph wrapping the L1 Pallas kernels), logging the loss curve
+//! 3. Apply the CLOVER transform + prune 50% of every head (L3 linalg)
+//! 4. Recovery-fine-tune only the singular values (CLOVER†)
+//! 5. Evaluate perplexity at every stage and boot the batched KV-cache
+//!    serving engine, reporting throughput and KV bytes before/after
+//!
+//! ```sh
+//! cargo run --release --example e2e_train_prune_finetune [steps] [preset]
+//! ```
+//!
+//! Defaults: 300 steps on `tiny` (~minutes on one CPU core).  `small`
+//! (~4M params) and `large` (~100M) presets exist; see DESIGN.md §5 for
+//! the wallclock scale note.  Results recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use clover::coordinator::{eval, ops};
+use clover::data::build_lm_stream;
+use clover::runtime::Runtime;
+use clover::serve::{BatchPolicy, Engine, Request};
+use clover::util::{human_bytes, Stopwatch};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let preset = args.get(2).cloned().unwrap_or_else(|| "tiny".to_string());
+    let sw = Stopwatch::new();
+
+    let rt = Runtime::new("artifacts")?;
+    let entry = rt.manifest().config(&preset)?.clone();
+    let vocab = entry.dim("vocab")?;
+    println!("== e2e: preset {preset}, {steps} pretrain steps ==");
+
+    // 1. Data pipeline.
+    let (_tok, stream) = build_lm_stream("mixture", vocab, 400_000, 42);
+    println!("[{:6.1}s] corpus+tokenizer ready ({} train tokens)", sw.elapsed_s(),
+             stream.train_len());
+
+    // 2. Pretrain; loss curve goes to stderr via the coordinator logger.
+    let init = ops::init_params(&rt, &preset, 42)?;
+    let (dense, curve) = ops::pretrain(&rt, &preset, init, &stream, steps, 1e-3, 42, "e2e")?;
+    println!("[{:6.1}s] pretrain done; loss curve:", sw.elapsed_s());
+    for (step, loss) in &curve {
+        println!("    step {step:>5}  ema-loss {loss:.4}");
+    }
+    let ppl0 = eval::perplexity(&rt, &preset, "nll", &dense, &stream, 8)?;
+    println!("[{:6.1}s] base ppl          {ppl0:8.2}", sw.elapsed_s());
+
+    // 3. CLOVER-prune 50% (and the vanilla baseline for contrast).
+    let (clv, r) = ops::prune_to_ratio(&entry, &dense, 0.5, "clover")?;
+    let (van, _) = ops::prune_to_ratio(&entry, &dense, 0.5, "vanilla")?;
+    let ppl_clv = ops::fac_perplexity(&rt, &preset, &clv, r, &stream, 8)?;
+    let ppl_van = ops::fac_perplexity(&rt, &preset, &van, r, &stream, 8)?;
+    println!("[{:6.1}s] 50% pruned         CLOVER {ppl_clv:8.2} | vanilla {ppl_van:8.2}",
+             sw.elapsed_s());
+
+    // 4. CLOVER†: fine-tune singular values only.
+    let ft_steps = (steps / 2).max(20);
+    let (recovered, _) = ops::recover(&rt, &preset, clv, r, "s", &stream, ft_steps, 6e-3, 42)?;
+    let ppl_rec = ops::fac_perplexity(&rt, &preset, &recovered, r, &stream, 8)?;
+    println!("[{:6.1}s] CLOVER† recovered  ppl {ppl_rec:8.2} ({ft_steps} S-only steps)",
+             sw.elapsed_s());
+
+    // 5. Serve: batched KV-cache decode, dense vs pruned.
+    let now = std::time::Instant::now();
+    let mk_reqs = || -> Vec<Request> {
+        (0..8u64).map(|id| Request {
+            id, prompt: vec![3, 5, 7, 11], max_new: 16, arrived: now,
+        }).collect()
+    };
+    let policy = BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) };
+    let dense_engine = Engine::new(&rt, &preset, "decode_b8", dense)?;
+    let (_, md) = dense_engine.serve_all(mk_reqs(), policy.clone())?;
+    let fac_engine = Engine::new(&rt, &preset, &format!("decode_fac_r{r}_b8"), recovered)?;
+    let (_, mf) = fac_engine.serve_all(mk_reqs(), policy)?;
+    println!(
+        "[{:6.1}s] serve dense : {:6.1} tok/s, peak KV {}",
+        sw.elapsed_s(), md.tokens_per_s(), human_bytes(md.kv_peak_bytes)
+    );
+    println!(
+        "[{:6.1}s] serve pruned: {:6.1} tok/s, peak KV {} ({:.1}x smaller)",
+        sw.elapsed_s(), mf.tokens_per_s(), human_bytes(mf.kv_peak_bytes),
+        md.kv_peak_bytes as f64 / mf.kv_peak_bytes.max(1) as f64
+    );
+    println!("== e2e complete in {:.1}s ==", sw.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! PEFT comparison on the 8-task synthetic commonsense suite (Table 2),
+//! plus the ΔW rank (Fig 5) and intruder-dimension (Fig 6) analyses that
+//! fall out of the same training runs.
+//!
+//! ```sh
+//! cargo run --release --example peft_comparison [-- --full]
+//! ```
+//! Quick mode by default (~minutes); `--full` uses the paper-scale step
+//! budgets recorded in EXPERIMENTS.md.
+
+use anyhow::Result;
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let (table, outcomes) = experiments::table2(&rt, &opts)?;
+    table.emit("table2")?;
+    experiments::fig5_from(&outcomes).emit("fig5")?;
+    experiments::fig6_from(&outcomes).emit("fig6")?;
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! §4.4 reproduction: training-free pruning of a whisper-like transcription
+//! model.  Trains a small encoder-decoder on synthetic signal→token pairs,
+//! then compares CLOVER vs vanilla structured pruning of the encoder's
+//! attention at matched ratios — the paper's result is that CLOVER stays
+//! near-lossless at ~50% while vanilla output collapses.
+//!
+//! ```sh
+//! cargo run --release --example whisper_like_pruning [-- --full]
+//! ```
+
+use anyhow::Result;
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    experiments::fig3_whisper(&rt, &opts)?.emit("whisper_like_pruning")
+}

@@ -1,0 +1,518 @@
+"""AOT exporter: lower every L2 program to HLO text + manifest + goldens.
+
+This is the only place Python runs in the whole system, and it runs once
+(``make artifacts``).  Each jitted entry point is lowered over a *flat*
+argument list (ordering defined by the param specs in ``model.py`` /
+``s2s.py``), converted to an XlaComputation, and dumped as **HLO text** —
+xla_extension 0.5.1 rejects jax≥0.5's serialized protos (64-bit instruction
+ids), but the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs under ``--out`` (default ``../artifacts``):
+  <cfg>/<program>.hlo.txt      one per program
+  <cfg>/golden_<program>.npz   inputs (arg0..) + expected outputs (out0..)
+                               for the Rust integration tests
+  manifest.json                every config, param layout, program signature
+
+Usage:  python -m compile.aot --out ../artifacts [--configs tiny,small]
+                              [--skip-goldens] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import s2s as S
+from .configs import DECODERS, SEQ2SEQ, ModelConfig, Seq2SeqConfig
+
+# Training/eval batch sizes baked into the artifacts (HLO is shape-static).
+TRAIN_BATCH = {"tiny": 16, "small": 16, "large": 8}
+DECODE_BATCHES = (1, 8)
+S2S_BATCH = 8
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Program:
+    """One exportable entry point: a function plus its flat input signature."""
+
+    def __init__(self, name: str, fn: Callable, inputs: List[Tuple[str, Sequence[int], str]],
+                 outputs: List[str], golden: bool = False):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # (name, shape, dtype-str)
+        self.outputs = outputs  # names only; shapes filled at export
+        self.golden = golden
+
+    def input_specs(self):
+        return [sds(shape, jnp.dtype(dt)) for _, shape, dt in self.inputs]
+
+
+def _sig_params(spec) -> List[Tuple[str, Sequence[int], str]]:
+    return [(n, s, "float32") for n, s in spec]
+
+
+def _sig_opt(train_names, spec) -> List[Tuple[str, Sequence[int], str]]:
+    shapes = dict(spec)
+    out = []
+    for kind in ("m", "v"):
+        out += [(f"{kind}_{n}", shapes[n], "float32") for n in train_names]
+    return out
+
+
+def _sig_batch(b, t) -> List[Tuple[str, Sequence[int], str]]:
+    return [("step", (), "int32"), ("inputs", (b, t), "int32"),
+            ("targets", (b, t), "int32"), ("lr", (), "float32")]
+
+
+def decoder_programs(cfg: ModelConfig) -> List[Program]:
+    progs: List[Program] = []
+    b = TRAIN_BATCH[cfg.name]
+    t = cfg.seq_len
+    dense = M.dense_param_spec(cfg)
+    dense_sig = _sig_params(dense)
+
+    # ---- init ------------------------------------------------------------
+    def init_fn(seed):
+        p = M.init_dense(cfg, seed)
+        return tuple(M.flat_from_params(dense, p))
+
+    progs.append(Program("init", init_fn, [("seed", (), "int32")],
+                         [n for n, _ in dense], golden=True))
+
+    # ---- dense forward / nll / hidden -------------------------------------
+    def fwd_fn(*flat):
+        params = M.params_from_flat(dense, flat[:-1])
+        return (M.forward_dense(cfg, params, flat[-1]),)
+
+    progs.append(Program("fwd", fwd_fn,
+                         dense_sig + [("tokens", (b, t), "int32")],
+                         ["logits"], golden=True))
+
+    def nll_fn(*flat):
+        params = M.params_from_flat(dense, flat[:-2])
+        return (M.nll(M.forward_dense(cfg, params, flat[-2]), flat[-1]),)
+
+    progs.append(Program("nll", nll_fn,
+                         dense_sig + [("inputs", (b, t), "int32"), ("targets", (b, t), "int32")],
+                         ["loss"], golden=True))
+
+    def hidden_fn(*flat):
+        """Per-layer post-LN1 activations for the Fig-4 projection study.
+
+        Also returns the final-LN output so every parameter is live — jax
+        DCEs unused arguments out of the lowered signature, which would
+        desync the manifest."""
+        params = M.params_from_flat(dense, flat[:-1])
+        tokens = flat[-1]
+        x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+        stacked = {n: params[n] for n in M._LAYER_DENSE}
+
+        def per_example(xe):
+            def body(h, lp):
+                h1 = M.ref.layernorm(h, lp["ln1_g"], lp["ln1_b"])
+                nxt = M._block_dense(cfg, h, lp, use_pallas=False)
+                return nxt, h1
+
+            last, hs = jax.lax.scan(body, xe, stacked)
+            final = M.ref.layernorm(last, params["lnf_g"], params["lnf_b"])
+            return hs, final  # [L, T, D], [T, D]
+
+        hs, final = jax.vmap(per_example)(x)
+        return (hs, final)  # [B, L, T, D], [B, T, D]
+
+    progs.append(Program("hidden", hidden_fn,
+                         dense_sig + [("tokens", (b, t), "int32")], ["hidden", "final"]))
+
+    # ---- dense train steps -------------------------------------------------
+    def loss_dense(params, inputs, targets):
+        return M.nll(M.forward_dense(cfg, params, inputs), targets)
+
+    for pname, trainable, wd in [
+        ("train_full", [n for n, _ in dense], 0.01),
+        ("train_attn", ["wq", "wk", "wv", "wo"], 0.0),
+    ]:
+        step_fn, train_names = M.make_train_step(loss_dense, dense, trainable, wd)
+        sig = dense_sig + _sig_opt(train_names, dense) + _sig_batch(b, t)
+        outs = train_names + [f"m_{n}" for n in train_names] + \
+            [f"v_{n}" for n in train_names] + ["step", "loss"]
+        progs.append(Program(pname, step_fn, sig, outs, golden=(pname == "train_full")))
+
+    # ---- dense decode ------------------------------------------------------
+    for db in DECODE_BATCHES:
+        def mk_decode(db):
+            def decode_fn(*flat):
+                params = M.params_from_flat(dense, flat[:-4])
+                kc, vc, toks, pos = flat[-4:]
+                return M.decode_step_dense(cfg, params, kc, vc, toks, pos)
+            return decode_fn
+
+        cache = (cfg.n_layers, db, cfg.n_heads, t, cfg.d_head)
+        progs.append(Program(
+            f"decode_b{db}", mk_decode(db),
+            dense_sig + [("k_cache", cache, "float32"), ("v_cache", cache, "float32"),
+                         ("tokens", (db,), "int32"), ("pos", (), "int32")],
+            ["logits", "k_cache", "v_cache"], golden=(db == 1)))
+
+    # ---- PEFT train steps (adapters over frozen dense base) ----------------
+    for kind in ("lora", "dora", "hira"):
+        ad_spec = (M.dora_param_spec if kind == "dora" else M.lora_param_spec)(cfg, cfg.lora_rank)
+        step_fn = M.make_peft_train_step(cfg, kind, dense, ad_spec)
+        ad_names = [n for n, _ in ad_spec]
+        sig = dense_sig + _sig_params(ad_spec) + _sig_opt(ad_names, ad_spec) + _sig_batch(b, t)
+        outs = ad_names + [f"m_{n}" for n in ad_names] + [f"v_{n}" for n in ad_names] + \
+            ["step", "loss"]
+        progs.append(Program(f"train_{kind}", step_fn, sig, outs, golden=(kind == "lora")))
+
+        def mk_peft_fwd(kind, ad_spec):
+            def peft_fwd_fn(*flat):
+                nb, na = len(dense), len(ad_spec)
+                params = M.params_from_flat(dense, flat[:nb])
+                ad = M.params_from_flat(ad_spec, flat[nb:nb + na])
+                return (M.peft_forward(cfg, kind, params, ad, flat[-1]),)
+            return peft_fwd_fn
+
+        progs.append(Program(f"fwd_{kind}", mk_peft_fwd(kind, ad_spec),
+                             dense_sig + _sig_params(ad_spec) + [("tokens", (b, t), "int32")],
+                             ["logits"]))
+
+    # ---- factorized programs per rank ---------------------------------------
+    ranks = cfg.ranks() if cfg.name != "large" else cfg.clover_ranks[:2]
+    for r in ranks:
+        fac = M.fac_param_spec(cfg, r)
+        fac_sig = _sig_params(fac)
+
+        def mk(r, fac):
+            def fwd_fac_fn(*flat):
+                params = M.params_from_flat(fac, flat[:-1])
+                return (M.forward_fac(cfg, params, flat[-1]),)
+
+            def nll_fac_fn(*flat):
+                params = M.params_from_flat(fac, flat[:-2])
+                return (M.nll(M.forward_fac(cfg, params, flat[-2]), flat[-1]),)
+
+            def loss_fac(params, inputs, targets):
+                return M.nll(M.forward_fac(cfg, params, inputs), targets)
+
+            def decode_fac_fn(*flat):
+                params = M.params_from_flat(fac, flat[:-4])
+                kc, voc, toks, pos = flat[-4:]
+                return M.decode_step_fac(cfg, r, params, kc, voc, toks, pos)
+
+            return fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn
+
+        fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn = mk(r, fac)
+        progs.append(Program(f"fwd_fac_r{r}", fwd_fac_fn,
+                             fac_sig + [("tokens", (b, t), "int32")], ["logits"],
+                             golden=(r == cfg.d_head)))
+        progs.append(Program(f"nll_fac_r{r}", nll_fac_fn,
+                             fac_sig + [("inputs", (b, t), "int32"),
+                                        ("targets", (b, t), "int32")],
+                             ["loss"], golden=(r == cfg.d_head)))
+
+        for pname, trainable in [
+            (f"train_fac_attn_r{r}", ["u_qk", "s_qk", "v_qk", "u_vo", "s_vo", "v_vo"]),
+            (f"train_clover_s_r{r}", ["s_qk", "s_vo"]),
+        ]:
+            step_fn, train_names = M.make_train_step(loss_fac, fac, trainable, 0.0)
+            sig = fac_sig + _sig_opt(train_names, fac) + _sig_batch(b, t)
+            outs = train_names + [f"m_{n}" for n in train_names] + \
+                [f"v_{n}" for n in train_names] + ["step", "loss"]
+            progs.append(Program(pname, step_fn, sig, outs))
+
+        for db in DECODE_BATCHES:
+            cache = (cfg.n_layers, db, cfg.n_heads, t, r)
+
+            def mk_decode_fac(db, fac, decode_fac_fn):
+                def f(*flat):
+                    return decode_fac_fn(*flat)
+                return f
+
+            progs.append(Program(
+                f"decode_fac_r{r}_b{db}", mk_decode_fac(db, fac, decode_fac_fn),
+                fac_sig + [("k_cache", cache, "float32"), ("vo_cache", cache, "float32"),
+                           ("tokens", (db,), "int32"), ("pos", (), "int32")],
+                ["logits", "k_cache", "vo_cache"]))
+
+    # ---- CLOVER fine-tuning config (full rank + factorized MLP.Up) ----------
+    facud = M.fac_param_spec(cfg, cfg.d_head, with_ud=True)
+    facud_sig = _sig_params(facud)
+
+    def loss_facud(params, inputs, targets):
+        return M.nll(M.forward_fac(cfg, params, inputs), targets)
+
+    step_fn, train_names = M.make_train_step(
+        loss_facud, facud, ["s_qk", "s_vo", "s_ud"], 0.0)
+    sig = facud_sig + _sig_opt(train_names, facud) + _sig_batch(b, t)
+    outs = train_names + [f"m_{n}" for n in train_names] + \
+        [f"v_{n}" for n in train_names] + ["step", "loss"]
+    progs.append(Program("train_cloverft", step_fn, sig, outs))
+
+    def fwd_facud_fn(*flat):
+        params = M.params_from_flat(facud, flat[:-1])
+        return (M.forward_fac(cfg, params, flat[-1]),)
+
+    progs.append(Program("fwd_cloverft", fwd_facud_fn,
+                         facud_sig + [("tokens", (b, t), "int32")], ["logits"]))
+
+    return progs
+
+
+def s2s_programs(cfg: Seq2SeqConfig) -> List[Program]:
+    progs: List[Program] = []
+    b = S2S_BATCH
+    spec = S.s2s_param_spec(cfg)
+    sig = _sig_params(spec)
+    feats = ("feats", (b, cfg.src_len, cfg.feat_dim), "float32")
+    tok_in = ("tokens_in", (b, cfg.tgt_len), "int32")
+    tok_tgt = ("tokens_tgt", (b, cfg.tgt_len), "int32")
+
+    def init_fn(seed):
+        return tuple(S.init_s2s(cfg, seed)[n] for n, _ in spec)
+
+    progs.append(Program("init", init_fn, [("seed", (), "int32")],
+                         [n for n, _ in spec], golden=True))
+
+    def fwd_fn(*flat):
+        params = {n: a for (n, _), a in zip(spec, flat[:-2])}
+        return (S.s2s_logits(cfg, params, flat[-2], flat[-1]),)
+
+    progs.append(Program("fwd", fwd_fn, sig + [feats, tok_in], ["logits"], golden=True))
+
+    def nll_fn(*flat):
+        params = {n: a for (n, _), a in zip(spec, flat[:-3])}
+        return (S.s2s_nll(cfg, params, flat[-3], flat[-2], flat[-1]),)
+
+    progs.append(Program("nll", nll_fn, sig + [feats, tok_in, tok_tgt], ["loss"]))
+
+    def loss_fn(params, inputs, targets):
+        # inputs packs (feats, tokens_in) — handled below by closure instead.
+        raise NotImplementedError
+
+    # Full train step (custom signature: feats + tokens).
+    names = [n for n, _ in spec]
+
+    def train_fn(*flat):
+        n = len(spec)
+        params = {nm: a for (nm, _), a in zip(spec, flat[:n])}
+        ms = dict(zip(names, flat[n:2 * n]))
+        vs = dict(zip(names, flat[2 * n:3 * n]))
+        step_count, feats_, tin, ttgt, lr = flat[3 * n:]
+
+        def loss_of(p):
+            return S.s2s_nll(cfg, p, feats_, tin, ttgt)
+
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        grads = M.global_norm_clip(grads)
+        new_step = step_count + 1
+        outs, oms, ovs = [], [], []
+        for nm in names:
+            p2, m2, v2 = M.adamw_update(params[nm], grads[nm], ms[nm], vs[nm],
+                                        new_step.astype(jnp.float32), lr, 0.01)
+            outs.append(p2)
+            oms.append(m2)
+            ovs.append(v2)
+        return tuple(outs + oms + ovs + [new_step, loss])
+
+    shapes = dict(spec)
+    opt_sig = [(f"m_{n}", shapes[n], "float32") for n in names] + \
+              [(f"v_{n}", shapes[n], "float32") for n in names]
+    progs.append(Program(
+        "train_full", train_fn,
+        sig + opt_sig + [("step", (), "int32"), feats, tok_in, tok_tgt, ("lr", (), "float32")],
+        names + [f"m_{n}" for n in names] + [f"v_{n}" for n in names] + ["step", "loss"]))
+
+    # Factorized-encoder variants per rank.
+    for r in cfg.ranks():
+        fspec = S.s2s_fac_param_spec(cfg, r)
+        fsig = _sig_params(fspec)
+
+        def mk(fspec):
+            def fwd_fac_fn(*flat):
+                params = {n: a for (n, _), a in zip(fspec, flat[:-2])}
+                return (S.s2s_logits(cfg, params, flat[-2], flat[-1], factorized=True),)
+
+            def nll_fac_fn(*flat):
+                params = {n: a for (n, _), a in zip(fspec, flat[:-3])}
+                return (S.s2s_nll(cfg, params, flat[-3], flat[-2], flat[-1], factorized=True),)
+
+            return fwd_fac_fn, nll_fac_fn
+
+        fwd_fac_fn, nll_fac_fn = mk(fspec)
+        progs.append(Program(f"fwd_fac_r{r}", fwd_fac_fn, fsig + [feats, tok_in], ["logits"],
+                             golden=(r == cfg.d_head)))
+        progs.append(Program(f"nll_fac_r{r}", nll_fac_fn, fsig + [feats, tok_in, tok_tgt],
+                             ["loss"]))
+
+    return progs
+
+
+# --------------------------------------------------------------------------
+# Export driver
+# --------------------------------------------------------------------------
+
+
+def _golden_inputs(prog: Program, rng: np.random.Generator):
+    """Deterministic pseudo-random concrete inputs for golden generation."""
+    args = []
+    for name, shape, dt in prog.inputs:
+        if dt == "int32":
+            if name in ("step", "pos"):
+                args.append(np.asarray(0, np.int32))
+            elif name == "seed":
+                args.append(np.asarray(42, np.int32))
+            else:
+                args.append(rng.integers(0, 17, size=shape).astype(np.int32))
+        else:
+            if name == "lr":
+                args.append(np.asarray(1e-3, np.float32))
+            elif name.startswith(("m_", "v_")) or "cache" in name:
+                args.append(np.zeros(shape, np.float32))
+            else:
+                args.append((rng.standard_normal(shape) * 0.05).astype(np.float32))
+    return args
+
+
+GOLDEN_CONFIGS = {"tiny", "s2s_tiny"}  # goldens for big configs cost ~100MB each
+
+
+def export_config(cfg_name: str, progs: List[Program], out_dir: str,
+                  skip_goldens: bool, force: bool) -> Dict:
+    skip_goldens = skip_goldens or cfg_name not in GOLDEN_CONFIGS
+    cdir = os.path.join(out_dir, cfg_name)
+    os.makedirs(cdir, exist_ok=True)
+    entry: Dict = {"programs": {}}
+    for prog in progs:
+        path = os.path.join(cdir, f"{prog.name}.hlo.txt")
+        out_shapes = jax.eval_shape(prog.fn, *prog.input_specs())
+        if not isinstance(out_shapes, tuple):
+            out_shapes = (out_shapes,)
+        if force or not os.path.exists(path):
+            lowered = jax.jit(prog.fn).lower(*prog.input_specs())
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+        assert len(out_shapes) == len(prog.outputs), (
+            prog.name, len(out_shapes), len(prog.outputs))
+        entry["programs"][prog.name] = {
+            "file": f"{cfg_name}/{prog.name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": d} for n, s, d in prog.inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": [int(x) for x in o.shape], "dtype": str(o.dtype)}
+                for n, o in zip(prog.outputs, out_shapes)
+            ],
+        }
+        gpath = os.path.join(cdir, f"golden_{prog.name}.npz")
+        if prog.golden and not skip_goldens and (force or not os.path.exists(gpath)):
+            rng = np.random.default_rng(7)
+            args = _golden_inputs(prog, rng)
+            outs = jax.jit(prog.fn)(*args)
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            payload = {f"arg{i}": a for i, a in enumerate(args)}
+            payload.update({f"out{i}": np.asarray(o) for i, o in enumerate(outs)})
+            np.savez(gpath, **payload)
+            entry["programs"][prog.name]["golden"] = f"{cfg_name}/golden_{prog.name}.npz"
+        elif prog.golden and os.path.exists(gpath):
+            entry["programs"][prog.name]["golden"] = f"{cfg_name}/golden_{prog.name}.npz"
+        print(f"  [{cfg_name}] {prog.name}", flush=True)
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,s2s_tiny")
+    ap.add_argument("--skip-goldens", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    want = set(args.configs.split(","))
+    manifest: Dict = {"configs": {}}
+    mpath = os.path.join(args.out, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    for cfg in DECODERS:
+        if cfg.name not in want:
+            continue
+        print(f"exporting decoder config {cfg.name} "
+              f"({cfg.n_params/1e6:.1f}M params)", flush=True)
+        entry = export_config(cfg.name, decoder_programs(cfg), args.out,
+                              args.skip_goldens, args.force)
+        entry.update({
+            "kind": "decoder",
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "seq_len": cfg.seq_len, "d_ff": cfg.d_ff,
+            "d_head": cfg.d_head, "ranks": list(cfg.ranks()),
+            "lora_rank": cfg.lora_rank, "train_batch": TRAIN_BATCH[cfg.name],
+            "decode_batches": list(DECODE_BATCHES), "ud_block": M.UD_BLOCK,
+            "params_dense": [{"name": n, "shape": list(s)}
+                             for n, s in M.dense_param_spec(cfg)],
+            "params_fac": {str(r): [{"name": n, "shape": list(s)}
+                                    for n, s in M.fac_param_spec(cfg, r)]
+                           for r in cfg.ranks()},
+            "params_facud": [{"name": n, "shape": list(s)}
+                             for n, s in M.fac_param_spec(cfg, cfg.d_head, with_ud=True)],
+            "params_lora": [{"name": n, "shape": list(s)}
+                            for n, s in M.lora_param_spec(cfg, cfg.lora_rank)],
+            "params_dora": [{"name": n, "shape": list(s)}
+                            for n, s in M.dora_param_spec(cfg, cfg.lora_rank)],
+        })
+        manifest["configs"][cfg.name] = entry
+
+    for cfg in SEQ2SEQ:
+        if cfg.name not in want:
+            continue
+        print(f"exporting seq2seq config {cfg.name}", flush=True)
+        entry = export_config(cfg.name, s2s_programs(cfg), args.out,
+                              args.skip_goldens, args.force)
+        entry.update({
+            "kind": "seq2seq",
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_enc_layers": cfg.n_enc_layers, "n_dec_layers": cfg.n_dec_layers,
+            "feat_dim": cfg.feat_dim, "src_len": cfg.src_len, "tgt_len": cfg.tgt_len,
+            "d_ff": cfg.d_ff, "d_head": cfg.d_head, "ranks": list(cfg.ranks()),
+            "batch": S2S_BATCH,
+            "params": [{"name": n, "shape": list(s)} for n, s in S.s2s_param_spec(cfg)],
+            "params_fac": {str(r): [{"name": n, "shape": list(s)}
+                                    for n, s in S.s2s_fac_param_spec(cfg, r)]
+                           for r in cfg.ranks()},
+        })
+        manifest["configs"][cfg.name] = entry
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

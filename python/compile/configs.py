@@ -1,0 +1,171 @@
+"""Model configurations shared by the L2 JAX programs and the AOT exporter.
+
+Every config here corresponds to a family of HLO artifacts under
+``artifacts/<name>/`` and to a ``[model]`` preset in the Rust config system
+(`rust/src/config/presets.rs`).  The Rust side never re-derives shapes: it
+reads them from ``artifacts/manifest.json`` which is generated from these
+dataclasses, so this file is the single source of truth for parameter
+layouts.
+
+CLOVER rank grid
+----------------
+Structured pruning keeps the same rank ``r`` in every head (the paper prunes
+"a fixed percentage of the smallest singular vectors" per head to stay
+hardware friendly).  One HLO artifact is exported per rank in
+``clover_ranks``; the Rust pruning engine picks the artifact matching the
+requested ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A GPT-style decoder-only transformer (pre-LN, learned positions,
+    weight-tied LM head, bias-free projections — see DESIGN.md for the
+    deviation notes vs GPT-2)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    d_ff: int
+    # Ranks (per head) for which factorized/pruned artifacts are exported.
+    # Always includes d_head (the lossless CLOVER orthogonalization).
+    clover_ranks: Tuple[int, ...] = ()
+    # LoRA-class adapter rank used by the PEFT train-step artifacts.
+    lora_rank: int = 8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Dense parameter count (embeddings + blocks + final LN)."""
+        d, f, l, v, t = self.d_model, self.d_ff, self.n_layers, self.vocab, self.seq_len
+        per_layer = 4 * d * d + 2 * d * f + 4 * d  # attn + mlp + 2 LN (g,b)
+        return v * d + t * d + l * per_layer + 2 * d
+
+    def ranks(self) -> Tuple[int, ...]:
+        if self.clover_ranks:
+            return self.clover_ranks
+        return (self.d_head,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Seq2SeqConfig:
+    """Whisper-like encoder-decoder used by the §4.4 training-free pruning
+    experiment: a continuous feature sequence in, token transcript out."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_enc_layers: int
+    n_dec_layers: int
+    feat_dim: int
+    src_len: int
+    tgt_len: int
+    d_ff: int
+    clover_ranks: Tuple[int, ...] = ()
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def ranks(self) -> Tuple[int, ...]:
+        if self.clover_ranks:
+            return self.clover_ranks
+        return (self.d_head,)
+
+
+def _rank_grid(d_head: int) -> Tuple[int, ...]:
+    """Ranks matching Table 1's pruning ratios 0%..87.5% in steps of 12.5%."""
+    grid = []
+    for k in range(8, 0, -1):  # 8/8 .. 1/8
+        r = max(1, d_head * k // 8)
+        if r not in grid:
+            grid.append(r)
+    return tuple(grid)
+
+
+# --- decoder presets -------------------------------------------------------
+
+TINY = ModelConfig(
+    name="tiny",
+    vocab=256,
+    d_model=64,
+    n_heads=4,
+    n_layers=2,
+    seq_len=64,
+    d_ff=256,
+    clover_ranks=_rank_grid(16),
+    lora_rank=4,
+)
+
+SMALL = ModelConfig(
+    name="small",
+    vocab=512,
+    d_model=256,
+    n_heads=8,
+    n_layers=4,
+    seq_len=128,
+    d_ff=1024,
+    clover_ranks=_rank_grid(32),
+    lora_rank=8,
+)
+
+# ~100M-class preset: AOT-exports fine; a few hundred training steps of it
+# is ~10h on this 1-core box, so recorded runs use SMALL (see DESIGN.md §5).
+LARGE = ModelConfig(
+    name="large",
+    vocab=8192,
+    d_model=768,
+    n_heads=12,
+    n_layers=12,
+    seq_len=256,
+    d_ff=3072,
+    clover_ranks=(64, 48, 32, 16),
+    lora_rank=16,
+)
+
+# --- seq2seq (whisper-like) preset ----------------------------------------
+
+S2S_TINY = Seq2SeqConfig(
+    name="s2s_tiny",
+    vocab=64,
+    d_model=128,
+    n_heads=4,
+    n_enc_layers=2,
+    n_dec_layers=2,
+    feat_dim=16,
+    src_len=96,
+    tgt_len=48,
+    d_ff=512,
+    clover_ranks=(32, 24, 16, 12, 8, 4),
+)
+
+DECODERS: List[ModelConfig] = [TINY, SMALL, LARGE]
+SEQ2SEQ: List[Seq2SeqConfig] = [S2S_TINY]
+
+
+def decoder_by_name(name: str) -> ModelConfig:
+    for c in DECODERS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown decoder config {name!r}")
+
+
+def seq2seq_by_name(name: str) -> Seq2SeqConfig:
+    for c in SEQ2SEQ:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown seq2seq config {name!r}")

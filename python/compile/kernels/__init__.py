@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernels for CLOVER factorized attention.
+
+Public surface used by the L2 model (``compile.model``):
+
+* :func:`fused_attention_ctx` — differentiable fused factorized-attention
+  context: Pallas forward (whole-seq or blocked online-softmax), oracle
+  (``ref``) backward via ``jax.custom_vjp``.
+* :func:`clover_matmul.clover_project` — head-wise factorized projection.
+* :func:`layernorm.add_layernorm` — fused residual + LayerNorm.
+* ``ref`` — the pure-jnp oracle module.
+
+All kernels run ``interpret=True`` (CPU PJRT); see the module docstrings
+for the TPU mapping that the BlockSpecs encode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import clover_attention, clover_matmul, layernorm, ref  # noqa: F401
+
+
+@functools.lru_cache(maxsize=None)
+def _make_fused_ctx(scale: float, causal: bool, blocked: bool):
+    """Build a custom_vjp'd fused attention-context function.
+
+    Forward: the Pallas kernel.  Backward: jax.vjp of the jnp oracle,
+    recomputing the forward (FlashAttention-style rematerialization — the
+    [T,T] score matrix is never saved as a residual).
+    """
+
+    def fwd_kernel(x, uq, sq, vq, uv, sv):
+        if blocked:
+            return clover_attention.attention_ctx_blocked(
+                x, uq, sq, vq, uv, sv, scale=scale, causal=causal
+            )
+        return clover_attention.attention_ctx(x, uq, sq, vq, uv, sv, scale=scale, causal=causal)
+
+    def oracle(x, uq, sq, vq, uv, sv):
+        return ref.factorized_attention_ctx(x, uq, sq, vq, uv, sv, scale, causal)
+
+    @jax.custom_vjp
+    def fused(x, uq, sq, vq, uv, sv):
+        return fwd_kernel(x, uq, sq, vq, uv, sv)
+
+    def fused_fwd(x, uq, sq, vq, uv, sv):
+        return fwd_kernel(x, uq, sq, vq, uv, sv), (x, uq, sq, vq, uv, sv)
+
+    def fused_bwd(residuals, g):
+        _, vjp = jax.vjp(oracle, *residuals)
+        return vjp(g)
+
+    fused.defvjp(fused_fwd, fused_bwd)
+    return fused
+
+
+def fused_attention_ctx(x, u_qk, s_qk, v_qk, u_vo, s_vo, scale: float,
+                        causal: bool = True, blocked: bool = False):
+    """Differentiable fused CLOVER attention context. x [T,D] -> [H,T,r]."""
+    return _make_fused_ctx(float(scale), bool(causal), bool(blocked))(
+        x, u_qk, s_qk, v_qk, u_vo, s_vo
+    )

@@ -1,0 +1,146 @@
+"""Pallas kernels: fused CLOVER factorized attention.
+
+Two implementations of the paper's Figure-1a structure — attention whose
+score matrix is the cross-layer factorization ``(X U_qk S_qk)(X V_qk)ᵀ``
+and whose value path is ``(X U_vo S_vo)`` — executed without ever
+materializing the D×D ``W_QK`` / ``W_VO`` matrices:
+
+* :func:`attention_ctx` — one grid step per head; the whole ``[T, D]``
+  activation tile plus the rank-r factors stay VMEM-resident.  Best for
+  short sequences (prefill at T ≤ ~512 in f32 fits a TPU core's VMEM).
+
+* :func:`attention_ctx_blocked` — FlashAttention-style online softmax: the
+  grid is (head, query-block) and key/value-side blocks are streamed
+  innermost with running max / normalizer accumulators.  This is the
+  HBM↔VMEM schedule the paper's GPU framing expresses with thread blocks,
+  restated as a BlockSpec + fori_loop (DESIGN.md §Hardware-Adaptation).
+
+Both return ctx [H, T, r]; the final ``V_voᵀ`` contraction + head-sum is a
+single einsum left to XLA (it fuses with the residual add).  Oracle:
+``ref.factorized_attention_ctx``.  Numerics note: masked scores use -1e30
+(not -inf) so fully-masked rows stay NaN-free, matching the oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .clover_matmul import _pick_block
+
+NEG_INF = -1e30
+
+
+def _ctx_kernel(scale, causal, x_ref, uq_ref, sq_ref, vq_ref, uv_ref, sv_ref, o_ref):
+    """Whole-sequence fused attention for one head."""
+    x = x_ref[...]  # [T, D]
+    t = x.shape[0]
+    q = jnp.dot(jnp.dot(x, uq_ref[0]), sq_ref[0])  # [T, r]
+    k = jnp.dot(x, vq_ref[0])  # [T, r]
+    scores = jnp.dot(q, k.T) * scale  # [T, T]
+    if causal:
+        i = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        j = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(j <= i, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    vo = jnp.dot(jnp.dot(x, uv_ref[0]), sv_ref[0])  # [T, r]
+    o_ref[0] = jnp.dot(attn, vo)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal"))
+def attention_ctx(x, u_qk, s_qk, v_qk, u_vo, s_vo, scale: float, causal: bool = True):
+    """x [T,D]; factors [H,D,r]/[H,r,r] -> ctx [H,T,r] (whole-seq kernel)."""
+    t, d = x.shape
+    h, _, r = u_qk.shape
+    dr = pl.BlockSpec((1, d, r), lambda hh: (hh, 0, 0))
+    rr = pl.BlockSpec((1, r, r), lambda hh: (hh, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_ctx_kernel, scale, causal),
+        grid=(h,),
+        # args: x, u_qk, s_qk, v_qk, u_vo, s_vo
+        in_specs=[pl.BlockSpec((t, d), lambda hh: (0, 0)), dr, rr, dr, dr, rr],
+        out_specs=pl.BlockSpec((1, t, r), lambda hh: (hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, r), jnp.float32),
+        interpret=True,
+    )(x, u_qk, s_qk, v_qk, u_vo, s_vo)
+
+
+def _ctx_blocked_kernel(
+    scale, causal, bq, bk, x_q_ref, x_kv_ref, uq_ref, sq_ref, vq_ref, uv_ref, sv_ref, o_ref
+):
+    """Online-softmax fused attention: one (head, query-block) grid step.
+
+    Streams key/value blocks of size ``bk`` through VMEM keeping the
+    FlashAttention running statistics (m: row max, l: normalizer, acc:
+    unnormalized context).
+    """
+    qi = pl.program_id(1)
+    x_q = x_q_ref[...]  # [bq, D]
+    q = jnp.dot(jnp.dot(x_q, uq_ref[0]), sq_ref[0])  # [bq, r]
+    t = x_kv_ref.shape[0]
+    r = q.shape[1]
+    n_kb = t // bk
+
+    def body(jb, carry):
+        m_i, l_i, acc = carry
+        x_kv = jax.lax.dynamic_slice_in_dim(x_kv_ref[...], jb * bk, bk, axis=0)
+        k = jnp.dot(x_kv, vq_ref[0])  # [bk, r]
+        vo = jnp.dot(jnp.dot(x_kv, uv_ref[0]), sv_ref[0])  # [bk, r]
+        s = jnp.dot(q, k.T) * scale  # [bq, bk]
+        if causal:
+            qi_idx = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj_idx = jb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kj_idx <= qi_idx, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, vo)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    acc0 = jnp.zeros((bq, r), jnp.float32)
+    if causal:
+        # Causal masking zeroes every key block strictly above the current
+        # query block, so stop streaming there: ~2x fewer inner iterations.
+        n_iter = qi + 1
+    else:
+        n_iter = n_kb
+    m_f, l_f, acc_f = jax.lax.fori_loop(0, n_iter, body, (m0, l0, acc0))
+    o_ref[0] = acc_f / l_f
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k"))
+def attention_ctx_blocked(
+    x, u_qk, s_qk, v_qk, u_vo, s_vo, scale: float, causal: bool = True,
+    block_q: int = 0, block_k: int = 0,
+):
+    """Blocked online-softmax variant; requires block_q == block_k when
+    causal (the early-exit loop bound assumes aligned blocks)."""
+    t, d = x.shape
+    h, _, r = u_qk.shape
+    bq = block_q or _pick_block(t, 64)
+    bk = block_k or bq
+    if causal and bq != bk:
+        raise ValueError("causal blocked kernel requires block_q == block_k")
+    dr = pl.BlockSpec((1, d, r), lambda hh, ii: (hh, 0, 0))
+    rr = pl.BlockSpec((1, r, r), lambda hh, ii: (hh, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_ctx_blocked_kernel, scale, causal, bq, bk),
+        grid=(h, t // bq),
+        # args: x_q, x_kv, u_qk, s_qk, v_qk, u_vo, s_vo
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda hh, ii: (ii, 0)),
+            pl.BlockSpec((t, d), lambda hh, ii: (0, 0)),
+            dr, rr, dr, dr, rr,
+        ],
+        out_specs=pl.BlockSpec((1, bq, r), lambda hh, ii: (hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, r), jnp.float32),
+        interpret=True,
+    )(x, x, u_qk, s_qk, v_qk, u_vo, s_vo)

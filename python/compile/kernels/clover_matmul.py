@@ -1,0 +1,67 @@
+"""Pallas kernel: head-wise CLOVER factorized projection.
+
+Computes ``out[h] = (x @ u[h]) @ s[h]`` for every attention head — the
+building block the paper's factorization reduces attention to.  The D×D
+cross-layer matrix ``W = U S Vᵀ`` is never materialized: only the rank-r
+factors are streamed through VMEM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is (head,
+query-row-block); each step keeps one ``[bt, D]`` activation tile, one
+``[D, r]`` factor and one ``[r, r]`` transition matrix resident in VMEM and
+issues two MXU contractions.  Rank pruning shrinks both the VMEM footprint
+and the MXU work linearly in ``r``.
+
+Runs under ``interpret=True`` — on this CPU-only image the kernel lowers to
+plain HLO ops so the Rust PJRT client can execute it (real TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _project_kernel(x_ref, u_ref, s_ref, o_ref):
+    """One (head, row-block) grid step: o = (x @ u_h) @ s_h."""
+    x = x_ref[...]  # [bt, D]
+    u = u_ref[0]  # [D, r]
+    s = s_ref[0]  # [r, r]
+    xu = jnp.dot(x, u, preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.dot(xu, s, preferred_element_type=jnp.float32)
+
+
+def _pick_block(t: int, want: int = 128) -> int:
+    """Largest divisor of ``t`` not exceeding ``want`` (MXU-friendly when
+    t is a multiple of 128; degrades gracefully for tiny test shapes)."""
+    b = min(t, want)
+    while t % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def clover_project(x: jnp.ndarray, u: jnp.ndarray, s: jnp.ndarray, block_t: int = 0):
+    """x [T, D], u [H, D, r], s [H, r, r] -> [H, T, r].
+
+    Oracle: :func:`compile.kernels.ref.clover_project`.
+    """
+    t, d = x.shape
+    h, _, r = u.shape
+    bt = block_t or _pick_block(t)
+    grid = (h, t // bt)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda hh, i: (i, 0)),
+            pl.BlockSpec((1, d, r), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, r, r), lambda hh, i: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, r), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, t, r), jnp.float32),
+        interpret=True,
+    )(x, u, s)

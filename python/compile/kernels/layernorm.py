@@ -1,0 +1,53 @@
+"""Pallas kernel: fused residual-add + LayerNorm.
+
+One grid step normalizes a ``[bt, D]`` block of rows entirely in VMEM —
+the residual add, the mean/variance reduction, and the affine transform
+never round-trip to HBM between ops (the fusion XLA would have to
+rediscover).  Oracle: ``ref.layernorm(res + x, g, b)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .clover_matmul import _pick_block
+
+
+def _ln_kernel(eps, x_ref, res_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...] + res_ref[...]  # fused residual add, [bt, D]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    o_ref[...] = xc * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_t"))
+def add_layernorm(
+    x: jnp.ndarray,
+    res: jnp.ndarray,
+    g: jnp.ndarray,
+    b: jnp.ndarray,
+    eps: float = 1e-5,
+    block_t: int = 0,
+):
+    """x, res [T, D]; g, b [D] -> layernorm(x + res) [T, D]."""
+    t, d = x.shape
+    bt = block_t or _pick_block(t)
+    kern = functools.partial(_ln_kernel, eps)
+    return pl.pallas_call(
+        kern,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, res, g, b)

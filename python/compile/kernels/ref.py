@@ -1,0 +1,152 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Every Pallas kernel in this package has an exact counterpart here; pytest +
+hypothesis compare them with ``assert_allclose`` across shapes / ranks /
+seeds (see ``python/tests/test_kernels.py``).  These functions are also the
+backward-path implementations: the Pallas kernels are wired into the L2
+model through ``jax.custom_vjp`` whose VJP differentiates *these* functions,
+so training numerics are oracle-exact by construction.
+
+Shape conventions (single example; batch is vmapped by callers):
+  x      [T, D]        residual-stream activations
+  u_qk   [H, D, r]     left CLOVER factors of W_QK  (orthonormal columns)
+  s_qk   [H, r, r]     CLOVER transition matrices (diag(singular values) at
+                       init; dense after fine-tuning)
+  v_qk   [H, D, r]     right CLOVER factors of W_QK
+  u_vo, s_vo, v_vo     same for the Value-Output pair
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def layernorm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def clover_project(x: jnp.ndarray, u: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """Head-wise factorized projection ``q_h = (x @ u_h) @ s_h``.
+
+    x [T, D], u [H, D, r], s [H, r, r]  ->  [H, T, r].
+    This is the CLOVER hot-spot: the D×D cross-layer matrix is never
+    materialized; only the rank-r factors touch memory.
+    """
+    xu = jnp.einsum("td,hdr->htr", x, u)
+    return jnp.einsum("htr,hrk->htk", xu, s)
+
+
+def causal_mask(t: int) -> jnp.ndarray:
+    """[T, T] additive causal mask (0 on/below diagonal, -inf above)."""
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def factorized_attention_ctx(
+    x: jnp.ndarray,
+    u_qk: jnp.ndarray,
+    s_qk: jnp.ndarray,
+    v_qk: jnp.ndarray,
+    u_vo: jnp.ndarray,
+    s_vo: jnp.ndarray,
+    scale: float,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """The part of :func:`factorized_attention` the Pallas kernel fuses:
+    everything up to (but not including) the final ``V_vo`` contraction and
+    head sum.  Returns ctx [H, T, r]."""
+    t = x.shape[0]
+    q = clover_project(x, u_qk, s_qk)
+    k = jnp.einsum("td,hdr->htr", x, v_qk)
+    scores = jnp.einsum("htr,hsr->hts", q, k) * scale
+    if causal:
+        scores = scores + causal_mask(t)[None, :, :]
+    attn = jax.nn.softmax(scores, axis=-1)
+    vo = clover_project(x, u_vo, s_vo)
+    return jnp.einsum("hts,hsr->htr", attn, vo)
+
+
+def factorized_attention(
+    x: jnp.ndarray,
+    u_qk: jnp.ndarray,
+    s_qk: jnp.ndarray,
+    v_qk: jnp.ndarray,
+    u_vo: jnp.ndarray,
+    s_vo: jnp.ndarray,
+    v_vo: jnp.ndarray,
+    scale: float,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """CLOVER factorized multi-head attention for one example.
+
+    Computes ``softmax((X U_qk S_qk) (X V_qk)^T * scale) (X U_vo S_vo) V_vo^T``
+    summed over heads — i.e. attention with W_QK / W_VO replaced by their
+    cross-layer SVD factors (paper §3 and Appendix A.1).
+
+    ``scale`` must be 1/sqrt(d_head_original) even after pruning r < d: the
+    score matrix approximates X W_QK X^T / sqrt(d), and W_QK's scale does not
+    change when trailing singular directions are dropped.
+    """
+    ctx = factorized_attention_ctx(x, u_qk, s_qk, v_qk, u_vo, s_vo, scale, causal)
+    return jnp.einsum("htr,hdr->td", ctx, v_vo)
+
+
+def dense_attention(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    n_heads: int,
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Vanilla multi-head attention (bias-free), one example. x [T, D]."""
+    t, d = x.shape
+    dh = d // n_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    def split(w):
+        return (x @ w).reshape(t, n_heads, dh).transpose(1, 0, 2)  # [H,T,dh]
+
+    q, k, v = split(wq), split(wk), split(wv)
+    scores = jnp.einsum("htr,hsr->hts", q, k) * scale
+    if causal:
+        scores = scores + causal_mask(t)[None, :, :]
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hts,hsr->htr", attn, v)  # [H,T,dh]
+    ctx = ctx.transpose(1, 0, 2).reshape(t, d)
+    return ctx @ wo
+
+
+def cross_attention_dense(
+    xq: jnp.ndarray,
+    xkv: jnp.ndarray,
+    wq: jnp.ndarray,
+    wk: jnp.ndarray,
+    wv: jnp.ndarray,
+    wo: jnp.ndarray,
+    n_heads: int,
+) -> jnp.ndarray:
+    """Encoder-decoder cross attention (no mask). xq [Tq,D], xkv [Tk,D]."""
+    tq, d = xq.shape
+    tk = xkv.shape[0]
+    dh = d // n_heads
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = (xq @ wq).reshape(tq, n_heads, dh).transpose(1, 0, 2)
+    k = (xkv @ wk).reshape(tk, n_heads, dh).transpose(1, 0, 2)
+    v = (xkv @ wv).reshape(tk, n_heads, dh).transpose(1, 0, 2)
+    attn = jax.nn.softmax(jnp.einsum("htr,hsr->hts", q, k) * scale, axis=-1)
+    ctx = jnp.einsum("hts,hsr->htr", attn, v).transpose(1, 0, 2).reshape(tq, d)
+    return ctx @ wo
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (GPT-2 style)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))

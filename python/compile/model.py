@@ -1,0 +1,538 @@
+"""Layer-2 JAX model definitions (build-time only; never on the request path).
+
+Defines the GPT-style decoder (dense and CLOVER-factorized attention) and
+the whisper-like encoder-decoder, as *pure functions* over explicit
+parameter dicts.  ``aot.py`` lowers jitted entry points over flat argument
+lists to HLO text; the flat ordering is given by the ``*_param_spec``
+functions here and mirrored in ``artifacts/manifest.json`` for the Rust
+loader — Rust never re-derives a shape.
+
+Attention paths:
+* dense      — plain jnp (XLA fuses it fine on the MXU),
+* factorized — the L1 Pallas kernels via ``kernels.fused_attention_ctx``
+  (custom_vjp: Pallas forward, oracle backward), so both inference and
+  training artifacts execute the paper's fused factorized hot path.
+
+LayerNorm uses the fused Pallas kernel through the same custom_vjp pattern.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig, Seq2SeqConfig
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+Spec = List[Tuple[str, Tuple[int, ...]]]
+
+UD_BLOCK = 64  # MLP.Up factorization block size (paper §4.2: "64 consecutive dims")
+
+
+# --------------------------------------------------------------------------
+# Fused LayerNorm with oracle backward (same pattern as fused attention)
+# --------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _fused_ln(x, res, g, b):
+    return kernels.layernorm.add_layernorm(x, res, g, b)
+
+
+def _fused_ln_fwd(x, res, g, b):
+    return _fused_ln(x, res, g, b), (x, res, g, b)
+
+
+def _fused_ln_bwd(saved, grad):
+    x, res, g, b = saved
+    _, vjp = jax.vjp(lambda x, res, g, b: ref.layernorm(x + res, g, b), x, res, g, b)
+    return vjp(grad)
+
+
+_fused_ln.defvjp(_fused_ln_fwd, _fused_ln_bwd)
+
+
+def add_ln(x, res, g, b, use_pallas: bool):
+    """layernorm(x + res) — fused Pallas kernel or the jnp oracle."""
+    if use_pallas:
+        return _fused_ln(x, res, g, b)
+    return ref.layernorm(x + res, g, b)
+
+
+# --------------------------------------------------------------------------
+# Parameter specs (single source of truth for flat argument ordering)
+# --------------------------------------------------------------------------
+
+
+def dense_param_spec(cfg: ModelConfig) -> Spec:
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    return [
+        ("tok_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq_len, d)),
+        ("ln1_g", (l, d)),
+        ("ln1_b", (l, d)),
+        ("wq", (l, d, d)),
+        ("wk", (l, d, d)),
+        ("wv", (l, d, d)),
+        ("wo", (l, d, d)),
+        ("ln2_g", (l, d)),
+        ("ln2_b", (l, d)),
+        ("w_up", (l, d, f)),
+        ("w_down", (l, f, d)),
+        ("lnf_g", (d,)),
+        ("lnf_b", (d,)),
+    ]
+
+
+def fac_param_spec(cfg: ModelConfig, r: int, with_ud: bool = False) -> Spec:
+    """CLOVER-factorized attention params at per-head rank r.
+
+    with_ud=True additionally factorizes MLP.Up into UD_BLOCK-column blocks
+    (the Table-2 fine-tuning configuration)."""
+    l, d, f, h = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_heads
+    spec: Spec = [
+        ("tok_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq_len, d)),
+        ("ln1_g", (l, d)),
+        ("ln1_b", (l, d)),
+        ("u_qk", (l, h, d, r)),
+        ("s_qk", (l, h, r, r)),
+        ("v_qk", (l, h, d, r)),
+        ("u_vo", (l, h, d, r)),
+        ("s_vo", (l, h, r, r)),
+        ("v_vo", (l, h, d, r)),
+        ("ln2_g", (l, d)),
+        ("ln2_b", (l, d)),
+    ]
+    if with_ud:
+        nb = f // UD_BLOCK
+        spec += [
+            ("u_ud", (l, nb, d, UD_BLOCK)),
+            ("s_ud", (l, nb, UD_BLOCK, UD_BLOCK)),
+            ("v_ud", (l, nb, UD_BLOCK, UD_BLOCK)),
+        ]
+    else:
+        spec += [("w_up", (l, d, f))]
+    spec += [
+        ("w_down", (l, f, d)),
+        ("lnf_g", (d,)),
+        ("lnf_b", (d,)),
+    ]
+    return spec
+
+
+def lora_param_spec(cfg: ModelConfig, rank: int) -> Spec:
+    """LoRA adapters on {Q, K, V, Up, Down} (DoRA paper's target set minus O,
+    matching Table 3's `Q,K,V,U,D`)."""
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    return [
+        ("a_q", (l, d, rank)),
+        ("b_q", (l, rank, d)),
+        ("a_k", (l, d, rank)),
+        ("b_k", (l, rank, d)),
+        ("a_v", (l, d, rank)),
+        ("b_v", (l, rank, d)),
+        ("a_up", (l, d, rank)),
+        ("b_up", (l, rank, f)),
+        ("a_down", (l, f, rank)),
+        ("b_down", (l, rank, d)),
+    ]
+
+
+def dora_param_spec(cfg: ModelConfig, rank: int) -> Spec:
+    """DoRA = LoRA + per-output-column magnitude vectors."""
+    l, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    return lora_param_spec(cfg, rank) + [
+        ("m_q", (l, d)),
+        ("m_k", (l, d)),
+        ("m_v", (l, d)),
+        ("m_up", (l, f)),
+        ("m_down", (l, d)),
+    ]
+
+
+def spec_names(spec: Spec) -> List[str]:
+    return [n for n, _ in spec]
+
+
+def params_from_flat(spec: Spec, flat) -> Params:
+    assert len(flat) == len(spec), (len(flat), len(spec))
+    return {n: a for (n, _), a in zip(spec, flat)}
+
+
+def flat_from_params(spec: Spec, params: Params):
+    return [params[n] for n, _ in spec]
+
+
+# --------------------------------------------------------------------------
+# Initialization (exported as an HLO program so Rust owns the seed)
+# --------------------------------------------------------------------------
+
+
+def init_dense(cfg: ModelConfig, seed: jnp.ndarray) -> Params:
+    """GPT-2-style init: N(0, 0.02), residual-out projections scaled by
+    1/sqrt(2L), LN at identity. ``seed`` is a scalar int32."""
+    key = jax.random.PRNGKey(seed)
+    spec = dense_param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    out: Params = {}
+    resid_scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+    for (name, shape), k in zip(spec, keys):
+        if name.startswith("ln") and name.endswith("_g"):
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name.startswith("ln") and name.endswith("_b"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        elif name in ("wo", "w_down"):
+            out[name] = jax.random.normal(k, shape, jnp.float32) * resid_scale
+        else:
+            out[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+    return out
+
+
+# --------------------------------------------------------------------------
+# Decoder forward (dense / factorized)
+# --------------------------------------------------------------------------
+
+
+_LAYER_DENSE = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo", "ln2_g", "ln2_b", "w_up", "w_down"]
+_LAYER_FAC = [
+    "ln1_g", "ln1_b", "u_qk", "s_qk", "v_qk", "u_vo", "s_vo", "v_vo",
+    "ln2_g", "ln2_b", "w_up", "w_down",
+]
+_LAYER_FAC_UD = [
+    "ln1_g", "ln1_b", "u_qk", "s_qk", "v_qk", "u_vo", "s_vo", "v_vo",
+    "ln2_g", "ln2_b", "u_ud", "s_ud", "v_ud", "w_down",
+]
+
+
+def _mlp(h: jnp.ndarray, lp: Params) -> jnp.ndarray:
+    if "u_ud" in lp:
+        # Factorized Up (intra-layer blockwise SVD): never materialize W_up.
+        # h [T,D]; u_ud [NB,D,K]; s_ud,v_ud [NB,K,K]
+        hu = jnp.einsum("td,ndk->tnk", h, lp["u_ud"])
+        hs = jnp.einsum("tnk,nkj->tnj", hu, lp["s_ud"])
+        up = jnp.einsum("tnj,nmj->tnm", hs, lp["v_ud"])  # block = U S V^T
+        up = up.reshape(h.shape[0], -1)
+    else:
+        up = h @ lp["w_up"]
+    return ref.gelu(up) @ lp["w_down"]
+
+
+def _block_dense(cfg: ModelConfig, x: jnp.ndarray, lp: Params, use_pallas: bool):
+    """One pre-LN transformer block, dense attention. x [T, D]."""
+    h = add_ln(x, jnp.zeros_like(x), lp["ln1_g"], lp["ln1_b"], use_pallas)
+    attn = ref.dense_attention(h, lp["wq"], lp["wk"], lp["wv"], lp["wo"], cfg.n_heads)
+    x = x + attn
+    h2 = add_ln(x, jnp.zeros_like(x), lp["ln2_g"], lp["ln2_b"], use_pallas)
+    return x + _mlp(h2, lp)
+
+
+def _block_fac(cfg: ModelConfig, x: jnp.ndarray, lp: Params, use_pallas: bool, blocked: bool):
+    """One pre-LN transformer block, CLOVER-factorized attention."""
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    h = add_ln(x, jnp.zeros_like(x), lp["ln1_g"], lp["ln1_b"], use_pallas)
+    if use_pallas:
+        ctx = kernels.fused_attention_ctx(
+            h, lp["u_qk"], lp["s_qk"], lp["v_qk"], lp["u_vo"], lp["s_vo"],
+            scale, causal=True, blocked=blocked,
+        )
+    else:
+        ctx = ref.factorized_attention_ctx(
+            h, lp["u_qk"], lp["s_qk"], lp["v_qk"], lp["u_vo"], lp["s_vo"], scale, True
+        )
+    attn = jnp.einsum("htr,hdr->td", ctx, lp["v_vo"])
+    x = x + attn
+    h2 = add_ln(x, jnp.zeros_like(x), lp["ln2_g"], lp["ln2_b"], use_pallas)
+    return x + _mlp(h2, lp)
+
+
+def _run_blocks(cfg, params, x, layer_names, block_fn):
+    """scan over stacked layer params: keeps HLO size O(1) in depth."""
+    stacked = {n: params[n] for n in layer_names if n in params}
+
+    def body(h, lp):
+        return block_fn(h, lp), None
+
+    out, _ = jax.lax.scan(body, x, stacked)
+    return out
+
+
+def forward_dense(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                  use_pallas: bool = False) -> jnp.ndarray:
+    """tokens [B, T] int32 -> logits [B, T, V] (weight-tied head)."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+
+    def per_example(xe):
+        h = _run_blocks(cfg, params, xe, _LAYER_DENSE,
+                        lambda hh, lp: _block_dense(cfg, hh, lp, use_pallas))
+        return add_ln(h, jnp.zeros_like(h), params["lnf_g"], params["lnf_b"], use_pallas)
+
+    x = jax.vmap(per_example)(x)
+    return x @ params["tok_emb"].T
+
+
+def forward_fac(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                use_pallas: bool = True, blocked: bool = False) -> jnp.ndarray:
+    """Factorized-attention forward. tokens [B, T] -> logits [B, T, V]."""
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :t, :]
+    layer_names = _LAYER_FAC_UD if "u_ud" in params else _LAYER_FAC
+
+    def per_example(xe):
+        h = _run_blocks(cfg, params, xe, layer_names,
+                        lambda hh, lp: _block_fac(cfg, hh, lp, use_pallas, blocked))
+        return add_ln(h, jnp.zeros_like(h), params["lnf_g"], params["lnf_b"], use_pallas)
+
+    x = jax.vmap(per_example)(x)
+    return x @ params["tok_emb"].T
+
+
+def nll(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy. logits [B,T,V], targets [B,T] int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# --------------------------------------------------------------------------
+# AdamW + train-step factories
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+CLIP_NORM = 1.0
+
+
+def adamw_update(p, g, m, v, step, lr, wd: float = 0.0):
+    """One AdamW step for a single tensor (step is the *new* 1-based count)."""
+    m2 = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mhat = m2 / (1 - ADAM_B1 ** step)
+    vhat = v2 / (1 - ADAM_B2 ** step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+    return p2, m2, v2
+
+
+def global_norm_clip(grads: Params) -> Params:
+    gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    factor = jnp.minimum(1.0, CLIP_NORM / (gn + 1e-12))
+    return {k: g * factor for k, g in grads.items()}
+
+
+def make_train_step(loss_fn, spec: Spec, trainable: List[str], wd: float = 0.0):
+    """Build ``step(params…, m…, v…, step_count, inputs, targets, lr)`` where
+    only ``trainable`` tensors get gradients/updates.  Flat signature:
+
+      inputs : spec tensors, then m and v for each trainable (spec order),
+               then step_count [], inputs [B,T], targets [B,T], lr []
+      outputs: updated trainable tensors (spec order), updated m, v,
+               step_count+1, loss
+    """
+    names = spec_names(spec)
+    train_names = [n for n in names if n in trainable]
+    assert train_names, "no trainable tensors"
+
+    def step_fn(*flat):
+        n = len(names)
+        k = len(train_names)
+        params = params_from_flat(spec, flat[:n])
+        ms = dict(zip(train_names, flat[n : n + k]))
+        vs = dict(zip(train_names, flat[n + k : n + 2 * k]))
+        step_count, inputs, targets, lr = flat[n + 2 * k : n + 2 * k + 4]
+
+        def loss_of(tr):
+            full = dict(params)
+            full.update(tr)
+            return loss_fn(full, inputs, targets)
+
+        tr = {nm: params[nm] for nm in train_names}
+        loss, grads = jax.value_and_grad(loss_of)(tr)
+        grads = global_norm_clip(grads)
+        new_step = step_count + 1
+        outs, out_m, out_v = [], [], []
+        for nm in train_names:
+            p2, m2, v2 = adamw_update(
+                params[nm], grads[nm], ms[nm], vs[nm], new_step.astype(jnp.float32), lr, wd
+            )
+            outs.append(p2)
+            out_m.append(m2)
+            out_v.append(v2)
+        return tuple(outs + out_m + out_v + [new_step, loss])
+
+    return step_fn, train_names
+
+
+# --------------------------------------------------------------------------
+# PEFT forwards (adapters over a frozen dense base)
+# --------------------------------------------------------------------------
+
+
+def _lora_eff(params: Params, ad: Params) -> Params:
+    """Effective weights W + A@B for the LoRA target set (scaling baked to 1;
+    PiSSA requires exactly this form, plain LoRA folds alpha into lr/init)."""
+    eff = dict(params)
+    for tgt, (a, b) in {
+        "wq": ("a_q", "b_q"), "wk": ("a_k", "b_k"), "wv": ("a_v", "b_v"),
+        "w_up": ("a_up", "b_up"), "w_down": ("a_down", "b_down"),
+    }.items():
+        eff[tgt] = params[tgt] + jnp.einsum("ldr,lrk->ldk", ad[a], ad[b])
+    return eff
+
+
+def _dora_eff(params: Params, ad: Params) -> Params:
+    """DoRA: W' = m * (W + AB) / ||W + AB||_col (column = output unit)."""
+    eff = _lora_eff(params, ad)
+    for tgt, mag in [("wq", "m_q"), ("wk", "m_k"), ("wv", "m_v"),
+                     ("w_up", "m_up"), ("w_down", "m_down")]:
+        w = eff[tgt]
+        norm = jnp.sqrt(jnp.sum(w * w, axis=1, keepdims=True) + 1e-8)  # [L,1,K]
+        eff[tgt] = ad[mag][:, None, :] * w / norm
+    return eff
+
+
+def _hira_eff(params: Params, ad: Params) -> Params:
+    """HiRA: ΔW = W0 ⊙ (A@B), i.e. W' = W0 ⊙ (1 + AB) — high-rank update."""
+    eff = dict(params)
+    for tgt, (a, b) in {
+        "wq": ("a_q", "b_q"), "wk": ("a_k", "b_k"), "wv": ("a_v", "b_v"),
+        "w_up": ("a_up", "b_up"), "w_down": ("a_down", "b_down"),
+    }.items():
+        eff[tgt] = params[tgt] * (1.0 + jnp.einsum("ldr,lrk->ldk", ad[a], ad[b]))
+    return eff
+
+
+PEFT_EFF = {"lora": _lora_eff, "dora": _dora_eff, "hira": _hira_eff}
+
+
+def make_peft_train_step(cfg: ModelConfig, kind: str, base_spec: Spec, ad_spec: Spec):
+    """Adapter train step: base params are *frozen inputs*; only adapter
+    tensors carry optimizer state.  Flat signature:
+
+      inputs : base spec, adapter spec, m(adapter), v(adapter),
+               step_count, inputs, targets, lr
+      outputs: adapter', m', v', step_count+1, loss
+    """
+    eff_fn = PEFT_EFF[kind]
+    ad_names = spec_names(ad_spec)
+
+    def step_fn(*flat):
+        nb, na = len(base_spec), len(ad_spec)
+        params = params_from_flat(base_spec, flat[:nb])
+        ad = params_from_flat(ad_spec, flat[nb : nb + na])
+        ms = dict(zip(ad_names, flat[nb + na : nb + 2 * na]))
+        vs = dict(zip(ad_names, flat[nb + 2 * na : nb + 3 * na]))
+        step_count, inputs, targets, lr = flat[nb + 3 * na : nb + 3 * na + 4]
+
+        def loss_of(ad_t):
+            eff = eff_fn(params, ad_t)
+            return nll(forward_dense(cfg, eff, inputs), targets)
+
+        loss, grads = jax.value_and_grad(loss_of)(ad)
+        grads = global_norm_clip(grads)
+        new_step = step_count + 1
+        outs, out_m, out_v = [], [], []
+        for nm in ad_names:
+            p2, m2, v2 = adamw_update(
+                ad[nm], grads[nm], ms[nm], vs[nm], new_step.astype(jnp.float32), lr
+            )
+            outs.append(p2)
+            out_m.append(m2)
+            out_v.append(v2)
+        return tuple(outs + out_m + out_v + [new_step, loss])
+
+    return step_fn
+
+
+def peft_forward(cfg: ModelConfig, kind: str, params: Params, ad: Params, tokens):
+    """Inference with an (unmerged) adapter — used for eval goldens."""
+    return forward_dense(cfg, PEFT_EFF[kind](params, ad), tokens)
+
+
+# --------------------------------------------------------------------------
+# Incremental decode (KV cache) — the serving hot path
+# --------------------------------------------------------------------------
+
+
+def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens, pos):
+    """One autoregressive step, dense attention.
+
+    k_cache/v_cache [L, B, H, C, dh]; tokens [B] int32; pos [] int32.
+    Returns (logits [B, V], k_cache', v_cache').  The KV cache grows with
+    full head dimension dh — the memory-bound baseline the paper targets.
+    """
+    b = tokens.shape[0]
+    h_, dh = cfg.n_heads, cfg.d_head
+    c = k_cache.shape[3]
+    scale = 1.0 / float(dh) ** 0.5
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [B, D]
+
+    stacked = {n: params[n] for n in _LAYER_DENSE}
+
+    def body(x, inputs):
+        lp, kc, vc = inputs  # kc/vc [B, H, C, dh]
+        hcur = ref.layernorm(x, lp["ln1_g"], lp["ln1_b"])
+        q = (hcur @ lp["wq"]).reshape(b, h_, dh)
+        k = (hcur @ lp["wk"]).reshape(b, h_, dh)
+        v = (hcur @ lp["wv"]).reshape(b, h_, dh)
+        kc = jax.lax.dynamic_update_slice(kc, k[:, :, None, :], (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[:, :, None, :], (0, 0, pos, 0))
+        scores = jnp.einsum("bhd,bhcd->bhc", q, kc) * scale
+        mask = jnp.arange(c)[None, None, :] <= pos
+        scores = jnp.where(mask, scores, ref.NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhc,bhcd->bhd", attn, vc).reshape(b, h_ * dh)
+        x = x + ctx @ lp["wo"]
+        h2 = ref.layernorm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(h2, lp)
+        return x, (kc, vc)
+
+    x, (kc2, vc2) = jax.lax.scan(body, x, (stacked, k_cache, v_cache))
+    x = ref.layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T, kc2, vc2
+
+
+def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, pos):
+    """One autoregressive step, CLOVER-factorized attention.
+
+    k_cache/vo_cache [L, B, H, C, r] — the caches hold the *rank-r factor
+    space* projections (X V_qk and X U_vo S_vo), so pruning to rank r < dh
+    shrinks KV memory by exactly r/dh: the paper's KV-cache motivation
+    realized end-to-end.
+    """
+    b = tokens.shape[0]
+    h_ = cfg.n_heads
+    c = k_cache.shape[3]
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+    layer_names = _LAYER_FAC_UD if "u_ud" in params else _LAYER_FAC
+    stacked = {n: params[n] for n in layer_names}
+
+    def body(x, inputs):
+        lp, kc, voc = inputs  # [B, H, C, r]
+        hcur = ref.layernorm(x, lp["ln1_g"], lp["ln1_b"])
+        q = jnp.einsum("bd,hdr->bhr", hcur, lp["u_qk"])
+        q = jnp.einsum("bhr,hrk->bhk", q, lp["s_qk"])
+        k = jnp.einsum("bd,hdr->bhr", hcur, lp["v_qk"])
+        vo = jnp.einsum("bd,hdr->bhr", hcur, lp["u_vo"])
+        vo = jnp.einsum("bhr,hrk->bhk", vo, lp["s_vo"])
+        kc = jax.lax.dynamic_update_slice(kc, k[:, :, None, :], (0, 0, pos, 0))
+        voc = jax.lax.dynamic_update_slice(voc, vo[:, :, None, :], (0, 0, pos, 0))
+        scores = jnp.einsum("bhr,bhcr->bhc", q, kc) * scale
+        mask = jnp.arange(c)[None, None, :] <= pos
+        scores = jnp.where(mask, scores, ref.NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhc,bhcr->bhr", attn, voc)
+        out = jnp.einsum("bhr,hdr->bd", ctx, lp["v_vo"])
+        x = x + out
+        h2 = ref.layernorm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(h2, lp)
+        return x, (kc, voc)
+
+    x, (kc2, voc2) = jax.lax.scan(body, x, (stacked, k_cache, vo_cache))
+    x = ref.layernorm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["tok_emb"].T, kc2, voc2

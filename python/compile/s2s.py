@@ -1,0 +1,195 @@
+"""Whisper-like encoder-decoder for the §4.4 training-free pruning study.
+
+A continuous feature sequence (the stand-in for log-mel audio frames) is
+encoded by a non-causal transformer; an autoregressive decoder with cross
+attention emits the token transcript.  The encoder's self-attention — where
+Figure 2c/7 shows Whisper's strong linear redundancy — is the part CLOVER
+factorizes; per-rank artifacts are exported for the pruning sweep.
+
+Same conventions as ``model.py``: pure functions over explicit param dicts,
+flat ordering from ``*_param_spec``, scan over stacked layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import Seq2SeqConfig
+from .kernels import ref
+from .model import add_ln, nll
+
+Params = Dict[str, jnp.ndarray]
+Spec = List[Tuple[str, Tuple[int, ...]]]
+
+
+def s2s_param_spec(cfg: Seq2SeqConfig) -> Spec:
+    le, ld, d, f = cfg.n_enc_layers, cfg.n_dec_layers, cfg.d_model, cfg.d_ff
+    return [
+        ("in_proj", (cfg.feat_dim, d)),
+        ("enc_pos", (cfg.src_len, d)),
+        ("e_ln1_g", (le, d)),
+        ("e_ln1_b", (le, d)),
+        ("e_wq", (le, d, d)),
+        ("e_wk", (le, d, d)),
+        ("e_wv", (le, d, d)),
+        ("e_wo", (le, d, d)),
+        ("e_ln2_g", (le, d)),
+        ("e_ln2_b", (le, d)),
+        ("e_up", (le, d, f)),
+        ("e_down", (le, f, d)),
+        ("e_lnf_g", (d,)),
+        ("e_lnf_b", (d,)),
+        ("tok_emb", (cfg.vocab, d)),
+        ("dec_pos", (cfg.tgt_len, d)),
+        ("d_ln1_g", (ld, d)),
+        ("d_ln1_b", (ld, d)),
+        ("d_wq", (ld, d, d)),
+        ("d_wk", (ld, d, d)),
+        ("d_wv", (ld, d, d)),
+        ("d_wo", (ld, d, d)),
+        ("d_lnx_g", (ld, d)),
+        ("d_lnx_b", (ld, d)),
+        ("d_cq", (ld, d, d)),
+        ("d_ck", (ld, d, d)),
+        ("d_cv", (ld, d, d)),
+        ("d_co", (ld, d, d)),
+        ("d_ln2_g", (ld, d)),
+        ("d_ln2_b", (ld, d)),
+        ("d_up", (ld, d, f)),
+        ("d_down", (ld, f, d)),
+        ("d_lnf_g", (d,)),
+        ("d_lnf_b", (d,)),
+    ]
+
+
+def s2s_fac_param_spec(cfg: Seq2SeqConfig, r: int) -> Spec:
+    """Encoder self-attention replaced by CLOVER factors at rank r."""
+    h = cfg.n_heads
+    le = cfg.n_enc_layers
+    d = cfg.d_model
+    spec = []
+    for name, shape in s2s_param_spec(cfg):
+        if name in ("e_wq", "e_wk", "e_wv", "e_wo"):
+            continue
+        spec.append((name, shape))
+        if name == "e_ln1_b":
+            spec += [
+                ("e_u_qk", (le, h, d, r)),
+                ("e_s_qk", (le, h, r, r)),
+                ("e_v_qk", (le, h, d, r)),
+                ("e_u_vo", (le, h, d, r)),
+                ("e_s_vo", (le, h, r, r)),
+                ("e_v_vo", (le, h, d, r)),
+            ]
+    return spec
+
+
+def init_s2s(cfg: Seq2SeqConfig, seed: jnp.ndarray) -> Params:
+    key = jax.random.PRNGKey(seed)
+    spec = s2s_param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    out: Params = {}
+    n_layers = cfg.n_enc_layers + cfg.n_dec_layers
+    resid = 0.02 / jnp.sqrt(2.0 * n_layers)
+    for (name, shape), k in zip(spec, keys):
+        if "_ln" in name or name.startswith(("e_ln", "d_ln")):
+            out[name] = jnp.ones(shape, jnp.float32) if name.endswith("_g") else jnp.zeros(shape, jnp.float32)
+        elif name in ("e_wo", "e_down", "d_wo", "d_co", "d_down"):
+            out[name] = jax.random.normal(k, shape, jnp.float32) * resid
+        else:
+            out[name] = jax.random.normal(k, shape, jnp.float32) * 0.02
+    return out
+
+
+def _enc_block_dense(cfg, x, lp, use_pallas):
+    h = add_ln(x, jnp.zeros_like(x), lp["e_ln1_g"], lp["e_ln1_b"], use_pallas)
+    attn = ref.dense_attention(h, lp["e_wq"], lp["e_wk"], lp["e_wv"], lp["e_wo"],
+                               cfg.n_heads, causal=False)
+    x = x + attn
+    h2 = add_ln(x, jnp.zeros_like(x), lp["e_ln2_g"], lp["e_ln2_b"], use_pallas)
+    return x + ref.gelu(h2 @ lp["e_up"]) @ lp["e_down"]
+
+
+def _enc_block_fac(cfg, x, lp, use_pallas):
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    h = add_ln(x, jnp.zeros_like(x), lp["e_ln1_g"], lp["e_ln1_b"], use_pallas)
+    if use_pallas:
+        ctx = kernels.fused_attention_ctx(
+            h, lp["e_u_qk"], lp["e_s_qk"], lp["e_v_qk"], lp["e_u_vo"], lp["e_s_vo"],
+            scale, causal=False,
+        )
+    else:
+        ctx = ref.factorized_attention_ctx(
+            h, lp["e_u_qk"], lp["e_s_qk"], lp["e_v_qk"], lp["e_u_vo"], lp["e_s_vo"],
+            scale, False,
+        )
+    x = x + jnp.einsum("htr,hdr->td", ctx, lp["e_v_vo"])
+    h2 = add_ln(x, jnp.zeros_like(x), lp["e_ln2_g"], lp["e_ln2_b"], use_pallas)
+    return x + ref.gelu(h2 @ lp["e_up"]) @ lp["e_down"]
+
+
+_ENC_DENSE = ["e_ln1_g", "e_ln1_b", "e_wq", "e_wk", "e_wv", "e_wo",
+              "e_ln2_g", "e_ln2_b", "e_up", "e_down"]
+_ENC_FAC = ["e_ln1_g", "e_ln1_b", "e_u_qk", "e_s_qk", "e_v_qk",
+            "e_u_vo", "e_s_vo", "e_v_vo", "e_ln2_g", "e_ln2_b", "e_up", "e_down"]
+_DEC = ["d_ln1_g", "d_ln1_b", "d_wq", "d_wk", "d_wv", "d_wo",
+        "d_lnx_g", "d_lnx_b", "d_cq", "d_ck", "d_cv", "d_co",
+        "d_ln2_g", "d_ln2_b", "d_up", "d_down"]
+
+
+def encode(cfg: Seq2SeqConfig, params: Params, feats: jnp.ndarray,
+           factorized: bool, use_pallas: bool) -> jnp.ndarray:
+    """feats [B, S, feat_dim] -> encoder states [B, S, D]."""
+    x = feats @ params["in_proj"] + params["enc_pos"][None]
+    names = _ENC_FAC if factorized else _ENC_DENSE
+    stacked = {n: params[n] for n in names}
+    block = _enc_block_fac if factorized else _enc_block_dense
+
+    def per_example(xe):
+        def body(h, lp):
+            return block(cfg, h, lp, use_pallas), None
+
+        h, _ = jax.lax.scan(body, xe, stacked)
+        return add_ln(h, jnp.zeros_like(h), params["e_lnf_g"], params["e_lnf_b"], use_pallas)
+
+    return jax.vmap(per_example)(x)
+
+
+def decode(cfg: Seq2SeqConfig, params: Params, enc: jnp.ndarray,
+           tokens: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """Teacher-forced decoder. enc [B,S,D], tokens [B,Tt] -> logits [B,Tt,V]."""
+    b, tt = tokens.shape
+    x = params["tok_emb"][tokens] + params["dec_pos"][None, :tt, :]
+    stacked = {n: params[n] for n in _DEC}
+
+    def per_example(xe, ee):
+        def body(h, lp):
+            h1 = add_ln(h, jnp.zeros_like(h), lp["d_ln1_g"], lp["d_ln1_b"], use_pallas)
+            h = h + ref.dense_attention(h1, lp["d_wq"], lp["d_wk"], lp["d_wv"], lp["d_wo"],
+                                        cfg.n_heads, causal=True)
+            hx = add_ln(h, jnp.zeros_like(h), lp["d_lnx_g"], lp["d_lnx_b"], use_pallas)
+            h = h + ref.cross_attention_dense(hx, ee, lp["d_cq"], lp["d_ck"], lp["d_cv"],
+                                              lp["d_co"], cfg.n_heads)
+            h2 = add_ln(h, jnp.zeros_like(h), lp["d_ln2_g"], lp["d_ln2_b"], use_pallas)
+            return h + ref.gelu(h2 @ lp["d_up"]) @ lp["d_down"], None
+
+        h, _ = jax.lax.scan(body, xe, stacked)
+        return add_ln(h, jnp.zeros_like(h), params["d_lnf_g"], params["d_lnf_b"], use_pallas)
+
+    x = jax.vmap(per_example)(x, enc)
+    return x @ params["tok_emb"].T
+
+
+def s2s_logits(cfg: Seq2SeqConfig, params: Params, feats, tokens,
+               factorized: bool = False, use_pallas: bool = True) -> jnp.ndarray:
+    return decode(cfg, params, encode(cfg, params, feats, factorized, use_pallas),
+                  tokens, use_pallas)
+
+
+def s2s_nll(cfg: Seq2SeqConfig, params: Params, feats, tokens_in, tokens_tgt,
+            factorized: bool = False, use_pallas: bool = True) -> jnp.ndarray:
+    return nll(s2s_logits(cfg, params, feats, tokens_in, factorized, use_pallas), tokens_tgt)

@@ -1,0 +1,78 @@
+"""AOT exporter: manifest integrity and HLO text round-trip sanity.
+
+These tests exercise the exporter machinery on the tiny config without
+re-exporting everything (the full export is `make artifacts`)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import TINY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_program_signature_consistency():
+    """Every declared program's eval_shape output count matches its manifest
+    `outputs` list — catches drift between fn and signature."""
+    progs = aot.decoder_programs(TINY)
+    names = {p.name for p in progs}
+    assert {"init", "fwd", "nll", "train_full", "train_attn", "hidden",
+            "train_lora", "train_dora", "train_hira", "train_cloverft"} <= names
+    for p in progs:
+        outs = jax.eval_shape(p.fn, *p.input_specs())
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        assert len(outs) == len(p.outputs), p.name
+
+
+def test_rank_grid_covers_table1_ratios():
+    ranks = TINY.ranks()
+    dh = TINY.d_head
+    assert dh in ranks
+    ratios = sorted(1 - r / dh for r in ranks)
+    # Table 1 needs 12.5%..75% — grid must include 0, 1/2, 3/4 pruning
+    for want in (0.0, 0.5, 0.75):
+        assert any(abs(x - want) < 1e-6 for x in ratios), (want, ratios)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_files_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert "tiny" in manifest["configs"]
+    for cname, entry in manifest["configs"].items():
+        for pname, prog in entry["programs"].items():
+            path = os.path.join(ART, prog["file"])
+            assert os.path.exists(path), path
+            assert prog["inputs"] and prog["outputs"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "tiny", "golden_nll.npz")),
+                    reason="artifacts not built")
+def test_golden_nll_reproducible():
+    """Re-running the jitted program on the stored golden inputs reproduces
+    the stored outputs — the same check Rust integration tests perform."""
+    data = np.load(os.path.join(ART, "tiny", "golden_nll.npz"))
+    progs = {p.name: p for p in aot.decoder_programs(TINY)}
+    p = progs["nll"]
+    args = [data[f"arg{i}"] for i in range(len(p.inputs))]
+    out = jax.jit(p.fn)(*args)
+    np.testing.assert_allclose(np.asarray(out[0]), data["out0"], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,198 @@
+"""L2 correctness: decoder model, CLOVER equivalences, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import numpy.linalg as la
+import pytest
+
+from compile import model as M
+from compile.configs import TINY
+
+CFG = TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_dense(CFG, jnp.asarray(42, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=(4, CFG.seq_len)), jnp.int32)
+
+
+def clover_factorize_np(params, r):
+    """NumPy reference of the Rust CLOVER transform: head-wise SVD of
+    W_QK = Wq Wk^T and W_VO = Wv Wo, truncated to rank r."""
+    L, H, D = CFG.n_layers, CFG.n_heads, CFG.d_model
+    dh = CFG.d_head
+    fp = {k: v for k, v in params.items() if k not in ("wq", "wk", "wv", "wo")}
+    uqk = np.zeros((L, H, D, r), np.float32)
+    sqk = np.zeros((L, H, r, r), np.float32)
+    vqk = np.zeros((L, H, D, r), np.float32)
+    uvo = np.zeros((L, H, D, r), np.float32)
+    svo = np.zeros((L, H, r, r), np.float32)
+    vvo = np.zeros((L, H, D, r), np.float32)
+    wq, wk, wv, wo = [np.asarray(params[k]) for k in ("wq", "wk", "wv", "wo")]
+    for l in range(L):
+        for h in range(H):
+            sl = slice(h * dh, (h + 1) * dh)
+            U, S, Vt = la.svd(wq[l][:, sl] @ wk[l][:, sl].T)
+            uqk[l, h], sqk[l, h], vqk[l, h] = U[:, :r], np.diag(S[:r]), Vt[:r].T
+            U, S, Vt = la.svd(wv[l][:, sl] @ wo[l][sl, :])
+            uvo[l, h], svo[l, h], vvo[l, h] = U[:, :r], np.diag(S[:r]), Vt[:r].T
+    for k, v in dict(u_qk=uqk, s_qk=sqk, v_qk=vqk, u_vo=uvo, s_vo=svo, v_vo=vvo).items():
+        fp[k] = jnp.asarray(v)
+    return fp
+
+
+def test_forward_shapes(params, tokens):
+    logits = M.forward_dense(CFG, params, tokens)
+    assert logits.shape == (4, CFG.seq_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_causality(params):
+    """Changing a future token must not affect earlier logits."""
+    rng = np.random.default_rng(1)
+    t1 = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, CFG.seq_len)), jnp.int32)
+    t2 = t1.at[0, -1].set((t1[0, -1] + 1) % CFG.vocab)
+    l1 = M.forward_dense(CFG, params, t1)
+    l2 = M.forward_dense(CFG, params, t2)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_clover_full_rank_exact(params, tokens):
+    """Paper §3: at r = d the factorization is lossless — the factorized
+    model reproduces the dense model to float32 precision."""
+    fp = clover_factorize_np(params, CFG.d_head)
+    dense = M.forward_dense(CFG, params, tokens)
+    fac = M.forward_fac(CFG, fp, tokens, use_pallas=False)
+    np.testing.assert_allclose(fac, dense, rtol=1e-4, atol=1e-4)
+    fac_pl = M.forward_fac(CFG, fp, tokens, use_pallas=True)
+    np.testing.assert_allclose(fac_pl, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_clover_pruning_graceful(params, tokens):
+    """NLL degrades monotonically-ish and mildly as rank shrinks (the trained
+    structure isn't there in a random init, but rank-d/2 of a random model
+    should already be a decent approximation of W_QK by energy)."""
+    dense_nll = float(M.nll(M.forward_dense(CFG, params, tokens), tokens))
+    nlls = []
+    for r in (CFG.d_head, CFG.d_head // 2):
+        fp = clover_factorize_np(params, r)
+        nlls.append(float(M.nll(M.forward_fac(CFG, fp, tokens, use_pallas=False), tokens)))
+    assert abs(nlls[0] - dense_nll) < 1e-3
+    assert nlls[1] < dense_nll + 2.0  # half-rank random init: mild damage
+
+
+def test_decode_matches_forward(params):
+    """Incremental decode with a KV cache == teacher-forced forward."""
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, 8)), jnp.int32)
+    logits_full = M.forward_dense(CFG, params, toks)
+    c = CFG.seq_len
+    kc = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, c, CFG.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    outs = []
+    for i in range(8):
+        lg, kc, vc = M.decode_step_dense(CFG, params, kc, vc, toks[:, i],
+                                         jnp.asarray(i, jnp.int32))
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(got, logits_full, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_fac_matches_forward_fac(params):
+    fp = clover_factorize_np(params, CFG.d_head)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 6)), jnp.int32)
+    logits_full = M.forward_fac(CFG, fp, toks, use_pallas=False)
+    r, c = CFG.d_head, CFG.seq_len
+    kc = jnp.zeros((CFG.n_layers, 2, CFG.n_heads, c, r), jnp.float32)
+    voc = jnp.zeros_like(kc)
+    outs = []
+    for i in range(6):
+        lg, kc, voc = M.decode_step_fac(CFG, r, fp, kc, voc, toks[:, i],
+                                        jnp.asarray(i, jnp.int32))
+        outs.append(lg)
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(got, logits_full, rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_reduces_loss(params):
+    """A few full train steps on a fixed batch should overfit it."""
+    spec = M.dense_param_spec(CFG)
+
+    def loss_fn(p, i, t):
+        return M.nll(M.forward_dense(CFG, p, i), t)
+
+    step_fn, train_names = M.make_train_step(loss_fn, spec, [n for n, _ in spec])
+    rng = np.random.default_rng(4)
+    batch = jnp.asarray(rng.integers(0, CFG.vocab, size=(16, CFG.seq_len)), jnp.int32)
+    flat = M.flat_from_params(spec, params)
+    shapes = dict(spec)
+    ms = [jnp.zeros(shapes[n], jnp.float32) for n in train_names]
+    vs = [jnp.zeros(shapes[n], jnp.float32) for n in train_names]
+    step = jnp.asarray(0, jnp.int32)
+    lr = jnp.asarray(1e-3, jnp.float32)
+    jit_step = jax.jit(step_fn)
+    losses = []
+    for _ in range(5):
+        out = jit_step(*flat, *ms, *vs, step, batch, batch, lr)
+        k = len(train_names)
+        newp, ms, vs = out[:k], list(out[k:2 * k]), list(out[2 * k:3 * k])
+        step, loss = out[-2], out[-1]
+        p = M.params_from_flat(spec, flat)
+        for n, t_ in zip(train_names, newp):
+            p[n] = t_
+        flat = M.flat_from_params(spec, p)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1, losses
+    assert int(step) == 5
+
+
+def test_clover_s_train_step_only_updates_s(params):
+    fp = clover_factorize_np(params, CFG.d_head)
+    fac = M.fac_param_spec(CFG, CFG.d_head)
+
+    def loss_fn(p, i, t):
+        return M.nll(M.forward_fac(CFG, p, i, use_pallas=False), t)
+
+    step_fn, train_names = M.make_train_step(loss_fn, fac, ["s_qk", "s_vo"])
+    assert train_names == ["s_qk", "s_vo"]
+    rng = np.random.default_rng(5)
+    batch = jnp.asarray(rng.integers(0, CFG.vocab, size=(16, CFG.seq_len)), jnp.int32)
+    flat = M.flat_from_params(fac, fp)
+    shapes = dict(fac)
+    ms = [jnp.zeros(shapes[n], jnp.float32) for n in train_names]
+    vs = [jnp.zeros(shapes[n], jnp.float32) for n in train_names]
+    out = jax.jit(step_fn)(*flat, *ms, *vs, jnp.asarray(0, jnp.int32), batch, batch,
+                           jnp.asarray(1e-3, jnp.float32))
+    s_qk2, s_vo2 = out[0], out[1]
+    assert not np.allclose(s_qk2, fp["s_qk"])
+    assert not np.allclose(s_vo2, fp["s_vo"])
+    assert float(out[-1]) > 0
+
+
+def test_adamw_matches_manual():
+    p = jnp.asarray([1.0, -2.0])
+    g = jnp.asarray([0.5, 0.5])
+    m = jnp.zeros(2)
+    v = jnp.zeros(2)
+    p2, m2, v2 = M.adamw_update(p, g, m, v, jnp.asarray(1.0), 0.1)
+    mh = 0.5  # m2/(1-b1) = 0.05/0.1... manual: m2 = 0.1*g = 0.05 ; mhat = 0.05/(1-0.9)=0.5
+    vh = (1e-3 * 0.25) / (1 - 0.999)  # = 0.25
+    expect = np.asarray(p) - 0.1 * mh / (np.sqrt(vh) + M.ADAM_EPS)
+    np.testing.assert_allclose(p2, expect, rtol=1e-5)
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}  # norm 5
+    clipped = M.global_norm_clip(g)
+    gn = float(jnp.sqrt(sum(jnp.sum(x * x) for x in clipped.values())))
+    np.testing.assert_allclose(gn, M.CLIP_NORM, rtol=1e-5)
+    small = {"a": jnp.asarray([0.1])}
+    np.testing.assert_allclose(M.global_norm_clip(small)["a"], small["a"], rtol=1e-6)

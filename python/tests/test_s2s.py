@@ -1,0 +1,88 @@
+"""Whisper-like seq2seq model: shapes, causality, factorization equivalence."""
+
+import jax.numpy as jnp
+import numpy as np
+import numpy.linalg as la
+import pytest
+
+from compile import s2s as S
+from compile.configs import S2S_TINY
+
+CFG = S2S_TINY
+
+
+@pytest.fixture(scope="module")
+def params():
+    return S.init_s2s(CFG, jnp.asarray(11, jnp.int32))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.standard_normal((2, CFG.src_len, CFG.feat_dim)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, CFG.tgt_len)), jnp.int32)
+    return feats, toks
+
+
+def fac_encoder_np(params, r):
+    """Factorize encoder self-attention cross-layer (matches Rust transform)."""
+    L, H, D, dh = CFG.n_enc_layers, CFG.n_heads, CFG.d_model, CFG.d_head
+    fp = {k: v for k, v in params.items() if k not in ("e_wq", "e_wk", "e_wv", "e_wo")}
+    shapes = dict(u=np.zeros((L, H, D, r), np.float32), s=np.zeros((L, H, r, r), np.float32))
+    uqk, sqk, vqk = shapes["u"].copy(), shapes["s"].copy(), shapes["u"].copy()
+    uvo, svo, vvo = shapes["u"].copy(), shapes["s"].copy(), shapes["u"].copy()
+    wq, wk, wv, wo = [np.asarray(params[k]) for k in ("e_wq", "e_wk", "e_wv", "e_wo")]
+    for l in range(L):
+        for h in range(H):
+            sl = slice(h * dh, (h + 1) * dh)
+            U, Sv, Vt = la.svd(wq[l][:, sl] @ wk[l][:, sl].T)
+            uqk[l, h], sqk[l, h], vqk[l, h] = U[:, :r], np.diag(Sv[:r]), Vt[:r].T
+            U, Sv, Vt = la.svd(wv[l][:, sl] @ wo[l][sl, :])
+            uvo[l, h], svo[l, h], vvo[l, h] = U[:, :r], np.diag(Sv[:r]), Vt[:r].T
+    for k, v in dict(e_u_qk=uqk, e_s_qk=sqk, e_v_qk=vqk,
+                     e_u_vo=uvo, e_s_vo=svo, e_v_vo=vvo).items():
+        fp[k] = jnp.asarray(v)
+    return fp
+
+
+def test_shapes(params, batch):
+    feats, toks = batch
+    logits = S.s2s_logits(CFG, params, feats, toks, use_pallas=False)
+    assert logits.shape == (2, CFG.tgt_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_decoder_causality(params, batch):
+    feats, toks = batch
+    t2 = toks.at[0, -1].set((toks[0, -1] + 1) % CFG.vocab)
+    l1 = S.s2s_logits(CFG, params, feats, toks, use_pallas=False)
+    l2 = S.s2s_logits(CFG, params, feats, t2, use_pallas=False)
+    np.testing.assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_not_causal(params, batch):
+    """Changing the last input frame must change logits at position 0 —
+    the encoder attends bidirectionally."""
+    feats, toks = batch
+    f2 = feats.at[0, -1, :].add(3.0)
+    l1 = S.s2s_logits(CFG, params, feats, toks, use_pallas=False)
+    l2 = S.s2s_logits(CFG, params, f2, toks, use_pallas=False)
+    assert float(jnp.abs(l1[0, 0] - l2[0, 0]).max()) > 1e-6
+
+
+def test_fac_full_rank_exact(params, batch):
+    feats, toks = batch
+    fp = fac_encoder_np(params, CFG.d_head)
+    dense = S.s2s_logits(CFG, params, feats, toks, use_pallas=False)
+    fac = S.s2s_logits(CFG, fp, feats, toks, factorized=True, use_pallas=False)
+    np.testing.assert_allclose(fac, dense, rtol=1e-4, atol=1e-4)
+    fac_pl = S.s2s_logits(CFG, fp, feats, toks, factorized=True, use_pallas=True)
+    np.testing.assert_allclose(fac_pl, dense, rtol=1e-4, atol=1e-4)
+
+
+def test_nll_finite(params, batch):
+    feats, toks = batch
+    loss = S.s2s_nll(CFG, params, feats, toks, toks, use_pallas=False)
+    assert np.isfinite(float(loss))
+    # random init ≈ near-uniform: nll within a couple nats of ln(vocab)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 2.5

@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Fig 1c on this testbed.
+//! `cargo bench --bench fig1c_ppl_curve` (add `-- --full` for paper-scale budgets).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let table = experiments::fig1c(&rt, &opts)?;
+    table.emit("fig1c_ppl_curve")?;
+    println!("[fig1c_ppl_curve] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

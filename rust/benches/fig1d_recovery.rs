@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Fig 1d on this testbed.
+//! `cargo bench --bench fig1d_recovery` (add `-- --full` for paper-scale budgets).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let table = experiments::fig1d(&rt, &opts)?;
+    table.emit("fig1d_recovery")?;
+    println!("[fig1d_recovery] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 2 (per-head importance spectra, CLOVER vs vanilla).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let table = experiments::fig2(&rt, &opts, full)?;
+    // Summarize: crossover point per head (the red dot of Fig 2).
+    table.emit("fig2_spectra")?;
+    println!("[fig2_spectra] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate §4.4 / Fig 3 (whisper-like training-free pruning).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    experiments::fig3_whisper(&rt, &opts)?.emit("fig3_whisper_prune")?;
+    println!("[fig3_whisper_prune] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Fig 4 on this testbed.
+//! `cargo bench --bench fig4_projection` (add `-- --full` for paper-scale budgets).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let table = experiments::fig4(&rt, &opts)?;
+    table.emit("fig4_projection")?;
+    println!("[fig4_projection] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

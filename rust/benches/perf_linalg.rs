@@ -1,0 +1,69 @@
+//! Perf bench: the linalg substrate on CLOVER-shaped problems.
+//!
+//! Times matmul / QR / Jacobi SVD at the sizes the checkpoint transform
+//! actually hits (D×d thin factors, d×d cores, D×D analysis matrices) and
+//! the full per-head `factorize_pair`.  No criterion in the vendored set —
+//! a min-of-N harness with warmup is used instead.
+
+use clover::clover::transform::factorize_pair;
+use clover::linalg::{matmul, matmul_nt, qr::qr_thin, svd::svd};
+use clover::tensor::Tensor;
+use clover::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    println!(
+        "{name:<40} min {:>9.3} ms   mean {:>9.3} ms",
+        best * 1e3,
+        total / iters as f64 * 1e3
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    println!("== perf_linalg ==");
+
+    for (m, k, n) in [(64, 64, 64), (256, 256, 256), (256, 32, 256)] {
+        let a = Tensor::new(vec![m, k], rng.normal_vec(m * k, 1.0));
+        let b = Tensor::new(vec![k, n], rng.normal_vec(k * n, 1.0));
+        bench(&format!("matmul {m}x{k}x{n}"), 10, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+    }
+
+    for (d, dh) in [(64, 16), (256, 32), (768, 64)] {
+        let a = Tensor::new(vec![d, dh], rng.normal_vec(d * dh, 1.0));
+        bench(&format!("qr_thin {d}x{dh}"), 10, || {
+            std::hint::black_box(qr_thin(&a));
+        });
+    }
+
+    for n in [16, 32, 64, 256] {
+        let a = Tensor::new(vec![n, n], rng.normal_vec(n * n, 1.0));
+        bench(&format!("jacobi svd {n}x{n}"), if n > 128 { 3 } else { 10 }, || {
+            std::hint::black_box(svd(&a));
+        });
+    }
+
+    for (d, dh) in [(64, 16), (256, 32), (768, 64)] {
+        let a = Tensor::new(vec![d, dh], rng.normal_vec(d * dh, 1.0));
+        let b = Tensor::new(vec![d, dh], rng.normal_vec(d * dh, 1.0));
+        bench(&format!("factorize_pair D={d} d={dh} (per head)"), 5, || {
+            std::hint::black_box(factorize_pair(&a, &b, dh));
+        });
+        bench(&format!("materialized SVD D={d} (naive baseline)"), 2, || {
+            let w = matmul_nt(&a, &b);
+            std::hint::black_box(svd(&w));
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! Perf bench: the PJRT execute hot path.
+//!
+//! Measures per-call wall time and the marshal/execute split (from
+//! `Runtime::stats`) for the forward, nll, train-step, and decode
+//! programs — the numbers the §Perf iteration log in EXPERIMENTS.md
+//! tracks before/after each optimization.
+
+use anyhow::Result;
+use clover::coordinator::ops;
+use clover::runtime::Runtime;
+use clover::tensor::{Tensor, TensorI, Value};
+use clover::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let preset = "tiny";
+    let entry = rt.manifest().config(preset)?.clone();
+    let (b, t) = (entry.dim("train_batch")?, entry.dim("seq_len")?);
+    let dense = ops::init_params(&rt, preset, 1)?;
+    let mut rng = Rng::new(0);
+    println!("== perf_runtime ({preset}) ==");
+
+    let toks = |rng: &mut Rng| -> TensorI {
+        TensorI::new(vec![b, t], (0..b * t).map(|_| rng.below(256) as i32).collect())
+    };
+
+    // fwd
+    {
+        let mut args: Vec<Value> = dense.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        args.push(Value::I32(toks(&mut rng)));
+        rt.run(preset, "fwd", &args)?; // compile+warm
+        rt.reset_stats();
+        let n = 20;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(rt.run(preset, "fwd", &args)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let st = rt.stats();
+        println!(
+            "fwd        : {:7.2} ms/call  (execute {:5.1}%  marshal {:5.1}%)  {:.0} tok/s",
+            dt / n as f64 * 1e3,
+            100.0 * st.execute_s / dt, 100.0 * st.marshal_s / dt,
+            (n * b * t) as f64 / dt
+        );
+    }
+
+    // nll
+    {
+        let mut args: Vec<Value> = dense.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        args.push(Value::I32(toks(&mut rng)));
+        args.push(Value::I32(toks(&mut rng)));
+        rt.run(preset, "nll", &args)?;
+        rt.reset_stats();
+        let n = 20;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(rt.run(preset, "nll", &args)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("nll        : {:7.2} ms/call", dt / n as f64 * 1e3);
+    }
+
+    // train_full via the trainer (includes state write-back)
+    {
+        use clover::coordinator::trainer::{train_step, TrainState};
+        use std::collections::BTreeMap;
+        let mut state = TrainState::new(vec![dense.clone()]);
+        let mut batch = BTreeMap::new();
+        batch.insert("inputs".to_string(), Value::I32(toks(&mut rng)));
+        batch.insert("targets".to_string(), Value::I32(toks(&mut rng)));
+        train_step(&rt, preset, "train_full", &mut state, &batch, 1e-3)?;
+        rt.reset_stats();
+        let n = 10;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(train_step(&rt, preset, "train_full", &mut state, &batch, 1e-3)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let st = rt.stats();
+        println!(
+            "train_full : {:7.2} ms/step  (execute {:5.1}%  marshal {:5.1}%)  {:.0} tok/s",
+            dt / n as f64 * 1e3,
+            100.0 * st.execute_s / dt, 100.0 * st.marshal_s / dt,
+            (n * b * t) as f64 / dt
+        );
+    }
+
+    // decode (dense vs factorized at half rank)
+    for (label, prog, params) in [
+        ("decode d=16", "decode_b8".to_string(), dense.clone()),
+        ("decode r=8 ", {
+            let r = 8;
+            format!("decode_fac_r{r}_b8")
+        }, ops::prune_to_ratio(&entry, &dense, 0.5, "clover")?.0),
+    ] {
+        let sig = rt.manifest().config(preset)?.program(&prog)?.clone();
+        let cache_shape = sig.inputs.iter().find(|a| a.name.ends_with("_cache")).unwrap()
+            .shape.clone();
+        let mut args: Vec<Value> = params.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        args.push(Value::F32(Tensor::zeros(&cache_shape)));
+        args.push(Value::F32(Tensor::zeros(&cache_shape)));
+        args.push(Value::I32(TensorI::new(vec![8], vec![1; 8])));
+        args.push(Value::I32(TensorI::scalar(0)));
+        rt.run(preset, &prog, &args)?;
+        rt.reset_stats();
+        let n = 30;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(rt.run(preset, &prog, &args)?);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let st = rt.stats();
+        println!(
+            "{label}: {:7.2} ms/step  (execute {:5.1}%  marshal {:5.1}%)  {:.0} tok/s batched",
+            dt / n as f64 * 1e3,
+            100.0 * st.execute_s / dt, 100.0 * st.marshal_s / dt,
+            (n * 8) as f64 / dt
+        );
+        // §Perf optimization: params marshalled once (run_prepared).
+        let param_values: Vec<Value> =
+            params.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        let prepared = rt.prepare(&param_values.iter().collect::<Vec<_>>())?;
+        let rest = vec![
+            Value::F32(Tensor::zeros(&cache_shape)),
+            Value::F32(Tensor::zeros(&cache_shape)),
+            Value::I32(TensorI::new(vec![8], vec![1; 8])),
+            Value::I32(TensorI::scalar(0)),
+        ];
+        rt.run_prepared(preset, &prog, &prepared, &rest)?;
+        rt.reset_stats();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(rt.run_prepared(preset, &prog, &prepared, &rest)?);
+        }
+        let dt2 = t0.elapsed().as_secs_f64();
+        let st = rt.stats();
+        println!(
+            "{label} (prepared params): {:7.2} ms/step  (execute {:5.1}%  marshal {:5.1}%)  {:+.1}% vs baseline",
+            dt2 / n as f64 * 1e3,
+            100.0 * st.execute_s / dt2, 100.0 * st.marshal_s / dt2,
+            100.0 * (dt2 - dt) / dt
+        );
+    }
+    Ok(())
+}

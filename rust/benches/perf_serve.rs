@@ -1,0 +1,71 @@
+//! Perf bench: serving-layer components in isolation (batcher admission,
+//! KV allocator churn) plus the end-to-end engine throughput at several
+//! pruning ranks.
+
+use anyhow::Result;
+use clover::coordinator::ops;
+use clover::runtime::Runtime;
+use clover::serve::{BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request};
+use clover::util::human_bytes;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    println!("== perf_serve ==");
+
+    // Batcher micro-bench: admission throughput.
+    {
+        let now = Instant::now();
+        let n = 200_000;
+        let t0 = Instant::now();
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
+        let mut admitted = 0usize;
+        for i in 0..n {
+            b.push(Request { id: i, prompt: vec![1], max_new: 1, arrived: now });
+            if b.ready(now, false) {
+                admitted += b.take_batch().len();
+            }
+        }
+        admitted += b.take_batch().len();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("batcher    : {:.1}M req/s (admitted {admitted})", n as f64 / dt / 1e6);
+    }
+
+    // KV allocator churn.
+    {
+        let cfg = KvConfig { n_layers: 4, n_heads: 8, rank: 16, max_positions: 128, batch_slots: 8 };
+        let mut kv = KvManager::new(cfg);
+        let n = 100_000;
+        let t0 = Instant::now();
+        for i in 0..n {
+            let s = kv.allocate(i).unwrap();
+            for _ in 0..8 {
+                kv.advance(s).unwrap();
+            }
+            kv.free(s).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("kv manager : {:.2}M alloc-advance8-free/s", n as f64 / dt / 1e6);
+    }
+
+    // End-to-end engine at dense vs pruned ranks.
+    let rt = Runtime::new("artifacts")?;
+    let preset = "tiny";
+    let entry = rt.manifest().config(preset)?.clone();
+    let dense = ops::init_params(&rt, preset, 1)?;
+    let now = Instant::now();
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    let mk = || -> Vec<Request> {
+        (0..8u64).map(|id| Request { id, prompt: vec![2, 3], max_new: 16, arrived: now }).collect()
+    };
+    let (_, m) = Engine::new(&rt, preset, "decode_b8", dense.clone())?.serve_all(mk(), policy.clone())?;
+    println!("engine dense : {:6.1} tok/s  peak KV {}", m.tokens_per_s(),
+             human_bytes(m.kv_peak_bytes));
+    for ratio in [0.5, 0.75] {
+        let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
+        let engine = Engine::new(&rt, preset, &format!("decode_fac_r{r}_b8"), fac)?;
+        let (_, m) = engine.serve_all(mk(), policy.clone())?;
+        println!("engine r={r:<3}: {:6.1} tok/s  peak KV {}", m.tokens_per_s(),
+                 human_bytes(m.kv_peak_bytes));
+    }
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Table 1 on this testbed.
+//! `cargo bench --bench table1_pruning` (add `-- --full` for paper-scale budgets).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let table = experiments::table1(&rt, &opts)?;
+    table.emit("table1_pruning")?;
+    println!("[table1_pruning] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

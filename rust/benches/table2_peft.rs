@@ -1,0 +1,17 @@
+//! Bench: regenerate Table 2 / Figs 5–6 (one shared training sweep).
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::runtime::Runtime;
+use clover::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sw = Stopwatch::new();
+    let rt = Runtime::new("artifacts")?;
+    let opts = ExpOpts { preset: "tiny".into(), quick: !full, seed: 42 };
+    let (table, outcomes) = experiments::table2(&rt, &opts)?;
+    table.emit("table2")?;
+    experiments::fig5_from(&outcomes).emit("fig5")?;
+    experiments::fig6_from(&outcomes).emit("fig6")?;
+    println!("[table2_peft] total {:.1}s", sw.elapsed_s());
+    Ok(())
+}

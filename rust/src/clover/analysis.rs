@@ -1,0 +1,253 @@
+//! Analysis passes behind Figures 2, 4, 5 and 6.
+//!
+//! * Fig 2 — per-head sorted importance curves: CLOVER singular values vs
+//!   vanilla norm-products ([`spectra_rows`]).
+//! * Fig 4 — projection of data features onto adapter directions
+//!   ([`projection_shares`]): LoRA's random subspace vs PiSSA's principal
+//!   subspace vs CLOVER's full orthogonal basis (±singular-value scaling).
+//! * Fig 5 — singular-value spectrum of the weight update ΔW
+//!   ([`delta_spectrum`]): LoRA is rank-limited, CLOVER/full-FT full-rank.
+//! * Fig 6 — "intruder dimensions" ([`intruder_count`]): post-fine-tuning
+//!   top singular vectors that have no counterpart in the pre-fine-tuning
+//!   basis (Shuttleworth et al., 2024).
+
+use crate::linalg::svd::svd;
+use crate::linalg::matmul_tn;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One Fig-2 row: sorted descending importance per dimension of one head.
+pub struct SpectrumRow {
+    pub layer: usize,
+    pub head: usize,
+    /// CLOVER: singular values of the cross-layer product.
+    pub clover: Vec<f32>,
+    /// Vanilla: sorted ‖Wq·,i‖·‖Wk·,i‖ norm products.
+    pub vanilla: Vec<f32>,
+}
+
+/// Index of the first position where the CLOVER curve drops below the
+/// vanilla curve and stays below — Fig 2's red intersection point.
+pub fn crossover(clover: &[f32], vanilla: &[f32]) -> Option<usize> {
+    let n = clover.len().min(vanilla.len());
+    for i in 0..n {
+        if clover[i] < vanilla[i] && clover[n - 1] <= vanilla[n - 1] {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Mean squared projection of feature rows onto each direction (column) of
+/// an orthonormal basis `u [D, k]`.  `x` is [N, D] (tokens flattened).
+pub fn projection_mass(x: &Tensor, u: &Tensor) -> Vec<f32> {
+    assert_eq!(x.shape()[1], u.shape()[0]);
+    let n = x.shape()[0];
+    let k = u.shape()[1];
+    // P = Xᵀ·X (D×D) would be heavy; instead accumulate ‖X·u_k‖² per col:
+    // mass_k = Σ_rows (x·u_k)² = ‖X u‖²_col.
+    let xu = crate::linalg::matmul(x, u); // [N, k]
+    let mut mass = vec![0.0f32; k];
+    for i in 0..n {
+        for j in 0..k {
+            let v = xu.at2(i, j);
+            mass[j] += v * v;
+        }
+    }
+    for m in &mut mass {
+        *m /= n as f32;
+    }
+    mass
+}
+
+/// Fig-4 shares: fraction of total feature energy captured by
+/// (a) a random rank-r subspace (LoRA), (b) the top-r singular directions
+/// (PiSSA), (c) all directions (CLOVER) — and (d) the share of the top-1
+/// direction after singular-value scaling.
+pub struct ProjectionShares {
+    pub lora_r: f32,
+    pub pissa_r: f32,
+    pub clover_all: f32,
+    pub top1_unscaled: f32,
+    pub top1_scaled: f32,
+}
+
+pub fn projection_shares(
+    x: &Tensor,
+    u: &Tensor,
+    s: &[f32],
+    r: usize,
+    rng: &mut Rng,
+) -> ProjectionShares {
+    let d = u.shape()[0];
+    let mass = projection_mass(x, u); // per orthogonal direction
+    let total: f32 = mass.iter().sum();
+    let pissa_r: f32 = mass.iter().take(r).sum::<f32>() / total.max(1e-12);
+    // LoRA: random orthonormal r-subspace (QR of a Gaussian).
+    let g = Tensor::new(vec![d, r], rng.normal_vec(d * r, 1.0));
+    let q = crate::linalg::qr::qr_thin(&g).q;
+    let lora_mass = projection_mass(x, &q);
+    let lora_r: f32 = lora_mass.iter().sum::<f32>() / total.max(1e-12);
+    // scaled: weight direction masses by σ² (model amplification).
+    let scaled: Vec<f32> = mass.iter().zip(s).map(|(m, sv)| m * sv * sv).collect();
+    let scaled_total: f32 = scaled.iter().sum();
+    ProjectionShares {
+        lora_r,
+        pissa_r,
+        clover_all: 1.0,
+        top1_unscaled: mass[0] / total.max(1e-12),
+        top1_scaled: scaled[0] / scaled_total.max(1e-12),
+    }
+}
+
+/// Fig-5: singular values of ΔW = after − before.
+pub fn delta_spectrum(before: &Tensor, after: &Tensor) -> Vec<f32> {
+    let delta = after.sub(before);
+    svd(&delta).s
+}
+
+/// Numerical rank of a spectrum at a relative tolerance.
+pub fn numerical_rank(s: &[f32], rel_tol: f32) -> usize {
+    let top = s.first().copied().unwrap_or(0.0);
+    if top <= 0.0 {
+        return 0;
+    }
+    s.iter().filter(|&&x| x > rel_tol * top).count()
+}
+
+/// Fig-6: count "intruder" singular vectors among the top-k of `after`:
+/// directions whose best cosine similarity against *all* singular vectors
+/// of `before` is below `tau` (Shuttleworth et al. use tau ≈ 0.6–0.9).
+pub fn intruder_count(before: &Tensor, after: &Tensor, k: usize, tau: f32) -> usize {
+    let db = svd(before);
+    let da = svd(after);
+    let k = k.min(da.u.shape()[1]);
+    let mut count = 0;
+    // cosine table: U_afterᵀ · U_before  (columns orthonormal ⇒ inner
+    // products are cosines).
+    let cos = matmul_tn(&da.u, &db.u); // [ka, kb]
+    let kb = cos.shape()[1];
+    for i in 0..k {
+        let mut best = 0.0f32;
+        for j in 0..kb {
+            best = best.max(cos.at2(i, j).abs());
+        }
+        if best < tau {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Helper for analyses: apply a stacked per-head S update into a flat W
+/// (e.g. reconstruct the effective ΔW a CLOVER fine-tune produced on the
+/// key projection): `W_eff = U · S · Vᵀ` summed per head into [D, D].
+pub fn effective_w(u: &Tensor, s: &Tensor, v: &Tensor, head: usize) -> Tensor {
+    // u [H,D,r] (single layer slice), s [H,r,r], v [H,D,r]
+    let (d, r) = (u.shape()[1], u.shape()[2]);
+    let base_u = head * d * r;
+    let base_s = head * r * r;
+    let u_b = Tensor::new(vec![d, r], u.data()[base_u..base_u + d * r].to_vec());
+    let s_b = Tensor::new(vec![r, r], s.data()[base_s..base_s + r * r].to_vec());
+    let v_b = Tensor::new(vec![d, r], v.data()[base_u..base_u + d * r].to_vec());
+    crate::linalg::matmul(&crate::linalg::matmul(&u_b, &s_b), &v_b.transpose2())
+}
+
+/// KV-cache bytes per token for a decoder layer stack — the paper's
+/// motivating metric.  Factorized caches store 2·L·H·r floats vs dense
+/// 2·L·H·d.
+pub fn kv_bytes_per_token(n_layers: usize, n_heads: usize, rank: usize) -> usize {
+    2 * n_layers * n_heads * rank * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn projection_mass_identity_basis() {
+        // X with known variance along axes; identity basis recovers it.
+        let x = Tensor::new(vec![2, 2], vec![3.0, 0.0, 3.0, 0.0]);
+        let mass = projection_mass(&x, &Tensor::eye(2));
+        assert!((mass[0] - 9.0).abs() < 1e-5);
+        assert_eq!(mass[1], 0.0);
+    }
+
+    #[test]
+    fn pissa_beats_lora_on_lowrank_features() {
+        // Features concentrated in a 2-D subspace aligned with U's top dirs.
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let u = crate::linalg::qr::qr_thin(
+            &Tensor::new(vec![d, d], rng.normal_vec(d * d, 1.0))
+        ).q;
+        // X = coeffs on first two basis dirs
+        let n = 64;
+        let mut xdata = vec![0.0f32; n * d];
+        for i in 0..n {
+            let c0 = rng.normal() as f32 * 3.0;
+            let c1 = rng.normal() as f32;
+            for j in 0..d {
+                xdata[i * d + j] = c0 * u.at2(j, 0) + c1 * u.at2(j, 1);
+            }
+        }
+        let x = Tensor::new(vec![n, d], xdata);
+        let s = vec![1.0f32; d];
+        let shares = projection_shares(&x, &u, &s, 2, &mut rng);
+        assert!(shares.pissa_r > 0.95, "pissa {}", shares.pissa_r);
+        assert!(shares.lora_r < 0.7, "lora {}", shares.lora_r);
+        assert_eq!(shares.clover_all, 1.0);
+    }
+
+    #[test]
+    fn delta_spectrum_rank() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(vec![8, 8], rng.normal_vec(64, 1.0));
+        // rank-1 update
+        let a = Tensor::new(vec![8, 1], rng.normal_vec(8, 1.0));
+        let b = Tensor::new(vec![1, 8], rng.normal_vec(8, 1.0));
+        let mut after = w.clone();
+        after.add_assign(&crate::linalg::matmul(&a, &b));
+        let s = delta_spectrum(&w, &after);
+        assert_eq!(numerical_rank(&s, 1e-3), 1);
+    }
+
+    #[test]
+    fn intruders_detected_for_random_directions() {
+        let mut rng = Rng::new(7);
+        let w = Tensor::new(vec![12, 12], rng.normal_vec(144, 0.3));
+        // identical matrices: no intruders
+        assert_eq!(intruder_count(&w, &w, 4, 0.9), 0);
+        // add a dominant random rank-1 direction: exactly the intruder setup
+        let a = Tensor::new(vec![12, 1], rng.normal_vec(12, 1.0));
+        let b = Tensor::new(vec![1, 12], rng.normal_vec(12, 1.0));
+        let mut upd = crate::linalg::matmul(&a, &b);
+        upd.scale(10.0 / upd.norm());
+        let mut after = w.clone();
+        after.add_assign(&upd);
+        assert!(intruder_count(&w, &after, 2, 0.8) >= 1);
+    }
+
+    #[test]
+    fn crossover_found() {
+        let clover = vec![10.0, 5.0, 0.1, 0.01];
+        let vanilla = vec![4.0, 3.0, 2.5, 2.0];
+        let c = crossover(&clover, &vanilla).unwrap();
+        assert_eq!(c, 2);
+    }
+
+    #[test]
+    fn kv_bytes_scale_with_rank() {
+        let dense = kv_bytes_per_token(4, 8, 32);
+        let pruned = kv_bytes_per_token(4, 8, 16);
+        assert_eq!(pruned * 2, dense);
+    }
+
+    #[test]
+    fn matvec_is_used() {
+        // keep matvec exercised (analysis helpers rely on it indirectly)
+        let a = Tensor::eye(3);
+        assert_eq!(crate::linalg::matvec(&a, &[1.0, 2.0, 3.0]), vec![1.0, 2.0, 3.0]);
+    }
+}

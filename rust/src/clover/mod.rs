@@ -1,0 +1,17 @@
+//! CLOVER: cross-layer orthogonal vectors — transform, pruning, analyses.
+//!
+//! The paper's §3 algorithm ([`transform::clover_transform`]), the vanilla
+//! baseline it is compared against ([`vanilla::vanilla_prune`]), pruning
+//! policies ([`prune`]), and the measurement passes behind Figures 2/4/5/6
+//! ([`analysis`]).
+
+pub mod analysis;
+pub mod prune;
+pub mod transform;
+pub mod vanilla;
+
+pub use analysis::{delta_spectrum, intruder_count, projection_shares, SpectrumRow};
+pub use prune::{achieved_ratio, rank_for_ratio, threshold_prune_s};
+pub use transform::{clover_transform, factorize_pair, merge_s, Naming, Spectra,
+                    DECODER_NAMING, ENCODER_NAMING};
+pub use vanilla::vanilla_prune;

@@ -1,0 +1,127 @@
+//! Pruning policies on top of the CLOVER / vanilla factorizations.
+//!
+//! * [`rank_for_ratio`] — Table-1-style uniform structured pruning: every
+//!   head keeps the same rank, chosen from the artifact rank grid.
+//! * [`threshold_prune_s`] — §4.4-style training-free pruning: zero every
+//!   singular value below a magnitude threshold (per-head variable rank,
+//!   expressed by zeroing S entries so the full-rank artifact stays
+//!   shape-compatible); reports the achieved pruning ratio.
+//! * [`energy_rank`] — per-head rank needed to keep a target energy share.
+
+use anyhow::Result;
+
+use crate::model::params::ParamSet;
+
+/// Uniform rank for a pruning ratio, snapped to the artifact grid.
+///
+/// ratio 0.25 with d=32 → ideal rank 24; picks the largest grid rank ≤
+/// ideal (falling back to the smallest available).
+pub fn rank_for_ratio(d_head: usize, ratio: f64, grid: &[usize]) -> usize {
+    let ideal = ((d_head as f64) * (1.0 - ratio)).round() as usize;
+    let mut best: Option<usize> = None;
+    for &r in grid {
+        if r <= ideal && r >= 1 {
+            best = Some(best.map_or(r, |b: usize| b.max(r)));
+        }
+    }
+    best.unwrap_or_else(|| grid.iter().copied().min().unwrap_or(1))
+}
+
+/// Fraction of parameters removed when each head keeps rank r of d.
+pub fn achieved_ratio(d_head: usize, r: usize) -> f64 {
+    1.0 - (r as f64) / (d_head as f64)
+}
+
+/// Zero out singular values `|s| <= eps` in a stacked S tensor
+/// `[L, H, r, r]`.  Returns (pruned, total) diagonal entries.
+pub fn threshold_prune_s(fac: &mut ParamSet, s_name: &str, eps: f32) -> Result<(usize, usize)> {
+    let s = fac.get(s_name)?.clone();
+    let shape = s.shape().to_vec();
+    let (l, h, r) = (shape[0], shape[1], shape[2]);
+    let mut data = s.into_data();
+    let mut pruned = 0usize;
+    for li in 0..l {
+        for hi in 0..h {
+            let base = (li * h + hi) * r * r;
+            for i in 0..r {
+                let idx = base + i * r + i;
+                if data[idx].abs() <= eps {
+                    if data[idx] != 0.0 {
+                        pruned += 1;
+                    } else {
+                        pruned += 1; // already zero counts as pruned capacity
+                    }
+                    data[idx] = 0.0;
+                }
+            }
+        }
+    }
+    let total = l * h * r;
+    fac.set(s_name, crate::tensor::Tensor::new(shape, data))?;
+    Ok((pruned, total))
+}
+
+/// Smallest rank keeping `target` fraction of Σσ² for one head's spectrum.
+pub fn energy_rank(s: &[f32], target: f32) -> usize {
+    let total: f32 = s.iter().map(|x| x * x).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0f32;
+    for (i, &x) in s.iter().enumerate() {
+        acc += x * x;
+        if acc >= target * total {
+            return i + 1;
+        }
+    }
+    s.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ParamSpec;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn rank_snapping() {
+        let grid = [16, 14, 12, 10, 8, 6, 4, 2];
+        assert_eq!(rank_for_ratio(16, 0.0, &grid), 16);
+        assert_eq!(rank_for_ratio(16, 0.25, &grid), 12);
+        assert_eq!(rank_for_ratio(16, 0.5, &grid), 8);
+        assert_eq!(rank_for_ratio(16, 0.75, &grid), 4);
+        assert_eq!(rank_for_ratio(16, 0.99, &grid), 2);
+    }
+
+    #[test]
+    fn achieved_ratio_sane() {
+        assert_eq!(achieved_ratio(16, 16), 0.0);
+        assert_eq!(achieved_ratio(16, 8), 0.5);
+    }
+
+    #[test]
+    fn threshold_zeroes_small() {
+        let spec: ParamSpec = vec![("s_qk".into(), vec![1, 1, 3, 3])];
+        let mut p = ParamSet::zeros(&spec);
+        let mut t = Tensor::zeros(&[1, 1, 3, 3]);
+        t.data_mut()[0] = 5.0; // (0,0)
+        t.data_mut()[4] = 0.01; // (1,1)
+        t.data_mut()[8] = 0.5; // (2,2)
+        p.set("s_qk", t).unwrap();
+        let (pruned, total) = threshold_prune_s(&mut p, "s_qk", 0.1).unwrap();
+        assert_eq!(total, 3);
+        assert_eq!(pruned, 1);
+        let s = p.get("s_qk").unwrap();
+        assert_eq!(s.data()[4], 0.0);
+        assert_eq!(s.data()[0], 5.0);
+        assert_eq!(s.data()[8], 0.5);
+    }
+
+    #[test]
+    fn energy_rank_monotone() {
+        let s = vec![4.0, 2.0, 1.0, 0.1];
+        assert!(energy_rank(&s, 0.5) <= energy_rank(&s, 0.9));
+        assert_eq!(energy_rank(&s, 1.0), 4);
+        assert_eq!(energy_rank(&[0.0, 0.0], 0.9), 0);
+    }
+}

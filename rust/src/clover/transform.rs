@@ -1,0 +1,410 @@
+//! The CLOVER transform: cross-layer head-wise orthogonalization.
+//!
+//! For each attention head h with dense projections `Wq_h, Wk_h ∈ R^{D×d}`
+//! (and `Wv_h ∈ R^{D×d}`, `Wo_h ∈ R^{d×D}`), factorize the cross-layer
+//! products
+//!
+//! ```text
+//! W_QK^h = Wq_h Wk_hᵀ = U_qk S_qk V_qkᵀ      (rank ≤ d)
+//! W_VO^h = Wv_h Wo_h  = U_vo S_vo V_voᵀ      (rank ≤ d)
+//! ```
+//!
+//! without ever materializing the D×D products: QR-reduce both factors
+//! (`Wq = Q₁R₁`, `Wk = Q₂R₂`), SVD the small d×d core `R₁R₂ᵀ = U' Σ V'ᵀ`,
+//! and recover `U = Q₁U'`, `V = Q₂V'` — an O(D·d²) transform per head
+//! (paper §3; the QR reduction is the standard trick for products of thin
+//! matrices).
+//!
+//! The result plugs directly into the factorized HLO artifacts: `u_qk
+//! [L,H,D,r]`, `s_qk [L,H,r,r]` (diagonal at init), `v_qk [L,H,D,r]`, and
+//! the V-O triple likewise.
+
+use anyhow::{Context, Result};
+
+use crate::linalg::{matmul, matmul_nt, qr::qr_thin};
+use crate::linalg::svd::svd;
+use crate::model::manifest::ParamSpec;
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+
+/// Orthogonalized factors of one head pair plus its singular values.
+pub struct HeadFactors {
+    /// D×r, orthonormal columns.
+    pub u: Tensor,
+    /// Singular values, length r (descending).
+    pub s: Vec<f32>,
+    /// D×r, orthonormal columns.
+    pub v: Tensor,
+}
+
+/// Factorize a cross-layer product `A·Bᵀ` given thin factors A, B ∈ R^{D×d},
+/// truncated to rank `r`.
+pub fn factorize_pair(a: &Tensor, b: &Tensor, r: usize) -> HeadFactors {
+    let d = a.shape()[1];
+    assert_eq!(b.shape()[1], d);
+    assert!(r <= d, "rank {r} > head dim {d}");
+    let qa = qr_thin(a);
+    let qb = qr_thin(b);
+    let core = matmul_nt(&qa.r, &qb.r); // R₁·R₂ᵀ, d×d
+    let dec = svd(&core);
+    let u = matmul(&qa.q, &dec.u.cols(0, r));
+    let v = matmul(&qb.q, &dec.vt.transpose2().cols(0, r));
+    HeadFactors { u, s: dec.s[..r].to_vec(), v }
+}
+
+/// Diagonal r×r tensor from singular values.
+pub fn diag(s: &[f32]) -> Tensor {
+    let r = s.len();
+    let mut t = Tensor::zeros(&[r, r]);
+    for (i, &x) in s.iter().enumerate() {
+        t.data_mut()[i * r + i] = x;
+    }
+    t
+}
+
+/// Slice head `h`'s column block out of a stacked projection `w [D, D]`.
+fn head_cols(w: &Tensor, h: usize, dh: usize) -> Tensor {
+    w.cols(h * dh, (h + 1) * dh)
+}
+
+/// Per-(layer, head) singular-value spectra, the raw material of Fig 2.
+pub struct Spectra {
+    /// [layer][head] -> singular values of W_QK (full, untruncated).
+    pub qk: Vec<Vec<Vec<f32>>>,
+    /// [layer][head] -> singular values of W_VO.
+    pub vo: Vec<Vec<Vec<f32>>>,
+}
+
+/// Options naming the dense/factorized tensors (decoder vs seq2seq-encoder
+/// use different prefixes).
+pub struct Naming {
+    pub wq: &'static str,
+    pub wk: &'static str,
+    pub wv: &'static str,
+    pub wo: &'static str,
+    pub u_qk: &'static str,
+    pub s_qk: &'static str,
+    pub v_qk: &'static str,
+    pub u_vo: &'static str,
+    pub s_vo: &'static str,
+    pub v_vo: &'static str,
+}
+
+pub const DECODER_NAMING: Naming = Naming {
+    wq: "wq", wk: "wk", wv: "wv", wo: "wo",
+    u_qk: "u_qk", s_qk: "s_qk", v_qk: "v_qk",
+    u_vo: "u_vo", s_vo: "s_vo", v_vo: "v_vo",
+};
+
+pub const ENCODER_NAMING: Naming = Naming {
+    wq: "e_wq", wk: "e_wk", wv: "e_wv", wo: "e_wo",
+    u_qk: "e_u_qk", s_qk: "e_s_qk", v_qk: "e_v_qk",
+    u_vo: "e_u_vo", s_vo: "e_s_vo", v_vo: "e_v_vo",
+};
+
+/// Apply the CLOVER transform to a dense parameter set, producing the
+/// factorized set (per `fac_spec`, which fixes rank r) plus full spectra.
+///
+/// Non-attention tensors are copied through unchanged.
+pub fn clover_transform(
+    dense: &ParamSet,
+    fac_spec: &ParamSpec,
+    n_heads: usize,
+    naming: &Naming,
+) -> Result<(ParamSet, Spectra)> {
+    let wq = dense.get(naming.wq)?;
+    let wk = dense.get(naming.wk)?;
+    let wv = dense.get(naming.wv)?;
+    let wo = dense.get(naming.wo)?;
+    let n_layers = wq.shape()[0];
+    let d_model = wq.shape()[1];
+    let dh = d_model / n_heads;
+    // rank r comes from the factorized spec
+    let r = fac_spec
+        .iter()
+        .find(|(n, _)| n == naming.u_qk)
+        .context("fac spec missing u_qk")?
+        .1[3];
+
+    let mut out = ParamSet::zeros(fac_spec);
+    // Copy pass-through tensors.
+    for (name, _) in fac_spec {
+        let is_factor = [
+            naming.u_qk, naming.s_qk, naming.v_qk,
+            naming.u_vo, naming.s_vo, naming.v_vo,
+            "u_ud", "s_ud", "v_ud", // filled by factorize_up_blocks
+        ]
+        .contains(&name.as_str());
+        if !is_factor {
+            out.set(name, dense.get(name)?.clone())
+                .with_context(|| format!("copying {name}"))?;
+        }
+    }
+
+    let mut spectra = Spectra { qk: Vec::new(), vo: Vec::new() };
+    let mut u_qk = Vec::new();
+    let mut s_qk = Vec::new();
+    let mut v_qk = Vec::new();
+    let mut u_vo = Vec::new();
+    let mut s_vo = Vec::new();
+    let mut v_vo = Vec::new();
+
+    for l in 0..n_layers {
+        let (wq_l, wk_l, wv_l, wo_l) =
+            (wq.index0(l), wk.index0(l), wv.index0(l), wo.index0(l));
+        let mut sq_layer = Vec::new();
+        let mut sv_layer = Vec::new();
+        for h in 0..n_heads {
+            // Q-K pair.
+            let a = head_cols(&wq_l, h, dh);
+            let b = head_cols(&wk_l, h, dh);
+            let full = factorize_pair(&a, &b, dh);
+            sq_layer.push(full.s.clone());
+            u_qk.push(full.u.cols(0, r));
+            s_qk.push(diag(&full.s[..r]));
+            v_qk.push(full.v.cols(0, r));
+            // V-O pair: Wv_h [D,d] · Wo_h [d,D]; treat Wo_hᵀ as the thin B.
+            let av = head_cols(&wv_l, h, dh);
+            let bo = wo_l.rows(h * dh, (h + 1) * dh).transpose2(); // D×d
+            let fvo = factorize_pair(&av, &bo, dh);
+            sv_layer.push(fvo.s.clone());
+            u_vo.push(fvo.u.cols(0, r));
+            s_vo.push(diag(&fvo.s[..r]));
+            v_vo.push(fvo.v.cols(0, r));
+        }
+        spectra.qk.push(sq_layer);
+        spectra.vo.push(sv_layer);
+    }
+
+    let stack4 = |parts: &[Tensor], d2: usize, d3: usize| -> Result<Tensor> {
+        Tensor::stack(parts)?.reshape(&[n_layers, n_heads, d2, d3])
+    };
+    out.set(naming.u_qk, stack4(&u_qk, d_model, r)?)?;
+    out.set(naming.s_qk, stack4(&s_qk, r, r)?)?;
+    out.set(naming.v_qk, stack4(&v_qk, d_model, r)?)?;
+    out.set(naming.u_vo, stack4(&u_vo, d_model, r)?)?;
+    out.set(naming.s_vo, stack4(&s_vo, r, r)?)?;
+    out.set(naming.v_vo, stack4(&v_vo, d_model, r)?)?;
+    Ok((out, spectra))
+}
+
+/// Factorize the MLP Up projection into `UD_BLOCK`-column blocks by
+/// intra-layer SVD — the Table-2 fine-tuning configuration ("treat the 64
+/// consecutive dimensions in the MLP.Up layer as a head").  Produces the
+/// `u_ud [L,NB,D,K]`, `s_ud [L,NB,K,K]` (diag init), `v_ud [L,NB,K,K]`
+/// tensors of the `facud` spec such that `W_up[:, blk] = U·S·Vᵀ` exactly.
+pub fn factorize_up_blocks(
+    dense: &ParamSet,
+    facud_spec: &ParamSpec,
+) -> Result<(Tensor, Tensor, Tensor)> {
+    let w_up = dense.get("w_up")?;
+    let (l, d, f) = (w_up.shape()[0], w_up.shape()[1], w_up.shape()[2]);
+    let k = facud_spec.iter().find(|(n, _)| n == "u_ud")
+        .context("facud spec missing u_ud")?.1[3];
+    let nb = f / k;
+    let mut us = Vec::new();
+    let mut ss = Vec::new();
+    let mut vs = Vec::new();
+    for li in 0..l {
+        let w_l = w_up.index0(li); // [D, F]
+        for b in 0..nb {
+            let blk = w_l.cols(b * k, (b + 1) * k); // [D, K]
+            let dec = svd(&blk);
+            us.push(dec.u.cols(0, k));
+            ss.push(diag(&dec.s[..k]));
+            vs.push(dec.vt.transpose2().cols(0, k));
+        }
+    }
+    Ok((
+        Tensor::stack(&us)?.reshape(&[l, nb, d, k])?,
+        Tensor::stack(&ss)?.reshape(&[l, nb, k, k])?,
+        Tensor::stack(&vs)?.reshape(&[l, nb, k, k])?,
+    ))
+}
+
+/// Build the full CLOVER fine-tuning parameter set (`facud` spec): QK/VO
+/// cross-layer factorization at full rank plus blockwise Up factorization.
+pub fn clover_ft_params(
+    dense: &ParamSet,
+    facud_spec: &ParamSpec,
+    n_heads: usize,
+) -> Result<ParamSet> {
+    let (mut fac, _) = clover_transform(dense, facud_spec, n_heads, &DECODER_NAMING)?;
+    let (u_ud, s_ud, v_ud) = factorize_up_blocks(dense, facud_spec)?;
+    fac.set("u_ud", u_ud)?;
+    fac.set("s_ud", s_ud)?;
+    fac.set("v_ud", v_ud)?;
+    Ok(fac)
+}
+
+/// Merge singular values back into U (`U ← U·S`) and set S to identity —
+/// the paper's "reintegrated into the model without increasing its
+/// parameter count" step after pruning or fine-tuning.
+pub fn merge_s(fac: &mut ParamSet, naming: &Naming) -> Result<()> {
+    for (u_name, s_name) in [(naming.u_qk, naming.s_qk), (naming.u_vo, naming.s_vo)] {
+        let u = fac.get(u_name)?.clone();
+        let s = fac.get(s_name)?.clone();
+        let (l, h, d, r) = (u.shape()[0], u.shape()[1], u.shape()[2], u.shape()[3]);
+        let mut new_u = Tensor::zeros(&[l, h, d, r]);
+        let mut new_s = Tensor::zeros(&[l, h, r, r]);
+        for li in 0..l {
+            for hi in 0..h {
+                let base_u = (li * h + hi) * d * r;
+                let base_s = (li * h + hi) * r * r;
+                let u_blk = Tensor::new(vec![d, r], u.data()[base_u..base_u + d * r].to_vec());
+                let s_blk = Tensor::new(vec![r, r], s.data()[base_s..base_s + r * r].to_vec());
+                let merged = matmul(&u_blk, &s_blk);
+                new_u.data_mut()[base_u..base_u + d * r].copy_from_slice(merged.data());
+                for i in 0..r {
+                    new_s.data_mut()[base_s + i * r + i] = 1.0;
+                }
+            }
+        }
+        fac.set(u_name, new_u)?;
+        fac.set(s_name, new_s)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{prop, rel_err};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factorize_pair_exact_at_full_rank() {
+        prop("U S Vᵀ == A·Bᵀ at r = d", 15, |rng| {
+            let d_model = 16 + rng.below(16);
+            let d = 4 + rng.below(4);
+            let a = Tensor::new(vec![d_model, d], rng.normal_vec(d_model * d, 1.0));
+            let b = Tensor::new(vec![d_model, d], rng.normal_vec(d_model * d, 1.0));
+            let f = factorize_pair(&a, &b, d);
+            let want = matmul_nt(&a, &b);
+            let got = matmul(&matmul(&f.u, &diag(&f.s)), &f.v.transpose2());
+            let err = rel_err(got.data(), want.data());
+            if err > 1e-3 {
+                return Err(format!("rel err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        prop("CLOVER factors orthonormal", 10, |rng| {
+            let a = Tensor::new(vec![24, 6], rng.normal_vec(144, 1.0));
+            let b = Tensor::new(vec![24, 6], rng.normal_vec(144, 1.0));
+            let f = factorize_pair(&a, &b, 6);
+            let du = crate::linalg::ortho_defect(&f.u);
+            let dv = crate::linalg::ortho_defect(&f.v);
+            if du > 1e-3 || dv > 1e-3 {
+                return Err(format!("defects {du} {dv}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_is_best_energy() {
+        // Truncated CLOVER reconstruction error equals the energy in the
+        // dropped singular values (Eckart–Young).
+        let mut rng = Rng::new(4);
+        let a = Tensor::new(vec![32, 8], rng.normal_vec(256, 1.0));
+        let b = Tensor::new(vec![32, 8], rng.normal_vec(256, 1.0));
+        let full = factorize_pair(&a, &b, 8);
+        let r = 4;
+        let trunc = factorize_pair(&a, &b, r);
+        let want = matmul_nt(&a, &b);
+        let got = matmul(&matmul(&trunc.u, &diag(&trunc.s)), &trunc.v.transpose2());
+        let err2: f32 = got.data().iter().zip(want.data())
+            .map(|(x, y)| (x - y) * (x - y)).sum();
+        let dropped: f32 = full.s[r..].iter().map(|x| x * x).sum();
+        assert!((err2 - dropped).abs() < 1e-2 * dropped.max(1.0),
+                "err² {err2} vs dropped energy {dropped}");
+    }
+
+    fn dense_fixture(l: usize, _h: usize, d: usize) -> (ParamSet, ParamSpec) {
+        let spec: ParamSpec = vec![
+            ("tok_emb".into(), vec![8, d]),
+            ("wq".into(), vec![l, d, d]),
+            ("wk".into(), vec![l, d, d]),
+            ("wv".into(), vec![l, d, d]),
+            ("wo".into(), vec![l, d, d]),
+        ];
+        let mut rng = Rng::new(11);
+        (ParamSet::gaussian(&spec, &mut rng, 0.3), spec)
+    }
+
+    fn fac_fixture_spec(l: usize, h: usize, d: usize, r: usize) -> ParamSpec {
+        vec![
+            ("tok_emb".into(), vec![8, d]),
+            ("u_qk".into(), vec![l, h, d, r]),
+            ("s_qk".into(), vec![l, h, r, r]),
+            ("v_qk".into(), vec![l, h, d, r]),
+            ("u_vo".into(), vec![l, h, d, r]),
+            ("s_vo".into(), vec![l, h, r, r]),
+            ("v_vo".into(), vec![l, h, d, r]),
+        ]
+    }
+
+    #[test]
+    fn transform_reconstructs_wqk() {
+        let (l, h, d) = (2, 2, 8);
+        let dh = d / h;
+        let (dense, _) = dense_fixture(l, h, d);
+        let fac_spec = fac_fixture_spec(l, h, d, dh);
+        let (fac, spectra) = clover_transform(&dense, &fac_spec, h, &DECODER_NAMING).unwrap();
+        assert_eq!(spectra.qk.len(), l);
+        assert_eq!(spectra.qk[0].len(), h);
+        // check W_QK reconstruction for layer 0, head 1
+        let wq = dense.get("wq").unwrap().index0(0);
+        let wk = dense.get("wk").unwrap().index0(0);
+        let a = head_cols(&wq, 1, dh);
+        let b = head_cols(&wk, 1, dh);
+        let want = matmul_nt(&a, &b);
+        let u = fac.get("u_qk").unwrap();
+        let s = fac.get("s_qk").unwrap();
+        let v = fac.get("v_qk").unwrap();
+        let base_u = (0 * h + 1) * d * dh;
+        let base_s = (0 * h + 1) * dh * dh;
+        let u_blk = Tensor::new(vec![d, dh], u.data()[base_u..base_u + d * dh].to_vec());
+        let s_blk = Tensor::new(vec![dh, dh], s.data()[base_s..base_s + dh * dh].to_vec());
+        let v_blk = Tensor::new(vec![d, dh], v.data()[base_u..base_u + d * dh].to_vec());
+        let got = matmul(&matmul(&u_blk, &s_blk), &v_blk.transpose2());
+        assert!(rel_err(got.data(), want.data()) < 1e-3);
+        // pass-through copied
+        assert_eq!(fac.get("tok_emb").unwrap(), dense.get("tok_emb").unwrap());
+    }
+
+    #[test]
+    fn merge_s_preserves_product() {
+        let (l, h, d) = (1, 2, 8);
+        let dh = d / h;
+        let (dense, _) = dense_fixture(l, h, d);
+        let fac_spec = fac_fixture_spec(l, h, d, dh);
+        let (mut fac, _) = clover_transform(&dense, &fac_spec, h, &DECODER_NAMING).unwrap();
+        let before_u = fac.get("u_qk").unwrap().clone();
+        let before_s = fac.get("s_qk").unwrap().clone();
+        merge_s(&mut fac, &DECODER_NAMING).unwrap();
+        // S is now identity
+        let s = fac.get("s_qk").unwrap();
+        for li in 0..l {
+            for hi in 0..h {
+                let base = (li * h + hi) * dh * dh;
+                for i in 0..dh {
+                    for j in 0..dh {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        assert!((s.data()[base + i * dh + j] - want).abs() < 1e-6);
+                    }
+                }
+            }
+        }
+        // U·S (old) == U (new)
+        let u_blk_old = Tensor::new(vec![d, dh], before_u.data()[..d * dh].to_vec());
+        let s_blk_old = Tensor::new(vec![dh, dh], before_s.data()[..dh * dh].to_vec());
+        let merged = matmul(&u_blk_old, &s_blk_old);
+        let u_new = fac.get("u_qk").unwrap();
+        crate::testing::assert_close(&u_new.data()[..d * dh], merged.data(), 1e-5, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,179 @@
+//! Vanilla (baseline) structured pruning — no orthogonalization.
+//!
+//! Ranks each head's existing dimensions by the product of projection
+//! column norms (‖Wq·,i‖·‖Wk·,i‖ for Q-K; ‖Wv·,i‖·‖Wo i,·‖ for V-O — the
+//! paper's §4.1 L2-norm baseline) and keeps the top r.  The kept columns
+//! are packed into the *factorized* parameter layout with S = I, so vanilla
+//! and CLOVER pruning run through the identical HLO artifacts and any
+//! perplexity difference is attributable to the orthogonalization alone.
+
+use anyhow::{Context, Result};
+
+use crate::model::manifest::ParamSpec;
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+
+use super::transform::Naming;
+
+/// Per-dimension importance of one head: the norm-product curve vanilla
+/// pruning sorts by (and Fig 2's orange line).
+pub fn importance_qk(wq_h: &Tensor, wk_h: &Tensor) -> Vec<f32> {
+    let d = wq_h.shape()[1];
+    (0..d).map(|i| wq_h.col_norm(i) * wk_h.col_norm(i)).collect()
+}
+
+/// Keep the `r` highest-importance dims (indices in original order).
+pub fn top_dims(importance: &[f32], r: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importance.len()).collect();
+    idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    let mut keep = idx[..r].to_vec();
+    keep.sort_unstable();
+    keep
+}
+
+fn gather_cols(w: &Tensor, dims: &[usize]) -> Tensor {
+    let (m, _) = (w.shape()[0], w.shape()[1]);
+    let mut out = Vec::with_capacity(m * dims.len());
+    for i in 0..m {
+        for &j in dims {
+            out.push(w.at2(i, j));
+        }
+    }
+    Tensor::new(vec![m, dims.len()], out)
+}
+
+/// Vanilla-prune a dense parameter set into the factorized layout at the
+/// rank fixed by `fac_spec`.
+pub fn vanilla_prune(
+    dense: &ParamSet,
+    fac_spec: &ParamSpec,
+    n_heads: usize,
+    naming: &Naming,
+) -> Result<ParamSet> {
+    let wq = dense.get(naming.wq)?;
+    let wk = dense.get(naming.wk)?;
+    let wv = dense.get(naming.wv)?;
+    let wo = dense.get(naming.wo)?;
+    let n_layers = wq.shape()[0];
+    let d_model = wq.shape()[1];
+    let dh = d_model / n_heads;
+    let r = fac_spec
+        .iter()
+        .find(|(n, _)| n == naming.u_qk)
+        .context("fac spec missing u_qk")?
+        .1[3];
+
+    let mut out = ParamSet::zeros(fac_spec);
+    for (name, _) in fac_spec {
+        let is_factor = [
+            naming.u_qk, naming.s_qk, naming.v_qk,
+            naming.u_vo, naming.s_vo, naming.v_vo,
+        ]
+        .contains(&name.as_str());
+        if !is_factor {
+            out.set(name, dense.get(name)?.clone())?;
+        }
+    }
+
+    let eye = {
+        let mut t = Tensor::zeros(&[r, r]);
+        for i in 0..r {
+            t.data_mut()[i * r + i] = 1.0;
+        }
+        t
+    };
+
+    let mut u_qk = Vec::new();
+    let mut v_qk = Vec::new();
+    let mut u_vo = Vec::new();
+    let mut v_vo = Vec::new();
+    let mut ss = Vec::new();
+    for l in 0..n_layers {
+        let (wq_l, wk_l, wv_l, wo_l) =
+            (wq.index0(l), wk.index0(l), wv.index0(l), wo.index0(l));
+        for h in 0..n_heads {
+            let q_h = wq_l.cols(h * dh, (h + 1) * dh);
+            let k_h = wk_l.cols(h * dh, (h + 1) * dh);
+            let keep = top_dims(&importance_qk(&q_h, &k_h), r);
+            u_qk.push(gather_cols(&q_h, &keep));
+            v_qk.push(gather_cols(&k_h, &keep));
+            let v_h = wv_l.cols(h * dh, (h + 1) * dh);
+            let o_h = wo_l.rows(h * dh, (h + 1) * dh).transpose2(); // D×d
+            let keep_vo = top_dims(&importance_qk(&v_h, &o_h), r);
+            u_vo.push(gather_cols(&v_h, &keep_vo));
+            v_vo.push(gather_cols(&o_h, &keep_vo));
+            ss.push(eye.clone());
+        }
+    }
+    let stack4 = |parts: &[Tensor], d2: usize, d3: usize| -> Result<Tensor> {
+        Ok(Tensor::stack(parts)?.reshape(&[n_layers, n_heads, d2, d3])?)
+    };
+    out.set(naming.u_qk, stack4(&u_qk, d_model, r)?)?;
+    out.set(naming.v_qk, stack4(&v_qk, d_model, r)?)?;
+    out.set(naming.u_vo, stack4(&u_vo, d_model, r)?)?;
+    out.set(naming.v_vo, stack4(&v_vo, d_model, r)?)?;
+    out.set(naming.s_qk, stack4(&ss, r, r)?)?;
+    out.set(naming.s_vo, stack4(&ss, r, r)?)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clover::transform::DECODER_NAMING;
+    use crate::linalg::{matmul, matmul_nt};
+    use crate::testing::rel_err;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top_dims_picks_largest() {
+        let imp = vec![0.1, 5.0, 0.3, 2.0];
+        assert_eq!(top_dims(&imp, 2), vec![1, 3]);
+        assert_eq!(top_dims(&imp, 4), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn full_rank_vanilla_is_lossless() {
+        // keeping all dims reproduces W_QK exactly
+        let mut rng = Rng::new(2);
+        let spec: ParamSpec = vec![
+            ("wq".into(), vec![1, 8, 8]),
+            ("wk".into(), vec![1, 8, 8]),
+            ("wv".into(), vec![1, 8, 8]),
+            ("wo".into(), vec![1, 8, 8]),
+        ];
+        let dense = ParamSet::gaussian(&spec, &mut rng, 0.5);
+        let fac_spec: ParamSpec = vec![
+            ("u_qk".into(), vec![1, 2, 8, 4]),
+            ("s_qk".into(), vec![1, 2, 4, 4]),
+            ("v_qk".into(), vec![1, 2, 8, 4]),
+            ("u_vo".into(), vec![1, 2, 8, 4]),
+            ("s_vo".into(), vec![1, 2, 4, 4]),
+            ("v_vo".into(), vec![1, 2, 8, 4]),
+        ];
+        let fac = vanilla_prune(&dense, &fac_spec, 2, &DECODER_NAMING).unwrap();
+        let wq = dense.get("wq").unwrap().index0(0).cols(0, 4);
+        let wk = dense.get("wk").unwrap().index0(0).cols(0, 4);
+        let want = matmul_nt(&wq, &wk);
+        let u = fac.get("u_qk").unwrap();
+        let v = fac.get("v_qk").unwrap();
+        let u0 = Tensor::new(vec![8, 4], u.data()[..32].to_vec());
+        let v0 = Tensor::new(vec![8, 4], v.data()[..32].to_vec());
+        let got = matmul(&u0, &v0.transpose2());
+        assert!(rel_err(got.data(), want.data()) < 1e-5);
+    }
+
+    #[test]
+    fn pruned_importance_is_subset() {
+        // With r < d the kept columns are exactly the top-importance ones.
+        let mut rng = Rng::new(5);
+        let mut q = Tensor::new(vec![8, 4], rng.normal_vec(32, 1.0));
+        // make column 2 huge so it must be kept
+        for i in 0..8 {
+            q.set2(i, 2, 10.0);
+        }
+        let k = Tensor::new(vec![8, 4], rng.normal_vec(32, 1.0));
+        let keep = top_dims(&importance_qk(&q, &k), 2);
+        assert!(keep.contains(&2));
+    }
+}

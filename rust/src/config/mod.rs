@@ -1,0 +1,243 @@
+//! Typed run configuration: TOML files + presets + validation.
+//!
+//! Every CLI subcommand takes `--config <file.toml>` (or `--preset <name>`)
+//! and resolves to a [`RunConfig`].  The model *architecture* is pinned by
+//! the AOT manifest — configs select which artifact family to use and the
+//! training/pruning/serving knobs around it.
+
+pub mod json;
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use self::toml::{parse, TomlTable};
+
+/// Which artifact family (= python `configs.py` preset) to drive.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSection {
+    /// Manifest config name: "tiny" | "small" | "large" | "s2s_tiny".
+    pub preset: String,
+    /// artifacts/ directory root.
+    pub artifacts_dir: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainSection {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    /// "linear" | "cosine" | "constant"
+    pub schedule: String,
+    pub seed: u64,
+    pub log_every: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneSection {
+    /// Fraction of per-head directions to remove (0.0..1.0).
+    pub ratio: f64,
+    /// "clover" (orthogonalize then drop smallest singular values) or
+    /// "vanilla" (drop smallest ‖Wq_i‖·‖Wk_i‖ directions without
+    /// orthogonalization).
+    pub method: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeSection {
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub max_new_tokens: usize,
+    pub kv_rank: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSection {
+    /// "zipf" | "markov" | "mixture"
+    pub corpus: String,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: ModelSection,
+    pub train: TrainSection,
+    pub prune: PruneSection,
+    pub serve: ServeSection,
+    pub data: DataSection,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            model: ModelSection { preset: "tiny".into(), artifacts_dir: "artifacts".into() },
+            train: TrainSection {
+                steps: 200,
+                lr: 1e-3,
+                warmup_steps: 20,
+                schedule: "linear".into(),
+                seed: 42,
+                log_every: 20,
+                eval_every: 0,
+                eval_batches: 8,
+            },
+            prune: PruneSection { ratio: 0.5, method: "clover".into() },
+            serve: ServeSection { max_batch: 8, max_wait_ms: 5, max_new_tokens: 32, kv_rank: 0 },
+            data: DataSection { corpus: "mixture".into(), seed: 1234 },
+        }
+    }
+}
+
+fn get_str(t: &TomlTable, sec: &str, key: &str, dflt: &str) -> Result<String> {
+    match t.get(sec).and_then(|s| s.get(key)) {
+        Some(v) => Ok(v.as_str()?.to_string()),
+        None => Ok(dflt.to_string()),
+    }
+}
+
+fn get_usize(t: &TomlTable, sec: &str, key: &str, dflt: usize) -> Result<usize> {
+    match t.get(sec).and_then(|s| s.get(key)) {
+        Some(v) => v.as_usize(),
+        None => Ok(dflt),
+    }
+}
+
+fn get_f64(t: &TomlTable, sec: &str, key: &str, dflt: f64) -> Result<f64> {
+    match t.get(sec).and_then(|s| s.get(key)) {
+        Some(v) => v.as_f64(),
+        None => Ok(dflt),
+    }
+}
+
+fn get_u64(t: &TomlTable, sec: &str, key: &str, dflt: u64) -> Result<u64> {
+    Ok(get_usize(t, sec, key, dflt as usize)? as u64)
+}
+
+impl RunConfig {
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let t = parse(text)?;
+        let d = RunConfig::default();
+        let cfg = RunConfig {
+            name: get_str(&t, "", "name", &d.name)?,
+            model: ModelSection {
+                preset: get_str(&t, "model", "preset", &d.model.preset)?,
+                artifacts_dir: get_str(&t, "model", "artifacts_dir", &d.model.artifacts_dir)?,
+            },
+            train: TrainSection {
+                steps: get_usize(&t, "train", "steps", d.train.steps)?,
+                lr: get_f64(&t, "train", "lr", d.train.lr)?,
+                warmup_steps: get_usize(&t, "train", "warmup_steps", d.train.warmup_steps)?,
+                schedule: get_str(&t, "train", "schedule", &d.train.schedule)?,
+                seed: get_u64(&t, "train", "seed", d.train.seed)?,
+                log_every: get_usize(&t, "train", "log_every", d.train.log_every)?,
+                eval_every: get_usize(&t, "train", "eval_every", d.train.eval_every)?,
+                eval_batches: get_usize(&t, "train", "eval_batches", d.train.eval_batches)?,
+            },
+            prune: PruneSection {
+                ratio: get_f64(&t, "prune", "ratio", d.prune.ratio)?,
+                method: get_str(&t, "prune", "method", &d.prune.method)?,
+            },
+            serve: ServeSection {
+                max_batch: get_usize(&t, "serve", "max_batch", d.serve.max_batch)?,
+                max_wait_ms: get_u64(&t, "serve", "max_wait_ms", d.serve.max_wait_ms)?,
+                max_new_tokens: get_usize(&t, "serve", "max_new_tokens", d.serve.max_new_tokens)?,
+                kv_rank: get_usize(&t, "serve", "kv_rank", d.serve.kv_rank)?,
+            },
+            data: DataSection {
+                corpus: get_str(&t, "data", "corpus", &d.data.corpus)?,
+                seed: get_u64(&t, "data", "seed", d.data.seed)?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.prune.ratio) {
+            bail!("prune.ratio must be in [0, 1), got {}", self.prune.ratio);
+        }
+        match self.prune.method.as_str() {
+            "clover" | "vanilla" => {}
+            other => bail!("prune.method must be clover|vanilla, got {other:?}"),
+        }
+        match self.train.schedule.as_str() {
+            "linear" | "cosine" | "constant" => {}
+            other => bail!("train.schedule must be linear|cosine|constant, got {other:?}"),
+        }
+        if self.train.lr <= 0.0 {
+            bail!("train.lr must be positive");
+        }
+        if self.serve.max_batch == 0 {
+            bail!("serve.max_batch must be >= 1");
+        }
+        match self.data.corpus.as_str() {
+            "zipf" | "markov" | "mixture" => {}
+            other => bail!("data.corpus must be zipf|markov|mixture, got {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_pass_validation() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+name = "table1"
+[model]
+preset = "small"
+[train]
+steps = 500
+lr = 6e-4
+schedule = "cosine"
+[prune]
+ratio = 0.25
+method = "vanilla"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "table1");
+        assert_eq!(cfg.model.preset, "small");
+        assert_eq!(cfg.train.steps, 500);
+        assert_eq!(cfg.train.schedule, "cosine");
+        assert_eq!(cfg.prune.ratio, 0.25);
+        assert_eq!(cfg.prune.method, "vanilla");
+        // untouched sections keep defaults
+        assert_eq!(cfg.serve.max_batch, 8);
+    }
+
+    #[test]
+    fn rejects_bad_ratio() {
+        let r = RunConfig::from_toml_str("[prune]\nratio = 1.5");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_method() {
+        let r = RunConfig::from_toml_str("[prune]\nmethod = \"magic\"");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_schedule() {
+        assert!(RunConfig::from_toml_str("[train]\nschedule = \"step\"").is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Minimal TOML parser — the subset run-config files need.
+//!
+//! Supports: `[section]` / `[section.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and blank lines.  No inline tables, no multi-line strings, no
+//! dates — run configs (`configs/*.toml`) don't use them.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_i64()?;
+        if x < 0 {
+            bail!("expected non-negative, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(x) => Ok(*x),
+            TomlValue::Int(x) => Ok(*x as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// `table["section"]["key"]` — flat two-level representation; dotted
+/// section names keep their dots (`[a.b]` → section key `"a.b"`).
+pub type TomlTable = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML document into sections.  Top-level keys (before any
+/// `[section]`) land in the `""` section.
+pub fn parse(text: &str) -> Result<TomlTable> {
+    let mut table: TomlTable = BTreeMap::new();
+    let mut current = String::new();
+    table.entry(current.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+            current = name.trim().to_string();
+            table.entry(current.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        table.get_mut(&current).unwrap().insert(key, val);
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("bad escape \\{other:?}"),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(x) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(x));
+    }
+    if let Ok(x) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_document() {
+        let doc = r#"
+# run config
+name = "exp1"
+
+[model]
+preset = "small"
+layers = 4
+lr = 3e-4
+use_pallas = true
+ranks = [32, 16, 8]
+
+[train.schedule]
+kind = "linear"
+"#;
+        let t = parse(doc).unwrap();
+        assert_eq!(t[""]["name"], TomlValue::Str("exp1".into()));
+        assert_eq!(t["model"]["layers"], TomlValue::Int(4));
+        assert_eq!(t["model"]["lr"].as_f64().unwrap(), 3e-4);
+        assert_eq!(t["model"]["use_pallas"], TomlValue::Bool(true));
+        assert_eq!(
+            t["model"]["ranks"],
+            TomlValue::Arr(vec![TomlValue::Int(32), TomlValue::Int(16), TomlValue::Int(8)])
+        );
+        assert_eq!(t["train.schedule"]["kind"].as_str().unwrap(), "linear");
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let t = parse("x = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(t[""]["x"].as_str().unwrap(), "a # not comment");
+    }
+
+    #[test]
+    fn escapes() {
+        let t = parse(r#"x = "a\nb\"c""#).unwrap();
+        assert_eq!(t[""]["x"].as_str().unwrap(), "a\nb\"c");
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let t = parse("n = 1_000_000").unwrap();
+        assert_eq!(t[""]["n"].as_i64().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @?!").is_err());
+    }
+}

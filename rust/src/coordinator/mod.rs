@@ -1,0 +1,11 @@
+//! Coordinator: training/eval loops and the experiment runners that
+//! regenerate every table and figure (see DESIGN.md §4 for the index).
+
+pub mod eval;
+pub mod experiments;
+pub mod ops;
+pub mod schedule;
+pub mod trainer;
+
+pub use ops::{fac_perplexity, greedy_decode, init_params, pretrain, prune_to_ratio, recover};
+pub use trainer::{train_loop, train_step, LoopOpts, TrainState};

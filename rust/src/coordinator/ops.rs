@@ -1,0 +1,261 @@
+//! High-level operations shared by the CLI, examples, and benches:
+//! initialization, pretraining, the prune→recover pipeline, and decode.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use crate::clover;
+use crate::data::batch::TokenStream;
+use crate::model::manifest::ConfigEntry;
+use crate::model::params::ParamSet;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorI, Value};
+use crate::util::rng::Rng;
+
+use super::trainer::{train_loop, LoopOpts, TrainState};
+
+/// Run the `init` program: fresh dense parameters for a config.
+pub fn init_params(rt: &Runtime, config: &str, seed: i32) -> Result<ParamSet> {
+    let entry = rt.manifest().config(config)?.clone();
+    let outs = rt.run(config, "init", &[Value::I32(TensorI::scalar(seed))])?;
+    let tensors: Vec<Tensor> = outs.into_iter()
+        .map(|v| v.into_f32())
+        .collect::<Result<_>>()?;
+    let spec = if entry.kind == "seq2seq" { &entry.params_dense } else { &entry.params_dense };
+    ParamSet::from_flat(spec, tensors)
+}
+
+/// LM batch provider closure over a token stream.
+pub fn lm_batcher<'a>(
+    stream: &'a TokenStream,
+    b: usize,
+    t: usize,
+    seed: u64,
+) -> impl FnMut(usize) -> BTreeMap<String, Value> + 'a {
+    let mut rng = Rng::new(seed);
+    move |_i| {
+        let (inp, tgt) = stream.train_batch(&mut rng, b, t);
+        let mut m = BTreeMap::new();
+        m.insert("inputs".to_string(), Value::I32(inp));
+        m.insert("targets".to_string(), Value::I32(tgt));
+        m
+    }
+}
+
+/// Pretrain dense params on a token stream; returns the loss curve.
+#[allow(clippy::too_many_arguments)]
+pub fn pretrain(
+    rt: &Runtime,
+    config: &str,
+    params: ParamSet,
+    stream: &TokenStream,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+    tag: &str,
+) -> Result<(ParamSet, Vec<(usize, f32)>)> {
+    let entry = rt.manifest().config(config)?;
+    let (b, t) = (entry.dim("train_batch")?, entry.dim("seq_len")?);
+    let mut state = TrainState::new(vec![params]);
+    let opts = LoopOpts {
+        steps,
+        lr,
+        schedule: "cosine".into(),
+        warmup: (steps / 20).max(2),
+        log_every: (steps / 10).max(1),
+        tag: tag.into(),
+    };
+    let curve = train_loop(rt, config, "train_full", &mut state, &opts,
+                           lm_batcher(stream, b, t, seed))?;
+    Ok((state.sets.remove(0), curve))
+}
+
+/// Factorize dense params at the rank implied by `ratio`, using either the
+/// CLOVER transform or the vanilla norm-product baseline.  Returns
+/// (factorized params, rank).
+pub fn prune_to_ratio(
+    entry: &ConfigEntry,
+    dense: &ParamSet,
+    ratio: f64,
+    method: &str,
+) -> Result<(ParamSet, usize)> {
+    let dh = entry.dim("d_head")?;
+    let h = entry.dim("n_heads")?;
+    let r = clover::rank_for_ratio(dh, ratio, &entry.ranks);
+    let fac_spec = entry.params_fac.get(&r)
+        .with_context(|| format!("no factorized artifacts at rank {r}"))?;
+    let fac = match method {
+        "vanilla" => clover::vanilla_prune(dense, fac_spec, h, &clover::DECODER_NAMING)?,
+        _ => clover::clover_transform(dense, fac_spec, h, &clover::DECODER_NAMING)?.0,
+    };
+    Ok((fac, r))
+}
+
+/// Recovery fine-tune of a pruned model.  `mode`: "attn" trains all
+/// factorized attention tensors (Table 1 "CLOVER"/"Vanilla" columns);
+/// "s" trains only the singular-value matrices (CLOVER†).
+#[allow(clippy::too_many_arguments)]
+pub fn recover(
+    rt: &Runtime,
+    config: &str,
+    fac: ParamSet,
+    r: usize,
+    mode: &str,
+    stream: &TokenStream,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+) -> Result<(ParamSet, Vec<(usize, f32)>)> {
+    let entry = rt.manifest().config(config)?;
+    let (b, t) = (entry.dim("train_batch")?, entry.dim("seq_len")?);
+    let program = match mode {
+        "s" => format!("train_clover_s_r{r}"),
+        _ => format!("train_fac_attn_r{r}"),
+    };
+    let mut state = TrainState::new(vec![fac]);
+    let opts = LoopOpts {
+        steps,
+        lr,
+        schedule: "linear".into(),
+        warmup: (steps / 20).max(1),
+        log_every: (steps / 5).max(1),
+        tag: format!("recover-{mode}-r{r}"),
+    };
+    let curve = train_loop(rt, config, &program, &mut state, &opts,
+                           lm_batcher(stream, b, t, seed))?;
+    Ok((state.sets.remove(0), curve))
+}
+
+/// Perplexity of a factorized model at rank r.
+pub fn fac_perplexity(
+    rt: &Runtime,
+    config: &str,
+    fac: &ParamSet,
+    r: usize,
+    stream: &TokenStream,
+    max_batches: usize,
+) -> Result<f64> {
+    super::eval::perplexity(rt, config, &format!("nll_fac_r{r}"), fac, stream, max_batches)
+}
+
+/// Greedy decode with the batched KV-cache artifacts; returns generated
+/// token rows (prompt included).  Used by the serve engine and examples.
+pub fn greedy_decode(
+    rt: &Runtime,
+    config: &str,
+    program: &str,
+    params: &ParamSet,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let sig = rt.manifest().config(config)?.program(program)?.clone();
+    // cache shapes come from the program signature
+    let cache_spec = sig.inputs.iter().find(|a| a.name.ends_with("_cache"))
+        .context("decode program has no cache input")?;
+    let cache_shape = cache_spec.shape.clone();
+    let b = cache_shape[1];
+    let c = cache_shape[3];
+    anyhow::ensure!(prompts.len() <= b, "too many prompts for decode batch {b}");
+    let v = rt.manifest().config(config)?.dim("vocab")?;
+
+    let mut kc = Tensor::zeros(&cache_shape);
+    let mut vc = Tensor::zeros(&cache_shape);
+    let mut rows: Vec<Vec<i32>> = (0..b)
+        .map(|i| prompts.get(i).cloned().unwrap_or_else(|| vec![0]))
+        .collect();
+    let max_prompt = rows.iter().map(|r| r.len()).max().unwrap_or(1);
+    let total = (max_prompt + max_new).min(c);
+
+    for pos in 0..total {
+        let toks: Vec<i32> = rows.iter()
+            .map(|r| *r.get(pos).unwrap_or(r.last().unwrap_or(&0)))
+            .collect();
+        let mut args: Vec<Value> =
+            params.flat().iter().map(|&t| Value::F32(t.clone())).collect();
+        args.push(Value::F32(kc));
+        args.push(Value::F32(vc));
+        args.push(Value::I32(TensorI::new(vec![b], toks)));
+        args.push(Value::I32(TensorI::scalar(pos as i32)));
+        let mut outs = rt.run(config, program, &args)?;
+        let vc_new = outs.pop().unwrap().into_f32()?;
+        let kc_new = outs.pop().unwrap().into_f32()?;
+        let logits = outs.pop().unwrap().into_f32()?; // [B, V]
+        kc = kc_new;
+        vc = vc_new;
+        for (i, row) in rows.iter_mut().enumerate() {
+            if pos + 1 >= row.len() && row.len() < total {
+                // past the prompt: append argmax
+                let base = i * v;
+                let mut best = 0usize;
+                let mut bestv = f32::NEG_INFINITY;
+                for j in 0..v {
+                    let x = logits.data()[base + j];
+                    if x > bestv {
+                        bestv = x;
+                        best = j;
+                    }
+                }
+                row.push(best as i32);
+            }
+        }
+    }
+    rows.truncate(prompts.len());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn prune_both_methods_tiny() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let entry = rt.manifest().config("tiny").unwrap().clone();
+        let dense = init_params(&rt, "tiny", 3).unwrap();
+        for method in ["clover", "vanilla"] {
+            let (fac, r) = prune_to_ratio(&entry, &dense, 0.5, method).unwrap();
+            assert_eq!(r, 8);
+            assert_eq!(fac.get("u_qk").unwrap().shape(), &[2, 4, 64, 8]);
+        }
+    }
+
+    #[test]
+    fn clover_full_rank_matches_dense_nll() {
+        // The end-to-end seal: rust CLOVER transform at r=d, run through the
+        // factorized HLO, reproduces the dense model's loss.
+        let rt = Runtime::new(&art()).expect("runtime");
+        let entry = rt.manifest().config("tiny").unwrap().clone();
+        let dense = init_params(&rt, "tiny", 11).unwrap();
+        let (fac, r) = prune_to_ratio(&entry, &dense, 0.0, "clover").unwrap();
+        assert_eq!(r, entry.dim("d_head").unwrap());
+        let (b, t) = (entry.dim("train_batch").unwrap(), entry.dim("seq_len").unwrap());
+        let mut rng = Rng::new(1);
+        let toks: Vec<i32> = (0..b * t).map(|_| rng.below(256) as i32).collect();
+        let inp = TensorI::new(vec![b, t], toks.clone());
+        let tgt = TensorI::new(vec![b, t], toks);
+        let mut args: Vec<Value> = dense.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        args.push(Value::I32(inp.clone()));
+        args.push(Value::I32(tgt.clone()));
+        let dense_loss = rt.run_scalar("tiny", "nll", &args, 0).unwrap();
+        let mut fargs: Vec<Value> = fac.flat().iter().map(|&x| Value::F32(x.clone())).collect();
+        fargs.push(Value::I32(inp));
+        fargs.push(Value::I32(tgt));
+        let fac_loss = rt.run_scalar("tiny", &format!("nll_fac_r{r}"), &fargs, 0).unwrap();
+        assert!((dense_loss - fac_loss).abs() < 1e-2,
+                "dense {dense_loss} vs clover-full-rank {fac_loss}");
+    }
+
+    #[test]
+    fn greedy_decode_shapes() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let dense = init_params(&rt, "tiny", 5).unwrap();
+        let rows = greedy_decode(&rt, "tiny", "decode_b1", &dense, &[vec![1, 2, 3]], 4).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), 7);
+        assert_eq!(&rows[0][..3], &[1, 2, 3]);
+    }
+}

@@ -1,0 +1,45 @@
+//! Learning-rate schedules (linear / cosine decay with warmup).
+
+/// LR at `step` (0-based) of `total` steps with `warmup` linear-ramp steps.
+pub fn lr_at(kind: &str, base: f64, step: usize, total: usize, warmup: usize) -> f64 {
+    if warmup > 0 && step < warmup {
+        return base * (step + 1) as f64 / warmup as f64;
+    }
+    let span = total.saturating_sub(warmup).max(1) as f64;
+    let t = (step.saturating_sub(warmup)) as f64 / span;
+    let t = t.min(1.0);
+    match kind {
+        "cosine" => base * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()),
+        "constant" => base,
+        _ => base * (1.0 - t), // linear
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps() {
+        assert!(lr_at("linear", 1.0, 0, 100, 10) < lr_at("linear", 1.0, 9, 100, 10));
+        assert!((lr_at("linear", 1.0, 9, 100, 10) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let end = lr_at("linear", 1.0, 99, 100, 0);
+        assert!(end < 0.02);
+    }
+
+    #[test]
+    fn cosine_midpoint_half() {
+        let mid = lr_at("cosine", 1.0, 50, 100, 0);
+        assert!((mid - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        assert_eq!(lr_at("constant", 0.3, 5, 100, 0), 0.3);
+        assert_eq!(lr_at("constant", 0.3, 95, 100, 0), 0.3);
+    }
+}

@@ -1,0 +1,221 @@
+//! Generic training driver over any AOT train-step program.
+//!
+//! Every train-step artifact follows the same calling convention (see
+//! `python/compile/aot.py`):
+//!
+//! ```text
+//! inputs : [param tensors…] [m_<t>…] [v_<t>…] step batch… lr
+//! outputs: [updated trainable tensors…] [m_<t>…] [v_<t>…] step loss
+//! ```
+//!
+//! The trainer resolves input names against a stack of [`ParamSet`]
+//! providers (base params, adapters, …) plus per-step batch values, runs
+//! the executable, and writes updated tensors back by name — so dense
+//! pretraining, factorized recovery, CLOVER-S fine-tuning, and all PEFT
+//! baselines share this one loop.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use crate::model::params::ParamSet;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorI, Value};
+use crate::util::Stopwatch;
+
+use super::schedule::lr_at;
+
+/// Mutable training state: parameter providers + optimizer moments.
+pub struct TrainState {
+    /// Providers searched in order for plain-named tensors.  Updated
+    /// tensors are written back to whichever provider owns the name.
+    pub sets: Vec<ParamSet>,
+    pub m: BTreeMap<String, Tensor>,
+    pub v: BTreeMap<String, Tensor>,
+    pub step: i32,
+}
+
+impl TrainState {
+    pub fn new(sets: Vec<ParamSet>) -> Self {
+        Self { sets, m: BTreeMap::new(), v: BTreeMap::new(), step: 0 }
+    }
+
+    fn lookup(&self, name: &str) -> Option<&Tensor> {
+        self.sets.iter().find_map(|s| s.get(name).ok())
+    }
+
+    fn write_back(&mut self, name: &str, t: Tensor) -> Result<()> {
+        for s in &mut self.sets {
+            if s.get(name).is_ok() {
+                return s.set(name, t);
+            }
+        }
+        bail!("updated tensor {name:?} has no owning provider")
+    }
+
+    /// First provider (by convention the primary parameter set).
+    pub fn primary(&self) -> &ParamSet {
+        &self.sets[0]
+    }
+}
+
+/// One optimizer step of `config/program`.  `batch` supplies the
+/// non-parameter inputs by name (e.g. "inputs"/"targets" or
+/// "feats"/"tokens_in"/"tokens_tgt").  Returns the loss.
+pub fn train_step(
+    rt: &Runtime,
+    config: &str,
+    program: &str,
+    state: &mut TrainState,
+    batch: &BTreeMap<String, Value>,
+    lr: f64,
+) -> Result<f32> {
+    let sig = rt.manifest().config(config)?.program(program)?.clone();
+    let mut args: Vec<Value> = Vec::with_capacity(sig.inputs.len());
+    for spec in &sig.inputs {
+        let name = spec.name.as_str();
+        let val: Value = if name == "step" {
+            Value::I32(TensorI::scalar(state.step))
+        } else if name == "lr" {
+            Value::F32(Tensor::scalar(lr as f32))
+        } else if let Some(v) = batch.get(name) {
+            v.clone()
+        } else if let Some(rest) = name.strip_prefix("m_") {
+            let t = state.m.entry(rest.to_string())
+                .or_insert_with(|| Tensor::zeros(&spec.shape));
+            Value::F32(t.clone())
+        } else if let Some(rest) = name.strip_prefix("v_") {
+            let t = state.v.entry(rest.to_string())
+                .or_insert_with(|| Tensor::zeros(&spec.shape));
+            Value::F32(t.clone())
+        } else if let Some(t) = state.lookup(name) {
+            Value::F32(t.clone())
+        } else {
+            bail!("{config}/{program}: no provider for input {name:?}");
+        };
+        args.push(val);
+    }
+
+    let outs = rt.run(config, program, &args)?;
+    let mut loss = f32::NAN;
+    for (spec, out) in sig.outputs.iter().zip(outs) {
+        let name = spec.name.as_str();
+        if name == "loss" {
+            loss = out.as_f32()?.item();
+        } else if name == "step" {
+            state.step = out.as_i32()?.item();
+        } else if let Some(rest) = name.strip_prefix("m_") {
+            state.m.insert(rest.to_string(), out.into_f32()?);
+        } else if let Some(rest) = name.strip_prefix("v_") {
+            state.v.insert(rest.to_string(), out.into_f32()?);
+        } else {
+            state.write_back(name, out.into_f32()?)
+                .with_context(|| format!("{config}/{program} output {name}"))?;
+        }
+    }
+    if loss.is_nan() {
+        bail!("{config}/{program}: program emitted no loss");
+    }
+    Ok(loss)
+}
+
+/// Training-loop options.
+pub struct LoopOpts {
+    pub steps: usize,
+    pub lr: f64,
+    pub schedule: String,
+    pub warmup: usize,
+    pub log_every: usize,
+    pub tag: String,
+}
+
+/// Run a full training loop, pulling batches from `next_batch`.
+/// Returns the logged (step, loss) curve.
+pub fn train_loop<F>(
+    rt: &Runtime,
+    config: &str,
+    program: &str,
+    state: &mut TrainState,
+    opts: &LoopOpts,
+    mut next_batch: F,
+) -> Result<Vec<(usize, f32)>>
+where
+    F: FnMut(usize) -> BTreeMap<String, Value>,
+{
+    let sw = Stopwatch::new();
+    let mut curve = Vec::new();
+    let mut ema: Option<f32> = None;
+    for i in 0..opts.steps {
+        let lr = lr_at(&opts.schedule, opts.lr, i, opts.steps, opts.warmup);
+        let batch = next_batch(i);
+        let loss = train_step(rt, config, program, state, &batch, lr)?;
+        ema = Some(match ema {
+            None => loss,
+            Some(e) => 0.95 * e + 0.05 * loss,
+        });
+        if opts.log_every > 0 && (i % opts.log_every == 0 || i + 1 == opts.steps) {
+            crate::info!(
+                "[{}] step {:>5}/{} loss {:.4} (ema {:.4}) lr {:.2e} [{:.0}s]",
+                opts.tag, i + 1, opts.steps, loss, ema.unwrap(), lr, sw.elapsed_s()
+            );
+            curve.push((i, ema.unwrap()));
+        }
+    }
+    Ok(curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::params::ParamSet;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn art() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn init_tiny(rt: &Runtime) -> ParamSet {
+        let tiny = rt.manifest().config("tiny").unwrap().clone();
+        let outs = rt.run("tiny", "init", &[Value::I32(TensorI::scalar(7))]).unwrap();
+        let tensors: Vec<Tensor> = outs.into_iter().map(|v| v.into_f32().unwrap()).collect();
+        ParamSet::from_flat(&tiny.params_dense, tensors).unwrap()
+    }
+
+    #[test]
+    fn full_training_reduces_loss() {
+        let rt = Runtime::new(&art()).expect("runtime (make artifacts)");
+        let params = init_tiny(&rt);
+        let mut state = TrainState::new(vec![params]);
+        let tiny = rt.manifest().config("tiny").unwrap().clone();
+        let (b, t) = (tiny.dim("train_batch").unwrap(), tiny.dim("seq_len").unwrap());
+        let (_, stream) = crate::data::build_lm_stream("mixture", 256, 60_000, 5);
+        let mut rng = Rng::new(0);
+        let opts = LoopOpts {
+            steps: 8, lr: 3e-3, schedule: "constant".into(),
+            warmup: 0, log_every: 0, tag: "test".into(),
+        };
+        let mut first = None;
+        let mut last = 0.0;
+        for i in 0..opts.steps {
+            let (inp, tgt) = stream.train_batch(&mut rng, b, t);
+            let mut batch = BTreeMap::new();
+            batch.insert("inputs".into(), Value::I32(inp));
+            batch.insert("targets".into(), Value::I32(tgt));
+            last = train_step(&rt, "tiny", "train_full", &mut state, &batch, 3e-3).unwrap();
+            if i == 0 {
+                first = Some(last);
+            }
+        }
+        assert_eq!(state.step, 8);
+        assert!(last < first.unwrap(), "loss {first:?} -> {last}");
+    }
+
+    #[test]
+    fn unknown_input_is_error() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let mut state = TrainState::new(vec![ParamSet::zeros(&vec![])]);
+        let batch = BTreeMap::new();
+        let r = train_step(&rt, "tiny", "train_full", &mut state, &batch, 1e-3);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Token-stream batching for LM training and evaluation.
+//!
+//! A [`TokenStream`] holds one long tokenized corpus plus a train/valid
+//! split; [`BatchIter`] yields `[B, T+1]` windows (inputs `[:, :T]`,
+//! targets `[:, 1:]` are sliced by the caller) sampled at random offsets —
+//! the nanoGPT recipe the paper's Table-1 fine-tuning follows.
+
+use crate::tensor::TensorI;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TokenStream {
+    train: Vec<i32>,
+    valid: Vec<i32>,
+}
+
+impl TokenStream {
+    /// Split a token sequence into train/valid by `valid_frac` at the tail.
+    pub fn new(tokens: Vec<i32>, valid_frac: f64) -> Self {
+        assert!((0.0..1.0).contains(&valid_frac));
+        let n_valid = ((tokens.len() as f64) * valid_frac) as usize;
+        let split = tokens.len() - n_valid;
+        let (train, valid) = tokens.split_at(split);
+        Self { train: train.to_vec(), valid: valid.to_vec() }
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn valid_len(&self) -> usize {
+        self.valid.len()
+    }
+
+    fn windows(data: &[i32], rng: &mut Rng, b: usize, t: usize) -> (TensorI, TensorI) {
+        assert!(data.len() > t + 1, "stream too short: {} <= {}", data.len(), t + 1);
+        let mut inputs = Vec::with_capacity(b * t);
+        let mut targets = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let start = rng.below(data.len() - t - 1);
+            inputs.extend_from_slice(&data[start..start + t]);
+            targets.extend_from_slice(&data[start + 1..start + t + 1]);
+        }
+        (TensorI::new(vec![b, t], inputs), TensorI::new(vec![b, t], targets))
+    }
+
+    /// Random training batch: (inputs [B,T], targets [B,T]).
+    pub fn train_batch(&self, rng: &mut Rng, b: usize, t: usize) -> (TensorI, TensorI) {
+        Self::windows(&self.train, rng, b, t)
+    }
+
+    /// Random validation batch.
+    pub fn valid_batch(&self, rng: &mut Rng, b: usize, t: usize) -> (TensorI, TensorI) {
+        Self::windows(&self.valid, rng, b, t)
+    }
+
+    /// Deterministic sequential validation batches covering the split
+    /// (for reproducible perplexity numbers).
+    pub fn valid_batches_seq(&self, b: usize, t: usize, max_batches: usize) -> Vec<(TensorI, TensorI)> {
+        let mut out = Vec::new();
+        let stride = t;
+        let mut pos = 0usize;
+        'outer: for _ in 0..max_batches {
+            let mut inputs = Vec::with_capacity(b * t);
+            let mut targets = Vec::with_capacity(b * t);
+            for _ in 0..b {
+                if pos + t + 1 > self.valid.len() {
+                    break 'outer;
+                }
+                inputs.extend_from_slice(&self.valid[pos..pos + t]);
+                targets.extend_from_slice(&self.valid[pos + 1..pos + t + 1]);
+                pos += stride;
+            }
+            out.push((TensorI::new(vec![b, t], inputs), TensorI::new(vec![b, t], targets)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream() -> TokenStream {
+        TokenStream::new((0..1000).map(|x| (x % 50) as i32).collect(), 0.2)
+    }
+
+    #[test]
+    fn split_sizes() {
+        let s = stream();
+        assert_eq!(s.train_len(), 800);
+        assert_eq!(s.valid_len(), 200);
+    }
+
+    #[test]
+    fn targets_shifted_by_one() {
+        let s = stream();
+        let mut rng = Rng::new(0);
+        let (i, t) = s.train_batch(&mut rng, 4, 16);
+        assert_eq!(i.shape(), &[4, 16]);
+        for row in 0..4 {
+            for col in 0..15 {
+                assert_eq!(i.data()[row * 16 + col + 1], t.data()[row * 16 + col]);
+            }
+        }
+    }
+
+    #[test]
+    fn seq_valid_batches_cover_and_stop() {
+        let s = stream();
+        let batches = s.valid_batches_seq(2, 16, 100);
+        // 200 tokens / 16 stride = 12 windows = 6 batches of 2
+        assert!(batches.len() >= 5 && batches.len() <= 6, "{}", batches.len());
+        // deterministic
+        let again = s.valid_batches_seq(2, 16, 100);
+        assert_eq!(batches[0].0, again[0].0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stream too short")]
+    fn short_stream_panics() {
+        let s = TokenStream::new(vec![1, 2, 3], 0.0);
+        s.train_batch(&mut Rng::new(0), 1, 16);
+    }
+}

@@ -1,0 +1,227 @@
+//! Synthetic text corpora — the stand-in for WikiText-2 / OpenWebText.
+//!
+//! Three generators with genuinely different statistics (so perplexity
+//! differences between pruning methods are driven by model structure, not
+//! corpus triviality):
+//!
+//! * **Zipf unigram** — heavy-tailed word frequencies over a synthetic
+//!   vocabulary of letter words.
+//! * **Markov bigram-mix** — a K-state latent-topic chain; each state owns
+//!   a sparse bigram table, so there is real sequential structure for
+//!   attention heads to learn.
+//! * **Templated sentences** — subject/verb/object grammar with agreement
+//!   constraints (long-range dependency: the closing tag must match the
+//!   opener several tokens back).
+//!
+//! `mixture` interleaves all three at the document level.
+
+use crate::util::rng::Rng;
+
+/// Build a deterministic synthetic word list ("va", "ko", "zuri", ...).
+fn word_list(n: usize, rng: &mut Rng) -> Vec<String> {
+    const C: [&str; 12] = ["k", "t", "s", "m", "n", "r", "v", "z", "p", "g", "d", "b"];
+    const V: [&str; 5] = ["a", "e", "i", "o", "u"];
+    let mut words = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    while words.len() < n {
+        let syllables = 1 + rng.below(3);
+        let mut w = String::new();
+        for _ in 0..syllables {
+            w.push_str(rng.choice::<&str>(&C[..]));
+            w.push_str(rng.choice::<&str>(&V[..]));
+        }
+        if seen.insert(w.clone()) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// Zipf-distributed unigram text.
+pub struct ZipfCorpus {
+    words: Vec<String>,
+    weights: Vec<f64>,
+}
+
+impl ZipfCorpus {
+    pub fn new(vocab_words: usize, exponent: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x5a5a);
+        let words = word_list(vocab_words, &mut rng);
+        let weights = (1..=vocab_words).map(|r| 1.0 / (r as f64).powf(exponent)).collect();
+        Self { words, weights }
+    }
+
+    pub fn sentence(&self, rng: &mut Rng, len: usize) -> String {
+        let mut parts = Vec::with_capacity(len);
+        for _ in 0..len {
+            parts.push(self.words[rng.weighted(&self.weights)].as_str());
+        }
+        parts.join(" ")
+    }
+}
+
+/// Latent-topic Markov bigram corpus.
+pub struct MarkovCorpus {
+    words: Vec<String>,
+    /// transition[topic][word] -> list of (next_word, weight)
+    tables: Vec<Vec<Vec<(usize, f64)>>>,
+    n_topics: usize,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab_words: usize, n_topics: usize, branching: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xa1a1);
+        let words = word_list(vocab_words, &mut rng);
+        let mut tables = Vec::with_capacity(n_topics);
+        for _ in 0..n_topics {
+            let mut table = Vec::with_capacity(vocab_words);
+            for _ in 0..vocab_words {
+                let succ: Vec<(usize, f64)> = (0..branching)
+                    .map(|_| (rng.below(vocab_words), rng.uniform() + 0.1))
+                    .collect();
+                table.push(succ);
+            }
+            tables.push(table);
+        }
+        Self { words, tables, n_topics }
+    }
+
+    pub fn sentence(&self, rng: &mut Rng, len: usize) -> String {
+        let topic = rng.below(self.n_topics);
+        let mut cur = rng.below(self.words.len());
+        let mut parts = vec![self.words[cur].as_str()];
+        for _ in 1..len {
+            let succ = &self.tables[topic][cur];
+            let weights: Vec<f64> = succ.iter().map(|(_, w)| *w).collect();
+            cur = succ[rng.weighted(&weights)].0;
+            parts.push(self.words[cur].as_str());
+        }
+        parts.join(" ")
+    }
+}
+
+/// Templated grammar with an agreement dependency.
+pub struct TemplateCorpus {
+    subjects: Vec<String>,
+    verbs: Vec<String>,
+    objects: Vec<String>,
+}
+
+impl TemplateCorpus {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xc3c3);
+        Self {
+            subjects: word_list(24, &mut rng),
+            verbs: word_list(16, &mut rng),
+            objects: word_list(24, &mut rng),
+        }
+    }
+
+    pub fn sentence(&self, rng: &mut Rng, _len: usize) -> String {
+        // "<s> SUBJ who VERB OBJ and OBJ , VERB SUBJ </s>" — the trailing
+        // SUBJ repeats the opener: a long-range copy the model can learn.
+        let s = rng.choice(&self.subjects).clone();
+        let v1 = rng.choice(&self.verbs);
+        let o1 = rng.choice(&self.objects);
+        let o2 = rng.choice(&self.objects);
+        let v2 = rng.choice(&self.verbs);
+        format!("{s} who {v1} {o1} and {o2} , {v2} {s} .")
+    }
+}
+
+/// Document-level mixture of the three generators.
+pub enum Corpus {
+    Zipf(ZipfCorpus),
+    Markov(MarkovCorpus),
+    Mixture(ZipfCorpus, MarkovCorpus, TemplateCorpus),
+}
+
+impl Corpus {
+    pub fn by_name(name: &str, seed: u64) -> Self {
+        match name {
+            "zipf" => Corpus::Zipf(ZipfCorpus::new(400, 1.1, seed)),
+            "markov" => Corpus::Markov(MarkovCorpus::new(300, 4, 6, seed)),
+            _ => Corpus::Mixture(
+                ZipfCorpus::new(400, 1.1, seed),
+                MarkovCorpus::new(300, 4, 6, seed),
+                TemplateCorpus::new(seed),
+            ),
+        }
+    }
+
+    /// Generate ~`n_chars` of newline-separated sentences.
+    pub fn generate(&self, rng: &mut Rng, n_chars: usize) -> String {
+        let mut out = String::with_capacity(n_chars + 128);
+        while out.len() < n_chars {
+            let len = 8 + rng.below(16);
+            let s = match self {
+                Corpus::Zipf(z) => z.sentence(rng, len),
+                Corpus::Markov(m) => m.sentence(rng, len),
+                Corpus::Mixture(z, m, t) => match rng.below(3) {
+                    0 => z.sentence(rng, len),
+                    1 => m.sentence(rng, len),
+                    _ => t.sentence(rng, len),
+                },
+            };
+            out.push_str(&s);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let c = Corpus::by_name("mixture", 7);
+        let a = c.generate(&mut Rng::new(1), 1000);
+        let b = c.generate(&mut Rng::new(1), 1000);
+        assert_eq!(a, b);
+        assert!(a.len() >= 1000);
+    }
+
+    #[test]
+    fn corpora_differ() {
+        let z = Corpus::by_name("zipf", 7).generate(&mut Rng::new(1), 500);
+        let m = Corpus::by_name("markov", 7).generate(&mut Rng::new(1), 500);
+        assert_ne!(z, m);
+    }
+
+    #[test]
+    fn zipf_head_is_heavy() {
+        let z = ZipfCorpus::new(100, 1.2, 0);
+        let mut rng = Rng::new(3);
+        let text = z.sentence(&mut rng, 5000);
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split_whitespace() {
+            *counts.entry(w).or_insert(0usize) += 1;
+        }
+        let mut freq: Vec<usize> = counts.values().copied().collect();
+        freq.sort_unstable_by(|a, b| b.cmp(a));
+        // the most frequent word should dominate the 20th by a wide margin
+        assert!(freq[0] > freq.get(19).copied().unwrap_or(1) * 3);
+    }
+
+    #[test]
+    fn template_agreement() {
+        let t = TemplateCorpus::new(0);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let s = t.sentence(&mut rng, 0);
+            let toks: Vec<&str> = s.split_whitespace().collect();
+            // first token repeats as second-to-last (before the period)
+            assert_eq!(toks[0], toks[toks.len() - 2], "{s}");
+        }
+    }
+
+    #[test]
+    fn word_list_unique() {
+        let mut rng = Rng::new(1);
+        let words = word_list(200, &mut rng);
+        let set: std::collections::HashSet<_> = words.iter().collect();
+        assert_eq!(set.len(), 200);
+    }
+}

@@ -1,0 +1,54 @@
+//! Data pipeline: synthetic corpora, BPE tokenizer, task suites, signal
+//! rendering, and batching.
+//!
+//! Everything is seeded and deterministic; there are no external datasets
+//! (the reproduction substitutes WikiText-2 / OpenWebText / Commonsense-170k
+//! / LibriSpeech per DESIGN.md §2).
+
+pub mod batch;
+pub mod corpus;
+pub mod signal;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batch::TokenStream;
+pub use corpus::Corpus;
+pub use signal::SignalRenderer;
+pub use tasks::{all_tasks, Example, TaskData};
+pub use tokenizer::Tokenizer;
+
+use crate::util::rng::Rng;
+
+/// Build the standard pretraining pipeline for a decoder config: generate
+/// a corpus, train a BPE tokenizer to the model's vocab, tokenize, split.
+pub fn build_lm_stream(
+    corpus_name: &str,
+    vocab: usize,
+    n_chars: usize,
+    seed: u64,
+) -> (Tokenizer, TokenStream) {
+    let corpus = Corpus::by_name(corpus_name, seed);
+    let mut rng = Rng::new(seed);
+    let text = corpus.generate(&mut rng, n_chars);
+    let tok = Tokenizer::train(&text, vocab);
+    let ids = tok.encode(&text);
+    (tok, TokenStream::new(ids, 0.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lm_stream_end_to_end() {
+        let (tok, stream) = build_lm_stream("mixture", 256, 30_000, 9);
+        assert_eq!(tok.vocab_size(), 256);
+        assert!(stream.train_len() > 5_000);
+        assert!(stream.valid_len() > 500);
+        let mut rng = Rng::new(0);
+        let (i, t) = stream.train_batch(&mut rng, 2, 32);
+        assert_eq!(i.shape(), &[2, 32]);
+        assert!(i.data().iter().all(|&x| (x as usize) < 256));
+        assert!(t.data().iter().all(|&x| (x as usize) < 256));
+    }
+}

@@ -1,0 +1,208 @@
+//! Synthetic "audio"→transcript pairs for the whisper-like model (§4.4).
+//!
+//! Each token of a structured random transcript is rendered to
+//! `FRAMES_PER_TOKEN` continuous feature frames via a per-token signature
+//! bank (the stand-in for a log-mel spectrogram), plus Gaussian noise.
+//! The seq2seq model learns to invert the rendering — after which CLOVER's
+//! training-free encoder pruning can be compared against vanilla pruning
+//! on token error rate, matching the paper's Whisper experiment shape.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const FRAMES_PER_TOKEN: usize = 2;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+/// Tokens 0..=2 reserved (pad/bos/eos); content tokens start here.
+pub const FIRST_CONTENT: i32 = 3;
+
+/// Signature bank mapping tokens to feature frames.
+pub struct SignalRenderer {
+    vocab: usize,
+    feat_dim: usize,
+    /// [vocab][FRAMES_PER_TOKEN][feat_dim]
+    signatures: Vec<Vec<Vec<f32>>>,
+    noise: f32,
+}
+
+impl SignalRenderer {
+    pub fn new(vocab: usize, feat_dim: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xfeed);
+        let signatures = (0..vocab)
+            .map(|_| {
+                (0..FRAMES_PER_TOKEN)
+                    .map(|_| rng.normal_vec(feat_dim, 1.0))
+                    .collect()
+            })
+            .collect();
+        Self { vocab, feat_dim, signatures, noise }
+    }
+
+    /// Structured random transcript of exactly `n` content tokens:
+    /// a 2nd-order pattern (each token depends on the previous) so the
+    /// decoder LM has something to model beyond the acoustics.
+    pub fn transcript(&self, rng: &mut Rng, n: usize) -> Vec<i32> {
+        let content = (self.vocab - FIRST_CONTENT as usize) as i32;
+        let mut t = Vec::with_capacity(n);
+        let mut prev = rng.below(content as usize) as i32;
+        for _ in 0..n {
+            t.push(FIRST_CONTENT + prev);
+            // biased walk: mostly +1 mod content, sometimes random jump
+            prev = if rng.uniform() < 0.7 {
+                (prev + 1) % content
+            } else {
+                rng.below(content as usize) as i32
+            };
+        }
+        t
+    }
+
+    /// Render a transcript to feature frames [n*FRAMES_PER_TOKEN, feat_dim].
+    pub fn render(&self, rng: &mut Rng, transcript: &[i32]) -> Tensor {
+        let rows = transcript.len() * FRAMES_PER_TOKEN;
+        let mut data = Vec::with_capacity(rows * self.feat_dim);
+        for &tok in transcript {
+            for f in 0..FRAMES_PER_TOKEN {
+                for d in 0..self.feat_dim {
+                    let sig = self.signatures[tok as usize][f][d];
+                    data.push(sig + rng.normal() as f32 * self.noise);
+                }
+            }
+        }
+        Tensor::new(vec![rows, self.feat_dim], data)
+    }
+
+    /// One (feats, decoder_in, decoder_target) example with padding to
+    /// (src_len, tgt_len).
+    pub fn example(
+        &self,
+        rng: &mut Rng,
+        src_len: usize,
+        tgt_len: usize,
+    ) -> (Tensor, Vec<i32>, Vec<i32>) {
+        let n_tok = (src_len / FRAMES_PER_TOKEN).min(tgt_len - 1);
+        let transcript = self.transcript(rng, n_tok);
+        let feats_raw = self.render(rng, &transcript);
+        // pad frames to src_len
+        let mut feats = Tensor::zeros(&[src_len, self.feat_dim]);
+        let copy_rows = feats_raw.shape()[0].min(src_len);
+        feats.data_mut()[..copy_rows * self.feat_dim]
+            .copy_from_slice(&feats_raw.data()[..copy_rows * self.feat_dim]);
+        // decoder input: BOS + transcript (padded); target: transcript + EOS
+        let mut dec_in = vec![0i32; tgt_len];
+        let mut dec_tgt = vec![0i32; tgt_len];
+        dec_in[0] = BOS;
+        for (i, &t) in transcript.iter().enumerate() {
+            if i + 1 < tgt_len {
+                dec_in[i + 1] = t;
+            }
+            dec_tgt[i] = t;
+        }
+        if transcript.len() < tgt_len {
+            dec_tgt[transcript.len()] = EOS;
+        }
+        (feats, dec_in, dec_tgt)
+    }
+
+    /// Batched examples: (feats [B,S,F], dec_in [B,T], dec_tgt [B,T]).
+    pub fn batch(
+        &self,
+        rng: &mut Rng,
+        b: usize,
+        src_len: usize,
+        tgt_len: usize,
+    ) -> (Tensor, Vec<i32>, Vec<i32>) {
+        let mut feats = Vec::new();
+        let mut ins = Vec::new();
+        let mut tgts = Vec::new();
+        for _ in 0..b {
+            let (f, i, t) = self.example(rng, src_len, tgt_len);
+            feats.push(f);
+            ins.extend(i);
+            tgts.extend(t);
+        }
+        (Tensor::stack(&feats).unwrap(), ins, tgts)
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+}
+
+/// Token error rate between predicted and gold target sequences, counting
+/// only positions up to (and including) gold EOS.
+pub fn token_error_rate(pred: &[i32], gold: &[i32]) -> f64 {
+    let mut errs = 0usize;
+    let mut total = 0usize;
+    for (p, g) in pred.iter().zip(gold.iter()) {
+        total += 1;
+        if p != g {
+            errs += 1;
+        }
+        if *g == EOS {
+            break;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        errs as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_padding() {
+        let r = SignalRenderer::new(64, 16, 0.05, 0);
+        let mut rng = Rng::new(1);
+        let (feats, dec_in, dec_tgt) = r.example(&mut rng, 96, 48);
+        assert_eq!(feats.shape(), &[96, 16]);
+        assert_eq!(dec_in.len(), 48);
+        assert_eq!(dec_tgt.len(), 48);
+        assert_eq!(dec_in[0], BOS);
+        // shifted alignment: dec_in[i+1] == dec_tgt[i] for content positions
+        for i in 0..40 {
+            if dec_tgt[i] >= FIRST_CONTENT {
+                assert_eq!(dec_in[i + 1], dec_tgt[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_rendering() {
+        let r = SignalRenderer::new(64, 16, 0.05, 7);
+        let a = r.render(&mut Rng::new(3), &[5, 6, 7]);
+        let b = r.render(&mut Rng::new(3), &[5, 6, 7]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn signatures_distinguishable() {
+        let r = SignalRenderer::new(64, 16, 0.0, 7);
+        let a = r.render(&mut Rng::new(0), &[5]);
+        let b = r.render(&mut Rng::new(0), &[6]);
+        assert!(a.max_abs_diff(&b) > 0.5);
+    }
+
+    #[test]
+    fn ter_cases() {
+        assert_eq!(token_error_rate(&[1, 2], &[1, 2]), 0.0);
+        assert_eq!(token_error_rate(&[9, 2], &[1, 2]), 0.5);
+        // stops at EOS
+        let t = token_error_rate(&[5, EOS, 0, 0], &[5, EOS, 9, 9]);
+        assert_eq!(t, 0.0);
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let r = SignalRenderer::new(64, 16, 0.05, 0);
+        let mut rng = Rng::new(2);
+        let (f, i, t) = r.batch(&mut rng, 4, 96, 48);
+        assert_eq!(f.shape(), &[4, 96, 16]);
+        assert_eq!(i.len(), 4 * 48);
+        assert_eq!(t.len(), 4 * 48);
+    }
+}

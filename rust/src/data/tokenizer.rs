@@ -1,0 +1,252 @@
+//! Byte-level BPE tokenizer: trainer + encoder + decoder.
+//!
+//! Trained on the synthetic corpus up to the model's vocab size.  Token ids
+//! 0..255 are raw bytes; merges occupy 256..vocab.  Greedy longest-match
+//! encoding with a trie; exact byte-level round-trip by construction.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// A trained BPE vocabulary.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// token id -> byte sequence
+    pieces: Vec<Vec<u8>>,
+    /// trie over piece bytes for greedy longest-match
+    trie: Trie,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Trie {
+    /// node -> (byte -> node); node 0 is the root
+    next: Vec<HashMap<u8, usize>>,
+    /// node -> token id ending here
+    accept: Vec<Option<u32>>,
+}
+
+impl Trie {
+    fn new() -> Self {
+        Self { next: vec![HashMap::new()], accept: vec![None] }
+    }
+
+    fn insert(&mut self, bytes: &[u8], id: u32) {
+        let mut node = 0usize;
+        for &b in bytes {
+            let n = self.next.len();
+            node = *self.next[node].entry(b).or_insert_with(|| n);
+            if node == n {
+                self.next.push(HashMap::new());
+                self.accept.push(None);
+            }
+        }
+        self.accept[node] = Some(id);
+    }
+
+    /// Longest match at `text[pos..]`: (token id, length).
+    fn longest(&self, text: &[u8], pos: usize) -> (u32, usize) {
+        let mut node = 0usize;
+        let mut best = (text[pos] as u32, 1); // byte fallback always matches
+        for (i, &b) in text[pos..].iter().enumerate() {
+            match self.next[node].get(&b) {
+                Some(&n) => {
+                    node = n;
+                    if let Some(id) = self.accept[node] {
+                        best = (id, i + 1);
+                    }
+                }
+                None => break,
+            }
+        }
+        best
+    }
+}
+
+impl Tokenizer {
+    /// Byte-only tokenizer (vocab 256) — the fallback when no training text
+    /// is supplied.
+    pub fn bytes_only() -> Self {
+        Self::from_pieces((0..256u32).map(|b| vec![b as u8]).collect())
+    }
+
+    fn from_pieces(pieces: Vec<Vec<u8>>) -> Self {
+        let mut trie = Trie::new();
+        for (id, p) in pieces.iter().enumerate() {
+            trie.insert(p, id as u32);
+        }
+        Self { pieces, trie }
+    }
+
+    /// Train BPE merges on `text` until `vocab_size` pieces exist.
+    ///
+    /// Classic greedy pair-merge on a word-frequency table (words =
+    /// whitespace-split chunks with the separator attached, so spaces are
+    /// learned like any other byte).
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must cover raw bytes");
+        // word -> count, each word a Vec<token id> starting as raw bytes
+        let mut word_counts: HashMap<Vec<u32>, usize> = HashMap::new();
+        for chunk in text.split_inclusive([' ', '\n']) {
+            let ids: Vec<u32> = chunk.bytes().map(|b| b as u32).collect();
+            if !ids.is_empty() {
+                *word_counts.entry(ids).or_insert(0) += 1;
+            }
+        }
+        let mut words: Vec<(Vec<u32>, usize)> = word_counts.into_iter().collect();
+        words.sort(); // deterministic order
+
+        let mut pieces: Vec<Vec<u8>> = (0..256u32).map(|b| vec![b as u8]).collect();
+        while pieces.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut pair_counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (w, c) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += c;
+                }
+            }
+            // Deterministic argmax: max count, then smallest pair ids.
+            let best = pair_counts.into_iter()
+                .max_by(|a, b| a.1.cmp(&b.1).then_with(|| b.0.cmp(&a.0)));
+            let ((a, b), count) = match best {
+                Some(x) if x.1 >= 2 => x,
+                _ => break, // nothing worth merging
+            };
+            let _ = count;
+            let new_id = pieces.len() as u32;
+            let mut merged_piece = pieces[a as usize].clone();
+            merged_piece.extend_from_slice(&pieces[b as usize]);
+            pieces.push(merged_piece);
+            // Apply the merge to every word.
+            for (w, _) in words.iter_mut() {
+                let mut out = Vec::with_capacity(w.len());
+                let mut i = 0;
+                while i < w.len() {
+                    if i + 1 < w.len() && w[i] == a && w[i + 1] == b {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(w[i]);
+                        i += 1;
+                    }
+                }
+                *w = out;
+            }
+        }
+        Self::from_pieces(pieces)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Greedy longest-match encoding.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let bytes = text.as_bytes();
+        let mut out = Vec::with_capacity(bytes.len() / 2 + 1);
+        let mut pos = 0;
+        while pos < bytes.len() {
+            let (id, len) = self.trie.longest(bytes, pos);
+            out.push(id as i32);
+            pos += len;
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Serialize to a small text format (piece hex per line).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut out = String::new();
+        for p in &self.pieces {
+            for b in p {
+                out.push_str(&format!("{b:02x}"));
+            }
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut pieces = Vec::new();
+        for line in text.lines() {
+            let mut bytes = Vec::with_capacity(line.len() / 2);
+            let mut chars = line.as_bytes().chunks(2);
+            for ch in &mut chars {
+                bytes.push(u8::from_str_radix(std::str::from_utf8(ch)?, 16)?);
+            }
+            pieces.push(bytes);
+        }
+        Ok(Self::from_pieces(pieces))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = Tokenizer::bytes_only();
+        let s = "hello, wörld!\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn trained_roundtrip_property() {
+        let corpus = crate::data::corpus::Corpus::by_name("mixture", 3);
+        let text = corpus.generate(&mut Rng::new(0), 20_000);
+        let tok = Tokenizer::train(&text, 512);
+        assert_eq!(tok.vocab_size(), 512);
+        prop("BPE roundtrip", 20, |rng| {
+            let corpus = crate::data::corpus::Corpus::by_name("mixture", 3);
+            let sample = corpus.generate(rng, 200);
+            let ids = tok.encode(&sample);
+            if tok.decode(&ids) != sample {
+                return Err("roundtrip mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compression_beats_bytes() {
+        let corpus = crate::data::corpus::Corpus::by_name("zipf", 5);
+        let text = corpus.generate(&mut Rng::new(1), 30_000);
+        let tok = Tokenizer::train(&text, 512);
+        let sample = corpus.generate(&mut Rng::new(2), 2_000);
+        let n_ids = tok.encode(&sample).len();
+        // trained BPE should compress ~2x over raw bytes on in-domain text
+        assert!(n_ids * 3 < sample.len() * 2, "ids {n_ids} bytes {}", sample.len());
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let text = "abc abc abc abd abd xyz";
+        let tok = Tokenizer::train(text, 260);
+        for id in tok.encode(text) {
+            assert!((id as usize) < tok.vocab_size());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let tok = Tokenizer::train("the quick brown fox the quick", 300);
+        let path = std::env::temp_dir().join(format!("clover_tok_{}", std::process::id()));
+        tok.save(&path).unwrap();
+        let back = Tokenizer::load(&path).unwrap();
+        assert_eq!(back.vocab_size(), tok.vocab_size());
+        assert_eq!(back.encode("the quick"), tok.encode("the quick"));
+        std::fs::remove_file(path).ok();
+    }
+}

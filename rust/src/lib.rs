@@ -1,0 +1,35 @@
+//! # CLOVER — Cross-Layer Orthogonal Vectors, as a Rust/JAX/Pallas stack
+//!
+//! Reproduction of *"CLOVER: Cross-Layer Orthogonal Vectors Pruning and
+//! Fine-Tuning"* (Meng et al., 2024) as a three-layer system:
+//!
+//! * **Layer 3 (this crate)** — coordinator/framework: config system, data
+//!   pipeline, tokenizer, training & eval loops, the CLOVER checkpoint
+//!   transform + pruning engine (with its own linalg substrate), PEFT
+//!   adapter initialization/accounting, a KV-cache serving demo, and the
+//!   experiment runners that regenerate every table and figure.
+//! * **Layer 2** — JAX programs (`python/compile/`), AOT-lowered once to
+//!   HLO text under `artifacts/`.
+//! * **Layer 1** — Pallas kernels for the fused factorized-attention hot
+//!   path, lowered inside the same artifacts.
+//!
+//! Python never runs at runtime: the [`runtime`] module loads the HLO text
+//! through the PJRT C API (`xla` crate) and the coordinator drives the
+//! compiled executables with host-owned state.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! recorded paper-vs-measured results.
+
+pub mod clover;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod peft;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod testing;
+pub mod util;

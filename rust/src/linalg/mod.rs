@@ -1,0 +1,198 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK dependency).
+//!
+//! CLOVER's checkpoint-time transform needs exactly three primitives:
+//! matrix multiplication, a thin QR (to reduce the D×d cross-layer factors),
+//! and an SVD of small square matrices (one-sided Jacobi).  The analysis
+//! passes (Fig 5/6) additionally SVD full D×D update matrices — still fine
+//! for Jacobi at D ≤ 768.
+//!
+//! Everything is f32 in row-major order, matching [`crate::tensor::Tensor`].
+
+pub mod qr;
+pub mod svd;
+
+use crate::tensor::Tensor;
+
+/// C = A·B for 2-D tensors, blocked i-k-j loop (cache-friendly row-major).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul inner dim: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aval) in arow.iter().enumerate() {
+            if aval == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += aval * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// A·Bᵀ without materializing the transpose.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_nt inner dim: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Aᵀ·B without materializing the transpose.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_tn inner dim: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aval = arow[i];
+            if aval == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aval * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// y = A·x (matrix-vector).
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.ndim(), 2);
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, x.len());
+    let ad = a.data();
+    (0..m)
+        .map(|i| {
+            let row = &ad[i * k..(i + 1) * k];
+            row.iter().zip(x).map(|(a, b)| a * b).sum()
+        })
+        .collect()
+}
+
+/// Multiply a matrix by a diagonal on the right: A·diag(d).
+pub fn scale_cols(a: &Tensor, d: &[f32]) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(n, d.len());
+    let mut out = a.data().to_vec();
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] *= d[j];
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Max |Aᵀ·A − I| — orthonormality defect of the columns.
+pub fn ortho_defect(a: &Tensor) -> f32 {
+    let gram = matmul_tn(a, a);
+    let n = gram.shape()[0];
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((gram.at2(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, prop};
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity_prop() {
+        prop("A·I == A", 20, |rng| {
+            let m = rng.range(1, 8);
+            let n = rng.range(1, 8);
+            let a = Tensor::new(vec![m, n], rng.normal_vec(m * n, 1.0));
+            let c = matmul(&a, &Tensor::eye(n));
+            assert_close(c.data(), a.data(), 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn nt_tn_match_explicit_transpose() {
+        prop("matmul_nt/tn", 20, |rng| {
+            let m = rng.range(1, 7);
+            let k = rng.range(1, 7);
+            let n = rng.range(1, 7);
+            let a = Tensor::new(vec![m, k], rng.normal_vec(m * k, 1.0));
+            let b = Tensor::new(vec![n, k], rng.normal_vec(n * k, 1.0));
+            let c1 = matmul_nt(&a, &b);
+            let c2 = matmul(&a, &b.transpose2());
+            assert_close(c1.data(), c2.data(), 1e-5, 1e-5)?;
+            let at = Tensor::new(vec![k, m], rng.normal_vec(k * m, 1.0));
+            let bt = Tensor::new(vec![k, n], rng.normal_vec(k * n, 1.0));
+            let d1 = matmul_tn(&at, &bt);
+            let d2 = matmul(&at.transpose2(), &bt);
+            assert_close(d1.data(), d2.data(), 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        prop("matvec", 20, |rng| {
+            let m = rng.range(1, 9);
+            let k = rng.range(1, 9);
+            let a = Tensor::new(vec![m, k], rng.normal_vec(m * k, 1.0));
+            let x = rng.normal_vec(k, 1.0);
+            let y = matvec(&a, &x);
+            let xm = Tensor::new(vec![k, 1], x);
+            let y2 = matmul(&a, &xm);
+            assert_close(&y, y2.data(), 1e-5, 1e-5)
+        });
+    }
+
+    #[test]
+    fn scale_cols_diag() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let c = scale_cols(&a, &[10.0, 0.5]);
+        assert_eq!(c.data(), &[10., 1., 30., 2.]);
+    }
+}

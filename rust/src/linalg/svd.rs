@@ -1,0 +1,284 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! `svd(A)` for A [m×n] returns U [m×k], σ [k] (descending), Vᵀ [k×n] with
+//! k = min(m, n).  One-sided Jacobi operates on the columns of A (m ≥ n;
+//! the wide case is handled by transposing), accumulating V; it is simple,
+//! unconditionally stable, and exactly what the CLOVER transform needs for
+//! the small d×d cross-layer cores (and the D×D analysis matrices of
+//! Figs 5–6; at D ≤ 768 a few Jacobi sweeps are sub-second in release).
+//!
+//! f64 accumulation is used for the column inner products — the rotation
+//! angles are the numerically delicate part at f32.
+
+use crate::tensor::Tensor;
+
+/// SVD result: `a ≈ u · diag(s) · vt`.
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub vt: Tensor,
+}
+
+const MAX_SWEEPS: usize = 60;
+const TOL: f64 = 1e-10;
+
+/// One-sided Jacobi SVD (see module docs).
+pub fn svd(a: &Tensor) -> Svd {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    if m < n {
+        // SVD(Aᵀ) = V Σ Uᵀ.
+        let t = svd(&a.transpose2());
+        return Svd { u: t.vt.transpose2(), s: t.s, vt: t.u.transpose2() };
+    }
+
+    // Column-major working copy: cols[j][i] = A[i][j].
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at2(i, j) as f64).collect())
+        .collect();
+    // V accumulated as columns.
+    let mut v: Vec<Vec<f64>> = (0..n)
+        .map(|j| {
+            let mut e = vec![0.0f64; n];
+            e[j] = 1.0;
+            e
+        })
+        .collect();
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let mut app = 0.0f64;
+                let mut aqq = 0.0f64;
+                let mut apq = 0.0f64;
+                for i in 0..m {
+                    app += cols[p][i] * cols[p][i];
+                    aqq += cols[q][i] * cols[q][i];
+                    apq += cols[p][i] * cols[q][i];
+                }
+                if apq.abs() <= TOL * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off = off.max(apq.abs());
+                // Jacobi rotation zeroing the (p,q) entry of AᵀA.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = cols[p][i];
+                    let xq = cols[q][i];
+                    cols[p][i] = c * xp - s * xq;
+                    cols[q][i] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < TOL {
+            break;
+        }
+    }
+
+    // Extract singular values (column norms), sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = cols.iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = vec![0.0f32; m * n];
+    let mut s = vec![0.0f32; n];
+    let mut vt = vec![0.0f32; n * n];
+    for (rank, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s[rank] = sigma as f32;
+        if sigma > 1e-30 {
+            for i in 0..m {
+                u[i * n + rank] = (cols[j][i] / sigma) as f32;
+            }
+        } else {
+            // Null direction: leave U column zero; truncation drops it.
+        }
+        for i in 0..n {
+            vt[rank * n + i] = v[j][i] as f32;
+        }
+    }
+
+    Svd {
+        u: Tensor::new(vec![m, n], u),
+        s,
+        vt: Tensor::new(vec![n, n], vt),
+    }
+}
+
+/// Reconstruct `u[:, :r] · diag(s[:r]) · vt[:r, :]`.
+pub fn reconstruct(svd: &Svd, r: usize) -> Tensor {
+    let m = svd.u.shape()[0];
+    let n = svd.vt.shape()[1];
+    let r = r.min(svd.s.len());
+    let mut out = vec![0.0f32; m * n];
+    for k in 0..r {
+        let sk = svd.s[k];
+        if sk == 0.0 {
+            continue;
+        }
+        for i in 0..m {
+            let uik = svd.u.at2(i, k) * sk;
+            if uik == 0.0 {
+                continue;
+            }
+            let vrow = &svd.vt.data()[k * n..(k + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += uik * vrow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Energy retained by the top-r singular values: Σ_{i<r} σᵢ² / Σ σᵢ².
+pub fn energy_retained(s: &[f32], r: usize) -> f32 {
+    let total: f32 = s.iter().map(|x| x * x).sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let kept: f32 = s.iter().take(r).map(|x| x * x).sum();
+    kept / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, ortho_defect, scale_cols};
+    use crate::testing::{prop, rel_err};
+
+    fn random_lowrank(rng: &mut crate::util::rng::Rng, m: usize, n: usize, r: usize) -> Tensor {
+        let a = Tensor::new(vec![m, r], rng.normal_vec(m * r, 1.0));
+        let b = Tensor::new(vec![n, r], rng.normal_vec(n * r, 1.0));
+        matmul_nt(&a, &b)
+    }
+
+    #[test]
+    fn reconstruction_property() {
+        prop("SVD: ‖A − U·S·Vᵀ‖/‖A‖ ≤ 1e-4", 25, |rng| {
+            let m = rng.range(1, 16);
+            let n = rng.range(1, 16);
+            let a = Tensor::new(vec![m, n], rng.normal_vec(m * n, 1.0));
+            let d = svd(&a);
+            let back = reconstruct(&d, m.min(n));
+            let err = rel_err(back.data(), a.data());
+            if err > 1e-4 {
+                return Err(format!("rel err {err} for {m}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn orthogonality_property() {
+        prop("SVD: U, V orthonormal", 20, |rng| {
+            let m = rng.range(2, 12);
+            let n = rng.range(2, 12);
+            let a = Tensor::new(vec![m, n], rng.normal_vec(m * n, 1.0));
+            let d = svd(&a);
+            // Only the non-null columns of U are orthonormal; with
+            // m >= n and a generic random matrix all are.
+            if m >= n {
+                let du = ortho_defect(&d.u);
+                if du > 1e-4 {
+                    return Err(format!("U defect {du}"));
+                }
+            }
+            let dv = ortho_defect(&d.vt.transpose2());
+            if dv > 1e-4 {
+                return Err(format!("V defect {dv}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_nonneg() {
+        prop("SVD: σ descending, ≥ 0", 20, |rng| {
+            let m = rng.range(1, 14);
+            let n = rng.range(1, 14);
+            let a = Tensor::new(vec![m, n], rng.normal_vec(m * n, 2.0));
+            let d = svd(&a);
+            for w in d.s.windows(2) {
+                if w[1] > w[0] + 1e-6 {
+                    return Err(format!("not sorted: {:?}", d.s));
+                }
+            }
+            if d.s.iter().any(|&x| x < 0.0) {
+                return Err("negative sigma".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_rank_detection() {
+        prop("SVD: rank-r matrix has n-r zero sigmas", 15, |rng| {
+            let n = rng.range(4, 10);
+            let r = rng.range(1, n.min(4));
+            let a = random_lowrank(rng, n + 3, n, r);
+            let d = svd(&a);
+            let tail: f32 = d.s[r..].iter().sum();
+            let head = d.s[0];
+            if tail > 1e-3 * head.max(1.0) {
+                return Err(format!("rank {r}: tail {tail}, s = {:?}", d.s));
+            }
+            // And truncated reconstruction at r is exact.
+            let back = reconstruct(&d, r);
+            let err = rel_err(back.data(), a.data());
+            if err > 1e-4 {
+                return Err(format!("truncated rel err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Tensor::new(vec![2, 2], vec![3.0, 0.0, 0.0, -2.0]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-5);
+        assert!((d.s[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn wide_matrix() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = Tensor::new(vec![3, 8], rng.normal_vec(24, 1.0));
+        let d = svd(&a);
+        assert_eq!(d.u.shape(), &[3, 3]);
+        assert_eq!(d.vt.shape(), &[3, 8]);
+        let back = reconstruct(&d, 3);
+        assert!(rel_err(back.data(), a.data()) < 1e-4);
+    }
+
+    #[test]
+    fn energy_retained_bounds() {
+        let s = vec![2.0, 1.0, 0.0];
+        assert!((energy_retained(&s, 3) - 1.0).abs() < 1e-6);
+        assert!((energy_retained(&s, 1) - 0.8).abs() < 1e-6);
+        assert_eq!(energy_retained(&[], 0), 1.0);
+    }
+
+    #[test]
+    fn u_s_vt_agrees_with_scale_cols() {
+        // u·diag(s)·vt == reconstruct for full rank
+        let mut rng = crate::util::rng::Rng::new(3);
+        let a = Tensor::new(vec![5, 4], rng.normal_vec(20, 1.0));
+        let d = svd(&a);
+        let usv = matmul(&scale_cols(&d.u, &d.s), &d.vt);
+        assert!(rel_err(usv.data(), a.data()) < 1e-4);
+    }
+}

@@ -1,0 +1,319 @@
+//! `clover` — CLI launcher for the CLOVER reproduction framework.
+//!
+//! Subcommands (hand-rolled arg parsing; the vendored crate set has no
+//! clap):
+//!
+//! ```text
+//! clover pretrain  [--config f.toml] [--preset tiny] [--steps N] [--out ckpt]
+//! clover prune     --ckpt base.clvr [--ratio 0.5] [--method clover|vanilla]
+//! clover finetune  --ckpt pruned.clvr [--mode s|attn] [--steps N]
+//! clover eval      --ckpt x.clvr            # perplexity
+//! clover spectra   [--all-layers]           # Fig 2 curves
+//! clover serve     --ckpt x.clvr [--requests N]
+//! clover golden    [--preset tiny]          # replay golden fixtures
+//! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use clover::config::RunConfig;
+use clover::coordinator::experiments::{self, ExpOpts};
+use clover::coordinator::{self, ops};
+use clover::model::{load_params, save_params, Checkpoint};
+use clover::runtime::{golden, Runtime};
+use clover::serve::{BatchPolicy, Engine, Request};
+use clover::util::human_bytes;
+
+/// Minimal flag parser: `--key value` pairs + positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, dflt: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse::<usize>().with_context(|| format!("--{key} {v}")),
+            None => Ok(dflt),
+        }
+    }
+
+    fn f64_or(&self, key: &str, dflt: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse::<f64>().with_context(|| format!("--{key} {v}")),
+            None => Ok(dflt),
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(p) = args.get("preset") {
+        cfg.model.preset = p.to_string();
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.model.artifacts_dir = a.to_string();
+    }
+    Ok(cfg)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pretrain" => cmd_pretrain(&args),
+        "prune" => cmd_prune(&args),
+        "finetune" => cmd_finetune(&args),
+        "eval" => cmd_eval(&args),
+        "spectra" => cmd_spectra(&args),
+        "serve" => cmd_serve(&args),
+        "golden" => cmd_golden(&args),
+        "report" => cmd_report(&args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "clover — Cross-Layer Orthogonal Vectors (paper reproduction framework)
+
+USAGE: clover <pretrain|prune|finetune|eval|spectra|serve|golden|report> [flags]
+Run `make artifacts` once before anything else. See README.md.";
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let steps = args.usize_or("steps", cfg.train.steps)?;
+    let lr = args.f64_or("lr", cfg.train.lr)?;
+    let out = args.get("out").unwrap_or("runs/pretrained.clvr");
+    let entry = rt.manifest().config(&cfg.model.preset)?.clone();
+    let vocab = entry.dim("vocab")?;
+    let (_tok, stream) =
+        clover::data::build_lm_stream(&cfg.data.corpus, vocab, 400_000, cfg.data.seed);
+    let init = ops::init_params(&rt, &cfg.model.preset, cfg.train.seed as i32)?;
+    let (params, _) = ops::pretrain(
+        &rt, &cfg.model.preset, init, &stream, steps, lr, cfg.train.seed, "pretrain",
+    )?;
+    let ppl = coordinator::eval::perplexity(&rt, &cfg.model.preset, "nll", &params, &stream, 8)?;
+    println!("final perplexity: {ppl:.2}");
+    save_params(&params, &cfg.model.preset, "dense", steps, std::path::Path::new(out))?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_prune(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let ratio = args.f64_or("ratio", cfg.prune.ratio)?;
+    let method = args.get("method").unwrap_or(&cfg.prune.method).to_string();
+    let entry = rt.manifest().config(&cfg.model.preset)?.clone();
+    let ck = Checkpoint::load(ckpt_path)?;
+    let dense = load_params(&ck, &entry.params_dense)?;
+    let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, &method)?;
+    let out = args.get("out").unwrap_or("runs/pruned.clvr");
+    let mut out_ck = Checkpoint::new()
+        .with_meta("config", &cfg.model.preset)
+        .with_meta("kind", "factorized")
+        .with_meta("rank", &r.to_string())
+        .with_meta("method", &method);
+    for (name, _) in fac.spec() {
+        out_ck.insert(name, fac.get(name)?.clone());
+    }
+    out_ck.save(out)?;
+    println!("pruned to rank {r} ({method}); saved {out}");
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let mode = args.get("mode").unwrap_or("s").to_string();
+    let steps = args.usize_or("steps", cfg.train.steps)?;
+    let lr = args.f64_or("lr", if mode == "s" { 6e-3 } else { 6e-4 })?;
+    let ck = Checkpoint::load(ckpt_path)?;
+    let r = ck.meta_usize("rank")?;
+    let entry = rt.manifest().config(&cfg.model.preset)?.clone();
+    let spec = entry.params_fac.get(&r).context("rank spec")?;
+    let fac = load_params(&ck, spec)?;
+    let vocab = entry.dim("vocab")?;
+    let (_tok, stream) =
+        clover::data::build_lm_stream(&cfg.data.corpus, vocab, 400_000, cfg.data.seed);
+    let (ft, _) = ops::recover(
+        &rt, &cfg.model.preset, fac, r, &mode, &stream, steps, lr, cfg.train.seed,
+    )?;
+    let ppl = ops::fac_perplexity(&rt, &cfg.model.preset, &ft, r, &stream, 8)?;
+    println!("post-finetune perplexity: {ppl:.2}");
+    let out = args.get("out").unwrap_or("runs/finetuned.clvr");
+    let mut out_ck = Checkpoint::new()
+        .with_meta("config", &cfg.model.preset)
+        .with_meta("kind", "factorized")
+        .with_meta("rank", &r.to_string());
+    for (name, _) in ft.spec() {
+        out_ck.insert(name, ft.get(name)?.clone());
+    }
+    out_ck.save(out)?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let ck = Checkpoint::load(ckpt_path)?;
+    let entry = rt.manifest().config(&cfg.model.preset)?.clone();
+    let vocab = entry.dim("vocab")?;
+    let (_tok, stream) =
+        clover::data::build_lm_stream(&cfg.data.corpus, vocab, 400_000, cfg.data.seed);
+    let ppl = if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
+        let r = ck.meta_usize("rank")?;
+        let fac = load_params(&ck, entry.params_fac.get(&r).context("rank spec")?)?;
+        ops::fac_perplexity(&rt, &cfg.model.preset, &fac, r, &stream, 16)?
+    } else {
+        let dense = load_params(&ck, &entry.params_dense)?;
+        coordinator::eval::perplexity(&rt, &cfg.model.preset, "nll", &dense, &stream, 16)?
+    };
+    println!("perplexity: {ppl:.2}");
+    Ok(())
+}
+
+fn cmd_spectra(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let opts = ExpOpts {
+        preset: cfg.model.preset.clone(),
+        quick: args.get("quick").is_some(),
+        seed: cfg.train.seed,
+    };
+    let table = experiments::fig2(&rt, &opts, args.get("all-layers").is_some())?;
+    table.emit("fig2_spectra")
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let entry = rt.manifest().config(&cfg.model.preset)?.clone();
+    let n_requests = args.usize_or("requests", 16)?;
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let ck = Checkpoint::load(ckpt_path)?;
+    let (params, program) = if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
+        let r = ck.meta_usize("rank")?;
+        (
+            load_params(&ck, entry.params_fac.get(&r).context("rank spec")?)?,
+            format!("decode_fac_r{r}_b{}", cfg.serve.max_batch.min(8)),
+        )
+    } else {
+        (
+            load_params(&ck, &entry.params_dense)?,
+            format!("decode_b{}", cfg.serve.max_batch.min(8)),
+        )
+    };
+    let engine = Engine::new(&rt, &cfg.model.preset, &program, params)?;
+    let now = std::time::Instant::now();
+    let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
+    let vocab = entry.dim("vocab")?;
+    let reqs: Vec<Request> = (0..n_requests as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..4).map(|_| rng.below(vocab) as i32).collect(),
+            max_new: cfg.serve.max_new_tokens,
+            arrived: now,
+        })
+        .collect();
+    let policy = BatchPolicy {
+        max_batch: cfg.serve.max_batch,
+        max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
+    };
+    let (completions, metrics) = engine.serve_all(reqs, policy)?;
+    println!(
+        "served {} requests | {} tokens | {:.1} tok/s | {} batches | peak KV {}",
+        metrics.completed,
+        metrics.generated_tokens,
+        metrics.tokens_per_s(),
+        metrics.batches,
+        human_bytes(metrics.kv_peak_bytes),
+    );
+    let mean_latency: f64 =
+        completions.iter().map(|c| c.latency_s).sum::<f64>() / completions.len() as f64;
+    println!("mean latency {:.3}s", mean_latency);
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let results = golden::check_all(&rt, &cfg.model.preset)?;
+    for (prog, worst) in &results {
+        println!("golden {:<24} max|Δ| = {worst:.2e}", prog);
+    }
+    println!("{} golden fixtures OK", results.len());
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let rt = Runtime::new(&cfg.model.artifacts_dir)?;
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let opts = ExpOpts {
+        preset: cfg.model.preset.clone(),
+        quick: args.get("quick").is_some(),
+        seed: cfg.train.seed,
+    };
+    let run = |id: &str| -> Result<()> {
+        match id {
+            "t1" => experiments::table1(&rt, &opts)?.emit("table1"),
+            "t3" => experiments::table3(&rt, &opts)?.emit("table3"),
+            "t4" => experiments::table4(&opts).emit("table4"),
+            "f1c" => experiments::fig1c(&rt, &opts)?.emit("fig1c"),
+            "f1d" => experiments::fig1d(&rt, &opts)?.emit("fig1d"),
+            "f2" => experiments::fig2(&rt, &opts, false)?.emit("fig2"),
+            "f3" => experiments::fig3_whisper(&rt, &opts)?.emit("fig3"),
+            "f4" => experiments::fig4(&rt, &opts)?.emit("fig4"),
+            "t2" | "f5" | "f6" => {
+                let (table, outcomes) = experiments::table2(&rt, &opts)?;
+                table.emit("table2")?;
+                experiments::fig5_from(&outcomes).emit("fig5")?;
+                experiments::fig6_from(&outcomes).emit("fig6")
+            }
+            other => bail!("unknown report {other:?}"),
+        }
+    };
+    if which == "all" {
+        for id in ["t3", "t4", "f2", "f4", "f1c", "f1d", "t1", "t2", "f3"] {
+            run(id)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}

@@ -1,0 +1,205 @@
+//! Checkpoint format `CLVR1`: a dead-simple binary container for named f32
+//! tensors plus a small string-keyed metadata block.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic   b"CLVR1\0"                         6 bytes
+//! n_meta  u32; then n_meta × (str key, str value)
+//! n_tens  u32; then n_tens × (str name, u32 ndim, ndim × u64 dims,
+//!                             numel × f32 data)
+//! str     := u32 length + utf-8 bytes
+//! ```
+//!
+//! Checkpoints store the *dense* or *factorized* parameter map together
+//! with metadata like the config name, training step, and the CLOVER rank —
+//! enough for `clover prune` / `clover finetune` / `clover serve` to resume
+//! from each other's outputs.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 6] = b"CLVR1\0";
+
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub meta: BTreeMap<String, String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > 1 << 20 {
+        bail!("unreasonable string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_meta(mut self, key: &str, value: &str) -> Self {
+        self.meta.insert(key.into(), value.into());
+        self
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("checkpoint missing tensor {name:?}"))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        let v = self.meta.get(key).with_context(|| format!("checkpoint missing meta {key:?}"))?;
+        Ok(v.parse::<usize>()?)
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(std::fs::File::create(path.as_ref())?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.meta.len() as u32).to_le_bytes())?;
+        for (k, v) in &self.meta {
+            write_str(&mut w, k)?;
+            write_str(&mut w, v)?;
+        }
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            write_str(&mut w, name)?;
+            w.write_all(&(t.ndim() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // Bulk-copy the f32 payload.
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut r = BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 6];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{:?}: not a CLVR1 checkpoint", path.as_ref());
+        }
+        let mut n4 = [0u8; 4];
+        r.read_exact(&mut n4)?;
+        let n_meta = u32::from_le_bytes(n4) as usize;
+        let mut meta = BTreeMap::new();
+        for _ in 0..n_meta {
+            let k = read_str(&mut r)?;
+            let v = read_str(&mut r)?;
+            meta.insert(k, v);
+        }
+        r.read_exact(&mut n4)?;
+        let n_tens = u32::from_le_bytes(n4) as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n_tens {
+            let name = read_str(&mut r)?;
+            r.read_exact(&mut n4)?;
+            let ndim = u32::from_le_bytes(n4) as usize;
+            if ndim > 16 {
+                bail!("tensor {name}: unreasonable ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut d8 = [0u8; 8];
+                r.read_exact(&mut d8)?;
+                shape.push(u64::from_le_bytes(d8) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut bytes = vec![0u8; numel * 4];
+            r.read_exact(&mut bytes)?;
+            let mut data = vec![0.0f32; numel];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr(),
+                    data.as_mut_ptr() as *mut u8,
+                    bytes.len(),
+                );
+            }
+            tensors.insert(name, Tensor::new(shape, data));
+        }
+        Ok(Self { meta, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("clover_ckpt_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(0);
+        let mut ck = Checkpoint::new().with_meta("config", "tiny").with_meta("step", "100");
+        ck.insert("w", Tensor::new(vec![3, 4], rng.normal_vec(12, 1.0)));
+        ck.insert("scalar", Tensor::scalar(7.5));
+        let path = tmp("roundtrip");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.meta["config"], "tiny");
+        assert_eq!(back.meta_usize("step").unwrap(), 100);
+        assert_eq!(back.get("w").unwrap(), ck.get("w").unwrap());
+        assert_eq!(back.get("scalar").unwrap().item(), 7.5);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("badmagic");
+        std::fs::write(&path, b"NOTCKPT").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let ck = Checkpoint::new();
+        assert!(ck.get("nope").is_err());
+    }
+
+    #[test]
+    fn large_tensor_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut ck = Checkpoint::new();
+        ck.insert("big", Tensor::new(vec![128, 257], rng.normal_vec(128 * 257, 0.5)));
+        let path = tmp("large");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.get("big").unwrap(), ck.get("big").unwrap());
+        std::fs::remove_file(path).ok();
+    }
+}

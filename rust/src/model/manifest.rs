@@ -1,0 +1,231 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`).  The manifest is the *only* channel through which shape
+//! information crosses the Python→Rust boundary; nothing in the Rust tree
+//! re-derives a model dimension.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One program argument or result.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One AOT-lowered HLO program.
+#[derive(Clone, Debug)]
+pub struct ProgramSig {
+    pub file: String,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub golden: Option<String>,
+}
+
+/// Named parameter layout (ordering == flat argument ordering).
+pub type ParamSpec = Vec<(String, Vec<usize>)>;
+
+/// One model configuration (a python `configs.py` preset).
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub kind: String, // "decoder" | "seq2seq"
+    pub dims: BTreeMap<String, usize>,
+    pub ranks: Vec<usize>,
+    pub programs: BTreeMap<String, ProgramSig>,
+    pub params_dense: ParamSpec,
+    pub params_fac: BTreeMap<usize, ParamSpec>,
+    pub params_facud: ParamSpec,
+    pub params_lora: ParamSpec,
+    pub params_dora: ParamSpec,
+}
+
+impl ConfigEntry {
+    pub fn dim(&self, key: &str) -> Result<usize> {
+        self.dims.get(key).copied().with_context(|| format!("config {} missing dim {key}", self.name))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSig> {
+        self.programs.get(name)
+            .with_context(|| format!("config {} has no program {name:?}", self.name))
+    }
+
+    /// Total element count of a param spec.
+    pub fn param_count(spec: &ParamSpec) -> usize {
+        spec.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+fn parse_spec(v: &Json) -> Result<ParamSpec> {
+    v.as_arr()?
+        .iter()
+        .map(|e| Ok((e.req("name")?.as_str()?.to_string(), e.req("shape")?.as_shape()?)))
+        .collect()
+}
+
+fn parse_args(v: &Json) -> Result<Vec<ArgSpec>> {
+    v.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(ArgSpec {
+                name: e.req("name")?.as_str()?.to_string(),
+                shape: e.req("shape")?.as_shape()?,
+                dtype: DType::parse(e.req("dtype")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let mut configs = BTreeMap::new();
+        for (name, entry) in doc.req("configs")?.as_obj()? {
+            let kind = entry.req("kind")?.as_str()?.to_string();
+            let mut dims = BTreeMap::new();
+            for key in [
+                "vocab", "d_model", "n_heads", "n_layers", "seq_len", "d_ff", "d_head",
+                "lora_rank", "train_batch", "ud_block", "n_enc_layers", "n_dec_layers",
+                "feat_dim", "src_len", "tgt_len", "batch",
+            ] {
+                if let Some(v) = entry.get(key) {
+                    dims.insert(key.to_string(), v.as_usize()?);
+                }
+            }
+            let ranks = entry.req("ranks")?.as_shape()?;
+            let mut programs = BTreeMap::new();
+            for (pname, p) in entry.req("programs")?.as_obj()? {
+                programs.insert(
+                    pname.clone(),
+                    ProgramSig {
+                        file: p.req("file")?.as_str()?.to_string(),
+                        inputs: parse_args(p.req("inputs")?)?,
+                        outputs: parse_args(p.req("outputs")?)?,
+                        golden: p.get("golden").map(|g| g.as_str().map(String::from)).transpose()?,
+                    },
+                );
+            }
+            let params_dense = match entry.get("params_dense").or_else(|| entry.get("params")) {
+                Some(v) => parse_spec(v)?,
+                None => Vec::new(),
+            };
+            let mut params_fac = BTreeMap::new();
+            if let Some(pf) = entry.get("params_fac") {
+                for (r, spec) in pf.as_obj()? {
+                    params_fac.insert(r.parse::<usize>()?, parse_spec(spec)?);
+                }
+            }
+            let params_facud = match entry.get("params_facud") {
+                Some(v) => parse_spec(v)?,
+                None => Vec::new(),
+            };
+            let params_lora = match entry.get("params_lora") {
+                Some(v) => parse_spec(v)?,
+                None => Vec::new(),
+            };
+            let params_dora = match entry.get("params_dora") {
+                Some(v) => parse_spec(v)?,
+                None => Vec::new(),
+            };
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    name: name.clone(),
+                    kind,
+                    dims,
+                    ranks,
+                    programs,
+                    params_dense,
+                    params_fac,
+                    params_facud,
+                    params_lora,
+                    params_dora,
+                },
+            );
+        }
+        Ok(Manifest { root, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry> {
+        self.configs.get(name).with_context(|| {
+            format!("manifest has no config {name:?} (have: {:?})",
+                    self.configs.keys().collect::<Vec<_>>())
+        })
+    }
+
+    pub fn hlo_path(&self, sig: &ProgramSig) -> PathBuf {
+        self.root.join(&sig.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(art_dir()).expect("run `make artifacts` first");
+        let tiny = m.config("tiny").unwrap();
+        assert_eq!(tiny.kind, "decoder");
+        assert_eq!(tiny.dim("d_model").unwrap(), 64);
+        assert_eq!(tiny.dim("d_head").unwrap(), 16);
+        assert!(tiny.ranks.contains(&16));
+        let fwd = tiny.program("fwd").unwrap();
+        assert_eq!(fwd.inputs.last().unwrap().dtype, DType::I32);
+        assert_eq!(fwd.outputs[0].name, "logits");
+        // dense spec: 14 tensors, starts with tok_emb
+        assert_eq!(tiny.params_dense[0].0, "tok_emb");
+        assert_eq!(tiny.params_dense.len(), 14);
+        // factorized spec exists for full rank
+        assert!(tiny.params_fac.contains_key(&16));
+    }
+
+    #[test]
+    fn param_count_matches_formula() {
+        let m = Manifest::load(art_dir()).expect("artifacts");
+        let tiny = m.config("tiny").unwrap();
+        let (v, d, t, l, f) = (256usize, 64usize, 64usize, 2usize, 256usize);
+        let expect = v * d + t * d + l * (4 * d * d + 2 * d * f + 4 * d) + 2 * d;
+        assert_eq!(ConfigEntry::param_count(&tiny.params_dense), expect);
+    }
+
+    #[test]
+    fn missing_config_is_error() {
+        let m = Manifest::load(art_dir()).expect("artifacts");
+        assert!(m.config("nope").is_err());
+    }
+}

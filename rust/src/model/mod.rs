@@ -1,0 +1,62 @@
+//! Model-state plumbing: the AOT manifest, named parameter sets, and the
+//! `CLVR1` checkpoint format.
+//!
+//! The actual compute graphs live in `artifacts/` (lowered from
+//! `python/compile/model.py`); this module owns their *state* on the Rust
+//! side and the metadata needed to marshal it.
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod params;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{ArgSpec, ConfigEntry, DType, Manifest, ParamSpec, ProgramSig};
+pub use params::ParamSet;
+
+use anyhow::Result;
+
+/// Save a [`ParamSet`] as a checkpoint with standard metadata.
+pub fn save_params(
+    params: &ParamSet,
+    config_name: &str,
+    kind: &str,
+    step: usize,
+    path: &std::path::Path,
+) -> Result<()> {
+    let mut ck = Checkpoint::new()
+        .with_meta("config", config_name)
+        .with_meta("kind", kind)
+        .with_meta("step", &step.to_string());
+    for (name, _) in params.spec() {
+        ck.insert(name, params.get(name)?.clone());
+    }
+    ck.save(path)
+}
+
+/// Load a [`ParamSet`] for `spec` from a checkpoint (shape-checked).
+pub fn load_params(ck: &Checkpoint, spec: &ParamSpec) -> Result<ParamSet> {
+    let tensors = spec.iter()
+        .map(|(n, _)| ck.get(n).cloned())
+        .collect::<Result<Vec<_>>>()?;
+    ParamSet::from_flat(spec, tensors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn params_checkpoint_roundtrip() {
+        let spec: ParamSpec = vec![("x".into(), vec![4]), ("y".into(), vec![2, 2])];
+        let mut rng = Rng::new(2);
+        let p = ParamSet::gaussian(&spec, &mut rng, 1.0);
+        let path = std::env::temp_dir().join(format!("clover_mod_rt_{}", std::process::id()));
+        save_params(&p, "tiny", "dense", 7, &path).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.meta["kind"], "dense");
+        let back = load_params(&ck, &spec).unwrap();
+        assert_eq!(back.max_abs_diff(&p), 0.0);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,143 @@
+//! Named parameter sets with a canonical flat ordering.
+//!
+//! A [`ParamSet`] pairs a manifest [`ParamSpec`] (ordering + shapes) with
+//! the actual tensors.  The coordinator passes `flat()` slices to the
+//! runtime, and rebuilds updated sets from program outputs by name.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+use super::manifest::ParamSpec;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    spec: ParamSpec,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamSet {
+    /// All-zeros set for a spec (optimizer moments start here).
+    pub fn zeros(spec: &ParamSpec) -> Self {
+        let map = spec.iter()
+            .map(|(n, s)| (n.clone(), Tensor::zeros(s)))
+            .collect();
+        Self { spec: spec.clone(), map }
+    }
+
+    /// Gaussian init (used for adapter A matrices and test fixtures).
+    pub fn gaussian(spec: &ParamSpec, rng: &mut Rng, std: f32) -> Self {
+        let map = spec.iter()
+            .map(|(n, s)| {
+                let numel = s.iter().product();
+                (n.clone(), Tensor::new(s.clone(), rng.normal_vec(numel, std)))
+            })
+            .collect();
+        Self { spec: spec.clone(), map }
+    }
+
+    /// Build from tensors in spec order.
+    pub fn from_flat(spec: &ParamSpec, tensors: Vec<Tensor>) -> Result<Self> {
+        if tensors.len() != spec.len() {
+            bail!("expected {} tensors, got {}", spec.len(), tensors.len());
+        }
+        let mut map = BTreeMap::new();
+        for ((name, shape), t) in spec.iter().zip(tensors) {
+            if t.shape() != shape.as_slice() {
+                bail!("param {name}: shape {:?} != spec {:?}", t.shape(), shape);
+            }
+            map.insert(name.clone(), t);
+        }
+        Ok(Self { spec: spec.clone(), map })
+    }
+
+    pub fn spec(&self) -> &ParamSpec {
+        &self.spec
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.spec.iter().map(|(n, _)| n.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map.get(name).with_context(|| format!("no param {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) -> Result<()> {
+        let (_, shape) = self.spec.iter().find(|(n, _)| n == name)
+            .with_context(|| format!("param {name:?} not in spec"))?;
+        if t.shape() != shape.as_slice() {
+            bail!("param {name}: shape {:?} != spec {:?}", t.shape(), shape);
+        }
+        self.map.insert(name.to_string(), t);
+        Ok(())
+    }
+
+    /// Tensors in spec order (for marshalling to program arguments).
+    pub fn flat(&self) -> Vec<&Tensor> {
+        self.spec.iter().map(|(n, _)| &self.map[n]).collect()
+    }
+
+    pub fn into_map(self) -> BTreeMap<String, Tensor> {
+        self.map
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.map.values().map(|t| t.len()).sum()
+    }
+
+    /// Total squared difference against another set (drift diagnostics).
+    pub fn max_abs_diff(&self, other: &ParamSet) -> f32 {
+        let mut worst = 0.0f32;
+        for (n, _) in &self.spec {
+            worst = worst.max(self.map[n].max_abs_diff(&other.map[n]));
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ParamSpec {
+        vec![("a".into(), vec![2, 2]), ("b".into(), vec![3])]
+    }
+
+    #[test]
+    fn zeros_and_flat_order() {
+        let p = ParamSet::zeros(&spec());
+        assert_eq!(p.n_params(), 7);
+        let flat = p.flat();
+        assert_eq!(flat[0].shape(), &[2, 2]);
+        assert_eq!(flat[1].shape(), &[3]);
+    }
+
+    #[test]
+    fn from_flat_validates() {
+        let good = ParamSet::from_flat(&spec(), vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[3])]);
+        assert!(good.is_ok());
+        let bad = ParamSet::from_flat(&spec(), vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[4])]);
+        assert!(bad.is_err());
+        let short = ParamSet::from_flat(&spec(), vec![Tensor::zeros(&[2, 2])]);
+        assert!(short.is_err());
+    }
+
+    #[test]
+    fn set_checks_shape() {
+        let mut p = ParamSet::zeros(&spec());
+        assert!(p.set("a", Tensor::zeros(&[2, 2])).is_ok());
+        assert!(p.set("a", Tensor::zeros(&[2, 3])).is_err());
+        assert!(p.set("zz", Tensor::zeros(&[1])).is_err());
+    }
+
+    #[test]
+    fn gaussian_is_seeded() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = ParamSet::gaussian(&spec(), &mut r1, 0.1);
+        let b = ParamSet::gaussian(&spec(), &mut r2, 0.1);
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+}

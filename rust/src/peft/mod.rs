@@ -1,0 +1,244 @@
+//! PEFT adapter initialization and trainable-parameter accounting.
+//!
+//! The *training graphs* (LoRA/DoRA/HiRA/PiSSA/CLOVER-FT) are HLO
+//! artifacts; this module owns their host-side state: adapter
+//! initialization (including PiSSA's principal-SVD init, which modifies
+//! the base weights) and the Table-3 / Appendix-A.2 parameter accounting.
+
+use anyhow::{bail, Result};
+
+use crate::linalg::svd::svd;
+use crate::linalg::{matmul, scale_cols};
+use crate::model::manifest::ParamSpec;
+use crate::model::params::ParamSet;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// LoRA target layers (matches `python/compile/model.py::lora_param_spec`).
+pub const LORA_TARGETS: [(&str, &str, &str); 5] = [
+    ("wq", "a_q", "b_q"),
+    ("wk", "a_k", "b_k"),
+    ("wv", "a_v", "b_v"),
+    ("w_up", "a_up", "b_up"),
+    ("w_down", "a_down", "b_down"),
+];
+
+/// Standard LoRA init: A ~ N(0, 0.02), B = 0 ⇒ identity at step 0.
+pub fn lora_init(spec: &ParamSpec, rng: &mut Rng) -> ParamSet {
+    let mut out = ParamSet::zeros(spec);
+    for (name, shape) in spec {
+        if name.starts_with("a_") {
+            let numel = shape.iter().product();
+            out.set(name, Tensor::new(shape.clone(), rng.normal_vec(numel, 0.02))).unwrap();
+        }
+    }
+    out
+}
+
+/// HiRA uses the same A/B layout and init as LoRA (B = 0 ⇒ ΔW = 0).
+pub fn hira_init(spec: &ParamSpec, rng: &mut Rng) -> ParamSet {
+    lora_init(spec, rng)
+}
+
+/// DoRA init: LoRA A/B plus per-output-column magnitudes m = ‖W‖_col so
+/// the decomposed model reproduces the base exactly.
+pub fn dora_init(spec: &ParamSpec, base: &ParamSet, rng: &mut Rng) -> Result<ParamSet> {
+    let mut out = lora_init(spec, rng);
+    for (tgt, mag) in [("wq", "m_q"), ("wk", "m_k"), ("wv", "m_v"),
+                       ("w_up", "m_up"), ("w_down", "m_down")] {
+        let w = base.get(tgt)?; // [L, In, Out]
+        let (l, din, dout) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        let mut m = Tensor::zeros(&[l, dout]);
+        for li in 0..l {
+            for j in 0..dout {
+                let mut acc = 0.0f32;
+                for i in 0..din {
+                    let v = w.data()[li * din * dout + i * dout + j];
+                    acc += v * v;
+                }
+                m.data_mut()[li * dout + j] = (acc + 1e-8).sqrt();
+            }
+        }
+        out.set(mag, m)?;
+    }
+    Ok(out)
+}
+
+/// PiSSA init: per layer and target, SVD the base weight, put the top-r
+/// principal component into the adapter (A = U√Σ, B = √Σ Vᵀ) and *subtract*
+/// it from the base (residual W_res = W − AB).  Returns (modified base,
+/// adapter).  Running the plain-LoRA train graph on these is exactly PiSSA.
+pub fn pissa_init(
+    base: &ParamSet,
+    lora_spec: &ParamSpec,
+    rank: usize,
+) -> Result<(ParamSet, ParamSet)> {
+    let mut new_base = base.clone();
+    let mut ad = ParamSet::zeros(lora_spec);
+    for (tgt, a_name, b_name) in LORA_TARGETS {
+        let w = base.get(tgt)?;
+        let (l, din, dout) = (w.shape()[0], w.shape()[1], w.shape()[2]);
+        if rank > din.min(dout) {
+            bail!("pissa rank {rank} > min dim of {tgt}");
+        }
+        let mut a_parts = Vec::new();
+        let mut b_parts = Vec::new();
+        let mut res_parts = Vec::new();
+        for li in 0..l {
+            let w_l = w.index0(li);
+            let dec = svd(&w_l);
+            let sqrt_s: Vec<f32> = dec.s[..rank].iter().map(|x| x.max(0.0).sqrt()).collect();
+            let a = scale_cols(&dec.u.cols(0, rank), &sqrt_s); // [din, r]
+            let bt = scale_cols(&dec.vt.transpose2().cols(0, rank), &sqrt_s); // [dout, r]
+            let b = bt.transpose2(); // [r, dout]
+            let principal = matmul(&a, &b);
+            let res = w_l.sub(&principal);
+            a_parts.push(a);
+            b_parts.push(b);
+            res_parts.push(res);
+        }
+        ad.set(a_name, Tensor::stack(&a_parts)?)?;
+        ad.set(b_name, Tensor::stack(&b_parts)?)?;
+        new_base.set(tgt, Tensor::stack(&res_parts)?)?;
+    }
+    Ok((new_base, ad))
+}
+
+/// Trainable-parameter accounting for each method on a decoder config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Accounting {
+    pub method: String,
+    pub trainable: usize,
+    pub total: usize,
+}
+
+impl Accounting {
+    pub fn pct(&self) -> f64 {
+        100.0 * self.trainable as f64 / self.total as f64
+    }
+}
+
+/// Count trainable params for a method given the relevant spec subsets.
+pub fn account(method: &str, total_params: usize, spec: &ParamSpec,
+               trainable_names: &[&str]) -> Accounting {
+    let trainable = spec.iter()
+        .filter(|(n, _)| trainable_names.iter().any(|t| n == t || n.starts_with(t)))
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    Accounting { method: method.into(), trainable, total: total_params }
+}
+
+/// Appendix A.2 arithmetic for LLaMA-2-7B: LoRA rank-32 ≡ CLOVER head-wise
+/// transition matrices at 1,753,088 trainable params per layer.
+pub fn llama2_7b_table3() -> (usize, usize) {
+    let (d, f, rank) = (4096usize, 11008usize, 32usize);
+    let lora = 3 * (d * rank + rank * d) + (d * rank + rank * f) + (f * rank + rank * d);
+    let (h, dh, blk) = (32usize, 128usize, 64usize);
+    let clover = 2 * h * dh * dh + (f / blk) * blk * blk;
+    (lora, clover)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::rel_err;
+
+    fn base_fixture() -> (ParamSet, ParamSpec) {
+        let spec: ParamSpec = vec![
+            ("wq".into(), vec![2, 8, 8]),
+            ("wk".into(), vec![2, 8, 8]),
+            ("wv".into(), vec![2, 8, 8]),
+            ("w_up".into(), vec![2, 8, 16]),
+            ("w_down".into(), vec![2, 16, 8]),
+        ];
+        let mut rng = Rng::new(3);
+        (ParamSet::gaussian(&spec, &mut rng, 0.5), spec)
+    }
+
+    fn lora_spec(rank: usize) -> ParamSpec {
+        vec![
+            ("a_q".into(), vec![2, 8, rank]), ("b_q".into(), vec![2, rank, 8]),
+            ("a_k".into(), vec![2, 8, rank]), ("b_k".into(), vec![2, rank, 8]),
+            ("a_v".into(), vec![2, 8, rank]), ("b_v".into(), vec![2, rank, 8]),
+            ("a_up".into(), vec![2, 8, rank]), ("b_up".into(), vec![2, rank, 16]),
+            ("a_down".into(), vec![2, 16, rank]), ("b_down".into(), vec![2, rank, 8]),
+        ]
+    }
+
+    #[test]
+    fn lora_init_b_zero() {
+        let mut rng = Rng::new(0);
+        let ad = lora_init(&lora_spec(4), &mut rng);
+        assert_eq!(ad.get("b_q").unwrap().norm(), 0.0);
+        assert!(ad.get("a_q").unwrap().norm() > 0.0);
+    }
+
+    #[test]
+    fn pissa_reconstruction() {
+        // W_res + A·B == W exactly (per layer, per target).
+        let (base, _) = base_fixture();
+        let (new_base, ad) = pissa_init(&base, &lora_spec(4), 4).unwrap();
+        for (tgt, a_name, b_name) in LORA_TARGETS {
+            for li in 0..2 {
+                let w = base.get(tgt).unwrap().index0(li);
+                let res = new_base.get(tgt).unwrap().index0(li);
+                let a = ad.get(a_name).unwrap().index0(li);
+                let b = ad.get(b_name).unwrap().index0(li);
+                let mut back = matmul(&a, &b);
+                back.add_assign(&res);
+                assert!(rel_err(back.data(), w.data()) < 1e-3,
+                        "{tgt} layer {li}: {}", rel_err(back.data(), w.data()));
+            }
+        }
+    }
+
+    #[test]
+    fn pissa_principal_energy() {
+        // The adapter holds the top singular directions: ‖AB‖ ≥ ‖W_res‖ for
+        // a rank that covers most of the energy.
+        let (base, _) = base_fixture();
+        let (new_base, ad) = pissa_init(&base, &lora_spec(6), 6).unwrap();
+        let w_res = new_base.get("wq").unwrap().index0(0);
+        let a = ad.get("a_q").unwrap().index0(0);
+        let b = ad.get("b_q").unwrap().index0(0);
+        let principal = matmul(&a, &b);
+        assert!(principal.norm() > w_res.norm());
+    }
+
+    #[test]
+    fn dora_magnitudes_match_col_norms() {
+        let (base, _) = base_fixture();
+        let mut rng = Rng::new(1);
+        let mut spec = lora_spec(4);
+        spec.extend([
+            ("m_q".into(), vec![2usize, 8usize]), ("m_k".into(), vec![2, 8]),
+            ("m_v".into(), vec![2, 8]), ("m_up".into(), vec![2, 16]),
+            ("m_down".into(), vec![2, 8]),
+        ]);
+        let ad = dora_init(&spec, &base, &mut rng).unwrap();
+        let w = base.get("wq").unwrap();
+        let m = ad.get("m_q").unwrap();
+        // col 0 of layer 0
+        let mut acc = 0.0f32;
+        for i in 0..8 {
+            let v = w.data()[i * 8];
+            acc += v * v;
+        }
+        assert!((m.data()[0] - (acc + 1e-8).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn table3_identity() {
+        let (lora, clover) = llama2_7b_table3();
+        assert_eq!(lora, 1_753_088);
+        assert_eq!(clover, 1_753_088);
+    }
+
+    #[test]
+    fn accounting_pct() {
+        let spec: ParamSpec = vec![("a_q".into(), vec![10, 10])];
+        let acc = account("lora", 10_000, &spec, &["a_"]);
+        assert_eq!(acc.trainable, 100);
+        assert!((acc.pct() - 1.0).abs() < 1e-9);
+    }
+}

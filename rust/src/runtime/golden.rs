@@ -1,0 +1,117 @@
+//! Golden-vector integration checks: replay the `.npz` fixtures the AOT
+//! exporter captured (inputs `arg0..argN`, expected outputs `out0..outM`)
+//! through the Rust runtime and compare.
+//!
+//! This is the cross-language correctness seal: if these pass, the Rust
+//! PJRT path computes bit-comparable results to the jax programs that
+//! produced the artifacts (same XLA version, same CPU backend).
+
+use anyhow::{bail, Context, Result};
+
+use super::{literal, Runtime};
+use crate::tensor::Value;
+
+/// Max |a-b| tolerated between jax-side and rust-side outputs.  Both run
+/// the same HLO on the same backend; differences are compile-flag level.
+pub const GOLDEN_ATOL: f32 = 2e-4;
+pub const GOLDEN_RTOL: f32 = 2e-3;
+
+/// Replay one golden fixture.  Returns the worst absolute deviation seen.
+pub fn check(rt: &Runtime, config: &str, program: &str) -> Result<f32> {
+    let sig = rt.manifest().config(config)?.program(program)?.clone();
+    let golden_rel = match &sig.golden {
+        Some(g) => g.clone(),
+        None => bail!("{config}/{program} has no golden fixture"),
+    };
+    let path = rt.manifest().root.join(&golden_rel);
+    let named = literal::read_npz(&path)?;
+    let lookup = |key: &str| -> Result<&Value> {
+        named.iter().find(|(n, _)| n == key).map(|(_, v)| v)
+            .with_context(|| format!("{golden_rel}: missing {key}"))
+    };
+
+    let args: Vec<Value> = (0..sig.inputs.len())
+        .map(|i| lookup(&format!("arg{i}")).cloned())
+        .collect::<Result<_>>()?;
+    let outs = rt.run(config, program, &args)?;
+
+    let mut worst = 0.0f32;
+    for (i, got) in outs.iter().enumerate() {
+        let want = lookup(&format!("out{i}"))?;
+        match (got, want) {
+            (Value::F32(a), Value::F32(b)) => {
+                if a.shape() != b.shape() {
+                    bail!("{config}/{program} out{i}: shape {:?} != {:?}", a.shape(), b.shape());
+                }
+                for (x, y) in a.data().iter().zip(b.data().iter()) {
+                    let d = (x - y).abs();
+                    if d > GOLDEN_ATOL + GOLDEN_RTOL * y.abs() {
+                        bail!("{config}/{program} out{i}: {x} vs {y} (|d|={d})");
+                    }
+                    worst = worst.max(d);
+                }
+            }
+            (Value::I32(a), Value::I32(b)) => {
+                if a != b {
+                    bail!("{config}/{program} out{i}: i32 mismatch");
+                }
+            }
+            _ => bail!("{config}/{program} out{i}: dtype mismatch"),
+        }
+    }
+    Ok(worst)
+}
+
+/// Replay every golden fixture declared in the manifest for `config`.
+pub fn check_all(rt: &Runtime, config: &str) -> Result<Vec<(String, f32)>> {
+    let progs: Vec<String> = rt
+        .manifest()
+        .config(config)?
+        .programs
+        .iter()
+        .filter(|(_, sig)| sig.golden.is_some())
+        .map(|(n, _)| n.clone())
+        .collect();
+    let mut results = Vec::new();
+    for p in progs {
+        let worst = check(rt, config, &p).with_context(|| format!("golden {config}/{p}"))?;
+        crate::info!("golden {config}/{p}: max |Δ| = {worst:.2e}");
+        results.push((p, worst));
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn golden_fwd_tiny() {
+        let rt = Runtime::new(&art()).expect("runtime (run `make artifacts`)");
+        let worst = check(&rt, "tiny", "fwd").unwrap();
+        assert!(worst <= GOLDEN_ATOL * 10.0, "worst {worst}");
+    }
+
+    #[test]
+    fn golden_train_full_tiny() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        check(&rt, "tiny", "train_full").unwrap();
+    }
+
+    #[test]
+    fn golden_fac_and_decode_tiny() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        check(&rt, "tiny", "fwd_fac_r16").unwrap();
+        check(&rt, "tiny", "decode_b1").unwrap();
+    }
+
+    #[test]
+    fn missing_golden_is_error() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        assert!(check(&rt, "tiny", "train_clover_s_r16").is_err());
+    }
+}

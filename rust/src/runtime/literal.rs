@@ -1,0 +1,125 @@
+//! Conversions between host [`Value`] tensors and PJRT [`xla::Literal`]s.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::manifest::DType;
+use crate::tensor::{Tensor, TensorI, Value};
+
+/// Host tensor → literal (bulk byte copy, no per-element work).
+pub fn to_literal(v: &Value) -> Result<xla::Literal> {
+    match v {
+        Value::F32(t) => {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                t.shape(),
+                bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("f32 literal {:?}: {e:?}", t.shape()))
+        }
+        Value::I32(t) => {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(
+                    t.data().as_ptr() as *const u8,
+                    t.data().len() * 4,
+                )
+            };
+            xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                t.shape(),
+                bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("i32 literal {:?}: {e:?}", t.shape()))
+        }
+    }
+}
+
+/// Literal → host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Value> {
+    let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("array_shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?;
+            Ok(Value::F32(Tensor::new(dims, data)))
+        }
+        xla::ElementType::S32 => {
+            let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?;
+            Ok(Value::I32(TensorI::new(dims, data)))
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+/// Shape/dtype check of a host value against a manifest arg spec.
+pub fn check_arg(name: &str, v: &Value, shape: &[usize], dtype: DType) -> Result<()> {
+    let got_dtype = match v {
+        Value::F32(_) => DType::F32,
+        Value::I32(_) => DType::I32,
+    };
+    if got_dtype != dtype {
+        bail!("arg {name:?}: dtype {got_dtype:?} != spec {dtype:?}");
+    }
+    if v.shape() != shape {
+        bail!("arg {name:?}: shape {:?} != spec {:?}", v.shape(), shape);
+    }
+    Ok(())
+}
+
+/// Load an `.npz` file as named host values (golden fixtures).
+pub fn read_npz(path: &std::path::Path) -> Result<Vec<(String, Value)>> {
+    use xla::FromRawBytes;
+    let lits = xla::Literal::read_npz(path, &())
+        .map_err(|e| anyhow::anyhow!("read_npz {path:?}: {e:?}"))?;
+    lits.iter()
+        .map(|(name, lit)| Ok((name.clone(), from_literal(lit)?)))
+        .collect::<Result<Vec<_>>>()
+        .with_context(|| format!("converting {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]);
+        let lit = to_literal(&Value::F32(t.clone())).unwrap();
+        match from_literal(&lit).unwrap() {
+            Value::F32(back) => assert_eq!(back, t),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = TensorI::new(vec![4], vec![1, -2, 3, 2_000_000_000]);
+        let lit = to_literal(&Value::I32(t.clone())).unwrap();
+        match from_literal(&lit).unwrap() {
+            Value::I32(back) => assert_eq!(back, t),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = to_literal(&Value::F32(Tensor::scalar(3.25))).unwrap();
+        match from_literal(&lit).unwrap() {
+            Value::F32(t) => {
+                assert_eq!(t.shape(), &[] as &[usize]);
+                assert_eq!(t.item(), 3.25);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn check_arg_mismatches() {
+        let v = Value::F32(Tensor::zeros(&[2, 2]));
+        assert!(check_arg("x", &v, &[2, 2], DType::F32).is_ok());
+        assert!(check_arg("x", &v, &[2, 3], DType::F32).is_err());
+        assert!(check_arg("x", &v, &[2, 2], DType::I32).is_err());
+    }
+}

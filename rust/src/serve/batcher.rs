@@ -1,0 +1,164 @@
+//! Dynamic request batcher: collects incoming generation requests into
+//! micro-batches under a (max_batch, max_wait) policy — the standard
+//! continuous-batching admission rule, scoped to the fixed-B decode
+//! artifacts this runtime executes.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub arrived: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+/// FIFO queue + admission policy.  Thread-safe wrapper lives in the engine;
+/// this core is synchronous and unit-testable.
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    policy: BatchPolicy,
+    admitted: u64,
+    enqueued: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { queue: VecDeque::new(), policy, admitted: 0, enqueued: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.enqueued += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be released now?  Yes when full, or when the oldest
+    /// waiter exceeded max_wait, or when `drain` (shutdown) is set.
+    pub fn ready(&self, now: Instant, drain: bool) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.policy.max_batch || drain {
+            return true;
+        }
+        now.duration_since(self.queue[0].arrived) >= self.policy.max_wait
+    }
+
+    /// Pop up to max_batch requests.
+    pub fn take_batch(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<Request> = self.queue.drain(..n).collect();
+        self.admitted += batch.len() as u64;
+        batch
+    }
+
+    /// (enqueued, admitted) — conservation check: nothing lost or duplicated.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.enqueued, self.admitted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    fn req(id: u64, t: Instant) -> Request {
+        Request { id, prompt: vec![1], max_new: 4, arrived: t }
+    }
+
+    fn policy(b: usize, ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch: b, max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn releases_when_full() {
+        let mut b = Batcher::new(policy(2, 1000));
+        let now = Instant::now();
+        b.push(req(1, now));
+        assert!(!b.ready(now, false));
+        b.push(req(2, now));
+        assert!(b.ready(now, false));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_timeout() {
+        let mut b = Batcher::new(policy(8, 5));
+        let past = Instant::now() - Duration::from_millis(50);
+        b.push(req(1, past));
+        assert!(b.ready(Instant::now(), false));
+    }
+
+    #[test]
+    fn drain_releases_partial() {
+        let mut b = Batcher::new(policy(8, 10_000));
+        b.push(req(1, Instant::now()));
+        assert!(b.ready(Instant::now(), true));
+    }
+
+    #[test]
+    fn batch_caps_at_max() {
+        let mut b = Batcher::new(policy(3, 0));
+        let now = Instant::now();
+        for i in 0..7 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.take_batch().len(), 3);
+        assert_eq!(b.len(), 4);
+    }
+
+    #[test]
+    fn conservation_property() {
+        prop("batcher conserves requests", 20, |rng: &mut Rng| {
+            let mut b = Batcher::new(policy(1 + rng.below(4), 0));
+            let now = Instant::now();
+            let mut seen = Vec::new();
+            let mut next = 0u64;
+            for _ in 0..100 {
+                if rng.uniform() < 0.6 {
+                    b.push(req(next, now));
+                    next += 1;
+                } else if b.ready(now, true) {
+                    for r in b.take_batch() {
+                        seen.push(r.id);
+                    }
+                }
+            }
+            while b.ready(now, true) {
+                for r in b.take_batch() {
+                    seen.push(r.id);
+                }
+            }
+            let (enq, adm) = b.counters();
+            if enq != adm || seen.len() as u64 != enq {
+                return Err(format!("enq {enq} adm {adm} seen {}", seen.len()));
+            }
+            // FIFO order, no duplicates
+            for (i, w) in seen.windows(2).enumerate() {
+                if w[1] <= w[0] {
+                    return Err(format!("order violated at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Serving engine: batched greedy generation over the KV-cache decode
+//! artifacts, with the dynamic batcher + paged KV accounting in front.
+//!
+//! Single-threaded executor by design: the PJRT handles are not Sync, and
+//! this box has one core — concurrency is expressed by the request queue,
+//! not OS threads.  `serve_all` is the synchronous core the CLI demo,
+//! example, and bench drive; a thread-owning wrapper would feed it from
+//! channels without changing any of this logic.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::model::params::ParamSet;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorI, Value};
+use crate::util::Stopwatch;
+
+use super::batcher::{BatchPolicy, Batcher, Request};
+use super::kv::{KvConfig, KvManager};
+
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub wall_s: f64,
+    pub kv_peak_bytes: usize,
+    pub batches: usize,
+}
+
+impl ServeMetrics {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.generated_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    config: String,
+    program: String,
+    params: ParamSet,
+    kv_cfg: KvConfig,
+    batch_slots: usize,
+}
+
+impl<'rt> Engine<'rt> {
+    /// `program` is a decode artifact (e.g. "decode_b8" or
+    /// "decode_fac_r8_b8"); its cache input fixes batch size and rank.
+    pub fn new(rt: &'rt Runtime, config: &str, program: &str, params: ParamSet) -> Result<Self> {
+        let sig = rt.manifest().config(config)?.program(program)?.clone();
+        let cache = sig.inputs.iter().find(|a| a.name.ends_with("_cache"))
+            .context("decode program lacks a cache input")?;
+        let (l, b, h, c, r) = (
+            cache.shape[0], cache.shape[1], cache.shape[2], cache.shape[3], cache.shape[4],
+        );
+        Ok(Self {
+            rt,
+            config: config.into(),
+            program: program.into(),
+            params,
+            kv_cfg: KvConfig {
+                n_layers: l,
+                n_heads: h,
+                rank: r,
+                max_positions: c,
+                batch_slots: b,
+            },
+            batch_slots: b,
+        })
+    }
+
+    pub fn kv_config(&self) -> &KvConfig {
+        &self.kv_cfg
+    }
+
+    /// Serve a closed set of requests to completion through the batcher.
+    /// Returns completions (same order as input) and aggregate metrics.
+    pub fn serve_all(
+        &self,
+        requests: Vec<Request>,
+        policy: BatchPolicy,
+    ) -> Result<(Vec<Completion>, ServeMetrics)> {
+        let sw = Stopwatch::new();
+        let mut batcher = Batcher::new(policy);
+        let n = requests.len();
+        for r in requests {
+            batcher.push(r);
+        }
+        let mut completions: Vec<Option<Completion>> = (0..n).map(|_| None).collect();
+        let mut metrics = ServeMetrics::default();
+        let mut kv = KvManager::new(self.kv_cfg.clone());
+
+        while !batcher.is_empty() {
+            if !batcher.ready(Instant::now(), true) {
+                continue;
+            }
+            let batch = batcher.take_batch();
+            metrics.batches += 1;
+            let started = Instant::now();
+            // Allocate KV slots for the micro-batch.
+            let mut slots = Vec::with_capacity(batch.len());
+            for r in &batch {
+                slots.push(kv.allocate(r.id)?);
+            }
+            let rows = self.decode_batch(&batch, &mut kv, &slots)?;
+            for ((req, row), slot) in batch.iter().zip(rows).zip(&slots) {
+                metrics.generated_tokens += row.len().saturating_sub(req.prompt.len());
+                completions[req.id as usize] = Some(Completion {
+                    id: req.id,
+                    tokens: row,
+                    latency_s: started.elapsed().as_secs_f64()
+                        + started.duration_since(req.arrived).as_secs_f64(),
+                });
+                kv.free(*slot)?;
+            }
+            metrics.completed += batch.len();
+        }
+        metrics.wall_s = sw.elapsed_s();
+        metrics.kv_peak_bytes = kv.peak_bytes();
+        let out = completions.into_iter().map(|c| c.expect("request lost")).collect();
+        Ok((out, metrics))
+    }
+
+    /// One micro-batch of greedy decoding (prompt prefill token-by-token,
+    /// then generation).  Returns full token rows per request.
+    fn decode_batch(
+        &self,
+        batch: &[Request],
+        kv: &mut KvManager,
+        slots: &[usize],
+    ) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch_slots;
+        let c = self.kv_cfg.max_positions;
+        let v = self.rt.manifest().config(&self.config)?.dim("vocab")?;
+        let cache_shape = [
+            self.kv_cfg.n_layers, b, self.kv_cfg.n_heads, c, self.kv_cfg.rank,
+        ];
+        let mut kc = Tensor::zeros(&cache_shape);
+        let mut vc = Tensor::zeros(&cache_shape);
+        let mut rows: Vec<Vec<i32>> = (0..b)
+            .map(|i| batch.get(i).map(|r| r.prompt.clone()).unwrap_or_else(|| vec![0]))
+            .collect();
+        let want: Vec<usize> = (0..b)
+            .map(|i| batch.get(i).map(|r| (r.prompt.len() + r.max_new).min(c)).unwrap_or(1))
+            .collect();
+        let total = want.iter().copied().max().unwrap_or(1);
+
+        // §Perf: params are constant over the whole decode session — pay
+        // the host→literal marshal once instead of per step.
+        let param_values: Vec<Value> =
+            self.params.flat().iter().map(|&t| Value::F32(t.clone())).collect();
+        let prepared = self.rt.prepare(&param_values.iter().collect::<Vec<_>>())?;
+        drop(param_values);
+
+        for pos in 0..total {
+            let toks: Vec<i32> = rows.iter()
+                .map(|r| *r.get(pos).unwrap_or_else(|| r.last().unwrap_or(&0)))
+                .collect();
+            let args = vec![
+                Value::F32(kc),
+                Value::F32(vc),
+                Value::I32(TensorI::new(vec![b], toks)),
+                Value::I32(TensorI::scalar(pos as i32)),
+            ];
+            let mut outs = self.rt.run_prepared(&self.config, &self.program, &prepared, &args)?;
+            vc = outs.pop().unwrap().into_f32()?;
+            kc = outs.pop().unwrap().into_f32()?;
+            let logits = outs.pop().unwrap().into_f32()?;
+            for (i, row) in rows.iter_mut().enumerate() {
+                if i < batch.len() && pos < want[i] {
+                    kv.advance(slots[i])?;
+                }
+                if pos + 1 >= row.len() && row.len() < want[i] {
+                    let base = i * v;
+                    let mut best = 0usize;
+                    let mut bestv = f32::NEG_INFINITY;
+                    for j in 0..v {
+                        let x = logits.data()[base + j];
+                        if x > bestv {
+                            bestv = x;
+                            best = j;
+                        }
+                    }
+                    row.push(best as i32);
+                }
+            }
+        }
+        rows.truncate(batch.len());
+        Ok(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ops::init_params;
+    use std::time::Duration;
+
+    fn art() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    #[test]
+    fn serves_batch_of_requests() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let params = init_params(&rt, "tiny", 9).unwrap();
+        let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
+        let now = Instant::now();
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![1, 2, 3 + i as i32],
+                max_new: 5,
+                arrived: now,
+            })
+            .collect();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let (completions, metrics) = engine.serve_all(reqs, policy).unwrap();
+        assert_eq!(completions.len(), 3);
+        for (i, c) in completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+            assert_eq!(c.tokens.len(), 8); // 3 prompt + 5 new
+            assert_eq!(&c.tokens[..2], &[1, 2]);
+        }
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.generated_tokens, 15);
+        assert!(metrics.kv_peak_bytes > 0);
+        assert!(metrics.tokens_per_s() > 0.0);
+    }
+
+    #[test]
+    fn factorized_engine_kv_smaller() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let entry = rt.manifest().config("tiny").unwrap().clone();
+        let dense = init_params(&rt, "tiny", 9).unwrap();
+        let (fac, r) = crate::coordinator::ops::prune_to_ratio(&entry, &dense, 0.5, "clover")
+            .unwrap();
+        let dense_engine = Engine::new(&rt, "tiny", "decode_b8", dense).unwrap();
+        let fac_engine =
+            Engine::new(&rt, "tiny", &format!("decode_fac_r{r}_b8"), fac).unwrap();
+        let d = dense_engine.kv_config().bytes_per_token();
+        let f = fac_engine.kv_config().bytes_per_token();
+        assert_eq!(f * 2, d, "rank-8 cache should be half of rank-16");
+    }
+}

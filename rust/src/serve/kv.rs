@@ -1,0 +1,206 @@
+//! Paged KV-cache slot manager.
+//!
+//! The decode artifacts carry caches shaped `[L, B, H, C, r]` for a fixed
+//! micro-batch B; this manager owns slot allocation inside that batch,
+//! page-granular position accounting, and the bytes bookkeeping that
+//! demonstrates the paper's motivating claim: pruning head rank r shrinks
+//! KV memory proportionally.
+
+use anyhow::{bail, Result};
+
+/// Page size in token positions (allocation granularity).
+pub const PAGE_TOKENS: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub rank: usize,
+    pub max_positions: usize,
+    pub batch_slots: usize,
+}
+
+impl KvConfig {
+    /// Bytes per token position across all layers/heads (K + VO caches).
+    pub fn bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_heads * self.rank * 4
+    }
+
+    pub fn bytes_per_page(&self) -> usize {
+        self.bytes_per_token() * PAGE_TOKENS
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+struct Slot {
+    id: u64,
+    pages: usize,
+    positions: usize,
+}
+
+/// Allocates batch slots + pages; tracks live KV bytes.
+pub struct KvManager {
+    cfg: KvConfig,
+    slots: Vec<Option<Slot>>,
+    peak_bytes: usize,
+}
+
+impl KvManager {
+    pub fn new(cfg: KvConfig) -> Self {
+        let slots = vec![None; cfg.batch_slots];
+        Self { cfg, slots, peak_bytes: 0 }
+    }
+
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    /// Claim a slot for request `id`. Errors when the batch is full.
+    pub fn allocate(&mut self, id: u64) -> Result<usize> {
+        if self.slots.iter().flatten().any(|s| s.id == id) {
+            bail!("request {id} already has a slot");
+        }
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.is_none() {
+                *s = Some(Slot { id, pages: 0, positions: 0 });
+                return Ok(i);
+            }
+        }
+        bail!("KV batch full ({} slots)", self.slots.len())
+    }
+
+    /// Record one generated position for slot `slot`; grows pages on
+    /// boundary crossings. Errors past `max_positions`.
+    pub fn advance(&mut self, slot: usize) -> Result<()> {
+        let cfg_max = self.cfg.max_positions;
+        let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
+        if s.positions >= cfg_max {
+            bail!("slot {slot} exceeded max positions {cfg_max}");
+        }
+        s.positions += 1;
+        let need = s.positions.div_ceil(PAGE_TOKENS);
+        if need > s.pages {
+            s.pages = need;
+        }
+        let live = self.live_bytes();
+        if live > self.peak_bytes {
+            self.peak_bytes = live;
+        }
+        Ok(())
+    }
+
+    /// Free a slot (request finished / evicted).
+    pub fn free(&mut self, slot: usize) -> Result<u64> {
+        match self.slots.get_mut(slot).and_then(|s| s.take()) {
+            Some(s) => Ok(s.id),
+            None => bail!("double free of slot {slot}"),
+        }
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.slots.iter().flatten()
+            .map(|s| s.pages * self.cfg.bytes_per_page())
+            .sum()
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn positions(&self, slot: usize) -> usize {
+        self.slots[slot].as_ref().map_or(0, |s| s.positions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn cfg(rank: usize) -> KvConfig {
+        KvConfig { n_layers: 2, n_heads: 4, rank, max_positions: 64, batch_slots: 4 }
+    }
+
+    #[test]
+    fn rank_halves_bytes() {
+        assert_eq!(cfg(8).bytes_per_token() * 2, cfg(16).bytes_per_token());
+    }
+
+    #[test]
+    fn allocate_free_cycle() {
+        let mut kv = KvManager::new(cfg(8));
+        let a = kv.allocate(1).unwrap();
+        let b = kv.allocate(2).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(kv.free_slots(), 2);
+        assert_eq!(kv.free(a).unwrap(), 1);
+        assert_eq!(kv.free_slots(), 3);
+        assert!(kv.free(a).is_err(), "double free must fail");
+    }
+
+    #[test]
+    fn duplicate_request_rejected() {
+        let mut kv = KvManager::new(cfg(8));
+        kv.allocate(7).unwrap();
+        assert!(kv.allocate(7).is_err());
+    }
+
+    #[test]
+    fn batch_full() {
+        let mut kv = KvManager::new(cfg(8));
+        for i in 0..4 {
+            kv.allocate(i).unwrap();
+        }
+        assert!(kv.allocate(99).is_err());
+    }
+
+    #[test]
+    fn pages_grow_with_positions() {
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        for _ in 0..PAGE_TOKENS {
+            kv.advance(s).unwrap();
+        }
+        assert_eq!(kv.live_bytes(), kv.config().bytes_per_page());
+        kv.advance(s).unwrap();
+        assert_eq!(kv.live_bytes(), 2 * kv.config().bytes_per_page());
+    }
+
+    #[test]
+    fn max_positions_enforced() {
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        for _ in 0..64 {
+            kv.advance(s).unwrap();
+        }
+        assert!(kv.advance(s).is_err());
+    }
+
+    #[test]
+    fn allocator_never_leaks_property() {
+        prop("kv allocator conservation", 30, |rng| {
+            let mut kv = KvManager::new(cfg(8));
+            let mut live: Vec<usize> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..200 {
+                if rng.uniform() < 0.5 && kv.free_slots() > 0 {
+                    live.push(kv.allocate(next_id).map_err(|e| e.to_string())?);
+                    next_id += 1;
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let slot = live.swap_remove(i);
+                    kv.free(slot).map_err(|e| e.to_string())?;
+                }
+                if kv.free_slots() + live.len() != 4 {
+                    return Err("slot conservation violated".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

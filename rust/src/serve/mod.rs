@@ -1,0 +1,15 @@
+//! Serving layer: dynamic batching + paged KV-cache management + the
+//! batched greedy-decode engine over the KV-cache artifacts.
+//!
+//! This realizes the paper's motivation end-to-end: after CLOVER pruning to
+//! rank r, the decode path caches rank-r factor projections instead of
+//! full head dimensions, cutting KV memory by exactly r/d — measured and
+//! reported by [`engine::ServeMetrics`].
+
+pub mod batcher;
+pub mod engine;
+pub mod kv;
+
+pub use batcher::{BatchPolicy, Batcher, Request};
+pub use engine::{Completion, Engine, ServeMetrics};
+pub use kv::{KvConfig, KvManager, PAGE_TOKENS};

@@ -1,0 +1,361 @@
+//! Dense host-side tensors.
+//!
+//! The Rust side owns all model state (parameters, optimizer moments, KV
+//! caches) as plain row-major `f32`/`i32` buffers; the runtime marshals
+//! them to/from PJRT literals at the execute boundary.  This is a minimal
+//! substrate — just what the checkpoint format, the CLOVER transform, and
+//! the coordinator need — not a general ndarray library.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {:?} != data len {}", shape, data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// Identity matrix n×n.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// 2-D indexing.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        self.data[i * w + j] = v;
+    }
+
+    /// Slice along the leading axis: `self[i]` with one fewer dim.
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(self.ndim() >= 1 && i < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::new(self.shape[1..].to_vec(),
+                    self.data[i * inner..(i + 1) * inner].to_vec())
+    }
+
+    /// Write `src` into `self[i]` along the leading axis.
+    pub fn set_index0(&mut self, i: usize, src: &Tensor) {
+        let inner: usize = self.shape[1..].iter().product();
+        assert_eq!(src.shape(), &self.shape[1..]);
+        self.data[i * inner..(i + 1) * inner].copy_from_slice(src.data());
+    }
+
+    /// Stack tensors of identical shape along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("stack of zero tensors");
+        }
+        let inner_shape = parts[0].shape().to_vec();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].len());
+        for p in parts {
+            if p.shape() != inner_shape.as_slice() {
+                bail!("stack shape mismatch {:?} vs {:?}", p.shape(), inner_shape);
+            }
+            data.extend_from_slice(p.data());
+        }
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(&inner_shape);
+        Ok(Tensor::new(shape, data))
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(vec![n, m], out)
+    }
+
+    /// Column slice of a 2-D tensor: columns [lo, hi).
+    pub fn cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= n);
+        let w = hi - lo;
+        let mut out = Vec::with_capacity(m * w);
+        for i in 0..m {
+            out.extend_from_slice(&self.data[i * n + lo..i * n + hi]);
+        }
+        Tensor::new(vec![m, w], out)
+    }
+
+    /// Row slice of a 2-D tensor: rows [lo, hi).
+    pub fn rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let n = self.shape[1];
+        assert!(lo <= hi && hi <= self.shape[0]);
+        Tensor::new(vec![hi - lo, n], self.data[lo * n..hi * n].to_vec())
+    }
+
+    /// Frobenius / L2 norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// L2 norm of column j (2-D).
+    pub fn col_norm(&self, j: usize) -> f32 {
+        assert_eq!(self.ndim(), 2);
+        let (m, n) = (self.shape[0], self.shape[1]);
+        (0..m).map(|i| {
+            let v = self.data[i * n + j];
+            v * v
+        }).sum::<f32>().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(other.data.iter()).map(|(a, b)| a - b).collect();
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Row-major i32 tensor (token ids, positions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: i32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn item(&self) -> i32 {
+        assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+}
+
+/// A tensor of either dtype — what a program argument actually is.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(TensorI),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&TensorI> {
+        match self {
+            Value::I32(t) => Ok(t),
+            Value::F32(_) => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<TensorI> for Value {
+    fn from(t: TensorI) -> Self {
+        Value::I32(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_and_index() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        let r = t.clone().reshape(&[3, 2]).unwrap();
+        assert_eq!(r.at2(2, 1), 6.0);
+        assert!(t.clone().reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn cols_rows_slices() {
+        let t = Tensor::new(vec![2, 4], (0..8).map(|x| x as f32).collect());
+        let c = t.cols(1, 3);
+        assert_eq!(c.shape(), &[2, 2]);
+        assert_eq!(c.data(), &[1., 2., 5., 6.]);
+        let r = t.rows(1, 2);
+        assert_eq!(r.data(), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    fn stack_and_index0() {
+        let a = Tensor::new(vec![2], vec![1., 2.]);
+        let b = Tensor::new(vec![2], vec![3., 4.]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.index0(1), b);
+        let mut s2 = s.clone();
+        s2.set_index0(0, &b);
+        assert_eq!(s2.index0(0), b);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(vec![2, 2], vec![3., 0., 4., 0.]);
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+        assert!((t.col_norm(0) - 5.0).abs() < 1e-6);
+        assert_eq!(t.col_norm(1), 0.0);
+    }
+
+    #[test]
+    fn eye_identity() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.at2(0, 0), 1.0);
+        assert_eq!(i.at2(0, 1), 0.0);
+        assert_eq!(i.len(), 9);
+    }
+}

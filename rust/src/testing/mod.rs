@@ -1,0 +1,72 @@
+//! Minimal in-repo property-testing harness.
+//!
+//! The vendored crate set has no `proptest`/`quickcheck`, so this provides
+//! the 10% we need: run a predicate over many deterministically-seeded
+//! random cases and report the *failing seed* so a regression can be
+//! replayed as a one-liner.  Used throughout `#[cfg(test)]` modules for
+//! the linalg / clover / tokenizer / serve invariants.
+
+use crate::util::rng::Rng;
+
+/// Run `f` for `iters` seeds; panic with the failing seed + message.
+///
+/// `f` returns `Err(msg)` to fail a case.  Panics inside `f` are *not*
+/// caught — prefer returning Err so the seed is reported.
+pub fn prop<F>(name: &str, iters: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..iters {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Relative Frobenius error ‖a-b‖/max(‖b‖, eps).
+pub fn rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt();
+    let den: f32 = b.iter().map(|y| y * y).sum::<f32>().sqrt().max(1e-12);
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_passes() {
+        prop("trivial", 10, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed 0")]
+    fn prop_reports_seed() {
+        prop("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_and_rel() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(rel_err(&[1.0, 0.0], &[1.0, 0.0]) < 1e-9);
+    }
+}

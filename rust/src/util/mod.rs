@@ -1,0 +1,120 @@
+//! Small shared utilities: deterministic RNG, timing, logging.
+//!
+//! The crate deliberately avoids external dependencies beyond `xla` +
+//! `anyhow` (this environment vendors only the xla crate's closure), so the
+//! usual suspects (rand, log, indicatif) are replaced by these few dozen
+//! lines.
+
+pub mod rng;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch for coarse phase timing in the coordinator and the
+/// bench harnesses.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Log level for [`log`]; controlled by the `CLOVER_LOG` env var
+/// (`debug`/`info`/`warn`, default `info`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+pub fn log_enabled(level: Level) -> bool {
+    let min = match std::env::var("CLOVER_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        _ => Level::Info,
+    };
+    level >= min
+}
+
+/// Timestamped stderr logger (stdout is reserved for report tables).
+pub fn log(level: Level, msg: &str) {
+    if !log_enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+    };
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    eprintln!("[{tag} {t:.3}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Debug, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log($crate::util::Level::Warn, &format!($($arg)*)) };
+}
+
+/// Format a byte count for human-readable KV-cache reports.
+pub fn human_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        assert!(sw.elapsed_s() >= 0.0);
+    }
+}
