@@ -68,9 +68,7 @@ fn main() -> Result<()> {
     // 5. Serve: batched KV-cache decode, dense vs pruned.
     let now = std::time::Instant::now();
     let mk_reqs = || -> Vec<Request> {
-        (0..8u64).map(|id| Request {
-            id, prompt: vec![3, 5, 7, 11], max_new: 16, arrived: now,
-        }).collect()
+        (0..8u64).map(|id| Request::greedy(id, vec![3, 5, 7, 11], 16, now)).collect()
     };
     let policy = BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(1) };
     let dense_engine = Engine::new(&rt, &preset, "decode_b8", dense)?;

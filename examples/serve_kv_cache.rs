@@ -1,7 +1,8 @@
 //! KV-cache serving demo: the paper's motivating memory argument made
-//! concrete.  Serves the same batched workload through the dense decode
-//! path and through CLOVER-pruned decode paths at several ranks, reporting
-//! throughput, mean latency, and peak KV bytes for each.
+//! concrete.  Serves the same mixed-length workload through the dense
+//! decode path and through CLOVER-pruned decode paths at several ranks
+//! under the continuous-batching scheduler, reporting throughput, decode
+//! steps, TTFT, tail latency, and peak KV bytes for each.
 //!
 //! ```sh
 //! cargo run --release --example serve_kv_cache [requests] [max_new]
@@ -27,46 +28,48 @@ fn main() -> Result<()> {
 
     let mut rng = clover::util::rng::Rng::new(7);
     let now = std::time::Instant::now();
-    let mk_reqs = |rng: &mut clover::util::rng::Rng| -> Vec<Request> {
-        (0..n_requests as u64)
-            .map(|id| Request {
-                id,
-                prompt: (0..6).map(|_| rng.below(vocab) as i32).collect(),
-                max_new,
-                arrived: now,
-            })
-            .collect()
-    };
+    // One fixed mixed-length workload, served identically by every engine
+    // so the table compares pruning, not request luck.  Lengths span
+    // [2, max_new] so requests finish at different steps — the regime
+    // where slot-level admission pays off.
+    let requests: Vec<Request> = (0..n_requests as u64)
+        .map(|id| {
+            let prompt = (0..6).map(|_| rng.below(vocab) as i32).collect();
+            let n = 2 + rng.below(max_new.saturating_sub(1).max(1));
+            Request::greedy(id, prompt, n, now)
+        })
+        .collect();
     let policy = BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(2) };
 
     let mut table = Table::new(
-        &format!("KV-cache serving: {n_requests} requests × {max_new} new tokens"),
-        &["engine", "rank", "tok/s", "mean_latency_s", "peak_KV", "KV/token"],
+        &format!("KV-cache serving: {n_requests} requests × ≤{max_new} new tokens (continuous batching)"),
+        &["engine", "rank", "tok/s", "steps", "ttft_p50_s", "lat_p50_s", "lat_p99_s", "peak_KV", "KV/token"],
     );
+    let (n_layers, n_heads) = (entry.dim("n_layers")?, entry.dim("n_heads")?);
+    let mut push_row = |name: String, rank: usize, m: &clover::serve::ServeMetrics| {
+        table.row(vec![
+            name,
+            rank.to_string(),
+            format!("{:.1}", m.tokens_per_s()),
+            m.decode_steps.to_string(),
+            format!("{:.3}", m.ttft_p50_s),
+            format!("{:.3}", m.latency_p50_s),
+            format!("{:.3}", m.latency_p99_s),
+            human_bytes(m.kv_peak_bytes),
+            human_bytes(clover::clover::analysis::kv_bytes_per_token(n_layers, n_heads, rank)),
+        ]);
+    };
 
-    let (_, m) = Engine::new(&rt, preset, "decode_b8", dense.clone())?
-        .serve_all(mk_reqs(&mut rng), policy.clone())?;
     let dh = entry.dim("d_head")?;
-    table.row(vec![
-        "dense".into(), dh.to_string(), format!("{:.1}", m.tokens_per_s()),
-        format!("{:.3}", m.wall_s / n_requests as f64),
-        human_bytes(m.kv_peak_bytes),
-        human_bytes(clover::clover::analysis::kv_bytes_per_token(
-            entry.dim("n_layers")?, entry.dim("n_heads")?, dh)),
-    ]);
+    let (_, m) = Engine::new(&rt, preset, "decode_b8", dense.clone())?
+        .serve_all(requests.clone(), policy.clone())?;
+    push_row("dense".into(), dh, &m);
 
     for ratio in [0.25, 0.5, 0.75] {
         let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
         let engine = Engine::new(&rt, preset, &format!("decode_fac_r{r}_b8"), fac)?;
-        let (_, m) = engine.serve_all(mk_reqs(&mut rng), policy.clone())?;
-        table.row(vec![
-            format!("clover {:.0}%", ratio * 100.0), r.to_string(),
-            format!("{:.1}", m.tokens_per_s()),
-            format!("{:.3}", m.wall_s / n_requests as f64),
-            human_bytes(m.kv_peak_bytes),
-            human_bytes(clover::clover::analysis::kv_bytes_per_token(
-                entry.dim("n_layers")?, entry.dim("n_heads")?, r)),
-        ]);
+        let (_, m) = engine.serve_all(requests.clone(), policy.clone())?;
+        push_row(format!("clover {:.0}%", ratio * 100.0), r, &m);
     }
     table.emit("serve_kv_cache")
 }

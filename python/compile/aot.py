@@ -167,15 +167,15 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
         def mk_decode(db):
             def decode_fn(*flat):
                 params = M.params_from_flat(dense, flat[:-4])
-                kc, vc, toks, pos = flat[-4:]
-                return M.decode_step_dense(cfg, params, kc, vc, toks, pos)
+                kc, vc, toks, positions = flat[-4:]
+                return M.decode_step_dense(cfg, params, kc, vc, toks, positions)
             return decode_fn
 
         cache = (cfg.n_layers, db, cfg.n_heads, t, cfg.d_head)
         progs.append(Program(
             f"decode_b{db}", mk_decode(db),
             dense_sig + [("k_cache", cache, "float32"), ("v_cache", cache, "float32"),
-                         ("tokens", (db,), "int32"), ("pos", (), "int32")],
+                         ("tokens", (db,), "int32"), ("positions", (db,), "int32")],
             ["logits", "k_cache", "v_cache"], golden=(db == 1)))
 
     # ---- PEFT train steps (adapters over frozen dense base) ----------------
@@ -220,8 +220,8 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
 
             def decode_fac_fn(*flat):
                 params = M.params_from_flat(fac, flat[:-4])
-                kc, voc, toks, pos = flat[-4:]
-                return M.decode_step_fac(cfg, r, params, kc, voc, toks, pos)
+                kc, voc, toks, positions = flat[-4:]
+                return M.decode_step_fac(cfg, r, params, kc, voc, toks, positions)
 
             return fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn
 
@@ -255,7 +255,7 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
             progs.append(Program(
                 f"decode_fac_r{r}_b{db}", mk_decode_fac(db, fac, decode_fac_fn),
                 fac_sig + [("k_cache", cache, "float32"), ("vo_cache", cache, "float32"),
-                           ("tokens", (db,), "int32"), ("pos", (), "int32")],
+                           ("tokens", (db,), "int32"), ("positions", (db,), "int32")],
                 ["logits", "k_cache", "vo_cache"]))
 
     # ---- CLOVER fine-tuning config (full rank + factorized MLP.Up) ----------
@@ -383,6 +383,8 @@ def _golden_inputs(prog: Program, rng: np.random.Generator):
         if dt == "int32":
             if name in ("step", "pos"):
                 args.append(np.asarray(0, np.int32))
+            elif name == "positions":
+                args.append(np.zeros(shape, np.int32))
             elif name == "seed":
                 args.append(np.asarray(42, np.int32))
             else:

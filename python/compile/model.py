@@ -458,10 +458,13 @@ def peft_forward(cfg: ModelConfig, kind: str, params: Params, ad: Params, tokens
 # --------------------------------------------------------------------------
 
 
-def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens, pos):
+def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens, positions):
     """One autoregressive step, dense attention.
 
-    k_cache/v_cache [L, B, H, C, dh]; tokens [B] int32; pos [] int32.
+    k_cache/v_cache [L, B, H, C, dh]; tokens [B] int32; positions [B]
+    int32 — *per-lane* cursors, so a continuous-batching scheduler can run
+    lanes at different depths in one fused step (a freed lane restarts at
+    position 0 while its neighbors keep decoding).
     Returns (logits [B, V], k_cache', v_cache').  The KV cache grows with
     full head dimension dh — the memory-bound baseline the paper targets.
     """
@@ -469,9 +472,14 @@ def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens
     h_, dh = cfg.n_heads, cfg.d_head
     c = k_cache.shape[3]
     scale = 1.0 / float(dh) ** 0.5
-    x = params["tok_emb"][tokens] + params["pos_emb"][pos]  # [B, D]
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]  # [B, D]
 
     stacked = {n: params[n] for n in _LAYER_DENSE}
+    # Per-lane scatter/mask: lane i writes its own positions[i] and attends
+    # to its own prefix only.  The write is an indexed scatter (not a
+    # select over the full cache) so the per-step update stays O(B·H·dh).
+    lanes = jnp.arange(b)
+    mask = jnp.arange(c)[None, None, :] <= positions[:, None, None]  # [B, 1, C]
 
     def body(x, inputs):
         lp, kc, vc = inputs  # kc/vc [B, H, C, dh]
@@ -479,10 +487,9 @@ def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens
         q = (hcur @ lp["wq"]).reshape(b, h_, dh)
         k = (hcur @ lp["wk"]).reshape(b, h_, dh)
         v = (hcur @ lp["wv"]).reshape(b, h_, dh)
-        kc = jax.lax.dynamic_update_slice(kc, k[:, :, None, :], (0, 0, pos, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v[:, :, None, :], (0, 0, pos, 0))
+        kc = kc.at[lanes, :, positions, :].set(k)
+        vc = vc.at[lanes, :, positions, :].set(v)
         scores = jnp.einsum("bhd,bhcd->bhc", q, kc) * scale
-        mask = jnp.arange(c)[None, None, :] <= pos
         scores = jnp.where(mask, scores, ref.NEG_INF)
         attn = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhc,bhcd->bhd", attn, vc).reshape(b, h_ * dh)
@@ -496,21 +503,24 @@ def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens
     return x @ params["tok_emb"].T, kc2, vc2
 
 
-def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, pos):
+def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, positions):
     """One autoregressive step, CLOVER-factorized attention.
 
     k_cache/vo_cache [L, B, H, C, r] — the caches hold the *rank-r factor
     space* projections (X V_qk and X U_vo S_vo), so pruning to rank r < dh
     shrinks KV memory by exactly r/dh: the paper's KV-cache motivation
-    realized end-to-end.
+    realized end-to-end.  `positions` is [B] int32, per-lane (see
+    decode_step_dense).
     """
     b = tokens.shape[0]
     h_ = cfg.n_heads
     c = k_cache.shape[3]
     scale = 1.0 / float(cfg.d_head) ** 0.5
-    x = params["tok_emb"][tokens] + params["pos_emb"][pos]
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]
     layer_names = _LAYER_FAC_UD if "u_ud" in params else _LAYER_FAC
     stacked = {n: params[n] for n in layer_names}
+    lanes = jnp.arange(b)
+    mask = jnp.arange(c)[None, None, :] <= positions[:, None, None]  # [B, 1, C]
 
     def body(x, inputs):
         lp, kc, voc = inputs  # [B, H, C, r]
@@ -520,10 +530,9 @@ def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache,
         k = jnp.einsum("bd,hdr->bhr", hcur, lp["v_qk"])
         vo = jnp.einsum("bd,hdr->bhr", hcur, lp["u_vo"])
         vo = jnp.einsum("bhr,hrk->bhk", vo, lp["s_vo"])
-        kc = jax.lax.dynamic_update_slice(kc, k[:, :, None, :], (0, 0, pos, 0))
-        voc = jax.lax.dynamic_update_slice(voc, vo[:, :, None, :], (0, 0, pos, 0))
+        kc = kc.at[lanes, :, positions, :].set(k)
+        voc = voc.at[lanes, :, positions, :].set(vo)
         scores = jnp.einsum("bhr,bhcr->bhc", q, kc) * scale
-        mask = jnp.arange(c)[None, None, :] <= pos
         scores = jnp.where(mask, scores, ref.NEG_INF)
         attn = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhc,bhcr->bhr", attn, voc)

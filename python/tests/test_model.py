@@ -99,10 +99,43 @@ def test_decode_matches_forward(params):
     outs = []
     for i in range(8):
         lg, kc, vc = M.decode_step_dense(CFG, params, kc, vc, toks[:, i],
-                                         jnp.asarray(i, jnp.int32))
+                                         jnp.full((1,), i, jnp.int32))
         outs.append(lg)
     got = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(got, logits_full, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_per_lane_positions(params):
+    """Lanes decode independently: running a sequence in lane 0 while lane 1
+    restarts at position 0 mid-stream must reproduce the single-lane logits
+    — the invariant the continuous-batching scheduler relies on."""
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 6)), jnp.int32)
+    c = CFG.seq_len
+    # Reference: each row decoded alone in a 1-lane cache.
+    ref_logits = []
+    for row in range(2):
+        kc = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, c, CFG.d_head), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        outs = []
+        for i in range(6):
+            lg, kc, vc = M.decode_step_dense(CFG, params, kc, vc, toks[row:row + 1, i],
+                                             jnp.full((1,), i, jnp.int32))
+            outs.append(lg[0])
+        ref_logits.append(outs)
+    # Skewed schedule: lane 0 runs positions 0..5; lane 1 idles (re-feeding
+    # position 0) for 2 steps, then runs 0..3 — as if a new request had been
+    # admitted into a freed lane mid-flight.
+    kc = jnp.zeros((CFG.n_layers, 2, CFG.n_heads, c, CFG.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    for i in range(6):
+        j = max(i - 2, 0)
+        step_toks = jnp.stack([toks[0, i], toks[1, j]])
+        step_pos = jnp.asarray([i, j], jnp.int32)
+        lg, kc, vc = M.decode_step_dense(CFG, params, kc, vc, step_toks, step_pos)
+        np.testing.assert_allclose(lg[0], ref_logits[0][i], rtol=1e-4, atol=1e-4)
+        if i >= 2:
+            np.testing.assert_allclose(lg[1], ref_logits[1][j], rtol=1e-4, atol=1e-4)
 
 
 def test_decode_fac_matches_forward_fac(params):
@@ -116,7 +149,7 @@ def test_decode_fac_matches_forward_fac(params):
     outs = []
     for i in range(6):
         lg, kc, voc = M.decode_step_fac(CFG, r, fp, kc, voc, toks[:, i],
-                                        jnp.asarray(i, jnp.int32))
+                                        jnp.full((2,), i, jnp.int32))
         outs.append(lg)
     got = jnp.stack(outs, axis=1)
     np.testing.assert_allclose(got, logits_full, rtol=1e-4, atol=1e-4)

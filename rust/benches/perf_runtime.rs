@@ -97,11 +97,13 @@ fn main() -> Result<()> {
         let sig = rt.manifest().config(preset)?.program(&prog)?.clone();
         let cache_shape = sig.inputs.iter().find(|a| a.name.ends_with("_cache")).unwrap()
             .shape.clone();
+        let toks = Value::I32(TensorI::new(vec![8], vec![1; 8]));
+        let poss = Value::I32(TensorI::zeros(&[8]));
         let mut args: Vec<Value> = params.flat().iter().map(|&x| Value::F32(x.clone())).collect();
         args.push(Value::F32(Tensor::zeros(&cache_shape)));
         args.push(Value::F32(Tensor::zeros(&cache_shape)));
-        args.push(Value::I32(TensorI::new(vec![8], vec![1; 8])));
-        args.push(Value::I32(TensorI::scalar(0)));
+        args.push(toks.clone());
+        args.push(poss.clone());
         rt.run(preset, &prog, &args)?;
         rt.reset_stats();
         let n = 30;
@@ -117,15 +119,15 @@ fn main() -> Result<()> {
             100.0 * st.execute_s / dt, 100.0 * st.marshal_s / dt,
             (n * 8) as f64 / dt
         );
-        // §Perf optimization: params marshalled once (run_prepared).
+        // §Perf optimization 1: params marshalled once (run_prepared).
         let param_values: Vec<Value> =
             params.flat().iter().map(|&x| Value::F32(x.clone())).collect();
         let prepared = rt.prepare(&param_values.iter().collect::<Vec<_>>())?;
         let rest = vec![
             Value::F32(Tensor::zeros(&cache_shape)),
             Value::F32(Tensor::zeros(&cache_shape)),
-            Value::I32(TensorI::new(vec![8], vec![1; 8])),
-            Value::I32(TensorI::scalar(0)),
+            toks.clone(),
+            poss.clone(),
         ];
         rt.run_prepared(preset, &prog, &prepared, &rest)?;
         rt.reset_stats();
@@ -140,6 +142,24 @@ fn main() -> Result<()> {
             dt2 / n as f64 * 1e3,
             100.0 * st.execute_s / dt2, 100.0 * st.marshal_s / dt2,
             100.0 * (dt2 - dt) / dt
+        );
+        // §Perf optimization 2: caches carried literal-side (DecodeSession)
+        // — the per-step conversions shrink to tokens/positions + logits.
+        let mut dec = clover::runtime::DecodeSession::new(&rt, preset, &prog, &param_values)?;
+        let step_args = vec![toks, poss];
+        dec.step(&step_args)?;
+        rt.reset_stats();
+        let t0 = std::time::Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(dec.step(&step_args)?);
+        }
+        let dt3 = t0.elapsed().as_secs_f64();
+        let st = rt.stats();
+        println!(
+            "{label} (decode session) : {:7.2} ms/step  (execute {:5.1}%  marshal {:5.1}%)  {:+.1}% vs baseline",
+            dt3 / n as f64 * 1e3,
+            100.0 * st.execute_s / dt3, 100.0 * st.marshal_s / dt3,
+            100.0 * (dt3 - dt) / dt
         );
     }
     Ok(())

@@ -1,13 +1,31 @@
 //! Perf bench: serving-layer components in isolation (batcher admission,
-//! KV allocator churn) plus the end-to-end engine throughput at several
-//! pruning ranks.
+//! KV allocator churn) plus the end-to-end engine at several pruning
+//! ranks, run both ways — the old batch-to-completion wave schedule vs
+//! the continuous-batching scheduler — so the step/latency gap slot-level
+//! admission buys is measured, not asserted.
+//!
+//! Emits `BENCH_serve.json` (tokens/s, TTFT, p50/p99 latency, decode
+//! steps, KV peak bytes, marshal/execute split per engine×mode) so the
+//! perf trajectory is machine-readable across PRs.
 
 use anyhow::Result;
+use clover::config::json::{self, Json};
 use clover::coordinator::ops;
 use clover::runtime::Runtime;
-use clover::serve::{BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request};
+use clover::serve::{Admission, BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request};
 use clover::util::human_bytes;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
+
+const BATCH_SLOTS: usize = 8;
+/// 2× the slot count, mixed lengths — the continuous-batching regime.
+const N_REQUESTS: u64 = 16;
+
+fn mk_requests(now: Instant) -> Vec<Request> {
+    (0..N_REQUESTS)
+        .map(|id| Request::greedy(id, vec![2, 3], 4 + (id as usize % 4) * 6, now))
+        .collect()
+}
 
 fn main() -> Result<()> {
     println!("== perf_serve ==");
@@ -20,7 +38,7 @@ fn main() -> Result<()> {
         let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::ZERO });
         let mut admitted = 0usize;
         for i in 0..n {
-            b.push(Request { id: i, prompt: vec![1], max_new: 1, arrived: now });
+            b.push(Request::greedy(i, vec![1], 1, now));
             if b.ready(now, false) {
                 admitted += b.take_batch().len();
             }
@@ -47,25 +65,83 @@ fn main() -> Result<()> {
         println!("kv manager : {:.2}M alloc-advance8-free/s", n as f64 / dt / 1e6);
     }
 
-    // End-to-end engine at dense vs pruned ranks.
+    // End-to-end: dense vs pruned ranks, wave baseline vs continuous.
     let rt = Runtime::new("artifacts")?;
     let preset = "tiny";
     let entry = rt.manifest().config(preset)?.clone();
     let dense = ops::init_params(&rt, preset, 1)?;
     let now = Instant::now();
-    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
-    let mk = || -> Vec<Request> {
-        (0..8u64).map(|id| Request { id, prompt: vec![2, 3], max_new: 16, arrived: now }).collect()
+    let policy = BatchPolicy { max_batch: BATCH_SLOTS, max_wait: Duration::from_millis(1) };
+    let d_head = entry.dim("d_head")?;
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut run = |name: &str, rank: usize, engine: &Engine, mode: Admission| -> Result<usize> {
+        // Warm the executable so compile time doesn't pollute the split.
+        engine.serve_with(mk_requests(now), policy.clone(), mode)?;
+        rt.reset_stats();
+        let (_, m) = engine.serve_with(mk_requests(now), policy.clone(), mode)?;
+        let st = rt.stats();
+        let mode_s = match mode {
+            Admission::Continuous => "continuous",
+            Admission::WaveToCompletion => "wave",
+        };
+        println!(
+            "engine {name:<6} [{mode_s:<10}]: {:6.1} tok/s  {:3} steps  ttft p50 {:.3}s  lat p50/p99 {:.3}/{:.3}s  peak KV {}  (marshal {:4.1}%  execute {:4.1}%)",
+            m.tokens_per_s(), m.decode_steps, m.ttft_p50_s,
+            m.latency_p50_s, m.latency_p99_s, human_bytes(m.kv_peak_bytes),
+            100.0 * st.marshal_s / m.wall_s, 100.0 * st.execute_s / m.wall_s,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o.insert("rank".to_string(), Json::Num(rank as f64));
+        o.insert("mode".to_string(), Json::Str(mode_s.to_string()));
+        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
+        o.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
+        o.insert("admissions".to_string(), Json::Num(m.admissions as f64));
+        o.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
+        o.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
+        o.insert("latency_p50_s".to_string(), Json::Num(m.latency_p50_s));
+        o.insert("latency_p99_s".to_string(), Json::Num(m.latency_p99_s));
+        o.insert("kv_peak_bytes".to_string(), Json::Num(m.kv_peak_bytes as f64));
+        o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+        o.insert("marshal_s".to_string(), Json::Num(st.marshal_s));
+        o.insert("execute_s".to_string(), Json::Num(st.execute_s));
+        results.push(Json::Obj(o));
+        Ok(m.decode_steps)
     };
-    let (_, m) = Engine::new(&rt, preset, "decode_b8", dense.clone())?.serve_all(mk(), policy.clone())?;
-    println!("engine dense : {:6.1} tok/s  peak KV {}", m.tokens_per_s(),
-             human_bytes(m.kv_peak_bytes));
+
+    let mut engines: Vec<(String, usize, Engine)> = Vec::new();
+    engines.push((
+        "dense".to_string(),
+        d_head,
+        Engine::new(&rt, preset, &format!("decode_b{BATCH_SLOTS}"), dense.clone())?,
+    ));
     for ratio in [0.5, 0.75] {
         let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
-        let engine = Engine::new(&rt, preset, &format!("decode_fac_r{r}_b8"), fac)?;
-        let (_, m) = engine.serve_all(mk(), policy.clone())?;
-        println!("engine r={r:<3}: {:6.1} tok/s  peak KV {}", m.tokens_per_s(),
-                 human_bytes(m.kv_peak_bytes));
+        engines.push((
+            format!("r={r}"),
+            r,
+            Engine::new(&rt, preset, &format!("decode_fac_r{r}_b{BATCH_SLOTS}"), fac)?,
+        ));
     }
+
+    for (name, rank, engine) in &engines {
+        let wave = run(name, *rank, engine, Admission::WaveToCompletion)?;
+        let cont = run(name, *rank, engine, Admission::Continuous)?;
+        println!(
+            "engine {name:<6} continuous batching saves {} of {wave} decode steps ({:.0}%)",
+            wave.saturating_sub(cont),
+            100.0 * wave.saturating_sub(cont) as f64 / wave.max(1) as f64,
+        );
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_serve".to_string()));
+    root.insert("preset".to_string(), Json::Str(preset.to_string()));
+    root.insert("requests".to_string(), Json::Num(N_REQUESTS as f64));
+    root.insert("batch_slots".to_string(), Json::Num(BATCH_SLOTS as f64));
+    root.insert("engines".to_string(), Json::Arr(results));
+    std::fs::write("BENCH_serve.json", json::to_string(&Json::Obj(root)))?;
+    println!("wrote BENCH_serve.json");
     Ok(())
 }

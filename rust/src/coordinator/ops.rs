@@ -175,7 +175,9 @@ pub fn greedy_decode(
         args.push(Value::F32(kc));
         args.push(Value::F32(vc));
         args.push(Value::I32(TensorI::new(vec![b], toks)));
-        args.push(Value::I32(TensorI::scalar(pos as i32)));
+        // Decode artifacts take per-lane position vectors; this lockstep
+        // path runs every lane at the same depth.
+        args.push(Value::I32(TensorI::new(vec![b], vec![pos as i32; b])));
         let mut outs = rt.run(config, program, &args)?;
         let vc_new = outs.pop().unwrap().into_f32()?;
         let kc_new = outs.pop().unwrap().into_f32()?;
@@ -186,16 +188,7 @@ pub fn greedy_decode(
             if pos + 1 >= row.len() && row.len() < total {
                 // past the prompt: append argmax
                 let base = i * v;
-                let mut best = 0usize;
-                let mut bestv = f32::NEG_INFINITY;
-                for j in 0..v {
-                    let x = logits.data()[base + j];
-                    if x > bestv {
-                        bestv = x;
-                        best = j;
-                    }
-                }
-                row.push(best as i32);
+                row.push(crate::util::argmax(&logits.data()[base..base + v]) as i32);
             }
         }
     }

@@ -6,8 +6,10 @@
 //! * **Layer 3 (this crate)** — coordinator/framework: config system, data
 //!   pipeline, tokenizer, training & eval loops, the CLOVER checkpoint
 //!   transform + pruning engine (with its own linalg substrate), PEFT
-//!   adapter initialization/accounting, a KV-cache serving demo, and the
-//!   experiment runners that regenerate every table and figure.
+//!   adapter initialization/accounting, a continuous-batching serving
+//!   subsystem (slot-level scheduler, per-request sampling and latency
+//!   accounting, paged KV bookkeeping — see [`serve`]), and the experiment
+//!   runners that regenerate every table and figure.
 //! * **Layer 2** — JAX programs (`python/compile/`), AOT-lowered once to
 //!   HLO text under `artifacts/`.
 //! * **Layer 1** — Pallas kernels for the fused factorized-attention hot

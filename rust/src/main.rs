@@ -9,7 +9,7 @@
 //! clover finetune  --ckpt pruned.clvr [--mode s|attn] [--steps N]
 //! clover eval      --ckpt x.clvr            # perplexity
 //! clover spectra   [--all-layers]           # Fig 2 curves
-//! clover serve     --ckpt x.clvr [--requests N]
+//! clover serve     --ckpt x.clvr [--requests N] [--temperature T] [--top-k K] [--stop-token ID]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
 //! ```
@@ -22,7 +22,7 @@ use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
 use clover::model::{load_params, save_params, Checkpoint};
 use clover::runtime::{golden, Runtime};
-use clover::serve::{BatchPolicy, Engine, Request};
+use clover::serve::{BatchPolicy, Engine, Request, SamplingParams};
 use clover::util::human_bytes;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
@@ -242,12 +242,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let now = std::time::Instant::now();
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
     let vocab = entry.dim("vocab")?;
+    // Per-request decode policy from flags (greedy unless --temperature).
+    let sampling = SamplingParams {
+        temperature: args.f64_or("temperature", 0.0)? as f32,
+        top_k: args.usize_or("top-k", 0)?,
+        seed: cfg.train.seed,
+        stop_token: args.get("stop-token").map(|v| v.parse::<i32>()).transpose()?,
+    };
     let reqs: Vec<Request> = (0..n_requests as u64)
         .map(|id| Request {
             id,
             prompt: (0..4).map(|_| rng.below(vocab) as i32).collect(),
             max_new: cfg.serve.max_new_tokens,
             arrived: now,
+            sampling: sampling.clone(),
         })
         .collect();
     let policy = BatchPolicy {
@@ -256,12 +264,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (completions, metrics) = engine.serve_all(reqs, policy)?;
     println!(
-        "served {} requests | {} tokens | {:.1} tok/s | {} batches | peak KV {}",
+        "served {} requests | {} generated tokens | {:.1} tok/s | {} decode steps | {} admissions | peak KV {}",
         metrics.completed,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
-        metrics.batches,
+        metrics.decode_steps,
+        metrics.admissions,
         human_bytes(metrics.kv_peak_bytes),
+    );
+    println!(
+        "ttft p50 {:.3}s p99 {:.3}s | latency p50 {:.3}s p99 {:.3}s",
+        metrics.ttft_p50_s, metrics.ttft_p99_s, metrics.latency_p50_s, metrics.latency_p99_s,
     );
     let mean_latency: f64 =
         completions.iter().map(|c| c.latency_s).sum::<f64>() / completions.len() as f64;

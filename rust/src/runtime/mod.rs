@@ -7,6 +7,14 @@
 //! `(config, program)`; HLO parsing + XLA compilation happen at most once
 //! per process.
 //!
+//! Every run path funnels through one private execute core
+//! ([`Runtime::execute_core`]): argument literals in, output literals out.
+//! The public entry points differ only in *when* host values are converted
+//! to literals — per call ([`Runtime::run`]), params-once
+//! ([`Runtime::run_prepared`]), or carried across a whole decode loop
+//! ([`DecodeSession`], which keeps the KV caches literal-side so the
+//! per-step marshal traffic is just tokens/positions in and logits out).
+//!
 //! Threading: `Runtime` is deliberately `!Sync` (the underlying C handles
 //! have no documented thread-safety story).  The serving layer owns one
 //! `Runtime` on a dedicated executor thread and feeds it through channels
@@ -21,7 +29,7 @@ use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::model::manifest::{Manifest, ProgramSig};
-use crate::tensor::Value;
+use crate::tensor::{Tensor, Value};
 use crate::util::Stopwatch;
 
 pub use literal::{from_literal, to_literal};
@@ -101,48 +109,28 @@ impl Runtime {
         Ok(rc)
     }
 
-    /// Execute `config/program` on host values, returning host values.
+    /// The single execute core every run path shares: argument literals in,
+    /// output literals out (the `return_tuple=True` root already split).
     ///
-    /// Arguments are shape- and dtype-checked against the manifest
-    /// signature before anything touches the PJRT boundary, so mismatches
-    /// fail with names instead of an opaque XLA error.
-    pub fn run(&self, config: &str, program: &str, args: &[Value]) -> Result<Vec<Value>> {
-        let sig = self.manifest.config(config)?.program(program)?.clone();
-        self.run_with_sig(config, program, &sig, args)
-    }
-
-    fn run_with_sig(
+    /// Accounts `executes`/`execute_s`, and attributes the device→host
+    /// result fetch + untuple to `marshal_s`; host-value *conversions*
+    /// (`to_literal`/`from_literal`) are timed by the callers, since that
+    /// is exactly where the run paths differ.
+    fn execute_core(
         &self,
         config: &str,
         program: &str,
         sig: &ProgramSig,
-        args: &[Value],
-    ) -> Result<Vec<Value>> {
-        if args.len() != sig.inputs.len() {
-            bail!(
-                "{config}/{program}: expected {} args, got {}",
-                sig.inputs.len(),
-                args.len()
-            );
-        }
-        for (v, spec) in args.iter().zip(&sig.inputs) {
-            literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
-                .with_context(|| format!("{config}/{program}"))?;
-        }
+        lits: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
         let exe = self.executable(config, program)?;
-
-        let sw = Stopwatch::new();
-        let lits: Vec<xla::Literal> =
-            args.iter().map(literal::to_literal).collect::<Result<_>>()?;
-        let marshal_in = sw.elapsed_s();
-
         let sw_exec = Stopwatch::new();
         let result = exe
-            .execute::<xla::Literal>(&lits)
+            .execute::<&xla::Literal>(lits)
             .map_err(|e| anyhow::anyhow!("executing {config}/{program}: {e:?}"))?;
         let exec_s = sw_exec.elapsed_s();
 
-        let sw_out = Stopwatch::new();
+        let sw_fetch = Stopwatch::new();
         let out_lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching result of {config}/{program}: {e:?}"))?;
@@ -157,16 +145,48 @@ impl Runtime {
                 parts.len()
             );
         }
+        let fetch_s = sw_fetch.elapsed_s();
+
+        let mut st = self.stats.borrow_mut();
+        st.executes += 1;
+        st.execute_s += exec_s;
+        st.marshal_s += fetch_s;
+        Ok(parts)
+    }
+
+    /// Execute `config/program` on host values, returning host values.
+    ///
+    /// Arguments are shape- and dtype-checked against the manifest
+    /// signature before anything touches the PJRT boundary, so mismatches
+    /// fail with names instead of an opaque XLA error.
+    pub fn run(&self, config: &str, program: &str, args: &[Value]) -> Result<Vec<Value>> {
+        let sig = self.manifest.config(config)?.program(program)?.clone();
+        if args.len() != sig.inputs.len() {
+            bail!(
+                "{config}/{program}: expected {} args, got {}",
+                sig.inputs.len(),
+                args.len()
+            );
+        }
+        for (v, spec) in args.iter().zip(&sig.inputs) {
+            literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
+                .with_context(|| format!("{config}/{program}"))?;
+        }
+        let sw = Stopwatch::new();
+        let lits: Vec<xla::Literal> =
+            args.iter().map(literal::to_literal).collect::<Result<_>>()?;
+        let marshal_in = sw.elapsed_s();
+
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let parts = self.execute_core(config, program, &sig, &refs)?;
+
+        let sw_out = Stopwatch::new();
         let outs: Vec<Value> = parts
             .iter()
             .map(literal::from_literal)
             .collect::<Result<_>>()?;
         let marshal_out = sw_out.elapsed_s();
-
-        let mut st = self.stats.borrow_mut();
-        st.executes += 1;
-        st.execute_s += exec_s;
-        st.marshal_s += marshal_in + marshal_out;
+        self.stats.borrow_mut().marshal_s += marshal_in + marshal_out;
         Ok(outs)
     }
 
@@ -185,7 +205,8 @@ impl Runtime {
     /// Execute with a prepared literal prefix + per-call suffix values.
     /// §Perf optimization: on the decode hot path the parameter literals
     /// dominated marshal time (33–41% of step wall); reusing them cuts it
-    /// to the cache/token tensors only.
+    /// to the cache/token tensors only.  (The serving engine goes further:
+    /// [`DecodeSession`] keeps the caches literal-side too.)
     pub fn run_prepared(
         &self,
         config: &str,
@@ -204,35 +225,182 @@ impl Runtime {
             literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
                 .with_context(|| format!("{config}/{program}"))?;
         }
-        let exe = self.executable(config, program)?;
         let sw = Stopwatch::new();
         let rest_lits: Vec<xla::Literal> =
             rest.iter().map(literal::to_literal).collect::<Result<_>>()?;
-        let all: Vec<&xla::Literal> = prefix.iter().chain(rest_lits.iter()).collect();
         let marshal_in = sw.elapsed_s();
-        let sw_exec = Stopwatch::new();
-        let result = exe
-            .execute::<&xla::Literal>(&all)
-            .map_err(|e| anyhow::anyhow!("executing {config}/{program}: {e:?}"))?;
-        let exec_s = sw_exec.elapsed_s();
+
+        let all: Vec<&xla::Literal> = prefix.iter().chain(rest_lits.iter()).collect();
+        let parts = self.execute_core(config, program, &sig, &all)?;
+
         let sw_out = Stopwatch::new();
-        let out_lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {config}/{program}: {e:?}"))?;
-        let parts = out_lit
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {config}/{program}: {e:?}"))?;
-        if parts.len() != sig.outputs.len() {
-            bail!("{config}/{program}: expected {} outputs, got {}",
-                  sig.outputs.len(), parts.len());
-        }
         let outs: Vec<Value> = parts.iter().map(literal::from_literal).collect::<Result<_>>()?;
         let marshal_out = sw_out.elapsed_s();
-        let mut st = self.stats.borrow_mut();
-        st.executes += 1;
-        st.execute_s += exec_s;
-        st.marshal_s += marshal_in + marshal_out;
+        self.stats.borrow_mut().marshal_s += marshal_in + marshal_out;
         Ok(outs)
+    }
+}
+
+/// A decode-loop session over one `decode_*` program.
+///
+/// Both the model parameters *and* the carried KV-cache values live on the
+/// literal side of the marshal boundary: the cache tuple elements returned
+/// by one [`DecodeSession::step`] are fed back verbatim as the next step's
+/// inputs, so the per-token host↔device conversion traffic shrinks from the
+/// full `[L, B, H, C, r]` caches to the token/position vectors in and the
+/// logits row out.  The engine pulls the caches to host only on slot-churn
+/// events ([`DecodeSession::update_caches`], e.g. zeroing a freed lane):
+/// marshal in once, update lanes host-side, and pay the cache round-trip
+/// per churn event rather than per token.  (The literal API is
+/// whole-tensor, so a churn event re-marshals the full cache set; the
+/// worst case — churn every step — matches the old per-step cost, and
+/// steady-state decode pays nothing.)
+pub struct DecodeSession<'rt> {
+    rt: &'rt Runtime,
+    config: String,
+    program: String,
+    sig: ProgramSig,
+    params: Vec<xla::Literal>,
+    caches: Vec<xla::Literal>,
+    n_params: usize,
+    n_caches: usize,
+}
+
+impl<'rt> DecodeSession<'rt> {
+    /// `params` must match the program's leading inputs; the cache inputs
+    /// (names ending in `_cache`) are initialized to zeros and thereafter
+    /// carried from the program's own outputs.
+    pub fn new(rt: &'rt Runtime, config: &str, program: &str, params: &[Value]) -> Result<Self> {
+        let sig = rt.manifest.config(config)?.program(program)?.clone();
+        let cache_idx: Vec<usize> = sig
+            .inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.name.ends_with("_cache"))
+            .map(|(i, _)| i)
+            .collect();
+        let (n_params, n_caches) = match cache_idx.first() {
+            Some(&first) if cache_idx.iter().enumerate().all(|(k, &i)| i == first + k) => {
+                (first, cache_idx.len())
+            }
+            _ => bail!("{config}/{program}: no contiguous *_cache input block — not a decode program"),
+        };
+        if params.len() != n_params {
+            bail!(
+                "{config}/{program}: expected {n_params} param inputs, got {}",
+                params.len()
+            );
+        }
+        for (v, spec) in params.iter().zip(&sig.inputs[..n_params]) {
+            literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
+                .with_context(|| format!("{config}/{program}"))?;
+        }
+        // The carried caches must come back as the trailing outputs, in
+        // input order — verified by name so a signature change fails loud.
+        if sig.outputs.len() < n_caches + 1 {
+            bail!(
+                "{config}/{program}: {} outputs can't carry {n_caches} caches plus logits",
+                sig.outputs.len()
+            );
+        }
+        let out_tail: Vec<&str> = sig.outputs[sig.outputs.len() - n_caches..]
+            .iter()
+            .map(|a| a.name.as_str())
+            .collect();
+        let in_names: Vec<&str> = sig.inputs[n_params..n_params + n_caches]
+            .iter()
+            .map(|a| a.name.as_str())
+            .collect();
+        if out_tail != in_names {
+            bail!(
+                "{config}/{program}: trailing outputs {out_tail:?} don't carry the cache inputs {in_names:?}"
+            );
+        }
+        let sw = Stopwatch::new();
+        let param_lits: Vec<xla::Literal> =
+            params.iter().map(literal::to_literal).collect::<Result<_>>()?;
+        let caches: Vec<xla::Literal> = sig.inputs[n_params..n_params + n_caches]
+            .iter()
+            .map(|a| literal::to_literal(&Value::F32(Tensor::zeros(&a.shape))))
+            .collect::<Result<_>>()?;
+        rt.stats.borrow_mut().marshal_s += sw.elapsed_s();
+        Ok(Self {
+            rt,
+            config: config.into(),
+            program: program.into(),
+            sig,
+            params: param_lits,
+            caches,
+            n_params,
+            n_caches,
+        })
+    }
+
+    /// One decode step.  `step_args` are the per-step inputs after the
+    /// cache block (tokens, positions); returns the non-carried outputs
+    /// (the logits), while the cache outputs stay literal-side for the
+    /// next step.
+    pub fn step(&mut self, step_args: &[Value]) -> Result<Vec<Value>> {
+        let tail = &self.sig.inputs[self.n_params + self.n_caches..];
+        if step_args.len() != tail.len() {
+            bail!(
+                "{}/{}: expected {} step args, got {}",
+                self.config, self.program, tail.len(), step_args.len()
+            );
+        }
+        for (v, spec) in step_args.iter().zip(tail) {
+            literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
+                .with_context(|| format!("{}/{}", self.config, self.program))?;
+        }
+        let sw = Stopwatch::new();
+        let step_lits: Vec<xla::Literal> =
+            step_args.iter().map(literal::to_literal).collect::<Result<_>>()?;
+        let marshal_in = sw.elapsed_s();
+
+        let all: Vec<&xla::Literal> = self
+            .params
+            .iter()
+            .chain(self.caches.iter())
+            .chain(step_lits.iter())
+            .collect();
+        let mut parts = self.rt.execute_core(&self.config, &self.program, &self.sig, &all)?;
+        self.caches = parts.split_off(parts.len() - self.n_caches);
+
+        let sw_out = Stopwatch::new();
+        let outs: Vec<Value> = parts.iter().map(literal::from_literal).collect::<Result<_>>()?;
+        self.rt.stats.borrow_mut().marshal_s += marshal_in + sw_out.elapsed_s();
+        Ok(outs)
+    }
+
+    /// Pull the carried caches to host, let `f` edit them in place, and
+    /// re-marshal.  This is the only full-cache copy in the decode loop —
+    /// paid on slot-churn events (lane zeroing), not per token.
+    pub fn update_caches<F>(&mut self, f: F) -> Result<()>
+    where
+        F: FnOnce(&mut [Tensor]) -> Result<()>,
+    {
+        let sw = Stopwatch::new();
+        let mut host: Vec<Tensor> = self
+            .caches
+            .iter()
+            .map(|l| literal::from_literal(l)?.into_f32())
+            .collect::<Result<_>>()?;
+        f(&mut host)?;
+        self.caches = host
+            .into_iter()
+            .map(|t| literal::to_literal(&Value::F32(t)))
+            .collect::<Result<_>>()?;
+        self.rt.stats.borrow_mut().marshal_s += sw.elapsed_s();
+        Ok(())
+    }
+
+    /// Host copy of the carried caches (tests / debugging only — this is
+    /// the copy the step loop exists to avoid).
+    pub fn caches_host(&self) -> Result<Vec<Tensor>> {
+        self.caches
+            .iter()
+            .map(|l| literal::from_literal(l)?.into_f32())
+            .collect()
     }
 }
 
@@ -284,5 +452,55 @@ mod tests {
         rt.run("tiny", "init", &[Value::I32(TensorI::scalar(2))]).unwrap();
         assert_eq!(rt.stats().compiles, 1);
         assert_eq!(rt.stats().executes, 2);
+    }
+
+    #[test]
+    fn decode_session_matches_run_prepared() {
+        let rt = Runtime::new(&art()).expect("runtime");
+        let params = crate::coordinator::ops::init_params(&rt, "tiny", 5).unwrap();
+        let sig = rt.manifest().config("tiny").unwrap().program("decode_b8").unwrap().clone();
+        let cache_shape = sig.inputs.iter().find(|a| a.name.ends_with("_cache"))
+            .unwrap().shape.clone();
+        let b = cache_shape[1];
+        let param_values: Vec<Value> =
+            params.flat().iter().map(|&t| Value::F32(t.clone())).collect();
+        let toks = Value::I32(TensorI::new(vec![b], (0..b as i32).collect()));
+        let poss = Value::I32(TensorI::zeros(&[b]));
+
+        // Reference: one-shot path with explicit zero caches.
+        let prepared = rt.prepare(&param_values.iter().collect::<Vec<_>>()).unwrap();
+        let rest = vec![
+            Value::F32(Tensor::zeros(&cache_shape)),
+            Value::F32(Tensor::zeros(&cache_shape)),
+            toks.clone(),
+            poss.clone(),
+        ];
+        let want = rt.run_prepared("tiny", "decode_b8", &prepared, &rest).unwrap();
+
+        // Session path: caches owned literal-side.
+        let mut dec = DecodeSession::new(&rt, "tiny", "decode_b8", &param_values).unwrap();
+        let got = dec.step(&[toks, poss]).unwrap();
+        assert_eq!(got.len(), 1, "session returns only the non-carried outputs");
+        let a = got[0].as_f32().unwrap();
+        let w = want[0].as_f32().unwrap();
+        assert_eq!(a.shape(), w.shape());
+        assert!(a.max_abs_diff(w) < 1e-5);
+
+        // Carried caches match the reference outputs too.
+        let carried = dec.caches_host().unwrap();
+        assert_eq!(carried.len(), 2);
+        assert!(carried[0].max_abs_diff(want[1].as_f32().unwrap()) < 1e-5);
+        assert!(carried[1].max_abs_diff(want[2].as_f32().unwrap()) < 1e-5);
+
+        // update_caches round-trips and edits stick.
+        dec.update_caches(|caches| {
+            for c in caches.iter_mut() {
+                c.data_mut()[0] = 7.5;
+            }
+            Ok(())
+        })
+        .unwrap();
+        let edited = dec.caches_host().unwrap();
+        assert_eq!(edited[0].data()[0], 7.5);
     }
 }

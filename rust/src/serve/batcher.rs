@@ -1,10 +1,18 @@
-//! Dynamic request batcher: collects incoming generation requests into
-//! micro-batches under a (max_batch, max_wait) policy — the standard
-//! continuous-batching admission rule, scoped to the fixed-B decode
-//! artifacts this runtime executes.
+//! Dynamic request batcher: FIFO queue + admission policy in front of the
+//! continuous-batching engine.
+//!
+//! Two admission granularities share one rule ([`Batcher::ready`]):
+//! * [`Batcher::take_batch`] — wave admission, used by micro-benches and
+//!   any caller that wants the classic batch-to-completion shape;
+//! * [`Batcher::pop_admissible`] — slot-level admission, the continuous
+//!   path: the engine pulls one request per freed KV lane *between decode
+//!   steps*, so a request that finishes at step 10 hands its lane to the
+//!   next waiter at step 11.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use super::sampling::SamplingParams;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
@@ -12,11 +20,23 @@ pub struct Request {
     pub prompt: Vec<i32>,
     pub max_new: usize,
     pub arrived: Instant,
+    /// Per-request decode policy (greedy / temperature / top-k / stop).
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    /// A greedy-decode request — the policy every request had before
+    /// sampling became per-request.
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new: usize, arrived: Instant) -> Self {
+        Self { id, prompt, max_new, arrived, sampling: SamplingParams::greedy() }
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
+    /// Wave size for `take_batch`; concurrency cap for slot-level admission.
     pub max_batch: usize,
+    /// How long the oldest waiter may sit before admission fires anyway.
     pub max_wait: Duration,
 }
 
@@ -47,8 +67,9 @@ impl Batcher {
         self.queue.is_empty()
     }
 
-    /// Should a batch be released now?  Yes when full, or when the oldest
-    /// waiter exceeded max_wait, or when `drain` (shutdown) is set.
+    /// The admission rule: release now when the queue is saturated
+    /// (≥ max_batch waiting), when the oldest waiter exceeded max_wait, or
+    /// when `drain` (closed request set / shutdown) is set.
     pub fn ready(&self, now: Instant, drain: bool) -> bool {
         if self.queue.is_empty() {
             return false;
@@ -59,7 +80,19 @@ impl Batcher {
         now.duration_since(self.queue[0].arrived) >= self.policy.max_wait
     }
 
-    /// Pop up to max_batch requests.
+    /// Slot-level admission: pop the head request iff the admission rule
+    /// says it should run *now*.  The engine calls this once per free KV
+    /// lane between decode steps.
+    pub fn pop_admissible(&mut self, now: Instant, drain: bool) -> Option<Request> {
+        if !self.ready(now, drain) {
+            return None;
+        }
+        let req = self.queue.pop_front()?;
+        self.admitted += 1;
+        Some(req)
+    }
+
+    /// Wave admission: pop up to max_batch requests.
     pub fn take_batch(&mut self) -> Vec<Request> {
         let n = self.queue.len().min(self.policy.max_batch);
         let batch: Vec<Request> = self.queue.drain(..n).collect();
@@ -80,7 +113,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn req(id: u64, t: Instant) -> Request {
-        Request { id, prompt: vec![1], max_new: 4, arrived: t }
+        Request::greedy(id, vec![1], 4, t)
     }
 
     fn policy(b: usize, ms: u64) -> BatchPolicy {
@@ -127,6 +160,30 @@ mod tests {
     }
 
     #[test]
+    fn pop_admissible_respects_policy() {
+        let mut b = Batcher::new(policy(4, 10_000));
+        let now = Instant::now();
+        assert!(b.pop_admissible(now, true).is_none(), "empty queue never admits");
+        b.push(req(1, now));
+        // One fresh request, queue unsaturated, no drain: hold it back.
+        assert!(b.pop_admissible(now, false).is_none());
+        // Drain overrides the wait.
+        let r = b.pop_admissible(now, true).unwrap();
+        assert_eq!(r.id, 1);
+        // Saturation admits without drain.
+        for i in 2..6 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.pop_admissible(now, false).unwrap().id, 2);
+        // Timeout admits the aged head.
+        let mut b2 = Batcher::new(policy(8, 5));
+        b2.push(req(9, now - Duration::from_millis(50)));
+        assert_eq!(b2.pop_admissible(now, false).unwrap().id, 9);
+        let (enq, adm) = b2.counters();
+        assert_eq!((enq, adm), (1, 1));
+    }
+
+    #[test]
     fn conservation_property() {
         prop("batcher conserves requests", 20, |rng: &mut Rng| {
             let mut b = Batcher::new(policy(1 + rng.below(4), 0));
@@ -134,19 +191,23 @@ mod tests {
             let mut seen = Vec::new();
             let mut next = 0u64;
             for _ in 0..100 {
-                if rng.uniform() < 0.6 {
+                let u = rng.uniform();
+                if u < 0.5 {
                     b.push(req(next, now));
                     next += 1;
+                } else if u < 0.75 {
+                    // Mix slot-level pops with wave takes.
+                    if let Some(r) = b.pop_admissible(now, true) {
+                        seen.push(r.id);
+                    }
                 } else if b.ready(now, true) {
                     for r in b.take_batch() {
                         seen.push(r.id);
                     }
                 }
             }
-            while b.ready(now, true) {
-                for r in b.take_batch() {
-                    seen.push(r.id);
-                }
+            while let Some(r) = b.pop_admissible(now, true) {
+                seen.push(r.id);
             }
             let (enq, adm) = b.counters();
             if enq != adm || seen.len() as u64 != enq {

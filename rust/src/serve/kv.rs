@@ -56,6 +56,11 @@ impl KvManager {
     }
 
     /// Claim a slot for request `id`. Errors when the batch is full.
+    ///
+    /// Contract: returns the *lowest* free slot index.  Slot indices are
+    /// batch-lane indices — the engine zeroes exactly this lane of the
+    /// `[L, B, H, C, r]` caches on re-assignment, so the mapping must be
+    /// stable and dense.
     pub fn allocate(&mut self, id: u64) -> Result<usize> {
         if self.slots.iter().flatten().any(|s| s.id == id) {
             bail!("request {id} already has a slot");
@@ -141,6 +146,20 @@ mod tests {
         assert_eq!(kv.free(a).unwrap(), 1);
         assert_eq!(kv.free_slots(), 3);
         assert!(kv.free(a).is_err(), "double free must fail");
+    }
+
+    #[test]
+    fn allocate_returns_lowest_free_slot() {
+        // The engine uses slot indices as batch-lane indices; re-assignment
+        // must hand back the lowest freed lane.
+        let mut kv = KvManager::new(cfg(8));
+        for i in 0..4 {
+            assert_eq!(kv.allocate(i).unwrap(), i as usize);
+        }
+        kv.free(1).unwrap();
+        kv.free(3).unwrap();
+        assert_eq!(kv.allocate(10).unwrap(), 1);
+        assert_eq!(kv.allocate(11).unwrap(), 3);
     }
 
     #[test]

@@ -1,15 +1,41 @@
-//! Serving layer: dynamic batching + paged KV-cache management + the
-//! batched greedy-decode engine over the KV-cache artifacts.
+//! Serving layer: a continuous-batching scheduler over the fixed-shape
+//! KV-cache decode artifacts.
 //!
-//! This realizes the paper's motivation end-to-end: after CLOVER pruning to
-//! rank r, the decode path caches rank-r factor projections instead of
-//! full head dimensions, cutting KV memory by exactly r/d — measured and
-//! reported by [`engine::ServeMetrics`].
+//! Architecture (one request's path through the subsystem):
+//!
+//! * [`batcher`] — FIFO queue + admission rule.  The engine pulls one
+//!   request per freed KV lane *between decode steps*
+//!   ([`Batcher::pop_admissible`]), so slots never idle waiting for a
+//!   wave boundary.
+//! * [`session`] — per-request decode state: prompt cursor, generated
+//!   row, stop condition, KV slot, and latency bookkeeping (queue wait,
+//!   TTFT, per-request completion step).
+//! * [`sampling`] — per-request decode policy (greedy / temperature /
+//!   top-k / stop token), deterministic per `(seed, request id)`.
+//! * [`kv`] — paged KV slot manager: allocation inside the fixed batch,
+//!   page-granular position accounting, live/peak bytes.
+//! * [`engine`] — the step loop.  Each fused decode step runs all `B`
+//!   lanes with *per-lane* positions; finished sessions retire and their
+//!   lanes are zeroed and re-assigned immediately.  The KV cache values
+//!   themselves stay literal-side across steps
+//!   ([`crate::runtime::DecodeSession`]) — host↔device traffic per token
+//!   is just the token/position vectors and the logits.
+//!
+//! This realizes the paper's motivation end-to-end: after CLOVER pruning
+//! to rank r, the decode path caches rank-r factor projections instead of
+//! full head dimensions, cutting KV memory by exactly r/d — and the
+//! slot-level scheduler turns those freed bytes into admitted requests,
+//! measured by [`engine::ServeMetrics`] (tokens/s, TTFT, p50/p99 latency,
+//! peak KV bytes).
 
 pub mod batcher;
 pub mod engine;
 pub mod kv;
+pub mod sampling;
+pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use engine::{Completion, Engine, ServeMetrics};
+pub use engine::{Admission, Completion, Engine, ServeMetrics};
 pub use kv::{KvConfig, KvManager, PAGE_TOKENS};
+pub use sampling::{Sampler, SamplingParams};
+pub use session::Session;

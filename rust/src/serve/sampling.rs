@@ -1,0 +1,172 @@
+//! Per-request decode policy: greedy argmax, temperature softmax, and
+//! top-k truncation over a logits row.
+//!
+//! Each in-flight request owns a [`Sampler`] seeded from its
+//! [`SamplingParams`] and request id, so a request's output stream is a
+//! pure function of `(policy, prompt)` no matter how the continuous-batch
+//! scheduler interleaves it with other traffic — replaying a request in
+//! isolation reproduces exactly what it got under load.
+
+use crate::util::rng::Rng;
+
+pub use crate::util::argmax;
+
+/// Decode policy carried by each [`super::Request`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// Softmax temperature; `<= 0.0` selects greedy argmax.
+    pub temperature: f32,
+    /// Keep only the k highest logits before sampling; `0` disables the
+    /// cut.  Logits tied with the k-th largest are all kept.
+    pub top_k: usize,
+    /// Policy seed, mixed with the request id (see [`Sampler::for_request`]).
+    pub seed: u64,
+    /// Generation stops early when this token is emitted.
+    pub stop_token: Option<i32>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 0.0, top_k: 0, seed: 0, stop_token: None }
+    }
+}
+
+impl SamplingParams {
+    /// The policy the old engine hard-coded: plain argmax, no stop token.
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    /// Greedy either explicitly (temperature off) or degenerately (top-1).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0 || self.top_k == 1
+    }
+}
+
+/// Sampling state owned by one in-flight request.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Self {
+        let rng = Rng::new(params.seed);
+        Self { params, rng }
+    }
+
+    /// Decorrelate the stream per request id so identical default policies
+    /// on different requests don't emit identical token streams.  (`Rng`
+    /// seeds through SplitMix64, so even consecutive mixed seeds diverge.)
+    pub fn for_request(params: SamplingParams, id: u64) -> Self {
+        let rng = Rng::new(params.seed.wrapping_add(id.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        Self { params, rng }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    pub fn is_stop(&self, tok: i32) -> bool {
+        self.params.stop_token == Some(tok)
+    }
+
+    /// Draw the next token id from a logits row.
+    pub fn sample(&mut self, logits: &[f32]) -> i32 {
+        assert!(!logits.is_empty(), "empty logits row");
+        if self.params.is_greedy() {
+            return argmax(logits) as i32;
+        }
+        // Top-k cut: zero out everything strictly below the k-th largest.
+        // O(V) selection, not a sort — this runs once per sampled token.
+        let cut = if self.params.top_k > 0 && self.params.top_k < logits.len() {
+            let mut scratch = logits.to_vec();
+            let (_, kth, _) = scratch.select_nth_unstable_by(self.params.top_k - 1, |a, b| {
+                b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            *kth
+        } else {
+            f32::NEG_INFINITY
+        };
+        // Softmax weights at temperature, max-shifted for stability; the
+        // argmax always survives the cut, so the weights never all vanish.
+        let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let inv_t = 1.0 / self.params.temperature as f64;
+        let weights: Vec<f64> = logits
+            .iter()
+            .map(|&x| if x < cut { 0.0 } else { ((x - m) as f64 * inv_t).exp() })
+            .collect();
+        self.rng.weighted(&weights) as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut s = Sampler::new(SamplingParams::greedy());
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 1.9]), 1);
+        assert_eq!(argmax(&[3.0, 3.0, 1.0]), 0, "ties go to the lowest index");
+    }
+
+    #[test]
+    fn top1_is_greedy_at_any_temperature() {
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 5.0, top_k: 1, seed: 9, stop_token: None,
+        });
+        for _ in 0..20 {
+            assert_eq!(s.sample(&[0.0, 4.0, 3.9]), 1);
+        }
+    }
+
+    #[test]
+    fn topk_never_samples_below_cut() {
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 10.0, top_k: 2, seed: 3, stop_token: None,
+        });
+        // With huge temperature everything inside the cut is near-uniform;
+        // indices 0 and 3 are outside the top-2 and must never appear.
+        for _ in 0..200 {
+            let t = s.sample(&[-5.0, 1.0, 2.0, -4.0]);
+            assert!(t == 1 || t == 2, "sampled {t} outside top-k");
+        }
+    }
+
+    #[test]
+    fn temperature_prefers_heavy_logit() {
+        let mut s = Sampler::new(SamplingParams {
+            temperature: 1.0, top_k: 0, seed: 4, stop_token: None,
+        });
+        let mut counts = [0usize; 2];
+        for _ in 0..2000 {
+            counts[s.sample(&[0.0, 2.5]) as usize] += 1;
+        }
+        assert!(counts[1] > counts[0] * 4, "counts {counts:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_id() {
+        let p = SamplingParams { temperature: 0.8, top_k: 3, seed: 11, stop_token: None };
+        let logits = [0.3, 1.0, -0.2, 0.9, 0.0];
+        let mut a = Sampler::for_request(p.clone(), 42);
+        let mut b = Sampler::for_request(p.clone(), 42);
+        let seq_a: Vec<i32> = (0..32).map(|_| a.sample(&logits)).collect();
+        let seq_b: Vec<i32> = (0..32).map(|_| b.sample(&logits)).collect();
+        assert_eq!(seq_a, seq_b, "same (seed, id) must replay identically");
+        let mut c = Sampler::for_request(p, 43);
+        let seq_c: Vec<i32> = (0..32).map(|_| c.sample(&logits)).collect();
+        assert_ne!(seq_a, seq_c, "different ids must decorrelate");
+    }
+
+    #[test]
+    fn stop_token_recognized() {
+        let s = Sampler::new(SamplingParams {
+            temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(7),
+        });
+        assert!(s.is_stop(7));
+        assert!(!s.is_stop(8));
+    }
+}

@@ -1,0 +1,267 @@
+//! Per-request decode state for the continuous-batching engine.
+//!
+//! A [`Session`] owns everything about one in-flight request: the token
+//! row (prompt + generated), the prompt cursor, the KV slot it occupies,
+//! its sampling policy and stop condition, and the latency bookkeeping
+//! (queue wait, time-to-first-token, per-request completion).  The engine
+//! loop is then thin: feed each live session's `(next_token, position)`
+//! into one fused decode step, hand each lane's logits row back through
+//! [`Session::observe`], and retire sessions the moment they finish —
+//! freeing their batch lane for the next queued request.
+
+use std::time::Instant;
+
+use super::batcher::Request;
+use super::engine::Completion;
+use super::sampling::Sampler;
+
+/// One in-flight request's decode state.
+#[derive(Clone, Debug)]
+pub struct Session {
+    id: u64,
+    prompt_len: usize,
+    /// Prompt + generated tokens — the full row so far.
+    row: Vec<i32>,
+    /// Next model position to feed.  This is the per-lane position counter
+    /// that restarts at 0 every time a lane is re-assigned.
+    cursor: usize,
+    /// Hard stop: `min(prompt + max_new, context_window)` positions.
+    target_len: usize,
+    slot: usize,
+    sampler: Sampler,
+    arrived: Instant,
+    admitted: Instant,
+    ttft_s: Option<f64>,
+    stopped: bool,
+    steps: usize,
+}
+
+impl Session {
+    /// Build the decode state for `req`, bound to KV slot/lane `slot`.
+    pub fn new(req: Request, slot: usize, max_positions: usize, admitted: Instant) -> Self {
+        let target_len = (req.prompt.len() + req.max_new).min(max_positions);
+        let sampler = Sampler::for_request(req.sampling.clone(), req.id);
+        Self {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            row: req.prompt,
+            cursor: 0,
+            target_len,
+            slot,
+            sampler,
+            arrived: req.arrived,
+            admitted,
+            ttft_s: None,
+            stopped: false,
+            steps: 0,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// KV slot / batch lane this session occupies.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Token to feed this step: the prompt token under the cursor during
+    /// prefill, else the last generated token (0 for an empty prompt).
+    pub fn next_token(&self) -> i32 {
+        self.row
+            .get(self.cursor)
+            .copied()
+            .or_else(|| self.row.last().copied())
+            .unwrap_or(0)
+    }
+
+    /// Model position for this step.
+    pub fn position(&self) -> usize {
+        self.cursor
+    }
+
+    /// Still consuming prompt tokens (no token generated yet)?
+    pub fn in_prefill(&self) -> bool {
+        self.row.len() == self.prompt_len
+    }
+
+    /// Number of generated (non-prompt) tokens so far.
+    pub fn generated(&self) -> usize {
+        self.row.len() - self.prompt_len
+    }
+
+    /// True when the request needs no further decode steps: target length
+    /// reached, context window exhausted, or stop token emitted.  Can be
+    /// true at admission (e.g. `max_new == 0`, or a prompt that already
+    /// fills the context window) — such requests complete without ever
+    /// occupying a decode step.
+    pub fn is_done(&self) -> bool {
+        self.stopped || self.row.len() >= self.target_len || self.cursor >= self.target_len
+    }
+
+    /// Consume this step's logits row for this lane.  Advances the cursor,
+    /// samples a token iff the row is exhausted (prefill just ended or
+    /// we're generating), and returns `true` when the request finished on
+    /// this step.
+    pub fn observe(&mut self, logits: &[f32], now: Instant) -> bool {
+        debug_assert!(!self.is_done(), "observe on a finished session");
+        self.steps += 1;
+        self.cursor += 1;
+        if self.cursor >= self.row.len() && self.row.len() < self.target_len {
+            let tok = self.sampler.sample(logits);
+            if self.ttft_s.is_none() {
+                self.ttft_s = Some(now.duration_since(self.arrived).as_secs_f64());
+            }
+            self.row.push(tok);
+            if self.sampler.is_stop(tok) {
+                self.stopped = true;
+            }
+        }
+        self.is_done()
+    }
+
+    /// Retire into a [`Completion`].  `finished_step` is the engine's
+    /// global decode-step counter at retirement; latency is measured from
+    /// this request's own arrival to its own last token — not to the end
+    /// of whatever batch it happened to share lanes with.
+    pub fn finish(self, now: Instant, finished_step: usize) -> Completion {
+        let latency_s = now.duration_since(self.arrived).as_secs_f64();
+        Completion {
+            id: self.id,
+            tokens: self.row,
+            latency_s,
+            ttft_s: self.ttft_s.unwrap_or(latency_s),
+            queue_wait_s: self.admitted.duration_since(self.arrived).as_secs_f64(),
+            steps: self.steps,
+            finished_step,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::sampling::SamplingParams;
+    use crate::testing::prop;
+    use crate::util::rng::Rng;
+
+    const V: usize = 16;
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize, sampling: SamplingParams) -> Request {
+        Request { id, prompt, max_new, arrived: Instant::now(), sampling }
+    }
+
+    fn logits_from(rng: &mut Rng) -> Vec<f32> {
+        (0..V).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn prefill_then_generate_counts() {
+        let now = Instant::now();
+        let mut s = Session::new(req(1, vec![5, 6, 7], 4, SamplingParams::greedy()), 0, 64, now);
+        let mut rng = Rng::new(1);
+        // Prefill: positions 0..2 feed the prompt verbatim.
+        assert!(s.in_prefill());
+        assert_eq!((s.next_token(), s.position()), (5, 0));
+        assert!(!s.observe(&logits_from(&mut rng), now));
+        assert_eq!((s.next_token(), s.position()), (6, 1));
+        assert!(!s.observe(&logits_from(&mut rng), now));
+        assert_eq!((s.next_token(), s.position()), (7, 2));
+        // Third observe ends prefill and generates the first token: TTFT.
+        assert!(!s.observe(&logits_from(&mut rng), now));
+        assert!(!s.in_prefill());
+        assert_eq!(s.generated(), 1);
+        // Generated token is fed back at the next position.
+        assert_eq!(s.position(), 3);
+        assert_eq!(s.next_token(), *s_row_last(&s));
+        // Run to completion: 3 prompt + 4 new = 7 positions, 6 steps.
+        let mut steps = 3;
+        while !s.observe(&logits_from(&mut rng), now) {
+            steps += 1;
+        }
+        steps += 1;
+        assert_eq!(steps, 6, "last generated token is never fed back");
+        let c = s.finish(now, steps);
+        assert_eq!(c.tokens.len(), 7);
+        assert_eq!(&c.tokens[..3], &[5, 6, 7]);
+        assert_eq!(c.steps, 6);
+    }
+
+    fn s_row_last(s: &Session) -> &i32 {
+        s.row.last().unwrap()
+    }
+
+    #[test]
+    fn stop_token_ends_early() {
+        let now = Instant::now();
+        let mut sampling = SamplingParams::greedy();
+        sampling.stop_token = Some(3);
+        let mut s = Session::new(req(1, vec![1], 10, sampling), 0, 64, now);
+        // Logits rigged so argmax is always token 3 → stops on first sample.
+        let mut logits = vec![0.0f32; V];
+        logits[3] = 5.0;
+        assert!(s.observe(&logits, now), "stop token must finish the session");
+        let c = s.finish(now, 1);
+        assert_eq!(c.tokens, vec![1, 3]);
+    }
+
+    #[test]
+    fn degenerate_requests_are_done_at_admission() {
+        let now = Instant::now();
+        // max_new == 0: nothing to generate.
+        let s = Session::new(req(1, vec![1, 2], 0, SamplingParams::greedy()), 0, 64, now);
+        assert!(s.is_done());
+        // Prompt already fills the context window.
+        let s = Session::new(req(2, (0..64).collect(), 8, SamplingParams::greedy()), 0, 64, now);
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn session_invariants_property() {
+        prop("session decode invariants", 40, |rng| {
+            let now = Instant::now();
+            let p = rng.below(5);
+            let prompt: Vec<i32> = (0..p).map(|_| rng.below(V) as i32).collect();
+            let max_new = rng.below(8);
+            let cwin = 16;
+            let sampling = SamplingParams {
+                temperature: if rng.uniform() < 0.5 { 0.0 } else { 0.9 },
+                top_k: rng.below(4),
+                seed: rng.next_u64(),
+                stop_token: None,
+            };
+            let target = (p + max_new).min(cwin);
+            let mut s = Session::new(req(7, prompt.clone(), max_new, sampling), 0, cwin, now);
+            let mut steps = 0usize;
+            while !s.is_done() {
+                if s.position() >= cwin {
+                    return Err(format!("position {} escaped the window", s.position()));
+                }
+                s.observe(&logits_from(rng), now);
+                steps += 1;
+                if steps > 2 * cwin {
+                    return Err("session failed to terminate".into());
+                }
+            }
+            let c = s.finish(now, steps);
+            if c.tokens.len() > target.max(p) {
+                return Err(format!("row {} exceeds target {target}", c.tokens.len()));
+            }
+            if c.tokens.len() >= p && c.tokens[..p] != prompt[..] {
+                return Err("prompt prefix mutated".into());
+            }
+            if c.tokens.len() - p > max_new {
+                return Err("generated more than max_new".into());
+            }
+            // The final generated token is never re-fed: at most target - 1
+            // steps for a real prompt (degenerate requests take zero).  An
+            // empty prompt burns one extra step on the position-0 dummy.
+            let max_steps = if p == 0 { target } else { target.saturating_sub(1) };
+            if steps > max_steps {
+                return Err(format!("{steps} steps for target {target} (prompt {p})"));
+            }
+            Ok(())
+        });
+    }
+}

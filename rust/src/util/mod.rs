@@ -101,9 +101,29 @@ pub fn human_bytes(n: usize) -> String {
     }
 }
 
+/// Index of the maximum element; ties resolve to the lowest index.  Shared
+/// by greedy decoding in the coordinator and the serving sampler.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bestv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bestv {
+            bestv = x;
+            best = i;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn argmax_ties_to_lowest_index() {
+        assert_eq!(argmax(&[0.5, 2.0, 2.0, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY]), 0);
+    }
 
     #[test]
     fn human_bytes_units() {
