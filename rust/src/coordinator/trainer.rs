@@ -183,7 +183,7 @@ mod tests {
 
     #[test]
     fn full_training_reduces_loss() {
-        let rt = Runtime::new(&art()).expect("runtime (make artifacts)");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_tiny(&rt);
         let mut state = TrainState::new(vec![params]);
         let tiny = rt.manifest().config("tiny").unwrap().clone();
@@ -212,7 +212,7 @@ mod tests {
 
     #[test]
     fn unknown_input_is_error() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let mut state = TrainState::new(vec![ParamSet::zeros(&vec![])]);
         let batch = BTreeMap::new();
         let r = train_step(&rt, "tiny", "train_full", &mut state, &batch, 1e-3);

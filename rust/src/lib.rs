@@ -8,8 +8,10 @@
 //!   transform + pruning engine (with its own linalg substrate), PEFT
 //!   adapter initialization/accounting, a continuous-batching serving
 //!   subsystem (slot-level scheduler, per-request sampling and latency
-//!   accounting, paged KV bookkeeping — see [`serve`]), and the experiment
-//!   runners that regenerate every table and figure.
+//!   accounting, paged KV bookkeeping — see [`serve`]), a thread-owning
+//!   streaming server front-end above it (channel-fed gateway, per-token
+//!   event streams, cancellation, rank-aware routing — see [`server`]),
+//!   and the experiment runners that regenerate every table and figure.
 //! * **Layer 2** — JAX programs (`python/compile/`), AOT-lowered once to
 //!   HLO text under `artifacts/`.
 //! * **Layer 1** — Pallas kernels for the fused factorized-attention hot
@@ -22,6 +24,11 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! recorded paper-vs-measured results.
 
+// CI runs clippy with `-D warnings`; these style lints are allowed
+// crate-wide where the "idiomatic" rewrite would obscure the
+// indexing-heavy numeric code (lane/slot loops over fixed-shape tensors).
+#![allow(clippy::needless_range_loop)]
+
 pub mod clover;
 pub mod config;
 pub mod coordinator;
@@ -32,6 +39,7 @@ pub mod peft;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod server;
 pub mod tensor;
 pub mod testing;
 pub mod util;

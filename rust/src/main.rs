@@ -10,6 +10,7 @@
 //! clover eval      --ckpt x.clvr            # perplexity
 //! clover spectra   [--all-layers]           # Fig 2 curves
 //! clover serve     --ckpt x.clvr [--requests N] [--temperature T] [--top-k K] [--stop-token ID]
+//!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
 //! ```
@@ -20,9 +21,10 @@ use std::collections::BTreeMap;
 use clover::config::RunConfig;
 use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
-use clover::model::{load_params, save_params, Checkpoint};
+use clover::model::{load_params, save_params, Checkpoint, Manifest};
 use clover::runtime::{golden, Runtime};
 use clover::serve::{BatchPolicy, Engine, Request, SamplingParams};
+use clover::server::{EngineSpec, Gateway, GatewayConfig, StreamEvent, TryNext};
 use clover::util::human_bytes;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
@@ -221,23 +223,16 @@ fn cmd_spectra(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    if args.get("stream").is_some() {
+        return cmd_serve_stream(args, &cfg);
+    }
     let rt = Runtime::new(&cfg.model.artifacts_dir)?;
     let entry = rt.manifest().config(&cfg.model.preset)?.clone();
     let n_requests = args.usize_or("requests", 16)?;
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let ck = Checkpoint::load(ckpt_path)?;
-    let (params, program) = if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
-        let r = ck.meta_usize("rank")?;
-        (
-            load_params(&ck, entry.params_fac.get(&r).context("rank spec")?)?,
-            format!("decode_fac_r{r}_b{}", cfg.serve.max_batch.min(8)),
-        )
-    } else {
-        (
-            load_params(&ck, &entry.params_dense)?,
-            format!("decode_b{}", cfg.serve.max_batch.min(8)),
-        )
-    };
+    let (params, program) =
+        clover::model::decode_params_for_checkpoint(&ck, &entry, cfg.serve.max_batch.min(8))?;
     let engine = Engine::new(&rt, &cfg.model.preset, &program, params)?;
     let now = std::time::Instant::now();
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
@@ -279,6 +274,151 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mean_latency: f64 =
         completions.iter().map(|c| c.latency_s).sum::<f64>() / completions.len() as f64;
     println!("mean latency {:.3}s", mean_latency);
+    Ok(())
+}
+
+/// `clover serve --stream`: drive the checkpoint through the thread-owning
+/// gateway instead of the blocking `serve_all` call — requests are fed in
+/// over time (open loop, `--gap-ms` apart), tokens print as they are
+/// sampled, `--deadline-ms` attaches a per-request deadline, and
+/// `--cancel-ms` fires the last request's cancel token mid-decode to show
+/// its KV lane being reclaimed.
+fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let ckpt_path = args.get("ckpt").context("--ckpt required")?;
+    let n_requests = args.usize_or("requests", 16)?;
+    let gap = Duration::from_millis(args.usize_or("gap-ms", 2)? as u64);
+    let deadline = args
+        .get("deadline-ms")
+        .map(|v| v.parse::<u64>())
+        .transpose()?
+        .map(Duration::from_millis);
+    let cancel_ms = args.get("cancel-ms").map(|v| v.parse::<u64>()).transpose()?;
+
+    // The manifest is plain JSON — read vocab for prompt synthesis without
+    // spinning up a second PJRT runtime (the gateway owns the only one).
+    let manifest = Manifest::load(&cfg.model.artifacts_dir)?;
+    let vocab = manifest.config(&cfg.model.preset)?.dim("vocab")?;
+
+    let batch = cfg.serve.max_batch.min(8);
+    let queue_capacity = args.usize_or("queue", 64)?;
+    let spec = EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path);
+    let gateway = Gateway::spawn(
+        "serve",
+        GatewayConfig {
+            queue_capacity,
+            policy: BatchPolicy {
+                max_batch: cfg.serve.max_batch,
+                max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
+            },
+        },
+        spec,
+    )?;
+    println!(
+        "gateway up: rank {} | {} B KV/token | queue {queue_capacity}",
+        gateway.rank(),
+        gateway.kv_bytes_per_token(),
+    );
+
+    let sampling = SamplingParams {
+        temperature: args.f64_or("temperature", 0.0)? as f32,
+        top_k: args.usize_or("top-k", 0)?,
+        seed: cfg.train.seed,
+        stop_token: args.get("stop-token").map(|v| v.parse::<i32>()).transpose()?,
+    };
+    let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
+
+    // Open-loop submission: one request per gap tick, backpressure applies.
+    let mut streams = Vec::new();
+    let mut demo_cancel = None;
+    for i in 0..n_requests {
+        let prompt: Vec<i32> = (0..4).map(|_| rng.below(vocab) as i32).collect();
+        let ticket = gateway
+            .submit(prompt, cfg.serve.max_new_tokens, sampling.clone(), deadline)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+        if i + 1 == n_requests {
+            if let Some(ms) = cancel_ms {
+                demo_cancel = Some((Instant::now() + Duration::from_millis(ms), ticket.cancel.clone()));
+            }
+        }
+        streams.push(ticket.stream);
+        std::thread::sleep(gap);
+    }
+
+    // Mux all event streams onto stdout until every request is terminal.
+    let mut done = 0usize;
+    let mut cancelled = 0usize;
+    while !streams.is_empty() {
+        if demo_cancel.as_ref().is_some_and(|(at, _)| Instant::now() >= *at) {
+            let (_, token) = demo_cancel.take().expect("checked above");
+            println!("[req {:>3}] firing cancel token", token.id());
+            token.cancel();
+        }
+        let mut progressed = false;
+        streams.retain(|s| loop {
+            match s.try_next() {
+                TryNext::Event(ev) => {
+                    progressed = true;
+                    match &ev {
+                        StreamEvent::Queued { id } => println!("[req {id:>3}] queued"),
+                        StreamEvent::Started { id, lane, step } => {
+                            println!("[req {id:>3}] started on lane {lane} at step {step}")
+                        }
+                        StreamEvent::Token { id, pos, token, step } => {
+                            println!("[req {id:>3}] +token {token:>4} @ pos {pos} (step {step})")
+                        }
+                        StreamEvent::Done { completion } => {
+                            println!(
+                                "[req {:>3}] done: {} tokens | ttft {:.3}s | latency {:.3}s",
+                                completion.id,
+                                completion.tokens.len(),
+                                completion.ttft_s,
+                                completion.latency_s,
+                            );
+                        }
+                        StreamEvent::Cancelled { id, reason, tokens, step } => {
+                            println!(
+                                "[req {id:>3}] cancelled ({reason:?}) at step {step} with {} tokens",
+                                tokens.len()
+                            );
+                        }
+                    }
+                    if ev.is_terminal() {
+                        if matches!(ev, StreamEvent::Done { .. }) {
+                            done += 1;
+                        } else {
+                            cancelled += 1;
+                        }
+                        return false;
+                    }
+                }
+                TryNext::Empty => return true,
+                TryNext::Closed => {
+                    eprintln!("[req {:>3}] stream closed without terminal event", s.id());
+                    return false;
+                }
+            }
+        });
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    let metrics = gateway.join()?;
+    println!(
+        "served {} done + {} cancelled | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {}",
+        done,
+        cancelled,
+        metrics.generated_tokens,
+        metrics.tokens_per_s(),
+        metrics.decode_steps,
+        human_bytes(metrics.kv_peak_bytes),
+    );
+    println!(
+        "ttft p50 {:.3}s p99 {:.3}s | latency p50 {:.3}s p99 {:.3}s",
+        metrics.ttft_p50_s, metrics.ttft_p99_s, metrics.latency_p50_s, metrics.latency_p99_s,
+    );
     Ok(())
 }
 

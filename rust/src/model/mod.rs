@@ -41,6 +41,29 @@ pub fn load_params(ck: &Checkpoint, spec: &ParamSpec) -> Result<ParamSet> {
     ParamSet::from_flat(spec, tensors)
 }
 
+/// Resolve a checkpoint to serving state: its parameters plus the name of
+/// the `B`-lane decode artifact that matches its kind — `decode_b{B}` for
+/// dense, `decode_fac_r{r}_b{B}` for a factorized checkpoint (rank from
+/// metadata).  The single owner of this naming convention; the CLI and
+/// the server gateway both resolve through here.
+pub fn decode_params_for_checkpoint(
+    ck: &Checkpoint,
+    entry: &ConfigEntry,
+    batch_slots: usize,
+) -> Result<(ParamSet, String)> {
+    use anyhow::Context;
+    if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
+        let r = ck.meta_usize("rank")?;
+        let spec = entry
+            .params_fac
+            .get(&r)
+            .with_context(|| format!("config {} has no rank-{r} param spec", entry.name))?;
+        Ok((load_params(ck, spec)?, format!("decode_fac_r{r}_b{batch_slots}")))
+    } else {
+        Ok((load_params(ck, &entry.params_dense)?, format!("decode_b{batch_slots}")))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -91,27 +91,27 @@ mod tests {
 
     #[test]
     fn golden_fwd_tiny() {
-        let rt = Runtime::new(&art()).expect("runtime (run `make artifacts`)");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let worst = check(&rt, "tiny", "fwd").unwrap();
         assert!(worst <= GOLDEN_ATOL * 10.0, "worst {worst}");
     }
 
     #[test]
     fn golden_train_full_tiny() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         check(&rt, "tiny", "train_full").unwrap();
     }
 
     #[test]
     fn golden_fac_and_decode_tiny() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         check(&rt, "tiny", "fwd_fac_r16").unwrap();
         check(&rt, "tiny", "decode_b1").unwrap();
     }
 
     #[test]
     fn missing_golden_is_error() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         assert!(check(&rt, "tiny", "train_clover_s_r16").is_err());
     }
 }

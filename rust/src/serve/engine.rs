@@ -10,9 +10,13 @@
 //!
 //! Single-threaded executor by design: the PJRT handles are not Sync, and
 //! this box has one core — concurrency is expressed by the request queue,
-//! not OS threads.  `serve_all` is the synchronous core the CLI demo,
-//! example, and bench drive; a thread-owning wrapper would feed it from
-//! channels without changing any of this logic.
+//! not OS threads.  `serve_all` is the synchronous closed-set core the CLI
+//! demo, example, and bench drive.  The step loop is additionally
+//! observable and steerable through [`StepHook`]: per-token/lifecycle
+//! callbacks fire as they happen, cancellation orders retire sessions
+//! between decode steps, and [`Engine::serve_open`] runs the same loop
+//! open-ended, fed from channels by the thread-owning
+//! [`crate::server`] gateway.
 
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -58,15 +62,87 @@ pub enum Admission {
     WaveToCompletion,
 }
 
+/// Why a request was retired without completing.  (Graceful shutdown is
+/// deliberately *not* a reason: the gateway drains accepted work to
+/// completion instead of cancelling it.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Explicit client cancellation (a cancel token fired).
+    User,
+    /// The request's deadline expired before it finished.
+    Deadline,
+}
+
+/// A cancellation order, applied by the step loop *between* decode steps:
+/// the session retires, its partial tokens go out through the hook, and its
+/// KV lane frees immediately — the next admission pass (same iteration,
+/// before the next decode step) can hand the lane to a waiting request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cancellation {
+    pub id: u64,
+    pub reason: CancelReason,
+}
+
+/// Per-step observer and control surface threaded through the engine loop.
+///
+/// The engine only *returns* finished [`Completion`]s; everything live —
+/// admissions, per-token sampling, retirements — is invisible to a
+/// `serve_all` caller until the drain ends.  A `StepHook` sees each of
+/// those moments as it happens, which is what the `server::` layer turns
+/// into per-request event streams, and feeds control back in: new requests
+/// between steps (`poll_ingress`) and cancellation orders
+/// (`take_cancellations`).  All methods default to no-ops so closed-set
+/// serving pays nothing.
+pub trait StepHook {
+    /// New requests to enqueue, polled between decode steps (open-loop
+    /// serving only).  `idle` is true when the engine has no live lanes and
+    /// an empty queue — the hook may block until traffic arrives instead of
+    /// spinning.  Return `None` once the ingress is closed for good: the
+    /// engine drains what it has and returns.
+    fn poll_ingress(&mut self, _idle: bool) -> Option<Vec<Request>> {
+        None
+    }
+
+    /// Cancellation orders (fired cancel tokens + expired deadlines) to
+    /// apply before the next decode step.
+    fn take_cancellations(&mut self, _now: Instant) -> Vec<Cancellation> {
+        Vec::new()
+    }
+
+    /// A request was admitted into KV lane `lane` after `step` decode steps.
+    fn on_started(&mut self, _id: u64, _lane: usize, _step: usize) {}
+
+    /// A token was sampled for `id` at row position `pos` — delivered as it
+    /// is sampled, not at wave end.
+    fn on_token(&mut self, _id: u64, _pos: usize, _token: i32, _step: usize) {}
+
+    /// A request finished; `completion` carries its full row + latencies.
+    fn on_done(&mut self, _completion: &Completion) {}
+
+    /// A request was cancelled; `tokens` is the partial row (prompt +
+    /// whatever was generated before retirement).
+    fn on_cancelled(&mut self, _id: u64, _tokens: Vec<i32>, _reason: CancelReason, _step: usize) {}
+}
+
+/// The no-op hook closed-set serving runs with.
+pub struct NoHook;
+
+impl StepHook for NoHook {}
+
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub completed: usize,
+    /// Requests retired early (cancel token or deadline expiry).
+    pub cancelled: usize,
+    /// Generated (non-prompt) tokens, including those streamed out by
+    /// requests that were later cancelled mid-decode.
     pub generated_tokens: usize,
     pub wall_s: f64,
     pub kv_peak_bytes: usize,
     /// Fused decode steps executed (each runs all batch lanes).
     pub decode_steps: usize,
-    /// Requests admitted into a lane (== completed after a full drain).
+    /// Requests admitted into a lane (== completed after a full drain when
+    /// nothing was cancelled).
     pub admissions: usize,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
@@ -83,9 +159,7 @@ impl ServeMetrics {
         }
     }
 
-    fn observe_latencies(&mut self, completions: &[Completion]) {
-        let mut lat: Vec<f64> = completions.iter().map(|c| c.latency_s).collect();
-        let mut ttft: Vec<f64> = completions.iter().map(|c| c.ttft_s).collect();
+    fn observe_latencies(&mut self, mut lat: Vec<f64>, mut ttft: Vec<f64>) {
         lat.sort_by(f64::total_cmp);
         ttft.sort_by(f64::total_cmp);
         self.latency_p50_s = percentile(&lat, 0.50);
@@ -167,10 +241,48 @@ impl<'rt> Engine<'rt> {
         policy: BatchPolicy,
         admission: Admission,
     ) -> Result<(Vec<Completion>, ServeMetrics)> {
+        self.serve_hooked(requests, policy, admission, &mut NoHook)
+    }
+
+    /// Closed-set serving with a per-step observer: identical scheduling to
+    /// [`Engine::serve_with`] (a [`NoHook`] hook reproduces it bit-for-bit),
+    /// plus streamed `on_token`/`on_done` callbacks and cancellation orders
+    /// applied between decode steps.
+    pub fn serve_hooked(
+        &self,
+        requests: Vec<Request>,
+        policy: BatchPolicy,
+        admission: Admission,
+        hook: &mut dyn StepHook,
+    ) -> Result<(Vec<Completion>, ServeMetrics)> {
+        self.serve_core(requests, policy, admission, hook, false)
+    }
+
+    /// Open-loop serving: the thread-owning `server::` gateway's entry
+    /// point.  Requests arrive through `hook.poll_ingress` between decode
+    /// steps (blocking when the engine is idle) until the hook closes the
+    /// ingress, after which the engine drains and returns its metrics.
+    /// Completions are delivered exclusively through `hook.on_done` /
+    /// `hook.on_cancelled` — no per-request rows are retained (only the
+    /// id-uniqueness set and per-completion latency samples for the final
+    /// percentiles grow with traffic).
+    pub fn serve_open(&self, policy: BatchPolicy, hook: &mut dyn StepHook) -> Result<ServeMetrics> {
+        let (_, metrics) = self.serve_core(Vec::new(), policy, Admission::Continuous, hook, true)?;
+        Ok(metrics)
+    }
+
+    fn serve_core(
+        &self,
+        initial: Vec<Request>,
+        policy: BatchPolicy,
+        admission: Admission,
+        hook: &mut dyn StepHook,
+        open: bool,
+    ) -> Result<(Vec<Completion>, ServeMetrics)> {
         if policy.max_batch == 0 {
             bail!("BatchPolicy.max_batch must be >= 1");
         }
-        let order: Vec<u64> = requests.iter().map(|r| r.id).collect();
+        let order: Vec<u64> = initial.iter().map(|r| r.id).collect();
         let mut uniq = HashSet::new();
         for id in &order {
             if !uniq.insert(*id) {
@@ -183,13 +295,15 @@ impl<'rt> Engine<'rt> {
         let cap = policy.max_batch.min(b);
         let cwin = self.kv_cfg.max_positions;
         let mut batcher = Batcher::new(policy);
-        for r in requests {
+        for r in initial {
             batcher.push(r);
         }
         let mut kv = KvManager::new(self.kv_cfg.clone());
         let mut lanes: Vec<Option<Session>> = (0..b).map(|_| None).collect();
         let mut done: HashMap<u64, Completion> = HashMap::new();
         let mut metrics = ServeMetrics::default();
+        let (mut lat, mut ttfts): (Vec<f64>, Vec<f64>) = (Vec::new(), Vec::new());
+        let mut ingress_open = open;
 
         // Params marshalled once; KV caches live literal-side across the
         // whole loop and only round-trip to host on lane churn.
@@ -198,9 +312,49 @@ impl<'rt> Engine<'rt> {
         let mut dec = DecodeSession::new(self.rt, &self.config, &self.program, &param_values)?;
         drop(param_values);
 
-        while !batcher.is_empty() || lanes.iter().any(|l| l.is_some()) {
-            // ---- admission: refill freed lanes between decode steps ----
+        loop {
+            // ---- ingress: accept new work between decode steps ----
+            if ingress_open {
+                let idle = batcher.is_empty() && lanes.iter().all(|l| l.is_none());
+                match hook.poll_ingress(idle) {
+                    None => ingress_open = false,
+                    Some(reqs) => {
+                        for r in reqs {
+                            if !uniq.insert(r.id) {
+                                bail!("duplicate request id {}", r.id);
+                            }
+                            batcher.push(r);
+                        }
+                    }
+                }
+            }
+            if !ingress_open && batcher.is_empty() && lanes.iter().all(|l| l.is_none()) {
+                break; // drained
+            }
+
             let now = Instant::now();
+            // ---- cancellation: retire sessions between decode steps ----
+            // A cancelled lane frees *before* this iteration's admission
+            // pass, so a waiting request reclaims it without skipping a
+            // decode step.
+            for c in hook.take_cancellations(now) {
+                let lane = lanes
+                    .iter()
+                    .position(|l| l.as_ref().is_some_and(|s| s.id() == c.id));
+                if let Some(lane) = lane {
+                    let sess = lanes[lane].take().expect("lane occupied");
+                    kv.free(sess.slot())?;
+                    metrics.cancelled += 1;
+                    metrics.generated_tokens += sess.generated();
+                    hook.on_cancelled(c.id, sess.into_tokens(), c.reason, metrics.decode_steps);
+                } else if let Some(req) = batcher.remove(c.id) {
+                    metrics.cancelled += 1;
+                    hook.on_cancelled(c.id, req.prompt, c.reason, metrics.decode_steps);
+                }
+                // Unknown or already-finished id: completion won the race.
+            }
+
+            // ---- admission: refill freed lanes between decode steps ----
             let mut live = lanes.iter().filter(|l| l.is_some()).count();
             let gate_open = match admission {
                 Admission::Continuous => true,
@@ -209,19 +363,27 @@ impl<'rt> Engine<'rt> {
             let mut fresh: Vec<usize> = Vec::new();
             if gate_open {
                 while live < cap && kv.free_slots() > 0 {
-                    // Closed request set → drain semantics: admit whenever
-                    // capacity exists.  An open-ended server would pass
-                    // `drain: false` and let saturation/max_wait decide.
+                    // Admit whenever capacity exists: a fused decode step
+                    // runs all B lanes whether occupied or not, so holding a
+                    // waiter back never helps (max_wait is a wave-admission
+                    // knob; slot-level admission ignores it).
                     let Some(req) = batcher.pop_admissible(now, true) else { break };
                     let slot = kv.allocate(req.id)?;
                     let sess = Session::new(req, slot, cwin, now);
                     metrics.admissions += 1;
+                    hook.on_started(sess.id(), slot, metrics.decode_steps);
                     if sess.is_done() {
                         // Nothing to decode (max_new == 0 or the prompt
                         // already fills the window): complete immediately.
                         kv.free(slot)?;
                         metrics.completed += 1;
-                        done.insert(sess.id(), sess.finish(now, metrics.decode_steps));
+                        let c = sess.finish(now, metrics.decode_steps);
+                        lat.push(c.latency_s);
+                        ttfts.push(c.ttft_s);
+                        hook.on_done(&c);
+                        if !open {
+                            done.insert(c.id, c);
+                        }
                         continue;
                     }
                     lanes[slot] = Some(sess);
@@ -231,6 +393,9 @@ impl<'rt> Engine<'rt> {
             }
             if lanes.iter().all(|l| l.is_none()) {
                 if batcher.is_empty() {
+                    if ingress_open {
+                        continue; // back to a blocking ingress poll
+                    }
                     break; // everything completed at admission time
                 }
                 bail!("scheduler stalled: free lanes but nothing admissible");
@@ -275,35 +440,55 @@ impl<'rt> Engine<'rt> {
                 let Some(sess) = lanes[lane].as_mut() else { continue };
                 kv.advance(sess.slot())?;
                 let row = &logits.data()[lane * self.vocab..(lane + 1) * self.vocab];
-                if sess.observe(row, now) {
+                let finished = sess.observe(row, now);
+                let id = sess.id();
+                if let Some((pos, tok)) = sess.last_sampled() {
+                    hook.on_token(id, pos, tok, metrics.decode_steps);
+                }
+                if finished {
                     let sess = lanes[lane].take().expect("lane occupied");
                     kv.free(sess.slot())?;
                     metrics.completed += 1;
                     metrics.generated_tokens += sess.generated();
-                    done.insert(sess.id(), sess.finish(now, metrics.decode_steps));
+                    let c = sess.finish(now, metrics.decode_steps);
+                    lat.push(c.latency_s);
+                    ttfts.push(c.ttft_s);
+                    hook.on_done(&c);
+                    if !open {
+                        done.insert(c.id, c);
+                    }
                 }
             }
         }
 
-        // Conservation: every slot returned, every request accounted for.
+        // Conservation: every slot returned, every request accounted for —
+        // completed or cancelled, never lost.
         if kv.free_slots() != b {
             bail!("KV slot leak: {}/{} free after drain", kv.free_slots(), b);
         }
         let (enq, adm) = batcher.counters();
-        if enq != adm || done.len() != order.len() {
+        if enq != adm + batcher.removed()
+            || metrics.completed + metrics.cancelled != enq as usize
+        {
             bail!(
-                "request conservation violated: enqueued {enq}, admitted {adm}, completed {}",
-                done.len()
+                "request conservation violated: enqueued {enq}, admitted {adm}, \
+                 removed {}, completed {}, cancelled {}",
+                batcher.removed(),
+                metrics.completed,
+                metrics.cancelled
             );
         }
 
         metrics.wall_s = sw.elapsed_s();
         metrics.kv_peak_bytes = kv.peak_bytes();
-        let out: Vec<Completion> = order
-            .iter()
-            .map(|id| done.remove(id).with_context(|| format!("request {id} lost")))
-            .collect::<Result<_>>()?;
-        metrics.observe_latencies(&out);
+        metrics.observe_latencies(lat, ttfts);
+        let out: Vec<Completion> = if open {
+            Vec::new()
+        } else {
+            // Input order, cancelled requests omitted (their partial rows
+            // went out through the hook).
+            order.iter().filter_map(|id| done.remove(id)).collect()
+        };
         Ok((out, metrics))
     }
 }
@@ -364,7 +549,7 @@ mod tests {
 
     #[test]
     fn serves_batch_of_requests() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         let now = Instant::now();
@@ -392,7 +577,7 @@ mod tests {
 
     #[test]
     fn midflight_admission_beats_waves() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         let now = Instant::now();
@@ -426,7 +611,7 @@ mod tests {
 
     #[test]
     fn non_contiguous_ids_in_input_order() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         let now = Instant::now();
@@ -454,7 +639,7 @@ mod tests {
 
     #[test]
     fn per_request_latency_not_batch_latency() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         let now = Instant::now();
@@ -481,7 +666,7 @@ mod tests {
 
     #[test]
     fn sampled_decode_is_deterministic_and_in_vocab() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let vocab = rt.manifest().config("tiny").unwrap().dim("vocab").unwrap() as i32;
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
@@ -515,7 +700,7 @@ mod tests {
 
     #[test]
     fn slot_conservation_under_churn_property() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let params = init_params(&rt, "tiny", 9).unwrap();
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         // serve_with itself bails on any slot leak / conservation breach;
@@ -559,9 +744,133 @@ mod tests {
         });
     }
 
+    /// Records hook callbacks and fires one cancellation after the target
+    /// request has streamed `fire_after` tokens.
+    struct CancellingHook {
+        target: u64,
+        fire_after: usize,
+        target_tokens: usize,
+        fired: bool,
+        started: Vec<u64>,
+        tokens: Vec<(u64, usize, i32)>,
+        done_ids: Vec<u64>,
+        cancelled: Vec<(u64, Vec<i32>, CancelReason)>,
+    }
+
+    impl CancellingHook {
+        fn new(target: u64, fire_after: usize) -> Self {
+            Self {
+                target,
+                fire_after,
+                target_tokens: 0,
+                fired: false,
+                started: Vec::new(),
+                tokens: Vec::new(),
+                done_ids: Vec::new(),
+                cancelled: Vec::new(),
+            }
+        }
+    }
+
+    impl StepHook for CancellingHook {
+        fn take_cancellations(&mut self, _now: Instant) -> Vec<Cancellation> {
+            if !self.fired && self.target_tokens >= self.fire_after {
+                self.fired = true;
+                return vec![Cancellation { id: self.target, reason: CancelReason::User }];
+            }
+            Vec::new()
+        }
+
+        fn on_started(&mut self, id: u64, _lane: usize, _step: usize) {
+            self.started.push(id);
+        }
+
+        fn on_token(&mut self, id: u64, pos: usize, token: i32, _step: usize) {
+            if id == self.target {
+                self.target_tokens += 1;
+            }
+            self.tokens.push((id, pos, token));
+        }
+
+        fn on_done(&mut self, completion: &Completion) {
+            self.done_ids.push(completion.id);
+        }
+
+        fn on_cancelled(&mut self, id: u64, tokens: Vec<i32>, reason: CancelReason, _step: usize) {
+            self.cancelled.push((id, tokens, reason));
+        }
+    }
+
+    #[test]
+    fn hooked_serve_streams_tokens_and_cancels_between_steps() {
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
+        let params = init_params(&rt, "tiny", 9).unwrap();
+        let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
+        let now = Instant::now();
+        let prompt_len = 2;
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request::greedy(i, vec![1, 2 + i as i32], 6, now))
+            .collect();
+        let mut hook = CancellingHook::new(1, 2);
+        let (completions, metrics) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+
+        // The cancelled request is gone from the completions; everyone
+        // else finished in input order.
+        assert_eq!(completions.iter().map(|c| c.id).collect::<Vec<_>>(), vec![0, 2, 3]);
+        assert_eq!(metrics.completed, 3);
+        assert_eq!(metrics.cancelled, 1);
+        assert_eq!(hook.started.len(), 4, "all four admitted");
+        assert_eq!(hook.done_ids.len(), 3);
+
+        // Cancellation applied between decode steps, right after the
+        // second generated token: the partial row is prompt + 2.
+        assert_eq!(hook.cancelled.len(), 1);
+        let (cid, partial, reason) = &hook.cancelled[0];
+        assert_eq!((*cid, *reason), (1, CancelReason::User));
+        assert_eq!(partial.len(), prompt_len + 2);
+        assert_eq!(&partial[..prompt_len], &[1, 3]);
+
+        // Streamed tokens reconstruct each completion's generated suffix
+        // exactly — token-level delivery carries the same data wave-end
+        // delivery would.
+        for c in &completions {
+            let streamed: Vec<i32> = hook
+                .tokens
+                .iter()
+                .filter(|(id, _, _)| *id == c.id)
+                .map(|&(_, _, t)| t)
+                .collect();
+            assert_eq!(streamed.as_slice(), &c.tokens[prompt_len..], "request {}", c.id);
+            // Positions are the absolute row indices of the generated part.
+            let positions: Vec<usize> = hook
+                .tokens
+                .iter()
+                .filter(|(id, _, _)| *id == c.id)
+                .map(|&(_, p, _)| p)
+                .collect();
+            let want: Vec<usize> = (prompt_len..c.tokens.len()).collect();
+            assert_eq!(positions, want);
+        }
+
+        // A NoHook run of the same (uncancelled) trace is bit-identical to
+        // serve_all — the hook plumbing itself changes nothing.
+        let mk = |ids: &[u64]| -> Vec<Request> {
+            ids.iter().map(|&i| Request::greedy(i, vec![1, 2 + i as i32], 6, now)).collect()
+        };
+        let (a, _) = engine.serve_all(mk(&[0, 1, 2, 3]), policy()).unwrap();
+        let (b, _) = engine
+            .serve_hooked(mk(&[0, 1, 2, 3]), policy(), Admission::Continuous, &mut NoHook)
+            .unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
     #[test]
     fn factorized_engine_kv_smaller() {
-        let rt = Runtime::new(&art()).expect("runtime");
+        let Some(rt) = crate::testing::runtime_or_skip(&art()) else { return };
         let entry = rt.manifest().config("tiny").unwrap().clone();
         let dense = init_params(&rt, "tiny", 9).unwrap();
         let (fac, r) = crate::coordinator::ops::prune_to_ratio(&entry, &dense, 0.5, "clover")

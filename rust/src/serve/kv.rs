@@ -117,8 +117,10 @@ impl KvManager {
         self.slots.iter().filter(|s| s.is_none()).count()
     }
 
+    /// Positions recorded for `slot`; 0 for a free slot *or* an
+    /// out-of-range index, matching the other accessors' no-panic contract.
     pub fn positions(&self, slot: usize) -> usize {
-        self.slots[slot].as_ref().map_or(0, |s| s.positions)
+        self.slots.get(slot).and_then(|s| s.as_ref()).map_or(0, |s| s.positions)
     }
 }
 
@@ -198,6 +200,17 @@ mod tests {
             kv.advance(s).unwrap();
         }
         assert!(kv.advance(s).is_err());
+    }
+
+    #[test]
+    fn positions_out_of_range_is_zero_not_panic() {
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        kv.advance(s).unwrap();
+        assert_eq!(kv.positions(s), 1);
+        // Free slot and out-of-range index both read as 0.
+        assert_eq!(kv.positions(s + 1), 0);
+        assert_eq!(kv.positions(1000), 0);
     }
 
     #[test]

@@ -27,6 +27,39 @@
 //! slot-level scheduler turns those freed bytes into admitted requests,
 //! measured by [`engine::ServeMetrics`] (tokens/s, TTFT, p50/p99 latency,
 //! peak KV bytes).
+//!
+//! ## The step hook and the `server::` layer above
+//!
+//! The engine's step loop is observable and steerable through
+//! [`engine::StepHook`]: between decode steps it polls the hook for new
+//! requests ([`Engine::serve_open`] blocks there when idle) and for
+//! cancellation orders (fired cancel tokens, expired deadlines — the
+//! session retires and its KV lane frees *before* the same iteration's
+//! admission pass, so a waiter reclaims it without skipping a step), and
+//! during the step it reports admissions, every sampled token, and every
+//! completion as they happen.
+//!
+//! [`crate::server`] is the thread-owning front-end built on that hook.
+//! One request's lifecycle through the full stack:
+//!
+//! ```text
+//!  client        gateway thread (owns Runtime + Engine)
+//!  ------        --------------------------------------
+//!  submit ──────▶ bounded ingress channel ──▶ poll_ingress ──▶ batcher
+//!    │ Queued                                        admission │
+//!    ◀─────────── Started ◀── on_started ◀───────────────────┘
+//!    ◀─────────── Token{pos,id} ◀── on_token   (per sampled token)
+//!    ◀─────────── Done{completion} | Cancelled ◀── on_done/on_cancelled
+//!  cancel token ─▶ control channel ──▶ take_cancellations (between steps)
+//! ```
+//!
+//! Every submitted request receives exactly one terminal event — `Done`
+//! on completion (graceful shutdown drains accepted work to completion),
+//! `Cancelled` on token fire or deadline expiry.  `server::Router`
+//! multiplexes this across several
+//! gateways whose engines were compiled at different CLOVER pruning ranks,
+//! routing each request by queue depth × per-rank KV cost
+//! ([`KvConfig::bytes_per_token`]).
 
 pub mod batcher;
 pub mod engine;
@@ -35,7 +68,9 @@ pub mod sampling;
 pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
-pub use engine::{Admission, Completion, Engine, ServeMetrics};
+pub use engine::{
+    Admission, Cancellation, CancelReason, Completion, Engine, NoHook, ServeMetrics, StepHook,
+};
 pub use kv::{KvConfig, KvManager, PAGE_TOKENS};
 pub use sampling::{Sampler, SamplingParams};
 pub use session::Session;

@@ -34,6 +34,11 @@ pub struct Session {
     ttft_s: Option<f64>,
     stopped: bool,
     steps: usize,
+    /// `(row position, token)` sampled by the most recent [`Session::observe`]
+    /// call, or `None` when that step only consumed prompt.  This is what the
+    /// engine's per-step hook streams out as tokens are sampled, rather than
+    /// waiting for the completion at wave end.
+    last_sampled: Option<(usize, i32)>,
 }
 
 impl Session {
@@ -54,6 +59,7 @@ impl Session {
             ttft_s: None,
             stopped: false,
             steps: 0,
+            last_sampled: None,
         }
     }
 
@@ -108,17 +114,37 @@ impl Session {
         debug_assert!(!self.is_done(), "observe on a finished session");
         self.steps += 1;
         self.cursor += 1;
+        self.last_sampled = None;
         if self.cursor >= self.row.len() && self.row.len() < self.target_len {
             let tok = self.sampler.sample(logits);
             if self.ttft_s.is_none() {
                 self.ttft_s = Some(now.duration_since(self.arrived).as_secs_f64());
             }
             self.row.push(tok);
+            self.last_sampled = Some((self.row.len() - 1, tok));
             if self.sampler.is_stop(tok) {
                 self.stopped = true;
             }
         }
         self.is_done()
+    }
+
+    /// `(row position, token)` sampled by the most recent observe, if any.
+    /// Positions are absolute row indices: the prompt occupies
+    /// `[0, prompt_len)`, so the k-th generated token sits at `prompt_len + k`.
+    pub fn last_sampled(&self) -> Option<(usize, i32)> {
+        self.last_sampled
+    }
+
+    /// The token row so far (prompt + generated) — partial output handed to
+    /// the cancellation path when a session retires early.
+    pub fn tokens(&self) -> &[i32] {
+        &self.row
+    }
+
+    /// Consume the session into its token row (cancellation retirement).
+    pub fn into_tokens(self) -> Vec<i32> {
+        self.row
     }
 
     /// Retire into a [`Completion`].  `finished_step` is the engine's
@@ -190,6 +216,25 @@ mod tests {
 
     fn s_row_last(s: &Session) -> &i32 {
         s.row.last().unwrap()
+    }
+
+    #[test]
+    fn last_sampled_tracks_generated_tokens_only() {
+        let now = Instant::now();
+        let mut s = Session::new(req(1, vec![5, 6], 2, SamplingParams::greedy()), 0, 64, now);
+        let mut rng = Rng::new(3);
+        // First observe consumes prompt: nothing sampled.
+        assert!(!s.observe(&logits_from(&mut rng), now));
+        assert_eq!(s.last_sampled(), None);
+        // Second observe ends prefill: first generated token at row index 2.
+        assert!(!s.observe(&logits_from(&mut rng), now));
+        let (pos, tok) = s.last_sampled().expect("token sampled");
+        assert_eq!(pos, 2);
+        assert_eq!(s.tokens()[pos], tok);
+        // Final observe samples the last token at row index 3 and finishes.
+        assert!(s.observe(&logits_from(&mut rng), now));
+        assert_eq!(s.last_sampled().map(|(p, _)| p), Some(3));
+        assert_eq!(s.into_tokens().len(), 4);
     }
 
     #[test]

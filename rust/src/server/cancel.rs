@@ -1,0 +1,187 @@
+//! Cancellation tokens, per-request deadlines, and the registry that turns
+//! them into engine [`Cancellation`] orders.
+//!
+//! A [`CancelToken`] travels with every accepted submission; firing it
+//! sends a control message to the gateway worker, which applies it
+//! *between decode steps*: the session retires, its partial tokens go out
+//! as a `Cancelled` stream event, and its KV lane frees in time for the
+//! same iteration's admission pass.  Deadlines are absolute instants fixed
+//! at submission; the registry surfaces them through the same path with
+//! [`CancelReason::Deadline`].
+//!
+//! Cancels ride an *unbounded* channel separate from the bounded ingress,
+//! so a client can always cancel even while submitters are blocked on
+//! backpressure — and because the two channels are unordered relative to
+//! each other, a cancel can arrive before its own submission.  The
+//! registry keeps such pre-cancels in its `cancelled` set until the id is
+//! tracked; ids are tracked only at the moment the gateway hands them to
+//! the engine, so every cancellation [`CancelRegistry::due`] surfaces
+//! targets a request the engine actually knows about (in a lane or in its
+//! batcher) and the engine's metrics count every retirement.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use super::gateway::Ctrl;
+use crate::serve::{CancelReason, Cancellation};
+
+/// Client-side handle to cancel one request.  Cloneable; firing it more
+/// than once is harmless (the first application wins, later ones find the
+/// id already retired).
+#[derive(Clone, Debug)]
+pub struct CancelToken {
+    id: u64,
+    ctrl: mpsc::Sender<Ctrl>,
+}
+
+impl CancelToken {
+    pub(crate) fn new(id: u64, ctrl: mpsc::Sender<Ctrl>) -> Self {
+        Self { id, ctrl }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Fire the cancellation.  Returns `false` when the gateway worker is
+    /// already gone (the request ended one way or another regardless).
+    pub fn cancel(&self) -> bool {
+        self.ctrl.send(Ctrl::Cancel(self.id)).is_ok()
+    }
+}
+
+/// Worker-side bookkeeping: which ids are live, which have user cancels
+/// pending, and when deadlines expire.  Pure data structure — unit
+/// testable without an engine.
+#[derive(Debug, Default)]
+pub struct CancelRegistry {
+    /// Ids the gateway accepted and has not yet seen a terminal event for.
+    live: HashSet<u64>,
+    /// User cancels seen.  Kept until the id retires so a cancel that beat
+    /// its own submission across the two channels still lands.  (A cancel
+    /// for an id that already retired leaves a stale u64 here — bounded by
+    /// the number of post-terminal cancels, which a client has no reason
+    /// to send twice.)
+    cancelled: HashSet<u64>,
+    /// Deadline min-heap: earliest expiry first.
+    deadlines: BinaryHeap<Reverse<(Instant, u64)>>,
+}
+
+impl CancelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of tracked (non-terminal) requests.
+    pub fn live(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Track a request at the moment it is handed to the engine (not
+    /// before: a cancellation surfaced for an id the engine cannot see in
+    /// a lane or its batcher would be silently dropped there).  A cancel
+    /// that arrived earlier is already waiting in the `cancelled` set and
+    /// fires on the next [`CancelRegistry::due`] call.
+    pub fn track(&mut self, id: u64, deadline: Option<Instant>) {
+        self.live.insert(id);
+        if let Some(d) = deadline {
+            self.deadlines.push(Reverse((d, id)));
+        }
+    }
+
+    /// Record a user cancel (idempotent).
+    pub fn cancel(&mut self, id: u64) {
+        self.cancelled.insert(id);
+    }
+
+    /// The id reached a terminal event; drop all state for it.
+    pub fn retire(&mut self, id: u64) {
+        self.live.remove(&id);
+        self.cancelled.remove(&id);
+    }
+
+    /// Cancellations due now: user cancels for live ids, then deadlines
+    /// that expired at or before `now`.  Ids leave `live` here so each is
+    /// surfaced at most once; stale heap entries for retired ids are
+    /// skipped lazily.
+    pub fn due(&mut self, now: Instant) -> Vec<Cancellation> {
+        let mut out = Vec::new();
+        if !self.cancelled.is_empty() {
+            let fired: Vec<u64> = self
+                .cancelled
+                .iter()
+                .copied()
+                .filter(|id| self.live.contains(id))
+                .collect();
+            for id in fired {
+                self.cancelled.remove(&id);
+                self.live.remove(&id);
+                out.push(Cancellation { id, reason: CancelReason::User });
+            }
+        }
+        while let Some(&Reverse((t, id))) = self.deadlines.peek() {
+            if t > now {
+                break;
+            }
+            self.deadlines.pop();
+            if self.live.remove(&id) {
+                out.push(Cancellation { id, reason: CancelReason::Deadline });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn user_cancel_fires_once_for_live_id() {
+        let mut r = CancelRegistry::new();
+        r.track(1, None);
+        r.cancel(1);
+        r.cancel(1); // idempotent
+        let due = r.due(Instant::now());
+        assert_eq!(due, vec![Cancellation { id: 1, reason: CancelReason::User }]);
+        assert!(r.due(Instant::now()).is_empty(), "surfaced at most once");
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn pre_cancel_waits_for_tracking_then_fires() {
+        let mut r = CancelRegistry::new();
+        r.cancel(5); // cancel beats submission across channels
+        assert!(r.due(Instant::now()).is_empty(), "untracked ids never fire");
+        r.track(5, None); // handed to the engine
+        let due = r.due(Instant::now());
+        assert_eq!(due, vec![Cancellation { id: 5, reason: CancelReason::User }]);
+        assert_eq!(r.live(), 0);
+    }
+
+    #[test]
+    fn deadlines_expire_in_order_and_skip_retired() {
+        let mut r = CancelRegistry::new();
+        let now = Instant::now();
+        r.track(1, Some(now)); // already due
+        r.track(2, Some(now + Duration::from_secs(60)));
+        r.track(3, Some(now));
+        r.retire(3); // finished before its deadline
+        let due = r.due(now);
+        assert_eq!(due, vec![Cancellation { id: 1, reason: CancelReason::Deadline }]);
+        assert_eq!(r.live(), 1, "id 2 still live");
+        assert!(r.due(now).is_empty(), "id 2 not due for a minute");
+    }
+
+    #[test]
+    fn retire_beats_late_cancel() {
+        let mut r = CancelRegistry::new();
+        r.track(9, None);
+        r.retire(9); // Done event won the race
+        r.cancel(9); // late cancel
+        assert!(r.due(Instant::now()).is_empty(), "terminal ids never cancel");
+    }
+}

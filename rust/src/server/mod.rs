@@ -1,0 +1,43 @@
+//! Streaming server front-end: the thread-owning layer above [`crate::serve`].
+//!
+//! The serving engine is a library call — `Engine::serve_all` takes a
+//! complete request vector and blocks until every completion returns.
+//! This module turns it into a *server*: traffic is fed in over time
+//! through channels, tokens stream out as they are sampled, requests can
+//! be cancelled (or expire) mid-decode with their KV lane reclaimed
+//! between decode steps, and a router spreads live traffic across engines
+//! compiled at different CLOVER pruning ranks.
+//!
+//! * [`gateway`] — the thread-owning core.  [`Gateway::spawn`] starts a
+//!   worker thread that owns its `Runtime` + `Engine` (the PJRT handles
+//!   are not `Sync`, so they never cross threads) and drives
+//!   `Engine::serve_open`.  Clients reach it only through channels: a
+//!   *bounded* ingress channel (`submit` blocks when full — backpressure;
+//!   `try_submit` refuses with [`SubmitError::Saturated`]) and an
+//!   unbounded control channel for cancels/shutdown, so control is never
+//!   stuck behind a full queue.
+//! * [`stream`] — per-request event streams.  Each submission returns a
+//!   [`RequestStream`] that yields `Queued → Started → Token{pos,id}… →
+//!   Done{completion} | Cancelled`, with `Token` events delivered as
+//!   tokens are sampled rather than at wave end.  Every submitted request
+//!   receives exactly one terminal event.
+//! * [`cancel`] — [`CancelToken`]s clients fire, per-request deadlines,
+//!   and the [`CancelRegistry`] the gateway keeps them in; the engine
+//!   retires cancelled sessions between decode steps, freeing their KV
+//!   lane for the next waiter without skipping a step.
+//! * [`router`] — rank-aware dispatch across several gateways (e.g. dense
+//!   / r=8 / r=4).  Each request goes to the gateway minimizing
+//!   `(in_flight + 1) × KvConfig::bytes_per_token`, which is exactly the
+//!   paper's trade made operational: pruning rank shrinks per-token KV
+//!   cost by r/d, so pruned engines absorb proportionally more of the
+//!   queue before costing as much as their dense sibling.
+
+pub mod cancel;
+pub mod gateway;
+pub mod router;
+pub mod stream;
+
+pub use cancel::{CancelRegistry, CancelToken};
+pub use gateway::{EngineSpec, Gateway, GatewayConfig, ParamSource, SubmitError, Ticket};
+pub use router::Router;
+pub use stream::{RequestStream, StreamEvent, StreamOutcome, TryNext};

@@ -1,0 +1,108 @@
+//! Rank-aware routing across gateways whose engines were compiled at
+//! different CLOVER pruning ranks.
+//!
+//! The paper's claim, made operational: pruning head rank to r cuts KV
+//! bytes per token to r/d of dense ([`crate::serve::KvConfig::bytes_per_token`]),
+//! so at equal queue depth a pruned engine is the cheaper place to put the
+//! next request.  The router scores each gateway as
+//!
+//! ```text
+//! score(g) = (in_flight(g) + 1) × kv_bytes_per_token(g)
+//! ```
+//!
+//! — the marginal KV pressure of admitting one more request there — and
+//! dispatches to the minimum.  Cheap-rank engines therefore absorb
+//! traffic until their backlog outweighs the rank saving, at which point
+//! the dense engine starts taking overflow; the per-gateway shares the
+//! bench reports are the measured version of that trade-off.
+//!
+//! Ties resolve to the earliest gateway in construction order, so callers
+//! list their preferred (typically lowest-rank) engine first.
+
+use anyhow::{bail, Result};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::{SamplingParams, ServeMetrics};
+
+use super::gateway::{Gateway, SubmitError, Ticket};
+
+pub struct Router {
+    gateways: Vec<Gateway>,
+}
+
+impl Router {
+    pub fn new(mut gateways: Vec<Gateway>) -> Result<Self> {
+        if gateways.is_empty() {
+            bail!("Router needs at least one gateway");
+        }
+        // One id counter for the whole fleet: a consumer muxing events
+        // from several gateways can key on `StreamEvent::id` without
+        // cross-gateway collisions.
+        let ids = Arc::new(AtomicU64::new(0));
+        for g in &mut gateways {
+            g.share_id_counter(ids.clone());
+        }
+        Ok(Self { gateways })
+    }
+
+    pub fn gateways(&self) -> &[Gateway] {
+        &self.gateways
+    }
+
+    /// Marginal KV pressure of admitting one more request to `g`.
+    fn score(g: &Gateway) -> u128 {
+        (g.in_flight() as u128 + 1) * g.kv_bytes_per_token() as u128
+    }
+
+    /// Index of the gateway the next request would go to.
+    pub fn pick(&self) -> usize {
+        self.gateways
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, g)| Self::score(g))
+            .map(|(i, _)| i)
+            .expect("router is non-empty")
+    }
+
+    /// Route one request (blocking submit — backpressure applies at the
+    /// chosen gateway).  Returns the chosen gateway index with the ticket.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        sampling: SamplingParams,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<(usize, Ticket), SubmitError> {
+        let idx = self.pick();
+        let ticket = self.gateways[idx].submit(prompt, max_new, sampling, deadline)?;
+        Ok((idx, ticket))
+    }
+
+    /// Per-gateway share of all submissions routed so far, as
+    /// `(name, rank, submitted)` rows.
+    pub fn shares(&self) -> Vec<(String, usize, usize)> {
+        self.gateways
+            .iter()
+            .map(|g| (g.name().to_string(), g.rank(), g.submitted()))
+            .collect()
+    }
+
+    /// Gracefully shut every gateway down, returning each engine's final
+    /// metrics keyed by gateway name.  Shutdown is signalled to all
+    /// gateways *before* any is joined, so the engines drain in parallel
+    /// (wall time ≈ the slowest drain, not the sum).
+    pub fn join(self) -> Result<Vec<(String, ServeMetrics)>> {
+        for g in &self.gateways {
+            g.signal_shutdown();
+        }
+        self.gateways
+            .into_iter()
+            .map(|g| {
+                let name = g.name().to_string();
+                g.join().map(|m| (name, m))
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,238 @@
+//! Per-request event streams: the client half of the gateway.
+//!
+//! Each submission hands back a [`RequestStream`] — an mpsc receiver the
+//! gateway worker feeds as the engine's step hook fires.  The lifecycle is
+//!
+//! ```text
+//! Queued → Started → Token{pos,id} … → Done{completion}
+//!                  └──────────────────▶ Cancelled{reason, partial tokens}
+//! ```
+//!
+//! `Queued` is sent at submission time (before the worker ever sees the
+//! request), `Token` events arrive as tokens are sampled — *not* at wave
+//! end — and exactly one terminal event (`Done` or `Cancelled`) closes
+//! every stream the gateway accepted.  A stream that ends without a
+//! terminal event means the gateway itself died; [`RequestStream::wait`]
+//! surfaces that as an error instead of hanging.
+
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::serve::{CancelReason, Completion};
+
+/// One moment in a request's lifecycle.  `step` fields carry the engine's
+/// global decode-step counter at the event, which is what the bench uses
+/// to show a cancelled lane being re-admitted within one decode step.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Accepted by the gateway handle; not yet seen by the engine thread.
+    Queued { id: u64 },
+    /// Admitted into a KV lane after `step` decode steps.
+    Started { id: u64, lane: usize, step: usize },
+    /// A token was sampled at absolute row position `pos` (the prompt
+    /// occupies `[0, prompt_len)`, so the k-th generated token sits at
+    /// `prompt_len + k`).
+    Token { id: u64, pos: usize, token: i32, step: usize },
+    /// Terminal: the request finished; full row + latencies inside.
+    Done { completion: Completion },
+    /// Terminal: retired early; `tokens` is the partial row (prompt +
+    /// whatever was generated before retirement).
+    Cancelled { id: u64, reason: CancelReason, tokens: Vec<i32>, step: usize },
+}
+
+impl StreamEvent {
+    pub fn id(&self) -> u64 {
+        match self {
+            StreamEvent::Queued { id }
+            | StreamEvent::Started { id, .. }
+            | StreamEvent::Token { id, .. }
+            | StreamEvent::Cancelled { id, .. } => *id,
+            StreamEvent::Done { completion } => completion.id,
+        }
+    }
+
+    /// `Done` or `Cancelled` — the stream carries nothing after these.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, StreamEvent::Done { .. } | StreamEvent::Cancelled { .. })
+    }
+}
+
+/// How a request ended: the terminal event, minus stream plumbing.
+#[derive(Clone, Debug)]
+pub enum StreamOutcome {
+    Done(Completion),
+    Cancelled { id: u64, reason: CancelReason, tokens: Vec<i32> },
+}
+
+impl StreamOutcome {
+    pub fn is_done(&self) -> bool {
+        matches!(self, StreamOutcome::Done(_))
+    }
+
+    /// The token row this request produced (full on `Done`, partial on
+    /// `Cancelled`).
+    pub fn tokens(&self) -> &[i32] {
+        match self {
+            StreamOutcome::Done(c) => &c.tokens,
+            StreamOutcome::Cancelled { tokens, .. } => tokens,
+        }
+    }
+
+    /// Unwrap the completion, erroring on a cancelled request.
+    pub fn completion(self) -> Result<Completion> {
+        match self {
+            StreamOutcome::Done(c) => Ok(c),
+            StreamOutcome::Cancelled { id, reason, .. } => {
+                bail!("request {id} was cancelled ({reason:?})")
+            }
+        }
+    }
+}
+
+/// Result of a non-blocking poll.
+#[derive(Clone, Debug)]
+pub enum TryNext {
+    Event(StreamEvent),
+    /// Nothing buffered right now; the stream is still live.
+    Empty,
+    /// The gateway dropped its sender — no further events will arrive.
+    Closed,
+}
+
+/// The receiving end of one request's event stream.
+pub struct RequestStream {
+    id: u64,
+    rx: mpsc::Receiver<StreamEvent>,
+}
+
+impl RequestStream {
+    pub(crate) fn new(id: u64, rx: mpsc::Receiver<StreamEvent>) -> Self {
+        Self { id, rx }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block for the next event; `None` once the stream is closed.
+    pub fn next_event(&self) -> Option<StreamEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Block up to `timeout` for the next event.
+    pub fn next_timeout(&self, timeout: Duration) -> Option<StreamEvent> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking poll, distinguishing "nothing yet" from "gateway gone".
+    pub fn try_next(&self) -> TryNext {
+        match self.rx.try_recv() {
+            Ok(ev) => TryNext::Event(ev),
+            Err(mpsc::TryRecvError::Empty) => TryNext::Empty,
+            Err(mpsc::TryRecvError::Disconnected) => TryNext::Closed,
+        }
+    }
+
+    /// Drain to the terminal event.  Errors only if the gateway died
+    /// before delivering one.
+    pub fn wait(self) -> Result<StreamOutcome> {
+        while let Some(ev) = self.next_event() {
+            match ev {
+                StreamEvent::Done { completion } => return Ok(StreamOutcome::Done(completion)),
+                StreamEvent::Cancelled { id, reason, tokens, .. } => {
+                    return Ok(StreamOutcome::Cancelled { id, reason, tokens })
+                }
+                _ => {}
+            }
+        }
+        bail!(
+            "request {}: event stream closed before a terminal event (gateway gone)",
+            self.id
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_all(evs: Vec<StreamEvent>) -> RequestStream {
+        let (tx, rx) = mpsc::channel();
+        for ev in evs {
+            tx.send(ev).unwrap();
+        }
+        RequestStream::new(7, rx)
+    }
+
+    fn done(id: u64) -> StreamEvent {
+        StreamEvent::Done {
+            completion: Completion {
+                id,
+                tokens: vec![1, 2, 3],
+                latency_s: 0.5,
+                ttft_s: 0.1,
+                queue_wait_s: 0.0,
+                steps: 2,
+                finished_step: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn wait_drains_to_done() {
+        let s = push_all(vec![
+            StreamEvent::Queued { id: 7 },
+            StreamEvent::Started { id: 7, lane: 0, step: 0 },
+            StreamEvent::Token { id: 7, pos: 1, token: 2, step: 1 },
+            done(7),
+        ]);
+        let out = s.wait().unwrap();
+        assert!(out.is_done());
+        assert_eq!(out.tokens(), &[1, 2, 3]);
+        assert_eq!(out.completion().unwrap().id, 7);
+    }
+
+    #[test]
+    fn wait_surfaces_cancellation() {
+        let s = push_all(vec![
+            StreamEvent::Queued { id: 7 },
+            StreamEvent::Cancelled {
+                id: 7,
+                reason: CancelReason::Deadline,
+                tokens: vec![1],
+                step: 3,
+            },
+        ]);
+        match s.wait().unwrap() {
+            StreamOutcome::Cancelled { id, reason, tokens } => {
+                assert_eq!((id, reason), (7, CancelReason::Deadline));
+                assert_eq!(tokens, vec![1]);
+            }
+            other => panic!("expected cancellation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_errors_when_gateway_dies_mid_stream() {
+        let s = push_all(vec![StreamEvent::Queued { id: 7 }]); // sender dropped
+        assert!(s.wait().is_err());
+    }
+
+    #[test]
+    fn try_next_distinguishes_empty_from_closed() {
+        let (tx, rx) = mpsc::channel();
+        let s = RequestStream::new(1, rx);
+        assert!(matches!(s.try_next(), TryNext::Empty));
+        tx.send(StreamEvent::Queued { id: 1 }).unwrap();
+        match s.try_next() {
+            TryNext::Event(ev) => {
+                assert_eq!(ev.id(), 1);
+                assert!(!ev.is_terminal());
+            }
+            other => panic!("expected event, got {other:?}"),
+        }
+        drop(tx);
+        assert!(matches!(s.try_next(), TryNext::Closed));
+    }
+}

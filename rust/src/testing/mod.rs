@@ -8,6 +8,22 @@
 
 use crate::util::rng::Rng;
 
+/// Construct the PJRT runtime for an integration test, or skip (`None`)
+/// when no live backend is available: the `xla` dependency is the vendored
+/// build stub, or the AOT artifacts have not been exported yet (`make
+/// artifacts`).  Tests that decode/train through HLO guard themselves with
+/// this so `cargo test` is meaningful on a bare checkout and exhaustive on
+/// a machine with the real bindings + artifacts.
+pub fn runtime_or_skip(artifacts_dir: &str) -> Option<crate::runtime::Runtime> {
+    match crate::runtime::Runtime::new(artifacts_dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (runtime unavailable): {e:#}");
+            None
+        }
+    }
+}
+
 /// Run `f` for `iters` seeds; panic with the failing seed + message.
 ///
 /// `f` returns `Err(msg)` to fail a case.  Panics inside `f` are *not*

@@ -1,0 +1,302 @@
+//! Build-compatible stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The CLOVER runtime executes AOT-lowered HLO through the PJRT C API via
+//! the `xla` crate.  Those bindings link the XLA runtime and are not
+//! vendorable as source here, so this stub stands in with the exact API
+//! surface `clover` uses:
+//!
+//! * **Host-side [`Literal`]s are fully functional** — shape + dtype +
+//!   byte storage, `create_from_shape_and_untyped_data`, `array_shape`,
+//!   `to_vec`, tuple introspection.  Everything in
+//!   `clover::runtime::literal` (and its tests) works for real.
+//! * **Device entry points fail loudly** — [`PjRtClient::cpu`],
+//!   [`PjRtLoadedExecutable::execute`], HLO parsing and `.npz` reading all
+//!   return a descriptive [`Error`], so `Runtime::new` fails with a clear
+//!   message and runtime-gated tests skip themselves
+//!   (`clover::testing::runtime_or_skip`).
+//!
+//! To run against a live backend, point the `xla` path dependency in
+//! `rust/Cargo.toml` at the real bindings (the crate this stub mirrors);
+//! no `clover` source changes are required.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Stub error: a message explaining that the real PJRT bindings are not
+/// present.  The real crate's error is also consumed via `{:?}` only.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} requires the real PJRT bindings; point the `xla` \
+         path dependency in rust/Cargo.toml at them to run artifacts"
+    ))
+}
+
+/// Element dtypes the manifest/literals speak.  Only F32/S32 flow through
+/// clover today; the remaining variants keep dtype matches honest (and the
+/// wildcard arms reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Bf16,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Shape of an array literal: dims (i64, as in the real bindings) + dtype.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Native Rust types a literal's bytes can be viewed as.
+pub trait ArrayElement: Copy + Sized {
+    const TY: ElementType;
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read_le(bytes: &[u8]) -> Self {
+        i32::from_le_bytes(bytes.try_into().expect("4-byte chunk"))
+    }
+}
+
+impl ArrayElement for f64 {
+    const TY: ElementType = ElementType::F64;
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_le_bytes(bytes.try_into().expect("8-byte chunk"))
+    }
+}
+
+impl ArrayElement for i64 {
+    const TY: ElementType = ElementType::S64;
+    fn read_le(bytes: &[u8]) -> Self {
+        i64::from_le_bytes(bytes.try_into().expect("8-byte chunk"))
+    }
+}
+
+enum Repr {
+    Array { shape: ArrayShape, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal.  Fully functional in the stub (the real crate
+/// additionally hands these across the PJRT boundary).
+pub struct Literal(Repr);
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        let want = n * ty.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal {dims:?} of {ty:?}: expected {want} bytes, got {}",
+                data.len()
+            )));
+        }
+        Ok(Literal(Repr::Array {
+            shape: ArrayShape { dims: dims.iter().map(|&d| d as i64).collect(), ty },
+            data: data.to_vec(),
+        }))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { shape, .. } => Ok(shape.clone()),
+            Repr::Tuple(_) => Err(Error("array_shape of a tuple literal".into())),
+        }
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        match &self.0 {
+            Repr::Array { shape, data } => {
+                if shape.ty != T::TY {
+                    return Err(Error(format!(
+                        "to_vec dtype mismatch: literal is {:?}",
+                        shape.ty
+                    )));
+                }
+                Ok(data
+                    .chunks_exact(shape.ty.byte_size())
+                    .map(T::read_le)
+                    .collect())
+            }
+            Repr::Tuple(_) => Err(Error("to_vec of a tuple literal".into())),
+        }
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.0 {
+            Repr::Tuple(parts) => Ok(parts),
+            Repr::Array { .. } => Err(Error("to_tuple of an array literal".into())),
+        }
+    }
+}
+
+/// Raw-bytes constructors; in the real crate this trait also backs `.npz`
+/// fixture loading, which needs numpy parsing the stub does not carry.
+pub trait FromRawBytes: Sized {
+    type Context: ?Sized;
+
+    fn read_npz<P: AsRef<Path>>(path: P, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+
+    fn read_npz<P: AsRef<Path>>(path: P, _ctx: &()) -> Result<Vec<(String, Self)>> {
+        Err(stub_err(&format!("reading npz {:?}", path.as_ref())))
+    }
+}
+
+/// Parsed HLO module; the stub cannot parse HLO text.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(stub_err(&format!("parsing HLO text {:?}", path.as_ref())))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Device buffer returned by an execution (never constructed in the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("fetching a device buffer"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("executing a compiled program"))
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Always errors in the stub: there is no PJRT runtime to attach to.
+    pub fn cpu() -> Result<Self> {
+        Err(stub_err("creating a PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("compiling a computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must fail");
+    }
+
+    #[test]
+    fn literal_size_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &[0u8; 15])
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn device_paths_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{err}").contains("real PJRT bindings"));
+    }
+}
