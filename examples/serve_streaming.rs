@@ -1,15 +1,18 @@
 //! Streaming server demo: the gateway/stream/cancel/router stack end to
-//! end, against live engines.
+//! end, against live engines running the token-slab step API.
 //!
 //! Spawns three gateways — dense, CLOVER r=8, CLOVER r=4 — behind the
-//! rank-aware router, feeds an open-loop trace through it, prints tokens
-//! as they stream out, fires a cancel token mid-decode, and lets one
-//! request expire on a deadline.  Finishes with each engine's share of the
-//! trace and its serving metrics: the paper's KV claim as live routing
-//! behaviour.
+//! rank-aware router (scored by pending prefill tokens × per-rank KV
+//! cost), feeds an open-loop trace of 24-token prompts through it, prints
+//! tokens as they stream out, fires a cancel token mid-decode, and lets
+//! one request expire on a deadline.  Each completion reports its
+//! `prefill_steps`: with the exported chunk ladder a 24-token prompt
+//! prefills in 2 fused steps instead of 24.  Finishes with each engine's
+//! share of the trace and its serving metrics: the paper's KV claim as
+//! live routing behaviour.
 //!
 //! ```sh
-//! cargo run --release --example serve_streaming [requests] [max_new]
+//! cargo run --release --example serve_streaming [requests] [max_new] [prompt_len]
 //! ```
 
 use anyhow::Result;
@@ -22,6 +25,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
     let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let prompt_len: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(24).max(1);
     let (artifacts, preset, batch) = ("artifacts", "tiny", 8);
 
     // Three engines at different pruning ranks, each on its own thread
@@ -45,7 +49,7 @@ fn main() -> Result<()> {
     let mut rng = clover::util::rng::Rng::new(7);
     let mut tickets = Vec::new();
     for i in 0..n_requests {
-        let prompt: Vec<i32> = (0..4).map(|_| rng.below(64) as i32).collect();
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(64) as i32).collect();
         let deadline = (i == 5).then_some(Duration::from_millis(1));
         let (idx, ticket) =
             router.submit(prompt, max_new, SamplingParams::greedy(), deadline)?;
@@ -74,8 +78,9 @@ fn main() -> Result<()> {
                 StreamEvent::Token { .. } => streamed_tokens += 1,
                 StreamEvent::Done { completion } => {
                     println!(
-                        "[{id}@{name}] done: {:>2} tokens | ttft {:.3}s | latency {:.3}s",
+                        "[{id}@{name}] done: {:>2} tokens | prefill {} steps for {prompt_len} prompt tokens | ttft {:.3}s | latency {:.3}s",
                         completion.tokens.len(),
+                        completion.prefill_steps,
                         completion.ttft_s,
                         completion.latency_s,
                     );

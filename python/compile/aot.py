@@ -39,7 +39,20 @@ from .configs import DECODERS, SEQ2SEQ, ModelConfig, Seq2SeqConfig
 # Training/eval batch sizes baked into the artifacts (HLO is shape-static).
 TRAIN_BATCH = {"tiny": 16, "small": 16, "large": 8}
 DECODE_BATCHES = (1, 8)
+# Chunked-prefill slab widths (HLO is shape-static, so the serve engine
+# picks from this fixed ladder per step; width 1 is the decode program).
+# Exported only for the serving batch size — prefill is a serving-path
+# concern, and each extra width is another artifact per config and rank.
+PREFILL_CHUNKS = (8, 32)
+PREFILL_BATCHES = (8,)
 S2S_BATCH = 8
+
+
+def prefill_chunks_for(cfg: ModelConfig) -> Tuple[int, ...]:
+    """Slab widths exported for `cfg`: the ladder, capped by the context
+    window (a chunk as wide as the whole window could never be scheduled
+    alongside generation)."""
+    return tuple(w for w in PREFILL_CHUNKS if w < cfg.seq_len)
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -178,6 +191,26 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
                          ("tokens", (db,), "int32"), ("positions", (db,), "int32")],
             ["logits", "k_cache", "v_cache"], golden=(db == 1)))
 
+    # ---- dense chunked prefill ---------------------------------------------
+    # Same cache signature as the decode programs (the runtime carries one
+    # literal-side cache set across every width), tokens/positions widened
+    # to [B, K] token slabs.  One jax function serves every width — the
+    # slab shape is fixed entirely by the Program's input signature.
+    def prefill_fn(*flat):
+        params = M.params_from_flat(dense, flat[:-4])
+        kc, vc, toks, positions = flat[-4:]
+        return M.prefill_step_dense(cfg, params, kc, vc, toks, positions)
+
+    chunks = prefill_chunks_for(cfg)
+    for db in PREFILL_BATCHES:
+        for ck in chunks:
+            cache = (cfg.n_layers, db, cfg.n_heads, t, cfg.d_head)
+            progs.append(Program(
+                f"prefill_k{ck}_b{db}", prefill_fn,
+                dense_sig + [("k_cache", cache, "float32"), ("v_cache", cache, "float32"),
+                             ("tokens", (db, ck), "int32"), ("positions", (db, ck), "int32")],
+                ["logits", "k_cache", "v_cache"], golden=(ck == chunks[0])))
+
     # ---- PEFT train steps (adapters over frozen dense base) ----------------
     for kind in ("lora", "dora", "hira"):
         ad_spec = (M.dora_param_spec if kind == "dora" else M.lora_param_spec)(cfg, cfg.lora_rank)
@@ -223,9 +256,14 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
                 kc, voc, toks, positions = flat[-4:]
                 return M.decode_step_fac(cfg, r, params, kc, voc, toks, positions)
 
-            return fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn
+            def prefill_fac_fn(*flat):
+                params = M.params_from_flat(fac, flat[:-4])
+                kc, voc, toks, positions = flat[-4:]
+                return M.prefill_step_fac(cfg, r, params, kc, voc, toks, positions)
 
-        fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn = mk(r, fac)
+            return fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn, prefill_fac_fn
+
+        fwd_fac_fn, nll_fac_fn, loss_fac, decode_fac_fn, prefill_fac_fn = mk(r, fac)
         progs.append(Program(f"fwd_fac_r{r}", fwd_fac_fn,
                              fac_sig + [("tokens", (b, t), "int32")], ["logits"],
                              golden=(r == cfg.d_head)))
@@ -257,6 +295,17 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
                 fac_sig + [("k_cache", cache, "float32"), ("vo_cache", cache, "float32"),
                            ("tokens", (db,), "int32"), ("positions", (db,), "int32")],
                 ["logits", "k_cache", "vo_cache"]))
+
+        for db in PREFILL_BATCHES:
+            cache = (cfg.n_layers, db, cfg.n_heads, t, r)
+            # prefill_fac_fn is already bound per rank by mk(r, fac); the
+            # slab width comes from the input signature alone.
+            for ck in chunks:
+                progs.append(Program(
+                    f"prefill_fac_r{r}_k{ck}_b{db}", prefill_fac_fn,
+                    fac_sig + [("k_cache", cache, "float32"), ("vo_cache", cache, "float32"),
+                               ("tokens", (db, ck), "int32"), ("positions", (db, ck), "int32")],
+                    ["logits", "k_cache", "vo_cache"]))
 
     # ---- CLOVER fine-tuning config (full rank + factorized MLP.Up) ----------
     facud = M.fac_param_spec(cfg, cfg.d_head, with_ud=True)
@@ -384,7 +433,12 @@ def _golden_inputs(prog: Program, rng: np.random.Generator):
             if name in ("step", "pos"):
                 args.append(np.asarray(0, np.int32))
             elif name == "positions":
-                args.append(np.zeros(shape, np.int32))
+                if len(shape) == 2:
+                    # Prefill slab: each lane writes positions 0..K-1.
+                    args.append(np.tile(np.arange(shape[1], dtype=np.int32),
+                                        (shape[0], 1)))
+                else:
+                    args.append(np.zeros(shape, np.int32))
             elif name == "seed":
                 args.append(np.asarray(42, np.int32))
             else:
@@ -476,7 +530,9 @@ def main() -> None:
             "n_layers": cfg.n_layers, "seq_len": cfg.seq_len, "d_ff": cfg.d_ff,
             "d_head": cfg.d_head, "ranks": list(cfg.ranks()),
             "lora_rank": cfg.lora_rank, "train_batch": TRAIN_BATCH[cfg.name],
-            "decode_batches": list(DECODE_BATCHES), "ud_block": M.UD_BLOCK,
+            "decode_batches": list(DECODE_BATCHES),
+            "prefill_chunks": list(prefill_chunks_for(cfg)),
+            "prefill_batches": list(PREFILL_BATCHES), "ud_block": M.UD_BLOCK,
             "params_dense": [{"name": n, "shape": list(s)}
                              for n, s in M.dense_param_spec(cfg)],
             "params_fac": {str(r): [{"name": n, "shape": list(s)}

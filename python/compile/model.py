@@ -503,6 +503,100 @@ def decode_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens
     return x @ params["tok_emb"].T, kc2, vc2
 
 
+def _slab_write(cache_b, pos_b, val_b):
+    """Scatter one lane's K-token slab into its cache.
+
+    cache_b [H, C, r]; pos_b [K]; val_b [K, H, r].  Duplicate positions
+    within a slab (the pad-by-repeat convention: a slab shorter than the
+    program width repeats its last valid ``(token, position)`` pair) write
+    identical values, so the scatter is idempotent regardless of order.
+    """
+    return cache_b.at[:, pos_b, :].set(jnp.swapaxes(val_b, 0, 1))
+
+
+def prefill_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, tokens, positions):
+    """One chunked-prefill step, dense attention.
+
+    tokens/positions [B, K] int32 — each lane consumes a K-token slab in a
+    single fused step, writing K cache positions, instead of burning K
+    single-token decode steps.  Causality within the slab comes from the
+    same per-position mask the decode step uses (slab index j attends to
+    cache positions <= positions[b, j], and all K writes land before
+    attention in each layer), so chunked prefill is bit-for-bit the same
+    computation as K sequential `decode_step_dense` calls.
+    Returns (logits [B, V] at the *last* slab index, k_cache', v_cache').
+    """
+    b, k = tokens.shape
+    h_, dh = cfg.n_heads, cfg.d_head
+    c = k_cache.shape[3]
+    scale = 1.0 / float(dh) ** 0.5
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]  # [B, K, D]
+    stacked = {n: params[n] for n in _LAYER_DENSE}
+    mask = jnp.arange(c)[None, None, :] <= positions[:, :, None]  # [B, K, C]
+
+    def body(x, inputs):
+        lp, kc, vc = inputs  # kc/vc [B, H, C, dh]
+        hcur = ref.layernorm(x, lp["ln1_g"], lp["ln1_b"])  # [B, K, D]
+        q = (hcur @ lp["wq"]).reshape(b, k, h_, dh)
+        kk = (hcur @ lp["wk"]).reshape(b, k, h_, dh)
+        vv = (hcur @ lp["wv"]).reshape(b, k, h_, dh)
+        kc = jax.vmap(_slab_write)(kc, positions, kk)
+        vc = jax.vmap(_slab_write)(vc, positions, vv)
+        scores = jnp.einsum("bjhd,bhcd->bjhc", q, kc) * scale
+        scores = jnp.where(mask[:, :, None, :], scores, ref.NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bjhc,bhcd->bjhd", attn, vc).reshape(b, k, h_ * dh)
+        x = x + ctx @ lp["wo"]
+        h2 = ref.layernorm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(h2.reshape(b * k, -1), lp).reshape(b, k, -1)
+        return x, (kc, vc)
+
+    x, (kc2, vc2) = jax.lax.scan(body, x, (stacked, k_cache, v_cache))
+    last = ref.layernorm(x[:, -1, :], params["lnf_g"], params["lnf_b"])
+    return last @ params["tok_emb"].T, kc2, vc2
+
+
+def prefill_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, positions):
+    """One chunked-prefill step, CLOVER-factorized attention.
+
+    The [B, K] slab analogue of `decode_step_fac`: K rank-r factor
+    projections are scattered per lane per step, so the KV saving of
+    pruning (r/dh) compounds with the K× cut in prefill steps.  See
+    `prefill_step_dense` for the slab conventions.
+    """
+    b, k = tokens.shape
+    c = k_cache.shape[3]
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]  # [B, K, D]
+    layer_names = _LAYER_FAC_UD if "u_ud" in params else _LAYER_FAC
+    stacked = {n: params[n] for n in layer_names}
+    mask = jnp.arange(c)[None, None, :] <= positions[:, :, None]  # [B, K, C]
+
+    def body(x, inputs):
+        lp, kc, voc = inputs  # kc/voc [B, H, C, r]
+        hcur = ref.layernorm(x, lp["ln1_g"], lp["ln1_b"])  # [B, K, D]
+        q = jnp.einsum("bjd,hdr->bjhr", hcur, lp["u_qk"])
+        q = jnp.einsum("bjhr,hrk->bjhk", q, lp["s_qk"])
+        kk = jnp.einsum("bjd,hdr->bjhr", hcur, lp["v_qk"])
+        vo = jnp.einsum("bjd,hdr->bjhr", hcur, lp["u_vo"])
+        vo = jnp.einsum("bjhr,hrk->bjhk", vo, lp["s_vo"])
+        kc = jax.vmap(_slab_write)(kc, positions, kk)
+        voc = jax.vmap(_slab_write)(voc, positions, vo)
+        scores = jnp.einsum("bjhr,bhcr->bjhc", q, kc) * scale
+        scores = jnp.where(mask[:, :, None, :], scores, ref.NEG_INF)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bjhc,bhcr->bjhr", attn, voc)
+        out = jnp.einsum("bjhr,hdr->bjd", ctx, lp["v_vo"])
+        x = x + out
+        h2 = ref.layernorm(x, lp["ln2_g"], lp["ln2_b"])
+        x = x + _mlp(h2.reshape(b * k, -1), lp).reshape(b, k, -1)
+        return x, (kc, voc)
+
+    x, (kc2, voc2) = jax.lax.scan(body, x, (stacked, k_cache, vo_cache))
+    last = ref.layernorm(x[:, -1, :], params["lnf_g"], params["lnf_b"])
+    return last @ params["tok_emb"].T, kc2, voc2
+
+
 def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, positions):
     """One autoregressive step, CLOVER-factorized attention.
 

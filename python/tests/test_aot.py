@@ -35,6 +35,20 @@ def test_program_signature_consistency():
     names = {p.name for p in progs}
     assert {"init", "fwd", "nll", "train_full", "train_attn", "hidden",
             "train_lora", "train_dora", "train_hira", "train_cloverft"} <= names
+    # Chunked-prefill slab programs, per exported width and serving batch.
+    for ck in aot.prefill_chunks_for(TINY):
+        for db in aot.PREFILL_BATCHES:
+            assert f"prefill_k{ck}_b{db}" in names
+            assert f"prefill_fac_r{TINY.d_head}_k{ck}_b{db}" in names
+    # A prefill program's token slab is [B, K]; its cache block matches the
+    # decode program's so the runtime can carry one cache set across widths.
+    by_name = {p.name: p for p in progs}
+    pf = by_name["prefill_k8_b8"]
+    dec = by_name["decode_b8"]
+    assert [i for i in pf.inputs if i[0] == "tokens"][0][1] == (8, 8)
+    pf_caches = [(n, s) for n, s, _ in pf.inputs if "cache" in n]
+    dec_caches = [(n, s) for n, s, _ in dec.inputs if "cache" in n]
+    assert pf_caches == dec_caches
     for p in progs:
         outs = jax.eval_shape(p.fn, *p.input_specs())
         if not isinstance(outs, tuple):

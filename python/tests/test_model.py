@@ -155,6 +155,76 @@ def test_decode_fac_matches_forward_fac(params):
     np.testing.assert_allclose(got, logits_full, rtol=1e-4, atol=1e-4)
 
 
+def test_prefill_chunk_matches_sequential_decode(params):
+    """Chunked prefill is the same computation as K sequential decode
+    steps: identical last-position logits *and* identical caches."""
+    rng = np.random.default_rng(7)
+    p, ck = 16, 8
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, p)), jnp.int32)
+    c = CFG.seq_len
+    kc = jnp.zeros((CFG.n_layers, 2, CFG.n_heads, c, CFG.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    for i in range(p):
+        lg_seq, kc, vc = M.decode_step_dense(CFG, params, kc, vc, toks[:, i],
+                                             jnp.full((2,), i, jnp.int32))
+    kc2 = jnp.zeros_like(kc)
+    vc2 = jnp.zeros_like(vc)
+    for s in range(0, p, ck):
+        pos = jnp.tile(jnp.arange(s, s + ck, dtype=jnp.int32)[None, :], (2, 1))
+        lg_chunk, kc2, vc2 = M.prefill_step_dense(CFG, params, kc2, vc2,
+                                                  toks[:, s:s + ck], pos)
+    np.testing.assert_allclose(lg_chunk, lg_seq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(kc2, kc, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(vc2, vc, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_fac_matches_sequential_decode(params):
+    fp = clover_factorize_np(params, CFG.d_head)
+    rng = np.random.default_rng(8)
+    p, ck, r = 8, 8, CFG.d_head
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, p)), jnp.int32)
+    c = CFG.seq_len
+    kc = jnp.zeros((CFG.n_layers, 2, CFG.n_heads, c, r), jnp.float32)
+    voc = jnp.zeros_like(kc)
+    for i in range(p):
+        lg_seq, kc, voc = M.decode_step_fac(CFG, r, fp, kc, voc, toks[:, i],
+                                            jnp.full((2,), i, jnp.int32))
+    kc2 = jnp.zeros_like(kc)
+    voc2 = jnp.zeros_like(voc)
+    pos = jnp.tile(jnp.arange(p, dtype=jnp.int32)[None, :], (2, 1))
+    lg_chunk, kc2, voc2 = M.prefill_step_fac(CFG, r, fp, kc2, voc2, toks, pos)
+    np.testing.assert_allclose(lg_chunk, lg_seq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(kc2, kc, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(voc2, voc, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_pad_by_repeat_is_idempotent(params):
+    """A slab shorter than the program width pads by repeating its last
+    (token, position) pair — the engine's convention for ragged chunks and
+    for decode lanes sharing a prefill-width step.  The pads must change
+    nothing: same logits, same cache, as the unpadded sequential path."""
+    rng = np.random.default_rng(9)
+    valid, ck = 3, 8
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, valid)), jnp.int32)
+    c = CFG.seq_len
+    kc = jnp.zeros((CFG.n_layers, 1, CFG.n_heads, c, CFG.d_head), jnp.float32)
+    vc = jnp.zeros_like(kc)
+    for i in range(valid):
+        lg_seq, kc, vc = M.decode_step_dense(CFG, params, kc, vc, toks[:, i],
+                                             jnp.full((1,), i, jnp.int32))
+    pad_toks = jnp.concatenate(
+        [toks, jnp.full((1, ck - valid), toks[0, -1], jnp.int32)], axis=1)
+    pad_pos = jnp.concatenate(
+        [jnp.arange(valid, dtype=jnp.int32),
+         jnp.full((ck - valid,), valid - 1, jnp.int32)])[None, :]
+    kc2 = jnp.zeros_like(kc)
+    vc2 = jnp.zeros_like(vc)
+    lg_pad, kc2, vc2 = M.prefill_step_dense(CFG, params, kc2, vc2, pad_toks, pad_pos)
+    np.testing.assert_allclose(lg_pad, lg_seq, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(kc2, kc, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(vc2, vc, rtol=1e-4, atol=1e-4)
+
+
 def test_train_step_reduces_loss(params):
     """A few full train steps on a fixed batch should overfit it."""
     spec = M.dense_param_spec(CFG)

@@ -1,16 +1,26 @@
 //! Perf bench: serving-layer components in isolation (batcher admission,
-//! KV allocator churn) plus the end-to-end engine at several pruning
-//! ranks, run both ways — the old batch-to-completion wave schedule vs
-//! the continuous-batching scheduler — so the step/latency gap slot-level
-//! admission buys is measured, not asserted.
+//! KV allocator churn), the chunked-prefill step ladder, and the
+//! end-to-end engine at several pruning ranks, run both ways — the old
+//! batch-to-completion wave schedule vs the continuous-batching scheduler
+//! — so the step/latency gap slot-level admission buys is measured, not
+//! asserted.
 //!
-//! Emits `BENCH_serve.json` (tokens/s, TTFT, p50/p99 latency, decode
-//! steps, KV peak bytes, marshal/execute split per engine×mode) so the
-//! perf trajectory is machine-readable across PRs.
+//! Emits `BENCH_serve.json` (see docs/BENCH_SCHEMAS.md):
+//!
+//! * `prefill` — TTFT-vs-chunk-width over the deterministic stub backend:
+//!   the same 64-token-prompt trace served with the slab ladder capped at
+//!   K=1 / K=8 / K=32, reporting prefill steps, total fused steps, and
+//!   TTFT per cap.  Runs on every checkout (no PJRT needed) — these are
+//!   the step counts the acceptance bar reads.
+//! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
+//!   bytes, marshal/execute split per engine×admission-mode, against the
+//!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
+//!   live backend or artifacts exist, so the artifact always uploads.
 
 use anyhow::Result;
 use clover::config::json::{self, Json};
 use clover::coordinator::ops;
+use clover::runtime::stub::StubSpec;
 use clover::runtime::Runtime;
 use clover::serve::{Admission, BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request};
 use clover::util::human_bytes;
@@ -20,11 +30,167 @@ use std::time::{Duration, Instant};
 const BATCH_SLOTS: usize = 8;
 /// 2× the slot count, mixed lengths — the continuous-batching regime.
 const N_REQUESTS: u64 = 16;
+/// Prompt length for the chunked-prefill section (the acceptance bar's
+/// 64-token prompt).
+const PREFILL_PROMPT: usize = 64;
 
 fn mk_requests(now: Instant) -> Vec<Request> {
     (0..N_REQUESTS)
         .map(|id| Request::greedy(id, vec![2, 3], 4 + (id as usize % 4) * 6, now))
         .collect()
+}
+
+fn policy() -> BatchPolicy {
+    BatchPolicy { max_batch: BATCH_SLOTS, max_wait: Duration::from_millis(1) }
+}
+
+/// TTFT-vs-chunk-width on the stub backend: same trace, ladder capped at
+/// each width.  Step counts are exact and deterministic; wall-clock TTFT
+/// is the stub's, useful relatively (the ladder is the only variable).
+fn bench_prefill_chunks() -> Result<Json> {
+    let spec = StubSpec { max_positions: 128, batch_slots: BATCH_SLOTS, ..Default::default() };
+    let ladder = spec.widths();
+    let mk = |now: Instant| -> Vec<Request> {
+        (0..BATCH_SLOTS as u64)
+            .map(|id| {
+                Request::greedy(
+                    id,
+                    (0..PREFILL_PROMPT as i32).map(|i| i % 32).collect(),
+                    8,
+                    now,
+                )
+            })
+            .collect()
+    };
+    let mut rows = Vec::new();
+    let mut k1_prefill_steps = 0usize;
+    for cap in [1usize, 8, 32] {
+        let engine = Engine::new_stub(spec.clone()).with_prefill_chunk(Some(cap));
+        let now = Instant::now();
+        let (completions, m) = engine.serve_all(mk(now), policy())?;
+        let prefill_steps = completions.first().map_or(0, |c| c.prefill_steps);
+        if cap == 1 {
+            k1_prefill_steps = prefill_steps;
+        }
+        println!(
+            "prefill K={cap:<2}: {prefill_steps:>3} prefill steps for a {PREFILL_PROMPT}-token prompt \
+             | {:>3} fused steps total | ttft p50 {:.4}s | {:.0} tok/s  ({}x vs K=1)",
+            m.decode_steps,
+            m.ttft_p50_s,
+            m.tokens_per_s(),
+            if prefill_steps > 0 { k1_prefill_steps / prefill_steps } else { 0 },
+        );
+        let mut o = BTreeMap::new();
+        o.insert("chunk".to_string(), Json::Num(cap as f64));
+        // The widths this row's engine actually planned over (the cap
+        // applied), not the spec's full ladder.
+        o.insert(
+            "ladder".to_string(),
+            Json::Arr(engine.widths().iter().map(|&w| Json::Num(w as f64)).collect()),
+        );
+        o.insert("prefill_steps".to_string(), Json::Num(prefill_steps as f64));
+        o.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
+        o.insert("slab_tokens".to_string(), Json::Num(m.slab_tokens as f64));
+        o.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
+        o.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
+        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
+        o.insert(
+            "prefill_step_reduction_vs_k1".to_string(),
+            Json::Num(if prefill_steps > 0 {
+                k1_prefill_steps as f64 / prefill_steps as f64
+            } else {
+                0.0
+            }),
+        );
+        rows.push(Json::Obj(o));
+    }
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("prompt_tokens".to_string(), Json::Num(PREFILL_PROMPT as f64));
+    o.insert("requests".to_string(), Json::Num(BATCH_SLOTS as f64));
+    // All widths the stub exports; each row's own `ladder` is the capped
+    // subset its engine planned over.
+    o.insert(
+        "ladder".to_string(),
+        Json::Arr(ladder.iter().map(|&w| Json::Num(w as f64)).collect()),
+    );
+    o.insert("chunks".to_string(), Json::Arr(rows));
+    Ok(Json::Obj(o))
+}
+
+/// End-to-end engines over the compiled artifacts (wave vs continuous,
+/// dense vs pruned ranks).  Returns the per-engine records.
+fn bench_pjrt_engines(rt: &Runtime) -> Result<Vec<Json>> {
+    let preset = "tiny";
+    let entry = rt.manifest().config(preset)?.clone();
+    let dense = ops::init_params(rt, preset, 1)?;
+    let now = Instant::now();
+    let d_head = entry.dim("d_head")?;
+
+    let mut results: Vec<Json> = Vec::new();
+    let mut run = |name: &str, rank: usize, engine: &Engine, mode: Admission| -> Result<usize> {
+        // Warm the executables so compile time doesn't pollute the split.
+        engine.serve_with(mk_requests(now), policy(), mode)?;
+        rt.reset_stats();
+        let (_, m) = engine.serve_with(mk_requests(now), policy(), mode)?;
+        let st = rt.stats();
+        let mode_s = match mode {
+            Admission::Continuous => "continuous",
+            Admission::WaveToCompletion => "wave",
+        };
+        println!(
+            "engine {name:<6} [{mode_s:<10}]: {:6.1} tok/s  {:3} steps  ttft p50 {:.3}s  lat p50/p99 {:.3}/{:.3}s  peak KV {}  (marshal {:4.1}%  execute {:4.1}%)",
+            m.tokens_per_s(), m.decode_steps, m.ttft_p50_s,
+            m.latency_p50_s, m.latency_p99_s, human_bytes(m.kv_peak_bytes),
+            100.0 * st.marshal_s / m.wall_s, 100.0 * st.execute_s / m.wall_s,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name.to_string()));
+        o.insert("rank".to_string(), Json::Num(rank as f64));
+        o.insert("mode".to_string(), Json::Str(mode_s.to_string()));
+        o.insert("ladder".to_string(),
+                 Json::Arr(engine.widths().iter().map(|&w| Json::Num(w as f64)).collect()));
+        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
+        o.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
+        o.insert("slab_tokens".to_string(), Json::Num(m.slab_tokens as f64));
+        o.insert("admissions".to_string(), Json::Num(m.admissions as f64));
+        o.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
+        o.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
+        o.insert("latency_p50_s".to_string(), Json::Num(m.latency_p50_s));
+        o.insert("latency_p99_s".to_string(), Json::Num(m.latency_p99_s));
+        o.insert("kv_peak_bytes".to_string(), Json::Num(m.kv_peak_bytes as f64));
+        o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+        o.insert("marshal_s".to_string(), Json::Num(st.marshal_s));
+        o.insert("execute_s".to_string(), Json::Num(st.execute_s));
+        results.push(Json::Obj(o));
+        Ok(m.decode_steps)
+    };
+
+    let mut engines: Vec<(String, usize, Engine)> = Vec::new();
+    engines.push((
+        "dense".to_string(),
+        d_head,
+        Engine::new(rt, preset, &format!("decode_b{BATCH_SLOTS}"), dense.clone())?,
+    ));
+    for ratio in [0.5, 0.75] {
+        let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
+        engines.push((
+            format!("r={r}"),
+            r,
+            Engine::new(rt, preset, &format!("decode_fac_r{r}_b{BATCH_SLOTS}"), fac)?,
+        ));
+    }
+
+    for (name, rank, engine) in &engines {
+        let wave = run(name, *rank, engine, Admission::WaveToCompletion)?;
+        let cont = run(name, *rank, engine, Admission::Continuous)?;
+        println!(
+            "engine {name:<6} continuous batching saves {} of {wave} decode steps ({:.0}%)",
+            wave.saturating_sub(cont),
+            100.0 * wave.saturating_sub(cont) as f64 / wave.max(1) as f64,
+        );
+    }
+    Ok(results)
 }
 
 fn main() -> Result<()> {
@@ -48,7 +214,7 @@ fn main() -> Result<()> {
         println!("batcher    : {:.1}M req/s (admitted {admitted})", n as f64 / dt / 1e6);
     }
 
-    // KV allocator churn.
+    // KV allocator churn — slab-granular advances.
     {
         let cfg = KvConfig { n_layers: 4, n_heads: 8, rank: 16, max_positions: 128, batch_slots: 8 };
         let mut kv = KvManager::new(cfg);
@@ -56,91 +222,36 @@ fn main() -> Result<()> {
         let t0 = Instant::now();
         for i in 0..n {
             let s = kv.allocate(i).unwrap();
-            for _ in 0..8 {
-                kv.advance(s).unwrap();
-            }
+            kv.advance_by(s, 8).unwrap();
             kv.free(s).unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
-        println!("kv manager : {:.2}M alloc-advance8-free/s", n as f64 / dt / 1e6);
-    }
-
-    // End-to-end: dense vs pruned ranks, wave baseline vs continuous.
-    let rt = Runtime::new("artifacts")?;
-    let preset = "tiny";
-    let entry = rt.manifest().config(preset)?.clone();
-    let dense = ops::init_params(&rt, preset, 1)?;
-    let now = Instant::now();
-    let policy = BatchPolicy { max_batch: BATCH_SLOTS, max_wait: Duration::from_millis(1) };
-    let d_head = entry.dim("d_head")?;
-
-    let mut results: Vec<Json> = Vec::new();
-    let mut run = |name: &str, rank: usize, engine: &Engine, mode: Admission| -> Result<usize> {
-        // Warm the executable so compile time doesn't pollute the split.
-        engine.serve_with(mk_requests(now), policy.clone(), mode)?;
-        rt.reset_stats();
-        let (_, m) = engine.serve_with(mk_requests(now), policy.clone(), mode)?;
-        let st = rt.stats();
-        let mode_s = match mode {
-            Admission::Continuous => "continuous",
-            Admission::WaveToCompletion => "wave",
-        };
-        println!(
-            "engine {name:<6} [{mode_s:<10}]: {:6.1} tok/s  {:3} steps  ttft p50 {:.3}s  lat p50/p99 {:.3}/{:.3}s  peak KV {}  (marshal {:4.1}%  execute {:4.1}%)",
-            m.tokens_per_s(), m.decode_steps, m.ttft_p50_s,
-            m.latency_p50_s, m.latency_p99_s, human_bytes(m.kv_peak_bytes),
-            100.0 * st.marshal_s / m.wall_s, 100.0 * st.execute_s / m.wall_s,
-        );
-        let mut o = BTreeMap::new();
-        o.insert("name".to_string(), Json::Str(name.to_string()));
-        o.insert("rank".to_string(), Json::Num(rank as f64));
-        o.insert("mode".to_string(), Json::Str(mode_s.to_string()));
-        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
-        o.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
-        o.insert("admissions".to_string(), Json::Num(m.admissions as f64));
-        o.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
-        o.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
-        o.insert("latency_p50_s".to_string(), Json::Num(m.latency_p50_s));
-        o.insert("latency_p99_s".to_string(), Json::Num(m.latency_p99_s));
-        o.insert("kv_peak_bytes".to_string(), Json::Num(m.kv_peak_bytes as f64));
-        o.insert("wall_s".to_string(), Json::Num(m.wall_s));
-        o.insert("marshal_s".to_string(), Json::Num(st.marshal_s));
-        o.insert("execute_s".to_string(), Json::Num(st.execute_s));
-        results.push(Json::Obj(o));
-        Ok(m.decode_steps)
-    };
-
-    let mut engines: Vec<(String, usize, Engine)> = Vec::new();
-    engines.push((
-        "dense".to_string(),
-        d_head,
-        Engine::new(&rt, preset, &format!("decode_b{BATCH_SLOTS}"), dense.clone())?,
-    ));
-    for ratio in [0.5, 0.75] {
-        let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
-        engines.push((
-            format!("r={r}"),
-            r,
-            Engine::new(&rt, preset, &format!("decode_fac_r{r}_b{BATCH_SLOTS}"), fac)?,
-        ));
-    }
-
-    for (name, rank, engine) in &engines {
-        let wave = run(name, *rank, engine, Admission::WaveToCompletion)?;
-        let cont = run(name, *rank, engine, Admission::Continuous)?;
-        println!(
-            "engine {name:<6} continuous batching saves {} of {wave} decode steps ({:.0}%)",
-            wave.saturating_sub(cont),
-            100.0 * wave.saturating_sub(cont) as f64 / wave.max(1) as f64,
-        );
+        println!("kv manager : {:.2}M alloc-slab8-free/s", n as f64 / dt / 1e6);
     }
 
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_serve".to_string()));
-    root.insert("preset".to_string(), Json::Str(preset.to_string()));
+    root.insert("preset".to_string(), Json::Str("tiny".to_string()));
     root.insert("requests".to_string(), Json::Num(N_REQUESTS as f64));
     root.insert("batch_slots".to_string(), Json::Num(BATCH_SLOTS as f64));
-    root.insert("engines".to_string(), Json::Arr(results));
+
+    // Chunked prefill: stub-backed, runs everywhere.
+    root.insert("prefill".to_string(), bench_prefill_chunks()?);
+
+    // End-to-end engines need the compiled artifacts + live PJRT.
+    match Runtime::new("artifacts") {
+        Ok(rt) => {
+            root.insert("pjrt_skipped".to_string(), Json::Bool(false));
+            root.insert("engines".to_string(), Json::Arr(bench_pjrt_engines(&rt)?));
+        }
+        Err(e) => {
+            println!("runtime unavailable, skipping the PJRT engine section\n  ({e:#})");
+            root.insert("pjrt_skipped".to_string(), Json::Bool(true));
+            root.insert("pjrt_skip_reason".to_string(), Json::Str(format!("{e:#}")));
+            root.insert("engines".to_string(), Json::Arr(Vec::new()));
+        }
+    }
+
     std::fs::write("BENCH_serve.json", json::to_string(&Json::Obj(root)))?;
     println!("wrote BENCH_serve.json");
     Ok(())

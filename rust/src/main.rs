@@ -10,6 +10,7 @@
 //! clover eval      --ckpt x.clvr            # perplexity
 //! clover spectra   [--all-layers]           # Fig 2 curves
 //! clover serve     --ckpt x.clvr [--requests N] [--temperature T] [--top-k K] [--stop-token ID]
+//!                  [--prefill-chunk K] [--prompt-len N]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
@@ -221,6 +222,14 @@ fn cmd_spectra(args: &Args) -> Result<()> {
     table.emit("fig2_spectra")
 }
 
+/// Parse `--prefill-chunk K` into the engine's ladder cap (`None` keeps
+/// every exported chunk width; `1` disables chunked prefill).
+fn prefill_chunk_flag(args: &Args) -> Result<Option<usize>> {
+    args.get("prefill-chunk")
+        .map(|v| v.parse::<usize>().with_context(|| format!("--prefill-chunk {v}")))
+        .transpose()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     if args.get("stream").is_some() {
@@ -229,11 +238,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rt = Runtime::new(&cfg.model.artifacts_dir)?;
     let entry = rt.manifest().config(&cfg.model.preset)?.clone();
     let n_requests = args.usize_or("requests", 16)?;
+    let prompt_len = args.usize_or("prompt-len", 4)?.max(1);
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let ck = Checkpoint::load(ckpt_path)?;
     let (params, program) =
         clover::model::decode_params_for_checkpoint(&ck, &entry, cfg.serve.max_batch.min(8))?;
-    let engine = Engine::new(&rt, &cfg.model.preset, &program, params)?;
+    let engine = Engine::new(&rt, &cfg.model.preset, &program, params)?
+        .with_prefill_chunk(prefill_chunk_flag(args)?);
+    println!("step ladder: {:?} (cap with --prefill-chunk)", engine.widths());
     let now = std::time::Instant::now();
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
     let vocab = entry.dim("vocab")?;
@@ -247,7 +259,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let reqs: Vec<Request> = (0..n_requests as u64)
         .map(|id| Request {
             id,
-            prompt: (0..4).map(|_| rng.below(vocab) as i32).collect(),
+            prompt: (0..prompt_len).map(|_| rng.below(vocab) as i32).collect(),
             max_new: cfg.serve.max_new_tokens,
             arrived: now,
             sampling: sampling.clone(),
@@ -259,13 +271,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (completions, metrics) = engine.serve_all(reqs, policy)?;
     println!(
-        "served {} requests | {} generated tokens | {:.1} tok/s | {} decode steps | {} admissions | peak KV {}",
+        "served {} requests | {} generated tokens | {:.1} tok/s | {} fused steps ({} slab tokens) | {} admissions | peak KV {}",
         metrics.completed,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
         metrics.decode_steps,
+        metrics.slab_tokens,
         metrics.admissions,
         human_bytes(metrics.kv_peak_bytes),
+    );
+    let prefill_steps: usize = completions.iter().map(|c| c.prefill_steps).sum();
+    println!(
+        "prefill: {prompt_len}-token prompts took {:.1} steps each (ladder {:?})",
+        prefill_steps as f64 / completions.len().max(1) as f64,
+        engine.widths(),
     );
     println!(
         "ttft p50 {:.3}s p99 {:.3}s | latency p50 {:.3}s p99 {:.3}s",
@@ -282,12 +301,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// over time (open loop, `--gap-ms` apart), tokens print as they are
 /// sampled, `--deadline-ms` attaches a per-request deadline, and
 /// `--cancel-ms` fires the last request's cancel token mid-decode to show
-/// its KV lane being reclaimed.
+/// its KV lane being reclaimed.  `--prefill-chunk K` caps the slab ladder
+/// (1 = single-token prefill); `--prompt-len N` sizes the prompts so the
+/// chunking is visible.
 fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     use std::time::{Duration, Instant};
 
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let n_requests = args.usize_or("requests", 16)?;
+    let prompt_len = args.usize_or("prompt-len", 4)?.max(1);
     let gap = Duration::from_millis(args.usize_or("gap-ms", 2)? as u64);
     let deadline = args
         .get("deadline-ms")
@@ -303,7 +325,8 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
 
     let batch = cfg.serve.max_batch.min(8);
     let queue_capacity = args.usize_or("queue", 64)?;
-    let spec = EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path);
+    let spec = EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
+        .with_prefill_chunk(prefill_chunk_flag(args)?);
     let gateway = Gateway::spawn(
         "serve",
         GatewayConfig {
@@ -333,7 +356,7 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     let mut streams = Vec::new();
     let mut demo_cancel = None;
     for i in 0..n_requests {
-        let prompt: Vec<i32> = (0..4).map(|_| rng.below(vocab) as i32).collect();
+        let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
         let ticket = gateway
             .submit(prompt, cfg.serve.max_new_tokens, sampling.clone(), deadline)
             .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;

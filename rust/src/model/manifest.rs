@@ -52,6 +52,11 @@ pub struct ConfigEntry {
     pub kind: String, // "decoder" | "seq2seq"
     pub dims: BTreeMap<String, usize>,
     pub ranks: Vec<usize>,
+    /// Chunked-prefill slab widths exported for this config (`prefill_k{K}`
+    /// program family); empty for configs or manifests without prefill
+    /// artifacts.  Width 1 (the decode program) is implicit and never
+    /// listed.
+    pub prefill_chunks: Vec<usize>,
     pub programs: BTreeMap<String, ProgramSig>,
     pub params_dense: ParamSpec,
     pub params_fac: BTreeMap<usize, ParamSpec>,
@@ -123,6 +128,12 @@ impl Manifest {
                 }
             }
             let ranks = entry.req("ranks")?.as_shape()?;
+            // Optional: older manifests (and seq2seq configs) have no
+            // prefill artifacts; the serve engine then runs width-1 only.
+            let prefill_chunks = match entry.get("prefill_chunks") {
+                Some(v) => v.as_shape()?,
+                None => Vec::new(),
+            };
             let mut programs = BTreeMap::new();
             for (pname, p) in entry.req("programs")?.as_obj()? {
                 programs.insert(
@@ -164,6 +175,7 @@ impl Manifest {
                     kind,
                     dims,
                     ranks,
+                    prefill_chunks,
                     programs,
                     params_dense,
                     params_fac,
@@ -207,6 +219,20 @@ mod tests {
         assert_eq!(tiny.dim("d_model").unwrap(), 64);
         assert_eq!(tiny.dim("d_head").unwrap(), 16);
         assert!(tiny.ranks.contains(&16));
+        // Prefill slab programs are discoverable through the manifest: one
+        // `prefill_k{K}_b{B}` per exported chunk width, cache block shared
+        // with the decode program of the same batch.
+        assert!(tiny.prefill_chunks.contains(&8), "{:?}", tiny.prefill_chunks);
+        for &ck in &tiny.prefill_chunks {
+            let pf = tiny.program(&format!("prefill_k{ck}_b8")).unwrap();
+            let toks = pf.inputs.iter().find(|a| a.name == "tokens").unwrap();
+            assert_eq!(toks.shape, vec![8, ck]);
+            let dec = tiny.program("decode_b8").unwrap();
+            let cache = |sig: &ProgramSig| {
+                sig.inputs.iter().find(|a| a.name.ends_with("_cache")).unwrap().shape.clone()
+            };
+            assert_eq!(cache(pf), cache(dec));
+        }
         let fwd = tiny.program("fwd").unwrap();
         assert_eq!(fwd.inputs.last().unwrap().dtype, DType::I32);
         assert_eq!(fwd.outputs[0].name, "logits");

@@ -22,14 +22,15 @@
 
 pub mod golden;
 pub mod literal;
+pub mod stub;
 
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use crate::model::manifest::{Manifest, ProgramSig};
-use crate::tensor::{Tensor, Value};
+use crate::model::manifest::{ArgSpec, Manifest, ProgramSig};
+use crate::tensor::{Tensor, TensorI, Value};
 use crate::util::Stopwatch;
 
 pub use literal::{from_literal, to_literal};
@@ -241,85 +242,163 @@ impl Runtime {
     }
 }
 
-/// A decode-loop session over one `decode_*` program.
+/// A decode-loop session over a *family* of step programs sharing one
+/// carried cache set — the single-token `decode_*` program (slab width 1)
+/// plus any `prefill_k{K}_*` chunk programs exported for the config.
 ///
 /// Both the model parameters *and* the carried KV-cache values live on the
 /// literal side of the marshal boundary: the cache tuple elements returned
-/// by one [`DecodeSession::step`] are fed back verbatim as the next step's
-/// inputs, so the per-token host↔device conversion traffic shrinks from the
-/// full `[L, B, H, C, r]` caches to the token/position vectors in and the
-/// logits row out.  The engine pulls the caches to host only on slot-churn
-/// events ([`DecodeSession::update_caches`], e.g. zeroing a freed lane):
-/// marshal in once, update lanes host-side, and pay the cache round-trip
-/// per churn event rather than per token.  (The literal API is
-/// whole-tensor, so a churn event re-marshals the full cache set; the
-/// worst case — churn every step — matches the old per-step cost, and
-/// steady-state decode pays nothing.)
+/// by one [`DecodeSession::run_plan`] are fed back verbatim as the next
+/// step's inputs — *whichever width that step dispatches to* — so the
+/// per-step host↔device conversion traffic shrinks from the full
+/// `[L, B, H, C, r]` caches to the token/position slabs in and the logits
+/// row out.  The engine pulls the caches to host only on slot-churn events
+/// ([`DecodeSession::update_caches`], e.g. zeroing a freed lane): marshal
+/// in once, update lanes host-side, and pay the cache round-trip per churn
+/// event rather than per token.  (The literal API is whole-tensor, so a
+/// churn event re-marshals the full cache set; the worst case — churn
+/// every step — matches the old per-step cost, and steady-state decode
+/// pays nothing.)
+///
+/// Construction validates that every width's program agrees on the
+/// parameter block and on the cache block (names *and* shapes), which is
+/// what makes carrying one literal cache set across widths sound.
+struct PlanProgram {
+    name: String,
+    sig: ProgramSig,
+}
+
 pub struct DecodeSession<'rt> {
     rt: &'rt Runtime,
     config: String,
-    program: String,
-    sig: ProgramSig,
+    /// Slab width → program.  Width 1 is always present.
+    progs: std::collections::BTreeMap<usize, PlanProgram>,
     params: Vec<xla::Literal>,
     caches: Vec<xla::Literal>,
     n_params: usize,
     n_caches: usize,
+    batch: usize,
 }
 
 impl<'rt> DecodeSession<'rt> {
-    /// `params` must match the program's leading inputs; the cache inputs
-    /// (names ending in `_cache`) are initialized to zeros and thereafter
-    /// carried from the program's own outputs.
+    /// Single-program session (slab width 1) — the pre-plan API, kept for
+    /// callers that only ever feed one token per lane per step.
     pub fn new(rt: &'rt Runtime, config: &str, program: &str, params: &[Value]) -> Result<Self> {
-        let sig = rt.manifest.config(config)?.program(program)?.clone();
-        let cache_idx: Vec<usize> = sig
-            .inputs
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.name.ends_with("_cache"))
-            .map(|(i, _)| i)
-            .collect();
-        let (n_params, n_caches) = match cache_idx.first() {
-            Some(&first) if cache_idx.iter().enumerate().all(|(k, &i)| i == first + k) => {
-                (first, cache_idx.len())
+        Self::new_planned(rt, config, &[(1, program.to_string())], params)
+    }
+
+    /// Build a session over `(width, program)` pairs.  `params` must match
+    /// the programs' (shared) leading inputs; the cache inputs (names
+    /// ending in `_cache`) are initialized to zeros and thereafter carried
+    /// from the programs' own outputs.  Width 1 is mandatory — it is the
+    /// decode step every plan degenerates to.
+    pub fn new_planned(
+        rt: &'rt Runtime,
+        config: &str,
+        programs: &[(usize, String)],
+        params: &[Value],
+    ) -> Result<Self> {
+        let mut progs = std::collections::BTreeMap::new();
+        for (w, name) in programs {
+            if *w == 0 {
+                bail!("{config}: slab width 0 is meaningless");
             }
-            _ => bail!("{config}/{program}: no contiguous *_cache input block — not a decode program"),
-        };
+            let sig = rt.manifest.config(config)?.program(name)?.clone();
+            if progs.insert(*w, PlanProgram { name: name.clone(), sig }).is_some() {
+                bail!("{config}: duplicate program for slab width {w}");
+            }
+        }
+        if !progs.contains_key(&1) {
+            bail!("{config}: a decode session needs a width-1 (decode) program");
+        }
+
+        // Validate each program's block structure against the width-1
+        // reference: params, contiguous cache block, carried outputs.
+        let mut n_params = 0usize;
+        let mut n_caches = 0usize;
+        let mut ref_param_specs: Vec<ArgSpec> = Vec::new();
+        let mut ref_cache_specs: Vec<ArgSpec> = Vec::new();
+        for (w, p) in &progs {
+            let (name, sig) = (&p.name, &p.sig);
+            let cache_idx: Vec<usize> = sig
+                .inputs
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.name.ends_with("_cache"))
+                .map(|(i, _)| i)
+                .collect();
+            let (np, nc) = match cache_idx.first() {
+                Some(&first) if cache_idx.iter().enumerate().all(|(k, &i)| i == first + k) => {
+                    (first, cache_idx.len())
+                }
+                _ => bail!(
+                    "{config}/{name}: no contiguous *_cache input block — not a decode program"
+                ),
+            };
+            // The carried caches must come back as the trailing outputs, in
+            // input order — verified by name so a signature change fails loud.
+            if sig.outputs.len() < nc + 1 {
+                bail!(
+                    "{config}/{name}: {} outputs can't carry {nc} caches plus logits",
+                    sig.outputs.len()
+                );
+            }
+            let out_tail: Vec<&str> = sig.outputs[sig.outputs.len() - nc..]
+                .iter()
+                .map(|a| a.name.as_str())
+                .collect();
+            let in_names: Vec<&str> =
+                sig.inputs[np..np + nc].iter().map(|a| a.name.as_str()).collect();
+            if out_tail != in_names {
+                bail!(
+                    "{config}/{name}: trailing outputs {out_tail:?} don't carry the cache inputs {in_names:?}"
+                );
+            }
+            if *w == 1 {
+                n_params = np;
+                n_caches = nc;
+                ref_param_specs = sig.inputs[..np].to_vec();
+                ref_cache_specs = sig.inputs[np..np + nc].to_vec();
+            }
+        }
+        for (w, p) in &progs {
+            let (name, sig) = (&p.name, &p.sig);
+            let same = |a: &[ArgSpec], b: &[ArgSpec]| {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.name == y.name && x.shape == y.shape)
+            };
+            if !same(&sig.inputs[..n_params.min(sig.inputs.len())], &ref_param_specs) {
+                bail!("{config}/{name}: width-{w} param block differs from the decode program's");
+            }
+            let lo = n_params;
+            let hi = (n_params + n_caches).min(sig.inputs.len());
+            if !same(&sig.inputs[lo..hi], &ref_cache_specs) {
+                bail!(
+                    "{config}/{name}: width-{w} cache block differs from the decode program's — \
+                     one literal cache set can't be carried across widths"
+                );
+            }
+        }
+
         if params.len() != n_params {
             bail!(
-                "{config}/{program}: expected {n_params} param inputs, got {}",
+                "{config}: expected {n_params} param inputs, got {}",
                 params.len()
             );
         }
-        for (v, spec) in params.iter().zip(&sig.inputs[..n_params]) {
+        for (v, spec) in params.iter().zip(&ref_param_specs) {
             literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
-                .with_context(|| format!("{config}/{program}"))?;
+                .with_context(|| format!("{config}/decode params"))?;
         }
-        // The carried caches must come back as the trailing outputs, in
-        // input order — verified by name so a signature change fails loud.
-        if sig.outputs.len() < n_caches + 1 {
-            bail!(
-                "{config}/{program}: {} outputs can't carry {n_caches} caches plus logits",
-                sig.outputs.len()
-            );
-        }
-        let out_tail: Vec<&str> = sig.outputs[sig.outputs.len() - n_caches..]
-            .iter()
-            .map(|a| a.name.as_str())
-            .collect();
-        let in_names: Vec<&str> = sig.inputs[n_params..n_params + n_caches]
-            .iter()
-            .map(|a| a.name.as_str())
-            .collect();
-        if out_tail != in_names {
-            bail!(
-                "{config}/{program}: trailing outputs {out_tail:?} don't carry the cache inputs {in_names:?}"
-            );
-        }
+        let batch = ref_cache_specs
+            .first()
+            .and_then(|a| a.shape.get(1).copied())
+            .context("cache input lacks a batch dim")?;
+
         let sw = Stopwatch::new();
         let param_lits: Vec<xla::Literal> =
             params.iter().map(literal::to_literal).collect::<Result<_>>()?;
-        let caches: Vec<xla::Literal> = sig.inputs[n_params..n_params + n_caches]
+        let caches: Vec<xla::Literal> = ref_cache_specs
             .iter()
             .map(|a| literal::to_literal(&Value::F32(Tensor::zeros(&a.shape))))
             .collect::<Result<_>>()?;
@@ -327,30 +406,82 @@ impl<'rt> DecodeSession<'rt> {
         Ok(Self {
             rt,
             config: config.into(),
-            program: program.into(),
-            sig,
+            progs,
             params: param_lits,
             caches,
             n_params,
             n_caches,
+            batch,
         })
     }
 
-    /// One decode step.  `step_args` are the per-step inputs after the
-    /// cache block (tokens, positions); returns the non-carried outputs
-    /// (the logits), while the cache outputs stay literal-side for the
-    /// next step.
+    /// Slab widths this session can dispatch, ascending (always starts
+    /// with 1).
+    pub fn widths(&self) -> Vec<usize> {
+        self.progs.keys().copied().collect()
+    }
+
+    /// Batch lanes of the carried caches.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// One decode step through the width-1 program.  `step_args` are the
+    /// per-step inputs after the cache block (tokens, positions); returns
+    /// the non-carried outputs (the logits), while the cache outputs stay
+    /// literal-side for the next step.
     pub fn step(&mut self, step_args: &[Value]) -> Result<Vec<Value>> {
-        let tail = &self.sig.inputs[self.n_params + self.n_caches..];
+        self.step_width(1, step_args)
+    }
+
+    /// Dispatch one fused step to the program for `width`, feeding each
+    /// lane's token/position slab row-major.  `toks`/`poss` must hold
+    /// `batch × width` entries; lanes with fewer than `width` real tokens
+    /// pad by repeating their last `(token, position)` pair, which the
+    /// slab programs treat as an idempotent rewrite.  Returns the logits
+    /// row `[B, V]` at each lane's last slab index.
+    pub fn run_plan(&mut self, width: usize, toks: Vec<i32>, poss: Vec<i32>) -> Result<Vec<Value>> {
+        if toks.len() != self.batch * width || poss.len() != self.batch * width {
+            bail!(
+                "{}: run_plan width {width} wants {} entries, got {}/{}",
+                self.config,
+                self.batch * width,
+                toks.len(),
+                poss.len()
+            );
+        }
+        // Width-1 programs keep the original flat `[B]` signature; chunk
+        // programs take `[B, K]` slabs.
+        let shape = if width == 1 { vec![self.batch] } else { vec![self.batch, width] };
+        let args = [
+            Value::I32(TensorI::new(shape.clone(), toks)),
+            Value::I32(TensorI::new(shape, poss)),
+        ];
+        self.step_width(width, &args)
+    }
+
+    fn step_width(&mut self, width: usize, step_args: &[Value]) -> Result<Vec<Value>> {
+        let prog = self
+            .progs
+            .get(&width)
+            .with_context(|| {
+                format!(
+                    "{}: no program for slab width {width} (have {:?})",
+                    self.config,
+                    self.progs.keys().collect::<Vec<_>>()
+                )
+            })?;
+        let (program, sig) = (&prog.name, &prog.sig);
+        let tail = &sig.inputs[self.n_params + self.n_caches..];
         if step_args.len() != tail.len() {
             bail!(
                 "{}/{}: expected {} step args, got {}",
-                self.config, self.program, tail.len(), step_args.len()
+                self.config, program, tail.len(), step_args.len()
             );
         }
         for (v, spec) in step_args.iter().zip(tail) {
             literal::check_arg(&spec.name, v, &spec.shape, spec.dtype)
-                .with_context(|| format!("{}/{}", self.config, self.program))?;
+                .with_context(|| format!("{}/{}", self.config, program))?;
         }
         let sw = Stopwatch::new();
         let step_lits: Vec<xla::Literal> =
@@ -363,7 +494,7 @@ impl<'rt> DecodeSession<'rt> {
             .chain(self.caches.iter())
             .chain(step_lits.iter())
             .collect();
-        let mut parts = self.rt.execute_core(&self.config, &self.program, &self.sig, &all)?;
+        let mut parts = self.rt.execute_core(&self.config, program, sig, &all)?;
         self.caches = parts.split_off(parts.len() - self.n_caches);
 
         let sw_out = Stopwatch::new();

@@ -1,0 +1,337 @@
+//! Host-side stub decode backend: a deterministic toy "model" with real
+//! KV-cache tensors, so the serving stack's *scheduling* logic — slab
+//! planning, mixed prefill/decode steps, lane zeroing, cancellation,
+//! admission — runs and is testable without a live PJRT backend.
+//!
+//! The vendored `xla` crate is a build stub whose device entry points
+//! error, which used to mean every engine/gateway test skipped on CI.
+//! [`StubModel`] fills that gap: it implements the same step contract as
+//! the compiled decode/prefill artifacts ([`crate::runtime::DecodeSession`]
+//! `run_plan`), over caches of the same `[L, B, H, C, r]` shape, with two
+//! properties the tests lean on:
+//!
+//! * **Slab invariance.**  A cache write depends only on
+//!   `(layer, head, rank, position, token, seed)` and logits are a fixed-
+//!   order reduction over the lane's cache prefix, so consuming a prompt
+//!   as one K-wide slab or as K single-token steps produces *bit-identical*
+//!   logits at every sampling point — the property the real chunk
+//!   artifacts guarantee mathematically (see
+//!   `python/tests/test_model.py::test_prefill_chunk_matches_sequential_decode`)
+//!   and the engine's K=1-vs-K=8 bit-identity test checks end to end.
+//! * **History sensitivity.**  Logits read the whole cache prefix of the
+//!   lane, so stale rows from a previous occupant (a missed lane zeroing)
+//!   or a cross-lane write change sampled tokens — scheduler bugs surface
+//!   as token diffs, not silent passes.
+//!
+//! `step_delay` adds an artificial per-step latency so timing-sensitive
+//! tests (cancel/deadline firing *during* a multi-step prefill) have a
+//! window to race against deterministically.
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+use crate::tensor::Tensor;
+
+/// Shape + behaviour of a stub engine — the stub analogue of picking a
+/// `decode_b{B}` artifact family from the manifest.
+#[derive(Clone, Debug)]
+pub struct StubSpec {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub rank: usize,
+    /// Context window C of the caches.
+    pub max_positions: usize,
+    /// Batch lanes B.
+    pub batch_slots: usize,
+    pub vocab: usize,
+    /// Slab widths the stub dispatches (the chunk ladder).  Width 1 is
+    /// always available even if not listed.
+    pub chunk_widths: Vec<usize>,
+    /// Mixed into every hash: two stubs with different seeds are different
+    /// "models".
+    pub seed: u64,
+    /// Artificial latency per fused step (Duration::ZERO for benches that
+    /// count steps, a few ms for tests that race cancels against prefill).
+    pub step_delay: Duration,
+}
+
+impl Default for StubSpec {
+    fn default() -> Self {
+        Self {
+            n_layers: 2,
+            n_heads: 2,
+            rank: 4,
+            max_positions: 64,
+            batch_slots: 8,
+            vocab: 32,
+            chunk_widths: vec![1, 8, 32],
+            seed: 0,
+            step_delay: Duration::ZERO,
+        }
+    }
+}
+
+impl StubSpec {
+    /// Ascending slab widths including the implicit 1.
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.chunk_widths.clone();
+        w.push(1);
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+}
+
+/// SplitMix64 finalizer — the hash behind every stub weight.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn mix(parts: &[u64]) -> u64 {
+    let mut h = 0x243F_6A88_85A3_08D3u64;
+    for &p in parts {
+        h = splitmix(h ^ p);
+    }
+    h
+}
+
+/// Hash to a centered float in [-0.5, 0.5).
+fn h01(x: u64) -> f32 {
+    ((x >> 40) as f32) / (1u64 << 24) as f32 - 0.5
+}
+
+/// Flat index into a `[L, B, H, C, r]` cache under `s`'s dims — the one
+/// layout formula, shared by the write and read paths so they can never
+/// silently diverge.
+fn flat_idx(s: &StubSpec, l: usize, lane: usize, h: usize, c: usize, k: usize) -> usize {
+    (((l * s.batch_slots + lane) * s.n_heads + h) * s.max_positions + c) * s.rank + k
+}
+
+/// The stub backend: two `[L, B, H, C, r]` caches plus deterministic
+/// write/readout rules.  See the module docs for the invariants.
+pub struct StubModel {
+    spec: StubSpec,
+    /// `[k_cache, vo_cache]`, same shapes the artifacts carry.
+    caches: Vec<Tensor>,
+}
+
+impl StubModel {
+    pub fn new(spec: StubSpec) -> Self {
+        let shape = [
+            spec.n_layers,
+            spec.batch_slots,
+            spec.n_heads,
+            spec.max_positions,
+            spec.rank,
+        ];
+        let caches = vec![Tensor::zeros(&shape), Tensor::zeros(&shape)];
+        Self { spec, caches }
+    }
+
+    pub fn spec(&self) -> &StubSpec {
+        &self.spec
+    }
+
+    /// Write one `(token, position)` pair into `lane`'s cache rows.  The
+    /// written value is a pure function of the coordinates, so rewriting
+    /// the same pair (the pad-by-repeat convention for short slabs) is a
+    /// no-op — exactly the idempotence contract of the slab artifacts.
+    fn write(&mut self, lane: usize, pos: usize, token: i32) {
+        let spec = &self.spec;
+        for (salt, cache) in self.caches.iter_mut().enumerate() {
+            let data = cache.data_mut();
+            for l in 0..spec.n_layers {
+                for h in 0..spec.n_heads {
+                    for k in 0..spec.rank {
+                        let v = h01(mix(&[
+                            spec.seed,
+                            salt as u64,
+                            l as u64,
+                            h as u64,
+                            k as u64,
+                            pos as u64,
+                            token as u64,
+                        ]));
+                        data[flat_idx(spec, l, lane, h, pos, k)] = v;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Logits for `lane` reading its cache prefix `[0, pos]` in a fixed
+    /// iteration order (bit-identical however the prefix was written).
+    fn logits_into(&self, lane: usize, pos: usize, out: &mut [f32]) {
+        let s = &self.spec;
+        out.fill(0.0);
+        for (salt, cache) in (0u64..).zip(self.caches.iter()) {
+            for l in 0..s.n_layers {
+                for h in 0..s.n_heads {
+                    for c in 0..=pos {
+                        for k in 0..s.rank {
+                            let e = cache.data()[flat_idx(s, l, lane, h, c, k)];
+                            if e == 0.0 {
+                                continue;
+                            }
+                            let w = mix(&[
+                                s.seed ^ 0xABCD,
+                                salt,
+                                l as u64,
+                                h as u64,
+                                c as u64,
+                                k as u64,
+                            ]);
+                            for (v, o) in out.iter_mut().enumerate() {
+                                *o += e * h01(splitmix(w ^ (v as u64).wrapping_mul(0x100_0193)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One fused step over all lanes: scatter each lane's `width`-wide
+    /// token/position slab into the caches, then read logits at each
+    /// lane's last slab index.  `toks`/`poss` are row-major `[B, width]`;
+    /// short slabs pad by repeating their last pair (idempotent rewrite).
+    pub fn step(&mut self, width: usize, toks: &[i32], poss: &[i32]) -> Result<Tensor> {
+        // Scalar dims copied out so `self.write` below can borrow mutably.
+        let (b, vocab, cmax) = (self.spec.batch_slots, self.spec.vocab, self.spec.max_positions);
+        let delay = self.spec.step_delay;
+        if !self.spec.widths().contains(&width) {
+            bail!("stub: no program for slab width {width} (have {:?})", self.spec.widths());
+        }
+        if toks.len() != b * width || poss.len() != b * width {
+            bail!(
+                "stub: width {width} wants {} entries, got {}/{}",
+                b * width,
+                toks.len(),
+                poss.len()
+            );
+        }
+        for lane in 0..b {
+            for j in 0..width {
+                let (t, p) = (toks[lane * width + j], poss[lane * width + j]);
+                if p < 0 || p as usize >= cmax {
+                    bail!("stub: lane {lane} position {p} outside the window");
+                }
+                self.write(lane, p as usize, t);
+            }
+        }
+        let mut logits = vec![0.0f32; b * vocab];
+        for lane in 0..b {
+            let last = poss[lane * width + width - 1] as usize;
+            self.logits_into(lane, last, &mut logits[lane * vocab..(lane + 1) * vocab]);
+        }
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        Ok(Tensor::new(vec![b, vocab], logits))
+    }
+
+    /// Zero the given batch lanes of both caches — the stub analogue of
+    /// the literal-side lane zeroing on slot churn.
+    pub fn zero_lanes(&mut self, lanes: &[usize]) {
+        let s = &self.spec;
+        let inner = s.n_heads * s.max_positions * s.rank;
+        for cache in &mut self.caches {
+            let data = cache.data_mut();
+            for l in 0..s.n_layers {
+                for &lane in lanes {
+                    let start = (l * s.batch_slots + lane) * inner;
+                    data[start..start + inner].fill(0.0);
+                }
+            }
+        }
+    }
+
+    /// Host view of the caches (tests only).
+    pub fn caches(&self) -> &[Tensor] {
+        &self.caches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> StubSpec {
+        StubSpec { batch_slots: 2, vocab: 16, max_positions: 32, ..Default::default() }
+    }
+
+    #[test]
+    fn widths_include_one() {
+        let s = StubSpec { chunk_widths: vec![8, 32], ..spec() };
+        assert_eq!(s.widths(), vec![1, 8, 32]);
+    }
+
+    #[test]
+    fn slab_write_matches_sequential_writes() {
+        // One 8-wide slab vs eight single-token steps: identical caches,
+        // identical final logits — the stub-level bit-identity invariant.
+        let toks: Vec<i32> = (0..8).map(|i| 3 + i).collect();
+        let mut a = StubModel::new(spec());
+        let mut last_seq = None;
+        for (i, &t) in toks.iter().enumerate() {
+            // Lane 1 idles at (0, 0) like an unoccupied engine lane.
+            let lg = a.step(1, &[t, 0], &[i as i32, 0]).unwrap();
+            last_seq = Some(lg);
+        }
+        let mut b = StubModel::new(spec());
+        let mut slab_toks = toks.clone();
+        let mut slab_poss: Vec<i32> = (0..8).collect();
+        // Lane 1: pad-by-repeat of (0, 0).
+        slab_toks.extend([0i32; 8]);
+        slab_poss.extend([0i32; 8]);
+        let lg = b.step(8, &slab_toks, &slab_poss).unwrap();
+        assert_eq!(lg.data(), last_seq.unwrap().data(), "slab must equal sequential");
+        assert_eq!(a.caches()[0].data(), b.caches()[0].data());
+        assert_eq!(a.caches()[1].data(), b.caches()[1].data());
+    }
+
+    #[test]
+    fn logits_depend_on_history_and_lane_is_isolated() {
+        let mut a = StubModel::new(spec());
+        let mut b = StubModel::new(spec());
+        a.step(1, &[5, 0], &[0, 0]).unwrap();
+        b.step(1, &[6, 0], &[0, 0]).unwrap();
+        let la = a.step(1, &[7, 0], &[1, 0]).unwrap();
+        let lb = b.step(1, &[7, 0], &[1, 0]).unwrap();
+        assert_ne!(la.data(), lb.data(), "history must influence logits");
+        // Lane 0's rows differ, lane 1 wrote identical junk in both.
+        assert_ne!(
+            &la.data()[..16],
+            &la.data()[16..],
+            "different lanes with different rows must not alias"
+        );
+    }
+
+    #[test]
+    fn zero_lanes_restores_fresh_state() {
+        let mut a = StubModel::new(spec());
+        a.step(1, &[5, 9], &[0, 0]).unwrap();
+        a.step(1, &[6, 9], &[1, 1]).unwrap();
+        a.zero_lanes(&[0]);
+        // Lane 0 replays a fresh prompt and must see logits identical to a
+        // brand-new stub (lane 1's live rows must not leak in).
+        let l1 = a.step(1, &[4, 9], &[0, 2]).unwrap();
+        let mut fresh = StubModel::new(spec());
+        fresh.step(1, &[9, 9], &[0, 0]).unwrap();
+        fresh.step(1, &[9, 9], &[1, 1]).unwrap();
+        fresh.zero_lanes(&[0]);
+        let l2 = fresh.step(1, &[4, 9], &[0, 2]).unwrap();
+        assert_eq!(&l1.data()[..16], &l2.data()[..16]);
+    }
+
+    #[test]
+    fn rejects_bad_width_and_positions() {
+        let mut a = StubModel::new(spec());
+        assert!(a.step(3, &[0; 6], &[0; 6]).is_err(), "width 3 not in the ladder");
+        assert!(a.step(1, &[0, 0], &[0]).is_err(), "length mismatch");
+        assert!(a.step(1, &[0, 0], &[0, 99]).is_err(), "position outside window");
+    }
+}

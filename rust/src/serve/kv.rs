@@ -77,13 +77,25 @@ impl KvManager {
     /// Record one generated position for slot `slot`; grows pages on
     /// boundary crossings. Errors past `max_positions`.
     pub fn advance(&mut self, slot: usize) -> Result<()> {
+        self.advance_by(slot, 1)
+    }
+
+    /// Record `n` positions at once — one token slab.  Page accounting is
+    /// slab-granular: an 8-token chunk crossing a page boundary allocates
+    /// the new page in the same call, so live/peak bytes are exact no
+    /// matter how wide the step was.  Errors when the slab would escape
+    /// `max_positions`, charging nothing.
+    pub fn advance_by(&mut self, slot: usize, n: usize) -> Result<()> {
         let cfg_max = self.cfg.max_positions;
         let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
-        if s.positions >= cfg_max {
-            bail!("slot {slot} exceeded max positions {cfg_max}");
+        if s.positions + n > cfg_max {
+            bail!(
+                "slot {slot}: {} + {n} positions would exceed max {cfg_max}",
+                s.positions
+            );
         }
-        s.positions += 1;
+        s.positions += n;
         let need = s.positions.div_ceil(PAGE_TOKENS);
         if need > s.pages {
             s.pages = need;
@@ -190,6 +202,22 @@ mod tests {
         assert_eq!(kv.live_bytes(), kv.config().bytes_per_page());
         kv.advance(s).unwrap();
         assert_eq!(kv.live_bytes(), 2 * kv.config().bytes_per_page());
+    }
+
+    #[test]
+    fn advance_by_slab_accounts_pages() {
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        // One slab crossing a page boundary allocates the new page in the
+        // same call.
+        kv.advance_by(s, PAGE_TOKENS + 1).unwrap();
+        assert_eq!(kv.live_bytes(), 2 * kv.config().bytes_per_page());
+        assert_eq!(kv.positions(s), PAGE_TOKENS + 1);
+        // A slab that would escape the window is refused atomically.
+        assert!(kv.advance_by(s, 64).is_err());
+        assert_eq!(kv.positions(s), PAGE_TOKENS + 1, "failed slab charges nothing");
+        kv.advance_by(s, 64 - PAGE_TOKENS - 1).unwrap();
+        assert!(kv.advance(s).is_err(), "window exactly full");
     }
 
     #[test]

@@ -1,43 +1,91 @@
 //! Serving layer: a continuous-batching scheduler over the fixed-shape
-//! KV-cache decode artifacts.
+//! KV-cache step artifacts, with chunked prefill as the API default.
 //!
 //! Architecture (one request's path through the subsystem):
 //!
 //! * [`batcher`] — FIFO queue + admission rule.  The engine pulls one
-//!   request per freed KV lane *between decode steps*
+//!   request per freed KV lane *between fused steps*
 //!   ([`Batcher::pop_admissible`]), so slots never idle waiting for a
-//!   wave boundary.
-//! * [`session`] — per-request decode state: prompt cursor, generated
-//!   row, stop condition, KV slot, and latency bookkeeping (queue wait,
-//!   TTFT, per-request completion step).
+//!   wave boundary.  Empty-prompt requests are rejected at admission.
+//! * [`session`] — per-request decode state: row cursor, generated row,
+//!   stop condition, KV slot, and latency bookkeeping (queue wait, TTFT,
+//!   per-request completion and prefill step counts).  A session's unit of
+//!   work is a *token slab* ([`Session::next_slab`]): a K-token prompt
+//!   chunk during prefill, the single fed-back token during decode.
 //! * [`sampling`] — per-request decode policy (greedy / temperature /
 //!   top-k / stop token), deterministic per `(seed, request id)`.
 //! * [`kv`] — paged KV slot manager: allocation inside the fixed batch,
-//!   page-granular position accounting, live/peak bytes.
-//! * [`engine`] — the step loop.  Each fused decode step runs all `B`
-//!   lanes with *per-lane* positions; finished sessions retire and their
-//!   lanes are zeroed and re-assigned immediately.  The KV cache values
-//!   themselves stay literal-side across steps
-//!   ([`crate::runtime::DecodeSession`]) — host↔device traffic per token
-//!   is just the token/position vectors and the logits.
+//!   page-granular position accounting per slab
+//!   ([`KvManager::advance_by`]), live/peak bytes.
+//! * [`engine`] — the step loop, organized around [`engine::StepPlan`].
+//!
+//! ## The StepPlan lifecycle
+//!
+//! Every iteration of the engine loop runs the same four stages:
+//!
+//! ```text
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ 1 SLAB BUILD   each live session offers its next slab:   │
+//!        │                prefill lane → widest admissible prompt   │
+//!        │                chunk from the ladder {1, 8, 32, ...};    │
+//!        │                decode lane → its one fed-back token      │
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  StepPlan { width = max over lanes, slabs }
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ 2 DISPATCH     one fused step through the width-W        │
+//!        │                artifact (decode_* at W=1, prefill_k{W}_* │
+//!        │                above); narrow slabs pad by repeating     │
+//!        │                their last (token, position) pair — an    │
+//!        │                idempotent cache rewrite                  │
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  logits [B, V] at each lane's last slab index
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ 3 SAMPLE       lanes whose slab crossed the prompt       │
+//!        │                boundary (or that were decoding) sample   │
+//!        │                one token; finished sessions retire and   │
+//!        │                free their KV lane immediately            │
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  freed lanes, streamed tokens (StepHook)
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ 4 ADMIT        between steps: cancellations retire lanes,│
+//!        │                queued requests fill every free lane      │
+//!        │                (zeroed first), and the next iteration    │
+//!        │                plans over the new lane set               │
+//!        └──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! A 512-token prompt therefore reaches its first sampled token in
+//! `ceil(512/K)` fused steps instead of 512, while neighbouring lanes
+//! keep decoding inside the same steps — prefill and decode are one loop,
+//! one plan, one artifact family.  The KV cache values stay literal-side
+//! across steps *and across widths* ([`crate::runtime::DecodeSession`]
+//! carries one cache set for the whole ladder), so host↔device traffic
+//! per step is just the token/position slabs and the logits.
 //!
 //! This realizes the paper's motivation end-to-end: after CLOVER pruning
 //! to rank r, the decode path caches rank-r factor projections instead of
-//! full head dimensions, cutting KV memory by exactly r/d — and the
+//! full head dimensions, cutting KV memory by exactly r/d — the
 //! slot-level scheduler turns those freed bytes into admitted requests,
-//! measured by [`engine::ServeMetrics`] (tokens/s, TTFT, p50/p99 latency,
-//! peak KV bytes).
+//! and the slab API turns the prefill compute-density the pruning spared
+//! into TTFT ([`engine::Completion::prefill_steps`],
+//! [`engine::ServeMetrics`]).
+//!
+//! Engines run against the compiled artifacts ([`Engine::new`]) or
+//! against the deterministic host-side stub backend
+//! ([`Engine::new_stub`], [`crate::runtime::stub`]) — same scheduler,
+//! same plans, no PJRT dependency — which is how all of the above is
+//! exercised on CI and how step-count benches run on a bare checkout.
 //!
 //! ## The step hook and the `server::` layer above
 //!
 //! The engine's step loop is observable and steerable through
-//! [`engine::StepHook`]: between decode steps it polls the hook for new
+//! [`engine::StepHook`]: between fused steps it polls the hook for new
 //! requests ([`Engine::serve_open`] blocks there when idle) and for
 //! cancellation orders (fired cancel tokens, expired deadlines — the
 //! session retires and its KV lane frees *before* the same iteration's
-//! admission pass, so a waiter reclaims it without skipping a step), and
-//! during the step it reports admissions, every sampled token, and every
-//! completion as they happen.
+//! admission pass, so a waiter reclaims it without skipping a step, even
+//! mid-prefill), and during the step it reports admissions, every sampled
+//! token, and every completion as they happen.
 //!
 //! [`crate::server`] is the thread-owning front-end built on that hook.
 //! One request's lifecycle through the full stack:
@@ -55,11 +103,12 @@
 //!
 //! Every submitted request receives exactly one terminal event — `Done`
 //! on completion (graceful shutdown drains accepted work to completion),
-//! `Cancelled` on token fire or deadline expiry.  `server::Router`
-//! multiplexes this across several
-//! gateways whose engines were compiled at different CLOVER pruning ranks,
-//! routing each request by queue depth × per-rank KV cost
-//! ([`KvConfig::bytes_per_token`]).
+//! `Cancelled` on token fire or deadline expiry, including cancels that
+//! land while the request is still prefilling (partial row = prompt, no
+//! tokens).  `server::Router` multiplexes this across several gateways
+//! whose engines were compiled at different CLOVER pruning ranks, routing
+//! each request by (queue depth + pending prefill tokens) × per-rank KV
+//! cost ([`KvConfig::bytes_per_token`]).
 
 pub mod batcher;
 pub mod engine;
@@ -69,7 +118,8 @@ pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use engine::{
-    Admission, Cancellation, CancelReason, Completion, Engine, NoHook, ServeMetrics, StepHook,
+    chunk_width, Admission, Cancellation, CancelReason, Completion, Engine, LaneSlab, NoHook,
+    ServeMetrics, StepHook, StepPlan,
 };
 pub use kv::{KvConfig, KvManager, PAGE_TOKENS};
 pub use sampling::{Sampler, SamplingParams};

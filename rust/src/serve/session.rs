@@ -1,13 +1,19 @@
 //! Per-request decode state for the continuous-batching engine.
 //!
 //! A [`Session`] owns everything about one in-flight request: the token
-//! row (prompt + generated), the prompt cursor, the KV slot it occupies,
+//! row (prompt + generated), the row cursor, the KV slot it occupies,
 //! its sampling policy and stop condition, and the latency bookkeeping
 //! (queue wait, time-to-first-token, per-request completion).  The engine
-//! loop is then thin: feed each live session's `(next_token, position)`
-//! into one fused decode step, hand each lane's logits row back through
-//! [`Session::observe`], and retire sessions the moment they finish —
-//! freeing their batch lane for the next queued request.
+//! loop is then thin: ask each live session for its next *token slab*
+//! ([`Session::next_slab`] — a K-token prompt chunk during prefill, the
+//! single fed-back token during decode), run one fused step over all
+//! lanes, hand each lane's logits row back through
+//! [`Session::observe_slab`], and retire sessions the moment they finish
+//! — freeing their batch lane for the next queued request.
+//!
+//! Invariant: a session's prompt is non-empty — empty-prompt requests are
+//! rejected at admission (the engine bails, the gateway refuses the
+//! submit), so the cursor always has a real token to feed.
 
 use std::time::Instant;
 
@@ -34,6 +40,10 @@ pub struct Session {
     ttft_s: Option<f64>,
     stopped: bool,
     steps: usize,
+    /// Fused steps that consumed at least one prompt token — how many
+    /// engine steps this request's prefill occupied (the TTFT driver
+    /// chunked prefill exists to shrink).
+    prefill_steps: usize,
     /// `(row position, token)` sampled by the most recent [`Session::observe`]
     /// call, or `None` when that step only consumed prompt.  This is what the
     /// engine's per-step hook streams out as tokens are sampled, rather than
@@ -43,7 +53,10 @@ pub struct Session {
 
 impl Session {
     /// Build the decode state for `req`, bound to KV slot/lane `slot`.
+    /// The prompt must be non-empty (enforced at admission by the engine
+    /// and at submit by the gateway).
     pub fn new(req: Request, slot: usize, max_positions: usize, admitted: Instant) -> Self {
+        debug_assert!(!req.prompt.is_empty(), "empty prompts are rejected at admission");
         let target_len = (req.prompt.len() + req.max_new).min(max_positions);
         let sampler = Sampler::for_request(req.sampling.clone(), req.id);
         Self {
@@ -59,6 +72,7 @@ impl Session {
             ttft_s: None,
             stopped: false,
             steps: 0,
+            prefill_steps: 0,
             last_sampled: None,
         }
     }
@@ -73,7 +87,9 @@ impl Session {
     }
 
     /// Token to feed this step: the prompt token under the cursor during
-    /// prefill, else the last generated token (0 for an empty prompt).
+    /// prefill, else the last generated token.  (The trailing `0` fallback
+    /// is unreachable under the non-empty-prompt invariant; it survives
+    /// only so this accessor stays total.)
     pub fn next_token(&self) -> i32 {
         self.row
             .get(self.cursor)
@@ -85,6 +101,22 @@ impl Session {
     /// Model position for this step.
     pub fn position(&self) -> usize {
         self.cursor
+    }
+
+    /// Unconsumed row tokens: the prompt remainder during prefill, exactly
+    /// 1 during decode (the fed-back last sample).
+    pub fn pending(&self) -> usize {
+        self.row.len() - self.cursor
+    }
+
+    /// The token slab this session would feed into a step of at most
+    /// `max_width` tokens: `(tokens, start position)`.  During prefill
+    /// this is the next chunk of unconsumed prompt; during decode it is
+    /// the single fed-back token.  Never empty for a live session.
+    pub fn next_slab(&self, max_width: usize) -> (&[i32], usize) {
+        debug_assert!(max_width >= 1);
+        let take = self.pending().min(max_width);
+        (&self.row[self.cursor..self.cursor + take], self.cursor)
     }
 
     /// Still consuming prompt tokens (no token generated yet)?
@@ -106,14 +138,31 @@ impl Session {
         self.stopped || self.row.len() >= self.target_len || self.cursor >= self.target_len
     }
 
-    /// Consume this step's logits row for this lane.  Advances the cursor,
-    /// samples a token iff the row is exhausted (prefill just ended or
-    /// we're generating), and returns `true` when the request finished on
-    /// this step.
+    /// Consume this step's logits row for this lane after a width-1 slab —
+    /// [`Session::observe_slab`] with `taken == 1`.
     pub fn observe(&mut self, logits: &[f32], now: Instant) -> bool {
+        self.observe_slab(1, logits, now)
+    }
+
+    /// Consume this step's logits row for this lane, having fed a
+    /// `taken`-token slab.  Advances the cursor by the whole slab, samples
+    /// a token iff the row is exhausted (prefill just ended or we're
+    /// generating — the logits are at the slab's *last* index, which is
+    /// exactly the last consumed position), and returns `true` when the
+    /// request finished on this step.
+    pub fn observe_slab(&mut self, taken: usize, logits: &[f32], now: Instant) -> bool {
         debug_assert!(!self.is_done(), "observe on a finished session");
+        debug_assert!(
+            taken >= 1 && self.cursor + taken <= self.row.len(),
+            "slab of {taken} escapes the row ({} of {})",
+            self.cursor,
+            self.row.len()
+        );
         self.steps += 1;
-        self.cursor += 1;
+        if self.cursor < self.prompt_len {
+            self.prefill_steps += 1;
+        }
+        self.cursor += taken;
         self.last_sampled = None;
         if self.cursor >= self.row.len() && self.row.len() < self.target_len {
             let tok = self.sampler.sample(logits);
@@ -160,6 +209,7 @@ impl Session {
             ttft_s: self.ttft_s.unwrap_or(latency_s),
             queue_wait_s: self.admitted.duration_since(self.arrived).as_secs_f64(),
             steps: self.steps,
+            prefill_steps: self.prefill_steps,
             finished_step,
         }
     }
@@ -238,6 +288,61 @@ mod tests {
     }
 
     #[test]
+    fn next_slab_chunks_prompt_then_feeds_back() {
+        let now = Instant::now();
+        let mut s =
+            Session::new(req(1, vec![5, 6, 7, 8, 9], 3, SamplingParams::greedy()), 0, 64, now);
+        let mut rng = Rng::new(4);
+        assert_eq!(s.pending(), 5);
+        let (slab, start) = s.next_slab(4);
+        assert_eq!((slab, start), (&[5, 6, 7, 8][..], 0));
+        assert!(!s.observe_slab(4, &logits_from(&mut rng), now));
+        assert_eq!(s.last_sampled(), None, "mid-prefill slab samples nothing");
+        // Remainder narrower than the width: take what's left; the step
+        // that exhausts the prompt samples the first token.
+        let (slab, start) = s.next_slab(4);
+        assert_eq!((slab.len(), start), (1, 4));
+        assert!(!s.observe_slab(1, &logits_from(&mut rng), now));
+        assert_eq!(s.last_sampled().map(|(p, _)| p), Some(5));
+        // Decode: pending is exactly 1 no matter the width on offer.
+        assert_eq!(s.pending(), 1);
+        let (slab, start) = s.next_slab(8);
+        assert_eq!((slab.len(), start), (1, 5));
+        let mut steps = 2;
+        while !s.observe_slab(1, &logits_from(&mut rng), now) {
+            steps += 1;
+        }
+        let c = s.finish(now, steps + 1);
+        assert_eq!(c.tokens.len(), 8);
+        assert_eq!(c.prefill_steps, 2, "5-token prompt over a 4-wide slab: 2 prefill steps");
+    }
+
+    #[test]
+    fn slab_and_single_token_prefill_sample_identically() {
+        // The sampled token depends only on the logits at the prompt's
+        // last position and the per-request sampler state — not on how
+        // many steps the prompt took to consume.
+        let now = Instant::now();
+        let sampling =
+            SamplingParams { temperature: 0.8, top_k: 3, seed: 5, stop_token: None };
+        let mk = || Session::new(req(9, vec![1, 2, 3, 4], 2, sampling.clone()), 0, 64, now);
+        let mut rng = Rng::new(11);
+        let sample_logits = logits_from(&mut rng);
+        let junk = logits_from(&mut rng);
+        let mut a = mk();
+        a.observe_slab(4, &sample_logits, now);
+        let mut b = mk();
+        for _ in 0..3 {
+            b.observe(&junk, now); // prompt-consuming steps ignore logits
+        }
+        b.observe(&sample_logits, now);
+        assert_eq!(a.last_sampled(), b.last_sampled());
+        assert_eq!(a.tokens(), b.tokens());
+        assert_eq!(a.prefill_steps, 1);
+        assert_eq!(b.prefill_steps, 4);
+    }
+
+    #[test]
     fn stop_token_ends_early() {
         let now = Instant::now();
         let mut sampling = SamplingParams::greedy();
@@ -266,7 +371,8 @@ mod tests {
     fn session_invariants_property() {
         prop("session decode invariants", 40, |rng| {
             let now = Instant::now();
-            let p = rng.below(5);
+            // Prompts are non-empty by the admission contract.
+            let p = 1 + rng.below(4);
             let prompt: Vec<i32> = (0..p).map(|_| rng.below(V) as i32).collect();
             let max_new = rng.below(8);
             let cwin = 16;
@@ -283,7 +389,15 @@ mod tests {
                 if s.position() >= cwin {
                     return Err(format!("position {} escaped the window", s.position()));
                 }
-                s.observe(&logits_from(rng), now);
+                // Random slab widths: the invariants hold whether the
+                // prompt is consumed token-by-token or in chunks.
+                let width = 1 + rng.below(4);
+                let (slab, start) = s.next_slab(width);
+                if start != s.position() || slab.is_empty() || slab.len() > width {
+                    return Err(format!("bad slab {}@{start} for width {width}", slab.len()));
+                }
+                let taken = slab.len();
+                s.observe_slab(taken, &logits_from(rng), now);
                 steps += 1;
                 if steps > 2 * cwin {
                     return Err("session failed to terminate".into());
@@ -300,11 +414,12 @@ mod tests {
                 return Err("generated more than max_new".into());
             }
             // The final generated token is never re-fed: at most target - 1
-            // steps for a real prompt (degenerate requests take zero).  An
-            // empty prompt burns one extra step on the position-0 dummy.
-            let max_steps = if p == 0 { target } else { target.saturating_sub(1) };
-            if steps > max_steps {
+            // single-token steps; slab consumption can only reduce that.
+            if steps > target.saturating_sub(1) {
                 return Err(format!("{steps} steps for target {target} (prompt {p})"));
+            }
+            if c.prefill_steps > p {
+                return Err(format!("{} prefill steps for a {p}-token prompt", c.prefill_steps));
             }
             Ok(())
         });

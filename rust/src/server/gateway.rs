@@ -37,6 +37,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::ops;
 use crate::model::params::ParamSet;
 use crate::model::{decode_params_for_checkpoint, Checkpoint};
+use crate::runtime::stub::StubSpec;
 use crate::runtime::Runtime;
 use crate::serve::{
     BatchPolicy, CancelReason, Cancellation, Completion, Engine, Request, SamplingParams,
@@ -61,6 +62,10 @@ pub enum ParamSource {
     InitPruned { seed: i32, ratio: f64, method: String },
     /// A `.clvr` checkpoint, dense or factorized (rank from metadata).
     Checkpoint { path: String },
+    /// No parameters at all: the deterministic host-side stub backend
+    /// ([`crate::runtime::stub`]) — gateway/router behaviour without a
+    /// PJRT runtime (tests, bare-checkout benches).
+    Stub(StubSpec),
 }
 
 /// Everything a worker thread needs to build its engine from scratch —
@@ -72,6 +77,10 @@ pub struct EngineSpec {
     /// Batch lanes of the decode artifact family (`decode_b{B}`).
     pub batch_slots: usize,
     pub source: ParamSource,
+    /// Cap on the chunked-prefill slab width (`Some(1)` disables
+    /// chunking, `None` keeps every width the manifest exports) — see
+    /// [`Engine::with_prefill_chunk`].
+    pub prefill_chunk: Option<usize>,
 }
 
 impl EngineSpec {
@@ -81,6 +90,7 @@ impl EngineSpec {
             preset: preset.into(),
             batch_slots,
             source: ParamSource::Init { seed },
+            prefill_chunk: None,
         }
     }
 
@@ -96,6 +106,7 @@ impl EngineSpec {
             preset: preset.into(),
             batch_slots,
             source: ParamSource::InitPruned { seed, ratio, method: "clover".into() },
+            prefill_chunk: None,
         }
     }
 
@@ -105,7 +116,27 @@ impl EngineSpec {
             preset: preset.into(),
             batch_slots,
             source: ParamSource::Checkpoint { path: path.into() },
+            prefill_chunk: None,
         }
+    }
+
+    /// A stub-backed engine (no artifacts, no PJRT) — the serving stack's
+    /// behaviour with the model math replaced by
+    /// [`crate::runtime::stub::StubModel`].
+    pub fn stub(spec: StubSpec) -> Self {
+        Self {
+            artifacts_dir: String::new(),
+            preset: "stub".into(),
+            batch_slots: spec.batch_slots,
+            source: ParamSource::Stub(spec),
+            prefill_chunk: None,
+        }
+    }
+
+    /// Cap (or with `Some(1)`, disable) chunked prefill for this engine.
+    pub fn with_prefill_chunk(mut self, cap: Option<usize>) -> Self {
+        self.prefill_chunk = cap;
+        self
     }
 }
 
@@ -126,6 +157,7 @@ fn build_params(spec: &EngineSpec, rt: &Runtime) -> Result<(ParamSet, String)> {
             let ck = Checkpoint::load(path)?;
             decode_params_for_checkpoint(&ck, &entry, b)
         }
+        ParamSource::Stub(_) => bail!("stub engines have no artifact params"),
     }
 }
 
@@ -152,6 +184,10 @@ pub enum SubmitError {
     Saturated,
     /// Gateway is shutting down or its worker is gone.
     Closed,
+    /// The prompt is empty.  The engine has nothing to feed such a
+    /// request (and would have to invent a position-0 token), so it is
+    /// refused here, before an id or a stream is allocated.
+    EmptyPrompt,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -159,6 +195,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Saturated => write!(f, "gateway ingress saturated"),
             SubmitError::Closed => write!(f, "gateway closed"),
+            SubmitError::EmptyPrompt => write!(f, "empty prompt rejected at admission"),
         }
     }
 }
@@ -197,6 +234,10 @@ pub struct Gateway {
     /// event consumer can key on [`super::StreamEvent::id`] safely.
     next_id: Arc<AtomicU64>,
     in_flight: Arc<AtomicUsize>,
+    /// Prompt tokens accepted but not yet prefilled (decremented by the
+    /// worker at each request's first sampled token or terminal event) —
+    /// the router's measure of pending prefill work.
+    queued_prefill: Arc<AtomicUsize>,
     submitted: AtomicUsize,
     worker: Option<JoinHandle<Result<ServeMetrics>>>,
 }
@@ -219,11 +260,33 @@ impl Gateway {
         let (ctrl_tx, ctrl_rx) = mpsc::channel::<Ctrl>();
         let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(usize, usize), String>>();
         let in_flight = Arc::new(AtomicUsize::new(0));
+        let queued_prefill = Arc::new(AtomicUsize::new(0));
         let policy = cfg.policy.clone();
         let worker_in_flight = in_flight.clone();
+        let worker_queued_prefill = queued_prefill.clone();
         let worker = thread::Builder::new()
             .name(format!("gateway-{name}"))
             .spawn(move || -> Result<ServeMetrics> {
+                let mut hook = GatewayHook {
+                    submit_rx: Some(submit_rx),
+                    ctrl_rx,
+                    in_flight: worker_in_flight,
+                    queued_prefill: worker_queued_prefill,
+                    pending_prefill: HashMap::new(),
+                    streams: HashMap::new(),
+                    registry: CancelRegistry::new(),
+                    backlog: Vec::new(),
+                };
+                // Stub engines have no runtime at all; artifact engines own
+                // a Runtime for the thread's lifetime (the PJRT handles are
+                // born and die here).
+                if let ParamSource::Stub(stub_spec) = &spec.source {
+                    let engine = Engine::new_stub(stub_spec.clone())
+                        .with_prefill_chunk(spec.prefill_chunk);
+                    let kc = engine.kv_config();
+                    let _ = ready_tx.send(Ok((kc.rank, kc.bytes_per_token())));
+                    return engine.serve_open(policy, &mut hook);
+                }
                 let rt = match Runtime::new(&spec.artifacts_dir) {
                     Ok(rt) => rt,
                     Err(e) => {
@@ -239,7 +302,7 @@ impl Gateway {
                     }
                 };
                 let engine = match Engine::new(&rt, &spec.preset, &program, params) {
-                    Ok(x) => x,
+                    Ok(x) => x.with_prefill_chunk(spec.prefill_chunk),
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return Err(e);
@@ -247,14 +310,6 @@ impl Gateway {
                 };
                 let kc = engine.kv_config();
                 let _ = ready_tx.send(Ok((kc.rank, kc.bytes_per_token())));
-                let mut hook = GatewayHook {
-                    submit_rx: Some(submit_rx),
-                    ctrl_rx,
-                    in_flight: worker_in_flight,
-                    streams: HashMap::new(),
-                    registry: CancelRegistry::new(),
-                    backlog: Vec::new(),
-                };
                 engine.serve_open(policy, &mut hook)
             })
             .context("spawning gateway worker thread")?;
@@ -267,6 +322,7 @@ impl Gateway {
                 ctrl_tx,
                 next_id: Arc::new(AtomicU64::new(0)),
                 in_flight,
+                queued_prefill,
                 submitted: AtomicUsize::new(0),
                 worker: Some(worker),
             }),
@@ -298,6 +354,14 @@ impl Gateway {
     /// Requests accepted and not yet terminal (queued + decoding).
     pub fn in_flight(&self) -> usize {
         self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Prompt tokens accepted whose prefill has not finished — pending
+    /// prefill work in tokens.  A burst of long prompts shows up here
+    /// immediately (counted at submit), and drains as requests reach
+    /// their first sampled token or terminal event.
+    pub fn queued_prefill_tokens(&self) -> usize {
+        self.queued_prefill.load(Ordering::SeqCst)
     }
 
     /// Total submissions accepted over this gateway's lifetime.
@@ -336,6 +400,11 @@ impl Gateway {
         deadline: Option<Duration>,
         block: bool,
     ) -> std::result::Result<Ticket, SubmitError> {
+        // Nothing to feed: refused before an id or stream exists (the
+        // engine-level contract is the same — it bails on empty prompts).
+        if prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
         // `join` consumes the Gateway, so a live `&self` implies the worker
         // has not been asked to shut down; a dead worker (panic/error)
         // surfaces as a disconnected channel below.
@@ -345,12 +414,16 @@ impl Gateway {
         // the worker can see the submission — ordering is preserved.
         let _ = events_tx.send(StreamEvent::Queued { id });
         let now = Instant::now();
+        let prompt_len = prompt.len();
         let sub = Submission {
             req: Request { id, prompt, max_new, arrived: now, sampling },
             deadline: deadline.map(|d| now + d),
             events: events_tx,
         };
         self.in_flight.fetch_add(1, Ordering::SeqCst);
+        // Counted at submit so a burst of long prompts is visible to the
+        // router before the worker has even swept the channel.
+        self.queued_prefill.fetch_add(prompt_len, Ordering::SeqCst);
         let sent = if block {
             self.submit_tx.send(sub).map_err(|_| SubmitError::Closed)
         } else {
@@ -361,6 +434,7 @@ impl Gateway {
         };
         if let Err(e) = sent {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.queued_prefill.fetch_sub(prompt_len, Ordering::SeqCst);
             return Err(e);
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
@@ -404,6 +478,14 @@ struct GatewayHook {
     submit_rx: Option<mpsc::Receiver<Submission>>,
     ctrl_rx: mpsc::Receiver<Ctrl>,
     in_flight: Arc<AtomicUsize>,
+    /// Shared with the handle's [`Gateway::queued_prefill_tokens`]; the
+    /// handle adds each prompt at submit, this side subtracts when the
+    /// prefill finishes (first sampled token) or the request goes
+    /// terminal without one.
+    queued_prefill: Arc<AtomicUsize>,
+    /// Prompt length per accepted id still owing its `queued_prefill`
+    /// subtraction.
+    pending_prefill: HashMap<u64, usize>,
     streams: HashMap<u64, mpsc::Sender<StreamEvent>>,
     registry: CancelRegistry,
     /// Submissions accepted but not yet handed to the engine (filled by
@@ -421,7 +503,16 @@ impl GatewayHook {
     /// metrics and conservation checks account for all of them.
     fn accept(&mut self, sub: Submission) {
         self.streams.insert(sub.req.id, sub.events);
+        self.pending_prefill.insert(sub.req.id, sub.req.prompt.len());
         self.backlog.push((sub.req, sub.deadline));
+    }
+
+    /// The request's prefill is over (or it went terminal first): return
+    /// its prompt tokens to the shared pending-prefill gauge.
+    fn prefill_done(&mut self, id: u64) {
+        if let Some(n) = self.pending_prefill.remove(&id) {
+            self.queued_prefill.fetch_sub(n, Ordering::SeqCst);
+        }
     }
 
     /// Drain the control channel: cancels into the registry; shutdown
@@ -480,6 +571,7 @@ impl GatewayHook {
     /// Deliver a terminal event and drop all per-request state.
     fn terminal(&mut self, id: u64, ev: StreamEvent) {
         self.registry.retire(id);
+        self.prefill_done(id);
         if let Some(tx) = self.streams.remove(&id) {
             let _ = tx.send(ev);
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -535,6 +627,8 @@ impl StepHook for GatewayHook {
     }
 
     fn on_token(&mut self, id: u64, pos: usize, token: i32, step: usize) {
+        // First sampled token == prefill complete.
+        self.prefill_done(id);
         if let Some(tx) = self.streams.get(&id) {
             let _ = tx.send(StreamEvent::Token { id, pos, token, step });
         }
@@ -700,6 +794,162 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ---- stub-backed gateway tests: no PJRT needed, run everywhere ----
+
+    /// One lane, single-token ladder, 5ms per fused step: a 64-token
+    /// prompt spends >= 320ms in prefill, a wide-open window for control
+    /// events to land mid-prefill even on a loaded CI runner.
+    fn prefill_stub_spec() -> StubSpec {
+        StubSpec {
+            batch_slots: 1,
+            chunk_widths: vec![1],
+            max_positions: 128,
+            step_delay: Duration::from_millis(5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn stub_gateway_serves_end_to_end() {
+        // The full gateway stack (channels, streams, metrics, shutdown)
+        // over the stub engine — with chunked prefill on by default.
+        let spec = StubSpec { max_positions: 128, ..Default::default() };
+        let gw = Gateway::spawn("stub", GatewayConfig::default(), EngineSpec::stub(spec)).unwrap();
+        let prompt: Vec<i32> = (0..40).map(|i| i % 32).collect();
+        let t = gw.submit(prompt.clone(), 4, SamplingParams::greedy(), None).unwrap();
+        let c = t.stream.wait().unwrap().completion().unwrap();
+        assert_eq!(&c.tokens[..40], prompt.as_slice());
+        assert_eq!(c.tokens.len(), 44);
+        assert_eq!(c.prefill_steps, 2, "40 prompt tokens = 32 + 8 chunk steps");
+        let m = gw.join().unwrap();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.slab_tokens, 40 + 3, "prompt + fed-back generated tokens");
+    }
+
+    #[test]
+    fn empty_prompt_refused_before_id_allocation() {
+        let gw = Gateway::spawn(
+            "empty",
+            GatewayConfig::default(),
+            EngineSpec::stub(StubSpec::default()),
+        )
+        .unwrap();
+        assert_eq!(
+            gw.submit(vec![], 4, SamplingParams::greedy(), None).err(),
+            Some(SubmitError::EmptyPrompt)
+        );
+        assert_eq!(gw.in_flight(), 0, "refused submit leaves no state behind");
+        assert_eq!(gw.queued_prefill_tokens(), 0);
+        // Ids stay dense for real submissions after a refusal.
+        let t = gw.submit(vec![1], 1, SamplingParams::greedy(), None).unwrap();
+        assert_eq!(t.id, 0);
+        assert!(t.stream.wait().unwrap().is_done());
+        gw.join().unwrap();
+    }
+
+    /// Satellite: a cancel token firing *during prefill* (before any
+    /// sampled token) yields exactly one `Cancelled` whose partial row is
+    /// the untouched prompt, and the lane is reclaimed by the waiter in
+    /// the same iteration.
+    #[test]
+    fn stub_cancel_during_prefill_one_cancelled_no_tokens_same_step_reclaim() {
+        let gw = Gateway::spawn(
+            "prefill-cancel",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        let prompt: Vec<i32> = (0..64).collect();
+        let victim = gw.submit(prompt.clone(), 8, SamplingParams::greedy(), None).unwrap();
+        let waiter = gw.submit(vec![1, 2], 2, SamplingParams::greedy(), None).unwrap();
+        // Wait until the victim is provably in a lane, then cancel: with a
+        // 64-step prefill at 5ms/step the token fires mid-prefill.
+        loop {
+            match victim.stream.next_event() {
+                Some(StreamEvent::Started { .. }) => break,
+                Some(_) => continue,
+                None => panic!("victim stream closed before Started"),
+            }
+        }
+        victim.cancel.cancel();
+        let (mut cancel_step, mut victim_tokens, mut terminals) = (None, 0usize, 0usize);
+        while let Some(ev) = victim.stream.next_event() {
+            match ev {
+                StreamEvent::Token { .. } => victim_tokens += 1,
+                StreamEvent::Cancelled { reason, tokens, step, .. } => {
+                    terminals += 1;
+                    assert_eq!(reason, CancelReason::User);
+                    assert_eq!(tokens, prompt, "partial row is the untouched prompt");
+                    cancel_step = Some(step);
+                }
+                StreamEvent::Done { .. } => panic!("victim must not complete"),
+                _ => {}
+            }
+        }
+        assert_eq!(terminals, 1, "exactly one terminal event");
+        assert_eq!(victim_tokens, 0, "no tokens were sampled during prefill");
+        let mut waiter_started = None;
+        let mut waiter_done = false;
+        while let Some(ev) = waiter.stream.next_event() {
+            match ev {
+                StreamEvent::Started { step, .. } => waiter_started = Some(step),
+                StreamEvent::Done { .. } => waiter_done = true,
+                _ => {}
+            }
+        }
+        assert!(waiter_done);
+        assert_eq!(
+            waiter_started, cancel_step,
+            "waiter reclaims the lane in the cancellation's own iteration"
+        );
+        let m = gw.join().unwrap();
+        assert_eq!((m.completed, m.cancelled), (1, 1));
+    }
+
+    /// Satellite twin: a deadline expiring during prefill behaves like a
+    /// mid-prefill cancel — one `Cancelled{Deadline}`, zero tokens.
+    #[test]
+    fn stub_deadline_during_prefill_cancels_with_no_tokens() {
+        let gw = Gateway::spawn(
+            "prefill-deadline",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        let prompt: Vec<i32> = (0..64).collect();
+        let t = gw
+            .submit(prompt.clone(), 8, SamplingParams::greedy(), Some(Duration::from_millis(30)))
+            .unwrap();
+        match t.stream.wait().unwrap() {
+            StreamOutcome::Cancelled { reason, tokens, .. } => {
+                assert_eq!(reason, CancelReason::Deadline);
+                assert_eq!(tokens, prompt, "nothing generated before the deadline");
+            }
+            StreamOutcome::Done(c) => panic!("completed past its deadline: {c:?}"),
+        }
+        let m = gw.join().unwrap();
+        assert_eq!((m.completed, m.cancelled), (0, 1));
+    }
+
+    #[test]
+    fn queued_prefill_gauge_tracks_submit_and_drain() {
+        let gw = Gateway::spawn(
+            "gauge",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        // The lane is busy with a long prefill, so the second submission
+        // sits queued with its prompt counted as pending prefill work.
+        let a = gw.submit((0..32).collect(), 2, SamplingParams::greedy(), None).unwrap();
+        let b = gw.submit((0..16).collect(), 2, SamplingParams::greedy(), None).unwrap();
+        assert_eq!(gw.queued_prefill_tokens(), 48, "counted at submit, in tokens");
+        assert!(a.stream.wait().unwrap().is_done());
+        assert!(b.stream.wait().unwrap().is_done());
+        assert_eq!(gw.queued_prefill_tokens(), 0, "drained by first tokens");
+        gw.join().unwrap();
     }
 
     /// Backpressure contract: `try_submit` refuses with `Saturated` when

@@ -27,10 +27,20 @@
 //!   lane for the next waiter without skipping a step.
 //! * [`router`] — rank-aware dispatch across several gateways (e.g. dense
 //!   / r=8 / r=4).  Each request goes to the gateway minimizing
-//!   `(in_flight + 1) × KvConfig::bytes_per_token`, which is exactly the
-//!   paper's trade made operational: pruning rank shrinks per-token KV
-//!   cost by r/d, so pruned engines absorb proportionally more of the
-//!   queue before costing as much as their dense sibling.
+//!   `(in_flight + 1 + queued_prefill_tokens) ×
+//!   KvConfig::bytes_per_token`: pending prefill is weighted in *tokens*
+//!   (a 512-token prompt is 256× the work of a 2-token one), and pruning
+//!   rank shrinks per-token KV cost by r/d, so pruned engines absorb
+//!   proportionally more of the queue before costing as much as their
+//!   dense sibling.
+//!
+//! Engines behind a gateway run the chunked-prefill slab API by default
+//! (cap it per engine with [`EngineSpec::with_prefill_chunk`]); a
+//! deadline or cancel landing while a request is still *prefilling*
+//! retires it with the untouched prompt as its partial row and frees the
+//! lane for the same iteration's admission pass.  [`EngineSpec::stub`]
+//! runs a gateway over the deterministic host-side stub backend — the
+//! full channel/stream/cancel stack without a PJRT runtime.
 
 pub mod cancel;
 pub mod gateway;

@@ -7,14 +7,19 @@
 //! next request.  The router scores each gateway as
 //!
 //! ```text
-//! score(g) = (in_flight(g) + 1) × kv_bytes_per_token(g)
+//! score(g) = (in_flight(g) + 1 + queued_prefill_tokens(g))
+//!              × kv_bytes_per_token(g)
 //! ```
 //!
-//! — the marginal KV pressure of admitting one more request there — and
-//! dispatches to the minimum.  Cheap-rank engines therefore absorb
-//! traffic until their backlog outweighs the rank saving, at which point
-//! the dense engine starts taking overflow; the per-gateway shares the
-//! bench reports are the measured version of that trade-off.
+//! — the marginal KV pressure of admitting one more request there, with
+//! waiting requests weighted by their `prompt.len()` of pending prefill
+//! work rather than counting 1 apiece.  Request count alone is blind to
+//! prompt length: a burst of 512-token prompts and a burst of 2-token
+//! prompts looked identical, so long-prompt traffic piled onto one engine
+//! until its queue *length* caught up.  Pending prefill tokens is the
+//! actual backlog (it is also, post-prefill, the KV the requests will
+//! pin), and it drains as prefills complete —
+//! [`Gateway::queued_prefill_tokens`].
 //!
 //! Ties resolve to the earliest gateway in construction order, so callers
 //! list their preferred (typically lowest-rank) engine first.
@@ -51,9 +56,12 @@ impl Router {
         &self.gateways
     }
 
-    /// Marginal KV pressure of admitting one more request to `g`.
+    /// Marginal KV pressure of admitting one more request to `g`:
+    /// in-flight depth plus pending prefill work in tokens, weighted by
+    /// the engine's per-token KV cost.
     fn score(g: &Gateway) -> u128 {
-        (g.in_flight() as u128 + 1) * g.kv_bytes_per_token() as u128
+        (g.in_flight() as u128 + 1 + g.queued_prefill_tokens() as u128)
+            * g.kv_bytes_per_token() as u128
     }
 
     /// Index of the gateway the next request would go to.
@@ -104,5 +112,61 @@ impl Router {
                 g.join().map(|m| (name, m))
             })
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::stub::StubSpec;
+    use crate::serve::SamplingParams;
+    use crate::server::gateway::{EngineSpec, GatewayConfig};
+    use std::time::Duration;
+
+    /// Single-lane, single-token-ladder stub with a slow step: requests
+    /// submitted while the lane prefills stay queued for ~200ms — plenty
+    /// of time for deterministic routing assertions.
+    fn slow_stub() -> EngineSpec {
+        EngineSpec::stub(StubSpec {
+            batch_slots: 1,
+            chunk_widths: vec![1],
+            max_positions: 256,
+            step_delay: Duration::from_millis(3),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn long_prompt_bursts_spread_by_pending_prefill_tokens() {
+        let router = Router::new(vec![
+            Gateway::spawn("a", GatewayConfig::default(), slow_stub()).unwrap(),
+            Gateway::spawn("b", GatewayConfig::default(), slow_stub()).unwrap(),
+        ])
+        .unwrap();
+        let g = router.gateways();
+        // Occupy both single-lane engines with identical long prefills so
+        // in_flight ties and everything submitted below stays queued.
+        let mut tickets = Vec::new();
+        for gw in g {
+            tickets
+                .push(gw.submit((0..64).collect(), 4, SamplingParams::greedy(), None).unwrap());
+        }
+        // A long prompt queues on "a", a short one on "b": request *count*
+        // ties 2–2, but pending prefill is 64+100 vs 64+4 tokens.
+        tickets.push(g[0].submit((0..100).collect(), 2, SamplingParams::greedy(), None).unwrap());
+        tickets.push(g[1].submit((0..4).collect(), 2, SamplingParams::greedy(), None).unwrap());
+        assert_eq!(g[0].in_flight(), g[1].in_flight(), "request count is tied");
+        assert!(g[0].queued_prefill_tokens() > g[1].queued_prefill_tokens());
+        // The old `(in_flight + 1) × bytes` score tied here and resolved
+        // to "a" — piling the long-prompt burst onto one engine.  Weighted
+        // by pending prefill tokens, the next request goes to "b".
+        assert_eq!(router.pick(), 1);
+        // Retire everything quickly and drain.
+        for t in &tickets {
+            t.cancel.cancel();
+        }
+        for (name, m) in router.join().unwrap() {
+            assert_eq!(m.completed + m.cancelled, 2, "{name}");
+        }
     }
 }

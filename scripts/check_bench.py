@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Sanity-check emitted BENCH_*.json artifacts against their schemas.
+
+The perf benches (`cargo bench --bench perf_serve` / `perf_server`) write
+machine-readable JSON so the serving-perf trajectory is comparable across
+PRs.  This checker enforces the contract documented in
+docs/BENCH_SCHEMAS.md: the required keys are present and every number is
+finite (a NaN tokens/s or an Infinity TTFT means a bench divided by a
+zero wall-clock — a bug, not a measurement).
+
+Usage:  python3 scripts/check_bench.py rust/BENCH_serve.json rust/BENCH_server.json
+
+Exit code 0 when every file passes; 1 with a per-file report otherwise.
+Stdlib only — runs anywhere CI has a python3.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+
+def finite_numbers(node, path="$"):
+    """Yield an error string for every non-finite number in the tree."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        if not math.isfinite(node):
+            yield f"{path}: non-finite number {node!r}"
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            yield from finite_numbers(v, f"{path}.{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from finite_numbers(v, f"{path}[{i}]")
+
+
+def require(doc, keys, path="$"):
+    for k in keys:
+        if k not in doc:
+            yield f"{path}: missing required key {k!r}"
+
+
+def check_serve(doc):
+    yield from require(doc, ["bench", "preset", "prefill", "engines", "pjrt_skipped"])
+    prefill = doc.get("prefill", {})
+    yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
+                       "$.prefill")
+    chunks = prefill.get("chunks", [])
+    if not chunks:
+        yield "$.prefill.chunks: empty — the chunk ladder was not benched"
+    for i, row in enumerate(chunks):
+        yield from require(
+            row,
+            ["chunk", "prefill_steps", "decode_steps", "ttft_p50_s", "tokens_per_s",
+             "prefill_step_reduction_vs_k1"],
+            f"$.prefill.chunks[{i}]")
+    # The acceptance bar: some chunk width >= 8 cuts prefill steps >= 4x
+    # vs the single-token path.
+    reductions = [row.get("prefill_step_reduction_vs_k1", 0)
+                  for row in chunks if row.get("chunk", 0) >= 8]
+    if reductions and max(reductions) < 4:
+        yield (f"$.prefill: best prefill step reduction {max(reductions)}x < 4x "
+               "for a chunked width")
+    if not doc.get("pjrt_skipped", True):
+        for i, eng in enumerate(doc.get("engines", [])):
+            yield from require(
+                eng, ["name", "rank", "mode", "tokens_per_s", "decode_steps",
+                      "ttft_p50_s", "kv_peak_bytes"],
+                f"$.engines[{i}]")
+
+
+def check_server(doc):
+    yield from require(doc, ["bench", "preset", "stub_streaming", "skipped"])
+    yield from require(
+        doc.get("stub_streaming", {}),
+        ["requests", "prompt_tokens", "completed", "mean_prefill_steps",
+         "first_token_p50_s", "decode_steps"],
+        "$.stub_streaming")
+    if not doc.get("skipped", True):
+        yield from require(doc, ["streaming", "cancel", "router"])
+        yield from require(
+            doc.get("streaming", {}),
+            ["requests", "streaming_first_token_p50_s", "serve_all_delivery_s"],
+            "$.streaming")
+        yield from require(
+            doc.get("cancel", {}),
+            ["cancel_step", "waiter_started_step", "reclaim_steps"],
+            "$.cancel")
+        yield from require(doc.get("router", {}), ["requests", "engines"], "$.router")
+
+
+CHECKERS = {
+    "perf_serve": check_serve,
+    "perf_server": check_server,
+}
+
+
+def main(paths):
+    failed = False
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}")
+            failed = True
+            continue
+        bench = doc.get("bench")
+        checker = CHECKERS.get(bench)
+        errors = []
+        if checker is None:
+            errors.append(f"$: unknown or missing bench id {bench!r}")
+        else:
+            errors.extend(checker(doc))
+        errors.extend(finite_numbers(doc))
+        if errors:
+            failed = True
+            print(f"FAIL {path}:")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"OK   {path} ({bench})")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1:]))
