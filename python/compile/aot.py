@@ -195,7 +195,10 @@ def decoder_programs(cfg: ModelConfig) -> List[Program]:
     # Same cache signature as the decode programs (the runtime carries one
     # literal-side cache set across every width), tokens/positions widened
     # to [B, K] token slabs.  One jax function serves every width — the
-    # slab shape is fixed entirely by the Program's input signature.
+    # slab shape is fixed entirely by the Program's input signature.  The
+    # logits output is [B, K, V] (every slab position), which is what lets
+    # the serve engine reuse these programs as speculative-decode
+    # verifiers: one fused step scores a whole K-token draft.
     def prefill_fn(*flat):
         params = M.params_from_flat(dense, flat[:-4])
         kc, vc, toks, positions = flat[-4:]
@@ -532,6 +535,13 @@ def main() -> None:
             "lora_rank": cfg.lora_rank, "train_batch": TRAIN_BATCH[cfg.name],
             "decode_batches": list(DECODE_BATCHES),
             "prefill_chunks": list(prefill_chunks_for(cfg)),
+            # The prefill slab programs emit logits at every slab position
+            # ([B, K, V]), so each chunk width doubles as a speculative-
+            # decode verify width: the dense engine can score a K-token
+            # draft in one fused step.  Advertised separately so the Rust
+            # engine can gate speculation on manifests that predate the
+            # all-position logits export.
+            "verify_widths": list(prefill_chunks_for(cfg)),
             "prefill_batches": list(PREFILL_BATCHES), "ud_block": M.UD_BLOCK,
             "params_dense": [{"name": n, "shape": list(s)}
                              for n, s in M.dense_param_spec(cfg)],

@@ -524,7 +524,11 @@ def prefill_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, token
     cache positions <= positions[b, j], and all K writes land before
     attention in each layer), so chunked prefill is bit-for-bit the same
     computation as K sequential `decode_step_dense` calls.
-    Returns (logits [B, V] at the *last* slab index, k_cache', v_cache').
+    Returns (logits [B, K, V] at *every* slab index, k_cache', v_cache').
+    Per-position logits are what make the slab programs double as
+    speculative-decode *verifiers*: logits[:, j] equals the logits a
+    sequential decode would have produced right after consuming slab
+    index j, so a draft of K tokens is scored in one fused step.
     """
     b, k = tokens.shape
     h_, dh = cfg.n_heads, cfg.d_head
@@ -552,8 +556,8 @@ def prefill_step_dense(cfg: ModelConfig, params: Params, k_cache, v_cache, token
         return x, (kc, vc)
 
     x, (kc2, vc2) = jax.lax.scan(body, x, (stacked, k_cache, v_cache))
-    last = ref.layernorm(x[:, -1, :], params["lnf_g"], params["lnf_b"])
-    return last @ params["tok_emb"].T, kc2, vc2
+    out = ref.layernorm(x, params["lnf_g"], params["lnf_b"])
+    return out @ params["tok_emb"].T, kc2, vc2
 
 
 def prefill_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, positions):
@@ -562,7 +566,8 @@ def prefill_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache
     The [B, K] slab analogue of `decode_step_fac`: K rank-r factor
     projections are scattered per lane per step, so the KV saving of
     pruning (r/dh) compounds with the K× cut in prefill steps.  See
-    `prefill_step_dense` for the slab conventions.
+    `prefill_step_dense` for the slab conventions (including the
+    all-position [B, K, V] logits that back speculative verification).
     """
     b, k = tokens.shape
     c = k_cache.shape[3]
@@ -593,8 +598,8 @@ def prefill_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache
         return x, (kc, voc)
 
     x, (kc2, voc2) = jax.lax.scan(body, x, (stacked, k_cache, vo_cache))
-    last = ref.layernorm(x[:, -1, :], params["lnf_g"], params["lnf_b"])
-    return last @ params["tok_emb"].T, kc2, voc2
+    out = ref.layernorm(x, params["lnf_g"], params["lnf_b"])
+    return out @ params["tok_emb"].T, kc2, voc2
 
 
 def decode_step_fac(cfg: ModelConfig, r: int, params: Params, k_cache, vo_cache, tokens, positions):

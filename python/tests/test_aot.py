@@ -49,6 +49,14 @@ def test_program_signature_consistency():
     pf_caches = [(n, s) for n, s, _ in pf.inputs if "cache" in n]
     dec_caches = [(n, s) for n, s, _ in dec.inputs if "cache" in n]
     assert pf_caches == dec_caches
+    # Verify-width contract: every prefill slab program emits logits at
+    # *all* K slab positions ([B, K, V]) — the shape the serve engine needs
+    # to score a speculative draft in one fused step.
+    for ck in aot.prefill_chunks_for(TINY):
+        for name in (f"prefill_k{ck}_b8", f"prefill_fac_r{TINY.d_head}_k{ck}_b8"):
+            p = by_name[name]
+            outs = jax.eval_shape(p.fn, *p.input_specs())
+            assert outs[0].shape == (8, ck, TINY.vocab), (name, outs[0].shape)
     for p in progs:
         outs = jax.eval_shape(p.fn, *p.input_specs())
         if not isinstance(outs, tuple):

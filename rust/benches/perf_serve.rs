@@ -12,6 +12,12 @@
 //!   K=1 / K=8 / K=32, reporting prefill steps, total fused steps, and
 //!   TTFT per cap.  Runs on every checkout (no PJRT needed) — these are
 //!   the step counts the acceptance bar reads.
+//! * `speculative` — acceptance-vs-draft-length sweep over a stub
+//!   draft+verify pair (rank-4 draft, rank-8 target, same seed — a
+//!   spectrum truncation).  Per draft length K ∈ {2, 4, 8}: acceptance
+//!   rate, dense decode steps per generated token (the < 1.0 acceptance
+//!   bar), draft steps, rollback tokens, and a bit-identity check against
+//!   the vanilla greedy trace.  Always on (stub backend).
 //! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
 //!   bytes, marshal/execute split per engine×admission-mode, against the
 //!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
@@ -22,7 +28,10 @@ use clover::config::json::{self, Json};
 use clover::coordinator::ops;
 use clover::runtime::stub::StubSpec;
 use clover::runtime::Runtime;
-use clover::serve::{Admission, BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request};
+use clover::serve::{
+    Admission, BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request, SamplingParams,
+    SpecConfig,
+};
 use clover::util::human_bytes;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -115,6 +124,102 @@ fn bench_prefill_chunks() -> Result<Json> {
         Json::Arr(ladder.iter().map(|&w| Json::Num(w as f64)).collect()),
     );
     o.insert("chunks".to_string(), Json::Arr(rows));
+    Ok(Json::Obj(o))
+}
+
+/// Self-speculative decoding on the stub pair: a rank-4 draft proposing
+/// for a rank-8 target with the same seed (a spectrum truncation — the
+/// stub analogue of CLOVER pruning the model that verifies it).  Sweeps
+/// draft length K, reporting acceptance and dense steps-per-token, and
+/// asserts the bit-identity invariant against vanilla greedy decode.
+fn bench_speculative() -> Result<Json> {
+    const TARGET_RANK: usize = 8;
+    const DRAFT_RANK: usize = 4;
+    let target = StubSpec {
+        n_layers: 1,
+        n_heads: 2,
+        rank: TARGET_RANK,
+        vocab: 16,
+        max_positions: 128,
+        batch_slots: BATCH_SLOTS,
+        ..Default::default()
+    };
+    let draft = StubSpec { rank: DRAFT_RANK, ..target.clone() };
+    let mk = |now: Instant, speculative: bool| -> Vec<Request> {
+        let sampling = if speculative {
+            SamplingParams::speculative_greedy()
+        } else {
+            SamplingParams::greedy()
+        };
+        (0..BATCH_SLOTS as u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..16).map(|i| (3 + i * 5 + id as i32) % 16).collect(),
+                max_new: 32,
+                arrived: now,
+                sampling: sampling.clone(),
+            })
+            .collect()
+    };
+    // Per-request dense steps per generated token: each request's own
+    // fused target steps (prefill excluded, draft steps excluded — those
+    // run on the cheap engine) over its own generated tokens.  Vanilla
+    // decode sits at ~1.0 by construction (one dense step per token, the
+    // prefill-boundary token excepted); speculation pushes it well below.
+    const PROMPT: usize = 16;
+    let dense_spt_of = |completions: &[clover::serve::Completion]| -> f64 {
+        let steps: usize = completions.iter().map(|c| c.steps - c.prefill_steps).sum();
+        let generated: usize = completions.iter().map(|c| c.tokens.len() - PROMPT).sum();
+        steps as f64 / generated.max(1) as f64
+    };
+    let now = Instant::now();
+    let vanilla = Engine::new_stub(target.clone());
+    let (vanilla_c, _vanilla_m) = vanilla.serve_all(mk(now, false), policy())?;
+    let vanilla_spt = dense_spt_of(&vanilla_c);
+
+    let mut rows = Vec::new();
+    for draft_len in [2usize, 4, 8] {
+        let engine = Engine::new_stub(target.clone())
+            .with_speculative_stub(draft.clone(), SpecConfig { draft_len, adaptive: false })?;
+        let (c, m) = engine.serve_all(mk(now, true), policy())?;
+        let bit_identical =
+            c.iter().zip(&vanilla_c).all(|(a, b)| a.tokens == b.tokens);
+        let dense_spt = dense_spt_of(&c);
+        println!(
+            "speculative K={draft_len}: acceptance {:5.1}% | {:.2} dense steps/token (vanilla {vanilla_spt:.2}) \
+             | {:3} verify rounds | {:3} draft steps | {:3} rolled back | bit-identical {bit_identical}",
+            100.0 * m.acceptance_rate(),
+            dense_spt,
+            m.spec_rounds,
+            m.draft_steps,
+            m.rollback_tokens,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("draft_len".to_string(), Json::Num(draft_len as f64));
+        o.insert("acceptance_rate".to_string(), Json::Num(m.acceptance_rate()));
+        o.insert("dense_steps_per_token".to_string(), Json::Num(dense_spt));
+        o.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
+        o.insert("draft_steps".to_string(), Json::Num(m.draft_steps as f64));
+        o.insert("spec_rounds".to_string(), Json::Num(m.spec_rounds as f64));
+        o.insert("drafted_tokens".to_string(), Json::Num(m.drafted_tokens as f64));
+        o.insert(
+            "accepted_draft_tokens".to_string(),
+            Json::Num(m.accepted_draft_tokens as f64),
+        );
+        o.insert("rollback_tokens".to_string(), Json::Num(m.rollback_tokens as f64));
+        o.insert("generated_tokens".to_string(), Json::Num(m.generated_tokens as f64));
+        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
+        o.insert("bit_identical_to_vanilla".to_string(), Json::Bool(bit_identical));
+        rows.push(Json::Obj(o));
+    }
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("target_rank".to_string(), Json::Num(TARGET_RANK as f64));
+    o.insert("draft_rank".to_string(), Json::Num(DRAFT_RANK as f64));
+    o.insert("requests".to_string(), Json::Num(BATCH_SLOTS as f64));
+    o.insert("max_new".to_string(), Json::Num(32.0));
+    o.insert("vanilla_steps_per_token".to_string(), Json::Num(vanilla_spt));
+    o.insert("sweep".to_string(), Json::Arr(rows));
     Ok(Json::Obj(o))
 }
 
@@ -237,6 +342,9 @@ fn main() -> Result<()> {
 
     // Chunked prefill: stub-backed, runs everywhere.
     root.insert("prefill".to_string(), bench_prefill_chunks()?);
+
+    // Self-speculative decoding: stub pair, runs everywhere.
+    root.insert("speculative".to_string(), bench_speculative()?);
 
     // End-to-end engines need the compiled artifacts + live PJRT.
     match Runtime::new("artifacts") {

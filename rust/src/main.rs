@@ -10,7 +10,8 @@
 //! clover eval      --ckpt x.clvr            # perplexity
 //! clover spectra   [--all-layers]           # Fig 2 curves
 //! clover serve     --ckpt x.clvr [--requests N] [--temperature T] [--top-k K] [--stop-token ID]
-//!                  [--prefill-chunk K] [--prompt-len N]
+//!                  [--prefill-chunk K] [--prompt-len N] [--max-step-tokens N]
+//!                  [--speculative] [--draft-rank R] [--draft-len K]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
@@ -24,8 +25,8 @@ use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
 use clover::model::{load_params, save_params, Checkpoint, Manifest};
 use clover::runtime::{golden, Runtime};
-use clover::serve::{BatchPolicy, Engine, Request, SamplingParams};
-use clover::server::{EngineSpec, Gateway, GatewayConfig, StreamEvent, TryNext};
+use clover::serve::{BatchPolicy, Engine, Request, SamplingParams, SpecConfig};
+use clover::server::{DraftSource, EngineSpec, Gateway, GatewayConfig, StreamEvent, TryNext};
 use clover::util::human_bytes;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
@@ -230,6 +231,25 @@ fn prefill_chunk_flag(args: &Args) -> Result<Option<usize>> {
         .transpose()
 }
 
+/// Parse `--max-step-tokens N` — the prefill-aware per-step token budget.
+fn max_step_tokens_flag(args: &Args) -> Result<Option<usize>> {
+    args.get("max-step-tokens")
+        .map(|v| v.parse::<usize>().with_context(|| format!("--max-step-tokens {v}")))
+        .transpose()
+}
+
+/// Parse the speculative-decode flags: `--speculative` turns the
+/// draft+verify pair on, `--draft-rank R` picks the draft's CLOVER rank
+/// (default 4), `--draft-len K` the per-round draft length (default 4).
+fn speculative_flags(args: &Args) -> Result<Option<(usize, SpecConfig)>> {
+    if args.get("speculative").is_none() {
+        return Ok(None);
+    }
+    let rank = args.usize_or("draft-rank", 4)?;
+    let cfg = SpecConfig { draft_len: args.usize_or("draft-len", 4)?, adaptive: true };
+    Ok(Some((rank, cfg)))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     if args.get("stream").is_some() {
@@ -241,10 +261,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let prompt_len = args.usize_or("prompt-len", 4)?.max(1);
     let ckpt_path = args.get("ckpt").context("--ckpt required")?;
     let ck = Checkpoint::load(ckpt_path)?;
-    let (params, program) =
-        clover::model::decode_params_for_checkpoint(&ck, &entry, cfg.serve.max_batch.min(8))?;
-    let engine = Engine::new(&rt, &cfg.model.preset, &program, params)?
-        .with_prefill_chunk(prefill_chunk_flag(args)?);
+    let batch = cfg.serve.max_batch.min(8);
+    let (params, program) = clover::model::decode_params_for_checkpoint(&ck, &entry, batch)?;
+    let mut engine = Engine::new(&rt, &cfg.model.preset, &program, params)?
+        .with_prefill_chunk(prefill_chunk_flag(args)?)
+        .with_max_step_tokens(max_step_tokens_flag(args)?);
+    let speculative = speculative_flags(args)?;
+    if let Some((draft_rank, spec_cfg)) = &speculative {
+        // Self-speculative pair: the draft is the checkpoint's own dense
+        // weights CLOVER-pruned to the draft rank, verified by the dense
+        // engine through the all-position slab programs.
+        if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
+            anyhow::bail!("--speculative drafts from the dense weights — use a dense checkpoint");
+        }
+        let dense = load_params(&ck, &entry.params_dense)?;
+        let d_head = entry.dim("d_head")?;
+        // Same bounds the gateway's draft builder enforces: the draft must
+        // sit strictly below the dense head dim to be a cheaper proposer.
+        if *draft_rank == 0 || *draft_rank >= d_head {
+            anyhow::bail!("--draft-rank {draft_rank} must be in 1..{d_head}");
+        }
+        let ratio = 1.0 - *draft_rank as f64 / d_head as f64;
+        let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
+        engine =
+            engine.with_speculative(&format!("decode_fac_r{r}_b{batch}"), fac, spec_cfg.clone())?;
+        println!("speculative pair: draft r={r}, verify dense (draft_len {})", spec_cfg.draft_len);
+    }
     println!("step ladder: {:?} (cap with --prefill-chunk)", engine.widths());
     let now = std::time::Instant::now();
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
@@ -255,6 +297,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         top_k: args.usize_or("top-k", 0)?,
         seed: cfg.train.seed,
         stop_token: args.get("stop-token").map(|v| v.parse::<i32>()).transpose()?,
+        speculative: speculative.is_some(),
     };
     let reqs: Vec<Request> = (0..n_requests as u64)
         .map(|id| Request {
@@ -286,6 +329,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefill_steps as f64 / completions.len().max(1) as f64,
         engine.widths(),
     );
+    if speculative.is_some() {
+        let dense_decode = metrics.decode_steps.saturating_sub(prefill_steps);
+        println!(
+            "speculative: {} rounds | acceptance {:.0}% | {} draft steps | {} rolled back | \
+             {:.2} dense steps/token",
+            metrics.spec_rounds,
+            100.0 * metrics.acceptance_rate(),
+            metrics.draft_steps,
+            metrics.rollback_tokens,
+            dense_decode as f64 / metrics.generated_tokens.max(1) as f64,
+        );
+    }
     println!(
         "ttft p50 {:.3}s p99 {:.3}s | latency p50 {:.3}s p99 {:.3}s",
         metrics.ttft_p50_s, metrics.ttft_p99_s, metrics.latency_p50_s, metrics.latency_p99_s,
@@ -325,8 +380,15 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
 
     let batch = cfg.serve.max_batch.min(8);
     let queue_capacity = args.usize_or("queue", 64)?;
-    let spec = EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
-        .with_prefill_chunk(prefill_chunk_flag(args)?);
+    let speculative = speculative_flags(args)?;
+    let mut spec =
+        EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
+            .with_prefill_chunk(prefill_chunk_flag(args)?)
+            .with_max_step_tokens(max_step_tokens_flag(args)?);
+    if let Some((draft_rank, spec_cfg)) = &speculative {
+        let draft = DraftSource::PrunedRank { rank: *draft_rank };
+        spec = spec.with_speculative(draft, spec_cfg.clone());
+    }
     let gateway = Gateway::spawn(
         "serve",
         GatewayConfig {
@@ -339,8 +401,12 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         spec,
     )?;
     println!(
-        "gateway up: rank {} | {} B KV/token | queue {queue_capacity}",
+        "gateway up: rank {}{} | {} B KV/token | queue {queue_capacity}",
         gateway.rank(),
+        gateway
+            .draft_rank()
+            .map(|r| format!(" (+draft r={r})"))
+            .unwrap_or_default(),
         gateway.kv_bytes_per_token(),
     );
 
@@ -349,6 +415,7 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         top_k: args.usize_or("top-k", 0)?,
         seed: cfg.train.seed,
         stop_token: args.get("stop-token").map(|v| v.parse::<i32>()).transpose()?,
+        speculative: speculative.is_some(),
     };
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
 
@@ -438,6 +505,15 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         metrics.decode_steps,
         human_bytes(metrics.kv_peak_bytes),
     );
+    if speculative.is_some() {
+        println!(
+            "speculative: {} rounds | acceptance {:.0}% | {} draft steps | {} rolled back",
+            metrics.spec_rounds,
+            100.0 * metrics.acceptance_rate(),
+            metrics.draft_steps,
+            metrics.rollback_tokens,
+        );
+    }
     println!(
         "ttft p50 {:.3}s p99 {:.3}s | latency p50 {:.3}s p99 {:.3}s",
         metrics.ttft_p50_s, metrics.ttft_p99_s, metrics.latency_p50_s, metrics.latency_p99_s,

@@ -57,6 +57,12 @@ pub struct ConfigEntry {
     /// artifacts.  Width 1 (the decode program) is implicit and never
     /// listed.
     pub prefill_chunks: Vec<usize>,
+    /// Slab widths whose programs emit logits at *every* slab position
+    /// (`[B, K, V]`) rather than only the last — the widths a speculative
+    /// verify step can score a draft at.  Empty for manifests exported
+    /// before the all-position logits change; the serve engine refuses to
+    /// speculate on those.
+    pub verify_widths: Vec<usize>,
     pub programs: BTreeMap<String, ProgramSig>,
     pub params_dense: ParamSpec,
     pub params_fac: BTreeMap<usize, ParamSpec>,
@@ -134,6 +140,10 @@ impl Manifest {
                 Some(v) => v.as_shape()?,
                 None => Vec::new(),
             };
+            let verify_widths = match entry.get("verify_widths") {
+                Some(v) => v.as_shape()?,
+                None => Vec::new(),
+            };
             let mut programs = BTreeMap::new();
             for (pname, p) in entry.req("programs")?.as_obj()? {
                 programs.insert(
@@ -176,6 +186,7 @@ impl Manifest {
                     dims,
                     ranks,
                     prefill_chunks,
+                    verify_widths,
                     programs,
                     params_dense,
                     params_fac,
@@ -223,11 +234,17 @@ mod tests {
         // `prefill_k{K}_b{B}` per exported chunk width, cache block shared
         // with the decode program of the same batch.
         assert!(tiny.prefill_chunks.contains(&8), "{:?}", tiny.prefill_chunks);
+        // Every prefill width is a verify width: the slab programs emit
+        // all-position logits [B, K, V] (the speculative-verify contract).
+        assert_eq!(tiny.verify_widths, tiny.prefill_chunks);
+        let vocab = tiny.dim("vocab").unwrap();
         for &ck in &tiny.prefill_chunks {
             let pf = tiny.program(&format!("prefill_k{ck}_b8")).unwrap();
             let toks = pf.inputs.iter().find(|a| a.name == "tokens").unwrap();
             assert_eq!(toks.shape, vec![8, ck]);
+            assert_eq!(pf.outputs[0].shape, vec![8, ck, vocab], "all-position logits");
             let dec = tiny.program("decode_b8").unwrap();
+            assert_eq!(dec.outputs[0].shape, vec![8, vocab], "decode logits stay [B, V]");
             let cache = |sig: &ProgramSig| {
                 sig.inputs.iter().find(|a| a.name.ends_with("_cache")).unwrap().shape.clone()
             };

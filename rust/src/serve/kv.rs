@@ -107,6 +107,27 @@ impl KvManager {
         Ok(())
     }
 
+    /// Roll slot `slot` back to exactly `positions` recorded positions —
+    /// the accounting half of speculative rollback: a verify step advances
+    /// by the whole written slab, then rolls back to the accepted prefix.
+    /// Page reclaim is page-granular (pages above the new high-water mark
+    /// free immediately; `peak_bytes` keeps the high tide).  Errors when
+    /// `positions` is *ahead* of the recorded count — rollback never
+    /// invents progress — charging nothing.
+    pub fn rollback_to(&mut self, slot: usize, positions: usize) -> Result<()> {
+        let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
+        if positions > s.positions {
+            bail!(
+                "slot {slot}: rollback_to {positions} is ahead of the {} recorded positions",
+                s.positions
+            );
+        }
+        s.positions = positions;
+        s.pages = positions.div_ceil(PAGE_TOKENS);
+        Ok(())
+    }
+
     /// Free a slot (request finished / evicted).
     pub fn free(&mut self, slot: usize) -> Result<u64> {
         match self.slots.get_mut(slot).and_then(|s| s.take()) {
@@ -218,6 +239,58 @@ mod tests {
         assert_eq!(kv.positions(s), PAGE_TOKENS + 1, "failed slab charges nothing");
         kv.advance_by(s, 64 - PAGE_TOKENS - 1).unwrap();
         assert!(kv.advance(s).is_err(), "window exactly full");
+    }
+
+    #[test]
+    fn advance_by_failure_is_atomic_at_page_boundary() {
+        // Satellite regression: a capacity-refused slab charges *nothing*
+        // — positions, pages, and live bytes are all untouched, even when
+        // the refused slab would have crossed a page boundary.
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        // Park exactly at a page boundary (one page, completely full).
+        kv.advance_by(s, PAGE_TOKENS).unwrap();
+        let (pos0, live0, peak0) =
+            (kv.positions(s), kv.live_bytes(), kv.peak_bytes());
+        assert_eq!(pos0, PAGE_TOKENS);
+        assert_eq!(live0, kv.config().bytes_per_page());
+        // 64 - PAGE_TOKENS positions remain; asking for one more than that
+        // must fail without touching anything — no partial advance, no
+        // page allocated for the boundary the slab would have crossed.
+        let over = 64 - PAGE_TOKENS + 1;
+        assert!(kv.advance_by(s, over).is_err());
+        assert_eq!(kv.positions(s), pos0, "positions untouched on failure");
+        assert_eq!(kv.live_bytes(), live0, "pages untouched on failure");
+        assert_eq!(kv.peak_bytes(), peak0, "peak untouched on failure");
+        // The exact remaining capacity still fits afterwards.
+        kv.advance_by(s, over - 1).unwrap();
+        assert_eq!(kv.positions(s), 64);
+    }
+
+    #[test]
+    fn rollback_to_reclaims_pages() {
+        let mut kv = KvManager::new(cfg(8));
+        let s = kv.allocate(1).unwrap();
+        // A verify slab crossing into a second page...
+        kv.advance_by(s, PAGE_TOKENS + 4).unwrap();
+        assert_eq!(kv.live_bytes(), 2 * kv.config().bytes_per_page());
+        let peak = kv.peak_bytes();
+        // ...rolled back to the accepted prefix: the second page frees.
+        kv.rollback_to(s, PAGE_TOKENS - 2).unwrap();
+        assert_eq!(kv.positions(s), PAGE_TOKENS - 2);
+        assert_eq!(kv.live_bytes(), kv.config().bytes_per_page());
+        assert_eq!(kv.peak_bytes(), peak, "peak keeps the high tide");
+        // Rollback to the current count is a no-op; going forward errors
+        // without charging anything.
+        kv.rollback_to(s, PAGE_TOKENS - 2).unwrap();
+        assert!(kv.rollback_to(s, PAGE_TOKENS).is_err());
+        assert_eq!(kv.positions(s), PAGE_TOKENS - 2);
+        // Rollback to zero frees every page but keeps the slot.
+        kv.rollback_to(s, 0).unwrap();
+        assert_eq!(kv.live_bytes(), 0);
+        assert_eq!(kv.free_slots(), 3, "slot itself stays allocated");
+        // Unallocated slots are refused.
+        assert!(kv.rollback_to(s + 1, 0).is_err());
     }
 
     #[test]

@@ -60,7 +60,54 @@
 //! one plan, one artifact family.  The KV cache values stay literal-side
 //! across steps *and across widths* ([`crate::runtime::DecodeSession`]
 //! carries one cache set for the whole ladder), so host↔device traffic
-//! per step is just the token/position slabs and the logits.
+//! per step is just the token/position slabs and the logits.  A per-step
+//! token budget ([`Engine::with_max_step_tokens`], `--max-step-tokens`)
+//! caps stage 1's summed slab width: decode lanes always run in full,
+//! prefill chunks shrink into the remainder, so one giant prompt cannot
+//! inflate every shared step to the widest slab and starve decode-lane
+//! latency.
+//!
+//! ## Self-speculative decoding: draft → verify → accept/rollback
+//!
+//! An engine carrying a *draft* model one CLOVER rank down
+//! ([`Engine::with_speculative`] / [`Engine::with_speculative_stub`])
+//! runs opted-in greedy sessions through a second cycle nested in the
+//! same loop, between stages 4 and 1:
+//!
+//! ```text
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ D DRAFT        decode-ready speculative lanes open a     │
+//!        │                round: K cheap width-1 steps on the       │
+//!        │                rank-r draft model propose d1..dK         │
+//!        │                (target lanes idle; cancels still land    │
+//!        │                between draft steps)                      │
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  SpecState::Verify { d1..dK }
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ V VERIFY       the next fused target step carries the    │
+//!        │                slab [last, d1..dK-1]; its all-position   │
+//!        │                logits [B, K, V] score the whole draft    │
+//!        │                in ONE dense step                         │
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  longest greedy-matching prefix m
+//!        ┌──────────────────────────────────────────────────────────┐
+//!        │ A ACCEPT/      append d1..dm + the target's corrected    │
+//!        │   ROLLBACK     token; roll KV accounting back to the     │
+//!        │                kept prefix (KvManager::rollback_to,      │
+//!        │                page-granular).  Rejected cache entries   │
+//!        │                need no scrubbing: the causal mask only   │
+//!        │                exposes a position after the step that    │
+//!        │                rewrites it                               │
+//!        └──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Up to K tokens land per dense step, and greedy speculative output is
+//! **bit-identical** to vanilla greedy decode (every appended token is
+//! the target's own greedy choice given the true prefix), so dense
+//! steps-per-token dropping below 1.0 is a pure throughput win — the
+//! paper's low-rank models drafting for their own dense parent.  An
+//! adaptive controller shrinks K when acceptance drops and regrows it on
+//! full acceptance ([`engine::SpecConfig`]).
 //!
 //! This realizes the paper's motivation end-to-end: after CLOVER pruning
 //! to rank r, the decode path caches rank-r factor projections instead of
@@ -119,8 +166,8 @@ pub mod session;
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use engine::{
     chunk_width, Admission, Cancellation, CancelReason, Completion, Engine, LaneSlab, NoHook,
-    ServeMetrics, StepHook, StepPlan,
+    ServeMetrics, SpecConfig, StepHook, StepPlan,
 };
 pub use kv::{KvConfig, KvManager, PAGE_TOKENS};
 pub use sampling::{Sampler, SamplingParams};
-pub use session::Session;
+pub use session::{Session, SpecState, VerifyOutcome};

@@ -23,11 +23,19 @@ pub struct SamplingParams {
     pub seed: u64,
     /// Generation stops early when this token is emitted.
     pub stop_token: Option<i32>,
+    /// Per-request opt-in to self-speculative decoding: when the engine
+    /// has a draft model attached, this request's decode phase runs
+    /// draft → verify → accept/rollback rounds instead of one token per
+    /// fused step.  Only meaningful for greedy policies (speculative
+    /// greedy is bit-identical to vanilla greedy, which is what makes it
+    /// a pure perf win); the engine silently serves non-greedy opt-ins
+    /// the vanilla way.
+    pub speculative: bool,
 }
 
 impl Default for SamplingParams {
     fn default() -> Self {
-        Self { temperature: 0.0, top_k: 0, seed: 0, stop_token: None }
+        Self { temperature: 0.0, top_k: 0, seed: 0, stop_token: None, speculative: false }
     }
 }
 
@@ -35,6 +43,12 @@ impl SamplingParams {
     /// The policy the old engine hard-coded: plain argmax, no stop token.
     pub fn greedy() -> Self {
         Self::default()
+    }
+
+    /// Greedy with speculative decoding opted in — the draft/verify fast
+    /// path when the engine carries a draft model, plain greedy otherwise.
+    pub fn speculative_greedy() -> Self {
+        Self { speculative: true, ..Self::default() }
     }
 
     /// Greedy either explicitly (temperature off) or degenerately (top-1).
@@ -114,9 +128,8 @@ mod tests {
 
     #[test]
     fn top1_is_greedy_at_any_temperature() {
-        let mut s = Sampler::new(SamplingParams {
-            temperature: 5.0, top_k: 1, seed: 9, stop_token: None,
-        });
+        let p = SamplingParams { temperature: 5.0, top_k: 1, seed: 9, ..Default::default() };
+        let mut s = Sampler::new(p);
         for _ in 0..20 {
             assert_eq!(s.sample(&[0.0, 4.0, 3.9]), 1);
         }
@@ -125,7 +138,10 @@ mod tests {
     #[test]
     fn topk_never_samples_below_cut() {
         let mut s = Sampler::new(SamplingParams {
-            temperature: 10.0, top_k: 2, seed: 3, stop_token: None,
+            temperature: 10.0,
+            top_k: 2,
+            seed: 3,
+            ..Default::default()
         });
         // With huge temperature everything inside the cut is near-uniform;
         // indices 0 and 3 are outside the top-2 and must never appear.
@@ -137,9 +153,8 @@ mod tests {
 
     #[test]
     fn temperature_prefers_heavy_logit() {
-        let mut s = Sampler::new(SamplingParams {
-            temperature: 1.0, top_k: 0, seed: 4, stop_token: None,
-        });
+        let p = SamplingParams { temperature: 1.0, top_k: 0, seed: 4, ..Default::default() };
+        let mut s = Sampler::new(p);
         let mut counts = [0usize; 2];
         for _ in 0..2000 {
             counts[s.sample(&[0.0, 2.5]) as usize] += 1;
@@ -149,7 +164,7 @@ mod tests {
 
     #[test]
     fn deterministic_per_seed_and_id() {
-        let p = SamplingParams { temperature: 0.8, top_k: 3, seed: 11, stop_token: None };
+        let p = SamplingParams { temperature: 0.8, top_k: 3, seed: 11, ..Default::default() };
         let logits = [0.3, 1.0, -0.2, 0.9, 0.0];
         let mut a = Sampler::for_request(p.clone(), 42);
         let mut b = Sampler::for_request(p.clone(), 42);
@@ -163,9 +178,7 @@ mod tests {
 
     #[test]
     fn stop_token_recognized() {
-        let s = Sampler::new(SamplingParams {
-            temperature: 0.0, top_k: 0, seed: 0, stop_token: Some(7),
-        });
+        let s = Sampler::new(SamplingParams { stop_token: Some(7), ..Default::default() });
         assert!(s.is_stop(7));
         assert!(!s.is_stop(8));
     }

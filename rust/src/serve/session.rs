@@ -21,6 +21,47 @@ use super::batcher::Request;
 use super::engine::Completion;
 use super::sampling::Sampler;
 
+/// Where a session is in its self-speculative decode cycle.
+///
+/// A speculating session loops `Idle → Drafting → Verify → Idle`: between
+/// target steps the engine starts a round ([`Session::begin_draft`]), the
+/// *draft* model autoregressively proposes up to K tokens over K cheap
+/// width-1 steps ([`Session::push_draft`]), and the next *target* step
+/// scores the whole draft as one K-wide slab
+/// ([`Session::observe_verify`]), accepting the longest greedy-matching
+/// prefix plus one corrected token and rolling the rest back.  Sessions
+/// that never opted in (or are non-greedy) stay `Idle` forever.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecState {
+    /// Not mid-round: vanilla slab scheduling applies.
+    Idle,
+    /// Draft model is proposing; `drafted` grows one token per draft step
+    /// until it reaches `k`.
+    Drafting { k: usize, drafted: Vec<i32> },
+    /// Draft complete: the next target step this lane joins is a verify
+    /// step over `[row[cursor], drafted[..k-1]]`.
+    Verify { drafted: Vec<i32> },
+}
+
+/// What a verify step did to the session —the engine uses `appended` to
+/// roll the KV accounting back to the accepted prefix
+/// ([`crate::serve::KvManager::rollback_to`]) and the counters for
+/// metrics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyOutcome {
+    /// Draft tokens the target confirmed *and* the session kept (a stop
+    /// token can cut acceptance short).
+    pub accepted: usize,
+    /// Row tokens appended by this step: accepted drafts plus the
+    /// target's corrected token at the first divergence (or nothing extra
+    /// when the whole draft matched).  `cursor` advanced by exactly this.
+    pub appended: usize,
+    /// Draft tokens rejected (drafted − accepted): the rolled-back
+    /// suffix.
+    pub rejected: usize,
+    pub finished: bool,
+}
+
 /// One in-flight request's decode state.
 #[derive(Clone, Debug)]
 pub struct Session {
@@ -44,11 +85,21 @@ pub struct Session {
     /// engine steps this request's prefill occupied (the TTFT driver
     /// chunked prefill exists to shrink).
     prefill_steps: usize,
-    /// `(row position, token)` sampled by the most recent [`Session::observe`]
-    /// call, or `None` when that step only consumed prompt.  This is what the
-    /// engine's per-step hook streams out as tokens are sampled, rather than
-    /// waiting for the completion at wave end.
-    last_sampled: Option<(usize, i32)>,
+    /// `(row position, token)` pairs sampled by the most recent observe
+    /// call — empty when that step only consumed prompt, one pair for a
+    /// vanilla decode step, up to K pairs for a verify step that accepted
+    /// a draft.  This is what the engine's per-step hook streams out as
+    /// tokens are sampled, rather than waiting for the completion at wave
+    /// end.
+    sampled: Vec<(usize, i32)>,
+    /// Self-speculative round state ([`SpecState::Idle`] unless the
+    /// engine enabled speculation for this request).
+    spec: SpecState,
+    /// Current draft length K for the next round; 0 = speculation off.
+    /// The adaptive controller moves it within `[2, draft_max]`.
+    draft_len: usize,
+    draft_max: usize,
+    spec_adaptive: bool,
 }
 
 impl Session {
@@ -73,8 +124,26 @@ impl Session {
             stopped: false,
             steps: 0,
             prefill_steps: 0,
-            last_sampled: None,
+            sampled: Vec::new(),
+            spec: SpecState::Idle,
+            draft_len: 0,
+            draft_max: 0,
+            spec_adaptive: false,
         }
+    }
+
+    /// Turn on self-speculative decoding for this session: rounds start at
+    /// draft length `draft_len` and the adaptive controller (when
+    /// `adaptive`) halves K after a fully-rejected round and doubles it
+    /// after a fully-accepted one, within `[2, draft_len]`.  The engine
+    /// calls this at admission for opted-in greedy requests only — the
+    /// greedy invariant is what makes speculative output bit-identical to
+    /// vanilla decode.
+    pub fn enable_spec(&mut self, draft_len: usize, adaptive: bool) {
+        debug_assert!(draft_len >= 2, "a draft of < 2 tokens cannot win a step");
+        self.draft_len = draft_len;
+        self.draft_max = draft_len;
+        self.spec_adaptive = adaptive;
     }
 
     pub fn id(&self) -> u64 {
@@ -124,6 +193,124 @@ impl Session {
         self.row.len() == self.prompt_len
     }
 
+    /// An idempotent `(token, position)` pair for steps this lane sits out
+    /// of (a draft step it is not drafting in, or a budget-deferred slab):
+    /// re-feeding the last consumed pair rewrites an identical cache entry,
+    /// and a fresh lane (nothing consumed yet) pre-writes its first prompt
+    /// token at position 0 — the exact value the real first slab will
+    /// write there anyway.
+    pub fn pad_pair(&self) -> (i32, usize) {
+        if self.cursor > 0 {
+            (self.row[self.cursor - 1], self.cursor - 1)
+        } else {
+            (self.row[0], 0)
+        }
+    }
+
+    // ---- self-speculative round state --------------------------------
+
+    /// Speculation enabled for this session (regardless of round phase)?
+    pub fn spec_enabled(&self) -> bool {
+        self.draft_len >= 2
+    }
+
+    /// The draft length the next round should use, when a round can start
+    /// right now: session speculative, between rounds, decode-phase
+    /// (prompt consumed, one fed-back token pending), and at least two
+    /// tokens still wanted (a 1-token round could never beat a vanilla
+    /// step).  `max_k` caps at the engine's widest verify slab.
+    pub fn spec_round_len(&self, max_k: usize) -> Option<usize> {
+        if !self.spec_enabled()
+            || self.spec != SpecState::Idle
+            || self.is_done()
+            || self.in_prefill()
+            || self.pending() != 1
+        {
+            return None;
+        }
+        let want = self.target_len - self.row.len();
+        let k = self.draft_len.min(want).min(max_k);
+        (k >= 2).then_some(k)
+    }
+
+    /// Begin a draft round of `k` proposed tokens.
+    pub fn begin_draft(&mut self, k: usize) {
+        debug_assert!(self.spec == SpecState::Idle);
+        self.spec = SpecState::Drafting { k, drafted: Vec::with_capacity(k) };
+    }
+
+    /// Mid-round with an incomplete draft — the engine runs draft steps
+    /// until no live session reports true.
+    pub fn drafting(&self) -> bool {
+        matches!(&self.spec, SpecState::Drafting { k, drafted } if drafted.len() < *k)
+    }
+
+    /// The `(token, position)` this session feeds the *draft* model next:
+    /// the fed-back row token to open the round, then each proposed token
+    /// autoregressively.
+    pub fn draft_feed(&self) -> (i32, usize) {
+        match &self.spec {
+            SpecState::Drafting { drafted, .. } => match drafted.last() {
+                Some(&d) => (d, self.cursor + drafted.len()),
+                None => (self.row[self.cursor], self.cursor),
+            },
+            _ => self.pad_pair(),
+        }
+    }
+
+    /// Record one draft-model proposal; flips to [`SpecState::Verify`]
+    /// when the round's K tokens are in.
+    pub fn push_draft(&mut self, tok: i32) {
+        let SpecState::Drafting { k, drafted } = &mut self.spec else {
+            unreachable!("push_draft outside a draft round");
+        };
+        drafted.push(tok);
+        if drafted.len() == *k {
+            let drafted = std::mem::take(drafted);
+            self.spec = SpecState::Verify { drafted };
+        }
+    }
+
+    /// Length of the verify slab the next target step must carry for this
+    /// lane (`None` when not in the verify phase).
+    pub fn verify_len(&self) -> Option<usize> {
+        match &self.spec {
+            SpecState::Verify { drafted } => Some(drafted.len()),
+            _ => None,
+        }
+    }
+
+    /// The `(token, position)` at verify-slab index `j`: the fed-back row
+    /// token at the cursor, then the drafted tokens at the following
+    /// positions — the slab whose all-position logits score the draft.
+    fn verify_pair(&self, j: usize) -> (i32, usize) {
+        let SpecState::Verify { drafted } = &self.spec else {
+            unreachable!("verify_pair outside the verify phase")
+        };
+        if j == 0 {
+            (self.row[self.cursor], self.cursor)
+        } else {
+            (drafted[j - 1], self.cursor + j)
+        }
+    }
+
+    /// The `(token, position)` this lane contributes at index `j` of a
+    /// planned slab (`start`/`len` from its [`crate::serve::LaneSlab`]):
+    /// verify tokens when mid-verify, row tokens otherwise, the pad pair
+    /// for a zero-length (sat-out) slab, and pad-by-repeat of the last
+    /// valid index beyond `len`.
+    pub fn step_pair(&self, start: usize, len: usize, j: usize) -> (i32, usize) {
+        if len == 0 {
+            return self.pad_pair();
+        }
+        let jj = j.min(len - 1);
+        if self.verify_len().is_some() {
+            self.verify_pair(jj)
+        } else {
+            (self.row[start + jj], start + jj)
+        }
+    }
+
     /// Number of generated (non-prompt) tokens so far.
     pub fn generated(&self) -> usize {
         self.row.len() - self.prompt_len
@@ -163,14 +350,14 @@ impl Session {
             self.prefill_steps += 1;
         }
         self.cursor += taken;
-        self.last_sampled = None;
+        self.sampled.clear();
         if self.cursor >= self.row.len() && self.row.len() < self.target_len {
             let tok = self.sampler.sample(logits);
             if self.ttft_s.is_none() {
                 self.ttft_s = Some(now.duration_since(self.arrived).as_secs_f64());
             }
             self.row.push(tok);
-            self.last_sampled = Some((self.row.len() - 1, tok));
+            self.sampled.push((self.row.len() - 1, tok));
             if self.sampler.is_stop(tok) {
                 self.stopped = true;
             }
@@ -178,11 +365,74 @@ impl Session {
         self.is_done()
     }
 
-    /// `(row position, token)` sampled by the most recent observe, if any.
-    /// Positions are absolute row indices: the prompt occupies
-    /// `[0, prompt_len)`, so the k-th generated token sits at `prompt_len + k`.
+    /// Consume one *verify* step's all-position logits for this lane.
+    /// `targets[j]` is the target model's greedy token at verify-slab
+    /// index `j` (the successor of the j-th fed token).  Because the
+    /// drafted prefix that matches `targets` *is* what vanilla greedy
+    /// decode would have emitted, accepting `targets[0 ..= m]` (m = the
+    /// longest matching prefix; index m is the correction at the first
+    /// divergence, or the final bonus comparison when everything matched)
+    /// appends exactly the vanilla token sequence — bit-identity by
+    /// construction, whatever the draft proposed.
+    pub fn observe_verify(&mut self, targets: &[i32], now: Instant) -> VerifyOutcome {
+        debug_assert!(!self.is_done(), "verify on a finished session");
+        let SpecState::Verify { drafted } = std::mem::replace(&mut self.spec, SpecState::Idle)
+        else {
+            unreachable!("observe_verify outside the verify phase")
+        };
+        let k = drafted.len();
+        debug_assert_eq!(targets.len(), k, "one target token per verify index");
+        self.steps += 1;
+        self.sampled.clear();
+        // Longest prefix of the draft the target agrees with.
+        let mut m = 0;
+        while m < k && targets[m] == drafted[m] {
+            m += 1;
+        }
+        // targets[j] == drafted[j] for j < m, and targets[m] (when m < k)
+        // is the target's own correction — so the appended tokens are
+        // simply targets[0..take].
+        let take = (m + 1).min(k);
+        let mut appended = 0;
+        for &tok in &targets[..take] {
+            debug_assert!(self.row.len() < self.target_len, "round drafted past target_len");
+            self.cursor += 1;
+            self.row.push(tok);
+            self.sampled.push((self.row.len() - 1, tok));
+            appended += 1;
+            if self.ttft_s.is_none() {
+                self.ttft_s = Some(now.duration_since(self.arrived).as_secs_f64());
+            }
+            if self.sampler.is_stop(tok) {
+                self.stopped = true;
+                break;
+            }
+        }
+        // Adaptive draft length: a fully-accepted round earns a longer
+        // draft next time, a fully-rejected one halves it (floor 2).
+        if self.spec_adaptive {
+            if m == k {
+                self.draft_len = (self.draft_len * 2).min(self.draft_max);
+            } else if m == 0 {
+                self.draft_len = (self.draft_len / 2).max(2);
+            }
+        }
+        let accepted = appended.min(m);
+        VerifyOutcome { accepted, appended, rejected: k - accepted, finished: self.is_done() }
+    }
+
+    /// `(row position, token)` pairs sampled by the most recent observe —
+    /// one for a vanilla step, up to K for a verify step.  Positions are
+    /// absolute row indices: the prompt occupies `[0, prompt_len)`, so the
+    /// k-th generated token sits at `prompt_len + k`.
+    pub fn sampled(&self) -> &[(usize, i32)] {
+        &self.sampled
+    }
+
+    /// The last `(row position, token)` sampled by the most recent
+    /// observe, if any.
     pub fn last_sampled(&self) -> Option<(usize, i32)> {
-        self.last_sampled
+        self.sampled.last().copied()
     }
 
     /// The token row so far (prompt + generated) — partial output handed to
@@ -324,7 +574,7 @@ mod tests {
         // many steps the prompt took to consume.
         let now = Instant::now();
         let sampling =
-            SamplingParams { temperature: 0.8, top_k: 3, seed: 5, stop_token: None };
+            SamplingParams { temperature: 0.8, top_k: 3, seed: 5, ..Default::default() };
         let mk = || Session::new(req(9, vec![1, 2, 3, 4], 2, sampling.clone()), 0, 64, now);
         let mut rng = Rng::new(11);
         let sample_logits = logits_from(&mut rng);
@@ -368,6 +618,174 @@ mod tests {
     }
 
     #[test]
+    fn pad_pair_is_idempotent_rewrite() {
+        let now = Instant::now();
+        let mut s = Session::new(req(1, vec![5, 6, 7], 4, SamplingParams::greedy()), 0, 64, now);
+        // Fresh lane: pre-writes its own first prompt token at position 0.
+        assert_eq!(s.pad_pair(), (5, 0));
+        let mut rng = Rng::new(2);
+        s.observe_slab(2, &logits_from(&mut rng), now);
+        // Mid-row: re-feeds the last consumed pair.
+        assert_eq!(s.pad_pair(), (6, 1));
+    }
+
+    #[test]
+    fn draft_verify_cycle_accepts_matching_prefix() {
+        let now = Instant::now();
+        let mut s = Session::new(
+            req(1, vec![5, 6], 8, SamplingParams::speculative_greedy()),
+            0,
+            64,
+            now,
+        );
+        s.enable_spec(4, false);
+        let mut rng = Rng::new(6);
+        // No round during prefill.
+        assert_eq!(s.spec_round_len(32), None);
+        s.observe_slab(2, &logits_from(&mut rng), now);
+        let first = s.last_sampled().expect("prefill end samples").1;
+        // Decode-ready: a 4-token round fits (8 - 1 = 7 wanted ≥ 4).
+        assert_eq!(s.spec_round_len(32), Some(4));
+        s.begin_draft(4);
+        assert!(s.drafting());
+        // The draft feed walks [row[c], d1, d2, d3] at positions c, c+1, …
+        assert_eq!(s.draft_feed(), (first, 2));
+        for (i, d) in [21, 22, 23, 24].into_iter().enumerate() {
+            s.push_draft(d);
+            if i < 3 {
+                assert_eq!(s.draft_feed(), (d, 3 + i));
+            }
+        }
+        assert!(!s.drafting(), "round of 4 is complete");
+        assert_eq!(s.verify_len(), Some(4));
+        // Slab pairs: fed-back token first, then the draft.
+        assert_eq!(s.step_pair(2, 4, 0), (first, 2));
+        assert_eq!(s.step_pair(2, 4, 1), (21, 3));
+        // The slab is [row[c], d1, d2, d3] — d4 is never fed, only compared
+        // against the target's token at the last index.  Pads repeat the
+        // last slab pair.
+        assert_eq!(s.step_pair(2, 4, 5), (23, 5), "pads repeat the last pair");
+        // Target agrees with d1, d2, diverges at d3: accept 2 + correction.
+        let out = s.observe_verify(&[21, 22, 99, 0], now);
+        assert_eq!(out, VerifyOutcome { accepted: 2, appended: 3, rejected: 2, finished: false });
+        assert_eq!(s.tokens(), &[5, 6, first, 21, 22, 99]);
+        assert_eq!(
+            s.sampled(),
+            &[(3, 21), (4, 22), (5, 99)],
+            "every appended token streams out with its row position"
+        );
+        assert_eq!(s.pending(), 1, "decode invariant restored after a round");
+        assert_eq!(s.verify_len(), None);
+    }
+
+    #[test]
+    fn verify_full_acceptance_and_stop_token() {
+        let now = Instant::now();
+        // Full acceptance appends exactly k tokens (the last comparison is
+        // the bonus: target's own token at the final index).
+        let mut s = Session::new(
+            req(1, vec![5], 8, SamplingParams::speculative_greedy()),
+            0,
+            64,
+            now,
+        );
+        s.enable_spec(3, false);
+        let mut rng = Rng::new(8);
+        s.observe_slab(1, &logits_from(&mut rng), now);
+        s.begin_draft(3);
+        for d in [11, 12, 13] {
+            s.push_draft(d);
+        }
+        let out = s.observe_verify(&[11, 12, 13], now);
+        assert_eq!(out, VerifyOutcome { accepted: 3, appended: 3, rejected: 0, finished: false });
+        assert_eq!(s.generated(), 4);
+
+        // A stop token inside the accepted prefix cuts the round short,
+        // exactly as vanilla decode would have stopped there.
+        let mut stop_params = SamplingParams::speculative_greedy();
+        stop_params.stop_token = Some(12);
+        let mut s = Session::new(req(2, vec![5], 8, stop_params), 0, 64, now);
+        s.enable_spec(3, false);
+        // Rigged logits so the prefill-end sample is deterministic and
+        // not the stop token.
+        let mut first = vec![0.0f32; V];
+        first[3] = 5.0;
+        s.observe_slab(1, &first, now);
+        s.begin_draft(3);
+        for d in [11, 12, 13] {
+            s.push_draft(d);
+        }
+        let out = s.observe_verify(&[11, 12, 13], now);
+        assert!(out.finished, "stop token finishes the session");
+        assert_eq!(out.appended, 2, "nothing after the stop token");
+        assert_eq!(&s.into_tokens()[2..], &[11, 12]);
+    }
+
+    #[test]
+    fn adaptive_draft_length_shrinks_and_regrows() {
+        let now = Instant::now();
+        let mut s = Session::new(
+            req(1, vec![5], 64, SamplingParams::speculative_greedy()),
+            0,
+            128,
+            now,
+        );
+        s.enable_spec(8, true);
+        let mut rng = Rng::new(9);
+        s.observe_slab(1, &logits_from(&mut rng), now);
+        // Fully-rejected rounds halve K: 8 → 4 → 2 → floor at 2.
+        for want in [4usize, 2, 2] {
+            let k = s.spec_round_len(32).unwrap();
+            s.begin_draft(k);
+            for _ in 0..k {
+                s.push_draft(-1); // a token greedy decode can never emit
+            }
+            let last = s.tokens().len();
+            let targets: Vec<i32> = (0..k as i32).map(|j| 1 + j + last as i32).collect();
+            let out = s.observe_verify(&targets, now);
+            assert_eq!(out.accepted, 0);
+            assert_eq!(out.appended, 1, "a failed round still yields the corrected token");
+            assert_eq!(s.spec_round_len(32), Some(want));
+        }
+        // Fully-accepted rounds double it back, capped at the initial K.
+        for want in [4usize, 8, 8] {
+            let k = s.spec_round_len(32).unwrap();
+            s.begin_draft(k);
+            let base = 30 + s.tokens().len() as i32;
+            for j in 0..k as i32 {
+                s.push_draft(base + j);
+            }
+            let targets: Vec<i32> = (0..k as i32).map(|j| base + j).collect();
+            let out = s.observe_verify(&targets, now);
+            assert_eq!(out.accepted, k);
+            assert_eq!(s.spec_round_len(32), Some(want));
+        }
+    }
+
+    #[test]
+    fn spec_round_len_respects_remaining_budget() {
+        let now = Instant::now();
+        let mut s = Session::new(
+            req(1, vec![5], 4, SamplingParams::speculative_greedy()),
+            0,
+            64,
+            now,
+        );
+        s.enable_spec(8, false);
+        let mut rng = Rng::new(10);
+        s.observe_slab(1, &logits_from(&mut rng), now);
+        // 1 prompt + 4 new = target 5; row is 2 → 3 tokens wanted < 8.
+        assert_eq!(s.spec_round_len(32), Some(3));
+        // The engine's verify-width cap applies too.
+        assert_eq!(s.spec_round_len(2), Some(2));
+        // One token wanted: speculation cannot win — vanilla step instead.
+        while s.generated() < 3 {
+            s.observe_slab(1, &logits_from(&mut rng), now);
+        }
+        assert_eq!(s.spec_round_len(32), None);
+    }
+
+    #[test]
     fn session_invariants_property() {
         prop("session decode invariants", 40, |rng| {
             let now = Instant::now();
@@ -381,6 +799,7 @@ mod tests {
                 top_k: rng.below(4),
                 seed: rng.next_u64(),
                 stop_token: None,
+                speculative: false,
             };
             let target = (p + max_new).min(cwin);
             let mut s = Session::new(req(7, prompt.clone(), max_new, sampling), 0, cwin, now);

@@ -36,12 +36,12 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::ops;
 use crate::model::params::ParamSet;
-use crate::model::{decode_params_for_checkpoint, Checkpoint};
+use crate::model::{decode_params_for_checkpoint, load_params, Checkpoint};
 use crate::runtime::stub::StubSpec;
 use crate::runtime::Runtime;
 use crate::serve::{
     BatchPolicy, CancelReason, Cancellation, Completion, Engine, Request, SamplingParams,
-    ServeMetrics, StepHook,
+    ServeMetrics, SpecConfig, StepHook,
 };
 
 use super::cancel::{CancelRegistry, CancelToken};
@@ -68,6 +68,27 @@ pub enum ParamSource {
     Stub(StubSpec),
 }
 
+/// Where a speculative engine's *draft* model comes from.
+#[derive(Clone, Debug)]
+pub enum DraftSource {
+    /// A stub draft (stub engines only) — typically the target's
+    /// [`StubSpec`] with a lower rank, making it a spectrum truncation of
+    /// the target.
+    Stub(StubSpec),
+    /// CLOVER-prune the engine's dense parameters to (approximately)
+    /// `rank` and draft on the `decode_fac_r{rank}` artifact family.
+    /// Requires a dense parameter source (`Init`, `InitPruned`'s seed, or
+    /// a dense checkpoint).
+    PrunedRank { rank: usize },
+}
+
+/// Draft + policy for a speculative (draft+verify) engine pair.
+#[derive(Clone, Debug)]
+pub struct SpecSpec {
+    pub draft: DraftSource,
+    pub cfg: SpecConfig,
+}
+
 /// Everything a worker thread needs to build its engine from scratch —
 /// plain data, because the engine itself cannot cross threads.
 #[derive(Clone, Debug)]
@@ -81,6 +102,13 @@ pub struct EngineSpec {
     /// chunking, `None` keeps every width the manifest exports) — see
     /// [`Engine::with_prefill_chunk`].
     pub prefill_chunk: Option<usize>,
+    /// Attach a draft model for self-speculative decoding (the gateway
+    /// then hosts a draft+verify *pair*, and reports the combined KV cost
+    /// to the router).
+    pub speculative: Option<SpecSpec>,
+    /// Per-step token budget (prefill-aware admission) — see
+    /// [`Engine::with_max_step_tokens`].
+    pub max_step_tokens: Option<usize>,
 }
 
 impl EngineSpec {
@@ -91,6 +119,8 @@ impl EngineSpec {
             batch_slots,
             source: ParamSource::Init { seed },
             prefill_chunk: None,
+            speculative: None,
+            max_step_tokens: None,
         }
     }
 
@@ -107,6 +137,8 @@ impl EngineSpec {
             batch_slots,
             source: ParamSource::InitPruned { seed, ratio, method: "clover".into() },
             prefill_chunk: None,
+            speculative: None,
+            max_step_tokens: None,
         }
     }
 
@@ -117,6 +149,8 @@ impl EngineSpec {
             batch_slots,
             source: ParamSource::Checkpoint { path: path.into() },
             prefill_chunk: None,
+            speculative: None,
+            max_step_tokens: None,
         }
     }
 
@@ -130,12 +164,27 @@ impl EngineSpec {
             batch_slots: spec.batch_slots,
             source: ParamSource::Stub(spec),
             prefill_chunk: None,
+            speculative: None,
+            max_step_tokens: None,
         }
     }
 
     /// Cap (or with `Some(1)`, disable) chunked prefill for this engine.
     pub fn with_prefill_chunk(mut self, cap: Option<usize>) -> Self {
         self.prefill_chunk = cap;
+        self
+    }
+
+    /// Attach a draft model: the worker builds a speculative draft+verify
+    /// pair instead of a single engine.
+    pub fn with_speculative(mut self, draft: DraftSource, cfg: SpecConfig) -> Self {
+        self.speculative = Some(SpecSpec { draft, cfg });
+        self
+    }
+
+    /// Cap one fused step's summed slab tokens (prefill-aware admission).
+    pub fn with_max_step_tokens(mut self, cap: Option<usize>) -> Self {
+        self.max_step_tokens = cap;
         self
     }
 }
@@ -159,6 +208,45 @@ fn build_params(spec: &EngineSpec, rt: &Runtime) -> Result<(ParamSet, String)> {
         }
         ParamSource::Stub(_) => bail!("stub engines have no artifact params"),
     }
+}
+
+/// Resolve a [`DraftSource::PrunedRank`] draft: CLOVER-prune the spec's
+/// *dense* parameters to (approximately) `rank` and name the factored
+/// decode program the draft runs on.
+fn build_draft(spec: &EngineSpec, rt: &Runtime, rank: usize) -> Result<(ParamSet, String)> {
+    let entry = rt.manifest().config(&spec.preset)?.clone();
+    let b = spec.batch_slots;
+    let dense = match &spec.source {
+        ParamSource::Init { seed } | ParamSource::InitPruned { seed, .. } => {
+            ops::init_params(rt, &spec.preset, *seed)?
+        }
+        ParamSource::Checkpoint { path } => {
+            let ck = Checkpoint::load(path)?;
+            if ck.meta.get("kind").map(|s| s.as_str()) == Some("factorized") {
+                bail!("draft pruning needs the dense parameters — checkpoint is factorized");
+            }
+            load_params(&ck, &entry.params_dense)?
+        }
+        ParamSource::Stub(_) => bail!("stub engines take DraftSource::Stub drafts"),
+    };
+    let d_head = entry.dim("d_head")?;
+    if rank == 0 || rank >= d_head {
+        bail!("draft rank {rank} must be in 1..{d_head} (below the dense head dim)");
+    }
+    let ratio = 1.0 - rank as f64 / d_head as f64;
+    let (fac, r) = ops::prune_to_ratio(&entry, &dense, ratio, "clover")?;
+    Ok((fac, format!("decode_fac_r{r}_b{b}")))
+}
+
+/// What the worker reports once its engine is up.
+struct Ready {
+    rank: usize,
+    /// Combined per-token KV cost — target cache plus the draft cache for
+    /// a speculative pair ([`Engine::kv_bytes_per_token_total`]).
+    kv_bytes_per_token: usize,
+    /// The draft model's rank, when this gateway hosts a speculative
+    /// pair.
+    draft_rank: Option<usize>,
 }
 
 #[derive(Clone, Debug)]
@@ -227,6 +315,9 @@ pub struct Gateway {
     name: String,
     rank: usize,
     kv_bytes_per_token: usize,
+    /// The draft model's rank when this gateway hosts a speculative
+    /// draft+verify pair.
+    draft_rank: Option<usize>,
     submit_tx: mpsc::SyncSender<Submission>,
     ctrl_tx: mpsc::Sender<Ctrl>,
     /// Shared across all gateways behind one [`super::Router`] (see
@@ -258,7 +349,7 @@ impl Gateway {
         }
         let (submit_tx, submit_rx) = mpsc::sync_channel::<Submission>(cfg.queue_capacity);
         let (ctrl_tx, ctrl_rx) = mpsc::channel::<Ctrl>();
-        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<(usize, usize), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<std::result::Result<Ready, String>>();
         let in_flight = Arc::new(AtomicUsize::new(0));
         let queued_prefill = Arc::new(AtomicUsize::new(0));
         let policy = cfg.policy.clone();
@@ -281,10 +372,29 @@ impl Gateway {
                 // a Runtime for the thread's lifetime (the PJRT handles are
                 // born and die here).
                 if let ParamSource::Stub(stub_spec) = &spec.source {
-                    let engine = Engine::new_stub(stub_spec.clone())
-                        .with_prefill_chunk(spec.prefill_chunk);
-                    let kc = engine.kv_config();
-                    let _ = ready_tx.send(Ok((kc.rank, kc.bytes_per_token())));
+                    let mut engine = Engine::new_stub(stub_spec.clone())
+                        .with_prefill_chunk(spec.prefill_chunk)
+                        .with_max_step_tokens(spec.max_step_tokens);
+                    if let Some(sp) = &spec.speculative {
+                        let DraftSource::Stub(draft) = &sp.draft else {
+                            let msg = "stub engines take DraftSource::Stub drafts".to_string();
+                            let _ = ready_tx.send(Err(msg.clone()));
+                            bail!(msg);
+                        };
+                        let built = engine.with_speculative_stub(draft.clone(), sp.cfg.clone());
+                        engine = match built {
+                            Ok(e) => e,
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(format!("{e:#}")));
+                                return Err(e);
+                            }
+                        };
+                    }
+                    let _ = ready_tx.send(Ok(Ready {
+                        rank: engine.kv_config().rank,
+                        kv_bytes_per_token: engine.kv_bytes_per_token_total(),
+                        draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
+                    }));
                     return engine.serve_open(policy, &mut hook);
                 }
                 let rt = match Runtime::new(&spec.artifacts_dir) {
@@ -301,23 +411,49 @@ impl Gateway {
                         return Err(e);
                     }
                 };
-                let engine = match Engine::new(&rt, &spec.preset, &program, params) {
-                    Ok(x) => x.with_prefill_chunk(spec.prefill_chunk),
+                let mut engine = match Engine::new(&rt, &spec.preset, &program, params) {
+                    Ok(x) => {
+                        x.with_prefill_chunk(spec.prefill_chunk)
+                            .with_max_step_tokens(spec.max_step_tokens)
+                    }
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return Err(e);
                     }
                 };
-                let kc = engine.kv_config();
-                let _ = ready_tx.send(Ok((kc.rank, kc.bytes_per_token())));
+                if let Some(sp) = &spec.speculative {
+                    let built = match &sp.draft {
+                        DraftSource::Stub(_) => {
+                            Err(anyhow::anyhow!("PJRT engines take DraftSource::PrunedRank drafts"))
+                        }
+                        DraftSource::PrunedRank { rank } => {
+                            build_draft(&spec, &rt, *rank).and_then(|(dparams, dprog)| {
+                                engine.with_speculative(&dprog, dparams, sp.cfg.clone())
+                            })
+                        }
+                    };
+                    engine = match built {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return Err(e);
+                        }
+                    };
+                }
+                let _ = ready_tx.send(Ok(Ready {
+                    rank: engine.kv_config().rank,
+                    kv_bytes_per_token: engine.kv_bytes_per_token_total(),
+                    draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
+                }));
                 engine.serve_open(policy, &mut hook)
             })
             .context("spawning gateway worker thread")?;
         match ready_rx.recv() {
-            Ok(Ok((rank, kv_bytes_per_token))) => Ok(Self {
+            Ok(Ok(ready)) => Ok(Self {
                 name: name.to_string(),
-                rank,
-                kv_bytes_per_token,
+                rank: ready.rank,
+                kv_bytes_per_token: ready.kv_bytes_per_token,
+                draft_rank: ready.draft_rank,
                 submit_tx,
                 ctrl_tx,
                 next_id: Arc::new(AtomicU64::new(0)),
@@ -347,8 +483,21 @@ impl Gateway {
     }
 
     /// Per-token KV cost of this gateway's engine — the router's weight.
+    /// For a speculative pair this is the *combined* target + draft cost:
+    /// a draft+verify pair consumes two engines' worth of cache.
     pub fn kv_bytes_per_token(&self) -> usize {
         self.kv_bytes_per_token
+    }
+
+    /// Rank of the draft model, when this gateway hosts a speculative
+    /// draft+verify pair.
+    pub fn draft_rank(&self) -> Option<usize> {
+        self.draft_rank
+    }
+
+    /// Does this gateway host a speculative draft+verify pair?
+    pub fn speculative(&self) -> bool {
+        self.draft_rank.is_some()
     }
 
     /// Requests accepted and not yet terminal (queued + decoding).
@@ -664,7 +813,8 @@ mod tests {
         let engine = Engine::new(&rt, "tiny", "decode_b8", params).unwrap();
         // Temperature sampling so the comparison exercises the per-request
         // RNG streams, not just greedy argmax.
-        let sampling = SamplingParams { temperature: 0.9, top_k: 8, seed: 17, stop_token: None };
+        let sampling =
+            SamplingParams { temperature: 0.9, top_k: 8, seed: 17, ..Default::default() };
         let now = Instant::now();
         let n = 6u64;
         let mk_prompt = |i: u64| vec![3, 4 + i as i32];
@@ -826,6 +976,57 @@ mod tests {
         let m = gw.join().unwrap();
         assert_eq!(m.completed, 1);
         assert_eq!(m.slab_tokens, 40 + 3, "prompt + fed-back generated tokens");
+    }
+
+    /// Speculative pair end-to-end through the gateway: identical tokens
+    /// to a vanilla gateway, fewer dense steps, combined KV cost
+    /// reported.
+    #[test]
+    fn stub_speculative_gateway_matches_vanilla_tokens() {
+        let target = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            ..Default::default()
+        };
+        let draft = StubSpec { rank: 4, ..target.clone() };
+        let spec_gw = Gateway::spawn(
+            "spec",
+            GatewayConfig::default(),
+            EngineSpec::stub(target.clone()).with_speculative(
+                DraftSource::Stub(draft),
+                SpecConfig { draft_len: 4, adaptive: true },
+            ),
+        )
+        .unwrap();
+        assert!(spec_gw.speculative());
+        assert_eq!(spec_gw.draft_rank(), Some(4));
+        let vanilla_gw =
+            Gateway::spawn("van", GatewayConfig::default(), EngineSpec::stub(target)).unwrap();
+        assert!(
+            spec_gw.kv_bytes_per_token() > vanilla_gw.kv_bytes_per_token(),
+            "the pair pins target + draft cache bytes per token"
+        );
+        let prompt = vec![3, 7, 1, 5];
+        let a = spec_gw
+            .submit(prompt.clone(), 24, SamplingParams::speculative_greedy(), None)
+            .unwrap();
+        let b = vanilla_gw.submit(prompt, 24, SamplingParams::greedy(), None).unwrap();
+        let ca = a.stream.wait().unwrap().completion().unwrap();
+        let cb = b.stream.wait().unwrap().completion().unwrap();
+        assert_eq!(ca.tokens, cb.tokens, "speculative == vanilla greedy through the stack");
+        let ma = spec_gw.join().unwrap();
+        let mb = vanilla_gw.join().unwrap();
+        assert!(ma.spec_rounds > 0);
+        assert!(ma.accepted_draft_tokens > 0);
+        assert!(
+            ma.decode_steps < mb.decode_steps,
+            "speculation: {} dense steps vs {} vanilla",
+            ma.decode_steps,
+            mb.decode_steps
+        );
     }
 
     #[test]

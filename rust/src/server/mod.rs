@@ -41,6 +41,14 @@
 //! lane for the same iteration's admission pass.  [`EngineSpec::stub`]
 //! runs a gateway over the deterministic host-side stub backend — the
 //! full channel/stream/cancel stack without a PJRT runtime.
+//!
+//! A gateway can also host a **speculative draft+verify pair**
+//! ([`EngineSpec::with_speculative`]): the worker builds the target
+//! engine *and* a lower-rank draft engine, opted-in greedy requests
+//! decode via draft → verify → accept/rollback rounds, and the gateway
+//! reports the pair's *combined* per-token KV cost — so the router's
+//! score correctly treats it as two engines' worth of cache pinned per
+//! admitted token.
 
 pub mod cancel;
 pub mod gateway;
@@ -48,6 +56,8 @@ pub mod router;
 pub mod stream;
 
 pub use cancel::{CancelRegistry, CancelToken};
-pub use gateway::{EngineSpec, Gateway, GatewayConfig, ParamSource, SubmitError, Ticket};
+pub use gateway::{
+    DraftSource, EngineSpec, Gateway, GatewayConfig, ParamSource, SpecSpec, SubmitError, Ticket,
+};
 pub use router::Router;
 pub use stream::{RequestStream, StreamEvent, StreamOutcome, TryNext};

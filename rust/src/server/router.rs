@@ -21,6 +21,13 @@
 //! pin), and it drains as prefills complete —
 //! [`Gateway::queued_prefill_tokens`].
 //!
+//! A **speculative draft+verify pair** consumes two engines: its gateway
+//! reports the *combined* target + draft per-token KV cost
+//! ([`Gateway::kv_bytes_per_token`] already includes both caches), so at
+//! equal queue depth the router correctly prefers a plain engine over a
+//! pair of the same target rank — the pair's throughput advantage is per
+//! *token*, its cost is per *resident request*.
+//!
 //! Ties resolve to the earliest gateway in construction order, so callers
 //! list their preferred (typically lowest-rank) engine first.
 
@@ -168,5 +175,34 @@ mod tests {
         for (name, m) in router.join().unwrap() {
             assert_eq!(m.completed + m.cancelled, 2, "{name}");
         }
+    }
+
+    #[test]
+    fn speculative_pair_costs_two_engines() {
+        use crate::serve::SpecConfig;
+        use crate::server::gateway::DraftSource;
+        // Same target everywhere; gateway "pair" carries a rank-4 draft on
+        // top.  At equal (zero) queue depth the plain engine must win —
+        // the pair pins target + draft cache per resident token.
+        let target = StubSpec { rank: 8, ..Default::default() };
+        let draft = StubSpec { rank: 4, ..target.clone() };
+        let pair_spec = EngineSpec::stub(target.clone())
+            .with_speculative(DraftSource::Stub(draft), SpecConfig::default());
+        let router = Router::new(vec![
+            Gateway::spawn("pair", GatewayConfig::default(), pair_spec).unwrap(),
+            Gateway::spawn("plain", GatewayConfig::default(), EngineSpec::stub(target)).unwrap(),
+        ])
+        .unwrap();
+        let g = router.gateways();
+        assert!(g[0].speculative() && !g[1].speculative());
+        assert_eq!(
+            g[0].kv_bytes_per_token(),
+            g[1].kv_bytes_per_token() * 3 / 2,
+            "rank-4 draft adds half a rank-8 target's bytes"
+        );
+        // "pair" is listed first, so only its higher KV cost can explain
+        // the router preferring "plain".
+        assert_eq!(router.pick(), 1);
+        router.join().unwrap();
     }
 }

@@ -43,7 +43,8 @@ def require(doc, keys, path="$"):
 
 
 def check_serve(doc):
-    yield from require(doc, ["bench", "preset", "prefill", "engines", "pjrt_skipped"])
+    yield from require(doc, ["bench", "preset", "prefill", "speculative", "engines",
+                             "pjrt_skipped"])
     prefill = doc.get("prefill", {})
     yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
                        "$.prefill")
@@ -63,6 +64,35 @@ def check_serve(doc):
     if reductions and max(reductions) < 4:
         yield (f"$.prefill: best prefill step reduction {max(reductions)}x < 4x "
                "for a chunked width")
+    spec = doc.get("speculative", {})
+    yield from require(
+        spec, ["backend", "target_rank", "draft_rank", "vanilla_steps_per_token", "sweep"],
+        "$.speculative")
+    sweep = spec.get("sweep", [])
+    if not sweep:
+        yield "$.speculative.sweep: empty — the draft-length sweep was not benched"
+    for i, row in enumerate(sweep):
+        yield from require(
+            row,
+            ["draft_len", "acceptance_rate", "dense_steps_per_token", "draft_steps",
+             "rollback_tokens", "bit_identical_to_vanilla"],
+            f"$.speculative.sweep[{i}]")
+        if not row.get("bit_identical_to_vanilla", False):
+            yield (f"$.speculative.sweep[{i}]: speculative greedy output diverged from "
+                   "vanilla greedy decode — the bit-identity invariant is broken")
+    # The acceptance bar: some draft length >= 4 runs the dense decode at
+    # < 1.0 steps per generated token — and strictly beats the vanilla
+    # trace (vanilla sits at ~1.0 minus the prefill-boundary token, so
+    # beating it is the part that proves speculation pays).
+    vanilla = spec.get("vanilla_steps_per_token", 1.0)
+    spt = [row.get("dense_steps_per_token", 1.0)
+           for row in sweep if row.get("draft_len", 0) >= 4]
+    if spt and min(spt) >= 1.0:
+        yield (f"$.speculative: best dense steps-per-token {min(spt)} >= 1.0 at "
+               "draft length >= 4 — speculation is not paying for itself")
+    if spt and min(spt) >= vanilla:
+        yield (f"$.speculative: best dense steps-per-token {min(spt)} does not "
+               f"beat the vanilla trace ({vanilla})")
     if not doc.get("pjrt_skipped", True):
         for i, eng in enumerate(doc.get("engines", [])):
             yield from require(
