@@ -18,6 +18,17 @@
 //!   rate, dense decode steps per generated token (the < 1.0 acceptance
 //!   bar), draft steps, rollback tokens, and a bit-identity check against
 //!   the vanilla greedy trace.  Always on (stub backend).
+//! * `kv_codec` — lanes-at-fixed-memory vs page codec: the same request
+//!   trace under one `--kv-memory-budget` served with the identity codec
+//!   and with the factored codec at rank/2 and rank/4 budgets, the
+//!   concurrent lane count *measured* through a step-hook census (not
+//!   computed from config).  The acceptance bar (factored ≥ 2× identity
+//!   lanes) reads this section.  Always on (stub backend).
+//! * `layer_budgets` — accuracy-vs-layer-budget: greedy-token prefix
+//!   agreement against the identity baseline across DepthKV-style
+//!   per-layer budget profiles on a 2-layer stub; the full-rank profile
+//!   must agree exactly (the factored codec at full budgets is a pure
+//!   copy).  Always on (stub backend).
 //! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
 //!   bytes, marshal/execute split per engine×admission-mode, against the
 //!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
@@ -29,8 +40,8 @@ use clover::coordinator::ops;
 use clover::runtime::stub::StubSpec;
 use clover::runtime::Runtime;
 use clover::serve::{
-    Admission, BatchPolicy, Batcher, Engine, KvConfig, KvManager, Request, SamplingParams,
-    SpecConfig,
+    Admission, BatchPolicy, Batcher, CancelReason, Completion, Engine, KvCodecSpec, KvConfig,
+    KvManager, Request, SamplingParams, SpecConfig, StepHook,
 };
 use clover::util::human_bytes;
 use std::collections::BTreeMap;
@@ -223,6 +234,199 @@ fn bench_speculative() -> Result<Json> {
     Ok(Json::Obj(o))
 }
 
+/// Counts concurrently live lanes through the step hook: the lane count
+/// the fixed memory budget actually admitted, as observed at the
+/// scheduler boundary — not derived from the codec's page size.
+#[derive(Default)]
+struct LaneCensus {
+    live: usize,
+    max_live: usize,
+}
+
+impl StepHook for LaneCensus {
+    fn on_started(&mut self, _id: u64, _lane: usize, _step: usize) {
+        self.live += 1;
+        self.max_live = self.max_live.max(self.live);
+    }
+
+    fn on_done(&mut self, _completion: &Completion) {
+        self.live -= 1;
+    }
+
+    fn on_cancelled(&mut self, _id: u64, _t: Vec<i32>, _r: CancelReason, _s: usize) {
+        self.live -= 1;
+    }
+}
+
+/// Lanes-at-fixed-memory vs page codec.  One 1-layer rank-8 stub, one
+/// fixed KV byte budget sized to 4 identity pages, requests whose
+/// worst-case row is exactly one page: the identity codec admits 4
+/// concurrent lanes, the factored codec at rank/2 admits 8, at rank/4 all
+/// 16 — the compressed pages *are* the extra lanes.  Lane counts come
+/// from a [`LaneCensus`] hook, throughput from the same runs.
+fn bench_kv_codecs() -> Result<Json> {
+    const RANK: usize = 8;
+    const SLOTS: usize = 16;
+    let spec = StubSpec {
+        n_layers: 1,
+        n_heads: 2,
+        rank: RANK,
+        vocab: 16,
+        max_positions: 128,
+        batch_slots: SLOTS,
+        ..Default::default()
+    };
+    // Prompt 8 + max_new 8 = one 16-token page worst case per request.
+    let mk = |now: Instant| -> Vec<Request> {
+        (0..SLOTS as u64)
+            .map(|id| {
+                Request::greedy(id, (0..8).map(|p| (id as i32 + p) % 16).collect(), 8, now)
+            })
+            .collect()
+    };
+    let pol = BatchPolicy { max_batch: SLOTS, max_wait: Duration::from_millis(1) };
+    // Budget = 4 identity pages, so the identity codec admits exactly 4
+    // concurrent one-page lanes.
+    let probe = Engine::new_stub(spec.clone());
+    let budget = 4 * probe.kv_config().bytes_per_page();
+
+    let codecs = [
+        ("identity", KvCodecSpec::Identity),
+        ("factored_r4", KvCodecSpec::Factored { layer_budgets: Some(vec![RANK / 2]) }),
+        ("factored_r2", KvCodecSpec::Factored { layer_budgets: Some(vec![RANK / 4]) }),
+    ];
+    let mut rows = Vec::new();
+    let mut identity_lanes = 0usize;
+    for (name, codec) in codecs {
+        let engine = Engine::new_stub(spec.clone())
+            .with_kv_codec(codec)?
+            .with_kv_memory_budget(Some(budget));
+        let cfg = engine.kv_config();
+        let bytes_per_token = engine.kv_bytes_per_token_total();
+        let bytes_per_page = cfg.bytes_per_page();
+        let stored_ranks = cfg.stored_ranks();
+        let mut census = LaneCensus::default();
+        let now = Instant::now();
+        let (completions, m) =
+            engine.serve_hooked(mk(now), pol.clone(), Admission::Continuous, &mut census)?;
+        if name == "identity" {
+            identity_lanes = census.max_live;
+        }
+        println!(
+            "kv codec {name:<12}: {:>2} concurrent lanes under a {} budget ({:.1}x identity) \
+             | {:>4} B/page | {:>3} B/token | {:.0} tok/s | {} completed",
+            census.max_live,
+            human_bytes(budget),
+            census.max_live as f64 / identity_lanes.max(1) as f64,
+            bytes_per_page,
+            bytes_per_token,
+            m.tokens_per_s(),
+            completions.len(),
+        );
+        let mut o = BTreeMap::new();
+        o.insert("codec".to_string(), Json::Str(name.to_string()));
+        o.insert(
+            "layer_budgets".to_string(),
+            Json::Arr(stored_ranks.iter().map(|&r| Json::Num(r as f64)).collect()),
+        );
+        o.insert("bytes_per_token".to_string(), Json::Num(bytes_per_token as f64));
+        o.insert("bytes_per_page".to_string(), Json::Num(bytes_per_page as f64));
+        o.insert("max_concurrent_lanes".to_string(), Json::Num(census.max_live as f64));
+        o.insert(
+            "lanes_vs_identity".to_string(),
+            Json::Num(census.max_live as f64 / identity_lanes.max(1) as f64),
+        );
+        o.insert("completed".to_string(), Json::Num(m.completed as f64));
+        o.insert("tokens_per_s".to_string(), Json::Num(m.tokens_per_s()));
+        o.insert("kv_peak_bytes".to_string(), Json::Num(m.kv_peak_bytes as f64));
+        o.insert("kv_freed_bytes".to_string(), Json::Num(m.kv_freed_bytes as f64));
+        rows.push(Json::Obj(o));
+    }
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("rank".to_string(), Json::Num(RANK as f64));
+    o.insert("requests".to_string(), Json::Num(SLOTS as f64));
+    o.insert("memory_budget_bytes".to_string(), Json::Num(budget as f64));
+    o.insert("codecs".to_string(), Json::Arr(rows));
+    Ok(Json::Obj(o))
+}
+
+/// Accuracy-vs-layer-budget: the same greedy trace served through the
+/// factored codec at progressively tighter DepthKV-style per-layer
+/// budgets on a 2-layer stub, scored as mean longest-common-prefix
+/// agreement against the identity baseline.  Full budgets are a pure
+/// copy, so that profile must agree exactly (1.0); tighter budgets trade
+/// agreement for the lane headroom `kv_codec` measures.
+fn bench_layer_budgets() -> Result<Json> {
+    const RANK: usize = 8;
+    const PROMPT: usize = 8;
+    let spec = StubSpec {
+        n_layers: 2,
+        n_heads: 2,
+        rank: RANK,
+        vocab: 16,
+        max_positions: 128,
+        batch_slots: BATCH_SLOTS,
+        ..Default::default()
+    };
+    let mk = |now: Instant| -> Vec<Request> {
+        (0..BATCH_SLOTS as u64)
+            .map(|id| {
+                Request::greedy(
+                    id,
+                    (0..PROMPT as i32).map(|p| (3 + p * 5 + id as i32) % 16).collect(),
+                    24,
+                    now,
+                )
+            })
+            .collect()
+    };
+    let now = Instant::now();
+    let identity = Engine::new_stub(spec.clone());
+    let (baseline, _) = identity.serve_all(mk(now), policy())?;
+
+    let profiles = [vec![8, 8], vec![4, 8], vec![4, 4], vec![2, 4], vec![2, 2]];
+    let mut rows = Vec::new();
+    for budgets in profiles {
+        let engine = Engine::new_stub(spec.clone())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(budgets.clone()) })?;
+        let bytes_per_token = engine.kv_bytes_per_token_total();
+        let (completions, m) = engine.serve_all(mk(now), policy())?;
+        // Mean fraction of each request's generated row that matches the
+        // identity trace from the front (prompt excluded — it is the
+        // input, not a prediction).
+        let mut agreement = 0.0;
+        for (a, b) in completions.iter().zip(&baseline) {
+            let (ga, gb) = (&a.tokens[PROMPT..], &b.tokens[PROMPT..]);
+            let lcp = ga.iter().zip(gb).take_while(|(x, y)| x == y).count();
+            agreement += lcp as f64 / gb.len().max(1) as f64;
+        }
+        let agreement = agreement / baseline.len().max(1) as f64;
+        println!(
+            "layer budgets {budgets:?}: prefix agreement {agreement:5.3} vs identity \
+             | {bytes_per_token:>3} B/token | {} completed",
+            m.completed,
+        );
+        let mut o = BTreeMap::new();
+        o.insert(
+            "budgets".to_string(),
+            Json::Arr(budgets.iter().map(|&r| Json::Num(r as f64)).collect()),
+        );
+        o.insert("bytes_per_token".to_string(), Json::Num(bytes_per_token as f64));
+        o.insert("mean_prefix_agreement".to_string(), Json::Num(agreement));
+        o.insert("completed".to_string(), Json::Num(m.completed as f64));
+        rows.push(Json::Obj(o));
+    }
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("rank".to_string(), Json::Num(RANK as f64));
+    o.insert("n_layers".to_string(), Json::Num(2.0));
+    o.insert("requests".to_string(), Json::Num(BATCH_SLOTS as f64));
+    o.insert("max_new".to_string(), Json::Num(24.0));
+    o.insert("profiles".to_string(), Json::Arr(rows));
+    Ok(Json::Obj(o))
+}
+
 /// End-to-end engines over the compiled artifacts (wave vs continuous,
 /// dense vs pruned ranks).  Returns the per-engine records.
 fn bench_pjrt_engines(rt: &Runtime) -> Result<Vec<Json>> {
@@ -321,7 +525,14 @@ fn main() -> Result<()> {
 
     // KV allocator churn — slab-granular advances.
     {
-        let cfg = KvConfig { n_layers: 4, n_heads: 8, rank: 16, max_positions: 128, batch_slots: 8 };
+        let cfg = KvConfig {
+            n_layers: 4,
+            n_heads: 8,
+            rank: 16,
+            max_positions: 128,
+            batch_slots: 8,
+            codec: KvCodecSpec::Identity,
+        };
         let mut kv = KvManager::new(cfg);
         let n = 100_000;
         let t0 = Instant::now();
@@ -345,6 +556,12 @@ fn main() -> Result<()> {
 
     // Self-speculative decoding: stub pair, runs everywhere.
     root.insert("speculative".to_string(), bench_speculative()?);
+
+    // Page codecs: lanes at fixed KV memory, stub-backed, runs everywhere.
+    root.insert("kv_codec".to_string(), bench_kv_codecs()?);
+
+    // Per-layer rank budgets: greedy agreement vs the identity baseline.
+    root.insert("layer_budgets".to_string(), bench_layer_budgets()?);
 
     // End-to-end engines need the compiled artifacts + live PJRT.
     match Runtime::new("artifacts") {

@@ -11,6 +11,8 @@
 //! clover spectra   [--all-layers]           # Fig 2 curves
 //! clover serve     --ckpt x.clvr [--requests N] [--temperature T] [--top-k K] [--stop-token ID]
 //!                  [--prefill-chunk K] [--prompt-len N] [--max-step-tokens N]
+//!                  [--kv-codec identity|factored] [--kv-layer-budgets r0,r1,...]
+//!                  [--kv-memory-budget BYTES]
 //!                  [--speculative] [--draft-rank R] [--draft-len K]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //! clover golden    [--preset tiny]          # replay golden fixtures
@@ -25,7 +27,7 @@ use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
 use clover::model::{load_params, save_params, Checkpoint, Manifest};
 use clover::runtime::{golden, Runtime};
-use clover::serve::{BatchPolicy, Engine, Request, SamplingParams, SpecConfig};
+use clover::serve::{BatchPolicy, Engine, KvCodecSpec, Request, SamplingParams, SpecConfig};
 use clover::server::{DraftSource, EngineSpec, Gateway, GatewayConfig, StreamEvent, TryNext};
 use clover::util::human_bytes;
 
@@ -238,6 +240,29 @@ fn max_step_tokens_flag(args: &Args) -> Result<Option<usize>> {
         .transpose()
 }
 
+/// Parse `--kv-codec identity|factored` plus the optional
+/// `--kv-layer-budgets r0,r1,...` per-layer rank list (factored only;
+/// validated against the model geometry at engine construction).
+fn kv_codec_flags(args: &Args) -> Result<KvCodecSpec> {
+    let budgets = args
+        .get("kv-layer-budgets")
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().parse::<usize>().with_context(|| format!("--kv-layer-budgets {v}")))
+                .collect::<Result<Vec<usize>>>()
+        })
+        .transpose()?;
+    KvCodecSpec::parse(args.get("kv-codec").unwrap_or("identity"), budgets)
+}
+
+/// Parse `--kv-memory-budget BYTES` — the KV admission budget (factored
+/// pages fit proportionally more concurrent lanes inside it).
+fn kv_memory_budget_flag(args: &Args) -> Result<Option<usize>> {
+    args.get("kv-memory-budget")
+        .map(|v| v.parse::<usize>().with_context(|| format!("--kv-memory-budget {v}")))
+        .transpose()
+}
+
 /// Parse the speculative-decode flags: `--speculative` turns the
 /// draft+verify pair on, `--draft-rank R` picks the draft's CLOVER rank
 /// (default 4), `--draft-len K` the per-round draft length (default 4).
@@ -263,9 +288,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let ck = Checkpoint::load(ckpt_path)?;
     let batch = cfg.serve.max_batch.min(8);
     let (params, program) = clover::model::decode_params_for_checkpoint(&ck, &entry, batch)?;
+    let kv_codec = kv_codec_flags(args)?;
     let mut engine = Engine::new(&rt, &cfg.model.preset, &program, params)?
         .with_prefill_chunk(prefill_chunk_flag(args)?)
-        .with_max_step_tokens(max_step_tokens_flag(args)?);
+        .with_max_step_tokens(max_step_tokens_flag(args)?)
+        .with_kv_codec(kv_codec.clone())?
+        .with_kv_memory_budget(kv_memory_budget_flag(args)?);
     let speculative = speculative_flags(args)?;
     if let Some((draft_rank, spec_cfg)) = &speculative {
         // Self-speculative pair: the draft is the checkpoint's own dense
@@ -288,6 +316,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("speculative pair: draft r={r}, verify dense (draft_len {})", spec_cfg.draft_len);
     }
     println!("step ladder: {:?} (cap with --prefill-chunk)", engine.widths());
+    println!(
+        "kv codec: {} | {} B/token (stored ranks {:?})",
+        kv_codec.name(),
+        engine.kv_bytes_per_token_total(),
+        engine.kv_config().stored_ranks(),
+    );
     let now = std::time::Instant::now();
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
     let vocab = entry.dim("vocab")?;
@@ -314,7 +348,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (completions, metrics) = engine.serve_all(reqs, policy)?;
     println!(
-        "served {} requests | {} generated tokens | {:.1} tok/s | {} fused steps ({} slab tokens) | {} admissions | peak KV {}",
+        "served {} requests | {} generated tokens | {:.1} tok/s | {} fused steps ({} slab tokens) | {} admissions | peak KV {} | freed KV {}",
         metrics.completed,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
@@ -322,6 +356,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.slab_tokens,
         metrics.admissions,
         human_bytes(metrics.kv_peak_bytes),
+        human_bytes(metrics.kv_freed_bytes),
     );
     let prefill_steps: usize = completions.iter().map(|c| c.prefill_steps).sum();
     println!(
@@ -381,10 +416,12 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     let batch = cfg.serve.max_batch.min(8);
     let queue_capacity = args.usize_or("queue", 64)?;
     let speculative = speculative_flags(args)?;
+    let kv_codec = kv_codec_flags(args)?;
     let mut spec =
         EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
             .with_prefill_chunk(prefill_chunk_flag(args)?)
-            .with_max_step_tokens(max_step_tokens_flag(args)?);
+            .with_max_step_tokens(max_step_tokens_flag(args)?)
+            .with_kv_codec(kv_codec.clone());
     if let Some((draft_rank, spec_cfg)) = &speculative {
         let draft = DraftSource::PrunedRank { rank: *draft_rank };
         spec = spec.with_speculative(draft, spec_cfg.clone());
@@ -401,12 +438,13 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         spec,
     )?;
     println!(
-        "gateway up: rank {}{} | {} B KV/token | queue {queue_capacity}",
+        "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}",
         gateway.rank(),
         gateway
             .draft_rank()
             .map(|r| format!(" (+draft r={r})"))
             .unwrap_or_default(),
+        kv_codec.name(),
         gateway.kv_bytes_per_token(),
     );
 
@@ -497,13 +535,14 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
 
     let metrics = gateway.join()?;
     println!(
-        "served {} done + {} cancelled | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {}",
+        "served {} done + {} cancelled | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
         done,
         cancelled,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
         metrics.decode_steps,
         human_bytes(metrics.kv_peak_bytes),
+        human_bytes(metrics.kv_freed_bytes),
     );
     if speculative.is_some() {
         println!(

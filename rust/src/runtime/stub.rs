@@ -1,5 +1,5 @@
 //! Host-side stub decode backend: a deterministic toy "model" with real
-//! KV-cache tensors, so the serving stack's *scheduling* logic — slab
+//! KV-cache storage, so the serving stack's *scheduling* logic — slab
 //! planning, mixed prefill/decode steps, lane zeroing, cancellation,
 //! admission — runs and is testable without a live PJRT backend.
 //!
@@ -7,7 +7,7 @@
 //! error, which used to mean every engine/gateway test skipped on CI.
 //! [`StubModel`] fills that gap: it implements the same step contract as
 //! the compiled decode/prefill artifacts ([`crate::runtime::DecodeSession`]
-//! `run_plan`), over caches of the same `[L, B, H, C, r]` shape, with two
+//! `run_plan`), over a cache logically shaped `[L, B, H, C, r]`, with
 //! properties the tests lean on:
 //!
 //! * **Slab invariance.**  A cache write depends only on
@@ -32,6 +32,19 @@
 //!   That makes self-speculative decoding testable: acceptance rates are
 //!   nontrivial, reproducible, and rank-parameterized.
 //!
+//! ## Paged, codec-compressed storage
+//!
+//! The cache is not a dense tensor: it lives in a
+//! [`crate::serve::PagedKvStore`], page blocks of `PAGE_TOKENS` positions
+//! allocated lazily and passed through a [`crate::serve::PageCodec`] on
+//! every write/read.  Under the identity codec this is bit-identical to
+//! the dense layout (property-tested against an in-test dense oracle);
+//! under the factored codec the store really holds `budget[l]`-rank
+//! vectors — and because the stub's readout weights are rank-independent
+//! with a geometric spectrum, a factored stub at budget b is *bit-equal*
+//! to a rank-b stub with the same seed.  Compression is therefore
+//! exercised in storage and observable in logits, not just counted.
+//!
 //! Slab steps return logits at **every** slab position (`[B, W, V]` for
 //! width W > 1), mirroring the compiled `prefill_k{K}` artifacts — which
 //! is what lets one fused step *verify* a K-token speculative draft.
@@ -45,6 +58,7 @@
 use anyhow::{bail, Result};
 use std::time::Duration;
 
+use crate::serve::kv::{KvCodecSpec, PagedKvStore, PAGE_TOKENS};
 use crate::tensor::Tensor;
 
 /// Shape + behaviour of a stub engine — the stub analogue of picking a
@@ -133,36 +147,68 @@ fn h01(x: u64) -> f32 {
     ((x >> 40) as f32) / (1u64 << 24) as f32 - 0.5
 }
 
-/// Flat index into a `[L, B, H, C, r]` cache under `s`'s dims — the one
-/// layout formula, shared by the write and read paths so they can never
-/// silently diverge.
+/// Flat index into a dense `[L, B, H, C, r]` view under `s`'s dims — used
+/// by the cache materializer ([`StubModel::caches`]) and the tests' dense
+/// oracle, so the paged store and the dense reference share one layout
+/// formula.
 fn flat_idx(s: &StubSpec, l: usize, lane: usize, h: usize, c: usize, k: usize) -> usize {
     (((l * s.batch_slots + lane) * s.n_heads + h) * s.max_positions + c) * s.rank + k
 }
 
-/// The stub backend: two `[L, B, H, C, r]` caches plus deterministic
-/// write/readout rules.  See the module docs for the invariants.
+/// The cache write value at one `(cache, layer, head, rank, pos, token)`
+/// coordinate — a pure function shared by the paged write path and the
+/// tests' dense oracle.
+fn write_value(seed: u64, salt: usize, l: usize, h: usize, k: usize, pos: usize, token: i32) -> f32 {
+    h01(mix(&[
+        seed,
+        salt as u64,
+        l as u64,
+        h as u64,
+        k as u64,
+        pos as u64,
+        token as u64,
+    ]))
+}
+
+/// The stub backend: K + VO factor caches held in a [`PagedKvStore`]
+/// behind a page codec, plus deterministic write/readout rules.  See the
+/// module docs for the invariants.
 pub struct StubModel {
     spec: StubSpec,
-    /// `[k_cache, vo_cache]`, same shapes the artifacts carry.
-    caches: Vec<Tensor>,
+    store: PagedKvStore,
 }
 
 impl StubModel {
+    /// Identity-codec stub — bit-identical to the historical dense-tensor
+    /// backend.
     pub fn new(spec: StubSpec) -> Self {
-        let shape = [
+        Self::with_codec(spec, KvCodecSpec::Identity).expect("identity codec is always valid")
+    }
+
+    /// Stub whose cache pages are stored through `codec` — the engine
+    /// threads its `KvConfig` codec here so `--kv-codec factored` is
+    /// exercised in storage, not just in byte accounting.  Errors when
+    /// the codec's layer budgets don't match the spec's geometry.
+    pub fn with_codec(spec: StubSpec, codec: KvCodecSpec) -> Result<Self> {
+        let codec = codec.build(spec.n_layers, spec.rank)?;
+        let store = PagedKvStore::new(
+            2,
             spec.n_layers,
-            spec.batch_slots,
             spec.n_heads,
             spec.max_positions,
-            spec.rank,
-        ];
-        let caches = vec![Tensor::zeros(&shape), Tensor::zeros(&shape)];
-        Self { spec, caches }
+            spec.batch_slots,
+            codec,
+        );
+        Ok(Self { spec, store })
     }
 
     pub fn spec(&self) -> &StubSpec {
         &self.spec
+    }
+
+    /// The page store (tests and byte-accounting assertions).
+    pub fn store(&self) -> &PagedKvStore {
+        &self.store
     }
 
     /// Write one `(token, position)` pair into `lane`'s cache rows.  The
@@ -170,23 +216,15 @@ impl StubModel {
     /// the same pair (the pad-by-repeat convention for short slabs) is a
     /// no-op — exactly the idempotence contract of the slab artifacts.
     fn write(&mut self, lane: usize, pos: usize, token: i32) {
-        let spec = &self.spec;
-        for (salt, cache) in self.caches.iter_mut().enumerate() {
-            let data = cache.data_mut();
+        let Self { spec, store } = self;
+        let mut coeffs = vec![0.0f32; spec.rank];
+        for salt in 0..2 {
             for l in 0..spec.n_layers {
                 for h in 0..spec.n_heads {
-                    for k in 0..spec.rank {
-                        let v = h01(mix(&[
-                            spec.seed,
-                            salt as u64,
-                            l as u64,
-                            h as u64,
-                            k as u64,
-                            pos as u64,
-                            token as u64,
-                        ]));
-                        data[flat_idx(spec, l, lane, h, pos, k)] = v;
+                    for (k, c) in coeffs.iter_mut().enumerate() {
+                        *c = write_value(spec.seed, salt, l, h, k, pos, token);
                     }
+                    store.write_vec(salt, l, lane, h, pos, &coeffs);
                 }
             }
         }
@@ -196,23 +234,27 @@ impl StubModel {
     /// iteration order (bit-identical however the prefix was written).
     /// Rank component k contributes at weight [`RANK_DECAY`]`^k`, so the
     /// logits of a rank-r stub are a spectrum truncation of any
-    /// higher-rank stub with the same seed (see the module docs).
+    /// higher-rank stub with the same seed — and a codec that truncates
+    /// stored vectors to budget b reproduces the rank-b stub exactly,
+    /// because decoded-absent components read 0.0 and are skipped like
+    /// unwritten rows (see the module docs).
     fn logits_into(&self, lane: usize, pos: usize, out: &mut [f32]) {
         let s = &self.spec;
         out.fill(0.0);
-        for (salt, cache) in (0u64..).zip(self.caches.iter()) {
+        let mut coeffs = vec![0.0f32; s.rank];
+        for salt in 0..2usize {
             for l in 0..s.n_layers {
                 for h in 0..s.n_heads {
                     for c in 0..=pos {
-                        for k in 0..s.rank {
-                            let e = cache.data()[flat_idx(s, l, lane, h, c, k)];
+                        self.store.read_vec(salt, l, lane, h, c, &mut coeffs);
+                        for (k, &e) in coeffs.iter().enumerate() {
                             if e == 0.0 {
                                 continue;
                             }
                             let decay = RANK_DECAY.powi(k as i32);
                             let w = mix(&[
                                 s.seed ^ 0xABCD,
-                                salt,
+                                salt as u64,
                                 l as u64,
                                 h as u64,
                                 c as u64,
@@ -241,7 +283,6 @@ impl StubModel {
     /// all-position output a speculative verify step reads a whole draft
     /// from.
     pub fn step(&mut self, width: usize, toks: &[i32], poss: &[i32]) -> Result<Tensor> {
-        // Scalar dims copied out so `self.write` below can borrow mutably.
         let (b, vocab, cmax) = (self.spec.batch_slots, self.spec.vocab, self.spec.max_positions);
         let delay = self.spec.step_delay + self.spec.width_delay * width as u32;
         if !self.spec.widths().contains(&width) {
@@ -279,31 +320,56 @@ impl StubModel {
         Ok(Tensor::new(shape, logits))
     }
 
-    /// Zero the given batch lanes of both caches — the stub analogue of
-    /// the literal-side lane zeroing on slot churn.
+    /// Zero the given batch lanes — the stub analogue of the literal-side
+    /// lane zeroing on slot churn.  Page-store semantics: the lane's pages
+    /// are dropped outright, reclaiming their encoded bytes.
     pub fn zero_lanes(&mut self, lanes: &[usize]) {
-        let s = &self.spec;
-        let inner = s.n_heads * s.max_positions * s.rank;
-        for cache in &mut self.caches {
-            let data = cache.data_mut();
-            for l in 0..s.n_layers {
-                for &lane in lanes {
-                    let start = (l * s.batch_slots + lane) * inner;
-                    data[start..start + inner].fill(0.0);
-                }
-            }
+        for &lane in lanes {
+            self.store.zero_lane(lane);
         }
     }
 
-    /// Host view of the caches (tests only).
-    pub fn caches(&self) -> &[Tensor] {
-        &self.caches
+    /// Dense `[L, B, H, C, r]` host view of both caches, materialized by
+    /// decoding every page (tests only — storage itself stays paged and
+    /// encoded).
+    pub fn caches(&self) -> Vec<Tensor> {
+        let s = &self.spec;
+        let shape = [s.n_layers, s.batch_slots, s.n_heads, s.max_positions, s.rank];
+        let pages_per_lane = s.max_positions.div_ceil(PAGE_TOKENS);
+        let mut block = vec![0.0f32; s.n_heads * PAGE_TOKENS * s.rank];
+        (0..2)
+            .map(|cache| {
+                let mut t = Tensor::zeros(&shape);
+                let data = t.data_mut();
+                for l in 0..s.n_layers {
+                    for lane in 0..s.batch_slots {
+                        for page in 0..pages_per_lane {
+                            self.store.decode_page(cache, l, lane, page, &mut block);
+                            for h in 0..s.n_heads {
+                                for off in 0..PAGE_TOKENS {
+                                    let pos = page * PAGE_TOKENS + off;
+                                    if pos >= s.max_positions {
+                                        break;
+                                    }
+                                    let src = (h * PAGE_TOKENS + off) * s.rank;
+                                    let dst = flat_idx(s, l, lane, h, pos, 0);
+                                    data[dst..dst + s.rank]
+                                        .copy_from_slice(&block[src..src + s.rank]);
+                                }
+                            }
+                        }
+                    }
+                }
+                t
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::prop;
 
     fn spec() -> StubSpec {
         StubSpec { batch_slots: 2, vocab: 16, max_positions: 32, ..Default::default() }
@@ -347,6 +413,217 @@ mod tests {
         }
         assert_eq!(a.caches()[0].data(), b.caches()[0].data());
         assert_eq!(a.caches()[1].data(), b.caches()[1].data());
+    }
+
+    /// The pre-codec backend, verbatim: dense `[L, B, H, C, r]` vectors
+    /// written and read with the same value/weight formulas.  The paged
+    /// identity-codec store must be bit-identical to this at every logit
+    /// and every materialized cache element.
+    struct DenseOracle {
+        spec: StubSpec,
+        caches: [Vec<f32>; 2],
+    }
+
+    impl DenseOracle {
+        fn new(spec: StubSpec) -> Self {
+            let n = spec.n_layers * spec.batch_slots * spec.n_heads * spec.max_positions
+                * spec.rank;
+            Self { caches: [vec![0.0; n], vec![0.0; n]], spec }
+        }
+
+        fn write(&mut self, lane: usize, pos: usize, token: i32) {
+            let spec = &self.spec;
+            for (salt, cache) in self.caches.iter_mut().enumerate() {
+                for l in 0..spec.n_layers {
+                    for h in 0..spec.n_heads {
+                        for k in 0..spec.rank {
+                            cache[flat_idx(spec, l, lane, h, pos, k)] =
+                                write_value(spec.seed, salt, l, h, k, pos, token);
+                        }
+                    }
+                }
+            }
+        }
+
+        fn logits(&self, lane: usize, pos: usize) -> Vec<f32> {
+            let s = &self.spec;
+            let mut out = vec![0.0f32; s.vocab];
+            for (salt, cache) in (0u64..).zip(self.caches.iter()) {
+                for l in 0..s.n_layers {
+                    for h in 0..s.n_heads {
+                        for c in 0..=pos {
+                            for k in 0..s.rank {
+                                let e = cache[flat_idx(s, l, lane, h, c, k)];
+                                if e == 0.0 {
+                                    continue;
+                                }
+                                let decay = RANK_DECAY.powi(k as i32);
+                                let w = mix(&[
+                                    s.seed ^ 0xABCD,
+                                    salt,
+                                    l as u64,
+                                    h as u64,
+                                    c as u64,
+                                    k as u64,
+                                ]);
+                                for (v, o) in out.iter_mut().enumerate() {
+                                    *o += e
+                                        * decay
+                                        * h01(splitmix(
+                                            w ^ (v as u64).wrapping_mul(0x100_0193),
+                                        ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn paged_identity_matches_dense_oracle_property() {
+        // The tentpole's bit-identity bar at the storage layer: random
+        // mixes of slab widths, pad-by-repeat rewrites, and lane zeroing
+        // against the dense pre-codec implementation — every logit and
+        // every cache element must match to the bit.
+        prop("paged identity vs dense oracle", 8, |rng| {
+            let sp = StubSpec {
+                batch_slots: 2,
+                vocab: 8,
+                max_positions: 64,
+                chunk_widths: vec![1, 4],
+                seed: rng.below(1000) as u64,
+                ..Default::default()
+            };
+            let mut paged = StubModel::new(sp.clone());
+            let mut oracle = DenseOracle::new(sp.clone());
+            let mut pos = [0usize; 2];
+            for _ in 0..10 {
+                let width = if rng.uniform() < 0.5 { 1 } else { 4 };
+                if pos.iter().any(|&p| p + width > sp.max_positions) {
+                    break;
+                }
+                // Tokens are a fixed function of position, so the
+                // pad-by-repeat path below rewrites an identical
+                // (token, pos) pair — the engine's idempotence convention.
+                let tok_at = |p: usize| (p % sp.vocab) as i32;
+                let (mut toks, mut poss) = (Vec::new(), Vec::new());
+                for lane in 0..2 {
+                    // Lane 1 sometimes pads-by-repeat instead of advancing
+                    // — the idempotent-rewrite path the engine exercises.
+                    let repeat = lane == 1 && rng.uniform() < 0.4 && pos[lane] > 0;
+                    for j in 0..width {
+                        let p = if repeat { pos[lane] - 1 } else { pos[lane] + j };
+                        toks.push(tok_at(p));
+                        poss.push(p as i32);
+                    }
+                    if !repeat {
+                        pos[lane] += width;
+                    }
+                }
+                for lane in 0..2 {
+                    for j in 0..width {
+                        oracle.write(lane, poss[lane * width + j] as usize, toks[lane * width + j]);
+                    }
+                }
+                let lg = paged.step(width, &toks, &poss).map_err(|e| e.to_string())?;
+                for lane in 0..2 {
+                    for j in 0..width {
+                        let at = (lane * width + j) * sp.vocab;
+                        let got = &lg.data()[at..at + sp.vocab];
+                        let want = oracle.logits(lane, poss[lane * width + j] as usize);
+                        if got.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                            return Err(format!("lane {lane} slab {j}: logits diverge"));
+                        }
+                    }
+                }
+                if rng.uniform() < 0.2 {
+                    let lane = rng.below(2);
+                    paged.zero_lanes(&[lane]);
+                    let s = &oracle.spec;
+                    let inner = s.n_heads * s.max_positions * s.rank;
+                    for cache in oracle.caches.iter_mut() {
+                        for l in 0..s.n_layers {
+                            let start = (l * s.batch_slots + lane) * inner;
+                            cache[start..start + inner].fill(0.0);
+                        }
+                    }
+                    pos[lane] = 0;
+                }
+            }
+            for (cache, want) in paged.caches().iter().zip(oracle.caches.iter()) {
+                if cache.data().iter().zip(want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err("materialized caches diverge from the dense oracle".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn factored_codec_equals_pruned_rank_stub() {
+        // The factored codec stores pages at the pruned rank, and because
+        // the stub's write values and readout weights are pure functions
+        // of k, a budget-b store on a rank-8 model is *bit-equal* to a
+        // rank-b model with the same seed — CLOVER truncation applied at
+        // rest equals CLOVER truncation applied to the model.
+        let mk = |rank| StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank,
+            vocab: 16,
+            max_positions: 64,
+            batch_slots: 1,
+            ..Default::default()
+        };
+        let mut fact = StubModel::with_codec(
+            mk(8),
+            KvCodecSpec::Factored { layer_budgets: Some(vec![3]) },
+        )
+        .unwrap();
+        let mut small = StubModel::new(mk(3));
+        let mut tok = 3i32;
+        for pos in 0..40 {
+            let lf = fact.step(1, &[tok], &[pos]).unwrap();
+            let ls = small.step(1, &[tok], &[pos]).unwrap();
+            let same = lf
+                .data()
+                .iter()
+                .zip(ls.data())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "position {pos}: factored(3) logits != rank-3 logits");
+            tok = crate::util::argmax(ls.data()) as i32;
+        }
+        // And the factored store holds 3/8 the floats of an identity one.
+        let mut dense = StubModel::new(mk(8));
+        let mut tok2 = 3i32;
+        for pos in 0..40 {
+            let l = dense.step(1, &[tok2], &[pos]).unwrap();
+            tok2 = crate::util::argmax(l.data()) as i32;
+        }
+        assert_eq!(fact.store().stored_bytes() * 8, dense.store().stored_bytes() * 3);
+    }
+
+    #[test]
+    fn with_codec_validates_budgets_against_spec() {
+        let s = spec(); // n_layers 2, rank 4
+        assert!(StubModel::with_codec(
+            s.clone(),
+            KvCodecSpec::Factored { layer_budgets: Some(vec![2, 2]) }
+        )
+        .is_ok());
+        assert!(StubModel::with_codec(
+            s.clone(),
+            KvCodecSpec::Factored { layer_budgets: Some(vec![2]) }
+        )
+        .is_err());
+        assert!(StubModel::with_codec(
+            s,
+            KvCodecSpec::Factored { layer_budgets: Some(vec![2, 5]) }
+        )
+        .is_err());
     }
 
     #[test]

@@ -81,6 +81,14 @@ impl Batcher {
         now.duration_since(self.queue[0].arrived) >= self.policy.max_wait
     }
 
+    /// The head-of-line request, without admitting it.  The engine's KV
+    /// memory budget sizes the head's worst-case footprint before popping;
+    /// when it doesn't fit, admission stops for the round (strict FIFO —
+    /// no smaller request skips ahead, so a big prompt cannot starve).
+    pub fn peek(&self) -> Option<&Request> {
+        self.queue.front()
+    }
+
     /// Slot-level admission: pop the head request iff the admission rule
     /// says it should run *now*.  The engine calls this once per free KV
     /// lane between decode steps.

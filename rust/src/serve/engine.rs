@@ -60,7 +60,7 @@ use crate::tensor::{Tensor, Value};
 use crate::util::{argmax, Stopwatch};
 
 use super::batcher::{BatchPolicy, Batcher, Request};
-use super::kv::{KvConfig, KvManager};
+use super::kv::{KvCodecSpec, KvConfig, KvManager, PAGE_TOKENS};
 use super::session::Session;
 
 /// One finished request, with its own latency accounting: every duration
@@ -381,6 +381,11 @@ pub struct ServeMetrics {
     pub generated_tokens: usize,
     pub wall_s: f64,
     pub kv_peak_bytes: usize,
+    /// Cumulative KV bytes released over the serve — retired slots plus
+    /// speculative-rollback page reclaims ([`KvManager::freed_bytes`]).
+    /// With `kv_peak_bytes` this is the cache churn picture: how much KV
+    /// the workload cycled through, not just how much it held at once.
+    pub kv_freed_bytes: usize,
     /// Fused steps executed (each runs all batch lanes, at whatever slab
     /// width the step's plan selected).
     pub decode_steps: usize,
@@ -477,6 +482,11 @@ pub struct Engine<'rt> {
     /// Prefill-aware admission budget: cap on one fused step's summed
     /// slab tokens (see [`StepPlan::build`]).
     max_step_tokens: Option<usize>,
+    /// KV memory budget in bytes for admission: a request is only
+    /// admitted when its worst-case page footprint — at the *codec's*
+    /// compressed page size, target plus draft for a speculative pair —
+    /// fits alongside the live pages (see [`Engine::with_kv_memory_budget`]).
+    kv_memory_budget: Option<usize>,
 }
 
 impl<'rt> Engine<'rt> {
@@ -525,12 +535,14 @@ impl<'rt> Engine<'rt> {
                 rank: r,
                 max_positions: c,
                 batch_slots: b,
+                codec: KvCodecSpec::Identity,
             },
             batch_slots: b,
             vocab,
             widths,
             spec: None,
             max_step_tokens: None,
+            kv_memory_budget: None,
         })
     }
 
@@ -546,6 +558,7 @@ impl<'rt> Engine<'rt> {
             rank: spec.rank,
             max_positions: spec.max_positions,
             batch_slots: spec.batch_slots,
+            codec: KvCodecSpec::Identity,
         };
         let widths = spec.widths();
         Engine {
@@ -556,6 +569,7 @@ impl<'rt> Engine<'rt> {
             backing: Backing::Stub(spec),
             spec: None,
             max_step_tokens: None,
+            kv_memory_budget: None,
         }
     }
 
@@ -580,6 +594,40 @@ impl<'rt> Engine<'rt> {
     /// values are clamped to >= 1.
     pub fn with_max_step_tokens(mut self, cap: Option<usize>) -> Self {
         self.max_step_tokens = cap.map(|c| c.max(1));
+        self
+    }
+
+    /// Store the KV cache through `codec` (`clover serve --kv-codec`,
+    /// `--kv-layer-budgets`).  Per-layer rank budgets are validated here
+    /// against the manifest-derived geometry (`n_layers` layers, budgets
+    /// within `1..=rank`) — the same numbers the decode artifact's cache
+    /// shape pinned at compile time.
+    ///
+    /// The codec governs byte accounting everywhere (admission, the
+    /// router's per-token cost, peak/freed metrics), and on the stub
+    /// backing it also governs *storage*: pages really hold
+    /// `stored_rank(l)` floats ([`crate::runtime::stub::StubModel::with_codec`]).
+    /// On a PJRT backing the device caches stay rank-r — compressed
+    /// residency there lands with the factored at-rest layout in a later
+    /// PR, so for compiled engines this is accounting-only today.
+    pub fn with_kv_codec(mut self, codec: KvCodecSpec) -> Result<Self> {
+        codec.resolve(self.kv_cfg.n_layers, self.kv_cfg.rank)?;
+        self.kv_cfg.codec = codec;
+        Ok(self)
+    }
+
+    /// Cap resident KV memory for admission (`clover serve
+    /// --kv-memory-budget BYTES`): a queued request is only admitted when
+    /// its worst-case footprint — `ceil(min(prompt+max_new, C) /
+    /// PAGE_TOKENS)` pages at the codec's compressed page size, target
+    /// plus draft for a speculative pair — fits next to the live pages.
+    /// Admission is strict FIFO (head-of-line: when the head doesn't fit,
+    /// nothing smaller skips ahead).  This is the lanes-at-fixed-memory
+    /// lever: at a fixed budget, a factored codec admits proportionally
+    /// more concurrent lanes.  `None` (the default) means batch slots are
+    /// the only concurrency cap.
+    pub fn with_kv_memory_budget(mut self, budget: Option<usize>) -> Self {
+        self.kv_memory_budget = budget;
         self
     }
 
@@ -616,6 +664,9 @@ impl<'rt> Engine<'rt> {
             rank: draft.rank,
             max_positions: draft.max_positions,
             batch_slots: draft.batch_slots,
+            // The draft cache already sits at the pruned rank (it *is* the
+            // truncated model) — it stores identity pages.
+            codec: KvCodecSpec::Identity,
         };
         self.spec = Some(Speculative { draft: DraftBacking::Stub(draft), cfg, draft_kv });
         Ok(self)
@@ -708,6 +759,7 @@ impl<'rt> Engine<'rt> {
                 rank: r,
                 max_positions: c,
                 batch_slots: b,
+                codec: KvCodecSpec::Identity,
             };
             (programs, draft_kv)
         };
@@ -843,6 +895,17 @@ impl<'rt> Engine<'rt> {
             batcher.push(r);
         }
         let mut kv = KvManager::new(self.kv_cfg.clone());
+        // Resident bytes per KV page under the configured codec(s): the
+        // target's compressed pages plus, for a draft+verify pair, the
+        // draft's — both caches pin pages for every resident position, so
+        // budget admission accounts both codecs.
+        let resident_page_bytes = self.kv_cfg.bytes_per_page()
+            + self.spec.as_ref().map_or(0, |s| s.draft_kv.bytes_per_page());
+        // Worst-case page reservations per resident request id.  Budget
+        // admission checks reservations, not current live pages: a freshly
+        // admitted session holds zero pages until its first step, and its
+        // claim on the budget must already be visible to the next waiter.
+        let mut kv_reservations: HashMap<u64, usize> = HashMap::new();
         let mut lanes: Vec<Option<Session>> = (0..b).map(|_| None).collect();
         let mut done: HashMap<u64, Completion> = HashMap::new();
         let mut metrics = ServeMetrics::default();
@@ -858,7 +921,11 @@ impl<'rt> Engine<'rt> {
                     params.flat().iter().map(|&t| Value::F32(t.clone())).collect();
                 StepBackend::Pjrt(DecodeSession::new_planned(rt, config, programs, &param_values)?)
             }
-            Backing::Stub(spec) => StepBackend::Stub(StubModel::new(spec.clone())),
+            // The stub holds real host-side page storage through the
+            // engine's codec — compression is exercised, not just counted.
+            Backing::Stub(spec) => {
+                StepBackend::Stub(StubModel::with_codec(spec.clone(), self.kv_cfg.codec.clone())?)
+            }
         };
         // The draft backend for self-speculative decoding: same step
         // contract, one rank down, its own carried cache set.  Every
@@ -914,6 +981,7 @@ impl<'rt> Engine<'rt> {
                 if let Some(lane) = lane {
                     let sess = lanes[lane].take().expect("lane occupied");
                     kv.free(sess.slot())?;
+                    kv_reservations.remove(&c.id);
                     metrics.cancelled += 1;
                     metrics.generated_tokens += sess.generated();
                     hook.on_cancelled(c.id, sess.into_tokens(), c.reason, metrics.decode_steps);
@@ -937,7 +1005,33 @@ impl<'rt> Engine<'rt> {
                     // runs all B lanes whether occupied or not, so holding a
                     // waiter back never helps (max_wait is a wave-admission
                     // knob; slot-level admission ignores it).
+                    //
+                    // Under a KV memory budget, capacity additionally means
+                    // the head request's worst-case page footprint — at the
+                    // codec's compressed page size, target + draft — fits
+                    // next to the live pages.  Head-of-line on purpose: a
+                    // too-big head stops the round, nothing skips it.
+                    if let Some(budget) = self.kv_memory_budget {
+                        let Some(head) = batcher.peek() else { break };
+                        let worst = (head.prompt.len() + head.max_new).min(cwin);
+                        let need = worst.div_ceil(PAGE_TOKENS) * resident_page_bytes;
+                        let reserved: usize = kv_reservations.values().sum();
+                        if reserved * resident_page_bytes + need > budget {
+                            if live == 0 {
+                                bail!(
+                                    "request {} needs {need} KV bytes worst-case — over \
+                                     the {budget}-byte budget even on an empty cache",
+                                    head.id
+                                );
+                            }
+                            break;
+                        }
+                    }
                     let Some(req) = batcher.pop_admissible(now, true) else { break };
+                    kv_reservations.insert(
+                        req.id,
+                        (req.prompt.len() + req.max_new).min(cwin).div_ceil(PAGE_TOKENS),
+                    );
                     let slot = kv.allocate(req.id)?;
                     // Per-request speculative opt-in: greedy + flagged +
                     // an engine that carries a draft model.  Non-greedy
@@ -955,6 +1049,7 @@ impl<'rt> Engine<'rt> {
                         // Nothing to decode (max_new == 0 or the prompt
                         // already fills the window): complete immediately.
                         kv.free(slot)?;
+                        kv_reservations.remove(&sess.id());
                         metrics.completed += 1;
                         let c = sess.finish(now, metrics.decode_steps);
                         lat.push(c.latency_s);
@@ -1110,6 +1205,7 @@ impl<'rt> Engine<'rt> {
                 if finished {
                     let sess = lanes[lane].take().expect("lane occupied");
                     kv.free(sess.slot())?;
+                    kv_reservations.remove(&id);
                     metrics.completed += 1;
                     metrics.generated_tokens += sess.generated();
                     let c = sess.finish(now, metrics.decode_steps);
@@ -1143,6 +1239,7 @@ impl<'rt> Engine<'rt> {
 
         metrics.wall_s = sw.elapsed_s();
         metrics.kv_peak_bytes = kv.peak_bytes();
+        metrics.kv_freed_bytes = kv.freed_bytes();
         metrics.observe_latencies(lat, ttfts);
         let out: Vec<Completion> = if open {
             Vec::new()
@@ -2226,5 +2323,172 @@ mod tests {
         let d = dense_engine.kv_config().bytes_per_token();
         let f = fac_engine.kv_config().bytes_per_token();
         assert_eq!(f * 2, d, "rank-8 cache should be half of rank-16");
+    }
+
+    // ---- KV page codecs + memory-budget admission (stub-backed) ----
+
+    /// A rank-8 spec so factored budgets have room to bite.
+    fn codec_spec() -> StubSpec {
+        StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            ..Default::default()
+        }
+    }
+
+    fn codec_reqs(n: u64) -> Vec<Request> {
+        let now = Instant::now();
+        (0..n)
+            .map(|id| {
+                let prompt: Vec<i32> = (0..8).map(|p| ((id as usize + p) % 16) as i32).collect();
+                Request::greedy(id, prompt, 8, now)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn kv_codec_validation_against_manifest_geometry() {
+        // Budgets must match the layer count…
+        let err = Engine::new_stub(codec_spec())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4, 4]) })
+            .err()
+            .expect("2 budgets on a 1-layer model must be refused");
+        assert!(err.to_string().contains("1-layer"), "{err:#}");
+        // …and each sit in 1..=rank.
+        for bad in [0usize, 9] {
+            let err = Engine::new_stub(codec_spec())
+                .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![bad]) })
+                .err()
+                .expect("out-of-range budget must be refused");
+            assert!(err.to_string().contains("budget"), "{err:#}");
+        }
+        // Spec parsing guards the CLI surface: identity takes no budgets,
+        // unknown codec names are refused.
+        assert!(KvCodecSpec::parse("identity", Some(vec![4])).is_err());
+        assert!(KvCodecSpec::parse("clover", None).is_err());
+        // A half-rank budget halves the advertised per-token bytes.
+        let identity = Engine::new_stub(codec_spec());
+        let factored = Engine::new_stub(codec_spec())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4]) })
+            .unwrap();
+        assert_eq!(
+            factored.kv_bytes_per_token_total() * 2,
+            identity.kv_bytes_per_token_total(),
+            "budget 4 of rank 8 must halve KV bytes"
+        );
+    }
+
+    #[test]
+    fn factored_full_budget_serves_bit_identical_to_identity() {
+        // Budgets == rank make the factored codec a round-trip copy: the
+        // whole serve — admission, chunked prefill, lane churn — must be
+        // bit-identical to the identity codec.  A half budget is a real
+        // truncation: the schedule still completes every request even
+        // though the stored basis is pruned.
+        let reqs = codec_reqs(12);
+        let identity = Engine::new_stub(codec_spec());
+        let (ic, im) = identity.serve_all(reqs.clone(), policy()).unwrap();
+        let full = Engine::new_stub(codec_spec())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![8]) })
+            .unwrap();
+        let (fc, fm) = full.serve_all(reqs.clone(), policy()).unwrap();
+        assert_eq!(ic.len(), fc.len());
+        for (a, b) in ic.iter().zip(&fc) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+        }
+        assert_eq!(im.decode_steps, fm.decode_steps);
+        let half = Engine::new_stub(codec_spec())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4]) })
+            .unwrap();
+        let (hc, hm) = half.serve_all(reqs, policy()).unwrap();
+        assert_eq!(hc.len(), 12, "pruned storage still completes every request");
+        assert_eq!(hm.completed, 12);
+        for c in &hc {
+            assert_eq!(c.tokens.len(), 16, "prompt 8 + max_new 8");
+        }
+    }
+
+    /// Counts concurrently-live lanes over a serve — the budget's cap on
+    /// admission shows up as the high-water mark of this census.
+    #[derive(Default)]
+    struct LaneCensusHook {
+        live: usize,
+        max_live: usize,
+    }
+
+    impl StepHook for LaneCensusHook {
+        fn on_started(&mut self, _id: u64, _lane: usize, _step: usize) {
+            self.live += 1;
+            self.max_live = self.max_live.max(self.live);
+        }
+
+        fn on_done(&mut self, _completion: &Completion) {
+            self.live -= 1;
+        }
+
+        fn on_cancelled(&mut self, _id: u64, _t: Vec<i32>, _r: CancelReason, _s: usize) {
+            self.live -= 1;
+        }
+    }
+
+    #[test]
+    fn kv_memory_budget_caps_lanes_and_factored_codec_doubles_them() {
+        // Every request worst-cases at 16 tokens = exactly one page.
+        // Identity: 2 heads x 4 bytes x rank 8 x 16 tokens = 2048 bytes
+        // per page, so a 4096-byte budget holds 2 lanes.  The factored
+        // codec at budget 4 halves the page to 1024 bytes: same byte
+        // budget, 4 lanes — the lanes-at-fixed-memory claim, observed on
+        // a real schedule rather than computed from the config.
+        let budget = 2 * 2048;
+        let census = |codec: Option<KvCodecSpec>| {
+            let mut engine = Engine::new_stub(codec_spec());
+            if let Some(c) = codec {
+                engine = engine.with_kv_codec(c).unwrap();
+            }
+            let engine = engine.with_kv_memory_budget(Some(budget));
+            let mut hook = LaneCensusHook::default();
+            let (c, m) = engine
+                .serve_hooked(codec_reqs(8), policy(), Admission::Continuous, &mut hook)
+                .unwrap();
+            assert_eq!(c.len(), 8, "the budget delays admission, it drops nothing");
+            assert_eq!(m.completed, 8);
+            hook.max_live
+        };
+        assert_eq!(census(None), 2, "identity: floor(4096 / 2048) lanes");
+        let factored = KvCodecSpec::Factored { layer_budgets: Some(vec![4]) };
+        assert_eq!(census(Some(factored)), 4, "factored r4: floor(4096 / 1024) lanes");
+        // The budget reshapes the schedule only — per-lane token streams
+        // are untouched (the stub's rows are lane-independent).
+        let unbudgeted = Engine::new_stub(codec_spec());
+        let (uc, _) = unbudgeted.serve_all(codec_reqs(8), policy()).unwrap();
+        let budgeted = Engine::new_stub(codec_spec()).with_kv_memory_budget(Some(budget));
+        let (bc, _) = budgeted.serve_all(codec_reqs(8), policy()).unwrap();
+        for (a, b) in uc.iter().zip(&bc) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+        }
+    }
+
+    #[test]
+    fn kv_memory_budget_refuses_infeasible_head() {
+        // A request whose worst case can never fit must fail loudly, not
+        // deadlock the admission loop.
+        let engine = Engine::new_stub(codec_spec()).with_kv_memory_budget(Some(1024));
+        let err = engine.serve_all(codec_reqs(1), policy()).err().expect("must refuse");
+        assert!(err.to_string().contains("budget"), "{err:#}");
+    }
+
+    #[test]
+    fn serve_metrics_report_kv_churn() {
+        // Satellite: freed bytes — every finished request hands its pages
+        // back, so the churn counter is page-quantised and covers exactly
+        // the pages the 16-token rows occupied.
+        let engine = Engine::new_stub(codec_spec());
+        let page = engine.kv_config().bytes_per_page();
+        let (_, m) = engine.serve_all(codec_reqs(6), policy()).unwrap();
+        assert_eq!(m.kv_freed_bytes, 6 * page, "6 one-page rows freed");
+        assert!(m.kv_peak_bytes > 0);
     }
 }

@@ -1,15 +1,230 @@
-//! Paged KV-cache slot manager.
+//! Paged KV-cache slot manager and page codecs.
 //!
 //! The decode artifacts carry caches shaped `[L, B, H, C, r]` for a fixed
-//! micro-batch B; this manager owns slot allocation inside that batch,
+//! micro-batch B; this module owns slot allocation inside that batch,
 //! page-granular position accounting, and the bytes bookkeeping that
 //! demonstrates the paper's motivating claim: pruning head rank r shrinks
 //! KV memory proportionally.
+//!
+//! ## Page codecs
+//!
+//! Bytes-per-page is no longer the hardcoded dense formula
+//! `2·L·H·r·4·PAGE_TOKENS`: every page travels through a pluggable
+//! [`PageCodec`] that encodes/decodes `[H, PAGE_TOKENS, r]` page blocks
+//! and *defines* the stored footprint.
+//!
+//! * [`IdentityCodec`] stores rank-r coefficient vectors verbatim —
+//!   bit-identical to the pre-codec path (property-tested here and end to
+//!   end through the engine's chunked-prefill and speculative bit-identity
+//!   suites).
+//! * [`FactoredCodec`] stores pages *in CLOVER's factored basis at the
+//!   pruned rank*: the cache rows are already coefficients against the
+//!   per-head orthogonal vectors, ordered by the singular spectrum, so
+//!   keeping the first `budget[l]` coefficients of each vector is exactly
+//!   the paper's rank truncation applied at rest.  `bytes_per_token`
+//!   shrinks by the rank ratio and `batch_slots` multiplies at fixed
+//!   memory.  Budgets are per layer (DepthKV-style — shallow layers
+//!   tolerate more pruning than deep ones), validated against the model
+//!   geometry by [`KvCodecSpec::resolve`].
+//!
+//! [`PagedKvStore`] is the host-side storage behind the stub backend:
+//! pages are allocated lazily at their *encoded* size, so compression is
+//! exercised for real (decoded reads round-trip through the codec), not
+//! just counted.  The accounting side ([`KvManager`]) derives
+//! `bytes_per_page` from the same codec spec, so admission control, the
+//! router's per-token cost, and the stored bytes all agree.
 
 use anyhow::{bail, Result};
 
 /// Page size in token positions (allocation granularity).
 pub const PAGE_TOKENS: usize = 16;
+
+/// Plain-data description of a page codec — travels through `KvConfig`,
+/// `EngineSpec`, and the CLI (`--kv-codec`, `--kv-layer-budgets`), and is
+/// resolved against a concrete model geometry at engine construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvCodecSpec {
+    /// Store rank-r pages verbatim (the pre-codec dense layout).
+    Identity,
+    /// Store pages truncated to per-layer rank budgets.  `None` budgets
+    /// resolve to a uniform `max(1, r/2)` per layer.
+    Factored { layer_budgets: Option<Vec<usize>> },
+}
+
+impl Default for KvCodecSpec {
+    fn default() -> Self {
+        Self::Identity
+    }
+}
+
+impl KvCodecSpec {
+    /// Parse the CLI surface: `--kv-codec identity|factored` plus an
+    /// optional `--kv-layer-budgets r0,r1,...` list (factored only).
+    pub fn parse(codec: &str, layer_budgets: Option<Vec<usize>>) -> Result<Self> {
+        match codec {
+            "identity" => {
+                if layer_budgets.is_some() {
+                    bail!("--kv-layer-budgets requires --kv-codec factored");
+                }
+                Ok(Self::Identity)
+            }
+            "factored" => Ok(Self::Factored { layer_budgets }),
+            other => bail!("unknown KV codec {other:?} (expected identity|factored)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Identity => "identity",
+            Self::Factored { .. } => "factored",
+        }
+    }
+
+    /// Resolve to per-layer stored ranks against a concrete geometry,
+    /// validating DepthKV-style budgets: one entry per layer, each within
+    /// `1..=rank`.  This is the validation gate every construction boundary
+    /// (engine builder, gateway worker, CLI) goes through.
+    pub fn resolve(&self, n_layers: usize, rank: usize) -> Result<Vec<usize>> {
+        match self {
+            Self::Identity => Ok(vec![rank; n_layers]),
+            Self::Factored { layer_budgets: None } => Ok(vec![(rank / 2).max(1); n_layers]),
+            Self::Factored { layer_budgets: Some(b) } => {
+                if b.len() != n_layers {
+                    bail!(
+                        "--kv-layer-budgets has {} entries for a {n_layers}-layer model",
+                        b.len()
+                    );
+                }
+                for (l, &r) in b.iter().enumerate() {
+                    if r == 0 || r > rank {
+                        bail!("layer {l} budget {r} outside 1..={rank}");
+                    }
+                }
+                Ok(b.clone())
+            }
+        }
+    }
+
+    /// Build the codec object for a concrete geometry.
+    pub fn build(&self, n_layers: usize, rank: usize) -> Result<Box<dyn PageCodec>> {
+        let budgets = self.resolve(n_layers, rank)?;
+        Ok(match self {
+            Self::Identity => Box::new(IdentityCodec { rank, n_layers }),
+            Self::Factored { .. } => Box::new(FactoredCodec { rank, budgets }),
+        })
+    }
+}
+
+/// Encode/decode of KV pages.  The unit of storage is one page block
+/// `[H, PAGE_TOKENS, r]` per (cache, layer, lane, page); the unit of
+/// transcoding is one rank-r coefficient vector (one head × one token),
+/// since slab writes scatter position-by-position.  `stored_rank(layer)`
+/// defines the at-rest footprint — `bytes_per_page` is *derived from the
+/// codec*, not hardcoded.
+pub trait PageCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// The full (in-flight) rank r of the cache rows.
+    fn full_rank(&self) -> usize;
+
+    /// Coefficients kept at rest for `layer`'s pages.
+    fn stored_rank(&self, layer: usize) -> usize;
+
+    /// Encode one rank-r coefficient vector into `stored_rank(layer)`
+    /// stored floats.  `coeffs.len() == full_rank()`,
+    /// `out.len() == stored_rank(layer)`.
+    fn encode_vec(&self, layer: usize, coeffs: &[f32], out: &mut [f32]);
+
+    /// Decode `stored_rank(layer)` stored floats back to a full rank-r
+    /// vector (truncated components reconstruct as 0.0 — absence in the
+    /// factored basis).
+    fn decode_vec(&self, layer: usize, stored: &[f32], out: &mut [f32]);
+
+    /// Encode a `[H, PAGE_TOKENS, full_rank]` page block into a
+    /// `[H, PAGE_TOKENS, stored_rank(layer)]` block.
+    fn encode_page(&self, layer: usize, n_heads: usize, block: &[f32], out: &mut [f32]) {
+        let (r, sr) = (self.full_rank(), self.stored_rank(layer));
+        debug_assert_eq!(block.len(), n_heads * PAGE_TOKENS * r);
+        debug_assert_eq!(out.len(), n_heads * PAGE_TOKENS * sr);
+        for i in 0..n_heads * PAGE_TOKENS {
+            self.encode_vec(layer, &block[i * r..(i + 1) * r], &mut out[i * sr..(i + 1) * sr]);
+        }
+    }
+
+    /// Decode a stored page block back to `[H, PAGE_TOKENS, full_rank]`.
+    fn decode_page(&self, layer: usize, n_heads: usize, stored: &[f32], out: &mut [f32]) {
+        let (r, sr) = (self.full_rank(), self.stored_rank(layer));
+        debug_assert_eq!(stored.len(), n_heads * PAGE_TOKENS * sr);
+        debug_assert_eq!(out.len(), n_heads * PAGE_TOKENS * r);
+        for i in 0..n_heads * PAGE_TOKENS {
+            self.decode_vec(layer, &stored[i * sr..(i + 1) * sr], &mut out[i * r..(i + 1) * r]);
+        }
+    }
+}
+
+/// Stores rank-r vectors verbatim: `stored_rank == full_rank`, decode is
+/// a bit-exact copy.  The reference codec every other codec's accounting
+/// is compared against.
+pub struct IdentityCodec {
+    rank: usize,
+    n_layers: usize,
+}
+
+impl PageCodec for IdentityCodec {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn full_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn stored_rank(&self, layer: usize) -> usize {
+        debug_assert!(layer < self.n_layers);
+        self.rank
+    }
+
+    fn encode_vec(&self, _layer: usize, coeffs: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(coeffs);
+    }
+
+    fn decode_vec(&self, _layer: usize, stored: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(stored);
+    }
+}
+
+/// Stores each vector truncated to the layer's rank budget.  The cache
+/// rows are CLOVER coefficients against spectrum-ordered orthogonal
+/// vectors, so dropping the tail is the paper's pruning applied to the
+/// cache at rest; decode reconstructs dropped components as 0.0.
+pub struct FactoredCodec {
+    rank: usize,
+    budgets: Vec<usize>,
+}
+
+impl PageCodec for FactoredCodec {
+    fn name(&self) -> &'static str {
+        "factored"
+    }
+
+    fn full_rank(&self) -> usize {
+        self.rank
+    }
+
+    fn stored_rank(&self, layer: usize) -> usize {
+        self.budgets[layer]
+    }
+
+    fn encode_vec(&self, layer: usize, coeffs: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&coeffs[..self.budgets[layer]]);
+    }
+
+    fn decode_vec(&self, layer: usize, stored: &[f32], out: &mut [f32]) {
+        let b = self.budgets[layer];
+        out[..b].copy_from_slice(stored);
+        out[b..].fill(0.0);
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct KvConfig {
@@ -18,12 +233,35 @@ pub struct KvConfig {
     pub rank: usize,
     pub max_positions: usize,
     pub batch_slots: usize,
+    /// Page codec the cache is stored through.  Must pass
+    /// [`KvConfig::validate`] before any byte accounting — the engine
+    /// builder, gateway worker, and CLI all check at construction.
+    pub codec: KvCodecSpec,
 }
 
 impl KvConfig {
-    /// Bytes per token position across all layers/heads (K + VO caches).
+    /// Check the codec spec against this geometry (per-layer budgets have
+    /// one entry per manifest layer, each within `1..=rank`).
+    pub fn validate(&self) -> Result<()> {
+        self.codec.resolve(self.n_layers, self.rank).map(|_| ())
+    }
+
+    /// Per-layer stored ranks under the configured codec.
+    ///
+    /// Panics on an invalid codec/geometry pair — [`KvConfig::validate`]
+    /// runs at every construction boundary, so a panic here is a missed
+    /// validation, not a runtime condition.
+    pub fn stored_ranks(&self) -> Vec<usize> {
+        self.codec
+            .resolve(self.n_layers, self.rank)
+            .expect("KvConfig::validate must pass before byte accounting")
+    }
+
+    /// Bytes per token position across all layers/heads (K + VO caches),
+    /// at the codec's *stored* ranks: `2·H·4·Σ_l stored_rank(l)`.  Under
+    /// [`KvCodecSpec::Identity`] this is the dense `2·L·H·r·4`.
     pub fn bytes_per_token(&self) -> usize {
-        2 * self.n_layers * self.n_heads * self.rank * 4
+        2 * self.n_heads * 4 * self.stored_ranks().iter().sum::<usize>()
     }
 
     pub fn bytes_per_page(&self) -> usize {
@@ -38,17 +276,23 @@ struct Slot {
     positions: usize,
 }
 
-/// Allocates batch slots + pages; tracks live KV bytes.
+/// Allocates batch slots + pages; tracks live/peak/freed KV bytes at the
+/// codec's stored page size.
 pub struct KvManager {
     cfg: KvConfig,
+    /// `cfg.bytes_per_page()`, resolved once — accounting is on the hot
+    /// admission/advance path.
+    page_bytes: usize,
     slots: Vec<Option<Slot>>,
     peak_bytes: usize,
+    freed_bytes: usize,
 }
 
 impl KvManager {
     pub fn new(cfg: KvConfig) -> Self {
+        let page_bytes = cfg.bytes_per_page();
         let slots = vec![None; cfg.batch_slots];
-        Self { cfg, slots, peak_bytes: 0 }
+        Self { cfg, page_bytes, slots, peak_bytes: 0, freed_bytes: 0 }
     }
 
     pub fn config(&self) -> &KvConfig {
@@ -111,10 +355,12 @@ impl KvManager {
     /// the accounting half of speculative rollback: a verify step advances
     /// by the whole written slab, then rolls back to the accepted prefix.
     /// Page reclaim is page-granular (pages above the new high-water mark
-    /// free immediately; `peak_bytes` keeps the high tide).  Errors when
-    /// `positions` is *ahead* of the recorded count — rollback never
-    /// invents progress — charging nothing.
+    /// free immediately, counting toward [`KvManager::freed_bytes`];
+    /// `peak_bytes` keeps the high tide).  Errors when `positions` is
+    /// *ahead* of the recorded count — rollback never invents progress —
+    /// charging nothing.
     pub fn rollback_to(&mut self, slot: usize, positions: usize) -> Result<()> {
+        let page_bytes = self.page_bytes;
         let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
             .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
         if positions > s.positions {
@@ -124,26 +370,46 @@ impl KvManager {
             );
         }
         s.positions = positions;
-        s.pages = positions.div_ceil(PAGE_TOKENS);
+        let keep = positions.div_ceil(PAGE_TOKENS);
+        self.freed_bytes += (s.pages - keep) * page_bytes;
+        s.pages = keep;
         Ok(())
     }
 
-    /// Free a slot (request finished / evicted).
+    /// Free a slot (request finished / evicted), folding its pages into
+    /// the cumulative [`KvManager::freed_bytes`] churn counter.  Returns
+    /// the request id the slot carried.
     pub fn free(&mut self, slot: usize) -> Result<u64> {
         match self.slots.get_mut(slot).and_then(|s| s.take()) {
-            Some(s) => Ok(s.id),
+            Some(s) => {
+                self.freed_bytes += s.pages * self.page_bytes;
+                Ok(s.id)
+            }
             None => bail!("double free of slot {slot}"),
         }
     }
 
     pub fn live_bytes(&self) -> usize {
-        self.slots.iter().flatten()
-            .map(|s| s.pages * self.cfg.bytes_per_page())
-            .sum()
+        self.live_pages() * self.page_bytes
+    }
+
+    /// Allocated pages summed over live slots — one number the engine can
+    /// multiply by *any* codec's page size (its own, or a paired draft
+    /// engine's) for budget admission.
+    pub fn live_pages(&self) -> usize {
+        self.slots.iter().flatten().map(|s| s.pages).sum()
     }
 
     pub fn peak_bytes(&self) -> usize {
         self.peak_bytes
+    }
+
+    /// Cumulative bytes released over the manager's lifetime — slot frees
+    /// plus speculative-rollback page reclaims.  Together with
+    /// `peak_bytes` this is the KV churn picture: how much cache the
+    /// workload cycled through, not just how much it held at once.
+    pub fn freed_bytes(&self) -> usize {
+        self.freed_bytes
     }
 
     pub fn free_slots(&self) -> usize {
@@ -157,18 +423,298 @@ impl KvManager {
     }
 }
 
+/// Host-side paged page storage behind the stub backend: pages allocate
+/// lazily at their **encoded** size, writes encode through the codec,
+/// reads decode back — so a factored cache really holds fewer floats, and
+/// bit-identity under [`IdentityCodec`] is a storage property, not an
+/// accounting convention.
+///
+/// Layout: one optional buffer per `(cache, layer, lane, page)`, each
+/// `[H, PAGE_TOKENS, stored_rank(layer)]`.  `n_caches` is 2 for the K +
+/// VO factor caches the artifacts carry.
+pub struct PagedKvStore {
+    n_caches: usize,
+    n_layers: usize,
+    n_heads: usize,
+    lanes: usize,
+    pages_per_lane: usize,
+    codec: Box<dyn PageCodec>,
+    pages: Vec<Option<Box<[f32]>>>,
+}
+
+impl PagedKvStore {
+    pub fn new(
+        n_caches: usize,
+        n_layers: usize,
+        n_heads: usize,
+        max_positions: usize,
+        lanes: usize,
+        codec: Box<dyn PageCodec>,
+    ) -> Self {
+        let pages_per_lane = max_positions.div_ceil(PAGE_TOKENS);
+        let pages = (0..n_caches * n_layers * lanes * pages_per_lane).map(|_| None).collect();
+        Self { n_caches, n_layers, n_heads, lanes, pages_per_lane, codec, pages }
+    }
+
+    pub fn codec(&self) -> &dyn PageCodec {
+        &*self.codec
+    }
+
+    fn page_slot(&self, cache: usize, layer: usize, lane: usize, page: usize) -> usize {
+        debug_assert!(
+            cache < self.n_caches && layer < self.n_layers && lane < self.lanes
+                && page < self.pages_per_lane
+        );
+        ((cache * self.n_layers + layer) * self.lanes + lane) * self.pages_per_lane + page
+    }
+
+    /// Floats one of `layer`'s pages holds at rest.
+    fn page_len(&self, layer: usize) -> usize {
+        self.n_heads * PAGE_TOKENS * self.codec.stored_rank(layer)
+    }
+
+    /// Encode one full-rank coefficient vector into the page holding
+    /// `pos`, allocating the page (zeroed) on first touch.
+    pub fn write_vec(
+        &mut self,
+        cache: usize,
+        layer: usize,
+        lane: usize,
+        head: usize,
+        pos: usize,
+        coeffs: &[f32],
+    ) {
+        let (page, off) = (pos / PAGE_TOKENS, pos % PAGE_TOKENS);
+        let sr = self.codec.stored_rank(layer);
+        let len = self.page_len(layer);
+        let slot = self.page_slot(cache, layer, lane, page);
+        let buf = self.pages[slot]
+            .get_or_insert_with(|| vec![0.0; len].into_boxed_slice());
+        let at = (head * PAGE_TOKENS + off) * sr;
+        self.codec.encode_vec(layer, coeffs, &mut buf[at..at + sr]);
+    }
+
+    /// Decode the full-rank vector at `pos` into `out`
+    /// (`out.len() == full_rank()`); an untouched page reads as zeros.
+    pub fn read_vec(
+        &self,
+        cache: usize,
+        layer: usize,
+        lane: usize,
+        head: usize,
+        pos: usize,
+        out: &mut [f32],
+    ) {
+        let (page, off) = (pos / PAGE_TOKENS, pos % PAGE_TOKENS);
+        match &self.pages[self.page_slot(cache, layer, lane, page)] {
+            Some(buf) => {
+                let sr = self.codec.stored_rank(layer);
+                let at = (head * PAGE_TOKENS + off) * sr;
+                self.codec.decode_vec(layer, &buf[at..at + sr], out);
+            }
+            None => out.fill(0.0),
+        }
+    }
+
+    /// Decode one whole page back to a `[H, PAGE_TOKENS, full_rank]`
+    /// block (zeros for an untouched page) — the block-granular read the
+    /// cache materializer uses.
+    pub fn decode_page(&self, cache: usize, layer: usize, lane: usize, page: usize, out: &mut [f32]) {
+        match &self.pages[self.page_slot(cache, layer, lane, page)] {
+            Some(buf) => self.codec.decode_page(layer, self.n_heads, buf, out),
+            None => out.fill(0.0),
+        }
+    }
+
+    /// Drop every page of `lane` across caches and layers — the storage
+    /// half of lane zeroing on slot churn.
+    pub fn zero_lane(&mut self, lane: usize) {
+        for cache in 0..self.n_caches {
+            for layer in 0..self.n_layers {
+                for page in 0..self.pages_per_lane {
+                    self.pages[self.page_slot(cache, layer, lane, page)] = None;
+                }
+            }
+        }
+    }
+
+    /// Bytes currently held by allocated pages — the storage-side twin of
+    /// [`KvManager::live_bytes`] (which counts *accounted* pages; the
+    /// store also holds rolled-back pages until the lane is zeroed, so
+    /// store ≥ accounting is the expected relation, not equality).
+    pub fn stored_bytes(&self) -> usize {
+        let per_lane_layer: Vec<usize> =
+            (0..self.n_layers).map(|l| self.page_len(l) * 4).collect();
+        self.pages
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.is_some())
+            .map(|(i, _)| per_lane_layer[(i / (self.lanes * self.pages_per_lane)) % self.n_layers])
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testing::prop;
 
     fn cfg(rank: usize) -> KvConfig {
-        KvConfig { n_layers: 2, n_heads: 4, rank, max_positions: 64, batch_slots: 4 }
+        KvConfig {
+            n_layers: 2,
+            n_heads: 4,
+            rank,
+            max_positions: 64,
+            batch_slots: 4,
+            codec: KvCodecSpec::Identity,
+        }
     }
 
     #[test]
     fn rank_halves_bytes() {
         assert_eq!(cfg(8).bytes_per_token() * 2, cfg(16).bytes_per_token());
+    }
+
+    #[test]
+    fn factored_codec_shrinks_bytes_by_rank_ratio() {
+        // Default factored budgets (r/2 everywhere) halve the dense bytes;
+        // explicit per-layer budgets meter exactly Σ_l budget[l].
+        let dense = cfg(8);
+        let half = KvConfig { codec: KvCodecSpec::Factored { layer_budgets: None }, ..cfg(8) };
+        assert_eq!(half.bytes_per_token() * 2, dense.bytes_per_token());
+        let depth = KvConfig {
+            codec: KvCodecSpec::Factored { layer_budgets: Some(vec![2, 6]) },
+            ..cfg(8)
+        };
+        // 2·H·4·(2+6) vs dense 2·H·4·(8+8).
+        assert_eq!(depth.bytes_per_token() * 2, dense.bytes_per_token());
+        assert_eq!(depth.stored_ranks(), vec![2, 6]);
+        assert_eq!(depth.bytes_per_page(), depth.bytes_per_token() * PAGE_TOKENS);
+    }
+
+    #[test]
+    fn layer_budgets_validated_against_geometry() {
+        let ok = KvCodecSpec::Factored { layer_budgets: Some(vec![4, 8]) };
+        assert_eq!(ok.resolve(2, 8).unwrap(), vec![4, 8]);
+        // Wrong layer count, zero budget, budget above the rank: refused.
+        let wrong_len = KvCodecSpec::Factored { layer_budgets: Some(vec![4]) };
+        assert!(wrong_len.resolve(2, 8).is_err());
+        let zero = KvCodecSpec::Factored { layer_budgets: Some(vec![4, 0]) };
+        assert!(zero.resolve(2, 8).is_err());
+        let over = KvCodecSpec::Factored { layer_budgets: Some(vec![4, 9]) };
+        assert!(over.resolve(2, 8).is_err());
+        assert!(KvConfig { codec: over, ..cfg(8) }.validate().is_err());
+        // Identity resolves to the full rank everywhere.
+        assert_eq!(KvCodecSpec::Identity.resolve(3, 4).unwrap(), vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn codec_spec_parse_matches_cli_surface() {
+        assert_eq!(KvCodecSpec::parse("identity", None).unwrap(), KvCodecSpec::Identity);
+        assert_eq!(
+            KvCodecSpec::parse("factored", Some(vec![2, 4])).unwrap(),
+            KvCodecSpec::Factored { layer_budgets: Some(vec![2, 4]) }
+        );
+        assert!(KvCodecSpec::parse("identity", Some(vec![2])).is_err());
+        assert!(KvCodecSpec::parse("zstd", None).is_err());
+    }
+
+    #[test]
+    fn identity_codec_page_roundtrip_is_bit_exact_property() {
+        prop("identity page roundtrip", 20, |rng| {
+            let (layers, heads, rank) = (2, 3, 1 + rng.below(8));
+            let codec = KvCodecSpec::Identity.build(layers, rank).map_err(|e| e.to_string())?;
+            let block: Vec<f32> = (0..heads * PAGE_TOKENS * rank)
+                .map(|_| (rng.uniform() as f32 - 0.5) * 8.0)
+                .collect();
+            for l in 0..layers {
+                let mut stored = vec![0.0; heads * PAGE_TOKENS * codec.stored_rank(l)];
+                let mut back = vec![0.0; block.len()];
+                codec.encode_page(l, heads, &block, &mut stored);
+                codec.decode_page(l, heads, &stored, &mut back);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if bits(&back) != bits(&block) {
+                    return Err(format!("layer {l}: identity roundtrip not bit-exact"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn factored_codec_roundtrip_truncates_spectrum_property() {
+        prop("factored page roundtrip", 20, |rng| {
+            let (layers, heads, rank) = (2, 2, 2 + rng.below(7));
+            let budgets: Vec<usize> = (0..layers).map(|_| 1 + rng.below(rank)).collect();
+            let spec = KvCodecSpec::Factored { layer_budgets: Some(budgets.clone()) };
+            let codec = spec.build(layers, rank).map_err(|e| e.to_string())?;
+            let vec_in: Vec<f32> =
+                (0..rank).map(|_| (rng.uniform() as f32 - 0.5) * 8.0).collect();
+            for (l, &b) in budgets.iter().enumerate() {
+                let mut stored = vec![0.0; b];
+                let mut back = vec![f32::NAN; rank];
+                codec.encode_vec(l, &vec_in, &mut stored);
+                codec.decode_vec(l, &stored, &mut back);
+                // Kept coefficients are bit-exact, dropped ones read 0.0 —
+                // absence in the factored basis, which the stub readout
+                // skips exactly like an unwritten cache row.
+                for k in 0..rank {
+                    let want = if k < b { vec_in[k].to_bits() } else { 0.0f32.to_bits() };
+                    if back[k].to_bits() != want {
+                        return Err(format!("layer {l} coeff {k} wrong after roundtrip"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn paged_store_roundtrips_and_zeroes_lanes() {
+        let rank = 8;
+        let codec = KvCodecSpec::Identity.build(2, rank).unwrap();
+        let mut store = PagedKvStore::new(2, 2, 2, 64, 2, codec);
+        assert_eq!(store.stored_bytes(), 0, "pages allocate lazily");
+        let v: Vec<f32> = (0..rank).map(|k| k as f32 + 0.25).collect();
+        store.write_vec(1, 0, 1, 1, 17, &v);
+        let mut out = vec![0.0; rank];
+        store.read_vec(1, 0, 1, 1, 17, &mut out);
+        assert_eq!(out, v, "identity storage is bit-exact");
+        // One page allocated: H × PAGE_TOKENS × r floats.
+        assert_eq!(store.stored_bytes(), 2 * PAGE_TOKENS * rank * 4);
+        // Untouched coordinates — even in the allocated page — read zeros.
+        store.read_vec(1, 0, 1, 0, 17, &mut out);
+        assert_eq!(out, vec![0.0; rank]);
+        store.read_vec(0, 1, 0, 1, 17, &mut out);
+        assert_eq!(out, vec![0.0; rank]);
+        // Zeroing the lane drops its pages entirely.
+        store.zero_lane(1);
+        assert_eq!(store.stored_bytes(), 0);
+        store.read_vec(1, 0, 1, 1, 17, &mut out);
+        assert_eq!(out, vec![0.0; rank]);
+    }
+
+    #[test]
+    fn factored_store_holds_fewer_floats() {
+        // Same write, two codecs: the factored store's allocated page is
+        // budget/rank the size — compression exercised in storage, not
+        // just accounted.
+        let rank = 8;
+        let v: Vec<f32> = (0..rank).map(|k| (k as f32).sin()).collect();
+        let mut dense = PagedKvStore::new(2, 2, 2, 64, 1, KvCodecSpec::Identity.build(2, rank).unwrap());
+        let spec = KvCodecSpec::Factored { layer_budgets: Some(vec![2, 4]) };
+        let mut fact = PagedKvStore::new(2, 2, 2, 64, 1, spec.build(2, rank).unwrap());
+        for (l, s) in [(0usize, 2usize), (1, 4)] {
+            dense.write_vec(0, l, 0, 0, 3, &v);
+            fact.write_vec(0, l, 0, 0, 3, &v);
+            let mut out = vec![f32::NAN; rank];
+            fact.read_vec(0, l, 0, 0, 3, &mut out);
+            assert_eq!(&out[..s], &v[..s], "kept coefficients round-trip");
+            assert!(out[s..].iter().all(|&x| x == 0.0), "dropped coefficients read 0");
+        }
+        // Dense pages: 2 layers × H·P·8; factored: H·P·(2+4).
+        assert_eq!(dense.stored_bytes(), 2 * 2 * PAGE_TOKENS * 8 * 4);
+        assert_eq!(fact.stored_bytes(), 2 * PAGE_TOKENS * (2 + 4) * 4);
     }
 
     #[test]
@@ -294,6 +840,30 @@ mod tests {
     }
 
     #[test]
+    fn freed_bytes_counts_slot_frees_and_rollback_reclaims() {
+        // The satellite churn counter: everything released — retired
+        // slots and speculative rollback reclaims — accumulates.
+        let mut kv = KvManager::new(cfg(8));
+        let bpp = kv.config().bytes_per_page();
+        assert_eq!(kv.freed_bytes(), 0);
+        let s = kv.allocate(1).unwrap();
+        kv.advance_by(s, PAGE_TOKENS + 4).unwrap();
+        // Rollback reclaims the second page.
+        kv.rollback_to(s, 4).unwrap();
+        assert_eq!(kv.freed_bytes(), bpp);
+        // Rollback with no page crossing reclaims nothing.
+        kv.rollback_to(s, 2).unwrap();
+        assert_eq!(kv.freed_bytes(), bpp);
+        // Freeing the slot folds its remaining page in.
+        kv.free(s).unwrap();
+        assert_eq!(kv.freed_bytes(), 2 * bpp);
+        // A fresh slot freed while empty adds nothing.
+        let s2 = kv.allocate(2).unwrap();
+        kv.free(s2).unwrap();
+        assert_eq!(kv.freed_bytes(), 2 * bpp);
+    }
+
+    #[test]
     fn max_positions_enforced() {
         let mut kv = KvManager::new(cfg(8));
         let s = kv.allocate(1).unwrap();
@@ -332,6 +902,86 @@ mod tests {
                 if kv.free_slots() + live.len() != 4 {
                     return Err("slot conservation violated".into());
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn interleaved_accounting_matches_model_property() {
+        // Satellite: random interleavings of allocate / advance_by /
+        // rollback_to / free against a trivial reference model.  At every
+        // step: live_bytes == Σ_slots ceil(positions/PAGE_TOKENS) × bpp,
+        // peak never decreases and always dominates live, and freed_bytes
+        // only grows.
+        prop("kv interleaved accounting", 20, |rng| {
+            // Mix codecs so the invariant is checked at several page sizes.
+            let codec = match rng.below(3) {
+                0 => KvCodecSpec::Identity,
+                1 => KvCodecSpec::Factored { layer_budgets: None },
+                _ => KvCodecSpec::Factored { layer_budgets: Some(vec![2, 5]) },
+            };
+            let mut kv = KvManager::new(KvConfig { codec, ..cfg(8) });
+            let bpp = kv.config().bytes_per_page();
+            let max = kv.config().max_positions;
+            // slot index -> positions, for currently-live slots.
+            let mut model: Vec<(usize, usize)> = Vec::new();
+            let (mut next_id, mut last_peak, mut last_freed) = (0u64, 0usize, 0usize);
+            for _ in 0..300 {
+                match rng.below(4) {
+                    0 => {
+                        if kv.free_slots() > 0 {
+                            let s = kv.allocate(next_id).map_err(|e| e.to_string())?;
+                            next_id += 1;
+                            model.push((s, 0));
+                        }
+                    }
+                    1 => {
+                        if !model.is_empty() {
+                            let i = rng.below(model.len());
+                            let (s, pos) = model[i];
+                            let n = 1 + rng.below(24);
+                            if pos + n <= max {
+                                kv.advance_by(s, n).map_err(|e| e.to_string())?;
+                                model[i].1 = pos + n;
+                            } else if kv.advance_by(s, n).is_ok() {
+                                return Err("advance past max_positions accepted".into());
+                            }
+                        }
+                    }
+                    2 => {
+                        if !model.is_empty() {
+                            let i = rng.below(model.len());
+                            let (s, pos) = model[i];
+                            let back = rng.below(pos + 1);
+                            kv.rollback_to(s, back).map_err(|e| e.to_string())?;
+                            model[i].1 = back;
+                        }
+                    }
+                    _ => {
+                        if !model.is_empty() {
+                            let i = rng.below(model.len());
+                            let (s, _) = model.swap_remove(i);
+                            kv.free(s).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                let want: usize =
+                    model.iter().map(|&(_, p)| p.div_ceil(PAGE_TOKENS) * bpp).sum();
+                if kv.live_bytes() != want {
+                    return Err(format!("live {} != model {want}", kv.live_bytes()));
+                }
+                if kv.peak_bytes() < last_peak {
+                    return Err("peak decreased".into());
+                }
+                if kv.peak_bytes() < kv.live_bytes() {
+                    return Err("peak below live".into());
+                }
+                if kv.freed_bytes() < last_freed {
+                    return Err("freed_bytes decreased".into());
+                }
+                last_peak = kv.peak_bytes();
+                last_freed = kv.freed_bytes();
             }
             Ok(())
         });

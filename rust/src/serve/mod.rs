@@ -14,10 +14,37 @@
 //!   chunk during prefill, the single fed-back token during decode.
 //! * [`sampling`] — per-request decode policy (greedy / temperature /
 //!   top-k / stop token), deterministic per `(seed, request id)`.
-//! * [`kv`] — paged KV slot manager: allocation inside the fixed batch,
-//!   page-granular position accounting per slab
-//!   ([`KvManager::advance_by`]), live/peak bytes.
+//! * [`kv`] — paged KV slot manager and page codecs: allocation inside
+//!   the fixed batch, page-granular position accounting per slab
+//!   ([`KvManager::advance_by`]), live/peak/freed bytes — all at the
+//!   *codec's* stored page size (see the page-codec lifecycle below).
 //! * [`engine`] — the step loop, organized around [`engine::StepPlan`].
+//!
+//! ## The page-codec lifecycle
+//!
+//! KV pages travel through a pluggable [`kv::PageCodec`]
+//! ([`KvCodecSpec`]: `identity` or `factored`, CLI `--kv-codec` /
+//! `--kv-layer-budgets`), resolved against the model geometry at every
+//! construction boundary ([`Engine::with_kv_codec`], the gateway worker,
+//! the CLI):
+//!
+//! ```text
+//!   write (slab step)          at rest                 read (next steps)
+//!   rank-r coeff vector ──▶ encode_vec ──▶ [H, 16, stored_rank(l)] page
+//!                                             │  bytes_per_page =
+//!                                             │  2·H·4·Σ_l stored_rank(l)·16
+//!   rank-r coeff vector ◀── decode_vec ◀──────┘  (truncated tail reads 0.0)
+//! ```
+//!
+//! The cache rows are CLOVER coefficients against spectrum-ordered
+//! orthogonal vectors, so the factored codec's truncation to per-layer
+//! rank budgets (DepthKV-style `Vec<usize>`) is the paper's pruning
+//! applied at rest.  [`KvManager`] accounts live/peak/freed bytes at the
+//! encoded page size, [`kv::PagedKvStore`] *stores* stub pages at that
+//! size (compression exercised, not just counted), and the engine's
+//! admission gate ([`Engine::with_kv_memory_budget`]) turns the smaller
+//! pages into proportionally more concurrent lanes at a fixed byte
+//! budget — for a draft+verify pair, both engines' codecs are accounted.
 //!
 //! ## The StepPlan lifecycle
 //!
@@ -168,6 +195,9 @@ pub use engine::{
     chunk_width, Admission, Cancellation, CancelReason, Completion, Engine, LaneSlab, NoHook,
     ServeMetrics, SpecConfig, StepHook, StepPlan,
 };
-pub use kv::{KvConfig, KvManager, PAGE_TOKENS};
+pub use kv::{
+    FactoredCodec, IdentityCodec, KvCodecSpec, KvConfig, KvManager, PageCodec, PagedKvStore,
+    PAGE_TOKENS,
+};
 pub use sampling::{Sampler, SamplingParams};
 pub use session::{Session, SpecState, VerifyOutcome};

@@ -40,8 +40,8 @@ use crate::model::{decode_params_for_checkpoint, load_params, Checkpoint};
 use crate::runtime::stub::StubSpec;
 use crate::runtime::Runtime;
 use crate::serve::{
-    BatchPolicy, CancelReason, Cancellation, Completion, Engine, Request, SamplingParams,
-    ServeMetrics, SpecConfig, StepHook,
+    BatchPolicy, CancelReason, Cancellation, Completion, Engine, KvCodecSpec, Request,
+    SamplingParams, ServeMetrics, SpecConfig, StepHook,
 };
 
 use super::cancel::{CancelRegistry, CancelToken};
@@ -109,6 +109,13 @@ pub struct EngineSpec {
     /// Per-step token budget (prefill-aware admission) — see
     /// [`Engine::with_max_step_tokens`].
     pub max_step_tokens: Option<usize>,
+    /// KV page codec the engine stores its cache through — identity or
+    /// CLOVER-factored with optional per-layer rank budgets.  Validated
+    /// against the engine's geometry inside the worker
+    /// ([`Engine::with_kv_codec`]), so a bad budget list fails the spawn,
+    /// not the first request.  The router sees the compressed cost via
+    /// [`Gateway::kv_bytes_per_token`].
+    pub kv_codec: KvCodecSpec,
 }
 
 impl EngineSpec {
@@ -121,6 +128,7 @@ impl EngineSpec {
             prefill_chunk: None,
             speculative: None,
             max_step_tokens: None,
+            kv_codec: KvCodecSpec::Identity,
         }
     }
 
@@ -139,6 +147,7 @@ impl EngineSpec {
             prefill_chunk: None,
             speculative: None,
             max_step_tokens: None,
+            kv_codec: KvCodecSpec::Identity,
         }
     }
 
@@ -151,6 +160,7 @@ impl EngineSpec {
             prefill_chunk: None,
             speculative: None,
             max_step_tokens: None,
+            kv_codec: KvCodecSpec::Identity,
         }
     }
 
@@ -166,6 +176,7 @@ impl EngineSpec {
             prefill_chunk: None,
             speculative: None,
             max_step_tokens: None,
+            kv_codec: KvCodecSpec::Identity,
         }
     }
 
@@ -185,6 +196,14 @@ impl EngineSpec {
     /// Cap one fused step's summed slab tokens (prefill-aware admission).
     pub fn with_max_step_tokens(mut self, cap: Option<usize>) -> Self {
         self.max_step_tokens = cap;
+        self
+    }
+
+    /// Store the KV cache through `codec` (CLI `--kv-codec` /
+    /// `--kv-layer-budgets`).  Geometry validation happens in the worker
+    /// at engine construction.
+    pub fn with_kv_codec(mut self, codec: KvCodecSpec) -> Self {
+        self.kv_codec = codec;
         self
     }
 }
@@ -372,9 +391,17 @@ impl Gateway {
                 // a Runtime for the thread's lifetime (the PJRT handles are
                 // born and die here).
                 if let ParamSource::Stub(stub_spec) = &spec.source {
-                    let mut engine = Engine::new_stub(stub_spec.clone())
+                    let built = Engine::new_stub(stub_spec.clone())
                         .with_prefill_chunk(spec.prefill_chunk)
-                        .with_max_step_tokens(spec.max_step_tokens);
+                        .with_max_step_tokens(spec.max_step_tokens)
+                        .with_kv_codec(spec.kv_codec.clone());
+                    let mut engine = match built {
+                        Ok(e) => e,
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(format!("{e:#}")));
+                            return Err(e);
+                        }
+                    };
                     if let Some(sp) = &spec.speculative {
                         let DraftSource::Stub(draft) = &sp.draft else {
                             let msg = "stub engines take DraftSource::Stub drafts".to_string();
@@ -411,11 +438,13 @@ impl Gateway {
                         return Err(e);
                     }
                 };
-                let mut engine = match Engine::new(&rt, &spec.preset, &program, params) {
-                    Ok(x) => {
-                        x.with_prefill_chunk(spec.prefill_chunk)
-                            .with_max_step_tokens(spec.max_step_tokens)
-                    }
+                let built = Engine::new(&rt, &spec.preset, &program, params).and_then(|x| {
+                    x.with_prefill_chunk(spec.prefill_chunk)
+                        .with_max_step_tokens(spec.max_step_tokens)
+                        .with_kv_codec(spec.kv_codec.clone())
+                });
+                let mut engine = match built {
+                    Ok(x) => x,
                     Err(e) => {
                         let _ = ready_tx.send(Err(format!("{e:#}")));
                         return Err(e);
@@ -1027,6 +1056,52 @@ mod tests {
             ma.decode_steps,
             mb.decode_steps
         );
+    }
+
+    /// A factored-codec gateway advertises the compressed per-token cost
+    /// to the router, serves the same request set to completion, and a
+    /// bad budget list fails the spawn — not the first request.
+    #[test]
+    fn stub_factored_codec_gateway_reports_compressed_cost() {
+        let spec = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            ..Default::default()
+        };
+        let dense =
+            Gateway::spawn("dense", GatewayConfig::default(), EngineSpec::stub(spec.clone()))
+                .unwrap();
+        let fact = Gateway::spawn(
+            "fact",
+            GatewayConfig::default(),
+            EngineSpec::stub(spec.clone())
+                .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4]) }),
+        )
+        .unwrap();
+        assert_eq!(
+            fact.kv_bytes_per_token() * 2,
+            dense.kv_bytes_per_token(),
+            "budget 4 of rank 8 halves the router-visible KV cost"
+        );
+        let t = fact.submit(vec![3, 7, 1, 5], 8, SamplingParams::greedy(), None).unwrap();
+        let c = t.stream.wait().unwrap().completion().unwrap();
+        assert_eq!(c.tokens.len(), 12);
+        fact.join().unwrap();
+        dense.join().unwrap();
+        // Validation runs in the worker during spawn: 2 budgets on a
+        // 1-layer stub is refused before ready.
+        let err = Gateway::spawn(
+            "bad",
+            GatewayConfig::default(),
+            EngineSpec::stub(spec)
+                .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4, 4]) }),
+        )
+        .err()
+        .expect("bad budget list must fail the spawn");
+        assert!(err.to_string().contains("1-layer"), "{err:#}");
     }
 
     #[test]

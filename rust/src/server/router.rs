@@ -4,7 +4,11 @@
 //! The paper's claim, made operational: pruning head rank to r cuts KV
 //! bytes per token to r/d of dense ([`crate::serve::KvConfig::bytes_per_token`]),
 //! so at equal queue depth a pruned engine is the cheaper place to put the
-//! next request.  The router scores each gateway as
+//! next request.  The per-token cost is *codec-aware*: an engine storing
+//! its cache through the factored page codec
+//! ([`crate::serve::KvCodecSpec`], `--kv-codec factored`) reports the
+//! compressed bytes, so at equal depth the router prefers it the same way
+//! it prefers a lower compiled rank.  The router scores each gateway as
 //!
 //! ```text
 //! score(g) = (in_flight(g) + 1 + queued_prefill_tokens(g))
@@ -202,6 +206,30 @@ mod tests {
         );
         // "pair" is listed first, so only its higher KV cost can explain
         // the router preferring "plain".
+        assert_eq!(router.pick(), 1);
+        router.join().unwrap();
+    }
+
+    #[test]
+    fn factored_codec_engine_attracts_traffic_like_a_lower_rank() {
+        use crate::serve::KvCodecSpec;
+        // Two engines at the same compiled rank; "fact" stores its cache
+        // through the factored codec at half budgets.  The router's
+        // codec-aware per-token cost makes it the cheaper target at equal
+        // depth, exactly as if it had been compiled one rank down.
+        let target = StubSpec { rank: 8, ..Default::default() };
+        let fact_spec = EngineSpec::stub(target.clone())
+            .with_kv_codec(KvCodecSpec::Factored { layer_budgets: None });
+        let router = Router::new(vec![
+            Gateway::spawn("plain", GatewayConfig::default(), EngineSpec::stub(target)).unwrap(),
+            Gateway::spawn("fact", GatewayConfig::default(), fact_spec).unwrap(),
+        ])
+        .unwrap();
+        let g = router.gateways();
+        assert_eq!(g[0].rank(), g[1].rank(), "same compiled rank");
+        assert_eq!(g[1].kv_bytes_per_token() * 2, g[0].kv_bytes_per_token());
+        // "plain" is listed first and ties resolve to it, so only the
+        // compressed cost can explain the router preferring "fact".
         assert_eq!(router.pick(), 1);
         router.join().unwrap();
     }

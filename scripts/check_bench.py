@@ -9,6 +9,17 @@ finite (a NaN tokens/s or an Infinity TTFT means a bench divided by a
 zero wall-clock — a bug, not a measurement).
 
 Usage:  python3 scripts/check_bench.py rust/BENCH_serve.json rust/BENCH_server.json
+        python3 scripts/check_bench.py --baseline BENCH_history/BENCH_serve.json \
+            rust/BENCH_serve.json
+
+With `--baseline`, fresh documents whose `bench` id matches the snapshot
+are also diffed row-by-row against it (prefill chunks matched by `chunk`,
+the speculative sweep by `draft_len`, the codec sweep by `codec`): a
+throughput metric falling below 85% of the baseline, or a step-count /
+steps-per-token metric rising above 115%, fails the check.  Baseline
+values that are null or missing are skipped — the committed bootstrap
+snapshot carries nulls for wall-clock metrics until a toolchain run
+fills them (see BENCH_history/README.md).
 
 Exit code 0 when every file passes; 1 with a per-file report otherwise.
 Stdlib only — runs anywhere CI has a python3.
@@ -43,8 +54,8 @@ def require(doc, keys, path="$"):
 
 
 def check_serve(doc):
-    yield from require(doc, ["bench", "preset", "prefill", "speculative", "engines",
-                             "pjrt_skipped"])
+    yield from require(doc, ["bench", "preset", "prefill", "speculative", "kv_codec",
+                             "layer_budgets", "engines", "pjrt_skipped"])
     prefill = doc.get("prefill", {})
     yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
                        "$.prefill")
@@ -93,6 +104,65 @@ def check_serve(doc):
     if spt and min(spt) >= vanilla:
         yield (f"$.speculative: best dense steps-per-token {min(spt)} does not "
                f"beat the vanilla trace ({vanilla})")
+    kvc = doc.get("kv_codec", {})
+    yield from require(
+        kvc, ["backend", "rank", "requests", "memory_budget_bytes", "codecs"],
+        "$.kv_codec")
+    codecs = kvc.get("codecs", [])
+    if not codecs:
+        yield "$.kv_codec.codecs: empty — the codec sweep was not benched"
+    identity = next((r for r in codecs if r.get("codec") == "identity"), None)
+    if codecs and identity is None:
+        yield "$.kv_codec.codecs: no identity row to compare against"
+    for i, row in enumerate(codecs):
+        yield from require(
+            row,
+            ["codec", "layer_budgets", "bytes_per_token", "bytes_per_page",
+             "max_concurrent_lanes", "completed", "tokens_per_s"],
+            f"$.kv_codec.codecs[{i}]")
+        if identity is None or row is identity:
+            continue
+        # The acceptance bar: under the same byte budget, the factored
+        # codec's smaller pages must buy at least 2x the measured
+        # concurrent lanes (and cost at most half the bytes per token).
+        if row.get("bytes_per_token", math.inf) * 2 > identity.get("bytes_per_token", 0):
+            yield (f"$.kv_codec.codecs[{i}]: factored bytes/token "
+                   f"{row.get('bytes_per_token')} not <= half the identity codec's "
+                   f"{identity.get('bytes_per_token')}")
+        if row.get("max_concurrent_lanes", 0) < 2 * identity.get("max_concurrent_lanes",
+                                                                 math.inf):
+            yield (f"$.kv_codec.codecs[{i}]: {row.get('max_concurrent_lanes')} concurrent "
+                   f"lanes < 2x the identity codec's "
+                   f"{identity.get('max_concurrent_lanes')} at the same memory budget")
+    lb = doc.get("layer_budgets", {})
+    yield from require(lb, ["backend", "rank", "n_layers", "profiles"], "$.layer_budgets")
+    profiles = lb.get("profiles", [])
+    if not profiles:
+        yield "$.layer_budgets.profiles: empty — the budget sweep was not benched"
+    rank = lb.get("rank", 0)
+    full_seen = False
+    for i, row in enumerate(profiles):
+        yield from require(
+            row, ["budgets", "bytes_per_token", "mean_prefix_agreement", "completed"],
+            f"$.layer_budgets.profiles[{i}]")
+        budgets = row.get("budgets", [])
+        for b in budgets:
+            if isinstance(b, bool) or not isinstance(b, (int, float)) or not 1 <= b <= rank:
+                yield f"$.layer_budgets.profiles[{i}]: budget {b!r} outside 1..={rank}"
+        agree = row.get("mean_prefix_agreement", -1.0)
+        if isinstance(agree, bool) or not isinstance(agree, (int, float)) \
+                or not 0.0 <= agree <= 1.0:
+            yield (f"$.layer_budgets.profiles[{i}]: mean_prefix_agreement {agree!r} "
+                   "is not a fraction in [0, 1]")
+        elif budgets and all(b == rank for b in budgets):
+            full_seen = True
+            # Full budgets make the factored codec a pure copy, so the
+            # greedy trace must match the identity baseline exactly.
+            if agree != 1.0:
+                yield (f"$.layer_budgets.profiles[{i}]: full-rank budgets must agree "
+                       f"exactly with the identity trace (got {agree})")
+    if profiles and not full_seen:
+        yield "$.layer_budgets: no full-rank profile — the pure-copy anchor is missing"
     if not doc.get("pjrt_skipped", True):
         for i, eng in enumerate(doc.get("engines", [])):
             yield from require(
@@ -126,8 +196,81 @@ CHECKERS = {
     "perf_server": check_server,
 }
 
+# Row-keyed sections a baseline snapshot is diffed over, as
+# (section, list key, row match key).
+BASELINE_SECTIONS = [
+    ("prefill", "chunks", "chunk"),
+    ("speculative", "sweep", "draft_len"),
+    ("kv_codec", "codecs", "codec"),
+]
+# Fresh value must keep >= 85% of the baseline (throughput-like metrics).
+DOWN_METRICS = ["tokens_per_s", "max_concurrent_lanes"]
+# Fresh value must stay <= 115% of the baseline (work-per-token metrics;
+# step counts are deterministic on the stub, so growth is a scheduling
+# regression, not noise).
+UP_METRICS = ["dense_steps_per_token", "prefill_steps", "decode_steps"]
 
-def main(paths):
+
+def _metric(row, key):
+    """The row's value for `key` if it is a usable number, else None."""
+    v = row.get(key)
+    if isinstance(v, bool) or not isinstance(v, (int, float)) or not math.isfinite(v):
+        return None
+    return v
+
+
+def check_baseline(doc, base):
+    """Yield errors for >15% regressions against a baseline snapshot.
+
+    Rows are matched by section-specific key; baseline rows or metric
+    values that are missing or null are skipped (the bootstrap snapshot
+    is schema-complete but carries null measurements until a toolchain
+    run fills them).
+    """
+    for section, list_key, match_key in BASELINE_SECTIONS:
+        base_sec = base.get(section) or {}
+        base_rows = {row.get(match_key): row
+                     for row in base_sec.get(list_key, []) if isinstance(row, dict)}
+        doc_sec = doc.get(section) or {}
+        for row in doc_sec.get(list_key, []):
+            if not isinstance(row, dict):
+                continue
+            b = base_rows.get(row.get(match_key))
+            if b is None:
+                continue
+            tag = f"$.{section}.{list_key}[{match_key}={row.get(match_key)!r}]"
+            for key in DOWN_METRICS:
+                bv, fv = _metric(b, key), _metric(row, key)
+                if bv is not None and bv > 0 and fv is not None and fv < 0.85 * bv:
+                    yield (f"{tag}: {key} {fv:g} fell below 85% of the baseline "
+                           f"{bv:g} ({100.0 * fv / bv:.0f}%)")
+            for key in UP_METRICS:
+                bv, fv = _metric(b, key), _metric(row, key)
+                if bv is not None and bv > 0 and fv is not None and fv > 1.15 * bv:
+                    yield (f"{tag}: {key} {fv:g} rose above 115% of the baseline "
+                           f"{bv:g} ({100.0 * fv / bv:.0f}%)")
+
+
+def main(argv):
+    baseline_path = None
+    paths = []
+    it = iter(argv)
+    for arg in it:
+        if arg == "--baseline":
+            baseline_path = next(it, None)
+            if baseline_path is None:
+                print("--baseline requires a snapshot path")
+                return 2
+        else:
+            paths.append(arg)
+    base_doc = None
+    if baseline_path is not None:
+        try:
+            with open(baseline_path) as f:
+                base_doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {baseline_path}: unreadable baseline: {e}")
+            return 1
     failed = False
     for path in paths:
         try:
@@ -145,6 +288,8 @@ def main(paths):
         else:
             errors.extend(checker(doc))
         errors.extend(finite_numbers(doc))
+        if base_doc is not None and bench == base_doc.get("bench"):
+            errors.extend(check_baseline(doc, base_doc))
         if errors:
             failed = True
             print(f"FAIL {path}:")
