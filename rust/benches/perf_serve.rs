@@ -29,6 +29,13 @@
 //!   per-layer budget profiles on a 2-layer stub; the full-rank profile
 //!   must agree exactly (the factored codec at full budgets is a pure
 //!   copy).  Always on (stub backend).
+//! * `obs` — observability tap cost and fidelity: best-of-3 tokens/s
+//!   with a `NoHook` vs a `TraceSink` tap (the <5% overhead bar), the
+//!   span-reconstructed aggregates vs the engine's own `ServeMetrics`
+//!   (exact counts, float-tolerance TTFT), and the gateway-registry
+//!   counter agreement.  Also writes `BENCH_trace.json` (Chrome
+//!   trace-event JSON) and `BENCH_metrics.json` (registry dump).  Always
+//!   on (stub backend).
 //! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
 //!   bytes, marshal/execute split per engine×admission-mode, against the
 //!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
@@ -427,6 +434,147 @@ fn bench_layer_budgets() -> Result<Json> {
     Ok(Json::Obj(o))
 }
 
+/// Observability taps: tokens/s untapped vs tapped (the <5% overhead
+/// bar), span-reconstructed aggregates vs the engine's own
+/// [`clover::serve::ServeMetrics`] (the fidelity bar), and the dumps the
+/// CI artifact upload reads — `BENCH_trace.json` (Chrome trace-event,
+/// Perfetto-loadable) from the tapped run and `BENCH_metrics.json`
+/// (registry dump) from a stub gateway publishing through a shared
+/// [`clover::server::Obs`].
+fn bench_obs() -> Result<Json> {
+    use clover::obs::TraceSink;
+    use clover::serve::NoHook;
+    use clover::server::{EngineSpec, Gateway, GatewayConfig, Obs};
+
+    const REQS: u64 = 64;
+    const PROMPT: usize = 16;
+    let spec = StubSpec { max_positions: 128, batch_slots: BATCH_SLOTS, ..Default::default() };
+    let mk = |now: Instant| -> Vec<Request> {
+        (0..REQS)
+            .map(|id| {
+                Request::greedy(
+                    id,
+                    (0..PROMPT as i32).map(|i| (i * 3 + id as i32) % 32).collect(),
+                    16 + (id as usize % 4) * 8,
+                    now,
+                )
+            })
+            .collect()
+    };
+    // Best-of-3 each way: the tap cost is per-step and tiny, so compare
+    // against the stub's real per-step work (no artificial delay) over a
+    // long enough trace that wall-clock noise averages out.
+    let mut best_base = 0.0f64;
+    let mut best_tap = 0.0f64;
+    for _ in 0..3 {
+        let engine = Engine::new_stub(spec.clone());
+        let (_, m) =
+            engine.serve_hooked(mk(Instant::now()), policy(), Admission::Continuous, &mut NoHook)?;
+        best_base = best_base.max(m.tokens_per_s());
+        let engine = Engine::new_stub(spec.clone());
+        let mut sink = TraceSink::default();
+        let (_, m) =
+            engine.serve_hooked(mk(Instant::now()), policy(), Admission::Continuous, &mut sink)?;
+        best_tap = best_tap.max(m.tokens_per_s());
+    }
+    let overhead = ((best_base - best_tap) / best_base.max(1e-12)).max(0.0);
+    println!(
+        "obs taps   : {best_base:.0} tok/s untapped vs {best_tap:.0} tapped \
+         ({:.2}% overhead)",
+        100.0 * overhead,
+    );
+
+    // Fidelity run: one tapped serve whose span timelines must
+    // reconstruct the engine's own aggregates.
+    let engine = Engine::new_stub(spec.clone());
+    let mut sink = TraceSink::default();
+    let (_, m) =
+        engine.serve_hooked(mk(Instant::now()), policy(), Admission::Continuous, &mut sink)?;
+    let recon = sink.reconstruct();
+    println!(
+        "obs recon  : {}/{} completed, {}/{} generated, ttft p50 {:.6}/{:.6}s \
+         | {} spans ({} open) | {} step events",
+        recon.completed,
+        m.completed,
+        recon.generated_tokens,
+        m.generated_tokens,
+        recon.ttft_p50_s,
+        m.ttft_p50_s,
+        sink.spans().count(),
+        sink.open_spans(),
+        sink.steps_seen(),
+    );
+    std::fs::write("BENCH_trace.json", json::to_string(&sink.chrome_trace()))?;
+    println!("wrote BENCH_trace.json");
+
+    // Gateway aggregate: the same stub behind a worker thread publishing
+    // into a shared registry; its counter series must agree with the
+    // engine's final metrics.
+    let obs = Obs::default();
+    let gateway = Gateway::spawn_with_obs(
+        "bench",
+        GatewayConfig::default(),
+        EngineSpec::stub(spec),
+        Some(obs.clone()),
+    )?;
+    let mut tickets = Vec::new();
+    for id in 0..BATCH_SLOTS as i32 {
+        let prompt: Vec<i32> = (0..8).map(|p| (p + id) % 32).collect();
+        let t = gateway
+            .submit(prompt, 8, SamplingParams::greedy(), None)
+            .map_err(|e| anyhow::anyhow!("bench submit: {e}"))?;
+        tickets.push(t);
+    }
+    let gm = gateway.join()?;
+    drop(tickets);
+    let reg = |name: &str| {
+        obs.registry.get(&format!("{name}{{gateway=\"bench\"}}")).unwrap_or(-1.0)
+    };
+    let reg_completed = reg("clover_completed_total");
+    let reg_generated = reg("clover_generated_tokens_total");
+    println!(
+        "obs gateway: registry {reg_completed:.0} completed / {reg_generated:.0} generated \
+         (engine {} / {})",
+        gm.completed, gm.generated_tokens,
+    );
+    std::fs::write("BENCH_metrics.json", json::to_string(&obs.registry.to_json()))?;
+    println!("wrote BENCH_metrics.json");
+
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("requests".to_string(), Json::Num(REQS as f64));
+    o.insert("prompt_tokens".to_string(), Json::Num(PROMPT as f64));
+    o.insert("baseline_tokens_per_s".to_string(), Json::Num(best_base));
+    o.insert("tapped_tokens_per_s".to_string(), Json::Num(best_tap));
+    o.insert("tap_overhead_frac".to_string(), Json::Num(overhead));
+    let mut r = BTreeMap::new();
+    r.insert("completed".to_string(), Json::Num(recon.completed as f64));
+    r.insert("cancelled".to_string(), Json::Num(recon.cancelled as f64));
+    r.insert("generated_tokens".to_string(), Json::Num(recon.generated_tokens as f64));
+    r.insert("ttft_p50_s".to_string(), Json::Num(recon.ttft_p50_s));
+    r.insert("ttft_p99_s".to_string(), Json::Num(recon.ttft_p99_s));
+    o.insert("recon".to_string(), Json::Obj(r));
+    let mut e = BTreeMap::new();
+    e.insert("completed".to_string(), Json::Num(m.completed as f64));
+    e.insert("cancelled".to_string(), Json::Num(m.cancelled as f64));
+    e.insert("generated_tokens".to_string(), Json::Num(m.generated_tokens as f64));
+    e.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
+    e.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
+    e.insert("decode_steps".to_string(), Json::Num(m.decode_steps as f64));
+    o.insert("metrics".to_string(), Json::Obj(e));
+    o.insert("steps_seen".to_string(), Json::Num(sink.steps_seen() as f64));
+    o.insert("open_spans".to_string(), Json::Num(sink.open_spans() as f64));
+    let mut g = BTreeMap::new();
+    g.insert("completed".to_string(), Json::Num(gm.completed as f64));
+    g.insert("generated_tokens".to_string(), Json::Num(gm.generated_tokens as f64));
+    g.insert("registry_completed".to_string(), Json::Num(reg_completed));
+    g.insert("registry_generated_tokens".to_string(), Json::Num(reg_generated));
+    o.insert("gateway".to_string(), Json::Obj(g));
+    o.insert("trace_file".to_string(), Json::Str("BENCH_trace.json".to_string()));
+    o.insert("metrics_file".to_string(), Json::Str("BENCH_metrics.json".to_string()));
+    Ok(Json::Obj(o))
+}
+
 /// End-to-end engines over the compiled artifacts (wave vs continuous,
 /// dense vs pruned ranks).  Returns the per-engine records.
 fn bench_pjrt_engines(rt: &Runtime) -> Result<Vec<Json>> {
@@ -562,6 +710,10 @@ fn main() -> Result<()> {
 
     // Per-layer rank budgets: greedy agreement vs the identity baseline.
     root.insert("layer_budgets".to_string(), bench_layer_budgets()?);
+
+    // Observability taps: overhead + trace fidelity; also writes the
+    // BENCH_trace.json / BENCH_metrics.json artifacts.
+    root.insert("obs".to_string(), bench_obs()?);
 
     // End-to-end engines need the compiled artifacts + live PJRT.
     match Runtime::new("artifacts") {

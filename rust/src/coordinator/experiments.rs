@@ -66,9 +66,9 @@ pub fn base_model(
         return Ok((params, tok, stream));
     }
     let init = ops::init_params(rt, &opts.preset, opts.seed as i32)?;
-    let (params, _curve) = ops::pretrain(
-        rt, &opts.preset, init, &stream, steps, 1e-3, opts.seed, "pretrain",
-    )?;
+    let (params, _curve) = ops::pretrain(rt, &opts.preset, init, &stream, &ops::PretrainOpts {
+        steps, lr: 1e-3, seed: opts.seed, tag: "pretrain".into(),
+    })?;
     save_params(&params, &opts.preset, "dense", steps, &path)?;
     Ok((params, tok, stream))
 }
@@ -117,18 +117,18 @@ pub fn table1(rt: &Runtime, opts: &ExpOpts) -> Result<Table> {
             format!("{clv_ppl:.2}"),
         ];
         for budget in [budget1, budget2] {
+            let ropts = |mode: &str, lr: f64| ops::RecoverOpts {
+                r, mode: mode.into(), steps: budget, lr, seed: opts.seed,
+            };
             // Vanilla recovery: fine-tune factorized attention tensors.
-            let (van_ft, _) = ops::recover(
-                rt, &opts.preset, van.clone(), r, "attn", &stream, budget, 2e-4, opts.seed,
-            )?;
-            let (clv_ft, _) = ops::recover(
-                rt, &opts.preset, clv.clone(), r, "attn", &stream, budget, 2e-4, opts.seed,
-            )?;
+            let (van_ft, _) =
+                ops::recover(rt, &opts.preset, van.clone(), &stream, &ropts("attn", 2e-4))?;
+            let (clv_ft, _) =
+                ops::recover(rt, &opts.preset, clv.clone(), &stream, &ropts("attn", 2e-4))?;
             // CLOVER†: fine-tune only the singular values, 10x lr (paper
             // bumps 6e-4 -> 6e-3 for the S-only run).
-            let (clv_s, _) = ops::recover(
-                rt, &opts.preset, clv.clone(), r, "s", &stream, budget, 6e-3, opts.seed,
-            )?;
+            let (clv_s, _) =
+                ops::recover(rt, &opts.preset, clv.clone(), &stream, &ropts("s", 6e-3))?;
             cells.push(format!(
                 "{:.2}", ops::fac_perplexity(rt, &opts.preset, &van_ft, r, &stream, 8)?
             ));
@@ -184,8 +184,9 @@ pub fn fig1d(rt: &Runtime, opts: &ExpOpts) -> Result<Table> {
     );
     let before = ops::fac_perplexity(rt, &opts.preset, &clv, r, &stream, 8)?;
     for (mode, lr) in [("attn", 2e-4), ("s", 2e-3)] {
-        let (ft, _) = ops::recover(rt, &opts.preset, clv.clone(), r, mode, &stream,
-                                   steps, lr, opts.seed)?;
+        let (ft, _) = ops::recover(rt, &opts.preset, clv.clone(), &stream, &ops::RecoverOpts {
+            r, mode: mode.into(), steps, lr, seed: opts.seed,
+        })?;
         let after = ops::fac_perplexity(rt, &opts.preset, &ft, r, &stream, 8)?;
         let spec = entry.params_fac.get(&r).unwrap();
         let trainable: usize = spec.iter()

@@ -7,5 +7,8 @@ pub mod ops;
 pub mod schedule;
 pub mod trainer;
 
-pub use ops::{fac_perplexity, greedy_decode, init_params, pretrain, prune_to_ratio, recover};
+pub use ops::{
+    fac_perplexity, greedy_decode, init_params, pretrain, prune_to_ratio, recover, PretrainOpts,
+    RecoverOpts,
+};
 pub use trainer::{train_loop, train_step, LoopOpts, TrainState};

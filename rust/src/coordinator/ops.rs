@@ -42,31 +42,37 @@ pub fn lm_batcher<'a>(
     }
 }
 
+/// Knobs for [`pretrain`]: step budget, learning rate, data seed, and the
+/// log tag.
+#[derive(Clone, Debug)]
+pub struct PretrainOpts {
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub tag: String,
+}
+
 /// Pretrain dense params on a token stream; returns the loss curve.
-#[allow(clippy::too_many_arguments)]
 pub fn pretrain(
     rt: &Runtime,
     config: &str,
     params: ParamSet,
     stream: &TokenStream,
-    steps: usize,
-    lr: f64,
-    seed: u64,
-    tag: &str,
+    opts: &PretrainOpts,
 ) -> Result<(ParamSet, Vec<(usize, f32)>)> {
     let entry = rt.manifest().config(config)?;
     let (b, t) = (entry.dim("train_batch")?, entry.dim("seq_len")?);
     let mut state = TrainState::new(vec![params]);
-    let opts = LoopOpts {
-        steps,
-        lr,
+    let loop_opts = LoopOpts {
+        steps: opts.steps,
+        lr: opts.lr,
         schedule: "cosine".into(),
-        warmup: (steps / 20).max(2),
-        log_every: (steps / 10).max(1),
-        tag: tag.into(),
+        warmup: (opts.steps / 20).max(2),
+        log_every: (opts.steps / 10).max(1),
+        tag: opts.tag.clone(),
     };
-    let curve = train_loop(rt, config, "train_full", &mut state, &opts,
-                           lm_batcher(stream, b, t, seed))?;
+    let curve = train_loop(rt, config, "train_full", &mut state, &loop_opts,
+                           lm_batcher(stream, b, t, opts.seed))?;
     Ok((state.sets.remove(0), curve))
 }
 
@@ -91,38 +97,45 @@ pub fn prune_to_ratio(
     Ok((fac, r))
 }
 
-/// Recovery fine-tune of a pruned model.  `mode`: "attn" trains all
-/// factorized attention tensors (Table 1 "CLOVER"/"Vanilla" columns);
-/// "s" trains only the singular-value matrices (CLOVER†).
-#[allow(clippy::too_many_arguments)]
+/// Knobs for [`recover`]: the factorization rank, the fine-tune mode
+/// (`"attn"` trains all factorized attention tensors — Table 1
+/// "CLOVER"/"Vanilla" columns; `"s"` trains only the singular-value
+/// matrices — CLOVER†), the step budget, learning rate, and data seed.
+#[derive(Clone, Debug)]
+pub struct RecoverOpts {
+    pub r: usize,
+    pub mode: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+/// Recovery fine-tune of a pruned model (see [`RecoverOpts`]).
 pub fn recover(
     rt: &Runtime,
     config: &str,
     fac: ParamSet,
-    r: usize,
-    mode: &str,
     stream: &TokenStream,
-    steps: usize,
-    lr: f64,
-    seed: u64,
+    opts: &RecoverOpts,
 ) -> Result<(ParamSet, Vec<(usize, f32)>)> {
     let entry = rt.manifest().config(config)?;
     let (b, t) = (entry.dim("train_batch")?, entry.dim("seq_len")?);
-    let program = match mode {
+    let r = opts.r;
+    let program = match opts.mode.as_str() {
         "s" => format!("train_clover_s_r{r}"),
         _ => format!("train_fac_attn_r{r}"),
     };
     let mut state = TrainState::new(vec![fac]);
-    let opts = LoopOpts {
-        steps,
-        lr,
+    let loop_opts = LoopOpts {
+        steps: opts.steps,
+        lr: opts.lr,
         schedule: "linear".into(),
-        warmup: (steps / 20).max(1),
-        log_every: (steps / 5).max(1),
-        tag: format!("recover-{mode}-r{r}"),
+        warmup: (opts.steps / 20).max(1),
+        log_every: (opts.steps / 5).max(1),
+        tag: format!("recover-{}-r{r}", opts.mode),
     };
-    let curve = train_loop(rt, config, &program, &mut state, &opts,
-                           lm_batcher(stream, b, t, seed))?;
+    let curve = train_loop(rt, config, &program, &mut state, &loop_opts,
+                           lm_batcher(stream, b, t, opts.seed))?;
     Ok((state.sets.remove(0), curve))
 }
 

@@ -35,6 +35,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod peft;
 pub mod report;
 pub mod runtime;

@@ -14,7 +14,9 @@
 //!                  [--kv-codec identity|factored] [--kv-layer-budgets r0,r1,...]
 //!                  [--kv-memory-budget BYTES]
 //!                  [--speculative] [--draft-rank R] [--draft-len K]
+//!                  [--trace-out trace.json] [--metrics-json m.json]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
+//!                  [--stats-interval SECS]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
 //! ```
@@ -26,9 +28,12 @@ use clover::config::RunConfig;
 use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
 use clover::model::{load_params, save_params, Checkpoint, Manifest};
+use clover::obs::{Registry, TraceSink};
 use clover::runtime::{golden, Runtime};
-use clover::serve::{BatchPolicy, Engine, KvCodecSpec, Request, SamplingParams, SpecConfig};
-use clover::server::{DraftSource, EngineSpec, Gateway, GatewayConfig, StreamEvent, TryNext};
+use clover::serve::{
+    Admission, BatchPolicy, Engine, KvCodecSpec, Request, SamplingParams, SpecConfig,
+};
+use clover::server::{DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, StreamEvent, TryNext};
 use clover::util::human_bytes;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
@@ -125,9 +130,9 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let (_tok, stream) =
         clover::data::build_lm_stream(&cfg.data.corpus, vocab, 400_000, cfg.data.seed);
     let init = ops::init_params(&rt, &cfg.model.preset, cfg.train.seed as i32)?;
-    let (params, _) = ops::pretrain(
-        &rt, &cfg.model.preset, init, &stream, steps, lr, cfg.train.seed, "pretrain",
-    )?;
+    let (params, _) = ops::pretrain(&rt, &cfg.model.preset, init, &stream, &ops::PretrainOpts {
+        steps, lr, seed: cfg.train.seed, tag: "pretrain".into(),
+    })?;
     let ppl = coordinator::eval::perplexity(&rt, &cfg.model.preset, "nll", &params, &stream, 8)?;
     println!("final perplexity: {ppl:.2}");
     save_params(&params, &cfg.model.preset, "dense", steps, std::path::Path::new(out))?;
@@ -174,9 +179,9 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let vocab = entry.dim("vocab")?;
     let (_tok, stream) =
         clover::data::build_lm_stream(&cfg.data.corpus, vocab, 400_000, cfg.data.seed);
-    let (ft, _) = ops::recover(
-        &rt, &cfg.model.preset, fac, r, &mode, &stream, steps, lr, cfg.train.seed,
-    )?;
+    let (ft, _) = ops::recover(&rt, &cfg.model.preset, fac, &stream, &ops::RecoverOpts {
+        r, mode: mode.clone(), steps, lr, seed: cfg.train.seed,
+    })?;
     let ppl = ops::fac_perplexity(&rt, &cfg.model.preset, &ft, r, &stream, 8)?;
     println!("post-finetune perplexity: {ppl:.2}");
     let out = args.get("out").unwrap_or("runs/finetuned.clvr");
@@ -263,6 +268,12 @@ fn kv_memory_budget_flag(args: &Args) -> Result<Option<usize>> {
         .transpose()
 }
 
+/// Write a JSON document to `path` (trace / metrics dumps).
+fn write_json_file(path: &str, doc: &clover::config::json::Json) -> Result<()> {
+    std::fs::write(path, clover::config::json::to_string(doc))
+        .with_context(|| format!("writing {path}"))
+}
+
 /// Parse the speculative-decode flags: `--speculative` turns the
 /// draft+verify pair on, `--draft-rank R` picks the draft's CLOVER rank
 /// (default 4), `--draft-len K` the per-round draft length (default 4).
@@ -346,7 +357,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: cfg.serve.max_batch,
         max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
     };
-    let (completions, metrics) = engine.serve_all(reqs, policy)?;
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_json = args.get("metrics-json").map(str::to_string);
+    let (completions, metrics) = if trace_out.is_some() || metrics_json.is_some() {
+        // Observed run: tap every step and span through a TraceSink, then
+        // dump the Chrome trace / metrics registry next to the summary.
+        let mut sink = TraceSink::default();
+        let out = engine.serve_hooked(reqs, policy, Admission::Continuous, &mut sink)?;
+        if let Some(path) = &trace_out {
+            write_json_file(path, &sink.chrome_trace())?;
+            println!(
+                "wrote Chrome trace {path} ({} steps, {} spans) — load it in Perfetto",
+                sink.steps_seen(),
+                sink.spans().count(),
+            );
+        }
+        if let Some(path) = &metrics_json {
+            let reg = Registry::new();
+            reg.counter_add("clover_completed_total", out.1.completed as f64);
+            reg.counter_add("clover_cancelled_total", out.1.cancelled as f64);
+            reg.counter_add("clover_generated_tokens_total", out.1.generated_tokens as f64);
+            reg.counter_add("clover_steps_total", out.1.decode_steps as f64);
+            reg.gauge_set("clover_ttft_p50_s", out.1.ttft_p50_s);
+            reg.gauge_set("clover_ttft_p99_s", out.1.ttft_p99_s);
+            reg.gauge_set("clover_kv_peak_bytes", out.1.kv_peak_bytes as f64);
+            write_json_file(path, &reg.to_json())?;
+            println!("wrote metrics JSON {path}");
+        }
+        out
+    } else {
+        engine.serve_all(reqs, policy)?
+    };
     println!(
         "served {} requests | {} generated tokens | {:.1} tok/s | {} fused steps ({} slab tokens) | {} admissions | peak KV {} | freed KV {}",
         metrics.completed,
@@ -426,7 +467,19 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         let draft = DraftSource::PrunedRank { rank: *draft_rank };
         spec = spec.with_speculative(draft, spec_cfg.clone());
     }
-    let gateway = Gateway::spawn(
+    // Observability taps: any of --trace-out / --metrics-json /
+    // --stats-interval hands the gateway a shared Obs (registry + trace
+    // sink); without them the worker runs tap-free.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_json = args.get("metrics-json").map(str::to_string);
+    let stats_interval = args
+        .get("stats-interval")
+        .map(|v| v.parse::<f64>().with_context(|| format!("--stats-interval {v}")))
+        .transpose()?
+        .map(Duration::from_secs_f64);
+    let obs = (trace_out.is_some() || metrics_json.is_some() || stats_interval.is_some())
+        .then(Obs::default);
+    let gateway = Gateway::spawn_with_obs(
         "serve",
         GatewayConfig {
             queue_capacity,
@@ -436,6 +489,7 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
             },
         },
         spec,
+        obs.clone(),
     )?;
     println!(
         "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}",
@@ -477,7 +531,24 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     // Mux all event streams onto stdout until every request is terminal.
     let mut done = 0usize;
     let mut cancelled = 0usize;
+    let mut next_stats = stats_interval.map(|iv| Instant::now() + iv);
     while !streams.is_empty() {
+        if let (Some(at), Some(o)) = (next_stats, obs.as_ref()) {
+            if Instant::now() >= at {
+                let g = |name: &str| {
+                    o.registry.get(&format!("{name}{{gateway=\"serve\"}}")).unwrap_or(0.0)
+                };
+                println!(
+                    "[stats] in-flight {} | queued prefill {} tok | KV live {} | {} steps | {} generated",
+                    g("clover_in_flight") as usize,
+                    g("clover_queued_prefill_tokens") as usize,
+                    human_bytes(g("clover_kv_live_bytes") as usize),
+                    g("clover_steps_total") as usize,
+                    g("clover_generated_tokens_total") as usize,
+                );
+                next_stats = Some(Instant::now() + stats_interval.expect("set with next_stats"));
+            }
+        }
         if demo_cancel.as_ref().is_some_and(|(at, _)| Instant::now() >= *at) {
             let (_, token) = demo_cancel.take().expect("checked above");
             println!("[req {:>3}] firing cancel token", token.id());
@@ -534,6 +605,31 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     }
 
     let metrics = gateway.join()?;
+    if let Some(o) = &obs {
+        let mut sink = o.trace.lock().expect("trace sink poisoned");
+        if let Some((reason, dump)) = sink.take_dump() {
+            // The flight recorder armed mid-run (cancel storm, overload,
+            // shutdown-with-work): persist the ring next to the trace.
+            let path = trace_out
+                .as_deref()
+                .map(|p| format!("{p}.flight.json"))
+                .unwrap_or_else(|| "flight.json".into());
+            write_json_file(&path, &dump)?;
+            println!("flight recorder fired ({reason}); dumped {path}");
+        }
+        if let Some(path) = &trace_out {
+            write_json_file(path, &sink.chrome_trace())?;
+            println!(
+                "wrote Chrome trace {path} ({} steps, {} spans) — load it in Perfetto",
+                sink.steps_seen(),
+                sink.spans().count(),
+            );
+        }
+        if let Some(path) = &metrics_json {
+            write_json_file(path, &o.registry.to_json())?;
+            println!("wrote metrics JSON {path}");
+        }
+    }
     println!(
         "served {} done + {} cancelled | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
         done,

@@ -1,0 +1,143 @@
+//! Injectable time source for the serving spine.
+//!
+//! Everything downstream of the engine measures time as [`Instant`]
+//! arithmetic (session arrival/TTFT, batcher wait, deadlines), so the
+//! clock produces *real* `Instant` values from both variants:
+//!
+//! * **wall** — `Instant::now()`, the production default.
+//! * **manual** — a fixed epoch captured at construction plus an atomic
+//!   nanosecond counter; `now()` is `epoch + nanos` and `sleep()`
+//!   *advances the counter instead of blocking*.  The stub backend's
+//!   `step_delay`/`width_delay` route through [`Clock::sleep`], so a
+//!   manual clock turns simulated step cost into deterministic virtual
+//!   time: latency/TTFT assertions become exact and tests run at host
+//!   speed.
+//!
+//! Clones share the same underlying counter, so handing one clock to the
+//! engine, the stub spec, and a test gives them a single timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+enum Inner {
+    Wall { epoch: Instant },
+    Manual { epoch: Instant, nanos: AtomicU64 },
+}
+
+/// Shared wall/manual time source (see module docs).
+#[derive(Clone, Debug)]
+pub struct Clock {
+    inner: Arc<Inner>,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::wall()
+    }
+}
+
+impl Clock {
+    /// Real time: `now()` is `Instant::now()`, `sleep()` blocks.
+    pub fn wall() -> Self {
+        Self { inner: Arc::new(Inner::Wall { epoch: Instant::now() }) }
+    }
+
+    /// Virtual time starting at zero; advanced only by [`Clock::sleep`]
+    /// and [`Clock::advance`].
+    pub fn manual() -> Self {
+        Self {
+            inner: Arc::new(Inner::Manual { epoch: Instant::now(), nanos: AtomicU64::new(0) }),
+        }
+    }
+
+    pub fn is_manual(&self) -> bool {
+        matches!(&*self.inner, Inner::Manual { .. })
+    }
+
+    /// The current instant on this clock's timeline.
+    pub fn now(&self) -> Instant {
+        match &*self.inner {
+            Inner::Wall { .. } => Instant::now(),
+            Inner::Manual { epoch, nanos } => {
+                *epoch + Duration::from_nanos(nanos.load(Ordering::Acquire))
+            }
+        }
+    }
+
+    /// Block for `d` (wall) or advance the timeline by `d` (manual).
+    pub fn sleep(&self, d: Duration) {
+        if d.is_zero() {
+            return;
+        }
+        match &*self.inner {
+            Inner::Wall { .. } => std::thread::sleep(d),
+            Inner::Manual { .. } => self.advance(d),
+        }
+    }
+
+    /// Advance a manual clock by `d`.  Panics on a wall clock — virtual
+    /// time cannot be pushed forward for the whole host.
+    pub fn advance(&self, d: Duration) {
+        match &*self.inner {
+            Inner::Wall { .. } => panic!("Clock::advance on a wall clock"),
+            Inner::Manual { nanos, .. } => {
+                nanos.fetch_add(d.as_nanos() as u64, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Seconds from this clock's epoch to `t` (saturating at zero for
+    /// instants before the epoch).  Trace timestamps use this so every
+    /// event in one recording shares an origin.
+    pub fn secs_since_epoch(&self, t: Instant) -> f64 {
+        let epoch = match &*self.inner {
+            Inner::Wall { epoch } | Inner::Manual { epoch, .. } => *epoch,
+        };
+        t.saturating_duration_since(epoch).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_moves_forward_and_sleep_blocks() {
+        let c = Clock::wall();
+        assert!(!c.is_manual());
+        let a = c.now();
+        c.sleep(Duration::from_millis(2));
+        let b = c.now();
+        assert!(b > a);
+        assert!(c.secs_since_epoch(b) >= c.secs_since_epoch(a));
+    }
+
+    #[test]
+    fn manual_clock_is_exact_and_sleep_is_free() {
+        let c = Clock::manual();
+        assert!(c.is_manual());
+        let t0 = c.now();
+        let real = Instant::now();
+        c.sleep(Duration::from_secs(3600));
+        assert!(real.elapsed() < Duration::from_secs(5), "manual sleep must not block");
+        let t1 = c.now();
+        assert_eq!(t1.duration_since(t0), Duration::from_secs(3600));
+        assert_eq!(c.secs_since_epoch(t1), 3600.0);
+    }
+
+    #[test]
+    fn clones_share_one_timeline() {
+        let a = Clock::manual();
+        let b = a.clone();
+        b.advance(Duration::from_millis(250));
+        assert_eq!(a.secs_since_epoch(a.now()), 0.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "wall clock")]
+    fn advance_on_wall_clock_panics() {
+        Clock::wall().advance(Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,252 @@
+//! Hand-rolled counter/gauge/histogram registry with Prometheus-style
+//! text exposition and a JSON dump (via [`crate::config::json`] — no
+//! external metrics crates).
+//!
+//! Metric names follow the Prometheus data model: a bare family name
+//! (`clover_completed_total`) or a family plus labels
+//! (`clover_in_flight{gateway="r8"}`).  The registry treats the full
+//! string as the series key; exposition groups series by family for the
+//! `# TYPE` headers.  Interior mutability (one mutex) makes a shared
+//! `Arc<Registry>` usable from the gateway worker thread and the
+//! submitting side at once.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::config::json::Json;
+
+/// Cumulative histogram: `counts[i]` tokens observations `<= bounds[i]`,
+/// with an implicit `+Inf` bucket (`count`).
+#[derive(Clone, Debug)]
+pub struct Hist {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Hist {
+    fn new(bounds: &[f64]) -> Self {
+        Self { bounds: bounds.to_vec(), counts: vec![0; bounds.len()], sum: 0.0, count: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        for (i, b) in self.bounds.iter().enumerate() {
+            if v <= *b {
+                self.counts[i] += 1;
+            }
+        }
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+#[derive(Default)]
+struct Series {
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+/// Shared metrics registry (see module docs).
+#[derive(Default)]
+pub struct Registry {
+    series: Mutex<Series>,
+}
+
+/// `name{labels}` → `(name, "{labels}")`; the suffix is empty for bare
+/// families.
+fn split_family(series: &str) -> (&str, &str) {
+    match series.find('{') {
+        Some(i) => (&series[..i], &series[i..]),
+        None => (series, ""),
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to a (monotonic) counter series, creating it at zero.
+    pub fn counter_add(&self, series: &str, v: f64) {
+        let mut s = self.series.lock().unwrap();
+        *s.counters.entry(series.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn gauge_set(&self, series: &str, v: f64) {
+        let mut s = self.series.lock().unwrap();
+        s.gauges.insert(series.to_string(), v);
+    }
+
+    /// Add `v` (may be negative) to a gauge series, creating it at zero.
+    pub fn gauge_add(&self, series: &str, v: f64) {
+        let mut s = self.series.lock().unwrap();
+        *s.gauges.entry(series.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Record one observation into a histogram series; `bounds` fixes the
+    /// bucket layout on first use (later calls may pass the same bounds
+    /// or `&[]` to reuse the existing layout).
+    pub fn observe(&self, series: &str, bounds: &[f64], v: f64) {
+        let mut s = self.series.lock().unwrap();
+        s.hists.entry(series.to_string()).or_insert_with(|| Hist::new(bounds)).observe(v);
+    }
+
+    /// Current value of a counter or gauge series (tests, stats lines).
+    pub fn get(&self, series: &str) -> Option<f64> {
+        let s = self.series.lock().unwrap();
+        s.counters.get(series).or_else(|| s.gauges.get(series)).copied()
+    }
+
+    /// Snapshot of a histogram series.
+    pub fn hist(&self, series: &str) -> Option<Hist> {
+        self.series.lock().unwrap().hists.get(series).cloned()
+    }
+
+    /// Prometheus text exposition (format 0.0.4): `# TYPE` per family,
+    /// one line per series, histogram `_bucket`/`_sum`/`_count` expansion.
+    pub fn prometheus_text(&self) -> String {
+        let s = self.series.lock().unwrap();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let mut typed = |out: &mut String, family: &str, kind: &str| {
+            if family != last_family {
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                last_family = family.to_string();
+            }
+        };
+        for (series, v) in &s.counters {
+            let (family, _) = split_family(series);
+            typed(&mut out, family, "counter");
+            out.push_str(&format!("{series} {v}\n"));
+        }
+        for (series, v) in &s.gauges {
+            let (family, _) = split_family(series);
+            typed(&mut out, family, "gauge");
+            out.push_str(&format!("{series} {v}\n"));
+        }
+        for (series, h) in &s.hists {
+            let (family, labels) = split_family(series);
+            typed(&mut out, family, "histogram");
+            let inner = labels.trim_start_matches('{').trim_end_matches('}');
+            let with = |extra: &str| {
+                if inner.is_empty() {
+                    format!("{{{extra}}}")
+                } else {
+                    format!("{{{inner},{extra}}}")
+                }
+            };
+            for (b, c) in h.bounds.iter().zip(&h.counts) {
+                out.push_str(&format!("{family}_bucket{} {c}\n", with(&format!("le=\"{b}\""))));
+            }
+            out.push_str(&format!("{family}_bucket{} {}\n", with("le=\"+Inf\""), h.count));
+            out.push_str(&format!("{family}_sum{labels} {}\n", h.sum));
+            out.push_str(&format!("{family}_count{labels} {}\n", h.count));
+        }
+        out
+    }
+
+    /// JSON dump: `{"counters": {...}, "gauges": {...}, "histograms":
+    /// {series: {"bounds": [...], "counts": [...], "sum": s, "count": n}}}`.
+    pub fn to_json(&self) -> Json {
+        let s = self.series.lock().unwrap();
+        let num_map =
+            |m: &BTreeMap<String, f64>| m.iter().map(|(k, v)| (k.clone(), Json::Num(*v)));
+        let mut hists = BTreeMap::new();
+        for (series, h) in &s.hists {
+            let mut o = BTreeMap::new();
+            o.insert(
+                "bounds".to_string(),
+                Json::Arr(h.bounds.iter().map(|b| Json::Num(*b)).collect()),
+            );
+            o.insert(
+                "counts".to_string(),
+                Json::Arr(h.counts.iter().map(|c| Json::Num(*c as f64)).collect()),
+            );
+            o.insert("sum".to_string(), Json::Num(h.sum));
+            o.insert("count".to_string(), Json::Num(h.count as f64));
+            hists.insert(series.clone(), Json::Obj(o));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(num_map(&s.counters).collect()));
+        root.insert("gauges".to_string(), Json::Obj(num_map(&s.gauges).collect()));
+        root.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::json::to_string;
+
+    #[test]
+    fn counters_and_gauges_accumulate_per_series() {
+        let r = Registry::new();
+        r.counter_add("done_total", 1.0);
+        r.counter_add("done_total", 2.0);
+        r.gauge_set("in_flight{gateway=\"a\"}", 3.0);
+        r.gauge_set("in_flight{gateway=\"b\"}", 5.0);
+        r.gauge_add("in_flight{gateway=\"b\"}", -2.0);
+        assert_eq!(r.get("done_total"), Some(3.0));
+        assert_eq!(r.get("in_flight{gateway=\"a\"}"), Some(3.0));
+        assert_eq!(r.get("in_flight{gateway=\"b\"}"), Some(3.0));
+        assert_eq!(r.get("missing"), None);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let r = Registry::new();
+        for v in [0.5, 1.5, 2.5, 10.0] {
+            r.observe("lat_s", &[1.0, 2.0, 4.0], v);
+        }
+        let h = r.hist("lat_s").unwrap();
+        assert_eq!(h.counts, vec![1, 2, 3]);
+        assert_eq!(h.count, 4);
+        assert_eq!(h.sum, 14.5);
+    }
+
+    #[test]
+    fn prometheus_text_has_type_headers_and_histogram_expansion() {
+        let r = Registry::new();
+        r.counter_add("clover_done_total", 2.0);
+        r.gauge_set("clover_in_flight{gateway=\"r8\"}", 1.0);
+        r.observe("clover_ttft_s", &[0.1], 0.05);
+        let text = r.prometheus_text();
+        assert!(text.contains("# TYPE clover_done_total counter\n"));
+        assert!(text.contains("clover_done_total 2\n"));
+        assert!(text.contains("# TYPE clover_in_flight gauge\n"));
+        assert!(text.contains("clover_in_flight{gateway=\"r8\"} 1\n"));
+        assert!(text.contains("# TYPE clover_ttft_s histogram\n"));
+        assert!(text.contains("clover_ttft_s_bucket{le=\"0.1\"} 1\n"));
+        assert!(text.contains("clover_ttft_s_bucket{le=\"+Inf\"} 1\n"));
+        assert!(text.contains("clover_ttft_s_sum 0.05\n"));
+        assert!(text.contains("clover_ttft_s_count 1\n"));
+    }
+
+    #[test]
+    fn type_header_emitted_once_per_family() {
+        let r = Registry::new();
+        r.gauge_set("g{x=\"1\"}", 1.0);
+        r.gauge_set("g{x=\"2\"}", 2.0);
+        let text = r.prometheus_text();
+        assert_eq!(text.matches("# TYPE g gauge").count(), 1);
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let r = Registry::new();
+        r.counter_add("c", 1.0);
+        r.gauge_set("g", 2.5);
+        r.observe("h", &[1.0], 0.5);
+        let parsed = Json::parse(&to_string(&r.to_json())).unwrap();
+        let Json::Obj(root) = parsed else { panic!("object root") };
+        let Json::Obj(counters) = &root["counters"] else { panic!() };
+        assert_eq!(counters["c"], Json::Num(1.0));
+        let Json::Obj(hists) = &root["histograms"] else { panic!() };
+        let Json::Obj(h) = &hists["h"] else { panic!() };
+        assert_eq!(h["count"], Json::Num(1.0));
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability for the serving spine: injectable clocks, a metrics
+//! registry, and the flight-recorder/trace layer.
+//!
+//! The serve engine stays unaware of any of this beyond the optional
+//! [`StepHook`](crate::serve::StepHook) tap methods (`on_step`/`on_span`,
+//! gated behind `wants_step_events` so a hookless serve pays nothing).
+//! The pieces:
+//!
+//! * [`clock::Clock`] — wall or manual (virtual) time, producing real
+//!   `Instant`s so sessions, batchers, and deadlines need no changes.
+//!   The stub backend's simulated step delays advance a manual clock
+//!   instead of blocking, making latency tests exact and fast.
+//! * [`metrics::Registry`] — hand-rolled counters/gauges/histograms with
+//!   Prometheus text exposition and a JSON dump; shared `Arc` between
+//!   gateway workers (producers) and the router/CLI (consumers).
+//! * [`trace::TraceSink`] — per-step flight-recorder ring + per-request
+//!   span timelines, exportable as Chrome trace-event JSON and strong
+//!   enough to reconstruct `ServeMetrics` aggregates.
+
+pub mod clock;
+pub mod metrics;
+pub mod trace;
+
+pub use clock::Clock;
+pub use metrics::Registry;
+pub use trace::{
+    ReconMetrics, RequestSpan, SpanEvent, SpanPoint, StepEvent, TeeHook, TraceSink,
+};

@@ -1,0 +1,590 @@
+//! Flight recorder and span timelines for the serve engine.
+//!
+//! [`TraceSink`] is a [`StepHook`] that assembles two views of a serve:
+//!
+//! * **step events** — one [`StepEvent`] per fused (or draft) step with
+//!   the slab width, lane census, prefill/decode/draft/verify token mix,
+//!   step wall time, and KV live/freed bytes, kept in a bounded
+//!   flight-recorder ring (oldest evicted first);
+//! * **request spans** — a [`RequestSpan`] per request id tracking the
+//!   queued → admitted → prefill chunks → first token → spec rounds →
+//!   done/cancelled timeline with monotonic engine-clock timestamps.
+//!
+//! Both export as Chrome trace-event JSON (`{"traceEvents": [...]}` of
+//! `"X"` complete events — loadable in Perfetto/`chrome://tracing`), and
+//! the span view is strong enough to *reconstruct* the engine's
+//! [`ServeMetrics`](crate::serve::ServeMetrics) aggregates — the bench
+//! checker uses that to prove the taps observe faithfully.
+//!
+//! A cancel-storm detector arms a dump request when too many
+//! cancellations land inside a sliding window; the gateway/CLI drain it
+//! (plus an explicit `shutdown` trigger) into flight-recorder dumps.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::json::Json;
+use crate::serve::engine::percentile;
+use crate::serve::{Cancellation, CancelReason, Completion, Request, StepHook};
+
+/// One engine step as observed by the tap (see module docs).
+#[derive(Clone, Debug)]
+pub struct StepEvent {
+    /// Global step sequence number (draft micro-steps included).
+    pub seq: usize,
+    /// Engine decode-step counter after this step (unchanged by drafts).
+    pub decode_step: usize,
+    /// Slab width the step ran at.
+    pub width: usize,
+    /// Draft-model micro-step (width-1 proposal) rather than a fused step.
+    pub draft: bool,
+    /// Start of the step, seconds on the engine clock.
+    pub t_s: f64,
+    /// Step wall time in seconds.
+    pub dur_s: f64,
+    /// Lanes occupied by live sessions / total lanes.
+    pub lanes_live: usize,
+    pub lanes_total: usize,
+    /// Row-token mix of the step's slabs (pads excluded).
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+    pub draft_tokens: usize,
+    pub verify_tokens: usize,
+    /// KV accounting after the step.
+    pub kv_live_bytes: usize,
+    pub kv_freed_bytes: usize,
+}
+
+/// A point on a request's span timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpanPoint {
+    /// Request arrival (batcher-queue entry); `t_s` is the arrival stamp.
+    Queued,
+    /// Admitted into KV lane `lane`.
+    Admitted { lane: usize },
+    /// A prefill chunk of `tokens` prompt tokens was consumed.
+    PrefillChunk { tokens: usize },
+    /// First generated token sampled.
+    FirstToken,
+    /// A speculative round verified: `drafted` proposed, `accepted` kept.
+    SpecRound { drafted: usize, accepted: usize },
+    /// Finished normally with `generated` non-prompt tokens.
+    Done { generated: usize },
+    /// Cancelled (user or deadline) with `generated` tokens so far.
+    Cancelled { generated: usize },
+}
+
+/// Timestamped [`SpanPoint`] for one request.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub id: u64,
+    pub t_s: f64,
+    pub point: SpanPoint,
+}
+
+/// Assembled per-request timeline.
+#[derive(Clone, Debug, Default)]
+pub struct RequestSpan {
+    pub id: u64,
+    pub queued_s: Option<f64>,
+    pub admitted_s: Option<f64>,
+    pub lane: Option<usize>,
+    pub first_token_s: Option<f64>,
+    /// `(t_s, tokens)` per prefill chunk.
+    pub prefill_chunks: Vec<(f64, usize)>,
+    /// `(t_s, drafted, accepted)` per speculative round.
+    pub spec_rounds: Vec<(f64, usize, usize)>,
+    /// Terminal stamp; `None` while the request is in flight.
+    pub end_s: Option<f64>,
+    pub generated: usize,
+    pub cancelled: bool,
+}
+
+impl RequestSpan {
+    pub fn closed(&self) -> bool {
+        self.end_s.is_some()
+    }
+}
+
+/// Aggregates recomputed purely from span timelines; the bench checker
+/// compares them against the engine's own `ServeMetrics`.
+#[derive(Clone, Debug, Default)]
+pub struct ReconMetrics {
+    pub completed: usize,
+    pub cancelled: usize,
+    pub generated_tokens: usize,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+}
+
+/// Cancel-storm detector: `threshold` cancels within `window_s` seconds
+/// arms a flight-recorder dump.
+const STORM_WINDOW_S: f64 = 1.0;
+const STORM_THRESHOLD: usize = 8;
+
+/// Flight recorder + span assembler (see module docs).
+#[derive(Debug)]
+pub struct TraceSink {
+    ring_cap: usize,
+    ring: VecDeque<StepEvent>,
+    /// Total step events observed (ring evictions included).
+    steps_seen: usize,
+    spans: BTreeMap<u64, RequestSpan>,
+    cancel_times: VecDeque<f64>,
+    dump_reason: Option<String>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl TraceSink {
+    /// Recorder keeping at most `ring_cap` recent step events.
+    pub fn new(ring_cap: usize) -> Self {
+        Self {
+            ring_cap: ring_cap.max(1),
+            ring: VecDeque::new(),
+            steps_seen: 0,
+            spans: BTreeMap::new(),
+            cancel_times: VecDeque::new(),
+            dump_reason: None,
+        }
+    }
+
+    pub fn record_step(&mut self, ev: &StepEvent) {
+        if self.ring.len() == self.ring_cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev.clone());
+        self.steps_seen += 1;
+    }
+
+    pub fn record_span(&mut self, ev: &SpanEvent) {
+        let span = self.spans.entry(ev.id).or_insert_with(|| RequestSpan {
+            id: ev.id,
+            ..RequestSpan::default()
+        });
+        match ev.point {
+            SpanPoint::Queued => span.queued_s = Some(ev.t_s),
+            SpanPoint::Admitted { lane } => {
+                span.admitted_s = Some(ev.t_s);
+                span.lane = Some(lane);
+            }
+            SpanPoint::PrefillChunk { tokens } => span.prefill_chunks.push((ev.t_s, tokens)),
+            SpanPoint::FirstToken => {
+                if span.first_token_s.is_none() {
+                    span.first_token_s = Some(ev.t_s);
+                }
+            }
+            SpanPoint::SpecRound { drafted, accepted } => {
+                span.spec_rounds.push((ev.t_s, drafted, accepted));
+            }
+            SpanPoint::Done { generated } => {
+                span.end_s = Some(ev.t_s);
+                span.generated = generated;
+            }
+            SpanPoint::Cancelled { generated } => {
+                span.end_s = Some(ev.t_s);
+                span.generated = generated;
+                span.cancelled = true;
+                self.cancel_times.push_back(ev.t_s);
+                while let Some(&t0) = self.cancel_times.front() {
+                    if ev.t_s - t0 > STORM_WINDOW_S {
+                        self.cancel_times.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if self.cancel_times.len() >= STORM_THRESHOLD && self.dump_reason.is_none() {
+                    self.dump_reason = Some(format!(
+                        "cancel-storm: {} cancels within {STORM_WINDOW_S}s",
+                        self.cancel_times.len()
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Arm a flight-recorder dump explicitly (overload, shutdown).
+    pub fn request_dump(&mut self, reason: &str) {
+        if self.dump_reason.is_none() {
+            self.dump_reason = Some(reason.to_string());
+        }
+    }
+
+    /// Consume the armed dump trigger, if any: `(reason, flight dump)`.
+    pub fn take_dump(&mut self) -> Option<(String, Json)> {
+        let reason = self.dump_reason.take()?;
+        let dump = self.flight_dump(&reason);
+        Some((reason, dump))
+    }
+
+    pub fn steps(&self) -> impl Iterator<Item = &StepEvent> {
+        self.ring.iter()
+    }
+
+    pub fn steps_seen(&self) -> usize {
+        self.steps_seen
+    }
+
+    pub fn ring_len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &RequestSpan> {
+        self.spans.values()
+    }
+
+    pub fn span(&self, id: u64) -> Option<&RequestSpan> {
+        self.spans.get(&id)
+    }
+
+    /// Spans with no terminal point — must be 0 after a drained serve, or
+    /// the taps leaked a request.
+    pub fn open_spans(&self) -> usize {
+        self.spans.values().filter(|s| !s.closed()).count()
+    }
+
+    /// Recompute serve aggregates from span timelines alone.  TTFT per
+    /// request is `first_token - queued` (or `end - queued` when nothing
+    /// was generated, matching `Completion::ttft_s`); percentiles use the
+    /// engine's own nearest-rank [`percentile`].
+    pub fn reconstruct(&self) -> ReconMetrics {
+        let mut m = ReconMetrics::default();
+        let mut ttfts = Vec::new();
+        for s in self.spans.values() {
+            let Some(end) = s.end_s else { continue };
+            if s.cancelled {
+                m.cancelled += 1;
+                continue;
+            }
+            m.completed += 1;
+            m.generated_tokens += s.generated;
+            let queued = s.queued_s.unwrap_or(end);
+            ttfts.push(s.first_token_s.unwrap_or(end) - queued);
+        }
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        m.ttft_p50_s = percentile(&ttfts, 0.50);
+        m.ttft_p99_s = percentile(&ttfts, 0.99);
+        m
+    }
+
+    // ---- Chrome trace-event export -----------------------------------
+
+    /// Full recording as Chrome trace-event JSON: one `"X"` complete
+    /// event per *closed* request span (pid 1, tid = request id), one per
+    /// ring step event (pid 0, tid 0), plus instant (`"i"`) marks for
+    /// first tokens.  `ts`/`dur` are microseconds per the trace-event
+    /// spec.
+    pub fn chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for ev in &self.ring {
+            let mut args = BTreeMap::new();
+            args.insert("width".into(), Json::Num(ev.width as f64));
+            args.insert("decode_step".into(), Json::Num(ev.decode_step as f64));
+            args.insert("lanes_live".into(), Json::Num(ev.lanes_live as f64));
+            args.insert("lanes_total".into(), Json::Num(ev.lanes_total as f64));
+            args.insert("prefill_tokens".into(), Json::Num(ev.prefill_tokens as f64));
+            args.insert("decode_tokens".into(), Json::Num(ev.decode_tokens as f64));
+            args.insert("draft_tokens".into(), Json::Num(ev.draft_tokens as f64));
+            args.insert("verify_tokens".into(), Json::Num(ev.verify_tokens as f64));
+            args.insert("kv_live_bytes".into(), Json::Num(ev.kv_live_bytes as f64));
+            args.insert("kv_freed_bytes".into(), Json::Num(ev.kv_freed_bytes as f64));
+            let name = if ev.draft {
+                format!("draft step {}", ev.seq)
+            } else {
+                format!("step {} w={}", ev.seq, ev.width)
+            };
+            events.push(complete_event(&name, "step", 0, 0, ev.t_s, ev.dur_s, args));
+        }
+        for s in self.spans.values() {
+            let Some(end) = s.end_s else { continue };
+            let start = s.queued_s.or(s.admitted_s).unwrap_or(end);
+            let mut args = BTreeMap::new();
+            args.insert("generated".into(), Json::Num(s.generated as f64));
+            args.insert("cancelled".into(), Json::Bool(s.cancelled));
+            args.insert("prefill_chunks".into(), Json::Num(s.prefill_chunks.len() as f64));
+            args.insert("spec_rounds".into(), Json::Num(s.spec_rounds.len() as f64));
+            if let Some(lane) = s.lane {
+                args.insert("lane".into(), Json::Num(lane as f64));
+            }
+            if let (Some(q), Some(a)) = (s.queued_s, s.admitted_s) {
+                args.insert("queue_wait_s".into(), Json::Num(a - q));
+            }
+            if let (Some(q), Some(f)) = (s.queued_s, s.first_token_s) {
+                args.insert("ttft_s".into(), Json::Num(f - q));
+            }
+            events.push(complete_event(
+                &format!("req {}", s.id),
+                "request",
+                1,
+                s.id as usize,
+                start,
+                end - start,
+                args,
+            ));
+            if let Some(f) = s.first_token_s {
+                let mut ev = BTreeMap::new();
+                ev.insert("name".into(), Json::Str("first token".into()));
+                ev.insert("cat".into(), Json::Str("request".into()));
+                ev.insert("ph".into(), Json::Str("i".into()));
+                ev.insert("s".into(), Json::Str("t".into()));
+                ev.insert("pid".into(), Json::Num(1.0));
+                ev.insert("tid".into(), Json::Num(s.id as f64));
+                ev.insert("ts".into(), Json::Num(f * 1e6));
+                events.push(Json::Obj(ev));
+            }
+        }
+        trace_root(events, self.spans.len(), self.steps_seen)
+    }
+
+    /// Ring-only dump for the armed trigger: recent steps plus any spans
+    /// still open at dump time (the requests an incident interrupted).
+    pub fn flight_dump(&self, reason: &str) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for ev in &self.ring {
+            let mut args = BTreeMap::new();
+            args.insert("width".into(), Json::Num(ev.width as f64));
+            args.insert("lanes_live".into(), Json::Num(ev.lanes_live as f64));
+            args.insert("kv_live_bytes".into(), Json::Num(ev.kv_live_bytes as f64));
+            let name = if ev.draft {
+                format!("draft step {}", ev.seq)
+            } else {
+                format!("step {} w={}", ev.seq, ev.width)
+            };
+            events.push(complete_event(&name, "step", 0, 0, ev.t_s, ev.dur_s, args));
+        }
+        let mut root = trace_root(events, self.spans.len(), self.steps_seen);
+        if let Json::Obj(o) = &mut root {
+            if let Some(Json::Obj(other)) = o.get_mut("otherData") {
+                other.insert("dump_reason".into(), Json::Str(reason.into()));
+                other.insert("open_spans".into(), Json::Num(self.open_spans() as f64));
+            }
+        }
+        root
+    }
+}
+
+fn complete_event(
+    name: &str,
+    cat: &str,
+    pid: usize,
+    tid: usize,
+    t_s: f64,
+    dur_s: f64,
+    args: BTreeMap<String, Json>,
+) -> Json {
+    let mut ev = BTreeMap::new();
+    ev.insert("name".into(), Json::Str(name.into()));
+    ev.insert("cat".into(), Json::Str(cat.into()));
+    ev.insert("ph".into(), Json::Str("X".into()));
+    ev.insert("pid".into(), Json::Num(pid as f64));
+    ev.insert("tid".into(), Json::Num(tid as f64));
+    ev.insert("ts".into(), Json::Num(t_s * 1e6));
+    ev.insert("dur".into(), Json::Num(dur_s * 1e6));
+    ev.insert("args".into(), Json::Obj(args));
+    Json::Obj(ev)
+}
+
+fn trace_root(events: Vec<Json>, requests: usize, steps_seen: usize) -> Json {
+    let mut other = BTreeMap::new();
+    other.insert("requests".into(), Json::Num(requests as f64));
+    other.insert("steps_seen".into(), Json::Num(steps_seen as f64));
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    root.insert("otherData".into(), Json::Obj(other));
+    Json::Obj(root)
+}
+
+impl StepHook for TraceSink {
+    fn wants_step_events(&self) -> bool {
+        true
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        self.record_step(ev);
+    }
+
+    fn on_span(&mut self, ev: &SpanEvent) {
+        self.record_span(ev);
+    }
+}
+
+/// Forward every hook callback to two hooks.  Control-flow callbacks
+/// (ingress, cancellations) delegate to the *primary* only — the
+/// secondary is a pure observer (a [`TraceSink`], a stats printer).
+pub struct TeeHook<'a> {
+    pub primary: &'a mut dyn StepHook,
+    pub observer: &'a mut dyn StepHook,
+}
+
+impl StepHook for TeeHook<'_> {
+    fn poll_ingress(&mut self, idle: bool) -> Option<Vec<Request>> {
+        self.primary.poll_ingress(idle)
+    }
+
+    fn take_cancellations(&mut self, now: std::time::Instant) -> Vec<Cancellation> {
+        self.primary.take_cancellations(now)
+    }
+
+    fn wants_step_events(&self) -> bool {
+        self.primary.wants_step_events() || self.observer.wants_step_events()
+    }
+
+    fn on_started(&mut self, id: u64, lane: usize, step: usize) {
+        self.primary.on_started(id, lane, step);
+        self.observer.on_started(id, lane, step);
+    }
+
+    fn on_token(&mut self, id: u64, pos: usize, token: i32, step: usize) {
+        self.primary.on_token(id, pos, token, step);
+        self.observer.on_token(id, pos, token, step);
+    }
+
+    fn on_done(&mut self, completion: &Completion) {
+        self.primary.on_done(completion);
+        self.observer.on_done(completion);
+    }
+
+    fn on_cancelled(&mut self, id: u64, tokens: Vec<i32>, reason: CancelReason, step: usize) {
+        self.primary.on_cancelled(id, tokens.clone(), reason, step);
+        self.observer.on_cancelled(id, tokens, reason, step);
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        self.primary.on_step(ev);
+        self.observer.on_step(ev);
+    }
+
+    fn on_span(&mut self, ev: &SpanEvent) {
+        self.primary.on_span(ev);
+        self.observer.on_span(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step(seq: usize, t_s: f64) -> StepEvent {
+        StepEvent {
+            seq,
+            decode_step: seq,
+            width: 8,
+            draft: false,
+            t_s,
+            dur_s: 0.001,
+            lanes_live: 2,
+            lanes_total: 8,
+            prefill_tokens: 8,
+            decode_tokens: 1,
+            draft_tokens: 0,
+            verify_tokens: 0,
+            kv_live_bytes: 1024,
+            kv_freed_bytes: 0,
+        }
+    }
+
+    fn span(id: u64, t_s: f64, point: SpanPoint) -> SpanEvent {
+        SpanEvent { id, t_s, point }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_evictions() {
+        let mut sink = TraceSink::new(4);
+        for i in 0..10 {
+            sink.record_step(&step(i, i as f64));
+        }
+        assert_eq!(sink.ring_len(), 4);
+        assert_eq!(sink.steps_seen(), 10);
+        let seqs: Vec<usize> = sink.steps().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn spans_assemble_and_reconstruct_aggregates() {
+        let mut sink = TraceSink::default();
+        for (id, ttft) in [(1u64, 0.5), (2, 1.5)] {
+            sink.record_span(&span(id, 0.0, SpanPoint::Queued));
+            sink.record_span(&span(id, 0.1, SpanPoint::Admitted { lane: id as usize }));
+            sink.record_span(&span(id, 0.2, SpanPoint::PrefillChunk { tokens: 8 }));
+            sink.record_span(&span(id, ttft, SpanPoint::FirstToken));
+            sink.record_span(&span(id, ttft + 1.0, SpanPoint::Done { generated: 4 }));
+        }
+        sink.record_span(&span(3, 0.0, SpanPoint::Queued));
+        sink.record_span(&span(3, 0.3, SpanPoint::Cancelled { generated: 0 }));
+        assert_eq!(sink.open_spans(), 0);
+        let m = sink.reconstruct();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.cancelled, 1);
+        assert_eq!(m.generated_tokens, 8);
+        assert_eq!(m.ttft_p50_s, 1.0);
+        assert_eq!(m.ttft_p99_s, 1.5);
+    }
+
+    #[test]
+    fn cancel_storm_arms_a_dump_quiet_cancels_do_not() {
+        let mut quiet = TraceSink::default();
+        for i in 0..STORM_THRESHOLD {
+            let t = i as f64 * 10.0;
+            quiet.record_span(&span(i as u64, t, SpanPoint::Cancelled { generated: 0 }));
+        }
+        assert!(quiet.take_dump().is_none(), "spread-out cancels are not a storm");
+
+        let mut storm = TraceSink::default();
+        storm.record_step(&step(0, 0.0));
+        for i in 0..STORM_THRESHOLD {
+            let t = i as f64 * 0.01;
+            storm.record_span(&span(i as u64, t, SpanPoint::Cancelled { generated: 0 }));
+        }
+        let (reason, dump) = storm.take_dump().expect("storm arms a dump");
+        assert!(reason.contains("cancel-storm"));
+        let Json::Obj(root) = dump else { panic!("object dump") };
+        let Json::Obj(other) = &root["otherData"] else { panic!() };
+        assert_eq!(other["dump_reason"], Json::Str(reason));
+        assert!(storm.take_dump().is_none(), "trigger is consumed");
+    }
+
+    #[test]
+    fn shutdown_dump_is_armable_once() {
+        let mut sink = TraceSink::default();
+        sink.request_dump("shutdown");
+        sink.request_dump("later");
+        let (reason, _) = sink.take_dump().unwrap();
+        assert_eq!(reason, "shutdown");
+    }
+
+    #[test]
+    fn chrome_trace_has_one_complete_span_per_closed_request() {
+        let mut sink = TraceSink::default();
+        sink.record_step(&step(0, 0.0));
+        sink.record_step(&step(1, 0.002));
+        sink.record_span(&span(7, 0.0, SpanPoint::Queued));
+        sink.record_span(&span(7, 0.001, SpanPoint::Admitted { lane: 0 }));
+        sink.record_span(&span(7, 0.004, SpanPoint::FirstToken));
+        sink.record_span(&span(7, 0.01, SpanPoint::Done { generated: 3 }));
+        sink.record_span(&span(8, 0.0, SpanPoint::Queued)); // still open
+
+        let Json::Obj(root) = sink.chrome_trace() else { panic!("object root") };
+        let Json::Arr(events) = &root["traceEvents"] else { panic!("traceEvents array") };
+        let request_spans: Vec<&Json> = events
+            .iter()
+            .filter(|e| {
+                e.get("cat") == Some(&Json::Str("request".into()))
+                    && e.get("ph") == Some(&Json::Str("X".into()))
+            })
+            .collect();
+        assert_eq!(request_spans.len(), 1, "open spans are not exported");
+        let Json::Obj(req) = request_spans[0] else { panic!() };
+        assert_eq!(req["tid"], Json::Num(7.0));
+        assert_eq!(req["ts"], Json::Num(0.0));
+        assert_eq!(req["dur"], Json::Num(0.01 * 1e6));
+        let steps: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("cat") == Some(&Json::Str("step".into())))
+            .collect();
+        assert_eq!(steps.len(), 2);
+    }
+}

@@ -58,6 +58,7 @@
 use anyhow::{bail, Result};
 use std::time::Duration;
 
+use crate::obs::Clock;
 use crate::serve::kv::{KvCodecSpec, PagedKvStore, PAGE_TOKENS};
 use crate::tensor::Tensor;
 
@@ -87,6 +88,12 @@ pub struct StubSpec {
     /// cost model the per-step token budget (`--max-step-tokens`) trades
     /// against.  Duration::ZERO (the default) keeps steps flat-cost.
     pub width_delay: Duration,
+    /// Time source the delays burn: the wall clock by default, or a
+    /// manual [`Clock`] so simulated step cost advances *virtual* time —
+    /// latency/TTFT assertions become exact and the test runs at host
+    /// speed.  `Engine::new_stub` adopts this clock as the engine clock,
+    /// so one spec field puts the whole serve on a shared timeline.
+    pub clock: Clock,
 }
 
 impl Default for StubSpec {
@@ -102,6 +109,7 @@ impl Default for StubSpec {
             seed: 0,
             step_delay: Duration::ZERO,
             width_delay: Duration::ZERO,
+            clock: Clock::wall(),
         }
     }
 }
@@ -313,9 +321,7 @@ impl StubModel {
                 self.logits_into(lane, pos, &mut logits[at..at + vocab]);
             }
         }
-        if !delay.is_zero() {
-            std::thread::sleep(delay);
-        }
+        self.spec.clock.sleep(delay);
         let shape = if width == 1 { vec![b, vocab] } else { vec![b, width, vocab] };
         Ok(Tensor::new(shape, logits))
     }
@@ -706,5 +712,20 @@ mod tests {
         assert!(a.step(3, &[0; 6], &[0; 6]).is_err(), "width 3 not in the ladder");
         assert!(a.step(1, &[0, 0], &[0]).is_err(), "length mismatch");
         assert!(a.step(1, &[0, 0], &[0, 99]).is_err(), "position outside window");
+    }
+
+    #[test]
+    fn manual_clock_makes_step_delays_virtual() {
+        let clock = Clock::manual();
+        let mut s = spec();
+        s.step_delay = Duration::from_secs(2);
+        s.width_delay = Duration::from_secs(1);
+        s.clock = clock.clone();
+        let mut a = StubModel::new(s);
+        let real = std::time::Instant::now();
+        a.step(1, &[5, 9], &[0, 0]).unwrap();
+        assert!(real.elapsed() < Duration::from_secs(2), "delay must not block");
+        // step_delay + 1 × width_delay, burned entirely on the timeline.
+        assert_eq!(clock.secs_since_epoch(clock.now()), 3.0);
     }
 }

@@ -54,10 +54,11 @@ use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use crate::model::params::ParamSet;
+use crate::obs::{Clock, SpanEvent, SpanPoint, StepEvent};
 use crate::runtime::stub::{StubModel, StubSpec};
 use crate::runtime::{DecodeSession, Runtime};
 use crate::tensor::{Tensor, Value};
-use crate::util::{argmax, Stopwatch};
+use crate::util::argmax;
 
 use super::batcher::{BatchPolicy, Batcher, Request};
 use super::kv::{KvCodecSpec, KvConfig, KvManager, PAGE_TOKENS};
@@ -364,6 +365,23 @@ pub trait StepHook {
     /// A request was cancelled; `tokens` is the partial row (prompt +
     /// whatever was generated before retirement).
     fn on_cancelled(&mut self, _id: u64, _tokens: Vec<i32>, _reason: CancelReason, _step: usize) {}
+
+    /// Opt in to the observability taps below.  The engine only assembles
+    /// [`StepEvent`]/[`SpanEvent`] payloads (lane census, token mix, KV
+    /// accounting) when this returns true, so hooks that don't trace —
+    /// including [`NoHook`] — pay nothing beyond this one call per step.
+    fn wants_step_events(&self) -> bool {
+        false
+    }
+
+    /// One fused (or draft) step executed; fires only when
+    /// [`StepHook::wants_step_events`] is true.
+    fn on_step(&mut self, _ev: &StepEvent) {}
+
+    /// A request-span timeline point (queued/admitted/prefill chunk/first
+    /// token/spec round/done/cancelled); fires only when
+    /// [`StepHook::wants_step_events`] is true.
+    fn on_span(&mut self, _ev: &SpanEvent) {}
 }
 
 /// The no-op hook closed-set serving runs with.
@@ -487,6 +505,12 @@ pub struct Engine<'rt> {
     /// compressed page size, target plus draft for a speculative pair —
     /// fits alongside the live pages (see [`Engine::with_kv_memory_budget`]).
     kv_memory_budget: Option<usize>,
+    /// Time source for every `now` the step loop takes (cancellation
+    /// sweeps, TTFT/latency stamps, wall_s) and for trace timestamps.
+    /// Wall by default; [`Engine::new_stub`] adopts the spec's clock so a
+    /// manual clock shared with the stub's simulated delays puts the
+    /// whole serve on one virtual timeline.
+    clock: Clock,
 }
 
 impl<'rt> Engine<'rt> {
@@ -543,6 +567,7 @@ impl<'rt> Engine<'rt> {
             spec: None,
             max_step_tokens: None,
             kv_memory_budget: None,
+            clock: Clock::wall(),
         })
     }
 
@@ -561,6 +586,7 @@ impl<'rt> Engine<'rt> {
             codec: KvCodecSpec::Identity,
         };
         let widths = spec.widths();
+        let clock = spec.clock.clone();
         Engine {
             kv_cfg,
             batch_slots: spec.batch_slots,
@@ -570,7 +596,30 @@ impl<'rt> Engine<'rt> {
             spec: None,
             max_step_tokens: None,
             kv_memory_budget: None,
+            clock,
         }
+    }
+
+    /// Replace the engine's time source (see the `clock` field).  Also
+    /// rebinds any stub backings — target and attached draft — so their
+    /// simulated delays burn the same timeline; call order relative to
+    /// [`Engine::with_speculative_stub`] doesn't matter.
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        if let Backing::Stub(spec) = &mut self.backing {
+            spec.clock = clock.clone();
+        }
+        if let Some(sp) = &mut self.spec {
+            if let DraftBacking::Stub(spec) = &mut sp.draft {
+                spec.clock = clock.clone();
+            }
+        }
+        self.clock = clock;
+        self
+    }
+
+    /// The engine's time source (shared with spawned traces and tests).
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Cap the slab ladder at `cap` tokens (`Some(1)` disables chunked
@@ -668,6 +717,8 @@ impl<'rt> Engine<'rt> {
             // truncated model) — it stores identity pages.
             codec: KvCodecSpec::Identity,
         };
+        let mut draft = draft;
+        draft.clock = self.clock.clone();
         self.spec = Some(Speculative { draft: DraftBacking::Stub(draft), cfg, draft_kv });
         Ok(self)
     }
@@ -883,7 +934,10 @@ impl<'rt> Engine<'rt> {
             }
         }
 
-        let sw = Stopwatch::new();
+        let t_origin = self.clock.now();
+        // Observability taps are assembled only when the hook asks
+        // (TraceSink and friends); NoHook serving skips every payload.
+        let wants_obs = hook.wants_step_events();
         let b = self.batch_slots;
         let cap = policy.max_batch.min(b);
         let cwin = self.kv_cfg.max_positions;
@@ -969,7 +1023,7 @@ impl<'rt> Engine<'rt> {
                 break; // drained
             }
 
-            let now = Instant::now();
+            let now = self.clock.now();
             // ---- cancellation: retire sessions between decode steps ----
             // A cancelled lane frees *before* this iteration's admission
             // pass, so a waiting request reclaims it without skipping a
@@ -983,11 +1037,35 @@ impl<'rt> Engine<'rt> {
                     kv.free(sess.slot())?;
                     kv_reservations.remove(&c.id);
                     metrics.cancelled += 1;
-                    metrics.generated_tokens += sess.generated();
+                    let gen = sess.generated();
+                    metrics.generated_tokens += gen;
                     hook.on_cancelled(c.id, sess.into_tokens(), c.reason, metrics.decode_steps);
+                    if wants_obs {
+                        hook.on_span(&SpanEvent {
+                            id: c.id,
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::Cancelled { generated: gen },
+                        });
+                    }
                 } else if let Some(req) = batcher.remove(c.id) {
                     metrics.cancelled += 1;
+                    let arrived = req.arrived;
                     hook.on_cancelled(c.id, req.prompt, c.reason, metrics.decode_steps);
+                    if wants_obs {
+                        // Cancelled while still queued: open the span at
+                        // its arrival stamp so the timeline still shows
+                        // the queue wait the request paid.
+                        hook.on_span(&SpanEvent {
+                            id: c.id,
+                            t_s: self.clock.secs_since_epoch(arrived),
+                            point: SpanPoint::Queued,
+                        });
+                        hook.on_span(&SpanEvent {
+                            id: c.id,
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::Cancelled { generated: 0 },
+                        });
+                    }
                 }
                 // Unknown or already-finished id: completion won the race.
             }
@@ -1039,12 +1117,25 @@ impl<'rt> Engine<'rt> {
                     // bit-identical to vanilla greedy; sampled decode has
                     // no such identity to preserve).
                     let wants_spec = req.sampling.speculative && req.sampling.is_greedy();
+                    let arrived = req.arrived;
                     let mut sess = Session::new(req, slot, cwin, now);
                     if let (true, Some(sp)) = (wants_spec, &self.spec) {
                         sess.enable_spec(sp.cfg.draft_len, sp.cfg.adaptive);
                     }
                     metrics.admissions += 1;
                     hook.on_started(sess.id(), slot, metrics.decode_steps);
+                    if wants_obs {
+                        hook.on_span(&SpanEvent {
+                            id: sess.id(),
+                            t_s: self.clock.secs_since_epoch(arrived),
+                            point: SpanPoint::Queued,
+                        });
+                        hook.on_span(&SpanEvent {
+                            id: sess.id(),
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::Admitted { lane: slot },
+                        });
+                    }
                     if sess.is_done() {
                         // Nothing to decode (max_new == 0 or the prompt
                         // already fills the window): complete immediately.
@@ -1055,6 +1146,13 @@ impl<'rt> Engine<'rt> {
                         lat.push(c.latency_s);
                         ttfts.push(c.ttft_s);
                         hook.on_done(&c);
+                        if wants_obs {
+                            hook.on_span(&SpanEvent {
+                                id: c.id,
+                                t_s: self.clock.secs_since_epoch(now),
+                                point: SpanPoint::Done { generated: 0 },
+                            });
+                        }
                         if !open {
                             done.insert(c.id, c);
                         }
@@ -1101,6 +1199,7 @@ impl<'rt> Engine<'rt> {
                 }
                 if lanes.iter().flatten().any(|s| s.drafting()) {
                     let draft = draft_backend.as_mut().expect("spec engines carry a draft");
+                    let step_t0 = self.clock.now();
                     let mut toks = vec![0i32; b];
                     let mut poss = vec![0i32; b];
                     for (lane, slot) in lanes.iter().enumerate() {
@@ -1115,15 +1214,36 @@ impl<'rt> Engine<'rt> {
                         }
                     }
                     let logits = draft.step(1, toks, poss)?;
+                    let mut drafted_now = 0usize;
                     for (lane, slot) in lanes.iter_mut().enumerate() {
                         let Some(sess) = slot else { continue };
                         if sess.drafting() {
                             let d = argmax(logits_row(&logits, lane, 0, self.vocab)) as i32;
                             sess.push_draft(d);
                             metrics.drafted_tokens += 1;
+                            drafted_now += 1;
                         }
                     }
                     metrics.draft_steps += 1;
+                    if wants_obs {
+                        let end = self.clock.now();
+                        hook.on_step(&StepEvent {
+                            seq: metrics.decode_steps + metrics.draft_steps,
+                            decode_step: metrics.decode_steps,
+                            width: 1,
+                            draft: true,
+                            t_s: self.clock.secs_since_epoch(step_t0),
+                            dur_s: end.duration_since(step_t0).as_secs_f64(),
+                            lanes_live: lanes.iter().flatten().count(),
+                            lanes_total: b,
+                            prefill_tokens: 0,
+                            decode_tokens: 0,
+                            draft_tokens: drafted_now,
+                            verify_tokens: 0,
+                            kv_live_bytes: kv.live_bytes(),
+                            kv_freed_bytes: kv.freed_bytes(),
+                        });
+                    }
                     continue;
                 }
             }
@@ -1136,6 +1256,7 @@ impl<'rt> Engine<'rt> {
             // guarantee.  Budget-deferred lanes (len 0) feed only their
             // pad pair and consume nothing.
             let plan = StepPlan::build(&self.widths, &lanes, self.max_step_tokens);
+            let step_t0 = self.clock.now();
             let w = plan.width;
             let mut toks = vec![0i32; b * w];
             let mut poss = vec![0i32; b * w];
@@ -1163,7 +1284,11 @@ impl<'rt> Engine<'rt> {
             metrics.decode_steps += 1;
 
             // ---- sample / verify / retire; finished lanes free here ----
-            let now = Instant::now();
+            let now = self.clock.now();
+            // Token mix of this step's slabs, split at each session's
+            // prompt boundary (tap payload only).
+            let (mut mix_prefill, mut mix_decode, mut mix_verify) = (0usize, 0usize, 0usize);
+            let lanes_live = plan.slabs.iter().flatten().count();
             for lane in 0..b {
                 let Some(sess) = lanes[lane].as_mut() else { continue };
                 let slab = plan.slabs[lane].as_ref().expect("occupied lane planned");
@@ -1171,6 +1296,11 @@ impl<'rt> Engine<'rt> {
                 if taken == 0 {
                     continue; // budget-deferred: fed a pad, consumed nothing
                 }
+                let prefill_part = if sess.verify_len().is_some() {
+                    0
+                } else {
+                    sess.prompt_len().saturating_sub(slab.start).min(taken)
+                };
                 let finished = if sess.verify_len().is_some() {
                     // Accept the longest greedy-matching prefix of the
                     // draft plus the target's corrected token; roll the KV
@@ -1190,15 +1320,44 @@ impl<'rt> Engine<'rt> {
                     metrics.accepted_draft_tokens += out.accepted;
                     metrics.rollback_tokens += out.rejected;
                     metrics.slab_tokens += out.appended;
+                    mix_verify += taken;
+                    if wants_obs {
+                        hook.on_span(&SpanEvent {
+                            id: sess.id(),
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::SpecRound {
+                                drafted: taken,
+                                accepted: out.accepted,
+                            },
+                        });
+                    }
                     out.finished
                 } else {
                     kv.advance_by(sess.slot(), taken)?;
                     let row = logits_row(&logits, lane, taken - 1, self.vocab);
                     metrics.slab_tokens += taken;
+                    mix_prefill += prefill_part;
+                    mix_decode += taken - prefill_part;
+                    if wants_obs && prefill_part > 0 {
+                        hook.on_span(&SpanEvent {
+                            id: sess.id(),
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::PrefillChunk { tokens: prefill_part },
+                        });
+                    }
                     sess.observe_slab(taken, row, now)
                 };
                 let id = sess.id();
                 let sampled: Vec<(usize, i32)> = sess.sampled().to_vec();
+                // First generated token this step ⇔ everything generated so
+                // far was sampled just now.
+                if wants_obs && !sampled.is_empty() && sess.generated() == sampled.len() {
+                    hook.on_span(&SpanEvent {
+                        id,
+                        t_s: self.clock.secs_since_epoch(now),
+                        point: SpanPoint::FirstToken,
+                    });
+                }
                 for (pos, tok) in sampled {
                     hook.on_token(id, pos, tok, metrics.decode_steps);
                 }
@@ -1207,15 +1366,41 @@ impl<'rt> Engine<'rt> {
                     kv.free(sess.slot())?;
                     kv_reservations.remove(&id);
                     metrics.completed += 1;
-                    metrics.generated_tokens += sess.generated();
+                    let gen = sess.generated();
+                    metrics.generated_tokens += gen;
                     let c = sess.finish(now, metrics.decode_steps);
                     lat.push(c.latency_s);
                     ttfts.push(c.ttft_s);
                     hook.on_done(&c);
+                    if wants_obs {
+                        hook.on_span(&SpanEvent {
+                            id: c.id,
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::Done { generated: gen },
+                        });
+                    }
                     if !open {
                         done.insert(c.id, c);
                     }
                 }
+            }
+            if wants_obs {
+                hook.on_step(&StepEvent {
+                    seq: metrics.decode_steps + metrics.draft_steps,
+                    decode_step: metrics.decode_steps,
+                    width: w,
+                    draft: false,
+                    t_s: self.clock.secs_since_epoch(step_t0),
+                    dur_s: now.duration_since(step_t0).as_secs_f64(),
+                    lanes_live,
+                    lanes_total: b,
+                    prefill_tokens: mix_prefill,
+                    decode_tokens: mix_decode,
+                    draft_tokens: 0,
+                    verify_tokens: mix_verify,
+                    kv_live_bytes: kv.live_bytes(),
+                    kv_freed_bytes: kv.freed_bytes(),
+                });
             }
         }
 
@@ -1237,7 +1422,7 @@ impl<'rt> Engine<'rt> {
             );
         }
 
-        metrics.wall_s = sw.elapsed_s();
+        metrics.wall_s = self.clock.now().duration_since(t_origin).as_secs_f64();
         metrics.kv_peak_bytes = kv.peak_bytes();
         metrics.kv_freed_bytes = kv.freed_bytes();
         metrics.observe_latencies(lat, ttfts);
@@ -2269,7 +2454,11 @@ mod tests {
         // decode lane's latency.  Step cost scales with slab width
         // (width_delay), so capping the summed slab width caps the cost
         // of every step the decode lane shares.
-        let mk_spec = || StubSpec {
+        //
+        // Each engine runs on its own *manual* clock: the simulated width
+        // delays advance virtual time only, so the TTFT comparison is
+        // exact and the test spends no wall time sleeping.
+        let mk_spec = |clock: &Clock| StubSpec {
             n_layers: 1,
             n_heads: 1,
             rank: 2,
@@ -2277,19 +2466,22 @@ mod tests {
             batch_slots: 2,
             max_positions: 600,
             width_delay: Duration::from_millis(2),
+            clock: clock.clone(),
             ..Default::default()
         };
-        let now = Instant::now();
-        let mk = || {
+        let mk = |clock: &Clock| {
+            let now = clock.now();
             vec![
                 Request::greedy(0, (0..512).map(|i| i % 8).collect(), 2, now),
                 Request::greedy(1, vec![1, 2], 6, now),
             ]
         };
-        let unbounded = Engine::new_stub(mk_spec());
-        let (uc, um) = unbounded.serve_all(mk(), policy()).unwrap();
-        let budgeted = Engine::new_stub(mk_spec()).with_max_step_tokens(Some(9));
-        let (bc, bm) = budgeted.serve_all(mk(), policy()).unwrap();
+        let uclock = Clock::manual();
+        let unbounded = Engine::new_stub(mk_spec(&uclock));
+        let (uc, um) = unbounded.serve_all(mk(&uclock), policy()).unwrap();
+        let bclock = Clock::manual();
+        let budgeted = Engine::new_stub(mk_spec(&bclock)).with_max_step_tokens(Some(9));
+        let (bc, bm) = budgeted.serve_all(mk(&bclock), policy()).unwrap();
         // Same tokens either way — the budget only reshapes the schedule.
         for (a, b) in uc.iter().zip(&bc) {
             assert_eq!(a.tokens, b.tokens, "request {}", a.id);
@@ -2308,6 +2500,119 @@ mod tests {
             bc[1].ttft_s,
             uc[1].ttft_s
         );
+    }
+
+    // ---- observability taps (stub-backed) ----
+
+    /// The acceptance bar for the trace layer: span timelines alone must
+    /// reconstruct the engine's own aggregates — completed / cancelled /
+    /// generated tokens exactly, TTFT percentiles to float tolerance —
+    /// and the step events' token mix must account for every slab token.
+    #[test]
+    fn trace_sink_reconstructs_serve_metrics() {
+        use crate::obs::TraceSink;
+        let clock = Clock::manual();
+        let spec = StubSpec {
+            step_delay: Duration::from_millis(1),
+            clock: clock.clone(),
+            ..stub_spec()
+        };
+        let engine = Engine::new_stub(spec);
+        let now = clock.now();
+        let reqs: Vec<Request> = (0..6u64)
+            .map(|i| Request::greedy(i, vec![1, 2 + i as i32], 3 + (i as usize % 3), now))
+            .collect();
+        let mut sink = TraceSink::default();
+        let (completions, metrics) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut sink)
+            .unwrap();
+        assert_eq!(completions.len(), 6);
+        assert_eq!(sink.open_spans(), 0, "a drained serve closes every span");
+        let recon = sink.reconstruct();
+        assert_eq!(recon.completed, metrics.completed);
+        assert_eq!(recon.cancelled, metrics.cancelled);
+        assert_eq!(recon.generated_tokens, metrics.generated_tokens);
+        assert!(
+            (recon.ttft_p50_s - metrics.ttft_p50_s).abs() < 1e-9,
+            "recon p50 {} vs engine {}",
+            recon.ttft_p50_s,
+            metrics.ttft_p50_s
+        );
+        assert!((recon.ttft_p99_s - metrics.ttft_p99_s).abs() < 1e-9);
+        // Step-event token conservation: the per-step prefill/decode mix
+        // sums to exactly the slab tokens the engine consumed.
+        let (sum_p, sum_d) = sink
+            .steps()
+            .fold((0usize, 0usize), |(p, d), e| (p + e.prefill_tokens, d + e.decode_tokens));
+        assert_eq!(sum_p + sum_d, metrics.slab_tokens);
+        assert_eq!(sink.steps_seen(), metrics.decode_steps, "one event per fused step");
+        // Monotonic timeline: virtual step delays give strictly ordered
+        // starts on one engine thread.
+        let starts: Vec<f64> = sink.steps().map(|e| e.t_s).collect();
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    /// Regression (observability): a cancel landing *mid-prefill* in a
+    /// lane and a deadline expiring on a still-queued request both close
+    /// their span timelines — nothing stays open after the drain, and the
+    /// queue-cancelled request's span still shows its arrival stamp.
+    #[test]
+    fn spans_close_after_midprefill_cancel_and_queued_deadline() {
+        use crate::obs::{TeeHook, TraceSink};
+        struct TwoCancels {
+            polls: usize,
+        }
+        impl StepHook for TwoCancels {
+            fn take_cancellations(&mut self, _now: Instant) -> Vec<Cancellation> {
+                self.polls += 1;
+                if self.polls == 3 {
+                    return vec![
+                        Cancellation { id: 0, reason: CancelReason::User },
+                        Cancellation { id: 1, reason: CancelReason::Deadline },
+                    ];
+                }
+                Vec::new()
+            }
+        }
+        let clock = Clock::manual();
+        let spec = StubSpec {
+            batch_slots: 1,
+            chunk_widths: vec![1],
+            step_delay: Duration::from_millis(5),
+            clock: clock.clone(),
+            ..stub_spec()
+        };
+        let engine = Engine::new_stub(spec);
+        let now = clock.now();
+        // id 0 holds the single lane with a long prefill; id 1 queues
+        // behind it and expires before it is ever admitted.
+        let reqs = vec![
+            Request::greedy(0, (0..64).map(|i| i % 16).collect(), 8, now),
+            Request::greedy(1, (0..16).map(|i| i % 16).collect(), 4, now),
+        ];
+        let mut primary = TwoCancels { polls: 0 };
+        let mut sink = TraceSink::default();
+        let mut tee = TeeHook { primary: &mut primary, observer: &mut sink };
+        let (completions, m) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut tee)
+            .unwrap();
+        assert!(completions.is_empty());
+        assert_eq!((m.completed, m.cancelled), (0, 2));
+        assert_eq!(sink.open_spans(), 0, "cancelled spans are closed, not leaked");
+        let lane_victim = sink.span(0).expect("lane victim traced");
+        assert!(lane_victim.cancelled && lane_victim.closed());
+        assert!(lane_victim.admitted_s.is_some());
+        assert!(
+            !lane_victim.prefill_chunks.is_empty(),
+            "prefill chunks recorded before the mid-prefill cancel"
+        );
+        assert!(lane_victim.first_token_s.is_none(), "no token was ever sampled");
+        let queued_victim = sink.span(1).expect("queued victim traced");
+        assert!(queued_victim.cancelled && queued_victim.closed());
+        assert!(queued_victim.admitted_s.is_none(), "never reached a lane");
+        assert!(queued_victim.queued_s.is_some(), "span opens at its arrival stamp");
+        let recon = sink.reconstruct();
+        assert_eq!((recon.completed, recon.cancelled), (0, 2));
     }
 
     #[test]

@@ -78,7 +78,10 @@
 //!        │                queued requests fill every free lane      │
 //!        │                (zeroed first), and the next iteration    │
 //!        │                plans over the new lane set               │
-//!        └──────────────────────────────────────────────────────────┘
+//!        └───────────────┬──────────────────────────────────────────┘
+//!                        ▼  StepEvent (obs tap: one fused-step record —
+//!                           width, lane census, prefill/decode/draft/
+//!                           verify token split, live/freed KV bytes)
 //! ```
 //!
 //! A 512-token prompt therefore reaches its first sampled token in
@@ -165,15 +168,31 @@
 //! One request's lifecycle through the full stack:
 //!
 //! ```text
-//!  client        gateway thread (owns Runtime + Engine)
-//!  ------        --------------------------------------
+//!  client        gateway thread (owns Runtime + Engine)        obs taps
+//!  ------        --------------------------------------        --------
 //!  submit ──────▶ bounded ingress channel ──▶ poll_ingress ──▶ batcher
-//!    │ Queued                                        admission │
-//!    ◀─────────── Started ◀── on_started ◀───────────────────┘
-//!    ◀─────────── Token{pos,id} ◀── on_token   (per sampled token)
-//!    ◀─────────── Done{completion} | Cancelled ◀── on_done/on_cancelled
+//!    │ Queued                                        admission │  Span: Queued
+//!    ◀─────────── Started ◀── on_started ◀───────────────────┘  Span: Admitted
+//!                            (prefill chunks consume prompt)     Span: PrefillChunk*
+//!    ◀─────────── Token{pos,id} ◀── on_token   (per sampled      Span: FirstToken
+//!                                               token)           Span: SpecRound*
+//!    ◀─────────── Done{completion} | Cancelled ◀── on_done/      Span: Done |
+//!                                        on_cancelled            Span: Cancelled
 //!  cancel token ─▶ control channel ──▶ take_cancellations (between steps)
 //! ```
+//!
+//! The right-hand column is the observability layer ([`crate::obs`]):
+//! [`crate::obs::TraceSink`] is itself a [`engine::StepHook`], so the
+//! same hook surface that streams tokens also feeds per-request
+//! `SpanEvent` timelines (`Queued → Admitted → PrefillChunk* →
+//! FirstToken → SpecRound* → Done | Cancelled`) and the per-step
+//! `StepEvent` ring — a bounded flight recorder dumped on overload,
+//! cancel storms, and shutdown, exportable as Chrome trace-event JSON.
+//! `crate::obs::TeeHook` composes the sink with a primary control hook
+//! (the gateway worker runs one), and the gateway publishes aggregate
+//! counters/gauges into a shared `crate::obs::Registry`
+//! (`server::gateway::Obs`), rendered as Prometheus text or JSON; the
+//! router re-exports the same registry per rank.
 //!
 //! Every submitted request receives exactly one terminal event — `Done`
 //! on completion (graceful shutdown drains accepted work to completion),

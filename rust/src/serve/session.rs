@@ -193,6 +193,13 @@ impl Session {
         self.row.len() == self.prompt_len
     }
 
+    /// Prompt length — the row prefix that was never sampled.  The
+    /// observability taps split a slab into prefill vs decode tokens at
+    /// this boundary.
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
     /// An idempotent `(token, position)` pair for steps this lane sits out
     /// of (a draft step it is not drafting in, or a budget-deferred slab):
     /// re-feeding the last consumed pair rewrites an identical cache entry,

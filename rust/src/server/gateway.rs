@@ -30,13 +30,14 @@
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::ops;
 use crate::model::params::ParamSet;
 use crate::model::{decode_params_for_checkpoint, load_params, Checkpoint};
+use crate::obs::{Clock, Registry, SpanEvent, SpanPoint, StepEvent, TraceSink};
 use crate::runtime::stub::StubSpec;
 use crate::runtime::Runtime;
 use crate::serve::{
@@ -116,6 +117,11 @@ pub struct EngineSpec {
     /// not the first request.  The router sees the compressed cost via
     /// [`Gateway::kv_bytes_per_token`].
     pub kv_codec: KvCodecSpec,
+    /// Clock the whole gateway reads: the worker's engine (stub step
+    /// delays, step timestamps, deadline expiry) and the handle's submit
+    /// stamping.  Wall by default; a [`Clock::manual`] makes the gateway
+    /// fully virtual-time — see [`crate::obs::clock`].
+    pub clock: Clock,
 }
 
 impl EngineSpec {
@@ -129,6 +135,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            clock: Clock::wall(),
         }
     }
 
@@ -148,6 +155,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            clock: Clock::wall(),
         }
     }
 
@@ -161,6 +169,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            clock: Clock::wall(),
         }
     }
 
@@ -168,6 +177,9 @@ impl EngineSpec {
     /// behaviour with the model math replaced by
     /// [`crate::runtime::stub::StubModel`].
     pub fn stub(spec: StubSpec) -> Self {
+        // Adopt the stub's own clock so a manual-clock StubSpec keeps its
+        // timeline without also needing `with_clock` here.
+        let clock = spec.clock.clone();
         Self {
             artifacts_dir: String::new(),
             preset: "stub".into(),
@@ -177,6 +189,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            clock,
         }
     }
 
@@ -206,6 +219,26 @@ impl EngineSpec {
         self.kv_codec = codec;
         self
     }
+
+    /// Read time from `clock` everywhere this gateway measures it — the
+    /// worker's engine and the handle's submit/deadline stamping.
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
+        self
+    }
+}
+
+/// Shared observability sinks a gateway publishes into: a metrics
+/// [`Registry`] whose series carry a `{gateway="NAME"}` label, and a
+/// [`TraceSink`] fed every step and span event the worker's engine emits.
+/// `Obs` is cheap to clone and clones share the same sinks — hand one to
+/// several gateways (or a whole [`super::Router`] fleet) to aggregate
+/// them, then read Prometheus text / JSON / Chrome traces from the
+/// controlling thread while the workers serve.
+#[derive(Clone, Default)]
+pub struct Obs {
+    pub registry: Arc<Registry>,
+    pub trace: Arc<Mutex<TraceSink>>,
 }
 
 /// Resolve an [`EngineSpec`]'s parameters and decode program name.
@@ -349,6 +382,9 @@ pub struct Gateway {
     /// the router's measure of pending prefill work.
     queued_prefill: Arc<AtomicUsize>,
     submitted: AtomicUsize,
+    /// Shared with the worker's engine so submit arrival stamps and
+    /// deadlines live on the same timeline the engine measures against.
+    clock: Clock,
     worker: Option<JoinHandle<Result<ServeMetrics>>>,
 }
 
@@ -357,6 +393,19 @@ impl Gateway {
     /// until it reports ready (or dies — build errors surface here, not on
     /// first submit).
     pub fn spawn(name: &str, cfg: GatewayConfig, spec: EngineSpec) -> Result<Self> {
+        Self::spawn_with_obs(name, cfg, spec, None)
+    }
+
+    /// [`Gateway::spawn`] plus observability taps: the worker labels the
+    /// shared registry's series `{gateway="name"}`, feeds every step and
+    /// span event into the shared trace sink, and arms the sink's
+    /// `shutdown` flight dump when the engine drains out.
+    pub fn spawn_with_obs(
+        name: &str,
+        cfg: GatewayConfig,
+        spec: EngineSpec,
+        obs: Option<Obs>,
+    ) -> Result<Self> {
         if cfg.queue_capacity == 0 {
             bail!("GatewayConfig.queue_capacity must be >= 1");
         }
@@ -372,8 +421,10 @@ impl Gateway {
         let in_flight = Arc::new(AtomicUsize::new(0));
         let queued_prefill = Arc::new(AtomicUsize::new(0));
         let policy = cfg.policy.clone();
+        let clock = spec.clock.clone();
         let worker_in_flight = in_flight.clone();
         let worker_queued_prefill = queued_prefill.clone();
+        let worker_obs = obs.map(|o| ObsWiring::new(o, name));
         let worker = thread::Builder::new()
             .name(format!("gateway-{name}"))
             .spawn(move || -> Result<ServeMetrics> {
@@ -386,6 +437,7 @@ impl Gateway {
                     streams: HashMap::new(),
                     registry: CancelRegistry::new(),
                     backlog: Vec::new(),
+                    obs: worker_obs,
                 };
                 // Stub engines have no runtime at all; artifact engines own
                 // a Runtime for the thread's lifetime (the PJRT handles are
@@ -417,12 +469,17 @@ impl Gateway {
                             }
                         };
                     }
+                    // The spec's clock wins over the StubSpec's own, so
+                    // `with_clock` on the EngineSpec rules every timeline.
+                    let engine = engine.with_clock(spec.clock.clone());
                     let _ = ready_tx.send(Ok(Ready {
                         rank: engine.kv_config().rank,
                         kv_bytes_per_token: engine.kv_bytes_per_token_total(),
                         draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
                     }));
-                    return engine.serve_open(policy, &mut hook);
+                    let result = engine.serve_open(policy, &mut hook);
+                    hook.shutdown_dump();
+                    return result;
                 }
                 let rt = match Runtime::new(&spec.artifacts_dir) {
                     Ok(rt) => rt,
@@ -469,12 +526,15 @@ impl Gateway {
                         }
                     };
                 }
+                let engine = engine.with_clock(spec.clock.clone());
                 let _ = ready_tx.send(Ok(Ready {
                     rank: engine.kv_config().rank,
                     kv_bytes_per_token: engine.kv_bytes_per_token_total(),
                     draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
                 }));
-                engine.serve_open(policy, &mut hook)
+                let result = engine.serve_open(policy, &mut hook);
+                hook.shutdown_dump();
+                result
             })
             .context("spawning gateway worker thread")?;
         match ready_rx.recv() {
@@ -489,6 +549,7 @@ impl Gateway {
                 in_flight,
                 queued_prefill,
                 submitted: AtomicUsize::new(0),
+                clock,
                 worker: Some(worker),
             }),
             Ok(Err(msg)) => {
@@ -591,7 +652,7 @@ impl Gateway {
         // Queued goes out on the same channel the worker will feed, before
         // the worker can see the submission — ordering is preserved.
         let _ = events_tx.send(StreamEvent::Queued { id });
-        let now = Instant::now();
+        let now = self.clock.now();
         let prompt_len = prompt.len();
         let sub = Submission {
             req: Request { id, prompt, max_new, arrived: now, sampling },
@@ -672,9 +733,74 @@ struct GatewayHook {
     /// cancellation surfaced for an id the engine cannot see in a lane or
     /// its batcher would be silently dropped by the step loop.
     backlog: Vec<(Request, Option<Instant>)>,
+    /// Observability sinks plus this gateway's pre-rendered series names
+    /// (`None` for a tap-less gateway — the engine then skips event
+    /// assembly entirely via `wants_step_events`).
+    obs: Option<ObsWiring>,
+}
+
+/// Worker-side wiring of an [`Obs`] pair: the series names are rendered
+/// once per gateway (`family{gateway="NAME"}`), and the draft/accept
+/// running totals feed the published acceptance-rate gauge.
+struct ObsWiring {
+    obs: Obs,
+    s_in_flight: String,
+    s_queued_prefill: String,
+    s_kv_live_bytes: String,
+    s_steps_total: String,
+    s_completed_total: String,
+    s_cancelled_total: String,
+    s_generated_total: String,
+    s_drafted_total: String,
+    s_accepted_total: String,
+    s_accept_rate: String,
+    drafted: u64,
+    accepted: u64,
+}
+
+impl ObsWiring {
+    fn new(obs: Obs, gateway: &str) -> Self {
+        let s = |family: &str| format!("{family}{{gateway=\"{gateway}\"}}");
+        Self {
+            obs,
+            s_in_flight: s("clover_in_flight"),
+            s_queued_prefill: s("clover_queued_prefill_tokens"),
+            s_kv_live_bytes: s("clover_kv_live_bytes"),
+            s_steps_total: s("clover_steps_total"),
+            s_completed_total: s("clover_completed_total"),
+            s_cancelled_total: s("clover_cancelled_total"),
+            s_generated_total: s("clover_generated_tokens_total"),
+            s_drafted_total: s("clover_draft_tokens_total"),
+            s_accepted_total: s("clover_accepted_tokens_total"),
+            s_accept_rate: s("clover_accept_rate"),
+            drafted: 0,
+            accepted: 0,
+        }
+    }
 }
 
 impl GatewayHook {
+    /// Refresh the queue-shaped gauges from the atomics shared with the
+    /// handle (called on every step and terminal event while tapped).
+    fn publish_queue_gauges(&self) {
+        if let Some(w) = &self.obs {
+            let reg = &w.obs.registry;
+            reg.gauge_set(&w.s_in_flight, self.in_flight.load(Ordering::SeqCst) as f64);
+            reg.gauge_set(
+                &w.s_queued_prefill,
+                self.queued_prefill.load(Ordering::SeqCst) as f64,
+            );
+        }
+    }
+
+    /// The engine drained out: arm the trace sink's shutdown flight dump
+    /// so whoever holds the [`Obs`] can export the final ring.
+    fn shutdown_dump(&mut self) {
+        if let Some(w) = &self.obs {
+            self.publish_queue_gauges();
+            w.obs.trace.lock().unwrap().request_dump("shutdown");
+        }
+    }
     /// Accept one submission into the backlog.  Every accepted submission
     /// reaches the engine — even ones already cancelled, whose cancel
     /// fires from the registry right after hand-off — so the engine's
@@ -818,6 +944,40 @@ impl StepHook for GatewayHook {
 
     fn on_cancelled(&mut self, id: u64, tokens: Vec<i32>, reason: CancelReason, step: usize) {
         self.terminal(id, StreamEvent::Cancelled { id, reason, tokens, step });
+    }
+
+    fn wants_step_events(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    fn on_step(&mut self, ev: &StepEvent) {
+        let Some(w) = &self.obs else { return };
+        let reg = &w.obs.registry;
+        reg.counter_add(&w.s_steps_total, 1.0);
+        reg.gauge_set(&w.s_kv_live_bytes, ev.kv_live_bytes as f64);
+        w.obs.trace.lock().unwrap().record_step(ev);
+        self.publish_queue_gauges();
+    }
+
+    fn on_span(&mut self, ev: &SpanEvent) {
+        let Some(w) = &mut self.obs else { return };
+        let reg = &w.obs.registry;
+        match ev.point {
+            SpanPoint::Done { generated } => {
+                reg.counter_add(&w.s_completed_total, 1.0);
+                reg.counter_add(&w.s_generated_total, generated as f64);
+            }
+            SpanPoint::Cancelled { .. } => reg.counter_add(&w.s_cancelled_total, 1.0),
+            SpanPoint::SpecRound { drafted, accepted } => {
+                w.drafted += drafted as u64;
+                w.accepted += accepted as u64;
+                reg.counter_add(&w.s_drafted_total, drafted as f64);
+                reg.counter_add(&w.s_accepted_total, accepted as f64);
+                reg.gauge_set(&w.s_accept_rate, w.accepted as f64 / w.drafted.max(1) as f64);
+            }
+            _ => {}
+        }
+        w.obs.trace.lock().unwrap().record_span(ev);
     }
 }
 
@@ -1186,12 +1346,18 @@ mod tests {
 
     /// Satellite twin: a deadline expiring during prefill behaves like a
     /// mid-prefill cancel — one `Cancelled{Deadline}`, zero tokens.
+    ///
+    /// Runs on a *manual* clock: the stub's 5ms step delays advance
+    /// virtual time instead of blocking, so the 30ms deadline lands after
+    /// exactly six 1-token prefill steps — deterministic mid-prefill
+    /// expiry with no wall-clock sleeping at all.
     #[test]
     fn stub_deadline_during_prefill_cancels_with_no_tokens() {
+        let clock = Clock::manual();
         let gw = Gateway::spawn(
             "prefill-deadline",
             GatewayConfig::default(),
-            EngineSpec::stub(prefill_stub_spec()),
+            EngineSpec::stub(StubSpec { clock: clock.clone(), ..prefill_stub_spec() }),
         )
         .unwrap();
         let prompt: Vec<i32> = (0..64).collect();
@@ -1207,6 +1373,58 @@ mod tests {
         }
         let m = gw.join().unwrap();
         assert_eq!((m.completed, m.cancelled), (0, 1));
+    }
+
+    /// Regression (observability): after a mid-prefill user cancel *and*
+    /// a mid-prefill deadline expiry, the published `queued_prefill` /
+    /// `in_flight` gauges return to zero and every span timeline in the
+    /// trace sink is closed — the taps leak no per-request state.
+    #[test]
+    fn obs_gauges_zero_and_spans_closed_after_prefill_cancels() {
+        let clock = Clock::manual();
+        let obs = Obs::default();
+        let gw = Gateway::spawn_with_obs(
+            "obs",
+            GatewayConfig::default(),
+            EngineSpec::stub(StubSpec { clock: clock.clone(), ..prefill_stub_spec() }),
+            Some(obs.clone()),
+        )
+        .unwrap();
+        let victim = gw.submit((0..64).collect(), 8, SamplingParams::greedy(), None).unwrap();
+        loop {
+            match victim.stream.next_event() {
+                Some(StreamEvent::Started { .. }) => break,
+                Some(_) => continue,
+                None => panic!("victim stream closed before Started"),
+            }
+        }
+        victim.cancel.cancel();
+        match victim.stream.wait().unwrap() {
+            StreamOutcome::Cancelled { reason, .. } => assert_eq!(reason, CancelReason::User),
+            StreamOutcome::Done(c) => panic!("victim completed past its cancel: {c:?}"),
+        }
+        let doomed = gw
+            .submit((0..64).collect(), 8, SamplingParams::greedy(), Some(Duration::from_millis(30)))
+            .unwrap();
+        match doomed.stream.wait().unwrap() {
+            StreamOutcome::Cancelled { reason, .. } => assert_eq!(reason, CancelReason::Deadline),
+            StreamOutcome::Done(c) => panic!("doomed completed past its deadline: {c:?}"),
+        }
+        assert_eq!(gw.queued_prefill_tokens(), 0, "atomic drains at terminal events");
+        let m = gw.join().unwrap();
+        assert_eq!((m.completed, m.cancelled), (0, 2));
+        // join() returns only after the worker's shutdown dump republished
+        // the final gauge values.
+        let reg = &obs.registry;
+        assert_eq!(reg.get("clover_queued_prefill_tokens{gateway=\"obs\"}"), Some(0.0));
+        assert_eq!(reg.get("clover_in_flight{gateway=\"obs\"}"), Some(0.0));
+        assert_eq!(reg.get("clover_cancelled_total{gateway=\"obs\"}"), Some(2.0));
+        let sink = obs.trace.lock().unwrap();
+        assert_eq!(sink.open_spans(), 0, "cancelled spans are closed, not leaked");
+        assert_eq!(sink.spans().count(), 2);
+        for s in sink.spans() {
+            assert!(s.cancelled && s.closed(), "span {} must end cancelled", s.id);
+        }
     }
 
     #[test]

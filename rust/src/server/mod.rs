@@ -57,7 +57,8 @@ pub mod stream;
 
 pub use cancel::{CancelRegistry, CancelToken};
 pub use gateway::{
-    DraftSource, EngineSpec, Gateway, GatewayConfig, ParamSource, SpecSpec, SubmitError, Ticket,
+    DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, ParamSource, SpecSpec, SubmitError,
+    Ticket,
 };
 pub use router::Router;
 pub use stream::{RequestStream, StreamEvent, StreamOutcome, TryNext};

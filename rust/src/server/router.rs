@@ -40,6 +40,7 @@ use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::obs::Registry;
 use crate::serve::{SamplingParams, ServeMetrics};
 
 use super::gateway::{Gateway, SubmitError, Ticket};
@@ -106,6 +107,36 @@ impl Router {
             .iter()
             .map(|g| (g.name().to_string(), g.rank(), g.submitted()))
             .collect()
+    }
+
+    /// Publish every gateway's routing-visible state into `reg` as
+    /// per-rank gauges labelled `{gateway="NAME",rank="R"}` — the
+    /// handle-side view (queue depth, pending prefill tokens, per-token
+    /// KV cost, lifetime submissions, routing score).  Complements the
+    /// worker-side series a [`super::gateway::Obs`]-tapped gateway
+    /// publishes itself.
+    pub fn export_metrics(&self, reg: &Registry) {
+        for g in &self.gateways {
+            let labels = format!("{{gateway=\"{}\",rank=\"{}\"}}", g.name(), g.rank());
+            reg.gauge_set(&format!("clover_router_in_flight{labels}"), g.in_flight() as f64);
+            reg.gauge_set(
+                &format!("clover_router_queued_prefill_tokens{labels}"),
+                g.queued_prefill_tokens() as f64,
+            );
+            reg.gauge_set(
+                &format!("clover_router_kv_bytes_per_token{labels}"),
+                g.kv_bytes_per_token() as f64,
+            );
+            reg.gauge_set(&format!("clover_router_submitted{labels}"), g.submitted() as f64);
+            reg.gauge_set(&format!("clover_router_score{labels}"), Self::score(g) as f64);
+        }
+    }
+
+    /// One-shot Prometheus text of the routing gauges (stats lines, CLI).
+    pub fn prometheus_text(&self) -> String {
+        let reg = Registry::new();
+        self.export_metrics(&reg);
+        reg.prometheus_text()
     }
 
     /// Gracefully shut every gateway down, returning each engine's final
@@ -231,6 +262,28 @@ mod tests {
         // "plain" is listed first and ties resolve to it, so only the
         // compressed cost can explain the router preferring "fact".
         assert_eq!(router.pick(), 1);
+        router.join().unwrap();
+    }
+
+    #[test]
+    fn export_metrics_publishes_per_rank_gauges() {
+        let target = StubSpec { rank: 8, ..Default::default() };
+        let low = StubSpec { rank: 4, ..target.clone() };
+        let router = Router::new(vec![
+            Gateway::spawn("r8", GatewayConfig::default(), EngineSpec::stub(target)).unwrap(),
+            Gateway::spawn("r4", GatewayConfig::default(), EngineSpec::stub(low)).unwrap(),
+        ])
+        .unwrap();
+        let reg = crate::obs::Registry::new();
+        router.export_metrics(&reg);
+        assert_eq!(reg.get("clover_router_in_flight{gateway=\"r8\",rank=\"8\"}"), Some(0.0));
+        assert_eq!(
+            reg.get("clover_router_kv_bytes_per_token{gateway=\"r4\",rank=\"4\"}"),
+            Some(router.gateways()[1].kv_bytes_per_token() as f64),
+        );
+        let text = router.prometheus_text();
+        assert!(text.contains("# TYPE clover_router_score gauge\n"));
+        assert!(text.contains("clover_router_score{gateway=\"r8\",rank=\"8\"}"));
         router.join().unwrap();
     }
 }

@@ -9,8 +9,17 @@ finite (a NaN tokens/s or an Infinity TTFT means a bench divided by a
 zero wall-clock — a bug, not a measurement).
 
 Usage:  python3 scripts/check_bench.py rust/BENCH_serve.json rust/BENCH_server.json
+        python3 scripts/check_bench.py rust/BENCH_trace.json rust/BENCH_metrics.json
         python3 scripts/check_bench.py --baseline BENCH_history/BENCH_serve.json \
             rust/BENCH_serve.json
+
+Documents without a `bench` id are dispatched on shape: a top-level
+`traceEvents` array is checked as a Chrome trace-event dump (step lane
+time-ordered, one complete span per request, first-token marks inside
+their spans), and a `counters`/`gauges` pair as a metrics-registry dump
+(cumulative histogram buckets).  The perf_serve `obs` section gates the
+observability bars: TraceSink taps < 5% tokens/s overhead, and the
+span-reconstructed aggregates equal to the engine's own ServeMetrics.
 
 With `--baseline`, fresh documents whose `bench` id matches the snapshot
 are also diffed row-by-row against it (prefill chunks matched by `chunk`,
@@ -55,7 +64,7 @@ def require(doc, keys, path="$"):
 
 def check_serve(doc):
     yield from require(doc, ["bench", "preset", "prefill", "speculative", "kv_codec",
-                             "layer_budgets", "engines", "pjrt_skipped"])
+                             "layer_budgets", "obs", "engines", "pjrt_skipped"])
     prefill = doc.get("prefill", {})
     yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
                        "$.prefill")
@@ -163,6 +172,41 @@ def check_serve(doc):
                        f"exactly with the identity trace (got {agree})")
     if profiles and not full_seen:
         yield "$.layer_budgets: no full-rank profile — the pure-copy anchor is missing"
+    obs = doc.get("obs", {})
+    yield from require(
+        obs,
+        ["backend", "baseline_tokens_per_s", "tapped_tokens_per_s", "tap_overhead_frac",
+         "recon", "metrics", "steps_seen", "open_spans", "gateway"],
+        "$.obs")
+    # The acceptance bar: step/span taps cost < 5% tokens/s on the stub.
+    frac = _metric(obs, "tap_overhead_frac")
+    if frac is None or frac >= 0.05:
+        yield (f"$.obs: tap_overhead_frac {obs.get('tap_overhead_frac')!r} is not "
+               "< 0.05 — the TraceSink taps cost more than the 5% bar allows")
+    # The fidelity bar: span timelines reconstruct the engine's own
+    # aggregates — exact counts, float-tolerance TTFT percentiles.
+    recon, metrics = obs.get("recon", {}), obs.get("metrics", {})
+    for key in ("completed", "cancelled", "generated_tokens"):
+        if recon.get(key) != metrics.get(key):
+            yield (f"$.obs: recon.{key} {recon.get(key)!r} != metrics.{key} "
+                   f"{metrics.get(key)!r} — the span timelines lost events")
+    for key in ("ttft_p50_s", "ttft_p99_s"):
+        rv, mv = _metric(recon, key), _metric(metrics, key)
+        if rv is None or mv is None or abs(rv - mv) > 1e-6:
+            yield (f"$.obs: recon.{key} {recon.get(key)!r} vs metrics.{key} "
+                   f"{metrics.get(key)!r} differ beyond 1e-6")
+    if obs.get("open_spans") != 0:
+        yield (f"$.obs: open_spans {obs.get('open_spans')!r} != 0 — some request "
+               "span never saw a terminal event")
+    if obs.get("steps_seen") != metrics.get("decode_steps"):
+        yield (f"$.obs: steps_seen {obs.get('steps_seen')!r} != decode_steps "
+               f"{metrics.get('decode_steps')!r} — step events were dropped")
+    gw = obs.get("gateway", {})
+    if gw.get("registry_completed") != gw.get("completed") \
+            or gw.get("registry_generated_tokens") != gw.get("generated_tokens"):
+        yield (f"$.obs.gateway: registry counters {gw.get('registry_completed')!r}/"
+               f"{gw.get('registry_generated_tokens')!r} disagree with the engine's "
+               f"{gw.get('completed')!r}/{gw.get('generated_tokens')!r}")
     if not doc.get("pjrt_skipped", True):
         for i, eng in enumerate(doc.get("engines", [])):
             yield from require(
@@ -189,6 +233,93 @@ def check_server(doc):
             ["cancel_step", "waiter_started_step", "reclaim_steps"],
             "$.cancel")
         yield from require(doc.get("router", {}), ["requests", "engines"], "$.router")
+
+
+def check_trace(doc):
+    """Chrome trace-event documents (BENCH_trace.json, --trace-out dumps).
+
+    Validates the shape Perfetto loads: every event carries name/ph/pid/
+    tid/ts, complete ("X") events carry a non-negative dur, the step lane
+    (pid 0) is time-ordered, and every closed request contributes exactly
+    one complete span on its own (pid 1, tid=id) track, with any
+    first-token instant mark landing inside that span.
+    """
+    yield from require(doc, ["traceEvents", "displayTimeUnit", "otherData"])
+    events = doc.get("traceEvents", [])
+    if not events:
+        yield "$.traceEvents: empty — nothing was recorded"
+    step_ts = []
+    request_spans = {}  # tid -> (ts, dur)
+    instants = []  # (tid, ts)
+    for i, ev in enumerate(events):
+        tag = f"$.traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            yield f"{tag}: not an object"
+            continue
+        yield from require(ev, ["name", "ph", "pid", "tid", "ts"], tag)
+        ts = _metric(ev, "ts")
+        if ts is None or ts < 0:
+            yield f"{tag}: ts {ev.get('ts')!r} is not a non-negative number"
+            continue
+        ph = ev.get("ph")
+        if ph == "X":
+            dur = _metric(ev, "dur")
+            if dur is None or dur < 0:
+                yield f"{tag}: dur {ev.get('dur')!r} is not a non-negative number"
+                continue
+            if ev.get("pid") == 0:
+                step_ts.append(ts)
+            elif ev.get("cat") == "request":
+                tid = ev.get("tid")
+                if tid in request_spans:
+                    yield (f"{tag}: second complete span for request tid {tid!r} — "
+                           "spans must be one per request")
+                request_spans[tid] = (ts, dur)
+        elif ph == "i" and ev.get("cat") == "request":
+            instants.append((ev.get("tid"), ts, tag))
+    for a, b in zip(step_ts, step_ts[1:]):
+        if b < a:
+            yield (f"$.traceEvents: step lane timestamps regress ({b} after {a}) — "
+                   "the step ring is not time-ordered")
+            break
+    for tid, ts, tag in instants:
+        span = request_spans.get(tid)
+        if span is None:
+            yield f"{tag}: first-token mark for tid {tid!r} has no request span"
+        elif not (span[0] - 1 <= ts <= span[0] + span[1] + 1):  # 1us slack
+            yield (f"{tag}: first-token mark at {ts} falls outside request "
+                   f"{tid!r}'s span [{span[0]}, {span[0] + span[1]}]")
+    other = doc.get("otherData", {})
+    requests = other.get("requests")
+    if isinstance(requests, (int, float)) and len(request_spans) > requests:
+        yield (f"$.traceEvents: {len(request_spans)} request spans exceed "
+               f"otherData.requests {requests}")
+    steps_seen = other.get("steps_seen")
+    if isinstance(steps_seen, (int, float)) and len(step_ts) > steps_seen:
+        yield (f"$.traceEvents: {len(step_ts)} step events exceed "
+               f"otherData.steps_seen {steps_seen}")
+
+
+def check_metrics(doc):
+    """Registry dumps (BENCH_metrics.json, --metrics-json): counters and
+    gauges are flat series→number maps, histogram buckets are cumulative.
+    """
+    yield from require(doc, ["counters", "gauges", "histograms"])
+    for kind in ("counters", "gauges"):
+        for series, v in (doc.get(kind) or {}).items():
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                yield f"$.{kind}[{series!r}]: value {v!r} is not a number"
+    for series, h in (doc.get("histograms") or {}).items():
+        tag = f"$.histograms[{series!r}]"
+        if not isinstance(h, dict):
+            yield f"{tag}: not an object"
+            continue
+        yield from require(h, ["bounds", "counts", "sum", "count"], tag)
+        counts = h.get("counts", [])
+        if any(b < a for a, b in zip(counts, counts[1:])):
+            yield f"{tag}: bucket counts are not cumulative (non-decreasing)"
+        if counts and counts[-1] > h.get("count", 0):
+            yield f"{tag}: last bucket {counts[-1]} exceeds total count {h.get('count')}"
 
 
 CHECKERS = {
@@ -281,12 +412,20 @@ def main(argv):
             failed = True
             continue
         bench = doc.get("bench")
-        checker = CHECKERS.get(bench)
         errors = []
-        if checker is None:
-            errors.append(f"$: unknown or missing bench id {bench!r}")
+        if bench is None and "traceEvents" in doc:
+            # Chrome trace-event dumps carry no bench id; dispatch on shape.
+            bench = "trace"
+            errors.extend(check_trace(doc))
+        elif bench is None and "counters" in doc and "gauges" in doc:
+            bench = "metrics"
+            errors.extend(check_metrics(doc))
         else:
-            errors.extend(checker(doc))
+            checker = CHECKERS.get(bench)
+            if checker is None:
+                errors.append(f"$: unknown or missing bench id {bench!r}")
+            else:
+                errors.extend(checker(doc))
         errors.extend(finite_numbers(doc))
         if base_doc is not None and bench == base_doc.get("bench"):
             errors.extend(check_baseline(doc, base_doc))
