@@ -1,0 +1,385 @@
+//! Bench-document checks (`CLV040`–`CLV045`) against the shapes in
+//! `docs/BENCH_SCHEMAS.md`.
+//!
+//! Documents are dispatched the same way `scripts/check_bench.py` does:
+//! a `bench` id selects the serve/server schema, a `traceEvents` array is
+//! a Chrome trace-event dump, a `counters`+`gauges` pair is a metrics
+//! registry dump; anything else is `CLV041`.
+//!
+//! Two tiers of requirements keep the committed `BENCH_history/`
+//! bootstrap snapshots checkable:
+//!
+//! * **hard** keys (`CLV042` error) — the row-identity structure every
+//!   document must carry (`bench`, `preset`, the section tables and the
+//!   keys that identify a row: `chunk`, `draft_len`, `codec`,
+//!   `budgets`);
+//! * **soft** keys (`CLV045` warning) — measured values that a bootstrap
+//!   snapshot legitimately carries as `null` until a real run is
+//!   committed (see `BENCH_history/README.md`).
+//!
+//! Invariants (`CLV044`) are enforced only on non-null values: the
+//! speculative bit-identity bit, budgets within `1..=rank`, prefix
+//! agreement a fraction (and exactly 1.0 for a full-rank profile),
+//! `open_spans == 0`, span-reconstruction agreement, time-ordered step
+//! lanes.  The *performance bars* (>=4x prefill-step reduction, <1.0
+//! dense steps/token, >=2x lanes, <5% tap overhead) stay in
+//! `check_bench.py` — they gate fresh measurements in CI, not committed
+//! documents.
+
+use crate::config::json::Json;
+
+use super::diag::Report;
+
+/// Check one parsed bench document.
+pub fn check_bench_doc(report: &mut Report, path: &str, doc: &Json) {
+    walk_non_finite(report, path, doc, "$");
+    match doc.get("bench").and_then(|b| b.as_str().ok()) {
+        Some("perf_serve") => check_serve(report, path, doc),
+        Some("perf_server") => check_server(report, path, doc),
+        Some(other) => {
+            report.push(
+                41,
+                path,
+                "$.bench",
+                format!("unknown bench id {other:?}"),
+                "see docs/BENCH_SCHEMAS.md for the known documents",
+            );
+        }
+        None if doc.get("traceEvents").is_some() => check_trace(report, path, doc),
+        None if doc.get("counters").is_some() && doc.get("gauges").is_some() => {
+            check_metrics(report, path, doc);
+        }
+        None => {
+            report.push(
+                41,
+                path,
+                "$",
+                "no `bench` id, `traceEvents`, or `counters`+`gauges` — unrecognized shape"
+                    .to_string(),
+                "see docs/BENCH_SCHEMAS.md for the known documents",
+            );
+        }
+    }
+}
+
+/// Read a file and check it (`CLV040` on IO/parse failure).
+pub fn check_bench_file(report: &mut Report, path: &str) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            report.push(40, path, "$", format!("cannot read: {e}"), "");
+            return;
+        }
+    };
+    match Json::parse(&text) {
+        Ok(doc) => check_bench_doc(report, path, &doc),
+        Err(e) => report.push(40, path, "$", format!("not valid JSON: {e}"), ""),
+    }
+}
+
+fn num(v: &Json) -> Option<f64> {
+    match v {
+        Json::Num(x) => Some(*x),
+        _ => None,
+    }
+}
+
+/// `CLV043` for every non-finite number anywhere in the document (the
+/// parser lets `1e999` through as `inf`; `json.dump` would have written
+/// `Infinity`, which python's reader happily round-trips).
+fn walk_non_finite(report: &mut Report, path: &str, v: &Json, locus: &str) {
+    match v {
+        Json::Num(x) if !x.is_finite() => {
+            report.push(
+                43,
+                path,
+                locus,
+                format!("non-finite number {x}"),
+                "a NaN/inf here means the bench harness divided by zero",
+            );
+        }
+        Json::Arr(items) => {
+            for (i, item) in items.iter().enumerate() {
+                walk_non_finite(report, path, item, &format!("{locus}[{i}]"));
+            }
+        }
+        Json::Obj(m) => {
+            for (k, item) in m {
+                walk_non_finite(report, path, item, &format!("{locus}.{k}"));
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Hard requirement: missing key is a structural error.
+fn require(report: &mut Report, path: &str, v: &Json, locus: &str, keys: &[&str]) {
+    for k in keys {
+        if v.get(k).is_none() {
+            report.push(
+                42,
+                path,
+                &format!("{locus}.{k}"),
+                format!("missing required key {k:?}"),
+                "see docs/BENCH_SCHEMAS.md",
+            );
+        }
+    }
+}
+
+/// Soft requirement: absent *or* null is a bootstrap placeholder.
+fn soft(report: &mut Report, path: &str, v: &Json, locus: &str, keys: &[&str]) {
+    for k in keys {
+        if matches!(v.get(k), None | Some(Json::Null)) {
+            report.push(
+                45,
+                path,
+                &format!("{locus}.{k}"),
+                format!("{k} is absent or null — bootstrap placeholder, not a measurement"),
+                "commit a real run over the snapshot (BENCH_history/README.md)",
+            );
+        }
+    }
+}
+
+fn check_serve(report: &mut Report, path: &str, doc: &Json) {
+    require(report, path, doc, "$", &["preset", "prefill", "speculative", "kv_codec"]);
+    require(report, path, doc, "$", &["layer_budgets"]);
+    soft(report, path, doc, "$", &["obs", "engines", "pjrt_skipped"]);
+
+    if let Some(prefill) = doc.get("prefill") {
+        require(report, path, prefill, "$.prefill", &["chunks"]);
+        let chunks = prefill.get("chunks").and_then(|c| c.as_arr().ok()).unwrap_or(&[]);
+        if chunks.is_empty() {
+            report.push(
+                44,
+                path,
+                "$.prefill.chunks",
+                "empty — the chunk ladder was not benched".to_string(),
+                "run `cargo bench --bench perf_serve`",
+            );
+        }
+        for (i, row) in chunks.iter().enumerate() {
+            require(report, path, row, &format!("$.prefill.chunks[{i}]"), &["chunk"]);
+        }
+    }
+
+    if let Some(spec) = doc.get("speculative") {
+        require(report, path, spec, "$.speculative", &["sweep"]);
+        let sweep = spec.get("sweep").and_then(|s| s.as_arr().ok()).unwrap_or(&[]);
+        for (i, row) in sweep.iter().enumerate() {
+            let locus = format!("$.speculative.sweep[{i}]");
+            require(report, path, row, &locus, &["draft_len"]);
+            match row.get("bit_identical_to_vanilla") {
+                Some(Json::Bool(true)) => {}
+                Some(Json::Bool(false)) => {
+                    report.push(
+                        44,
+                        path,
+                        &locus,
+                        "speculative greedy output diverged from vanilla greedy decode — \
+                         the bit-identity invariant is broken"
+                            .to_string(),
+                        "a lossy accept rule or draft-cache leak; bisect the engine",
+                    );
+                }
+                _ => soft(report, path, row, &locus, &["bit_identical_to_vanilla"]),
+            }
+        }
+    }
+
+    if let Some(kvc) = doc.get("kv_codec") {
+        require(report, path, kvc, "$.kv_codec", &["codecs"]);
+        let codecs = kvc.get("codecs").and_then(|c| c.as_arr().ok()).unwrap_or(&[]);
+        let mut has_identity = false;
+        for (i, row) in codecs.iter().enumerate() {
+            let locus = format!("$.kv_codec.codecs[{i}]");
+            require(report, path, row, &locus, &["codec", "layer_budgets"]);
+            if row.get("codec").and_then(|c| c.as_str().ok()) == Some("identity") {
+                has_identity = true;
+            }
+        }
+        if !codecs.is_empty() && !has_identity {
+            report.push(
+                44,
+                path,
+                "$.kv_codec.codecs",
+                "no identity row to compare the compressed codecs against".to_string(),
+                "the sweep must include the identity baseline",
+            );
+        }
+    }
+
+    if let Some(lb) = doc.get("layer_budgets") {
+        require(report, path, lb, "$.layer_budgets", &["rank", "profiles"]);
+        let rank = lb.get("rank").and_then(num).unwrap_or(0.0) as usize;
+        let profiles = lb.get("profiles").and_then(|p| p.as_arr().ok()).unwrap_or(&[]);
+        for (i, row) in profiles.iter().enumerate() {
+            let locus = format!("$.layer_budgets.profiles[{i}]");
+            require(report, path, row, &locus, &["budgets"]);
+            let budgets = row.get("budgets").and_then(|b| b.as_shape().ok()).unwrap_or_default();
+            for &b in &budgets {
+                if rank > 0 && (b == 0 || b > rank) {
+                    report.push(
+                        44,
+                        path,
+                        &locus,
+                        format!("budget {b} outside 1..={rank}"),
+                        "budgets are per-layer stored ranks",
+                    );
+                }
+            }
+            match row.get("mean_prefix_agreement") {
+                Some(Json::Num(a)) if !(0.0..=1.0).contains(a) => {
+                    report.push(
+                        44,
+                        path,
+                        &locus,
+                        format!("mean_prefix_agreement {a} is not a fraction in [0, 1]"),
+                        "",
+                    );
+                }
+                Some(Json::Num(a)) => {
+                    let full = !budgets.is_empty() && budgets.iter().all(|&b| b == rank);
+                    if full && *a != 1.0 {
+                        report.push(
+                            44,
+                            path,
+                            &locus,
+                            format!(
+                                "full-rank budgets must agree exactly with the identity \
+                                 trace (got {a})"
+                            ),
+                            "full budgets make the factored codec a pure copy",
+                        );
+                    }
+                }
+                _ => soft(report, path, row, &locus, &["mean_prefix_agreement"]),
+            }
+        }
+    }
+
+    if let Some(obs) = doc.get("obs") {
+        soft(report, path, obs, "$.obs", &["tap_overhead_frac", "recon", "metrics"]);
+        match obs.get("open_spans") {
+            Some(Json::Num(n)) if *n != 0.0 => {
+                report.push(
+                    44,
+                    path,
+                    "$.obs.open_spans",
+                    format!("{n} request span(s) never saw a terminal event"),
+                    "every span must close with Done or Cancelled",
+                );
+            }
+            _ => {}
+        }
+        if let (Some(recon), Some(metrics)) = (obs.get("recon"), obs.get("metrics")) {
+            for key in ["completed", "cancelled", "generated_tokens"] {
+                let (r, m) = (recon.get(key).and_then(num), metrics.get(key).and_then(num));
+                if let (Some(r), Some(m)) = (r, m) {
+                    if r != m {
+                        report.push(
+                            44,
+                            path,
+                            &format!("$.obs.recon.{key}"),
+                            format!("recon {r} != metrics {m} — the span timelines lost events"),
+                            "",
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_server(report: &mut Report, path: &str, doc: &Json) {
+    require(report, path, doc, "$", &["preset", "stub_streaming", "skipped"]);
+    if let Some(ss) = doc.get("stub_streaming") {
+        require(
+            report,
+            path,
+            ss,
+            "$.stub_streaming",
+            &["requests", "prompt_tokens", "completed", "mean_prefill_steps", "decode_steps"],
+        );
+    }
+}
+
+fn check_trace(report: &mut Report, path: &str, doc: &Json) {
+    require(report, path, doc, "$", &["traceEvents", "displayTimeUnit"]);
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr().ok()).unwrap_or(&[]);
+    let mut last_step_ts = f64::NEG_INFINITY;
+    let mut step_order_ok = true;
+    for (i, ev) in events.iter().enumerate() {
+        let locus = format!("$.traceEvents[{i}]");
+        require(report, path, ev, &locus, &["name", "ph", "pid", "tid", "ts"]);
+        let ts = ev.get("ts").and_then(num);
+        if let Some(ts) = ts {
+            if ts < 0.0 {
+                report.push(44, path, &locus, format!("ts {ts} is negative"), "");
+            }
+        }
+        if ev.get("ph").and_then(|p| p.as_str().ok()) == Some("X") {
+            match ev.get("dur").and_then(num) {
+                Some(d) if d < 0.0 => {
+                    report.push(44, path, &locus, format!("dur {d} is negative"), "");
+                }
+                Some(_) => {}
+                None => {
+                    report.push(
+                        42,
+                        path,
+                        &format!("{locus}.dur"),
+                        "complete (\"X\") event without a dur".to_string(),
+                        "see docs/BENCH_SCHEMAS.md",
+                    );
+                }
+            }
+            if ev.get("pid").and_then(num) == Some(0.0) {
+                if let Some(ts) = ts {
+                    if ts < last_step_ts && step_order_ok {
+                        step_order_ok = false;
+                        report.push(
+                            44,
+                            path,
+                            &locus,
+                            format!(
+                                "step lane timestamps regress ({ts} after {last_step_ts}) — \
+                                 the step ring is not time-ordered"
+                            ),
+                            "",
+                        );
+                    }
+                    last_step_ts = last_step_ts.max(ts);
+                }
+            }
+        }
+    }
+}
+
+fn check_metrics(report: &mut Report, path: &str, doc: &Json) {
+    for section in ["counters", "gauges"] {
+        let Some(obj) = doc.get(section).and_then(|s| s.as_obj().ok()) else {
+            report.push(
+                42,
+                path,
+                &format!("$.{section}"),
+                format!("{section} is not an object of series"),
+                "see docs/BENCH_SCHEMAS.md",
+            );
+            continue;
+        };
+        for (series, v) in obj {
+            let locus = format!("$.{section}.{series}");
+            match num(v) {
+                Some(x) if section == "counters" && x < 0.0 => {
+                    report.push(44, path, &locus, format!("counter is negative ({x})"), "");
+                }
+                Some(_) => {}
+                None => {
+                    report.push(42, path, &locus, "series value is not a number".to_string(), "");
+                }
+            }
+        }
+    }
+}

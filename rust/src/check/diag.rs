@@ -1,0 +1,309 @@
+//! Diagnostic records, the `CLV0xx` code catalog, and the renderers.
+//!
+//! Every finding `clover check` can emit is a [`Diagnostic`]: a stable
+//! numeric code (rendered `CLV0xx`), a severity fixed by the catalog, the
+//! file it was found in, a locus inside that file (a JSON-pointer-style
+//! path like `$.configs.tiny.prefill_chunks`, or the CLI flag that
+//! carried the bad value), a human message, and a fix hint.  Codes are
+//! append-only: once a code has shipped in a golden file or a CI log its
+//! meaning never changes — new failure modes get new codes.
+//!
+//! [`Report`] collects diagnostics across all checked documents, sorts
+//! them deterministically, and renders them as `--format text`, `--format
+//! json`, or the compact [`Report::golden_lines`] form the fixture tests
+//! assert against (code + severity + locus only, so goldens survive
+//! message rewording).
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One catalog row: the stable code, its fixed severity, and a one-line
+/// title (the documentation anchor — `docs/STATIC_ANALYSIS.md` lists every
+/// row, enforced by a test in this module).
+pub struct CatalogEntry {
+    pub code: u16,
+    pub severity: Severity,
+    pub title: &'static str,
+}
+
+const E: Severity = Severity::Error;
+const W: Severity = Severity::Warning;
+
+/// The full `CLV0xx` catalog.  Grouped: 001–016 manifest geometry,
+/// 020–033 serve/engine-spec combinations, 040–045 bench documents.
+pub const CATALOG: &[CatalogEntry] = &[
+    CatalogEntry { code: 1, severity: E, title: "artifacts manifest unreadable" },
+    CatalogEntry { code: 2, severity: E, title: "manifest is not valid JSON" },
+    CatalogEntry { code: 3, severity: E, title: "manifest has no `configs` object" },
+    CatalogEntry { code: 4, severity: E, title: "malformed config entry" },
+    CatalogEntry { code: 5, severity: E, title: "config is missing a required dimension" },
+    CatalogEntry { code: 6, severity: E, title: "rank ladder malformed" },
+    CatalogEntry { code: 7, severity: E, title: "advertised rank has no factorized param spec" },
+    CatalogEntry { code: 8, severity: E, title: "advertised rank lacks its decode program" },
+    CatalogEntry { code: 9, severity: E, title: "prefill chunk ladder malformed" },
+    CatalogEntry { code: 10, severity: E, title: "advertised prefill chunk lacks its slab program" },
+    CatalogEntry { code: 11, severity: W, title: "exported slab width not advertised" },
+    CatalogEntry { code: 12, severity: E, title: "verify_widths is not a prefix-closed subset" },
+    CatalogEntry { code: 13, severity: E, title: "verify width lacks all-position logits" },
+    CatalogEntry { code: 14, severity: E, title: "prefill/decode cache blocks disagree" },
+    CatalogEntry { code: 15, severity: E, title: "unsupported dtype in a program signature" },
+    CatalogEntry { code: 16, severity: W, title: "program file missing on disk" },
+    CatalogEntry { code: 20, severity: E, title: "preset not found in the manifest" },
+    CatalogEntry { code: 21, severity: E, title: "KV layer-budget count mismatches the layers" },
+    CatalogEntry { code: 22, severity: E, title: "KV layer budget outside 1..=rank" },
+    CatalogEntry { code: 23, severity: E, title: "KV codec spec unparsable" },
+    CatalogEntry { code: 24, severity: E, title: "engine rank incompatible with the geometry" },
+    CatalogEntry { code: 25, severity: E, title: "speculative draft length below the minimum" },
+    CatalogEntry { code: 26, severity: E, title: "speculation needs a chunked verify ladder" },
+    CatalogEntry { code: 27, severity: E, title: "speculation requires greedy sampling" },
+    CatalogEntry { code: 28, severity: W, title: "max-step-tokens starves the chunk ladder" },
+    CatalogEntry { code: 29, severity: E, title: "KV memory budget admits no request at all" },
+    CatalogEntry { code: 30, severity: W, title: "KV memory budget below one full window" },
+    CatalogEntry { code: 31, severity: E, title: "run config unreadable or unparsable" },
+    CatalogEntry { code: 32, severity: E, title: "run config failed validation" },
+    CatalogEntry { code: 33, severity: W, title: "run config references absent geometry" },
+    CatalogEntry { code: 40, severity: E, title: "bench document unreadable or unparsable" },
+    CatalogEntry { code: 41, severity: E, title: "bench document shape unrecognized" },
+    CatalogEntry { code: 42, severity: E, title: "bench document missing a required key" },
+    CatalogEntry { code: 43, severity: E, title: "bench document has a non-finite number" },
+    CatalogEntry { code: 44, severity: E, title: "bench invariant violated" },
+    CatalogEntry { code: 45, severity: W, title: "bench metric is a null bootstrap placeholder" },
+];
+
+/// Catalog lookup; `None` for an unregistered code (a checker bug — the
+/// `Report::push` path asserts against it in debug builds).
+pub fn catalog_entry(code: u16) -> Option<&'static CatalogEntry> {
+    CATALOG.iter().find(|e| e.code == code)
+}
+
+/// One finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub code: u16,
+    pub severity: Severity,
+    /// The file (or pseudo-file like `<flags>`) the finding is about.
+    pub path: String,
+    /// Locus inside the file: `$.configs.tiny.ranks`, `--draft-rank`, ...
+    pub locus: String,
+    pub message: String,
+    /// One-line fix suggestion; empty when there is nothing actionable.
+    pub hint: String,
+}
+
+impl Diagnostic {
+    pub fn code_str(&self) -> String {
+        format!("CLV{:03}", self.code)
+    }
+}
+
+/// Accumulates diagnostics across every checked document.
+#[derive(Default)]
+pub struct Report {
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a finding.  Severity comes from the catalog — call sites
+    /// cannot disagree with the documented meaning of a code.
+    pub fn push(&mut self, code: u16, path: &str, locus: &str, message: String, hint: &str) {
+        let severity = match catalog_entry(code) {
+            Some(e) => e.severity,
+            None => {
+                debug_assert!(false, "diagnostic code {code} is not in the catalog");
+                Severity::Error
+            }
+        };
+        self.diags.push(Diagnostic {
+            code,
+            severity,
+            path: path.to_string(),
+            locus: locus.to_string(),
+            message,
+            hint: hint.to_string(),
+        });
+    }
+
+    /// Deterministic order: by file, then code, then locus — golden files
+    /// and CI logs are stable under checker-internal reordering.
+    pub fn sort(&mut self) {
+        self.diags.sort_by(|a, b| (&a.path, a.code, &a.locus).cmp(&(&b.path, b.code, &b.locus)));
+    }
+
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.diags
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// `--format text`: one block per finding plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&format!(
+                "{} {} {} {}: {}\n",
+                d.code_str(),
+                d.severity.as_str(),
+                d.path,
+                d.locus,
+                d.message
+            ));
+            if !d.hint.is_empty() {
+                out.push_str(&format!("  hint: {}\n", d.hint));
+            }
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s)\n",
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    /// `--format json`: machine-readable dump of every field.
+    pub fn to_json(&self) -> Json {
+        let diags = self
+            .diags
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("code".to_string(), Json::Str(d.code_str()));
+                m.insert("severity".to_string(), Json::Str(d.severity.as_str().to_string()));
+                m.insert("path".to_string(), Json::Str(d.path.clone()));
+                m.insert("locus".to_string(), Json::Str(d.locus.clone()));
+                m.insert("message".to_string(), Json::Str(d.message.clone()));
+                m.insert("hint".to_string(), Json::Str(d.hint.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("diagnostics".to_string(), Json::Arr(diags));
+        top.insert("errors".to_string(), Json::Num(self.error_count() as f64));
+        top.insert("warnings".to_string(), Json::Num(self.warning_count() as f64));
+        Json::Obj(top)
+    }
+
+    /// Compact `CODE severity locus` lines for the golden fixture tests.
+    /// Messages and file paths are deliberately excluded: goldens stay
+    /// stable under rewording and fixture relocation, while still pinning
+    /// *which* code fires *where* in the document.
+    pub fn golden_lines(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&format!("{} {} {}\n", d.code_str(), d.severity.as_str(), d.locus));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_codes_unique_and_sorted() {
+        for w in CATALOG.windows(2) {
+            assert!(w[0].code < w[1].code, "catalog out of order at {}", w[1].code);
+        }
+    }
+
+    #[test]
+    fn push_takes_severity_from_catalog() {
+        let mut r = Report::new();
+        r.push(11, "m.json", "$.x", "unadvertised".into(), "");
+        r.push(9, "m.json", "$.y", "bad ladder".into(), "re-export");
+        assert_eq!(r.diagnostics()[0].severity, Severity::Warning);
+        assert_eq!(r.diagnostics()[1].severity, Severity::Error);
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn sort_is_by_path_code_locus() {
+        let mut r = Report::new();
+        r.push(9, "b.json", "$.z", String::new(), "");
+        r.push(9, "a.json", "$.z", String::new(), "");
+        r.push(6, "b.json", "$.a", String::new(), "");
+        r.sort();
+        let order: Vec<(&str, u16)> =
+            r.diagnostics().iter().map(|d| (d.path.as_str(), d.code)).collect();
+        assert_eq!(order, vec![("a.json", 9), ("b.json", 6), ("b.json", 9)]);
+    }
+
+    #[test]
+    fn text_render_carries_code_and_hint() {
+        let mut r = Report::new();
+        r.push(10, "m.json", "$.configs.tiny", "missing prefill_k8_b8".into(), "re-export");
+        let text = r.render_text();
+        assert!(text.contains("CLV010 error m.json $.configs.tiny: missing prefill_k8_b8"));
+        assert!(text.contains("hint: re-export"));
+        assert!(text.contains("1 error(s), 0 warning(s)"));
+    }
+
+    #[test]
+    fn json_render_is_parseable_and_counts() {
+        let mut r = Report::new();
+        r.push(45, "BENCH_serve.json", "$.obs", "null".into(), "");
+        let j = r.to_json();
+        let back = Json::parse(&crate::config::json::to_string(&j)).unwrap();
+        assert_eq!(back.req("warnings").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.req("errors").unwrap().as_usize().unwrap(), 0);
+        let arr = back.req("diagnostics").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].req("code").unwrap().as_str().unwrap(), "CLV045");
+    }
+
+    #[test]
+    fn golden_lines_exclude_path_and_message() {
+        let mut r = Report::new();
+        r.push(12, "/tmp/anywhere/manifest.json", "$.configs.tiny.verify_widths", "x".into(), "");
+        assert_eq!(r.golden_lines(), "CLV012 error $.configs.tiny.verify_widths\n");
+    }
+
+    /// Every catalog code must be documented in docs/STATIC_ANALYSIS.md —
+    /// the error-code catalog and the checker can never drift apart.
+    #[test]
+    fn catalog_is_documented() {
+        let doc_path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/STATIC_ANALYSIS.md");
+        let doc = std::fs::read_to_string(&doc_path)
+            .unwrap_or_else(|e| panic!("reading {doc_path:?}: {e}"));
+        for e in CATALOG {
+            let code = format!("CLV{:03}", e.code);
+            assert!(doc.contains(&code), "{code} ({}) missing from STATIC_ANALYSIS.md", e.title);
+        }
+    }
+}

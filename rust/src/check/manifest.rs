@@ -1,0 +1,484 @@
+//! Manifest geometry checks (`CLV001`–`CLV016`).
+//!
+//! This walks the *raw* `manifest.json` document rather than reusing
+//! [`Manifest::load`]: the loader stops at the first structural problem,
+//! while a checker must keep going and report everything it can see.
+//! Cross-validated, per config entry:
+//!
+//! * the rank ladder is non-empty, strictly monotonic (the exporter
+//!   writes it descending; either direction is fine), and inside
+//!   `1..=d_head`, and every advertised rank has both its factorized
+//!   param spec and its `decode_fac_r{r}_b{B}` program for every decode
+//!   batch (the rank family the router and the speculative draft builder
+//!   select from);
+//! * the prefill chunk ladder is strictly increasing with widths `>= 2`,
+//!   every advertised chunk has an exported `prefill_k{K}_b{B}` slab
+//!   program, and every exported slab width is advertised (the engine
+//!   plans only over `prefill_chunks` — an unadvertised artifact is dead
+//!   weight, flagged as a warning);
+//! * `verify_widths` is a subset of the chunk ladder and each verify
+//!   program really emits all-position `[B, K, V]` logits over `[B, K]`
+//!   token slabs (the speculative-verify contract);
+//! * prefill and decode programs of the same batch agree on the cache
+//!   block (the runtime carries one literal-side cache set across the
+//!   whole width family);
+//! * every dtype in every program signature is one the runtime supports,
+//!   and (with [`ManifestCheckOpts::check_files`]) every program's HLO
+//!   file exists on disk.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::model::manifest::DType;
+use crate::model::Manifest;
+
+use super::diag::Report;
+
+#[derive(Clone, Debug, Default)]
+pub struct ManifestCheckOpts {
+    /// Also require each program's HLO file to exist under the artifacts
+    /// dir (`CLV016`).  Off by default so manifest-only fixtures and
+    /// checked-in manifests without their artifacts stay checkable.
+    pub check_files: bool,
+}
+
+/// Dim keys a decoder config must carry (the serve/speculative paths read
+/// all of these); seq2seq configs have their own set.
+const DECODER_DIMS: &[&str] = &["vocab", "d_model", "n_heads", "n_layers", "seq_len", "d_head"];
+const SEQ2SEQ_DIMS: &[&str] =
+    &["vocab", "d_model", "n_heads", "n_enc_layers", "n_dec_layers", "d_head", "feat_dim"];
+
+/// One program signature, leniently parsed.
+struct RawSig {
+    file: String,
+    inputs: Vec<RawArg>,
+    outputs: Vec<RawArg>,
+}
+
+struct RawArg {
+    name: String,
+    shape: Vec<usize>,
+    dtype: String,
+}
+
+fn parse_args(v: &Json) -> Result<Vec<RawArg>, String> {
+    let mut out = Vec::new();
+    for (i, e) in v.as_arr().map_err(|e| e.to_string())?.iter().enumerate() {
+        let name = e
+            .req("name")
+            .and_then(|n| n.as_str().map(String::from))
+            .map_err(|e| format!("arg {i}: {e}"))?;
+        let shape = e.req("shape").and_then(|s| s.as_shape()).map_err(|e| format!("{name}: {e}"))?;
+        let dtype = e
+            .req("dtype")
+            .and_then(|d| d.as_str().map(String::from))
+            .map_err(|e| format!("{name}: {e}"))?;
+        out.push(RawArg { name, shape, dtype });
+    }
+    Ok(out)
+}
+
+fn parse_sig(v: &Json) -> Result<RawSig, String> {
+    let file =
+        v.req("file").and_then(|f| f.as_str().map(String::from)).map_err(|e| e.to_string())?;
+    let inputs = parse_args(v.req("inputs").map_err(|e| e.to_string())?)?;
+    let outputs = parse_args(v.req("outputs").map_err(|e| e.to_string())?)?;
+    Ok(RawSig { file, inputs, outputs })
+}
+
+/// `prefill_k8_b8` / `prefill_fac_r4_k8_b8` → `(width 8, batch 8)`.
+fn slab_geometry(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("prefill")?;
+    let (head, b) = rest.rsplit_once("_b")?;
+    let (_, k) = head.rsplit_once("_k")?;
+    Some((k.parse().ok()?, b.parse().ok()?))
+}
+
+/// `decode_b8` → batch 8 (the dense decode family defines the batch set).
+fn decode_batch(name: &str) -> Option<usize> {
+    name.strip_prefix("decode_b")?.parse().ok()
+}
+
+fn cache_input(sig: &RawSig) -> Option<&RawArg> {
+    sig.inputs.iter().find(|a| a.name.ends_with("_cache"))
+}
+
+/// Check `dir/manifest.json`.  Returns the typed [`Manifest`] when it is
+/// loadable at all (geometry findings do not block the typed view — the
+/// serve checks still want it), `None` when even the loader rejects it.
+pub fn check_manifest_dir(
+    report: &mut Report,
+    dir: &Path,
+    opts: &ManifestCheckOpts,
+) -> Option<Manifest> {
+    let path = dir.join("manifest.json");
+    let label = path.display().to_string();
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            report.push(
+                1,
+                &label,
+                "$",
+                format!("cannot read the manifest: {e}"),
+                "run `make artifacts` (python -m compile.aot) to export it",
+            );
+            return None;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            report.push(2, &label, "$", format!("not valid JSON: {e}"), "re-export the artifacts");
+            return None;
+        }
+    };
+    let Some(configs) = doc.get("configs").and_then(|c| c.as_obj().ok()) else {
+        report.push(
+            3,
+            &label,
+            "$.configs",
+            "manifest has no `configs` object".to_string(),
+            "re-export the artifacts — the exporter always writes `configs`",
+        );
+        return None;
+    };
+    for (name, entry) in configs {
+        check_config_entry(report, &label, dir, name, entry, opts);
+    }
+    Manifest::load(dir).ok()
+}
+
+fn check_config_entry(
+    report: &mut Report,
+    label: &str,
+    dir: &Path,
+    name: &str,
+    entry: &Json,
+    opts: &ManifestCheckOpts,
+) {
+    let at = |field: &str| format!("$.configs.{name}.{field}");
+    let reexport = "re-export the artifacts with `python -m compile.aot`";
+
+    // -- kind + dims ------------------------------------------------------
+    let kind = match entry.req("kind").and_then(|k| k.as_str()) {
+        Ok(k) => Some(k.to_string()),
+        Err(e) => {
+            report.push(4, label, &at("kind"), e.to_string(), reexport);
+            None
+        }
+    };
+    let dim = |key: &str| entry.get(key).and_then(|v| v.as_usize().ok());
+    let required: &[&str] = match kind.as_deref() {
+        Some("decoder") => DECODER_DIMS,
+        Some("seq2seq") => SEQ2SEQ_DIMS,
+        _ => &[],
+    };
+    for key in required {
+        if dim(key).is_none() {
+            report.push(
+                5,
+                label,
+                &at(key),
+                format!("{} config {name} is missing dim {key}", kind.as_deref().unwrap_or("?")),
+                reexport,
+            );
+        }
+    }
+    let d_head = dim("d_head");
+    let vocab = dim("vocab");
+
+    // -- rank ladder ------------------------------------------------------
+    let ranks = match entry.req("ranks").and_then(|r| r.as_shape()) {
+        Ok(r) => r,
+        Err(e) => {
+            report.push(4, label, &at("ranks"), e.to_string(), reexport);
+            Vec::new()
+        }
+    };
+    if entry.get("ranks").is_some() {
+        if ranks.is_empty() {
+            report.push(6, label, &at("ranks"), "rank ladder is empty".to_string(), reexport);
+        }
+        if ranks.contains(&0) {
+            report.push(6, label, &at("ranks"), "rank 0 is not a rank".to_string(), reexport);
+        }
+        // The exporter writes the grid dense-first (descending); hand-written
+        // manifests often sort ascending.  Everything downstream treats the
+        // ladder as a set, so either strict order is fine — what CLV006
+        // rejects is a shuffled or duplicated ladder.
+        let increasing = ranks.windows(2).all(|w| w[0] < w[1]);
+        let decreasing = ranks.windows(2).all(|w| w[0] > w[1]);
+        if !increasing && !decreasing {
+            report.push(
+                6,
+                label,
+                &at("ranks"),
+                format!("rank ladder {ranks:?} is not strictly monotonic (shuffled or duplicated)"),
+                reexport,
+            );
+        }
+        if let (Some(&max), Some(dh)) = (ranks.iter().max(), d_head) {
+            if max > dh {
+                report.push(
+                    6,
+                    label,
+                    &at("ranks"),
+                    format!("rank {max} exceeds d_head {dh} — no orthogonal basis that wide"),
+                    reexport,
+                );
+            }
+        }
+    }
+
+    // -- programs ---------------------------------------------------------
+    let mut programs: BTreeMap<String, RawSig> = BTreeMap::new();
+    match entry.req("programs").and_then(|p| p.as_obj()) {
+        Ok(progs) => {
+            for (pname, sig) in progs {
+                match parse_sig(sig) {
+                    Ok(s) => {
+                        for arg in s.inputs.iter().chain(&s.outputs) {
+                            if DType::parse(&arg.dtype).is_err() {
+                                report.push(
+                                    15,
+                                    label,
+                                    &format!("{}.{pname}", at("programs")),
+                                    format!(
+                                        "arg {} has dtype {:?} — the runtime only marshals \
+                                         float32/int32",
+                                        arg.name, arg.dtype
+                                    ),
+                                    reexport,
+                                );
+                            }
+                        }
+                        if opts.check_files && !dir.join(&s.file).is_file() {
+                            report.push(
+                                16,
+                                label,
+                                &format!("{}.{pname}", at("programs")),
+                                format!("program file {:?} is missing on disk", s.file),
+                                "re-export the artifacts or drop the stale manifest entry",
+                            );
+                        }
+                        programs.insert(pname.clone(), s);
+                    }
+                    Err(e) => {
+                        report.push(4, label, &format!("{}.{pname}", at("programs")), e, reexport);
+                    }
+                }
+            }
+        }
+        Err(e) => report.push(4, label, &at("programs"), e.to_string(), reexport),
+    }
+    if kind.as_deref() != Some("decoder") {
+        return; // the serving-path geometry below is decoder-only
+    }
+
+    // -- rank family completeness ----------------------------------------
+    let decode_batches: BTreeSet<usize> =
+        programs.keys().filter_map(|n| decode_batch(n)).collect();
+    let fac_ranks: BTreeSet<usize> = match entry.get("params_fac").map(|p| p.as_obj()) {
+        Some(Ok(obj)) => obj.keys().filter_map(|k| k.parse().ok()).collect(),
+        Some(Err(e)) => {
+            report.push(4, label, &at("params_fac"), e.to_string(), reexport);
+            BTreeSet::new()
+        }
+        None => BTreeSet::new(),
+    };
+    for &r in &ranks {
+        if !fac_ranks.contains(&r) {
+            report.push(
+                7,
+                label,
+                &at("params_fac"),
+                format!("advertised rank {r} has no factorized param spec"),
+                reexport,
+            );
+        }
+        for &b in &decode_batches {
+            let want = format!("decode_fac_r{r}_b{b}");
+            if !programs.contains_key(&want) {
+                report.push(
+                    8,
+                    label,
+                    &at("ranks"),
+                    format!("advertised rank {r} lacks its decode program {want:?}"),
+                    reexport,
+                );
+            }
+        }
+    }
+
+    // -- prefill chunk ladder --------------------------------------------
+    let chunks = match entry.get("prefill_chunks").map(|v| v.as_shape()) {
+        Some(Ok(c)) => c,
+        Some(Err(e)) => {
+            report.push(4, label, &at("prefill_chunks"), e.to_string(), reexport);
+            Vec::new()
+        }
+        None => Vec::new(),
+    };
+    if chunks.iter().any(|&k| k < 2) || chunks.windows(2).any(|w| w[0] >= w[1]) {
+        report.push(
+            9,
+            label,
+            &at("prefill_chunks"),
+            format!("chunk ladder {chunks:?} must be strictly increasing widths >= 2"),
+            reexport,
+        );
+    }
+    let exported: BTreeSet<(usize, usize)> =
+        programs.keys().filter_map(|n| slab_geometry(n)).collect();
+    for &k in &chunks {
+        if !exported.iter().any(|&(w, _)| w == k) {
+            report.push(
+                10,
+                label,
+                &at("prefill_chunks"),
+                format!("advertised chunk {k} has no prefill_k{k}_b* slab program"),
+                reexport,
+            );
+        }
+    }
+    for &(w, b) in &exported {
+        if !chunks.contains(&w) {
+            report.push(
+                11,
+                label,
+                &at("prefill_chunks"),
+                format!(
+                    "slab program for width {w} (batch {b}) is exported but not advertised — \
+                     the engine will never schedule it"
+                ),
+                "add the width to prefill_chunks or stop exporting it",
+            );
+        }
+    }
+
+    // -- verify widths ----------------------------------------------------
+    let verify = match entry.get("verify_widths").map(|v| v.as_shape()) {
+        Some(Ok(v)) => v,
+        Some(Err(e)) => {
+            report.push(4, label, &at("verify_widths"), e.to_string(), reexport);
+            Vec::new()
+        }
+        None => Vec::new(),
+    };
+    for &w in &verify {
+        if !chunks.contains(&w) {
+            report.push(
+                12,
+                label,
+                &at("verify_widths"),
+                format!("verify width {w} is not in prefill_chunks {chunks:?}"),
+                reexport,
+            );
+        }
+    }
+    for &w in &verify {
+        let of_width = programs.iter().filter(|(n, _)| is_slab_of_width(n, w));
+        for (pname, sig) in of_width {
+            let locus = format!("{}.{pname}", at("programs"));
+            check_verify_sig(report, label, &locus, pname, sig, w, vocab);
+        }
+    }
+
+    // -- cache block agreement -------------------------------------------
+    for (pname, sig) in &programs {
+        let Some((_, b)) = slab_geometry(pname) else { continue };
+        // The dense slab family shares its cache with `decode_b{b}`; the
+        // factorized families with `decode_fac_r{r}_b{b}` — compare
+        // against whichever sibling exists.
+        let sibling = match pname.strip_prefix("prefill_fac_") {
+            Some(rest) => rest
+                .split_once("_k")
+                .map(|(r, _)| format!("decode_fac_r{r}_b{b}"))
+                .unwrap_or_default(),
+            None => format!("decode_b{b}"),
+        };
+        let Some(dec) = programs.get(&sibling) else { continue };
+        let (pc, dc) = (cache_input(sig), cache_input(dec));
+        if let (Some(pc), Some(dc)) = (pc, dc) {
+            if pc.shape != dc.shape {
+                report.push(
+                    14,
+                    label,
+                    &format!("{}.{pname}", at("programs")),
+                    format!(
+                        "cache block {:?} disagrees with {sibling}'s {:?} — the runtime \
+                         carries one cache set across the width family",
+                        pc.shape, dc.shape
+                    ),
+                    reexport,
+                );
+            }
+        }
+    }
+}
+
+/// Is `name` a slab program of width `w` (any batch, any rank family)?
+fn is_slab_of_width(name: &str, w: usize) -> bool {
+    slab_geometry(name).is_some_and(|(k, _)| k == w)
+}
+
+/// The speculative-verify contract for one slab program: `[B, K]` tokens
+/// in, `[B, K, V]` logits out.
+fn check_verify_sig(
+    report: &mut Report,
+    label: &str,
+    locus: &str,
+    pname: &str,
+    sig: &RawSig,
+    w: usize,
+    vocab: Option<usize>,
+) {
+    let b = slab_geometry(pname).map(|(_, b)| b).unwrap_or(0);
+    let reexport = "re-export the artifacts — stale slab programs predate all-position logits";
+    if let Some(toks) = sig.inputs.iter().find(|a| a.name == "tokens") {
+        if toks.shape != [b, w] {
+            report.push(
+                13,
+                label,
+                locus,
+                format!("{pname}: tokens {:?} is not the [B, K] slab [{b}, {w}]", toks.shape),
+                reexport,
+            );
+        }
+    }
+    match sig.outputs.first() {
+        Some(lg) if lg.shape.len() == 3 => {
+            let want_v = vocab.unwrap_or(lg.shape[2]);
+            if lg.shape != [b, w, want_v] {
+                report.push(
+                    13,
+                    label,
+                    locus,
+                    format!(
+                        "{pname}: logits {:?} disagree with [B, K, V] = [{b}, {w}, {want_v}]",
+                        lg.shape
+                    ),
+                    reexport,
+                );
+            }
+        }
+        Some(lg) => {
+            report.push(
+                13,
+                label,
+                locus,
+                format!(
+                    "{pname}: logits {:?} are last-position only — a verify step cannot \
+                     score a draft with them",
+                    lg.shape
+                ),
+                reexport,
+            );
+        }
+        None => {
+            report.push(13, label, locus, format!("{pname}: no outputs at all"), reexport);
+        }
+    }
+}

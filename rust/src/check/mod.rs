@@ -1,0 +1,24 @@
+//! `clover check` — static diagnostics over the deployable surface.
+//!
+//! Everything here runs without executing a single XLA program: it
+//! cross-validates the *documents* a deployment is assembled from —
+//! exported manifests ([`manifest`]), engine flag combinations and
+//! committed run configs ([`serve`]), and committed bench documents
+//! ([`bench`]) — and reports problems as structured [`Diagnostic`]s
+//! with stable `CLV0xx` codes, a path + locus, and a fix hint.
+//!
+//! The catalog of codes lives in [`diag::CATALOG`] and is documented
+//! (test-enforced) in `docs/STATIC_ANALYSIS.md`.  The CLI verb
+//! (`clover check`) renders a [`Report`] as text or JSON and exits
+//! non-zero when any error-severity diagnostic fired, which is what
+//! lets CI gate merges on it.
+
+pub mod bench;
+pub mod diag;
+pub mod manifest;
+pub mod serve;
+
+pub use bench::{check_bench_doc, check_bench_file};
+pub use diag::{catalog_entry, CatalogEntry, Diagnostic, Report, Severity, CATALOG};
+pub use manifest::{check_manifest_dir, ManifestCheckOpts};
+pub use serve::{check_engine_spec, check_run_config, ServeSpec};

@@ -1,0 +1,325 @@
+//! Engine-spec and run-config checks (`CLV020`–`CLV033`).
+//!
+//! [`ServeSpec`] is the static mirror of the flag surface an engine spawn
+//! consumes (`clover serve`, `EngineSpec`, the gateway worker): preset,
+//! batch slots, chunk-ladder cap, speculative draft pair, KV codec +
+//! budgets, per-step token budget.  [`check_engine_spec`] cross-validates
+//! the combination against the manifest *before* anything spawns — the
+//! same rules the engine builders enforce with `bail!` at construction,
+//! surfaced as diagnostics with stable codes instead of a panic-shaped
+//! log line deep inside a worker thread.
+//!
+//! [`check_run_config`] covers committed `*.toml` run configs: parse +
+//! [`RunConfig::validate`] failures, plus cross-references against the
+//! manifest (preset exists, `serve.kv_rank` is an exported rank).
+
+use crate::config::RunConfig;
+use crate::model::Manifest;
+use crate::serve::kv::{KvSpecError, PAGE_TOKENS};
+use crate::serve::{KvCodecSpec, KvConfig, SpecConfig};
+
+use super::diag::Report;
+
+/// Static image of one engine-spawn flag combination.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    pub preset: String,
+    /// Micro-batch lanes (`decode_b{B}` programs; the CLI serves at 8).
+    pub batch_slots: usize,
+    /// Target engine rank (`None` = dense, i.e. rank `d_head`).
+    pub rank: Option<usize>,
+    /// `--prefill-chunk` ladder cap (`None` keeps every exported width).
+    pub prefill_chunk: Option<usize>,
+    /// `--max-step-tokens` fused-step budget.
+    pub max_step_tokens: Option<usize>,
+    pub kv_codec: KvCodecSpec,
+    /// `--kv-memory-budget` admission budget in bytes.
+    pub kv_memory_budget: Option<usize>,
+    /// `--speculative`: draft rank + draft-length config.
+    pub speculative: Option<(usize, SpecConfig)>,
+    /// `--temperature` (speculation is greedy-only).
+    pub temperature: f64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            preset: "tiny".to_string(),
+            batch_slots: 8,
+            rank: None,
+            prefill_chunk: None,
+            max_step_tokens: None,
+            kv_codec: KvCodecSpec::Identity,
+            kv_memory_budget: None,
+            speculative: None,
+            temperature: 0.0,
+        }
+    }
+}
+
+/// Validate `spec` against `manifest`.  `label` names the source of the
+/// flags in the diagnostics (`<flags>` for the CLI, a config path when
+/// the spec came from a file); loci are the flags themselves.
+pub fn check_engine_spec(report: &mut Report, manifest: &Manifest, spec: &ServeSpec, label: &str) {
+    let Ok(entry) = manifest.config(&spec.preset) else {
+        report.push(
+            20,
+            label,
+            "--preset",
+            format!(
+                "preset {:?} is not in the manifest (have: {:?})",
+                spec.preset,
+                manifest.configs.keys().collect::<Vec<_>>()
+            ),
+            "export the preset or fix the name",
+        );
+        return;
+    };
+    // Geometry the rest of the checks hang off; a manifest that lost one
+    // of these dims is already flagged (CLV005) by the manifest pass.
+    let dims = (
+        entry.dim("n_layers").ok(),
+        entry.dim("n_heads").ok(),
+        entry.dim("d_head").ok(),
+        entry.dim("seq_len").ok(),
+    );
+    let (Some(n_layers), Some(n_heads), Some(d_head), Some(seq_len)) = dims else {
+        return;
+    };
+    let rank = spec.rank.unwrap_or(d_head);
+    if spec.rank.is_some_and(|r| !entry.ranks.contains(&r)) {
+        report.push(
+            24,
+            label,
+            "--rank",
+            format!("rank {rank} is not an exported rank (ladder {:?})", entry.ranks),
+            "pick a rank from the manifest's ladder",
+        );
+    }
+
+    // -- KV codec vs geometry --------------------------------------------
+    let stored = match spec.kv_codec.resolve(n_layers, rank) {
+        Ok(s) => Some(s),
+        Err(e @ KvSpecError::BudgetLen { .. }) => {
+            report.push(
+                21,
+                label,
+                "--kv-layer-budgets",
+                e.to_string(),
+                "pass exactly one budget per manifest layer",
+            );
+            None
+        }
+        Err(e @ KvSpecError::BudgetRange { .. }) => {
+            report.push(
+                22,
+                label,
+                "--kv-layer-budgets",
+                e.to_string(),
+                "budgets are per-layer stored ranks in 1..=rank",
+            );
+            None
+        }
+        Err(e) => {
+            report.push(23, label, "--kv-codec", e.to_string(), "see --kv-codec in the CLI help");
+            None
+        }
+    };
+
+    // -- slab ladder under the --prefill-chunk cap ------------------------
+    let mut widths: Vec<usize> = entry.prefill_chunks.clone();
+    if let Some(cap) = spec.prefill_chunk {
+        widths.retain(|&w| w <= cap);
+    }
+    let max_chunk = widths.last().copied().unwrap_or(1);
+
+    // -- speculative pair -------------------------------------------------
+    if let Some((draft_rank, cfg)) = &spec.speculative {
+        if cfg.draft_len < 2 {
+            report.push(
+                25,
+                label,
+                "--draft-len",
+                format!("draft_len {} cannot beat one fused step per token", cfg.draft_len),
+                "use a draft length >= 2",
+            );
+        }
+        if max_chunk < 2 {
+            report.push(
+                26,
+                label,
+                "--speculative",
+                format!(
+                    "no chunked slab width survives the ladder {:?} (cap {:?}) — nothing \
+                     can verify a draft",
+                    entry.prefill_chunks, spec.prefill_chunk
+                ),
+                "raise --prefill-chunk or export slab programs",
+            );
+        }
+        for &w in widths.iter().filter(|&&w| w > 1) {
+            if !entry.verify_widths.contains(&w) {
+                report.push(
+                    26,
+                    label,
+                    "--speculative",
+                    format!(
+                        "width {w} is not in verify_widths {:?} — its slab program is \
+                         last-position only",
+                        entry.verify_widths
+                    ),
+                    "re-export the artifacts to get all-position logits",
+                );
+            }
+        }
+        if spec.temperature > 0.0 {
+            report.push(
+                27,
+                label,
+                "--temperature",
+                format!(
+                    "speculation verifies greedy prefixes; temperature {} breaks the \
+                     accept rule",
+                    spec.temperature
+                ),
+                "drop --temperature or --speculative",
+            );
+        }
+        if *draft_rank == 0 || *draft_rank >= d_head {
+            report.push(
+                24,
+                label,
+                "--draft-rank",
+                format!("draft rank {draft_rank} must be in 1..{d_head} to be a cheaper proposer"),
+                "pick a rank strictly below the dense head dim",
+            );
+        }
+    }
+
+    // -- per-step token budget vs the ladder ------------------------------
+    if let Some(budget) = spec.max_step_tokens {
+        if let Some(&wmin) = widths.iter().find(|&&w| w > 1) {
+            if budget < wmin {
+                report.push(
+                    28,
+                    label,
+                    "--max-step-tokens",
+                    format!(
+                        "budget {budget} is below the smallest slab width {wmin} — every \
+                         prefill falls back to width 1"
+                    ),
+                    "raise the budget to at least the smallest chunk width",
+                );
+            }
+        }
+    }
+
+    // -- KV memory budget vs worst-case page reservations -----------------
+    if stored.is_none() {
+        return; // codec already failed to resolve; no byte math to do
+    }
+    let Some(budget) = spec.kv_memory_budget else { return };
+    let target = KvConfig {
+        n_layers,
+        n_heads,
+        rank,
+        max_positions: seq_len,
+        batch_slots: spec.batch_slots,
+        codec: spec.kv_codec.clone(),
+    };
+    let draft_page = match &spec.speculative {
+        Some((dr, _)) if *dr >= 1 && *dr < d_head => KvConfig {
+            n_layers,
+            n_heads,
+            rank: *dr,
+            max_positions: seq_len,
+            batch_slots: spec.batch_slots,
+            codec: KvCodecSpec::Identity,
+        }
+        .bytes_per_page(),
+        _ => 0,
+    };
+    // Resident bytes per page: the target's codec-compressed pages plus,
+    // for a draft+verify pair, the draft's identity pages — the same sum
+    // the engine's budget admission reserves against.
+    let resident = target.bytes_per_page() + draft_page;
+    if budget < resident {
+        report.push(
+            29,
+            label,
+            "--kv-memory-budget",
+            format!(
+                "budget {budget} B is below one resident page ({resident} B) — admission \
+                 can never pass"
+            ),
+            "raise the budget or compress harder (--kv-codec factored)",
+        );
+    } else {
+        let worst = seq_len.div_ceil(PAGE_TOKENS) * resident;
+        if budget < worst {
+            report.push(
+                30,
+                label,
+                "--kv-memory-budget",
+                format!(
+                    "budget {budget} B is below one full-window request ({worst} B) — a \
+                     max-length request can never be admitted"
+                ),
+                "acceptable if requests stay short; raise the budget otherwise",
+            );
+        }
+    }
+}
+
+/// Check one committed run config (`*.toml`): parse, validate, and
+/// cross-reference against the manifest when one was loaded.
+pub fn check_run_config(report: &mut Report, path: &str, manifest: Option<&Manifest>) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            report.push(31, path, "$", format!("cannot read: {e}"), "");
+            return;
+        }
+    };
+    // `from_toml_str` validates internally, so classify its failures: a
+    // document that is not TOML at all is CLV031; one that parses but
+    // breaks a validation bound is CLV032.
+    let cfg = match RunConfig::from_toml_str(&text) {
+        Ok(c) => c,
+        Err(e) => {
+            if crate::config::toml::parse(&text).is_ok() {
+                report.push(32, path, "$", format!("{e:#}"), "see config/mod.rs for the bounds");
+            } else {
+                report.push(31, path, "$", format!("parse failed: {e:#}"), "");
+            }
+            return;
+        }
+    };
+    let Some(m) = manifest else { return };
+    let Ok(entry) = m.config(&cfg.model.preset) else {
+        report.push(
+            33,
+            path,
+            "model.preset",
+            format!(
+                "preset {:?} is not in the checked manifest (have: {:?})",
+                cfg.model.preset,
+                m.configs.keys().collect::<Vec<_>>()
+            ),
+            "export the preset or fix the name",
+        );
+        return;
+    };
+    if !entry.ranks.contains(&cfg.serve.kv_rank) {
+        report.push(
+            33,
+            path,
+            "serve.kv_rank",
+            format!(
+                "kv_rank {} is not an exported rank (ladder {:?})",
+                cfg.serve.kv_rank, entry.ranks
+            ),
+            "pick a rank from the manifest's ladder",
+        );
+    }
+}

@@ -29,6 +29,7 @@
 // indexing-heavy numeric code (lane/slot loops over fixed-shape tensors).
 #![allow(clippy::needless_range_loop)]
 
+pub mod check;
 pub mod clover;
 pub mod config;
 pub mod coordinator;
@@ -39,7 +40,12 @@ pub mod obs;
 pub mod peft;
 pub mod report;
 pub mod runtime;
+// The serving spine must never panic a worker thread on a poisoned lock
+// or a sloppy parse: `unwrap` is denied outright in `serve`/`server`
+// (tests are exempted via `allow-unwrap-in-tests` in `clippy.toml`).
+#[deny(clippy::unwrap_used)]
 pub mod serve;
+#[deny(clippy::unwrap_used)]
 pub mod server;
 pub mod tensor;
 pub mod testing;

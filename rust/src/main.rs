@@ -18,6 +18,8 @@
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //!                  [--stats-interval SECS]
 //! clover golden    [--preset tiny]          # replay golden fixtures
+//! clover check     [paths...] [--format text|json] [--check-files]
+//!                  [--artifacts DIR] [--preset tiny] [+ the serve flags]
 //! clover report    t1|t2|t3|t4|f1c|f1d|f2|f3|f4|f5|f6|all [--quick]
 //! ```
 
@@ -107,6 +109,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "golden" => cmd_golden(&args),
         "report" => cmd_report(&args),
+        "check" => cmd_check(&args),
         _ => {
             println!("{}", HELP);
             Ok(())
@@ -116,7 +119,15 @@ fn main() -> Result<()> {
 
 const HELP: &str = "clover — Cross-Layer Orthogonal Vectors (paper reproduction framework)
 
-USAGE: clover <pretrain|prune|finetune|eval|spectra|serve|golden|report> [flags]
+USAGE: clover <pretrain|prune|finetune|eval|spectra|serve|golden|check|report> [flags]
+
+clover check [paths...] statically validates a deployment before anything
+spawns: manifest geometry, the engine flag combination (same flags as
+`clover serve`), committed run configs (*.toml) and bench documents
+(*.json) given as paths.  `--format text|json`, `--check-files` to also
+require HLO files on disk; exits 1 when any CLV0xx error fires (see
+docs/STATIC_ANALYSIS.md for the code catalog).
+
 Run `make artifacts` once before anything else. See README.md.";
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
@@ -257,7 +268,7 @@ fn kv_codec_flags(args: &Args) -> Result<KvCodecSpec> {
                 .collect::<Result<Vec<usize>>>()
         })
         .transpose()?;
-    KvCodecSpec::parse(args.get("kv-codec").unwrap_or("identity"), budgets)
+    Ok(KvCodecSpec::parse(args.get("kv-codec").unwrap_or("identity"), budgets)?)
 }
 
 /// Parse `--kv-memory-budget BYTES` — the KV admission budget (factored
@@ -703,4 +714,74 @@ fn cmd_report(args: &Args) -> Result<()> {
     } else {
         run(which)
     }
+}
+
+/// `clover check` — the static pre-deploy gate.  Validates the manifest,
+/// the engine flag combination (the same serve flags, no spawn), and any
+/// paths given as positional args (`*.toml` run configs, `*.json` bench
+/// documents).  Prints diagnostics in `--format text|json` and exits 1
+/// when any error-severity code fires.
+fn cmd_check(args: &Args) -> Result<()> {
+    use clover::check::{self, ManifestCheckOpts, Report, ServeSpec};
+
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let mut report = Report::new();
+    let opts = ManifestCheckOpts { check_files: args.get("check-files").is_some() };
+    let manifest = check::check_manifest_dir(&mut report, std::path::Path::new(artifacts), &opts);
+
+    if let Some(m) = &manifest {
+        // Flag parse failures surface as diagnostics, not anyhow bails —
+        // `check` reports on bad input instead of dying on it.
+        let budgets = args
+            .get("kv-layer-budgets")
+            .map(|v| {
+                v.split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().with_context(|| format!("--kv-layer-budgets {v}"))
+                    })
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .transpose()?;
+        let kv_codec = match KvCodecSpec::parse(args.get("kv-codec").unwrap_or("identity"), budgets)
+        {
+            Ok(c) => c,
+            Err(e) => {
+                report.push(23, "<flags>", "--kv-codec", e.to_string(), "identity|factored");
+                KvCodecSpec::Identity
+            }
+        };
+        let spec = ServeSpec {
+            preset: args.get("preset").unwrap_or("tiny").to_string(),
+            batch_slots: args.usize_or("batch-slots", 8)?,
+            rank: args
+                .get("rank")
+                .map(|v| v.parse::<usize>().with_context(|| format!("--rank {v}")))
+                .transpose()?,
+            prefill_chunk: prefill_chunk_flag(args)?,
+            max_step_tokens: max_step_tokens_flag(args)?,
+            kv_codec,
+            kv_memory_budget: kv_memory_budget_flag(args)?,
+            speculative: speculative_flags(args)?,
+            temperature: args.f64_or("temperature", 0.0)?,
+        };
+        check::check_engine_spec(&mut report, m, &spec, "<flags>");
+    }
+
+    for path in args.positional.iter().skip(1) {
+        if path.ends_with(".toml") {
+            check::check_run_config(&mut report, path, manifest.as_ref());
+        } else {
+            check::check_bench_file(&mut report, path);
+        }
+    }
+
+    report.sort();
+    match args.get("format").unwrap_or("text") {
+        "json" => println!("{}", clover::config::json::to_string(&report.to_json())),
+        _ => print!("{}", report.render_text()),
+    }
+    if report.has_errors() {
+        std::process::exit(1);
+    }
+    Ok(())
 }

@@ -3,7 +3,7 @@
 //! information crosses the Python→Rust boundary; nothing in the Rust tree
 //! re-derives a model dimension.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -15,12 +15,28 @@ pub enum DType {
     I32,
 }
 
+/// A manifest advertised a dtype this runtime has no layout for.  Typed
+/// (rather than a bare `anyhow!`) so `clover check` can map it to its own
+/// diagnostic code without string-matching the message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DTypeError {
+    pub got: String,
+}
+
+impl std::fmt::Display for DTypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unsupported dtype {:?} (expected float32|int32)", self.got)
+    }
+}
+
+impl std::error::Error for DTypeError {}
+
 impl DType {
-    fn parse(s: &str) -> Result<Self> {
+    pub fn parse(s: &str) -> Result<Self, DTypeError> {
         match s {
             "float32" => Ok(DType::F32),
             "int32" => Ok(DType::I32),
-            other => bail!("unsupported dtype {other:?}"),
+            other => Err(DTypeError { got: other.to_string() }),
         }
     }
 }

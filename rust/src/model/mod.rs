@@ -10,7 +10,7 @@ pub mod manifest;
 pub mod params;
 
 pub use checkpoint::Checkpoint;
-pub use manifest::{ArgSpec, ConfigEntry, DType, Manifest, ParamSpec, ProgramSig};
+pub use manifest::{ArgSpec, ConfigEntry, DType, DTypeError, Manifest, ParamSpec, ProgramSig};
 pub use params::ParamSet;
 
 use anyhow::Result;

@@ -11,9 +11,11 @@
 //! submitting side at once.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 
 use crate::config::json::Json;
+// Through the shim so the loom lane can model registry contention with
+// the same lock type the gateway publishes through.
+use crate::util::sync::Mutex;
 
 /// Cumulative histogram: `counts[i]` tokens observations `<= bounds[i]`,
 /// with an implicit `+Inf` bucket (`count`).

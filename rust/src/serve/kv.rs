@@ -39,6 +39,43 @@ use anyhow::{bail, Result};
 /// Page size in token positions (allocation granularity).
 pub const PAGE_TOKENS: usize = 16;
 
+/// Typed failure modes of the codec-spec surface (`--kv-codec`,
+/// `--kv-layer-budgets`).  `clover check` matches on the variants to map
+/// each to its own `CLV0xx` diagnostic; runtime callers keep their
+/// `anyhow` contexts via the `std::error::Error` impl and `?`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvSpecError {
+    /// `--kv-codec` value is not `identity`/`factored`.
+    UnknownCodec { codec: String },
+    /// `--kv-layer-budgets` passed alongside `--kv-codec identity`.
+    BudgetsWithIdentity,
+    /// Budget list length does not match the model's layer count.
+    BudgetLen { got: usize, n_layers: usize },
+    /// A per-layer budget falls outside `1..=rank`.
+    BudgetRange { layer: usize, budget: usize, rank: usize },
+}
+
+impl std::fmt::Display for KvSpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownCodec { codec } => {
+                write!(f, "unknown KV codec {codec:?} (expected identity|factored)")
+            }
+            Self::BudgetsWithIdentity => {
+                write!(f, "--kv-layer-budgets requires --kv-codec factored")
+            }
+            Self::BudgetLen { got, n_layers } => {
+                write!(f, "--kv-layer-budgets has {got} entries for a {n_layers}-layer model")
+            }
+            Self::BudgetRange { layer, budget, rank } => {
+                write!(f, "layer {layer} budget {budget} outside 1..={rank}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvSpecError {}
+
 /// Plain-data description of a page codec — travels through `KvConfig`,
 /// `EngineSpec`, and the CLI (`--kv-codec`, `--kv-layer-budgets`), and is
 /// resolved against a concrete model geometry at engine construction.
@@ -60,16 +97,16 @@ impl Default for KvCodecSpec {
 impl KvCodecSpec {
     /// Parse the CLI surface: `--kv-codec identity|factored` plus an
     /// optional `--kv-layer-budgets r0,r1,...` list (factored only).
-    pub fn parse(codec: &str, layer_budgets: Option<Vec<usize>>) -> Result<Self> {
+    pub fn parse(codec: &str, layer_budgets: Option<Vec<usize>>) -> Result<Self, KvSpecError> {
         match codec {
             "identity" => {
                 if layer_budgets.is_some() {
-                    bail!("--kv-layer-budgets requires --kv-codec factored");
+                    return Err(KvSpecError::BudgetsWithIdentity);
                 }
                 Ok(Self::Identity)
             }
             "factored" => Ok(Self::Factored { layer_budgets }),
-            other => bail!("unknown KV codec {other:?} (expected identity|factored)"),
+            other => Err(KvSpecError::UnknownCodec { codec: other.to_string() }),
         }
     }
 
@@ -84,20 +121,17 @@ impl KvCodecSpec {
     /// validating DepthKV-style budgets: one entry per layer, each within
     /// `1..=rank`.  This is the validation gate every construction boundary
     /// (engine builder, gateway worker, CLI) goes through.
-    pub fn resolve(&self, n_layers: usize, rank: usize) -> Result<Vec<usize>> {
+    pub fn resolve(&self, n_layers: usize, rank: usize) -> Result<Vec<usize>, KvSpecError> {
         match self {
             Self::Identity => Ok(vec![rank; n_layers]),
             Self::Factored { layer_budgets: None } => Ok(vec![(rank / 2).max(1); n_layers]),
             Self::Factored { layer_budgets: Some(b) } => {
                 if b.len() != n_layers {
-                    bail!(
-                        "--kv-layer-budgets has {} entries for a {n_layers}-layer model",
-                        b.len()
-                    );
+                    return Err(KvSpecError::BudgetLen { got: b.len(), n_layers });
                 }
                 for (l, &r) in b.iter().enumerate() {
                     if r == 0 || r > rank {
-                        bail!("layer {l} budget {r} outside 1..={rank}");
+                        return Err(KvSpecError::BudgetRange { layer: l, budget: r, rank });
                     }
                 }
                 Ok(b.clone())
@@ -106,7 +140,7 @@ impl KvCodecSpec {
     }
 
     /// Build the codec object for a concrete geometry.
-    pub fn build(&self, n_layers: usize, rank: usize) -> Result<Box<dyn PageCodec>> {
+    pub fn build(&self, n_layers: usize, rank: usize) -> Result<Box<dyn PageCodec>, KvSpecError> {
         let budgets = self.resolve(n_layers, rank)?;
         Ok(match self {
             Self::Identity => Box::new(IdentityCodec { rank, n_layers }),
@@ -243,7 +277,8 @@ impl KvConfig {
     /// Check the codec spec against this geometry (per-layer budgets have
     /// one entry per manifest layer, each within `1..=rank`).
     pub fn validate(&self) -> Result<()> {
-        self.codec.resolve(self.n_layers, self.rank).map(|_| ())
+        self.codec.resolve(self.n_layers, self.rank)?;
+        Ok(())
     }
 
     /// Per-layer stored ranks under the configured codec.

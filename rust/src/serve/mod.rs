@@ -215,8 +215,8 @@ pub use engine::{
     ServeMetrics, SpecConfig, StepHook, StepPlan,
 };
 pub use kv::{
-    FactoredCodec, IdentityCodec, KvCodecSpec, KvConfig, KvManager, PageCodec, PagedKvStore,
-    PAGE_TOKENS,
+    FactoredCodec, IdentityCodec, KvCodecSpec, KvConfig, KvManager, KvSpecError, PageCodec,
+    PagedKvStore, PAGE_TOKENS,
 };
 pub use sampling::{Sampler, SamplingParams};
 pub use session::{Session, SpecState, VerifyOutcome};

@@ -29,10 +29,14 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::{self, JoinHandle};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+// Sync primitives come through the shim so the loom lane models the
+// worker's protocols with the same types this build links.
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::thread::{self, JoinHandle};
+use crate::util::sync::{Arc, Mutex};
 
 use crate::coordinator::ops;
 use crate::model::params::ParamSet;
@@ -798,7 +802,9 @@ impl GatewayHook {
     fn shutdown_dump(&mut self) {
         if let Some(w) = &self.obs {
             self.publish_queue_gauges();
-            w.obs.trace.lock().unwrap().request_dump("shutdown");
+            // A panicking tap thread must not take the drain down with it:
+            // recover the sink from the poison and dump anyway.
+            w.obs.trace.lock().unwrap_or_else(|e| e.into_inner()).request_dump("shutdown");
         }
     }
     /// Accept one submission into the backlog.  Every accepted submission
@@ -955,7 +961,7 @@ impl StepHook for GatewayHook {
         let reg = &w.obs.registry;
         reg.counter_add(&w.s_steps_total, 1.0);
         reg.gauge_set(&w.s_kv_live_bytes, ev.kv_live_bytes as f64);
-        w.obs.trace.lock().unwrap().record_step(ev);
+        w.obs.trace.lock().unwrap_or_else(|e| e.into_inner()).record_step(ev);
         self.publish_queue_gauges();
     }
 
@@ -977,7 +983,7 @@ impl StepHook for GatewayHook {
             }
             _ => {}
         }
-        w.obs.trace.lock().unwrap().record_span(ev);
+        w.obs.trace.lock().unwrap_or_else(|e| e.into_inner()).record_span(ev);
     }
 }
 

@@ -6,6 +6,7 @@
 //! lines.
 
 pub mod rng;
+pub mod sync;
 
 use std::time::Instant;
 

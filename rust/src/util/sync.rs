@@ -1,0 +1,24 @@
+//! Sync-primitive shim: `std::sync` by default, loom types under
+//! `--features loom`.
+//!
+//! The gateway worker, engine observability, and the KV-lane lifecycle
+//! share a small set of primitives (`Arc`, `Mutex`, atomics, `thread`).
+//! Importing them from here instead of `std::sync` lets the loom lane
+//! (`cargo test --features loom --test loom` in CI) re-run the modeled
+//! protocols — ingress admission vs cancel, same-iteration lane reclaim,
+//! speculative rollback vs slot free — under schedule exploration with
+//! the *same* types the production build links.
+//!
+//! `mpsc` is deliberately absent: loom does not model std channels, so
+//! channel-shaped protocols are modeled in `tests/loom.rs` against the
+//! primitives they decompose into.
+
+#[cfg(feature = "loom")]
+pub use loom::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(feature = "loom")]
+pub use loom::thread;
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(feature = "loom"))]
+pub use std::thread;

@@ -1,0 +1,193 @@
+//! Golden-file tests for the `clover check` diagnostics over the
+//! seeded-bad fixture corpus in `tests/fixtures/check/`.
+//!
+//! Goldens are the compact [`Report::golden_lines`] form (`CODE severity
+//! locus`) — stable under message rewording and fixture relocation while
+//! still pinning which `CLV0xx` code fires where.  Re-bless after an
+//! intentional change with `CLV_BLESS=1 cargo test --test check_golden`.
+
+use std::path::{Path, PathBuf};
+
+use clover::check::{self, ManifestCheckOpts, Report, ServeSpec};
+use clover::model::Manifest;
+use clover::serve::KvCodecSpec;
+
+fn fixtures() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/check")
+}
+
+fn assert_golden(report: &mut Report, expected: &Path) {
+    report.sort();
+    let got = report.golden_lines();
+    if std::env::var("CLV_BLESS").is_ok() {
+        std::fs::write(expected, &got).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(expected)
+        .unwrap_or_else(|e| panic!("missing golden {}: {e}", expected.display()));
+    assert_eq!(
+        got,
+        want,
+        "diagnostics drifted from {} — re-bless with CLV_BLESS=1 if intentional",
+        expected.display()
+    );
+}
+
+#[test]
+fn manifest_fixture_corpus_matches_goldens() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(fixtures()).unwrap() {
+        let dir = entry.unwrap().path();
+        let expected = dir.join("manifest.expected");
+        if !expected.is_file() {
+            continue;
+        }
+        let mut report = Report::new();
+        check::check_manifest_dir(&mut report, &dir, &ManifestCheckOpts::default());
+        assert_golden(&mut report, &expected);
+        seen += 1;
+    }
+    assert!(seen >= 12, "manifest fixture corpus shrank to {seen} cases");
+}
+
+#[test]
+fn bench_fixture_corpus_matches_goldens() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(fixtures().join("bench")).unwrap() {
+        let doc = entry.unwrap().path();
+        if doc.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let mut report = Report::new();
+        check::check_bench_file(&mut report, doc.to_str().unwrap());
+        assert_golden(&mut report, &doc.with_extension("expected"));
+        seen += 1;
+    }
+    assert!(seen >= 4, "bench fixture corpus shrank to {seen} cases");
+}
+
+#[test]
+fn run_config_fixtures_match_goldens() {
+    let good = Manifest::load(fixtures().join("good")).unwrap();
+    for name in ["bad_run_config", "warn_run_config"] {
+        let path = fixtures().join(format!("{name}.toml"));
+        let mut report = Report::new();
+        check::check_run_config(&mut report, path.to_str().unwrap(), Some(&good));
+        assert_golden(&mut report, &fixtures().join(format!("{name}.expected")));
+    }
+}
+
+#[test]
+fn good_fixture_is_diagnostic_free_and_loads() {
+    let mut report = Report::new();
+    let m = check::check_manifest_dir(
+        &mut report,
+        &fixtures().join("good"),
+        &ManifestCheckOpts::default(),
+    );
+    assert!(report.is_empty(), "good fixture regressed:\n{}", report.render_text());
+    assert!(m.is_some(), "good fixture must load through the typed Manifest too");
+}
+
+/// The committed `BENCH_history/` bootstrap snapshot must stay exit-0:
+/// nulls are CLV045 warnings, never errors.
+#[test]
+fn committed_bench_history_has_no_errors() {
+    let history = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_history");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(history).unwrap() {
+        let doc = entry.unwrap().path();
+        if doc.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let mut report = Report::new();
+        check::check_bench_file(&mut report, doc.to_str().unwrap());
+        assert!(
+            !report.has_errors(),
+            "committed snapshot {} fails clover check:\n{}",
+            doc.display(),
+            report.render_text()
+        );
+        checked += 1;
+    }
+    assert!(checked >= 1, "BENCH_history lost its snapshot");
+}
+
+fn codes(report: &Report) -> Vec<String> {
+    report.diagnostics().iter().map(|d| d.code_str()).collect()
+}
+
+/// Engine-spec combinations map to stable codes (the `<flags>` side of
+/// the checker has no file fixtures; pin the codes directly).
+#[test]
+fn engine_spec_combinations_fire_stable_codes() {
+    let m = Manifest::load(fixtures().join("good")).unwrap();
+    let check_spec = |spec: &ServeSpec| {
+        let mut report = Report::new();
+        check::check_engine_spec(&mut report, &m, spec, "<flags>");
+        report.sort();
+        report
+    };
+
+    let unknown_preset = ServeSpec { preset: "nope".into(), ..Default::default() };
+    assert_eq!(codes(&check_spec(&unknown_preset)), ["CLV020"]);
+
+    let budgets_wrong_len = ServeSpec {
+        kv_codec: KvCodecSpec::Factored { layer_budgets: Some(vec![2]) },
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&budgets_wrong_len)), ["CLV021"]);
+
+    let budget_out_of_range = ServeSpec {
+        kv_codec: KvCodecSpec::Factored { layer_budgets: Some(vec![9, 9]) },
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&budget_out_of_range)), ["CLV022"]);
+
+    let rank_off_ladder = ServeSpec { rank: Some(3), ..Default::default() };
+    assert_eq!(codes(&check_spec(&rank_off_ladder)), ["CLV024"]);
+
+    let draft_len_too_small = ServeSpec {
+        speculative: Some((4, clover::serve::SpecConfig { draft_len: 1, adaptive: true })),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&draft_len_too_small)), ["CLV025"]);
+
+    let sampled_speculation = ServeSpec {
+        speculative: Some((4, clover::serve::SpecConfig { draft_len: 4, adaptive: true })),
+        temperature: 0.7,
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&sampled_speculation)), ["CLV027"]);
+
+    let draft_rank_not_cheaper = ServeSpec {
+        speculative: Some((8, clover::serve::SpecConfig { draft_len: 4, adaptive: true })),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&draft_rank_not_cheaper)), ["CLV024"]);
+
+    let starved_ladder = ServeSpec { max_step_tokens: Some(4), ..Default::default() };
+    let r = check_spec(&starved_ladder);
+    assert_eq!(codes(&r), ["CLV028"]);
+    assert!(!r.has_errors(), "CLV028 is a warning, not an error");
+
+    let budget_below_one_page = ServeSpec { kv_memory_budget: Some(1), ..Default::default() };
+    assert_eq!(codes(&check_spec(&budget_below_one_page)), ["CLV029"]);
+
+    let budget_below_full_window = ServeSpec {
+        kv_memory_budget: Some(10_000),
+        ..Default::default()
+    };
+    let r = check_spec(&budget_below_full_window);
+    assert_eq!(codes(&r), ["CLV030"]);
+    assert!(!r.has_errors(), "CLV030 is a warning, not an error");
+
+    let clean_speculative_pair = ServeSpec {
+        rank: Some(4),
+        speculative: Some((2, clover::serve::SpecConfig { draft_len: 4, adaptive: true })),
+        kv_codec: KvCodecSpec::Factored { layer_budgets: Some(vec![2, 4]) },
+        ..Default::default()
+    };
+    let r = check_spec(&clean_speculative_pair);
+    assert!(r.is_empty(), "legal combination flagged:\n{}", r.render_text());
+}

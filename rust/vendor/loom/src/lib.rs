@@ -1,0 +1,188 @@
+//! Offline stand-in for [loom](https://docs.rs/loom) 0.7.
+//!
+//! This environment vendors every dependency (see the workspace
+//! `vendor/` convention started by the `xla` stub), so the real loom —
+//! which would arrive from crates.io — is replaced by an API-compatible
+//! facade.  The contract:
+//!
+//! * [`model`] runs the closure [`ITERS`] times, each under a distinct
+//!   deterministic schedule seed.
+//! * The [`sync`] primitives wrap their `std` twins and call
+//!   [`preempt`] at every acquisition point, so each iteration explores
+//!   a *different* interleaving of the modeled threads.
+//!
+//! That makes a facade run a seeded schedule-randomizing stress test —
+//! strictly weaker than loom's exhaustive DPOR exploration, but honest:
+//! the models in `tests/loom.rs` are written against the real loom API,
+//! and pointing the workspace `loom` path dependency at a crates.io
+//! checkout upgrades them to exhaustive checking with zero source
+//! changes.  Assertion failures reproduce from the iteration's seed
+//! because preemption decisions are drawn from a process-global
+//! sequence, not from wall-clock or OS scheduling noise.
+//!
+//! Only the slice of loom's surface the repo's models need is provided:
+//! `model`, `thread::{spawn, yield_now, JoinHandle}`,
+//! `sync::{Arc, Mutex, MutexGuard, Condvar}`, and `sync::atomic`
+//! re-exports.  Extend it as models grow.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Iterations per [`model`] call.  Each gets its own schedule seed.
+pub const ITERS: usize = 64;
+
+/// Process-global schedule state: a splitmix64-style sequence advanced
+/// at every preemption point.  Reseeded per model iteration.
+static SCHED: AtomicU64 = AtomicU64::new(0x9e37_79b9_7f4a_7c15);
+
+/// Schedule-exploration point: deterministically decide whether the
+/// current thread yields here.  No-op cost when it does not.  Public so
+/// shims can add explicit exploration points, mirroring
+/// `loom::thread::yield_now` placement advice.
+pub fn preempt() {
+    let mut x = SCHED.fetch_add(0x2545_f491_4f6c_dd1d, Ordering::Relaxed);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 29;
+    if x % 3 == 0 {
+        std::thread::yield_now();
+    }
+}
+
+/// Run `f` under the model checker: [`ITERS`] schedule-randomized
+/// executions.  (Real loom explores every interleaving instead.)
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    for i in 0..ITERS {
+        let seed = 0x9e37_79b9_7f4a_7c15u64 ^ (i as u64).wrapping_mul(0xa076_1d64_78bd_642f);
+        SCHED.store(seed, Ordering::Relaxed);
+        f();
+    }
+}
+
+pub mod thread {
+    pub use std::thread::{yield_now, JoinHandle};
+
+    /// `std::thread::spawn` with a preemption point at thread start, so
+    /// spawn-order races are explored too.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::spawn(move || {
+            super::preempt();
+            f()
+        })
+    }
+
+    /// Named-thread builder (the gateway names its worker threads).
+    #[derive(Debug)]
+    pub struct Builder(std::thread::Builder);
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self(std::thread::Builder::new())
+        }
+
+        pub fn name(self, name: String) -> Self {
+            Self(self.0.name(name))
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            self.0.spawn(move || {
+                super::preempt();
+                f()
+            })
+        }
+    }
+}
+
+pub mod sync {
+    use std::sync::LockResult;
+
+    // Loom's `Arc` additionally tracks causality; the std one is an
+    // API-compatible stand-in for the facade's purposes.
+    pub use std::sync::Arc;
+
+    pub type MutexGuard<'a, T> = std::sync::MutexGuard<'a, T>;
+
+    /// `std::sync::Mutex` with a schedule-exploration point before every
+    /// acquisition.
+    #[derive(Debug, Default)]
+    pub struct Mutex<T>(std::sync::Mutex<T>);
+
+    impl<T> Mutex<T> {
+        pub fn new(t: T) -> Self {
+            Self(std::sync::Mutex::new(t))
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            super::preempt();
+            self.0.lock()
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.0.into_inner()
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.0.get_mut()
+        }
+    }
+
+    /// `std::sync::Condvar` with exploration points around wait/notify.
+    #[derive(Debug, Default)]
+    pub struct Condvar(std::sync::Condvar);
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Self(std::sync::Condvar::new())
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            super::preempt();
+            self.0.wait(guard)
+        }
+
+        pub fn wait_while<'a, T, F>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            condition: F,
+        ) -> LockResult<MutexGuard<'a, T>>
+        where
+            F: FnMut(&mut T) -> bool,
+        {
+            super::preempt();
+            self.0.wait_while(guard, condition)
+        }
+
+        pub fn notify_one(&self) {
+            self.0.notify_one();
+            super::preempt();
+        }
+
+        pub fn notify_all(&self) {
+            self.0.notify_all();
+            super::preempt();
+        }
+    }
+
+    pub mod atomic {
+        // Atomics pass through unwrapped: the facade's exploration
+        // points live at lock/spawn boundaries.  (Real loom wraps these
+        // too and additionally checks orderings.)
+        pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+    }
+}
