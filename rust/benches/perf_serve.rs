@@ -36,6 +36,13 @@
 //!   counter agreement.  Also writes `BENCH_trace.json` (Chrome
 //!   trace-event JSON) and `BENCH_metrics.json` (registry dump).  Always
 //!   on (stub backend).
+//! * `prefix_cache` — TTFT/tokens-per-s vs prefix-share ratio under a
+//!   Zipf-head prompt mix on virtual time: each share served cache-on vs
+//!   cache-off over an identical trace at a fixed `--kv-memory-budget`,
+//!   plus a tight-budget row that forces mid-serve eviction.  The
+//!   acceptance bar (cache-on beats cache-off at share ≥ 0.5, monotone
+//!   TTFT, bit-identity to cold) reads this section.  Always on (stub
+//!   backend).
 //! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
 //!   bytes, marshal/execute split per engine×admission-mode, against the
 //!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
@@ -434,6 +441,131 @@ fn bench_layer_budgets() -> Result<Json> {
     Ok(Json::Obj(o))
 }
 
+/// TTFT and tokens/s vs prefix-share ratio under a Zipf-head prompt mix,
+/// on virtual time.  At share s, that fraction of the 16 requests opens
+/// with the hot 64-token prefix (the head of the Zipf distribution); the
+/// rest are unique one-off prompts (the tail).  Each share is served
+/// twice over an identical trace and a fixed `--kv-memory-budget` — once
+/// with the radix prefix cache (32-token blocks), once cold — through a
+/// serial 1-lane stub on a manual [`Clock`] with a per-slab-token width
+/// delay, so TTFT is exact virtual time, not wall-clock noise: a cache
+/// hit skips whole prefill chunks and the saving is deterministic.  The
+/// acceptance bar (`scripts/check_bench.py`) reads this section: cache-on
+/// mean TTFT must fall monotonically as the share rises, beat cache-off
+/// outright at share >= 0.5, and stay bit-identical to the cold trace at
+/// every share.  A final tight-budget row forces LRU-by-attention-mass
+/// eviction mid-serve (`evicted_bytes > 0`) to pin the budget path.
+fn bench_prefix_cache() -> Result<Json> {
+    use clover::obs::Clock;
+    use clover::serve::ServeMetrics;
+
+    const REQS: usize = 16;
+    const PROMPT: usize = 64;
+    const MAX_NEW: usize = 8;
+    const BLOCK: usize = 32;
+    /// Ample: 64 identity pages at 2048 B — donations all fit until the
+    /// very end of the share-0 sweep.
+    const AMPLE_BUDGET: usize = 131_072;
+    /// Tight: 12 pages — every unique donation overflows it, so the LRU
+    /// sweep runs while requests are still arriving.
+    const TIGHT_BUDGET: usize = 24_576;
+
+    let mk_spec = |clock: Clock| StubSpec {
+        n_layers: 1,
+        n_heads: 2,
+        rank: 8,
+        vocab: 16,
+        max_positions: 128,
+        batch_slots: 1,
+        step_delay: Duration::from_millis(1),
+        width_delay: Duration::from_millis(1),
+        clock,
+        ..Default::default()
+    };
+    let hot: Vec<i32> = (0..PROMPT as i32).map(|i| (i * 5 + 3) % 16).collect();
+    let mk_reqs = |hot_n: usize, now: Instant| -> Vec<Request> {
+        (0..REQS as u64)
+            .map(|id| {
+                let prompt = if (id as usize) < hot_n {
+                    hot.clone()
+                } else {
+                    // Tail prompts diverge from the hot prefix (and each
+                    // other) inside the first block — no spurious hits.
+                    (0..PROMPT as i32).map(|i| (i * 3 + id as i32 * 7 + 1) % 16).collect()
+                };
+                Request::greedy(id, prompt, MAX_NEW, now)
+            })
+            .collect()
+    };
+    let run = |hot_n: usize,
+               block: Option<usize>,
+               budget: usize|
+     -> Result<(Vec<Completion>, ServeMetrics)> {
+        let clock = Clock::manual();
+        let engine = Engine::new_stub(mk_spec(clock.clone()))
+            .with_kv_memory_budget(Some(budget))
+            .with_prefix_cache(block)?;
+        engine.serve_all(mk_reqs(hot_n, clock.now()), policy())
+    };
+    let mean_ttft = |c: &[Completion]| -> f64 {
+        c.iter().map(|x| x.ttft_s).sum::<f64>() / c.len().max(1) as f64
+    };
+    let row = |share: f64, budget: usize| -> Result<Json> {
+        let hot_n = (share * REQS as f64).round() as usize;
+        let (warm, wm) = run(hot_n, Some(BLOCK), budget)?;
+        let (cold, cm) = run(hot_n, None, budget)?;
+        let bit_identical = warm.iter().zip(&cold).all(|(a, b)| a.tokens == b.tokens);
+        let (on, off) = (mean_ttft(&warm), mean_ttft(&cold));
+        println!(
+            "prefix share {share:4.2}: ttft mean {on:6.3}s cached vs {off:6.3}s cold \
+             | {:>2} hits ({:>3} tok skipped) | {:>3} vs {:>3} fused steps \
+             | cached {} | evicted {} | bit-identical {bit_identical}",
+            wm.prefix_hits,
+            wm.prefix_hit_tokens,
+            wm.decode_steps,
+            cm.decode_steps,
+            human_bytes(wm.prefix_cached_bytes),
+            human_bytes(wm.prefix_evicted_bytes),
+        );
+        let mut o = BTreeMap::new();
+        o.insert("share".to_string(), Json::Num(share));
+        o.insert("hot_requests".to_string(), Json::Num(hot_n as f64));
+        o.insert("prefix_hits".to_string(), Json::Num(wm.prefix_hits as f64));
+        o.insert("prefix_hit_tokens".to_string(), Json::Num(wm.prefix_hit_tokens as f64));
+        o.insert("ttft_mean_cache_on_s".to_string(), Json::Num(on));
+        o.insert("ttft_mean_cache_off_s".to_string(), Json::Num(off));
+        o.insert("ttft_p50_cache_on_s".to_string(), Json::Num(wm.ttft_p50_s));
+        o.insert("ttft_p50_cache_off_s".to_string(), Json::Num(cm.ttft_p50_s));
+        o.insert("tokens_per_s_cache_on".to_string(), Json::Num(wm.tokens_per_s()));
+        o.insert("tokens_per_s_cache_off".to_string(), Json::Num(cm.tokens_per_s()));
+        o.insert("decode_steps_cache_on".to_string(), Json::Num(wm.decode_steps as f64));
+        o.insert("decode_steps_cache_off".to_string(), Json::Num(cm.decode_steps as f64));
+        o.insert("cached_bytes".to_string(), Json::Num(wm.prefix_cached_bytes as f64));
+        o.insert("evicted_bytes".to_string(), Json::Num(wm.prefix_evicted_bytes as f64));
+        o.insert("memory_budget_bytes".to_string(), Json::Num(budget as f64));
+        o.insert("bit_identical_to_cold".to_string(), Json::Bool(bit_identical));
+        Ok(Json::Obj(o))
+    };
+
+    let mut sweep = Vec::new();
+    for share in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        sweep.push(row(share, AMPLE_BUDGET)?);
+    }
+    let tight = row(0.5, TIGHT_BUDGET)?;
+
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("mix".to_string(), Json::Str("zipf-head".to_string()));
+    o.insert("requests".to_string(), Json::Num(REQS as f64));
+    o.insert("prompt_tokens".to_string(), Json::Num(PROMPT as f64));
+    o.insert("max_new".to_string(), Json::Num(MAX_NEW as f64));
+    o.insert("block".to_string(), Json::Num(BLOCK as f64));
+    o.insert("memory_budget_bytes".to_string(), Json::Num(AMPLE_BUDGET as f64));
+    o.insert("sweep".to_string(), Json::Arr(sweep));
+    o.insert("tight_budget".to_string(), tight);
+    Ok(Json::Obj(o))
+}
+
 /// Observability taps: tokens/s untapped vs tapped (the <5% overhead
 /// bar), span-reconstructed aggregates vs the engine's own
 /// [`clover::serve::ServeMetrics`] (the fidelity bar), and the dumps the
@@ -714,6 +846,10 @@ fn main() -> Result<()> {
     // Observability taps: overhead + trace fidelity; also writes the
     // BENCH_trace.json / BENCH_metrics.json artifacts.
     root.insert("obs".to_string(), bench_obs()?);
+
+    // Radix prefix cache: TTFT vs share under a Zipf-head mix, virtual
+    // time, runs everywhere.
+    root.insert("prefix_cache".to_string(), bench_prefix_cache()?);
 
     // End-to-end engines need the compiled artifacts + live PJRT.
     match Runtime::new("artifacts") {

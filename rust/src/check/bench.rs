@@ -18,7 +18,8 @@
 //!   committed (see `BENCH_history/README.md`).
 //!
 //! Invariants (`CLV044`) are enforced only on non-null values: the
-//! speculative bit-identity bit, budgets within `1..=rank`, prefix
+//! speculative and prefix-cache bit-identity bits, budgets within
+//! `1..=rank`, prefix
 //! agreement a fraction (and exactly 1.0 for a full-rank profile),
 //! `open_spans == 0`, span-reconstruction agreement, time-ordered step
 //! lanes.  The *performance bars* (>=4x prefill-step reduction, <1.0
@@ -146,6 +147,7 @@ fn check_serve(report: &mut Report, path: &str, doc: &Json) {
     require(report, path, doc, "$", &["preset", "prefill", "speculative", "kv_codec"]);
     require(report, path, doc, "$", &["layer_budgets"]);
     soft(report, path, doc, "$", &["obs", "engines", "pjrt_skipped"]);
+    soft(report, path, doc, "$", &["prefix_cache"]);
 
     if let Some(prefill) = doc.get("prefill") {
         require(report, path, prefill, "$.prefill", &["chunks"]);
@@ -255,6 +257,37 @@ fn check_serve(report: &mut Report, path: &str, doc: &Json) {
                     }
                 }
                 _ => soft(report, path, row, &locus, &["mean_prefix_agreement"]),
+            }
+        }
+    }
+
+    if let Some(pc) = doc.get("prefix_cache") {
+        if !matches!(pc, Json::Null) {
+            require(report, path, pc, "$.prefix_cache", &["sweep"]);
+            let sweep = pc.get("sweep").and_then(|s| s.as_arr().ok()).unwrap_or(&[]);
+            let rows: Vec<(String, &Json)> = sweep
+                .iter()
+                .enumerate()
+                .map(|(i, row)| (format!("$.prefix_cache.sweep[{i}]"), row))
+                .chain(pc.get("tight_budget").map(|t| ("$.prefix_cache.tight_budget".to_string(), t)))
+                .collect();
+            for (locus, row) in rows {
+                require(report, path, row, &locus, &["share"]);
+                match row.get("bit_identical_to_cold") {
+                    Some(Json::Bool(true)) => {}
+                    Some(Json::Bool(false)) => {
+                        report.push(
+                            44,
+                            path,
+                            &locus,
+                            "cached serve diverged from the cold prefill trace — the \
+                             bit-identity invariant is broken"
+                                .to_string(),
+                            "a COW aliasing or stale-attach bug; bisect the prefix cache",
+                        );
+                    }
+                    _ => soft(report, path, row, &locus, &["bit_identical_to_cold"]),
+                }
             }
         }
     }

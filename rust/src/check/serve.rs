@@ -1,9 +1,9 @@
-//! Engine-spec and run-config checks (`CLV020`–`CLV033`).
+//! Engine-spec and run-config checks (`CLV020`–`CLV036`).
 //!
 //! [`ServeSpec`] is the static mirror of the flag surface an engine spawn
 //! consumes (`clover serve`, `EngineSpec`, the gateway worker): preset,
 //! batch slots, chunk-ladder cap, speculative draft pair, KV codec +
-//! budgets, per-step token budget.  [`check_engine_spec`] cross-validates
+//! budgets, per-step token budget, prefix-cache block.  [`check_engine_spec`] cross-validates
 //! the combination against the manifest *before* anything spawns — the
 //! same rules the engine builders enforce with `bail!` at construction,
 //! surfaced as diagnostics with stable codes instead of a panic-shaped
@@ -39,6 +39,9 @@ pub struct ServeSpec {
     pub speculative: Option<(usize, SpecConfig)>,
     /// `--temperature` (speculation is greedy-only).
     pub temperature: f64,
+    /// `--prefix-cache-block`: radix prefix cache block size in tokens
+    /// (`None` = cache off).
+    pub prefix_cache_block: Option<usize>,
 }
 
 impl Default for ServeSpec {
@@ -53,6 +56,7 @@ impl Default for ServeSpec {
             kv_memory_budget: None,
             speculative: None,
             temperature: 0.0,
+            prefix_cache_block: None,
         }
     }
 }
@@ -210,6 +214,78 @@ pub fn check_engine_spec(report: &mut Report, manifest: &Manifest, spec: &ServeS
                     ),
                     "raise the budget to at least the smallest chunk width",
                 );
+            }
+        }
+    }
+
+    // -- radix prefix cache: block alignment, pair legality, eviction -----
+    if let Some(block) = spec.prefix_cache_block {
+        // Cached blocks map to whole KV pages *and* whole skipped prefill
+        // steps, so the block must be a positive page multiple that some
+        // chunked ladder rung tiles exactly (a ladder capped to width 1
+        // has no rung to align to and any page multiple passes).
+        let ladder_ok = widths.iter().all(|&w| w <= 1)
+            || widths.iter().any(|&w| w > 1 && block % w == 0);
+        if block == 0 || block % PAGE_TOKENS != 0 || !ladder_ok {
+            report.push(
+                34,
+                label,
+                "--prefix-cache-block",
+                format!(
+                    "block {block} must be a positive multiple of {PAGE_TOKENS} that a chunk \
+                     width from the ladder {widths:?} tiles exactly — cached blocks map to \
+                     whole pages and whole skipped prefill steps"
+                ),
+                "use a page-multiple ladder width (e.g. 32)",
+            );
+        }
+        if spec.speculative.is_some() {
+            report.push(
+                35,
+                label,
+                "--prefix-cache-block",
+                "a draft+verify pair rewrites speculative lane positions the prefix cache \
+                 may share copy-on-write — the engine refuses the combination at spawn"
+                    .to_string(),
+                "drop --speculative or --prefix-cache-block",
+            );
+        }
+        match spec.kv_memory_budget {
+            None => report.push(
+                36,
+                label,
+                "--kv-memory-budget",
+                format!(
+                    "prefix cache (block {block}) without --kv-memory-budget never feels \
+                     memory pressure — cached pages accumulate without ever evicting"
+                ),
+                "set --kv-memory-budget so LRU-by-attention-mass eviction has a bound",
+            ),
+            Some(budget) => {
+                if stored.is_some() && block > 0 {
+                    let cache_cfg = KvConfig {
+                        n_layers,
+                        n_heads,
+                        rank,
+                        max_positions: seq_len,
+                        batch_slots: spec.batch_slots,
+                        codec: spec.kv_codec.clone(),
+                    };
+                    let block_bytes = cache_cfg.bytes_per_page() * block.div_ceil(PAGE_TOKENS);
+                    if budget < block_bytes {
+                        report.push(
+                            36,
+                            label,
+                            "--kv-memory-budget",
+                            format!(
+                                "budget {budget} B cannot retain one cached block \
+                                 ({block_bytes} B at block {block}) — every donated prefix \
+                                 is evicted before it can ever be hit"
+                            ),
+                            "raise the budget or shrink --prefix-cache-block",
+                        );
+                    }
+                }
             }
         }
     }

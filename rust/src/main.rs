@@ -13,6 +13,7 @@
 //!                  [--prefill-chunk K] [--prompt-len N] [--max-step-tokens N]
 //!                  [--kv-codec identity|factored] [--kv-layer-budgets r0,r1,...]
 //!                  [--kv-memory-budget BYTES]
+//!                  [--prefix-cache-block N] [--max-pending N]
 //!                  [--speculative] [--draft-rank R] [--draft-len K]
 //!                  [--trace-out trace.json] [--metrics-json m.json]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
@@ -35,7 +36,9 @@ use clover::runtime::{golden, Runtime};
 use clover::serve::{
     Admission, BatchPolicy, Engine, KvCodecSpec, Request, SamplingParams, SpecConfig,
 };
-use clover::server::{DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, StreamEvent, TryNext};
+use clover::server::{
+    DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, StreamEvent, SubmitError, TryNext,
+};
 use clover::util::human_bytes;
 
 /// Minimal flag parser: `--key value` pairs + positional args.
@@ -279,6 +282,24 @@ fn kv_memory_budget_flag(args: &Args) -> Result<Option<usize>> {
         .transpose()
 }
 
+/// Parse `--prefix-cache-block N` — the radix prefix cache's block width
+/// in tokens (a page multiple the chunk ladder tiles; stub engines only,
+/// mutually exclusive with `--speculative`).
+fn prefix_cache_block_flag(args: &Args) -> Result<Option<usize>> {
+    args.get("prefix-cache-block")
+        .map(|v| v.parse::<usize>().with_context(|| format!("--prefix-cache-block {v}")))
+        .transpose()
+}
+
+/// Parse `--max-pending N` — the load-shedding cap on accepted-but-not-
+/// terminal requests; beyond it submits refuse with `Overloaded` instead
+/// of queueing deeper.
+fn max_pending_flag(args: &Args) -> Result<Option<usize>> {
+    args.get("max-pending")
+        .map(|v| v.parse::<usize>().with_context(|| format!("--max-pending {v}")))
+        .transpose()
+}
+
 /// Write a JSON document to `path` (trace / metrics dumps).
 fn write_json_file(path: &str, doc: &clover::config::json::Json) -> Result<()> {
     std::fs::write(path, clover::config::json::to_string(doc))
@@ -315,7 +336,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .with_prefill_chunk(prefill_chunk_flag(args)?)
         .with_max_step_tokens(max_step_tokens_flag(args)?)
         .with_kv_codec(kv_codec.clone())?
-        .with_kv_memory_budget(kv_memory_budget_flag(args)?);
+        .with_kv_memory_budget(kv_memory_budget_flag(args)?)
+        .with_prefix_cache(prefix_cache_block_flag(args)?)?;
     let speculative = speculative_flags(args)?;
     if let Some((draft_rank, spec_cfg)) = &speculative {
         // Self-speculative pair: the draft is the checkpoint's own dense
@@ -469,11 +491,14 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     let queue_capacity = args.usize_or("queue", 64)?;
     let speculative = speculative_flags(args)?;
     let kv_codec = kv_codec_flags(args)?;
+    let prefix_block = prefix_cache_block_flag(args)?;
+    let max_pending = max_pending_flag(args)?;
     let mut spec =
         EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
             .with_prefill_chunk(prefill_chunk_flag(args)?)
             .with_max_step_tokens(max_step_tokens_flag(args)?)
-            .with_kv_codec(kv_codec.clone());
+            .with_kv_codec(kv_codec.clone())
+            .with_prefix_cache(prefix_block);
     if let Some((draft_rank, spec_cfg)) = &speculative {
         let draft = DraftSource::PrunedRank { rank: *draft_rank };
         spec = spec.with_speculative(draft, spec_cfg.clone());
@@ -498,12 +523,13 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
                 max_batch: cfg.serve.max_batch,
                 max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
             },
+            max_pending,
         },
         spec,
         obs.clone(),
     )?;
     println!(
-        "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}",
+        "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}{}{}",
         gateway.rank(),
         gateway
             .draft_rank()
@@ -511,6 +537,12 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
             .unwrap_or_default(),
         kv_codec.name(),
         gateway.kv_bytes_per_token(),
+        prefix_block
+            .map(|b| format!(" | prefix cache {b}-token blocks"))
+            .unwrap_or_default(),
+        max_pending
+            .map(|n| format!(" | shed beyond {n} pending"))
+            .unwrap_or_default(),
     );
 
     let sampling = SamplingParams {
@@ -522,14 +554,29 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     };
     let mut rng = clover::util::rng::Rng::new(cfg.train.seed);
 
-    // Open-loop submission: one request per gap tick, backpressure applies.
+    // Open-loop submission: one request per gap tick.  The bounded queue
+    // applies backpressure (submit blocks); the --max-pending cap sheds —
+    // an Overloaded refusal burned no id, allocated no stream, and left
+    // every accepted request untouched, so the loop just moves on.
     let mut streams = Vec::new();
     let mut demo_cancel = None;
+    let mut shed = 0usize;
     for i in 0..n_requests {
         let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(vocab) as i32).collect();
-        let ticket = gateway
-            .submit(prompt, cfg.serve.max_new_tokens, sampling.clone(), deadline)
-            .map_err(|e| anyhow::anyhow!("submit failed: {e}"))?;
+        let ticket = match gateway.submit(prompt, cfg.serve.max_new_tokens, sampling.clone(), deadline)
+        {
+            Ok(t) => t,
+            Err(SubmitError::Overloaded) => {
+                shed += 1;
+                println!(
+                    "[req  --] shed: {} requests pending at the --max-pending cap",
+                    gateway.in_flight(),
+                );
+                std::thread::sleep(gap);
+                continue;
+            }
+            Err(e) => bail!("submit failed: {e}"),
+        };
         if i + 1 == n_requests {
             if let Some(ms) = cancel_ms {
                 demo_cancel = Some((Instant::now() + Duration::from_millis(ms), ticket.cancel.clone()));
@@ -550,12 +597,17 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
                     o.registry.get(&format!("{name}{{gateway=\"serve\"}}")).unwrap_or(0.0)
                 };
                 println!(
-                    "[stats] in-flight {} | queued prefill {} tok | KV live {} | {} steps | {} generated",
+                    "[stats] in-flight {} | queued prefill {} tok | KV live {} | {} steps | {} generated | prefix hits {} ({} tok) | cached {} | evicted {} | migrated {}",
                     g("clover_in_flight") as usize,
                     g("clover_queued_prefill_tokens") as usize,
                     human_bytes(g("clover_kv_live_bytes") as usize),
                     g("clover_steps_total") as usize,
                     g("clover_generated_tokens_total") as usize,
+                    g("clover_prefix_hits_total") as usize,
+                    g("clover_prefix_hit_tokens_total") as usize,
+                    human_bytes(g("clover_prefix_cached_bytes") as usize),
+                    human_bytes(g("clover_prefix_evicted_bytes_total") as usize),
+                    g("clover_migrated_total") as usize,
                 );
                 next_stats = Some(Instant::now() + stats_interval.expect("set with next_stats"));
             }
@@ -642,15 +694,25 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     }
     println!(
-        "served {} done + {} cancelled | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
+        "served {} done + {} cancelled + {} shed | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
         done,
         cancelled,
+        shed,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
         metrics.decode_steps,
         human_bytes(metrics.kv_peak_bytes),
         human_bytes(metrics.kv_freed_bytes),
     );
+    if prefix_block.is_some() {
+        println!(
+            "prefix cache: {} hits skipped {} prefill tokens | cached {} | evicted {}",
+            metrics.prefix_hits,
+            metrics.prefix_hit_tokens,
+            human_bytes(metrics.prefix_cached_bytes),
+            human_bytes(metrics.prefix_evicted_bytes),
+        );
+    }
     if speculative.is_some() {
         println!(
             "speculative: {} rounds | acceptance {:.0}% | {} draft steps | {} rolled back",
@@ -761,6 +823,7 @@ fn cmd_check(args: &Args) -> Result<()> {
             max_step_tokens: max_step_tokens_flag(args)?,
             kv_codec,
             kv_memory_budget: kv_memory_budget_flag(args)?,
+            prefix_cache_block: prefix_cache_block_flag(args)?,
             speculative: speculative_flags(args)?,
             temperature: args.f64_or("temperature", 0.0)?,
         };

@@ -52,6 +52,11 @@ pub struct StepEvent {
     /// KV accounting after the step.
     pub kv_live_bytes: usize,
     pub kv_freed_bytes: usize,
+    /// Bytes the prefix cache holds (gauge; 0 when caching is off).
+    pub kv_cached_bytes: usize,
+    /// Cumulative bytes released by prefix-cache eviction under memory
+    /// pressure.
+    pub prefix_evicted_bytes: usize,
 }
 
 /// A point on a request's span timeline.
@@ -63,6 +68,12 @@ pub enum SpanPoint {
     Admitted { lane: usize },
     /// A prefill chunk of `tokens` prompt tokens was consumed.
     PrefillChunk { tokens: usize },
+    /// `tokens` leading prompt tokens were attached from the prefix
+    /// cache at admission — they never occupy a prefill step.
+    PrefixHit { tokens: usize },
+    /// The request was migrated off a saturated engine's queue; its span
+    /// continues on the target engine (fresh Queued/Admitted stamps).
+    Migrated,
     /// First generated token sampled.
     FirstToken,
     /// A speculative round verified: `drafted` proposed, `accepted` kept.
@@ -91,6 +102,10 @@ pub struct RequestSpan {
     pub first_token_s: Option<f64>,
     /// `(t_s, tokens)` per prefill chunk.
     pub prefill_chunks: Vec<(f64, usize)>,
+    /// Prompt tokens attached from the prefix cache (None = cold).
+    pub prefix_hit_tokens: Option<usize>,
+    /// The request crossed engines via queue migration.
+    pub migrated: bool,
     /// `(t_s, drafted, accepted)` per speculative round.
     pub spec_rounds: Vec<(f64, usize, usize)>,
     /// Terminal stamp; `None` while the request is in flight.
@@ -172,6 +187,8 @@ impl TraceSink {
                 span.lane = Some(lane);
             }
             SpanPoint::PrefillChunk { tokens } => span.prefill_chunks.push((ev.t_s, tokens)),
+            SpanPoint::PrefixHit { tokens } => span.prefix_hit_tokens = Some(tokens),
+            SpanPoint::Migrated => span.migrated = true,
             SpanPoint::FirstToken => {
                 if span.first_token_s.is_none() {
                     span.first_token_s = Some(ev.t_s);
@@ -291,6 +308,11 @@ impl TraceSink {
             args.insert("verify_tokens".into(), Json::Num(ev.verify_tokens as f64));
             args.insert("kv_live_bytes".into(), Json::Num(ev.kv_live_bytes as f64));
             args.insert("kv_freed_bytes".into(), Json::Num(ev.kv_freed_bytes as f64));
+            args.insert("kv_cached_bytes".into(), Json::Num(ev.kv_cached_bytes as f64));
+            args.insert(
+                "prefix_evicted_bytes".into(),
+                Json::Num(ev.prefix_evicted_bytes as f64),
+            );
             let name = if ev.draft {
                 format!("draft step {}", ev.seq)
             } else {
@@ -306,6 +328,12 @@ impl TraceSink {
             args.insert("cancelled".into(), Json::Bool(s.cancelled));
             args.insert("prefill_chunks".into(), Json::Num(s.prefill_chunks.len() as f64));
             args.insert("spec_rounds".into(), Json::Num(s.spec_rounds.len() as f64));
+            if let Some(hit) = s.prefix_hit_tokens {
+                args.insert("prefix_hit_tokens".into(), Json::Num(hit as f64));
+            }
+            if s.migrated {
+                args.insert("migrated".into(), Json::Bool(true));
+            }
             if let Some(lane) = s.lane {
                 args.insert("lane".into(), Json::Num(lane as f64));
             }
@@ -484,6 +512,8 @@ mod tests {
             verify_tokens: 0,
             kv_live_bytes: 1024,
             kv_freed_bytes: 0,
+            kv_cached_bytes: 0,
+            prefix_evicted_bytes: 0,
         }
     }
 
@@ -513,9 +543,14 @@ mod tests {
             sink.record_span(&span(id, ttft, SpanPoint::FirstToken));
             sink.record_span(&span(id, ttft + 1.0, SpanPoint::Done { generated: 4 }));
         }
+        sink.record_span(&span(1, 0.05, SpanPoint::PrefixHit { tokens: 32 }));
+        sink.record_span(&span(2, 0.05, SpanPoint::Migrated));
         sink.record_span(&span(3, 0.0, SpanPoint::Queued));
         sink.record_span(&span(3, 0.3, SpanPoint::Cancelled { generated: 0 }));
         assert_eq!(sink.open_spans(), 0);
+        assert_eq!(sink.span(1).unwrap().prefix_hit_tokens, Some(32));
+        assert!(sink.span(2).unwrap().migrated, "migration marks the span");
+        assert!(!sink.span(1).unwrap().migrated);
         let m = sink.reconstruct();
         assert_eq!(m.completed, 2);
         assert_eq!(m.cancelled, 1);

@@ -219,6 +219,13 @@ impl StubModel {
         &self.store
     }
 
+    /// Mutable page store — the engine's prefix-cache plumbing (share /
+    /// attach / release column references) goes through here; the step
+    /// contract itself stays on the methods above.
+    pub fn store_mut(&mut self) -> &mut PagedKvStore {
+        &mut self.store
+    }
+
     /// Write one `(token, position)` pair into `lane`'s cache rows.  The
     /// written value is a pure function of the coordinates, so rewriting
     /// the same pair (the pad-by-repeat convention for short slabs) is a

@@ -118,6 +118,17 @@ impl Batcher {
         self.queue.remove(i)
     }
 
+    /// Pull the *newest* waiter off the back of the queue — the migration
+    /// path: when another engine drains this one's backlog, it takes the
+    /// requests that have waited least (the head keeps its FIFO claim on
+    /// the next local lane).  Counts as removed, like any other exit that
+    /// is not a local admission.
+    pub fn reclaim_newest(&mut self) -> Option<Request> {
+        let req = self.queue.pop_back()?;
+        self.removed += 1;
+        Some(req)
+    }
+
     /// (enqueued, admitted) — conservation check: nothing lost or duplicated.
     pub fn counters(&self) -> (u64, u64) {
         (self.enqueued, self.admitted)
@@ -222,6 +233,24 @@ mod tests {
         assert_eq!(ids, vec![0, 1, 3]);
         let (enq, adm) = b.counters();
         assert_eq!(enq, adm + b.removed());
+    }
+
+    #[test]
+    fn reclaim_newest_takes_the_back_and_counts_removed() {
+        let mut b = Batcher::new(policy(8, 0));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, now));
+        }
+        // Migration drains from the back: newest waiters leave first,
+        // the head keeps its FIFO claim.
+        assert_eq!(b.reclaim_newest().map(|r| r.id), Some(2));
+        assert_eq!(b.reclaim_newest().map(|r| r.id), Some(1));
+        assert_eq!(b.pop_admissible(now, true).map(|r| r.id), Some(0));
+        assert!(b.reclaim_newest().is_none(), "empty queue reclaims nothing");
+        let (enq, adm) = b.counters();
+        assert_eq!(enq, adm + b.removed());
+        assert_eq!((enq, adm, b.removed()), (3, 1, 2));
     }
 
     #[test]

@@ -61,7 +61,8 @@ use crate::tensor::{Tensor, Value};
 use crate::util::argmax;
 
 use super::batcher::{BatchPolicy, Batcher, Request};
-use super::kv::{KvCodecSpec, KvConfig, KvManager, PAGE_TOKENS};
+use super::kv::{KvCodecSpec, KvConfig, KvManager, PagedKvStore, PAGE_TOKENS};
+use super::prefix::PrefixCache;
 use super::session::Session;
 
 /// One finished request, with its own latency accounting: every duration
@@ -382,6 +383,21 @@ pub trait StepHook {
     /// token/spec round/done/cancelled); fires only when
     /// [`StepHook::wants_step_events`] is true.
     fn on_span(&mut self, _ev: &SpanEvent) {}
+
+    /// How many queued requests this engine may surrender to a
+    /// coordinating scheduler right now (cross-engine queue migration).
+    /// Polled between decode steps; `None` means keep everything.  The
+    /// engine pops that many of its *newest* waiters
+    /// ([`Batcher::reclaim_newest`] — the head keeps its FIFO claim on
+    /// the next local lane) and hands each to [`StepHook::on_reclaimed`].
+    fn reclaim_requests(&mut self) -> Option<usize> {
+        None
+    }
+
+    /// A queued request was surrendered for migration.  The hook owns it
+    /// now — re-submit it to another engine or fail it; the source
+    /// engine counts it as migrated, neither completed nor cancelled.
+    fn on_reclaimed(&mut self, _req: Request) {}
 }
 
 /// The no-op hook closed-set serving runs with.
@@ -426,6 +442,19 @@ pub struct ServeMetrics {
     /// Drafted tokens rejected by a verify step and rolled back
     /// (KV positions reclaimed page-granularly).
     pub rollback_tokens: usize,
+    /// Requests surrendered from the queue to a coordinating scheduler
+    /// (cross-engine migration) — neither completed nor cancelled here.
+    pub migrated: usize,
+    /// Admissions that attached cached prefix blocks instead of
+    /// prefilling them.
+    pub prefix_hits: usize,
+    /// Prompt tokens served from the prefix cache across all hits.
+    pub prefix_hit_tokens: usize,
+    /// Cumulative bytes released by prefix-cache eviction under the KV
+    /// memory budget.
+    pub prefix_evicted_bytes: usize,
+    /// Bytes the prefix cache held at drain end.
+    pub prefix_cached_bytes: usize,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
     pub latency_p50_s: f64,
@@ -505,6 +534,9 @@ pub struct Engine<'rt> {
     /// compressed page size, target plus draft for a speculative pair —
     /// fits alongside the live pages (see [`Engine::with_kv_memory_budget`]).
     kv_memory_budget: Option<usize>,
+    /// Radix prefix-cache block width in tokens (None = caching off; see
+    /// [`Engine::with_prefix_cache`]).  Stub backing only.
+    prefix_cache_block: Option<usize>,
     /// Time source for every `now` the step loop takes (cancellation
     /// sweeps, TTFT/latency stamps, wall_s) and for trace timestamps.
     /// Wall by default; [`Engine::new_stub`] adopts the spec's clock so a
@@ -567,6 +599,7 @@ impl<'rt> Engine<'rt> {
             spec: None,
             max_step_tokens: None,
             kv_memory_budget: None,
+            prefix_cache_block: None,
             clock: Clock::wall(),
         })
     }
@@ -596,6 +629,7 @@ impl<'rt> Engine<'rt> {
             spec: None,
             max_step_tokens: None,
             kv_memory_budget: None,
+            prefix_cache_block: None,
             clock,
         }
     }
@@ -678,6 +712,54 @@ impl<'rt> Engine<'rt> {
     pub fn with_kv_memory_budget(mut self, budget: Option<usize>) -> Self {
         self.kv_memory_budget = budget;
         self
+    }
+
+    /// Enable the radix prefix cache over the copy-on-write page store
+    /// (`clover serve --prefix-cache-block N`): a completed prefill
+    /// donates its leading `block`-token chunks to a trie, and later
+    /// requests sharing that prompt prefix attach the cached KV pages at
+    /// admission instead of prefilling them — bit-identical to a cold
+    /// prefill, with zero bytes copied.  `block` must be a positive
+    /// multiple of [`PAGE_TOKENS`]; under a `--kv-memory-budget` the
+    /// cache's pages count against the budget and evict LRU-by-attention-
+    /// mass before any admission is refused.
+    ///
+    /// Stub backing only today: compiled engines keep their caches
+    /// device-side, where cross-lane page sharing lands together with
+    /// the factored at-rest layout.  Mutually exclusive with speculative
+    /// decoding (the draft cache has no shared pages to attach).
+    pub fn with_prefix_cache(mut self, block: Option<usize>) -> Result<Self> {
+        let Some(block) = block else {
+            self.prefix_cache_block = None;
+            return Ok(self);
+        };
+        if !matches!(self.backing, Backing::Stub(_)) {
+            bail!(
+                "--prefix-cache-block requires the stub backing — compiled engines \
+                 keep their KV caches device-side, where cross-lane page sharing \
+                 lands with the factored at-rest layout"
+            );
+        }
+        if self.spec.is_some() {
+            bail!(
+                "prefix cache and speculative decoding are mutually exclusive on \
+                 one engine (the draft cache has no shared pages to attach)"
+            );
+        }
+        PrefixCache::new(block)?; // validates the PAGE_TOKENS alignment
+        self.prefix_cache_block = Some(block);
+        Ok(self)
+    }
+
+    /// The configured prefix-cache block width (None = caching off).
+    pub fn prefix_cache_block(&self) -> Option<usize> {
+        self.prefix_cache_block
+    }
+
+    /// Batch lanes of the fixed-shape step artifacts — the fleet
+    /// scheduler's saturation denominator.
+    pub fn batch_slots(&self) -> usize {
+        self.batch_slots
     }
 
     /// Attach a stub draft model for self-speculative decoding: opted-in
@@ -820,6 +902,12 @@ impl<'rt> Engine<'rt> {
     }
 
     fn validate_spec_cfg(&self, cfg: &SpecConfig) -> Result<()> {
+        if self.prefix_cache_block.is_some() {
+            bail!(
+                "prefix cache and speculative decoding are mutually exclusive on \
+                 one engine (the draft cache has no shared pages to attach)"
+            );
+        }
         if cfg.draft_len < 2 {
             bail!("SpecConfig.draft_len must be >= 2 (a 1-token draft cannot beat a step)");
         }
@@ -960,6 +1048,17 @@ impl<'rt> Engine<'rt> {
         // admitted session holds zero pages until its first step, and its
         // claim on the budget must already be visible to the next waiter.
         let mut kv_reservations: HashMap<u64, usize> = HashMap::new();
+        // The radix prefix cache and its per-lane bookkeeping: the trie
+        // path each lane pinned (kept resident until the lane retires)
+        // and the store-side column attaches deferred until after lane
+        // zeroing.
+        let mut prefix = match self.prefix_cache_block {
+            Some(block) => Some(PrefixCache::new(block)?),
+            None => None,
+        };
+        let mut lane_pins: Vec<Vec<usize>> = vec![Vec::new(); b];
+        let mut pending_attach: Vec<(usize, Vec<usize>)> = Vec::new();
+        let target_page_bytes = self.kv_cfg.bytes_per_page();
         let mut lanes: Vec<Option<Session>> = (0..b).map(|_| None).collect();
         let mut done: HashMap<u64, Completion> = HashMap::new();
         let mut metrics = ServeMetrics::default();
@@ -1034,6 +1133,18 @@ impl<'rt> Engine<'rt> {
                     .position(|l| l.as_ref().is_some_and(|s| s.id() == c.id));
                 if let Some(lane) = lane {
                     let sess = lanes[lane].take().expect("lane occupied");
+                    // A cache-attached lane releases its column
+                    // references right here: the trie keeps its own refs
+                    // (shared pages survive), the lane's pins drop so
+                    // eviction may take unpinned blocks, and a cancelled
+                    // mid-prefill attach leaves no dangling claim.
+                    if let Some(trie) = prefix.as_mut() {
+                        trie.unpin(&lane_pins[lane]);
+                        lane_pins[lane].clear();
+                        if let Some(store) = backend.stub_store_mut() {
+                            store.zero_lane(lane);
+                        }
+                    }
                     kv.free(sess.slot())?;
                     kv_reservations.remove(&c.id);
                     metrics.cancelled += 1;
@@ -1070,6 +1181,20 @@ impl<'rt> Engine<'rt> {
                 // Unknown or already-finished id: completion won the race.
             }
 
+            // ---- migration: surrender queued work between decode steps ----
+            // A coordinating hook (the fleet scheduler) may drain this
+            // engine's backlog for an idle rank-variant engine.  Waiters
+            // leave from the *back* of the queue — the head keeps its
+            // FIFO claim on the next local lane — and count as migrated:
+            // conserved, but neither completed nor cancelled here.
+            if let Some(max) = hook.reclaim_requests() {
+                for _ in 0..max {
+                    let Some(req) = batcher.reclaim_newest() else { break };
+                    metrics.migrated += 1;
+                    hook.on_reclaimed(req);
+                }
+            }
+
             // ---- admission: refill freed lanes between decode steps ----
             let mut live = lanes.iter().filter(|l| l.is_some()).count();
             let gate_open = match admission {
@@ -1093,13 +1218,35 @@ impl<'rt> Engine<'rt> {
                         let Some(head) = batcher.peek() else { break };
                         let worst = (head.prompt.len() + head.max_new).min(cwin);
                         let need = worst.div_ceil(PAGE_TOKENS) * resident_page_bytes;
+                        let head_id = head.id;
                         let reserved: usize = kv_reservations.values().sum();
-                        if reserved * resident_page_bytes + need > budget {
-                            if live == 0 {
+                        // Prefix-cache pages share the budget with the
+                        // live reservations; the cache yields first — it
+                        // is a performance opportunist, never a reason
+                        // to keep a request queued.
+                        let mut in_use =
+                            reserved * resident_page_bytes + kv.cache_pages() * target_page_bytes;
+                        if in_use + need > budget {
+                            if let Some(trie) = prefix.as_mut() {
+                                let short = (in_use + need - budget).div_ceil(target_page_bytes);
+                                let cols = trie.evict(short);
+                                if !cols.is_empty() {
+                                    if let Some(store) = backend.stub_store_mut() {
+                                        store.release_cols(&cols);
+                                    }
+                                    kv.cache_release(cols.len())?;
+                                    metrics.prefix_evicted_bytes +=
+                                        cols.len() * target_page_bytes;
+                                }
+                                in_use = reserved * resident_page_bytes
+                                    + kv.cache_pages() * target_page_bytes;
+                            }
+                        }
+                        if in_use + need > budget {
+                            if live == 0 && kv.cache_pages() == 0 {
                                 bail!(
-                                    "request {} needs {need} KV bytes worst-case — over \
-                                     the {budget}-byte budget even on an empty cache",
-                                    head.id
+                                    "request {head_id} needs {need} KV bytes worst-case — over \
+                                     the {budget}-byte budget even on an empty cache"
                                 );
                             }
                             break;
@@ -1158,6 +1305,31 @@ impl<'rt> Engine<'rt> {
                         }
                         continue;
                     }
+                    // Prefix-cache attach: walk the trie over the prompt,
+                    // capped one token short — the last prompt token must
+                    // prefill, that step produces the first logits.  The
+                    // manager charges zero live pages for the shared
+                    // prefix; the store-side column attach is deferred
+                    // until after lane zeroing below.
+                    if let Some(trie) = prefix.as_mut() {
+                        let m = trie.lookup(sess.tokens(), sess.prompt_len() - 1);
+                        if m.tokens > 0 {
+                            kv.attach_prefix(slot, m.tokens / PAGE_TOKENS)?;
+                            trie.pin(&m.path);
+                            lane_pins[slot] = m.path;
+                            sess.attach_prefix(m.tokens);
+                            pending_attach.push((slot, m.cols));
+                            metrics.prefix_hits += 1;
+                            metrics.prefix_hit_tokens += m.tokens;
+                            if wants_obs {
+                                hook.on_span(&SpanEvent {
+                                    id: sess.id(),
+                                    t_s: self.clock.secs_since_epoch(now),
+                                    point: SpanPoint::PrefixHit { tokens: m.tokens },
+                                });
+                            }
+                        }
+                    }
                     lanes[slot] = Some(sess);
                     fresh.push(slot);
                     live += 1;
@@ -1182,6 +1354,18 @@ impl<'rt> Engine<'rt> {
                 if let Some(draft) = draft_backend.as_mut() {
                     draft.zero_lanes(&fresh)?;
                 }
+            }
+            // Store-side prefix attach, strictly after lane zeroing so a
+            // re-used lane's stale columns never leak into the shared
+            // mapping (the manager/session bookkeeping above is
+            // ordering-free; the store attach is what the stub reads).
+            if !pending_attach.is_empty() {
+                if let Some(store) = backend.stub_store_mut() {
+                    for (lane, cols) in pending_attach.drain(..) {
+                        store.attach_prefix(lane, &cols)?;
+                    }
+                }
+                pending_attach.clear();
             }
 
             // ---- speculative rounds: open drafts, run draft micro-steps ----
@@ -1242,6 +1426,8 @@ impl<'rt> Engine<'rt> {
                             verify_tokens: 0,
                             kv_live_bytes: kv.live_bytes(),
                             kv_freed_bytes: kv.freed_bytes(),
+                            kv_cached_bytes: kv.cache_pages() * target_page_bytes,
+                            prefix_evicted_bytes: metrics.prefix_evicted_bytes,
                         });
                     }
                     continue;
@@ -1361,8 +1547,49 @@ impl<'rt> Engine<'rt> {
                 for (pos, tok) in sampled {
                     hook.on_token(id, pos, tok, metrics.decode_steps);
                 }
+                // ---- prefix registration: a completed prefill donates
+                // its leading blocks to the trie.  The donated pages move
+                // from the lane's private pool to the cache pool (the
+                // lane keeps reading them; its byte-count claim transfers)
+                // and the store increfs the shared columns. ----
+                if prefill_part > 0 && slab.start + taken >= sess.prompt_len() {
+                    if let Some(trie) = prefix.as_mut() {
+                        let block = trie.block();
+                        let blocks = sess.prompt_len() / block;
+                        let attached_blocks = sess.attached() / block;
+                        let prompt = &sess.tokens()[..sess.prompt_len()];
+                        // Donate only when the trie's existing path is
+                        // exactly what this lane attached: a concurrent
+                        // prefill that registered *more* blocks meanwhile
+                        // left this lane's middle pages private, and the
+                        // slot model keeps shared pages contiguous.
+                        let reused = trie.peek_match(prompt, blocks * block) / block;
+                        if blocks > attached_blocks && reused == attached_blocks {
+                            let ppb = trie.pages_per_block();
+                            let store = backend
+                                .stub_store_mut()
+                                .expect("the prefix cache is stub-backed");
+                            let (path, created) = trie.insert(prompt, blocks, |i| {
+                                store.share_pages(lane, i * ppb, ppb)
+                            });
+                            if created > 0 {
+                                kv.donate_to_cache(sess.slot(), blocks * ppb)?;
+                            }
+                            trie.unpin(&lane_pins[lane]);
+                            trie.pin(&path);
+                            lane_pins[lane] = path;
+                        }
+                    }
+                }
                 if finished {
                     let sess = lanes[lane].take().expect("lane occupied");
+                    if let Some(trie) = prefix.as_mut() {
+                        trie.unpin(&lane_pins[lane]);
+                        lane_pins[lane].clear();
+                        if let Some(store) = backend.stub_store_mut() {
+                            store.zero_lane(lane);
+                        }
+                    }
                     kv.free(sess.slot())?;
                     kv_reservations.remove(&id);
                     metrics.completed += 1;
@@ -1400,6 +1627,8 @@ impl<'rt> Engine<'rt> {
                     verify_tokens: mix_verify,
                     kv_live_bytes: kv.live_bytes(),
                     kv_freed_bytes: kv.freed_bytes(),
+                    kv_cached_bytes: kv.cache_pages() * target_page_bytes,
+                    prefix_evicted_bytes: metrics.prefix_evicted_bytes,
                 });
             }
         }
@@ -1411,20 +1640,22 @@ impl<'rt> Engine<'rt> {
         }
         let (enq, adm) = batcher.counters();
         if enq != adm + batcher.removed()
-            || metrics.completed + metrics.cancelled != enq as usize
+            || metrics.completed + metrics.cancelled + metrics.migrated != enq as usize
         {
             bail!(
                 "request conservation violated: enqueued {enq}, admitted {adm}, \
-                 removed {}, completed {}, cancelled {}",
+                 removed {}, completed {}, cancelled {}, migrated {}",
                 batcher.removed(),
                 metrics.completed,
-                metrics.cancelled
+                metrics.cancelled,
+                metrics.migrated
             );
         }
 
         metrics.wall_s = self.clock.now().duration_since(t_origin).as_secs_f64();
         metrics.kv_peak_bytes = kv.peak_bytes();
         metrics.kv_freed_bytes = kv.freed_bytes();
+        metrics.prefix_cached_bytes = kv.cache_pages() * target_page_bytes;
         metrics.observe_latencies(lat, ttfts);
         let out: Vec<Completion> = if open {
             Vec::new()
@@ -1477,6 +1708,15 @@ impl StepBackend<'_> {
                 .context("step returned no logits")?
                 .into_f32(),
             StepBackend::Stub(m) => m.step(width, &toks, &poss),
+        }
+    }
+
+    /// The stub backing's host-side page store (None on PJRT) — the
+    /// prefix cache's sharing surface.
+    fn stub_store_mut(&mut self) -> Option<&mut PagedKvStore> {
+        match self {
+            StepBackend::Stub(m) => Some(m.store_mut()),
+            StepBackend::Pjrt(_) => None,
         }
     }
 
@@ -2795,5 +3035,254 @@ mod tests {
         let (_, m) = engine.serve_all(codec_reqs(6), policy()).unwrap();
         assert_eq!(m.kv_freed_bytes, 6 * page, "6 one-page rows freed");
         assert!(m.kv_peak_bytes > 0);
+    }
+
+    // ---- radix prefix cache: COW sharing, eviction, migration ----
+
+    /// One-lane engine: requests serve strictly FIFO, so every follower
+    /// sees its predecessors' registered prefixes — the sharing path is
+    /// deterministic, no admission races.
+    fn serial_engine(cap: Option<usize>, factored: bool) -> Engine<'static> {
+        let spec = StubSpec { batch_slots: 1, ..codec_spec() };
+        let mut engine = Engine::new_stub(spec).with_prefill_chunk(cap);
+        if factored {
+            engine = engine
+                .with_kv_codec(KvCodecSpec::Factored { layer_budgets: Some(vec![4]) })
+                .unwrap();
+        }
+        engine
+    }
+
+    #[test]
+    fn prefix_cache_bit_identity_property() {
+        // The non-negotiable bar: a cache-hit serve emits exactly the
+        // tokens a cold serve does, across chunk ladder caps {8, 32} and
+        // both page codecs (identity, factored-with-truncation).  Random
+        // follower mix: exact repeats (pure hits), extensions (hit +
+        // fresh suffix), early divergence (miss or partial-block miss).
+        prop("prefix cache hit bit-identity", 6, |rng| {
+            let now = Instant::now();
+            let base_len = 33 + rng.below(48); // crosses >= 1 cache block
+            let base: Vec<i32> = (0..base_len).map(|_| rng.below(16) as i32).collect();
+            let n = 2 + rng.below(4);
+            let mut reqs = vec![Request::greedy(0, base.clone(), 1 + rng.below(6), now)];
+            for id in 1..=n as u64 {
+                let mut prompt = base.clone();
+                match rng.below(3) {
+                    0 => {} // exact repeat
+                    1 => {
+                        for _ in 0..1 + rng.below(40) {
+                            prompt.push(rng.below(16) as i32);
+                        }
+                    }
+                    _ => {
+                        let at = rng.below(prompt.len());
+                        prompt[at] = (prompt[at] + 1) % 16;
+                    }
+                }
+                reqs.push(Request::greedy(id, prompt, 1 + rng.below(6), now));
+            }
+            for cap in [8usize, 32] {
+                for factored in [false, true] {
+                    let (cold, _) = serial_engine(Some(cap), factored)
+                        .serve_all(reqs.clone(), policy())
+                        .map_err(|e| e.to_string())?;
+                    let warm_engine = serial_engine(Some(cap), factored)
+                        .with_prefix_cache(Some(32))
+                        .map_err(|e| e.to_string())?;
+                    let (warm, wm) =
+                        warm_engine.serve_all(reqs.clone(), policy()).map_err(|e| e.to_string())?;
+                    if cold.len() != warm.len() {
+                        return Err(format!(
+                            "cap {cap} factored {factored}: {} vs {} completions",
+                            warm.len(),
+                            cold.len()
+                        ));
+                    }
+                    for (a, b) in cold.iter().zip(&warm) {
+                        if a.tokens != b.tokens {
+                            return Err(format!(
+                                "cap {cap} factored {factored}: request {} diverged on a cache hit",
+                                a.id
+                            ));
+                        }
+                    }
+                    // Exact repeats of a >= 33-token base always hit.
+                    if wm.prefix_hits == 0 && reqs.iter().skip(1).any(|r| r.prompt == base) {
+                        return Err("an exact repeat never hit the cache".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prefix_cache_hits_skip_prefill_work() {
+        // Deterministic acceptance shape: a 64-token prompt registers two
+        // 32-token blocks; an exact repeat attaches one block (the last
+        // prompt token must prefill — it produces the first logits), an
+        // extension attaches both.  The warm serve spends strictly fewer
+        // fused steps, on bit-identical outputs.
+        let now = Instant::now();
+        let base: Vec<i32> = (0..64).map(|i| (i % 16) as i32).collect();
+        let mut extended = base.clone();
+        extended.extend((0..8).map(|i| (i % 16) as i32));
+        let mk = || {
+            vec![
+                Request::greedy(0, base.clone(), 4, now),
+                Request::greedy(1, base.clone(), 4, now),
+                Request::greedy(2, extended.clone(), 4, now),
+            ]
+        };
+        let (cold, cm) = serial_engine(None, false).serve_all(mk(), policy()).unwrap();
+        let warm_engine = serial_engine(None, false).with_prefix_cache(Some(32)).unwrap();
+        let (warm, wm) = warm_engine.serve_all(mk(), policy()).unwrap();
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+        }
+        assert_eq!(wm.prefix_hits, 2, "the repeat and the extension both hit");
+        assert_eq!(wm.prefix_hit_tokens, 32 + 64);
+        assert!(
+            wm.decode_steps < cm.decode_steps,
+            "cached prefixes must save fused steps: warm {} vs cold {}",
+            wm.decode_steps,
+            cm.decode_steps
+        );
+        // Request 0 donated its 64-token prompt: 2 blocks of 2 pages at
+        // 1024 B/page stay resident in the cache pool after the drain.
+        let page = warm_engine.kv_config().bytes_per_page();
+        assert_eq!(wm.prefix_cached_bytes, 4 * page);
+        assert_eq!(cm.prefix_hits, 0, "cache off: no hits, no cached bytes");
+        assert_eq!(cm.prefix_cached_bytes, 0);
+    }
+
+    #[test]
+    fn mid_prefill_cancel_on_attached_lane_leaves_cache_intact() {
+        // A follower attaches a cached block, then is cancelled while its
+        // remaining prompt is still prefilling.  The lane's column refs
+        // must return to baseline — the cache keeps its pages, nothing is
+        // freed twice, and a later identical request still hits and emits
+        // the cold-path tokens (no resurrected or corrupted pages).
+        let spec = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 2,
+            vocab: 16,
+            max_positions: 128,
+            batch_slots: 1,
+            chunk_widths: vec![1],
+            ..Default::default()
+        };
+        let engine = Engine::new_stub(spec.clone()).with_prefix_cache(Some(16)).unwrap();
+        let now = Instant::now();
+        let base: Vec<i32> = (0..32).map(|i| (i % 16) as i32).collect();
+        let reqs = vec![
+            Request::greedy(0, base.clone(), 2, now),
+            Request::greedy(1, base.clone(), 4, now), // cancelled mid-prefill
+            Request::greedy(2, base.clone(), 2, now),
+        ];
+        let mut hook = PrefillCancelHook {
+            target: 1,
+            fired: false,
+            started: Vec::new(),
+            target_tokens: 0,
+            cancelled: Vec::new(),
+        };
+        let (out, m) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+        assert_eq!(hook.cancelled.len(), 1, "request 1 cancelled");
+        assert_eq!(hook.target_tokens, 0, "cancel landed before its first token");
+        assert_eq!(m.prefix_hits, 2, "the cancelled lane and the survivor both attached");
+        assert_eq!(m.prefix_hit_tokens, 16 + 16);
+        // Request 0's two 16-token blocks survive the cancel untouched.
+        let page = engine.kv_config().bytes_per_page();
+        assert_eq!(m.prefix_cached_bytes, 2 * page);
+        // The survivor's cache-hit output matches a cold single-request
+        // serve bit for bit.
+        let cold = Engine::new_stub(spec);
+        let (cc, _) = cold
+            .serve_all(vec![Request::greedy(9, base, 2, now)], policy())
+            .unwrap();
+        let survivor = out.iter().find(|c| c.id == 2).expect("request 2 completed");
+        assert_eq!(survivor.tokens, cc[0].tokens, "hit output == cold output");
+    }
+
+    #[test]
+    fn prefix_cache_evicts_lru_under_memory_budget() {
+        // Budget sized so a fresh request only fits once the cache yields:
+        // rank 2 pages are 256 B; request 0's donated 2 pages (512 B) must
+        // be evicted before request 1's 768-byte worst case is admitted.
+        // The cache is an opportunist — it never keeps a request queued.
+        let spec = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 2,
+            vocab: 16,
+            max_positions: 128,
+            batch_slots: 1,
+            ..Default::default()
+        };
+        let engine = Engine::new_stub(spec)
+            .with_prefix_cache(Some(32))
+            .unwrap()
+            .with_kv_memory_budget(Some(768));
+        let page = engine.kv_config().bytes_per_page();
+        assert_eq!(page, 256, "rank-2 identity page: 16 B/token x 16 tokens");
+        let now = Instant::now();
+        let a: Vec<i32> = (0..32).map(|i| (i % 16) as i32).collect();
+        let b: Vec<i32> = (0..32).map(|i| ((i + 7) % 16) as i32).collect();
+        let reqs = vec![Request::greedy(0, a, 4, now), Request::greedy(1, b, 4, now)];
+        let (out, m) = engine.serve_all(reqs, policy()).unwrap();
+        assert_eq!(out.len(), 2, "eviction admitted the second request");
+        assert_eq!(m.prefix_hits, 0, "disjoint prompts never hit");
+        assert_eq!(m.prefix_evicted_bytes, 2 * page, "request 0's blocks were evicted");
+        assert_eq!(m.prefix_cached_bytes, 2 * page, "request 1's blocks replaced them");
+    }
+
+    /// Surrenders up to `max` queued requests once — the engine-side half
+    /// of the fleet scheduler's queue-migration protocol.
+    #[derive(Default)]
+    struct ReclaimOnceHook {
+        fired: bool,
+        max: usize,
+        reclaimed: Vec<Request>,
+    }
+
+    impl StepHook for ReclaimOnceHook {
+        fn reclaim_requests(&mut self) -> Option<usize> {
+            if self.fired {
+                None
+            } else {
+                self.fired = true;
+                Some(self.max)
+            }
+        }
+
+        fn on_reclaimed(&mut self, req: Request) {
+            self.reclaimed.push(req);
+        }
+    }
+
+    #[test]
+    fn reclaimed_requests_leave_from_the_back_and_stay_conserved() {
+        // Four enqueued, two reclaimed before the first admission pass:
+        // the *newest* waiters leave (the head keeps its FIFO claim), the
+        // conservation check books them as migrated — neither completed
+        // nor cancelled here — and the reclaimed requests come back out
+        // intact for the coordinating scheduler to resubmit elsewhere.
+        let engine = Engine::new_stub(codec_spec());
+        let mut hook = ReclaimOnceHook { max: 2, ..Default::default() };
+        let (out, m) = engine
+            .serve_hooked(codec_reqs(4), policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+        let ids: Vec<u64> = hook.reclaimed.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![3, 2], "back of the queue leaves first");
+        assert_eq!(hook.reclaimed[0].prompt.len(), 8, "request returned intact");
+        assert_eq!(m.migrated, 2);
+        assert_eq!(m.completed, 2);
+        let done: Vec<u64> = out.iter().map(|c| c.id).collect();
+        assert_eq!(done, vec![0, 1], "survivors complete locally");
     }
 }

@@ -33,6 +33,22 @@
 //! just counted.  The accounting side ([`KvManager`]) derives
 //! `bytes_per_page` from the same codec spec, so admission control, the
 //! router's per-token cost, and the stored bytes all agree.
+//!
+//! ## Refcounted copy-on-write page columns
+//!
+//! Page ownership is no longer "one lane, one page chain": the store
+//! keeps *columns* — one column per page position, holding that page's
+//! buffers across every (cache, layer) — in a refcounted arena, and each
+//! lane's page table maps page indices to column ids.  A prefix cache
+//! pins columns ([`PagedKvStore::share_prefix`]), later lanes attach to
+//! them ([`PagedKvStore::attach_prefix`]) with **zero copied bytes**, and
+//! a write into a shared column copies it first (copy-on-write) so the
+//! writer diverges privately.  A write that stores bit-identical content
+//! (the engine's idempotent pad rewrites) is detected and skipped, so
+//! pads never break sharing.  [`KvManager`] mirrors this with
+//! `shared_pages` per slot and a `cache_pages` pool: attached pages are
+//! charged once, to the cache, and a lane's retirement only frees the
+//! pages it privately owns.
 
 use anyhow::{bail, Result};
 
@@ -309,6 +325,12 @@ struct Slot {
     id: u64,
     pages: usize,
     positions: usize,
+    /// Leading pages held by the prefix cache rather than this lane: an
+    /// attached prefix at admission, plus pages donated to the cache when
+    /// this lane's prefill registered.  They are accounted once, in
+    /// [`KvManager::cache_pages`], so `pages - shared_pages` is what this
+    /// slot privately owns.
+    shared_pages: usize,
 }
 
 /// Allocates batch slots + pages; tracks live/peak/freed KV bytes at the
@@ -319,6 +341,10 @@ pub struct KvManager {
     /// admission/advance path.
     page_bytes: usize,
     slots: Vec<Option<Slot>>,
+    /// Pages owned by the prefix cache: donated prefixes that outlive the
+    /// lanes that prefilled them.  Counted once here no matter how many
+    /// lanes are attached.
+    cache_pages: usize,
     peak_bytes: usize,
     freed_bytes: usize,
 }
@@ -327,7 +353,7 @@ impl KvManager {
     pub fn new(cfg: KvConfig) -> Self {
         let page_bytes = cfg.bytes_per_page();
         let slots = vec![None; cfg.batch_slots];
-        Self { cfg, page_bytes, slots, peak_bytes: 0, freed_bytes: 0 }
+        Self { cfg, page_bytes, slots, cache_pages: 0, peak_bytes: 0, freed_bytes: 0 }
     }
 
     pub fn config(&self) -> &KvConfig {
@@ -346,7 +372,7 @@ impl KvManager {
         }
         for (i, s) in self.slots.iter_mut().enumerate() {
             if s.is_none() {
-                *s = Some(Slot { id, pages: 0, positions: 0 });
+                *s = Some(Slot { id, pages: 0, positions: 0, shared_pages: 0 });
                 return Ok(i);
             }
         }
@@ -404,6 +430,12 @@ impl KvManager {
                 s.positions
             );
         }
+        if positions < s.shared_pages * PAGE_TOKENS {
+            bail!(
+                "slot {slot}: rollback_to {positions} crosses into the {}-page shared prefix",
+                s.shared_pages
+            );
+        }
         s.positions = positions;
         let keep = positions.div_ceil(PAGE_TOKENS);
         self.freed_bytes += (s.pages - keep) * page_bytes;
@@ -411,28 +443,89 @@ impl KvManager {
         Ok(())
     }
 
-    /// Free a slot (request finished / evicted), folding its pages into
-    /// the cumulative [`KvManager::freed_bytes`] churn counter.  Returns
-    /// the request id the slot carried.
+    /// Free a slot (request finished / evicted), folding its *privately
+    /// owned* pages into the cumulative [`KvManager::freed_bytes`] churn
+    /// counter — pages below the shared-prefix boundary belong to the
+    /// cache and stay live.  Returns the request id the slot carried.
     pub fn free(&mut self, slot: usize) -> Result<u64> {
         match self.slots.get_mut(slot).and_then(|s| s.take()) {
             Some(s) => {
-                self.freed_bytes += s.pages * self.page_bytes;
+                self.freed_bytes += (s.pages - s.shared_pages) * self.page_bytes;
                 Ok(s.id)
             }
             None => bail!("double free of slot {slot}"),
         }
     }
 
+    /// Attach a cached prefix of `pages` pages to freshly-allocated slot
+    /// `slot`: positions jump to `pages · PAGE_TOKENS` without charging
+    /// this slot a byte — the pages are the cache's, counted once in
+    /// [`KvManager::cache_pages`].  The slot must not have advanced yet.
+    pub fn attach_prefix(&mut self, slot: usize, pages: usize) -> Result<()> {
+        let cfg_max = self.cfg.max_positions;
+        let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
+        if s.positions != 0 || s.pages != 0 {
+            bail!("slot {slot}: attach_prefix on a slot that already advanced");
+        }
+        if pages * PAGE_TOKENS > cfg_max {
+            bail!("slot {slot}: attached prefix of {pages} pages exceeds max positions {cfg_max}");
+        }
+        s.pages = pages;
+        s.shared_pages = pages;
+        s.positions = pages * PAGE_TOKENS;
+        Ok(())
+    }
+
+    /// Move ownership of slot `slot`'s first `pages` pages to the prefix
+    /// cache: the slot keeps reading them, but they now outlive it —
+    /// retirement frees only pages above the shared boundary.  `pages` is
+    /// the slot's *total* shared prefix (≥ any previously attached or
+    /// donated count); live bytes are unchanged because the pages move
+    /// pools, they don't duplicate.
+    pub fn donate_to_cache(&mut self, slot: usize, pages: usize) -> Result<()> {
+        let s = self.slots.get_mut(slot).and_then(|s| s.as_mut())
+            .ok_or_else(|| anyhow::anyhow!("slot {slot} not allocated"))?;
+        if pages > s.pages {
+            bail!("slot {slot}: cannot donate {pages} pages, only {} allocated", s.pages);
+        }
+        if pages < s.shared_pages {
+            bail!("slot {slot}: donation of {pages} pages below the {} already shared", s.shared_pages);
+        }
+        let add = pages - s.shared_pages;
+        s.shared_pages = pages;
+        self.cache_pages += add;
+        Ok(())
+    }
+
+    /// Release `pages` cache-owned pages (prefix-cache eviction): they
+    /// leave the live pool and count toward [`KvManager::freed_bytes`].
+    pub fn cache_release(&mut self, pages: usize) -> Result<()> {
+        if pages > self.cache_pages {
+            bail!("cache_release of {pages} pages with only {} cached", self.cache_pages);
+        }
+        self.cache_pages -= pages;
+        self.freed_bytes += pages * self.page_bytes;
+        Ok(())
+    }
+
+    /// Pages currently owned by the prefix cache.
+    pub fn cache_pages(&self) -> usize {
+        self.cache_pages
+    }
+
     pub fn live_bytes(&self) -> usize {
         self.live_pages() * self.page_bytes
     }
 
-    /// Allocated pages summed over live slots — one number the engine can
-    /// multiply by *any* codec's page size (its own, or a paired draft
-    /// engine's) for budget admission.
+    /// Resident pages: each slot's privately-owned pages plus the prefix
+    /// cache's pool — one number the engine can multiply by *any* codec's
+    /// page size (its own, or a paired draft engine's) for budget
+    /// admission.  Shared pages count once no matter how many lanes read
+    /// them.
     pub fn live_pages(&self) -> usize {
-        self.slots.iter().flatten().map(|s| s.pages).sum()
+        self.slots.iter().flatten().map(|s| s.pages - s.shared_pages).sum::<usize>()
+            + self.cache_pages
     }
 
     pub fn peak_bytes(&self) -> usize {
@@ -464,9 +557,21 @@ impl KvManager {
 /// bit-identity under [`IdentityCodec`] is a storage property, not an
 /// accounting convention.
 ///
-/// Layout: one optional buffer per `(cache, layer, lane, page)`, each
-/// `[H, PAGE_TOKENS, stored_rank(layer)]`.  `n_caches` is 2 for the K +
-/// VO factor caches the artifacts carry.
+/// Layout: the unit of ownership is a *column* — one page position's
+/// buffers across every `(cache, layer)`, each
+/// `[H, PAGE_TOKENS, stored_rank(layer)]` and lazily allocated.  Columns
+/// live in a refcounted arena; `table[lane · pages_per_lane + page]` maps
+/// a lane's page index to its column, and the prefix cache holds extra
+/// references on shared columns ([`PagedKvStore::share_prefix`] /
+/// [`PagedKvStore::attach_prefix`] / [`PagedKvStore::release_cols`]).
+/// `n_caches` is 2 for the K + VO factor caches the artifacts carry.
+struct Column {
+    refs: usize,
+    /// One lazily-allocated buffer per `(cache, layer)`, indexed
+    /// `cache · n_layers + layer`.
+    bufs: Vec<Option<Box<[f32]>>>,
+}
+
 pub struct PagedKvStore {
     n_caches: usize,
     n_layers: usize,
@@ -474,7 +579,9 @@ pub struct PagedKvStore {
     lanes: usize,
     pages_per_lane: usize,
     codec: Box<dyn PageCodec>,
-    pages: Vec<Option<Box<[f32]>>>,
+    columns: Vec<Option<Column>>,
+    free_cols: Vec<usize>,
+    table: Vec<Option<usize>>,
 }
 
 impl PagedKvStore {
@@ -487,20 +594,27 @@ impl PagedKvStore {
         codec: Box<dyn PageCodec>,
     ) -> Self {
         let pages_per_lane = max_positions.div_ceil(PAGE_TOKENS);
-        let pages = (0..n_caches * n_layers * lanes * pages_per_lane).map(|_| None).collect();
-        Self { n_caches, n_layers, n_heads, lanes, pages_per_lane, codec, pages }
+        let table = (0..lanes * pages_per_lane).map(|_| None).collect();
+        Self {
+            n_caches,
+            n_layers,
+            n_heads,
+            lanes,
+            pages_per_lane,
+            codec,
+            columns: Vec::new(),
+            free_cols: Vec::new(),
+            table,
+        }
     }
 
     pub fn codec(&self) -> &dyn PageCodec {
         &*self.codec
     }
 
-    fn page_slot(&self, cache: usize, layer: usize, lane: usize, page: usize) -> usize {
-        debug_assert!(
-            cache < self.n_caches && layer < self.n_layers && lane < self.lanes
-                && page < self.pages_per_lane
-        );
-        ((cache * self.n_layers + layer) * self.lanes + lane) * self.pages_per_lane + page
+    fn table_slot(&self, lane: usize, page: usize) -> usize {
+        debug_assert!(lane < self.lanes && page < self.pages_per_lane);
+        lane * self.pages_per_lane + page
     }
 
     /// Floats one of `layer`'s pages holds at rest.
@@ -508,8 +622,54 @@ impl PagedKvStore {
         self.n_heads * PAGE_TOKENS * self.codec.stored_rank(layer)
     }
 
+    /// Arena-allocate a fresh column with one reference and no buffers.
+    fn alloc_column(&mut self) -> usize {
+        let col = Column { refs: 1, bufs: vec![None; self.n_caches * self.n_layers] };
+        match self.free_cols.pop() {
+            Some(i) => {
+                debug_assert!(self.columns[i].is_none());
+                self.columns[i] = Some(col);
+                i
+            }
+            None => {
+                self.columns.push(Some(col));
+                self.columns.len() - 1
+            }
+        }
+    }
+
+    /// Drop one reference; the column frees exactly when the last holder
+    /// (lane table entry or prefix cache) lets go.
+    fn decref(&mut self, col: usize) {
+        let c = self.columns[col].as_mut().expect("decref of a freed column");
+        debug_assert!(c.refs > 0);
+        c.refs -= 1;
+        if c.refs == 0 {
+            self.columns[col] = None;
+            self.free_cols.push(col);
+        }
+    }
+
+    /// The column behind `(lane, page)`, allocating a fresh private one on
+    /// first touch.
+    fn column_for(&mut self, lane: usize, page: usize) -> usize {
+        let slot = self.table_slot(lane, page);
+        match self.table[slot] {
+            Some(c) => c,
+            None => {
+                let c = self.alloc_column();
+                self.table[slot] = Some(c);
+                c
+            }
+        }
+    }
+
     /// Encode one full-rank coefficient vector into the page holding
-    /// `pos`, allocating the page (zeroed) on first touch.
+    /// `pos`, allocating buffers (zeroed) on first touch.  Writing into a
+    /// *shared* column first checks whether the write stores exactly the
+    /// bits already there — the engine's idempotent pad rewrites — and
+    /// skips it; a genuinely diverging write copies the column
+    /// (copy-on-write), leaving every other holder untouched.
     pub fn write_vec(
         &mut self,
         cache: usize,
@@ -521,11 +681,32 @@ impl PagedKvStore {
     ) {
         let (page, off) = (pos / PAGE_TOKENS, pos % PAGE_TOKENS);
         let sr = self.codec.stored_rank(layer);
-        let len = self.page_len(layer);
-        let slot = self.page_slot(cache, layer, lane, page);
-        let buf = self.pages[slot]
-            .get_or_insert_with(|| vec![0.0; len].into_boxed_slice());
         let at = (head * PAGE_TOKENS + off) * sr;
+        let bi = cache * self.n_layers + layer;
+        let slot = self.table_slot(lane, page);
+        let mut col = self.column_for(lane, page);
+        if self.columns[col].as_ref().expect("write into freed column").refs > 1 {
+            let mut enc = vec![0.0f32; sr];
+            self.codec.encode_vec(layer, coeffs, &mut enc);
+            let same = match &self.columns[col].as_ref().unwrap().bufs[bi] {
+                Some(buf) => {
+                    buf[at..at + sr].iter().zip(&enc).all(|(a, b)| a.to_bits() == b.to_bits())
+                }
+                None => enc.iter().all(|x| x.to_bits() == 0.0f32.to_bits()),
+            };
+            if same {
+                return;
+            }
+            let bufs = self.columns[col].as_ref().unwrap().bufs.clone();
+            self.decref(col);
+            let fresh = self.alloc_column();
+            self.columns[fresh].as_mut().unwrap().bufs = bufs;
+            self.table[slot] = Some(fresh);
+            col = fresh;
+        }
+        let len = self.page_len(layer);
+        let column = self.columns[col].as_mut().unwrap();
+        let buf = column.bufs[bi].get_or_insert_with(|| vec![0.0; len].into_boxed_slice());
         self.codec.encode_vec(layer, coeffs, &mut buf[at..at + sr]);
     }
 
@@ -541,7 +722,10 @@ impl PagedKvStore {
         out: &mut [f32],
     ) {
         let (page, off) = (pos / PAGE_TOKENS, pos % PAGE_TOKENS);
-        match &self.pages[self.page_slot(cache, layer, lane, page)] {
+        let buf = self.table[self.table_slot(lane, page)]
+            .and_then(|c| self.columns[c].as_ref())
+            .and_then(|col| col.bufs[cache * self.n_layers + layer].as_ref());
+        match buf {
             Some(buf) => {
                 let sr = self.codec.stored_rank(layer);
                 let at = (head * PAGE_TOKENS + off) * sr;
@@ -555,36 +739,105 @@ impl PagedKvStore {
     /// block (zeros for an untouched page) — the block-granular read the
     /// cache materializer uses.
     pub fn decode_page(&self, cache: usize, layer: usize, lane: usize, page: usize, out: &mut [f32]) {
-        match &self.pages[self.page_slot(cache, layer, lane, page)] {
+        let buf = self.table[self.table_slot(lane, page)]
+            .and_then(|c| self.columns[c].as_ref())
+            .and_then(|col| col.bufs[cache * self.n_layers + layer].as_ref());
+        match buf {
             Some(buf) => self.codec.decode_page(layer, self.n_heads, buf, out),
             None => out.fill(0.0),
         }
     }
 
-    /// Drop every page of `lane` across caches and layers — the storage
-    /// half of lane zeroing on slot churn.
+    /// Drop `lane`'s references on every page — the storage half of lane
+    /// zeroing on slot churn.  Columns the prefix cache (or another lane)
+    /// still references survive; purely private pages free immediately.
     pub fn zero_lane(&mut self, lane: usize) {
-        for cache in 0..self.n_caches {
-            for layer in 0..self.n_layers {
-                for page in 0..self.pages_per_lane {
-                    self.pages[self.page_slot(cache, layer, lane, page)] = None;
-                }
+        for page in 0..self.pages_per_lane {
+            if let Some(col) = self.table[lane * self.pages_per_lane + page].take() {
+                self.decref(col);
             }
         }
     }
 
-    /// Bytes currently held by allocated pages — the storage-side twin of
+    /// Pin `lane`'s first `n_pages` columns for the prefix cache: each
+    /// gains a reference and the returned ids stay valid until released
+    /// ([`PagedKvStore::release_cols`]).  Pages the lane never touched are
+    /// materialized as (empty) columns first, so attach boundaries stay
+    /// page-exact.
+    pub fn share_prefix(&mut self, lane: usize, n_pages: usize) -> Vec<usize> {
+        self.share_pages(lane, 0, n_pages)
+    }
+
+    /// Range form of [`PagedKvStore::share_prefix`]: pin pages
+    /// `start..start + n_pages` of `lane` — the donation path shares only
+    /// the blocks the prefix trie did not already hold.
+    pub fn share_pages(&mut self, lane: usize, start: usize, n_pages: usize) -> Vec<usize> {
+        debug_assert!(start + n_pages <= self.pages_per_lane);
+        (start..start + n_pages)
+            .map(|page| {
+                let col = self.column_for(lane, page);
+                self.columns[col].as_mut().expect("sharing a freed column").refs += 1;
+                col
+            })
+            .collect()
+    }
+
+    /// Map the cached columns `cols` into `lane`'s leading pages — zero
+    /// bytes copied.  The lane must be clean (zeroed); every column must
+    /// be live.  Fails atomically: on error no reference has moved.
+    pub fn attach_prefix(&mut self, lane: usize, cols: &[usize]) -> Result<()> {
+        if cols.len() > self.pages_per_lane {
+            bail!("attach_prefix: {} pages exceed the {}-page lane", cols.len(), self.pages_per_lane);
+        }
+        for page in 0..cols.len() {
+            if self.table[self.table_slot(lane, page)].is_some() {
+                bail!("attach_prefix: lane {lane} page {page} is not clean");
+            }
+        }
+        for &col in cols {
+            if self.columns.get(col).map_or(true, |c| c.is_none()) {
+                bail!("attach_prefix: column {col} is not live");
+            }
+        }
+        for (page, &col) in cols.iter().enumerate() {
+            self.columns[col].as_mut().unwrap().refs += 1;
+            self.table[self.table_slot(lane, page)] = Some(col);
+        }
+        Ok(())
+    }
+
+    /// Drop the prefix cache's references on `cols` (eviction or cache
+    /// teardown).  Columns still mapped by live lanes survive; fully
+    /// unreferenced columns free immediately — and never resurrect, their
+    /// arena index recycles only through fresh allocation.
+    pub fn release_cols(&mut self, cols: &[usize]) {
+        for &c in cols {
+            self.decref(c);
+        }
+    }
+
+    /// Current reference count of a column (0 for a freed id) — the test
+    /// and model-checking surface for COW lifecycles.
+    pub fn col_refs(&self, col: usize) -> usize {
+        self.columns.get(col).and_then(|c| c.as_ref()).map_or(0, |c| c.refs)
+    }
+
+    /// Live (referenced) columns — distinct resident pages, shared or not.
+    pub fn live_columns(&self) -> usize {
+        self.columns.iter().flatten().count()
+    }
+
+    /// Bytes currently held by allocated buffers, counting each shared
+    /// column **once** — the storage-side twin of
     /// [`KvManager::live_bytes`] (which counts *accounted* pages; the
     /// store also holds rolled-back pages until the lane is zeroed, so
     /// store ≥ accounting is the expected relation, not equality).
     pub fn stored_bytes(&self) -> usize {
-        let per_lane_layer: Vec<usize> =
-            (0..self.n_layers).map(|l| self.page_len(l) * 4).collect();
-        self.pages
+        self.columns
             .iter()
-            .enumerate()
-            .filter(|(_, p)| p.is_some())
-            .map(|(i, _)| per_lane_layer[(i / (self.lanes * self.pages_per_lane)) % self.n_layers])
+            .flatten()
+            .flat_map(|c| c.bufs.iter().flatten())
+            .map(|b| b.len() * 4)
             .sum()
     }
 }
@@ -750,6 +1003,120 @@ mod tests {
         // Dense pages: 2 layers × H·P·8; factored: H·P·(2+4).
         assert_eq!(dense.stored_bytes(), 2 * 2 * PAGE_TOKENS * 8 * 4);
         assert_eq!(fact.stored_bytes(), 2 * PAGE_TOKENS * (2 + 4) * 4);
+    }
+
+    #[test]
+    fn cow_store_shares_and_diverges() {
+        let rank = 4;
+        let codec = KvCodecSpec::Identity.build(1, rank).unwrap();
+        let mut store = PagedKvStore::new(2, 1, 2, 64, 2, codec);
+        let v: Vec<f32> = (0..rank).map(|k| k as f32 + 0.5).collect();
+        // Lane 0 prefills one head row across two pages.
+        for pos in 0..2 * PAGE_TOKENS {
+            store.write_vec(0, 0, 0, 0, pos, &v);
+        }
+        let one_page = store.stored_bytes() / 2;
+        // The cache pins both columns; lane 1 attaches — zero new bytes.
+        let cols = store.share_prefix(0, 2);
+        assert_eq!(cols.len(), 2);
+        assert!(cols.iter().all(|&c| store.col_refs(c) == 2));
+        let before = store.stored_bytes();
+        store.attach_prefix(1, &cols).unwrap();
+        assert_eq!(store.stored_bytes(), before, "attach copies nothing");
+        assert!(cols.iter().all(|&c| store.col_refs(c) == 3));
+        let mut out = vec![0.0; rank];
+        store.read_vec(0, 0, 1, 0, 17, &mut out);
+        assert_eq!(out, v, "attached lane reads the shared pages");
+        // An identical rewrite into a shared page (the engine's pad
+        // rewrite) is skipped, not cloned.
+        store.write_vec(0, 0, 1, 0, 17, &v);
+        assert_eq!(store.stored_bytes(), before, "idempotent rewrite keeps sharing");
+        assert_eq!(store.col_refs(cols[1]), 3);
+        // A genuinely diverging write copies the column; lane 0 and the
+        // cache keep the original bits.
+        let w: Vec<f32> = v.iter().map(|x| x + 10.0).collect();
+        store.write_vec(0, 0, 1, 0, 17, &w);
+        assert_eq!(store.col_refs(cols[1]), 2, "writer left the shared column");
+        store.read_vec(0, 0, 1, 0, 17, &mut out);
+        assert_eq!(out, w);
+        store.read_vec(0, 0, 0, 0, 17, &mut out);
+        assert_eq!(out, v, "donor lane unchanged after COW");
+        assert_eq!(store.stored_bytes(), before + one_page, "exactly one cloned column");
+        // Lane teardown + cache release drop every reference exactly once.
+        store.zero_lane(1);
+        store.zero_lane(0);
+        assert!(cols.iter().all(|&c| store.col_refs(c) == 1), "cache still pins");
+        assert_eq!(store.stored_bytes(), before, "pinned pages survive lane churn");
+        store.release_cols(&cols);
+        assert!(cols.iter().all(|&c| store.col_refs(c) == 0));
+        assert_eq!(store.stored_bytes(), 0, "no page resurrection");
+        assert_eq!(store.live_columns(), 0);
+    }
+
+    #[test]
+    fn attach_refuses_dirty_lane_and_dead_columns() {
+        let codec = KvCodecSpec::Identity.build(1, 2).unwrap();
+        let mut store = PagedKvStore::new(1, 1, 1, 64, 2, codec);
+        store.write_vec(0, 0, 0, 0, 0, &[1.0, 2.0]);
+        let cols = store.share_prefix(0, 1);
+        // Lane 1 already holds a page at index 0: attach is refused and no
+        // reference moves.
+        store.write_vec(0, 0, 1, 0, 3, &[3.0, 4.0]);
+        assert!(store.attach_prefix(1, &cols).is_err());
+        assert_eq!(store.col_refs(cols[0]), 2);
+        store.zero_lane(1);
+        // A released (dead) column id is refused before any ref moves.
+        store.release_cols(&cols);
+        store.zero_lane(0);
+        assert_eq!(store.col_refs(cols[0]), 0);
+        assert!(store.attach_prefix(1, &cols).is_err());
+        assert_eq!(store.live_columns(), 0);
+    }
+
+    #[test]
+    fn manager_attach_donate_and_cache_release_accounting() {
+        let mut kv = KvManager::new(cfg(8));
+        let bpp = kv.config().bytes_per_page();
+        // Donor prefills 2 pages + 4 decode positions, then donates the
+        // 2-page prefix to the cache: live bytes are unchanged — the pages
+        // moved pools, they did not duplicate.
+        let a = kv.allocate(1).unwrap();
+        kv.advance_by(a, 2 * PAGE_TOKENS + 4).unwrap();
+        assert_eq!(kv.live_bytes(), 3 * bpp);
+        kv.donate_to_cache(a, 2).unwrap();
+        assert_eq!(kv.live_bytes(), 3 * bpp, "donation moves pages, not bytes");
+        assert_eq!(kv.cache_pages(), 2);
+        // An attached lane starts at the prefix boundary for free.
+        let b = kv.allocate(2).unwrap();
+        kv.attach_prefix(b, 2).unwrap();
+        assert_eq!(kv.positions(b), 2 * PAGE_TOKENS);
+        assert_eq!(kv.live_bytes(), 3 * bpp, "attach charges nothing");
+        // Its own positions past the boundary are charged normally.
+        kv.advance_by(b, 1).unwrap();
+        assert_eq!(kv.live_bytes(), 4 * bpp);
+        // Retirement frees only privately-owned pages.
+        let freed0 = kv.freed_bytes();
+        kv.free(a).unwrap();
+        assert_eq!(kv.freed_bytes(), freed0 + bpp, "donor frees its decode page only");
+        assert_eq!(kv.live_bytes(), 3 * bpp);
+        kv.free(b).unwrap();
+        assert_eq!(kv.live_bytes(), 2 * bpp, "cache still holds the prefix");
+        // Eviction returns the cached pages (and no more than exist).
+        assert!(kv.cache_release(3).is_err());
+        kv.cache_release(2).unwrap();
+        assert_eq!(kv.cache_pages(), 0);
+        assert_eq!(kv.live_bytes(), 0);
+        // Guards: attach after advancing, rollback below the boundary.
+        let c = kv.allocate(3).unwrap();
+        kv.advance(c).unwrap();
+        assert!(kv.attach_prefix(c, 1).is_err());
+        kv.free(c).unwrap();
+        let d = kv.allocate(4).unwrap();
+        kv.attach_prefix(d, 2).unwrap();
+        kv.advance_by(d, 4).unwrap();
+        assert!(kv.rollback_to(d, PAGE_TOKENS).is_err(), "rollback below shared prefix refused");
+        kv.rollback_to(d, 2 * PAGE_TOKENS + 1).unwrap();
+        assert_eq!(kv.positions(d), 2 * PAGE_TOKENS + 1);
     }
 
     #[test]

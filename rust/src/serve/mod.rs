@@ -97,6 +97,53 @@
 //! inflate every shared step to the widest slab and starve decode-lane
 //! latency.
 //!
+//! ## The radix prefix cache: share → COW → donate → evict
+//!
+//! With [`Engine::with_prefix_cache`] (stub backing only, CLI
+//! `--prefix-cache-block`), prompts that share a prefix prefill it
+//! **once**.  A trie keyed on token-id blocks ([`prefix::PrefixCache`],
+//! block = a multiple of [`PAGE_TOKENS`] on the prefill-chunk ladder)
+//! maps cached prefixes to refcounted columns in the copy-on-write page
+//! store ([`kv::PagedKvStore`]); bit-identity to a cold prefill is the
+//! correctness bar, property-tested across chunk widths and codecs.
+//! One cached block's lifecycle:
+//!
+//! ```text
+//!            ADMIT (stage 4)                       lane lifetime
+//!   prompt ─▶ trie.lookup ── hit ──▶ attach_prefix: lane's leading
+//!    │           │ pin(path)         pages point at the cached columns
+//!    │          miss                 (refcount++, zero bytes copied);
+//!    │           │                   prefill resumes at the first
+//!    ▼           ▼                   uncached token — never the last
+//!   cold: full prefill               prompt token, so the logits step
+//!    │                               always runs.  A pad rewrite of a
+//!    ▼                               shared column copies first (COW).
+//!   RETIRE/CANCEL: trie.unpin(path); store.zero_lane drops the lane's
+//!    │             references — shared columns survive, refcount--.
+//!    ▼
+//!   DONATE: a finished cold prefill offers its prompt-aligned columns
+//!    │      (trie.insert + store.share_pages) — contiguity-guarded, so
+//!    │      a racing registration never donates a torn prefix.
+//!    ▼
+//!   EVICT: under a KV memory budget the admission gate asks the trie
+//!          for unpinned leaves in ascending attention mass
+//!          (block_tokens × (1 + hits), LRU tie-break) until the new
+//!          request fits; `ServeMetrics::prefix_evicted_bytes` counts
+//!          the sacrifice.
+//! ```
+//!
+//! The gateway/router layer above adds **queue migration**: a saturated
+//! engine surrenders *queued* (never admitted) requests from the back of
+//! its batcher ([`Batcher::reclaim_newest`], `StepHook::reclaim_requests`
+//! / `on_reclaimed`), and the router re-places them on an idle
+//! rank-variant — `ServeMetrics::migrated` keeps the conservation
+//! invariant `completed + cancelled + migrated == enqueued`, and the
+//! receiving gateway stamps `SpanPoint::Migrated` on the request's
+//! timeline.  Beyond a configured in-flight depth the gateway sheds load
+//! instead (`SubmitError::Overloaded`) — refused before any state is
+//! allocated, so there is nothing to reclaim and in-flight requests are
+//! untouched.
+//!
 //! ## Self-speculative decoding: draft → verify → accept/rollback
 //!
 //! An engine carrying a *draft* model one CLOVER rank down
@@ -206,6 +253,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod kv;
+pub mod prefix;
 pub mod sampling;
 pub mod session;
 
@@ -218,5 +266,6 @@ pub use kv::{
     FactoredCodec, IdentityCodec, KvCodecSpec, KvConfig, KvManager, KvSpecError, PageCodec,
     PagedKvStore, PAGE_TOKENS,
 };
+pub use prefix::{chain_hashes, PrefixCache, PrefixMatch, DEFAULT_PREFIX_BLOCK};
 pub use sampling::{Sampler, SamplingParams};
 pub use session::{Session, SpecState, VerifyOutcome};

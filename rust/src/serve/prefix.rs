@@ -1,0 +1,420 @@
+//! Radix prefix cache over the copy-on-write page store.
+//!
+//! A trie keyed on *token-id blocks* — fixed-size chunks of the prompt,
+//! sized to a multiple of [`PAGE_TOKENS`] and aligned to the engine's
+//! prefill-chunk ladder — maps each cached block to the page-store
+//! columns holding its KV pages.  A shared system prompt prefills once:
+//! the first request's lane donates its prefix columns to the trie
+//! ([`PrefixCache::insert`] + [`crate::serve::PagedKvStore::share_pages`]),
+//! and later requests whose prompts walk the same path attach to those
+//! columns with zero bytes copied ([`PrefixCache::lookup`] +
+//! [`crate::serve::PagedKvStore::attach_prefix`]), diverging privately via
+//! copy-on-write only if they ever rewrite a shared page.
+//!
+//! ## Eviction: LRU by attention mass
+//!
+//! Under memory pressure the engine asks the trie to give pages back
+//! ([`PrefixCache::evict`]).  Candidates are *unpinned leaves* — nodes no
+//! live lane is attached to ([`PrefixCache::pin`] guards the rest) and
+//! with no cached children (a child's pages are useless without its
+//! prefix, so interior nodes only fall after their subtree).  Victims go
+//! in ascending **attention mass** — `block_tokens × (1 + hits)`, the
+//! KVzap-style proxy for how much attention the cached pages absorb
+//! across the request mix — with the logical touch clock as the LRU
+//! tie-break.  Every evicted block releases its column references; the
+//! store frees columns whose last reference that was, and the manager's
+//! cache pool shrinks by the released page count.
+//!
+//! The trie never stores a *partial* block: prompts cache
+//! `floor(len / block)` blocks, and lookups are capped by the caller (the
+//! engine attaches at most `prompt_len − 1` tokens so at least one real
+//! token always prefills — the step that produces the first logits).
+
+use anyhow::{bail, Result};
+
+use super::kv::PAGE_TOKENS;
+
+/// Default block width (tokens per trie node): the widest rung of the
+/// default prefill-chunk ladder, so one cached block is exactly one
+/// fused prefill step skipped.
+pub const DEFAULT_PREFIX_BLOCK: usize = 32;
+
+/// Rolling FNV-1a hashes of each successive `block`-sized chunk of
+/// `prompt` — hash `i` covers tokens `0..(i + 1) · block`.  The router's
+/// shadow placement directory stores these per gateway, so "which engine
+/// holds my longest cached prefix" is a set probe, not an RPC.
+pub fn chain_hashes(prompt: &[i32], block: usize) -> Vec<u64> {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut out = Vec::new();
+    for chunk in prompt.chunks_exact(block) {
+        for &t in chunk {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        out.push(h);
+    }
+    out
+}
+
+struct Node {
+    parent: Option<usize>,
+    /// Exactly `block` token ids — the edge label from the parent.
+    tokens: Vec<i32>,
+    children: Vec<usize>,
+    /// Column ids in the page store, `block / PAGE_TOKENS` of them.
+    cols: Vec<usize>,
+    /// Live lanes attached at or below this node; pinned nodes never
+    /// evict.
+    pins: usize,
+    hits: usize,
+    last_touch: u64,
+}
+
+impl Node {
+    /// KVzap-style eviction key: tokens held × popularity.
+    fn mass(&self) -> usize {
+        self.tokens.len() * (1 + self.hits)
+    }
+}
+
+/// Result of a trie walk: the matched path (root-first node ids, for
+/// pinning), its length in tokens, and the concatenated column ids to
+/// attach.
+pub struct PrefixMatch {
+    pub path: Vec<usize>,
+    pub tokens: usize,
+    pub cols: Vec<usize>,
+}
+
+/// The radix prefix cache.  Pure bookkeeping: column references and page
+/// budgets live in [`crate::serve::PagedKvStore`] / `KvManager`; the trie
+/// decides *which* columns to attach, donate, and sacrifice.
+pub struct PrefixCache {
+    block: usize,
+    nodes: Vec<Option<Node>>,
+    free: Vec<usize>,
+    roots: Vec<usize>,
+    /// Logical clock for LRU tie-breaks (bumped per lookup/insert).
+    clock: u64,
+    hits: usize,
+    misses: usize,
+}
+
+impl PrefixCache {
+    pub fn new(block: usize) -> Result<Self> {
+        if block == 0 || block % PAGE_TOKENS != 0 {
+            bail!("prefix block {block} must be a positive multiple of {PAGE_TOKENS}");
+        }
+        Ok(Self {
+            block,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            roots: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+        })
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn pages_per_block(&self) -> usize {
+        self.block / PAGE_TOKENS
+    }
+
+    /// (hits, misses) across lookups — the hit-rate numerator/denominator
+    /// the obs layer exports.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.hits, self.misses)
+    }
+
+    /// Cached blocks (trie nodes).
+    pub fn len(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pages the trie holds — the page-count twin of
+    /// `KvManager::cache_pages` (they agree by construction: every
+    /// donation and eviction updates both).
+    pub fn cached_pages(&self) -> usize {
+        self.len() * self.pages_per_block()
+    }
+
+    pub fn cached_tokens(&self) -> usize {
+        self.len() * self.block
+    }
+
+    fn child_matching(&self, children: &[usize], chunk: &[i32]) -> Option<usize> {
+        children
+            .iter()
+            .copied()
+            .find(|&c| self.nodes[c].as_ref().is_some_and(|n| n.tokens == chunk))
+    }
+
+    /// Walk `prompt` block by block, stopping at the first miss or at
+    /// `max_tokens` (the engine passes `prompt_len − 1` so one token
+    /// always prefills).  Counts one hit (and bumps path stats) when
+    /// anything matched, one miss otherwise.
+    pub fn lookup(&mut self, prompt: &[i32], max_tokens: usize) -> PrefixMatch {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path = Vec::new();
+        let mut cols = Vec::new();
+        let mut children: Vec<usize> = self.roots.clone();
+        for chunk in prompt.chunks_exact(self.block) {
+            if (path.len() + 1) * self.block > max_tokens {
+                break;
+            }
+            let Some(c) = self.child_matching(&children, chunk) else { break };
+            let node = self.nodes[c].as_mut().unwrap();
+            node.hits += 1;
+            node.last_touch = clock;
+            children = node.children.clone();
+            cols.extend_from_slice(&self.nodes[c].as_ref().unwrap().cols);
+            path.push(c);
+        }
+        if path.is_empty() {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        PrefixMatch { tokens: path.len() * self.block, path, cols }
+    }
+
+    /// Longest cached prefix of `prompt` in tokens, without touching hit
+    /// stats or the LRU clock — budget math and placement probes.
+    pub fn peek_match(&self, prompt: &[i32], max_tokens: usize) -> usize {
+        let mut matched = 0;
+        let mut children: Vec<usize> = self.roots.clone();
+        for chunk in prompt.chunks_exact(self.block) {
+            if matched + self.block > max_tokens {
+                break;
+            }
+            let Some(c) = self.child_matching(&children, chunk) else { break };
+            children = self.nodes[c].as_ref().unwrap().children.clone();
+            matched += self.block;
+        }
+        matched
+    }
+
+    /// Register `blocks` leading blocks of `prompt` after its prefill
+    /// completed.  Blocks already cached are reused (a concurrent
+    /// duplicate prefill donates nothing twice); for each genuinely new
+    /// block, `make_cols(block_index)` must pin and return its column
+    /// ids (the engine shares the lane's page range).  Returns the full
+    /// path and how many blocks were newly created — the page-donation
+    /// count the caller forwards to `KvManager::donate_to_cache`.
+    pub fn insert(
+        &mut self,
+        prompt: &[i32],
+        blocks: usize,
+        mut make_cols: impl FnMut(usize) -> Vec<usize>,
+    ) -> (Vec<usize>, usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path = Vec::new();
+        let mut created = 0;
+        let mut parent: Option<usize> = None;
+        for (i, chunk) in prompt.chunks_exact(self.block).take(blocks).enumerate() {
+            let siblings = match parent {
+                Some(p) => self.nodes[p].as_ref().unwrap().children.clone(),
+                None => self.roots.clone(),
+            };
+            let id = match self.child_matching(&siblings, chunk) {
+                Some(c) => {
+                    self.nodes[c].as_mut().unwrap().last_touch = clock;
+                    c
+                }
+                None => {
+                    let cols = make_cols(i);
+                    debug_assert_eq!(cols.len(), self.pages_per_block());
+                    let node = Node {
+                        parent,
+                        tokens: chunk.to_vec(),
+                        children: Vec::new(),
+                        cols,
+                        pins: 0,
+                        hits: 0,
+                        last_touch: clock,
+                    };
+                    let id = match self.free.pop() {
+                        Some(slot) => {
+                            self.nodes[slot] = Some(node);
+                            slot
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        Some(p) => self.nodes[p].as_mut().unwrap().children.push(id),
+                        None => self.roots.push(id),
+                    }
+                    created += 1;
+                    id
+                }
+            };
+            path.push(id);
+            parent = Some(id);
+        }
+        (path, created)
+    }
+
+    /// Pin every node on `path` (a lane is attached at or registered
+    /// below them): pinned nodes never evict, so pages a live lane reads
+    /// stay resident without any ownership juggling.
+    pub fn pin(&mut self, path: &[usize]) {
+        for &id in path {
+            self.nodes[id].as_mut().expect("pin of an evicted node").pins += 1;
+        }
+    }
+
+    /// Drop a lane's pins (on retirement or cancellation).
+    pub fn unpin(&mut self, path: &[usize]) {
+        for &id in path {
+            let n = self.nodes[id].as_mut().expect("unpin of an evicted node");
+            debug_assert!(n.pins > 0);
+            n.pins -= 1;
+        }
+    }
+
+    /// Give back at least `min_pages` pages (or everything evictable):
+    /// repeatedly remove the unpinned *leaf* with the smallest
+    /// (attention mass, last touch), collecting its column ids.  Returns
+    /// the released columns — the caller forwards them to
+    /// `PagedKvStore::release_cols` and shrinks `KvManager::cache_pages`
+    /// by `cols.len()` (one page per column).
+    pub fn evict(&mut self, min_pages: usize) -> Vec<usize> {
+        let mut released = Vec::new();
+        while released.len() < min_pages {
+            let victim = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+                .filter(|(_, n)| n.pins == 0 && n.children.is_empty())
+                .min_by_key(|(_, n)| (n.mass(), n.last_touch))
+                .map(|(id, _)| id);
+            let Some(id) = victim else { break };
+            let node = self.nodes[id].take().unwrap();
+            self.free.push(id);
+            match node.parent {
+                Some(p) => {
+                    if let Some(parent) = self.nodes[p].as_mut() {
+                        parent.children.retain(|&c| c != id);
+                    }
+                }
+                None => self.roots.retain(|&c| c != id),
+            }
+            released.extend(node.cols);
+        }
+        released
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cols_for(block_idx: usize, ppb: usize) -> Vec<usize> {
+        (0..ppb).map(|p| block_idx * ppb + p + 100).collect()
+    }
+
+    #[test]
+    fn block_must_align_to_pages() {
+        assert!(PrefixCache::new(0).is_err());
+        assert!(PrefixCache::new(20).is_err());
+        assert!(PrefixCache::new(PAGE_TOKENS).is_ok());
+        assert!(PrefixCache::new(2 * PAGE_TOKENS).is_ok());
+    }
+
+    #[test]
+    fn insert_then_lookup_walks_shared_path() {
+        let mut trie = PrefixCache::new(16).unwrap();
+        let ppb = trie.pages_per_block();
+        let prompt: Vec<i32> = (0..40).collect();
+        // 40 tokens cache floor(40/16) = 2 blocks.
+        let (path, created) = trie.insert(&prompt, 2, |i| cols_for(i, ppb));
+        assert_eq!((path.len(), created), (2, 2));
+        assert_eq!(trie.cached_pages(), 2 * ppb);
+        // Same prompt again: nothing new is created.
+        let (path2, created2) = trie.insert(&prompt, 2, |_| unreachable!("no new blocks"));
+        assert_eq!((path2, created2), (path.clone(), 0));
+        // A prompt sharing one block diverges after it.
+        let mut other = prompt.clone();
+        other[20] = 999;
+        let (path3, created3) = trie.insert(&other, 2, |i| cols_for(10 + i, ppb));
+        assert_eq!(created3, 1);
+        assert_eq!(path3[0], path[0], "first block shared");
+        assert_ne!(path3[1], path[1]);
+        // Lookup returns the concatenated columns, capped by max_tokens.
+        let m = trie.lookup(&prompt, 39);
+        assert_eq!(m.tokens, 32);
+        assert_eq!(m.path, path);
+        assert_eq!(m.cols, [cols_for(0, ppb), cols_for(1, ppb)].concat());
+        let capped = trie.lookup(&prompt, 20);
+        assert_eq!(capped.tokens, 16, "cap keeps at least one block un-attached");
+        assert_eq!(trie.peek_match(&prompt, 39), 32);
+        assert_eq!(trie.stats(), (2, 0));
+        let miss = trie.lookup(&[7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7, 7], 15);
+        assert_eq!(miss.tokens, 0);
+        assert_eq!(trie.stats(), (2, 1));
+    }
+
+    #[test]
+    fn eviction_takes_cold_unpinned_leaves_first() {
+        let mut trie = PrefixCache::new(16).unwrap();
+        let ppb = trie.pages_per_block();
+        let hot: Vec<i32> = (0..32).collect();
+        let cold: Vec<i32> = (1000..1032).collect();
+        trie.insert(&hot, 2, |i| cols_for(i, ppb));
+        trie.insert(&cold, 2, |i| cols_for(10 + i, ppb));
+        // Heat up the full hot path: its mass grows with hits.
+        for _ in 0..3 {
+            trie.lookup(&hot, 32);
+        }
+        // Pin the hot path like an attached lane would.
+        let m = trie.lookup(&hot, 32);
+        assert_eq!(m.tokens, 32);
+        let hot_path = m.path.clone();
+        trie.pin(&hot_path);
+        // Ask for one page: the cold *leaf* goes first (deepest block of
+        // the cold chain), never the pinned hot chain.
+        let out = trie.evict(1);
+        assert_eq!(out, cols_for(11, ppb));
+        assert_eq!(trie.cached_pages(), 3 * ppb);
+        // Asking for everything evictable spares only the pinned chain.
+        let out = trie.evict(usize::MAX);
+        assert_eq!(out, cols_for(10, ppb));
+        assert_eq!(trie.cached_pages(), 2 * ppb);
+        // Unpin: now the interior block falls only after its child.
+        trie.unpin(&hot_path);
+        let out = trie.evict(usize::MAX);
+        assert_eq!(out, [cols_for(1, ppb), cols_for(0, ppb)].concat());
+        assert!(trie.is_empty());
+        // Evicting an empty trie yields nothing (and does not loop).
+        assert!(trie.evict(1).is_empty());
+    }
+
+    #[test]
+    fn chain_hashes_are_prefix_stable() {
+        let a: Vec<i32> = (0..64).collect();
+        let mut b = a.clone();
+        b[40] = -1;
+        let (ha, hb) = (chain_hashes(&a, 16), chain_hashes(&b, 16));
+        assert_eq!(ha.len(), 4);
+        assert_eq!(ha[..2], hb[..2], "shared prefix hashes agree");
+        assert_ne!(ha[2], hb[2], "divergence changes every later hash");
+        assert_ne!(ha[3], hb[3]);
+        // Truncation is a prefix of the full chain.
+        assert_eq!(chain_hashes(&a[..32], 16), ha[..2]);
+        assert!(chain_hashes(&a[..15], 16).is_empty());
+    }
+}

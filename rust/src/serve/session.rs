@@ -85,6 +85,9 @@ pub struct Session {
     /// engine steps this request's prefill occupied (the TTFT driver
     /// chunked prefill exists to shrink).
     prefill_steps: usize,
+    /// Prompt tokens attached from the prefix cache at admission (the
+    /// cursor started there instead of 0).
+    attached: usize,
     /// `(row position, token)` pairs sampled by the most recent observe
     /// call — empty when that step only consumed prompt, one pair for a
     /// vanilla decode step, up to K pairs for a verify step that accepted
@@ -124,12 +127,32 @@ impl Session {
             stopped: false,
             steps: 0,
             prefill_steps: 0,
+            attached: 0,
             sampled: Vec::new(),
             spec: SpecState::Idle,
             draft_len: 0,
             draft_max: 0,
             spec_adaptive: false,
         }
+    }
+
+    /// Attach a cached prefix: the first `tokens` prompt positions are
+    /// already in this lane's KV pages (mapped from the prefix cache), so
+    /// the cursor jumps past them — prefill starts at the first uncached
+    /// token.  Must run before any step (`cursor == 0`) and must leave at
+    /// least one prompt token to feed: the step that consumes the last
+    /// prompt token is the one that produces the first logits, so a fully
+    /// cached prompt still prefills its final token.
+    pub fn attach_prefix(&mut self, tokens: usize) {
+        debug_assert_eq!(self.cursor, 0, "attach_prefix after stepping");
+        debug_assert!(tokens < self.prompt_len, "at least one prompt token must prefill");
+        self.cursor = tokens;
+        self.attached = tokens;
+    }
+
+    /// Prompt tokens attached from the prefix cache (0 = cold prefill).
+    pub fn attached(&self) -> usize {
+        self.attached
     }
 
     /// Turn on self-speculative decoding for this session: rounds start at
@@ -634,6 +657,34 @@ mod tests {
         s.observe_slab(2, &logits_from(&mut rng), now);
         // Mid-row: re-feeds the last consumed pair.
         assert_eq!(s.pad_pair(), (6, 1));
+    }
+
+    #[test]
+    fn attach_prefix_skips_cached_prompt_positions() {
+        let now = Instant::now();
+        let prompt: Vec<i32> = (0..40).collect();
+        let mut s = Session::new(req(1, prompt.clone(), 2, SamplingParams::greedy()), 0, 64, now);
+        s.attach_prefix(32);
+        assert_eq!(s.attached(), 32);
+        assert!(s.in_prefill());
+        // The next slab starts at the first uncached token.
+        let (slab, start) = s.next_slab(32);
+        assert_eq!((slab, start), (&prompt[32..], 32));
+        // Mid-prefill the pad pair points into the attached region — the
+        // COW store skips it as an idempotent rewrite.
+        assert_eq!(s.pad_pair(), (prompt[0], 0));
+        let mut rng = Rng::new(12);
+        assert!(!s.observe_slab(8, &logits_from(&mut rng), now));
+        assert_eq!(s.last_sampled().map(|(p, _)| p), Some(40), "one step to first token");
+        let c = {
+            let mut steps = 1;
+            while !s.observe(&logits_from(&mut rng), now) {
+                steps += 1;
+            }
+            s.finish(now, steps + 1)
+        };
+        assert_eq!(c.prefill_steps, 1, "attached prefix never occupies a step");
+        assert_eq!(&c.tokens[..40], &prompt[..]);
     }
 
     #[test]

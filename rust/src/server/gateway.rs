@@ -121,6 +121,11 @@ pub struct EngineSpec {
     /// not the first request.  The router sees the compressed cost via
     /// [`Gateway::kv_bytes_per_token`].
     pub kv_codec: KvCodecSpec,
+    /// Radix prefix cache block size in tokens
+    /// ([`Engine::with_prefix_cache`]): shared prompt prefixes prefill
+    /// once and later requests attach copy-on-write.  Stub engines only;
+    /// mutually exclusive with `speculative` — both validated at spawn.
+    pub prefix_cache_block: Option<usize>,
     /// Clock the whole gateway reads: the worker's engine (stub step
     /// delays, step timestamps, deadline expiry) and the handle's submit
     /// stamping.  Wall by default; a [`Clock::manual`] makes the gateway
@@ -139,6 +144,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            prefix_cache_block: None,
             clock: Clock::wall(),
         }
     }
@@ -159,6 +165,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            prefix_cache_block: None,
             clock: Clock::wall(),
         }
     }
@@ -173,6 +180,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            prefix_cache_block: None,
             clock: Clock::wall(),
         }
     }
@@ -193,6 +201,7 @@ impl EngineSpec {
             speculative: None,
             max_step_tokens: None,
             kv_codec: KvCodecSpec::Identity,
+            prefix_cache_block: None,
             clock,
         }
     }
@@ -221,6 +230,15 @@ impl EngineSpec {
     /// at engine construction.
     pub fn with_kv_codec(mut self, codec: KvCodecSpec) -> Self {
         self.kv_codec = codec;
+        self
+    }
+
+    /// Enable the radix prefix cache with `block`-token nodes (CLI
+    /// `--prefix-cache-block`).  Alignment and backing validation happen
+    /// in the worker at engine construction — a bad block fails the
+    /// spawn, not the first request.
+    pub fn with_prefix_cache(mut self, block: Option<usize>) -> Self {
+        self.prefix_cache_block = block;
         self
     }
 
@@ -310,6 +328,13 @@ pub struct GatewayConfig {
     /// Bounded ingress depth — the backpressure point.
     pub queue_capacity: usize,
     pub policy: BatchPolicy,
+    /// Load-shedding cap on accepted-but-not-terminal requests.  Beyond
+    /// it, `submit`/`try_submit` refuse with [`SubmitError::Overloaded`]
+    /// *before* an id or a stream is allocated — the caller sheds or
+    /// retries elsewhere instead of deepening an already-hopeless queue.
+    /// `None` (the default) keeps the classic behaviour: backpressure
+    /// only, via the bounded ingress channel.
+    pub max_pending: Option<usize>,
 }
 
 impl Default for GatewayConfig {
@@ -317,6 +342,7 @@ impl Default for GatewayConfig {
         Self {
             queue_capacity: 64,
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            max_pending: None,
         }
     }
 }
@@ -326,6 +352,10 @@ impl Default for GatewayConfig {
 pub enum SubmitError {
     /// Bounded ingress full — backpressure; retry or block with `submit`.
     Saturated,
+    /// Load shed: in-flight depth reached `GatewayConfig::max_pending`.
+    /// Refused before any state was allocated — nothing to reclaim, and
+    /// requests already accepted are unaffected.
+    Overloaded,
     /// Gateway is shutting down or its worker is gone.
     Closed,
     /// The prompt is empty.  The engine has nothing to feed such a
@@ -338,6 +368,7 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Saturated => write!(f, "gateway ingress saturated"),
+            SubmitError::Overloaded => write!(f, "gateway overloaded: queue depth cap reached"),
             SubmitError::Closed => write!(f, "gateway closed"),
             SubmitError::EmptyPrompt => write!(f, "empty prompt rejected at admission"),
         }
@@ -356,14 +387,23 @@ pub struct Ticket {
 
 /// One submission travelling the bounded ingress channel.
 pub(crate) struct Submission {
-    req: Request,
+    pub(crate) req: Request,
     deadline: Option<Instant>,
     events: mpsc::Sender<StreamEvent>,
+    /// True when this submission was reclaimed from another gateway's
+    /// queue and is entering its second engine — the receiving worker
+    /// stamps a [`SpanPoint::Migrated`] on the request's timeline.
+    migrated: bool,
 }
 
 /// Control-plane messages (unbounded channel).
 pub(crate) enum Ctrl {
     Cancel(u64),
+    /// Queue migration: surrender up to `max` *queued* requests (never
+    /// in-flight lanes) back through `reply` as resubmittable
+    /// [`Submission`]s.  The worker answers between decode steps; the
+    /// reply channel closing marks the end of the exchange.
+    Reclaim { max: usize, reply: mpsc::Sender<Submission> },
     Shutdown,
 }
 
@@ -374,6 +414,14 @@ pub struct Gateway {
     /// The draft model's rank when this gateway hosts a speculative
     /// draft+verify pair.
     draft_rank: Option<usize>,
+    /// Engine batch lanes — the router's saturation yardstick: more
+    /// in-flight requests than lanes means a real queue has formed.
+    batch_slots: usize,
+    /// The engine's prefix-cache block size, when caching is on — the
+    /// router keys its shadow prefix directory on it.
+    prefix_cache_block: Option<usize>,
+    /// Load-shedding cap ([`GatewayConfig::max_pending`]).
+    max_pending: Option<usize>,
     submit_tx: mpsc::SyncSender<Submission>,
     ctrl_tx: mpsc::Sender<Ctrl>,
     /// Shared across all gateways behind one [`super::Router`] (see
@@ -426,6 +474,8 @@ impl Gateway {
         let queued_prefill = Arc::new(AtomicUsize::new(0));
         let policy = cfg.policy.clone();
         let clock = spec.clock.clone();
+        let batch_slots = spec.batch_slots;
+        let prefix_cache_block = spec.prefix_cache_block;
         let worker_in_flight = in_flight.clone();
         let worker_queued_prefill = queued_prefill.clone();
         let worker_obs = obs.map(|o| ObsWiring::new(o, name));
@@ -439,8 +489,12 @@ impl Gateway {
                     queued_prefill: worker_queued_prefill,
                     pending_prefill: HashMap::new(),
                     streams: HashMap::new(),
+                    deadlines: HashMap::new(),
                     registry: CancelRegistry::new(),
                     backlog: Vec::new(),
+                    reclaim: None,
+                    reclaim_reply: None,
+                    clock: spec.clock.clone(),
                     obs: worker_obs,
                 };
                 // Stub engines have no runtime at all; artifact engines own
@@ -450,7 +504,8 @@ impl Gateway {
                     let built = Engine::new_stub(stub_spec.clone())
                         .with_prefill_chunk(spec.prefill_chunk)
                         .with_max_step_tokens(spec.max_step_tokens)
-                        .with_kv_codec(spec.kv_codec.clone());
+                        .with_kv_codec(spec.kv_codec.clone())
+                        .and_then(|e| e.with_prefix_cache(spec.prefix_cache_block));
                     let mut engine = match built {
                         Ok(e) => e,
                         Err(e) => {
@@ -502,7 +557,8 @@ impl Gateway {
                 let built = Engine::new(&rt, &spec.preset, &program, params).and_then(|x| {
                     x.with_prefill_chunk(spec.prefill_chunk)
                         .with_max_step_tokens(spec.max_step_tokens)
-                        .with_kv_codec(spec.kv_codec.clone())
+                        .with_kv_codec(spec.kv_codec.clone())?
+                        .with_prefix_cache(spec.prefix_cache_block)
                 });
                 let mut engine = match built {
                     Ok(x) => x,
@@ -547,6 +603,9 @@ impl Gateway {
                 rank: ready.rank,
                 kv_bytes_per_token: ready.kv_bytes_per_token,
                 draft_rank: ready.draft_rank,
+                batch_slots,
+                prefix_cache_block,
+                max_pending: cfg.max_pending,
                 submit_tx,
                 ctrl_tx,
                 next_id: Arc::new(AtomicU64::new(0)),
@@ -592,6 +651,22 @@ impl Gateway {
     /// Does this gateway host a speculative draft+verify pair?
     pub fn speculative(&self) -> bool {
         self.draft_rank.is_some()
+    }
+
+    /// Batch lanes of the engine behind this gateway.  The router treats
+    /// `in_flight() > batch_slots()` as saturation: a queue has formed.
+    pub fn batch_slots(&self) -> usize {
+        self.batch_slots
+    }
+
+    /// Block size of the engine's radix prefix cache, when enabled.
+    pub fn prefix_cache_block(&self) -> Option<usize> {
+        self.prefix_cache_block
+    }
+
+    /// The load-shedding cap, when configured.
+    pub fn max_pending(&self) -> Option<usize> {
+        self.max_pending
     }
 
     /// Requests accepted and not yet terminal (queued + decoding).
@@ -648,6 +723,16 @@ impl Gateway {
         if prompt.is_empty() {
             return Err(SubmitError::EmptyPrompt);
         }
+        // Load shedding, also before any allocation: an overloaded
+        // refusal reclaims nothing because nothing was ever claimed, and
+        // the requests already in flight never notice.  (Racing submits
+        // may briefly land one past the cap — the cap bounds queue growth,
+        // it is not an exact semaphore.)
+        if let Some(cap) = self.max_pending {
+            if self.in_flight.load(Ordering::SeqCst) >= cap {
+                return Err(SubmitError::Overloaded);
+            }
+        }
         // `join` consumes the Gateway, so a live `&self` implies the worker
         // has not been asked to shut down; a dead worker (panic/error)
         // surfaces as a disconnected channel below.
@@ -662,6 +747,7 @@ impl Gateway {
             req: Request { id, prompt, max_new, arrived: now, sampling },
             deadline: deadline.map(|d| now + d),
             events: events_tx,
+            migrated: false,
         };
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         // Counted at submit so a burst of long prompts is visible to the
@@ -686,6 +772,48 @@ impl Gateway {
             stream: RequestStream::new(id, events_rx),
             cancel: CancelToken::new(id, self.ctrl_tx.clone()),
         })
+    }
+
+    /// Queue migration, surrendering side: ask the worker for up to `max`
+    /// *queued* requests (in-flight lanes are never taken) and collect
+    /// them as resubmittable [`Submission`]s.  Blocks until the worker
+    /// closes the exchange — one decode-step latency in the common case,
+    /// bounded by a 1-second stall guard per item.  An idle or empty
+    /// engine answers with nothing.
+    pub(crate) fn reclaim_queued(&self, max: usize) -> Vec<Submission> {
+        let (reply, rx) = mpsc::channel();
+        if max == 0 || self.ctrl_tx.send(Ctrl::Reclaim { max, reply }).is_err() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        while out.len() < max {
+            match rx.recv_timeout(Duration::from_secs(1)) {
+                Ok(sub) => out.push(sub),
+                Err(_) => break, // exchange closed (or the worker stalled)
+            }
+        }
+        out
+    }
+
+    /// Queue migration, receiving side: hand a reclaimed submission to
+    /// this gateway's engine.  The submission keeps its fleet-unique id,
+    /// its client stream, and its deadline — only the serving engine
+    /// changes.  Blocks on the bounded ingress like `submit`; the
+    /// load-shedding cap is *not* applied (the router only migrates
+    /// toward spare capacity, and refusing here would strand the client's
+    /// stream).
+    pub(crate) fn resubmit(&self, mut sub: Submission) -> std::result::Result<(), SubmitError> {
+        sub.migrated = true;
+        let prompt_len = sub.req.prompt.len();
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.queued_prefill.fetch_add(prompt_len, Ordering::SeqCst);
+        if self.submit_tx.send(sub).is_err() {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            self.queued_prefill.fetch_sub(prompt_len, Ordering::SeqCst);
+            return Err(SubmitError::Closed);
+        }
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        Ok(())
     }
 
     /// Begin a graceful shutdown without waiting for it.  Idempotent;
@@ -730,6 +858,9 @@ struct GatewayHook {
     /// subtraction.
     pending_prefill: HashMap<u64, usize>,
     streams: HashMap<u64, mpsc::Sender<StreamEvent>>,
+    /// Deadline per accepted id, kept so a reclaimed request's
+    /// [`Submission`] can be rebuilt intact for its next engine.
+    deadlines: HashMap<u64, Option<Instant>>,
     registry: CancelRegistry,
     /// Submissions accepted but not yet handed to the engine (filled by
     /// control-channel draining outside `poll_ingress`).  Their ids are
@@ -737,6 +868,14 @@ struct GatewayHook {
     /// cancellation surfaced for an id the engine cannot see in a lane or
     /// its batcher would be silently dropped by the step loop.
     backlog: Vec<(Request, Option<Instant>)>,
+    /// A pending [`Ctrl::Reclaim`] exchange, parked until the engine's
+    /// next `reclaim_requests` poll.
+    reclaim: Option<(usize, mpsc::Sender<Submission>)>,
+    /// The live exchange's reply channel; dropped at the *next* poll,
+    /// which is what tells the coordinator the exchange is over.
+    reclaim_reply: Option<mpsc::Sender<Submission>>,
+    /// The gateway's clock — stamps the `Migrated` span on arrivals.
+    clock: Clock,
     /// Observability sinks plus this gateway's pre-rendered series names
     /// (`None` for a tap-less gateway — the engine then skips event
     /// assembly entirely via `wants_step_events`).
@@ -758,8 +897,16 @@ struct ObsWiring {
     s_drafted_total: String,
     s_accepted_total: String,
     s_accept_rate: String,
+    s_prefix_hits_total: String,
+    s_prefix_hit_tokens_total: String,
+    s_prefix_cached_bytes: String,
+    s_prefix_evicted_total: String,
+    s_migrated_total: String,
     drafted: u64,
     accepted: u64,
+    /// Last seen cumulative eviction total — the step event carries a
+    /// running sum, the registry counter wants deltas.
+    evicted_seen: usize,
 }
 
 impl ObsWiring {
@@ -777,8 +924,14 @@ impl ObsWiring {
             s_drafted_total: s("clover_draft_tokens_total"),
             s_accepted_total: s("clover_accepted_tokens_total"),
             s_accept_rate: s("clover_accept_rate"),
+            s_prefix_hits_total: s("clover_prefix_hits_total"),
+            s_prefix_hit_tokens_total: s("clover_prefix_hit_tokens_total"),
+            s_prefix_cached_bytes: s("clover_prefix_cached_bytes"),
+            s_prefix_evicted_total: s("clover_prefix_evicted_bytes_total"),
+            s_migrated_total: s("clover_migrated_total"),
             drafted: 0,
             accepted: 0,
+            evicted_seen: 0,
         }
     }
 }
@@ -812,8 +965,22 @@ impl GatewayHook {
     /// fires from the registry right after hand-off — so the engine's
     /// metrics and conservation checks account for all of them.
     fn accept(&mut self, sub: Submission) {
+        if sub.migrated {
+            // This request's queue wait started on another gateway: stamp
+            // the hand-over on its timeline and count the arrival.
+            if let Some(w) = &self.obs {
+                w.obs.registry.counter_add(&w.s_migrated_total, 1.0);
+                let ev = SpanEvent {
+                    id: sub.req.id,
+                    t_s: self.clock.secs_since_epoch(self.clock.now()),
+                    point: SpanPoint::Migrated,
+                };
+                w.obs.trace.lock().unwrap_or_else(|e| e.into_inner()).record_span(&ev);
+            }
+        }
         self.streams.insert(sub.req.id, sub.events);
         self.pending_prefill.insert(sub.req.id, sub.req.prompt.len());
+        self.deadlines.insert(sub.req.id, sub.deadline);
         self.backlog.push((sub.req, sub.deadline));
     }
 
@@ -831,6 +998,10 @@ impl GatewayHook {
         loop {
             match self.ctrl_rx.try_recv() {
                 Ok(Ctrl::Cancel(id)) => self.registry.cancel(id),
+                // Parked for the engine's next reclaim_requests poll; a
+                // newer exchange supersedes an unserved older one (whose
+                // reply channel drops here, unblocking its coordinator).
+                Ok(Ctrl::Reclaim { max, reply }) => self.reclaim = Some((max, reply)),
                 Ok(Ctrl::Shutdown) => self.close_ingress(),
                 Err(_) => break, // empty or disconnected: nothing more now
             }
@@ -882,6 +1053,7 @@ impl GatewayHook {
     fn terminal(&mut self, id: u64, ev: StreamEvent) {
         self.registry.retire(id);
         self.prefill_done(id);
+        self.deadlines.remove(&id);
         if let Some(tx) = self.streams.remove(&id) {
             let _ = tx.send(ev);
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
@@ -906,6 +1078,12 @@ impl StepHook for GatewayHook {
                     Err(mpsc::RecvTimeoutError::Timeout) => self.drain_ctrl(),
                     Err(mpsc::RecvTimeoutError::Disconnected) => self.submit_rx = None,
                 }
+                // A reclaim landing while fully idle has nothing to take
+                // (idle means the batcher is empty): close the exchange
+                // now so the coordinator isn't left waiting for the next
+                // decode step that may never come.
+                self.reclaim = None;
+                self.reclaim_reply = None;
             }
         }
         if self.backlog.is_empty() && self.submit_rx.is_none() {
@@ -928,6 +1106,36 @@ impl StepHook for GatewayHook {
         // ingress closed, so the control channel is polled here too.
         self.drain_ctrl();
         self.registry.due(now)
+    }
+
+    fn reclaim_requests(&mut self) -> Option<usize> {
+        // Dropping the previous exchange's reply sender is the
+        // end-of-exchange signal: the coordinator's recv disconnects.
+        self.reclaim_reply = None;
+        let (max, reply) = self.reclaim.take()?;
+        self.reclaim_reply = Some(reply);
+        Some(max)
+    }
+
+    fn on_reclaimed(&mut self, req: Request) {
+        // The request leaves this gateway: return its prompt tokens to
+        // the pending-prefill gauge, close its cancel tracking, and ship
+        // the rebuilt submission — stream and deadline intact — to the
+        // coordinator.  The engine has already booked it as migrated.
+        let id = req.id;
+        let deadline = self.deadlines.remove(&id).flatten();
+        self.registry.retire(id);
+        if let Some(n) = self.pending_prefill.remove(&id) {
+            self.queued_prefill.fetch_sub(n, Ordering::SeqCst);
+        }
+        let Some(events) = self.streams.remove(&id) else { return };
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        if let Some(reply) = &self.reclaim_reply {
+            // A send failure means the coordinator stopped waiting; the
+            // dropped stream sender surfaces as a disconnect to the
+            // client rather than a silent hang.
+            let _ = reply.send(Submission { req, deadline, events, migrated: true });
+        }
     }
 
     fn on_started(&mut self, id: u64, lane: usize, step: usize) {
@@ -957,10 +1165,16 @@ impl StepHook for GatewayHook {
     }
 
     fn on_step(&mut self, ev: &StepEvent) {
-        let Some(w) = &self.obs else { return };
+        let Some(w) = &mut self.obs else { return };
         let reg = &w.obs.registry;
         reg.counter_add(&w.s_steps_total, 1.0);
         reg.gauge_set(&w.s_kv_live_bytes, ev.kv_live_bytes as f64);
+        reg.gauge_set(&w.s_prefix_cached_bytes, ev.kv_cached_bytes as f64);
+        if ev.prefix_evicted_bytes > w.evicted_seen {
+            let delta = ev.prefix_evicted_bytes - w.evicted_seen;
+            reg.counter_add(&w.s_prefix_evicted_total, delta as f64);
+            w.evicted_seen = ev.prefix_evicted_bytes;
+        }
         w.obs.trace.lock().unwrap_or_else(|e| e.into_inner()).record_step(ev);
         self.publish_queue_gauges();
     }
@@ -980,6 +1194,10 @@ impl StepHook for GatewayHook {
                 reg.counter_add(&w.s_drafted_total, drafted as f64);
                 reg.counter_add(&w.s_accepted_total, accepted as f64);
                 reg.gauge_set(&w.s_accept_rate, w.accepted as f64 / w.drafted.max(1) as f64);
+            }
+            SpanPoint::PrefixHit { tokens } => {
+                reg.counter_add(&w.s_prefix_hits_total, 1.0);
+                reg.counter_add(&w.s_prefix_hit_tokens_total, tokens as f64);
             }
             _ => {}
         }
@@ -1486,5 +1704,181 @@ mod tests {
         }
         let m = gw.join().unwrap();
         assert!(m.completed >= 1);
+    }
+
+    /// Load-shedding regression: a submit refused with `Overloaded`
+    /// reclaims nothing — no id, no stream, no counter movement — and
+    /// the requests already in flight complete untouched.  Once the
+    /// backlog drains below the cap, submits are accepted again.
+    #[test]
+    fn overloaded_submit_reclaims_nothing_in_flight_unaffected() {
+        let gw = Gateway::spawn(
+            "shed",
+            GatewayConfig { max_pending: Some(2), ..Default::default() },
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        assert_eq!(gw.max_pending(), Some(2));
+        let a = gw.submit((0..32).collect(), 2, SamplingParams::greedy(), None).unwrap();
+        let b = gw.submit((0..32).collect(), 2, SamplingParams::greedy(), None).unwrap();
+        assert_eq!(gw.in_flight(), 2);
+        let depth_before = gw.queued_prefill_tokens();
+        assert_eq!(
+            gw.submit(vec![1, 2], 2, SamplingParams::greedy(), None).err(),
+            Some(SubmitError::Overloaded)
+        );
+        assert_eq!(
+            gw.try_submit(vec![1, 2], 2, SamplingParams::greedy(), None).err(),
+            Some(SubmitError::Overloaded),
+            "try_submit sheds identically"
+        );
+        assert_eq!(gw.in_flight(), 2, "refusals leave in-flight requests alone");
+        assert_eq!(gw.queued_prefill_tokens(), depth_before, "...and the prefill gauge");
+        assert_eq!((a.id, b.id), (0, 1));
+        assert!(a.stream.wait().unwrap().is_done());
+        assert!(b.stream.wait().unwrap().is_done());
+        // Below the cap again: accepted, with the id dense after the
+        // refusals (they allocated nothing).
+        let c = gw.submit(vec![1], 1, SamplingParams::greedy(), None).unwrap();
+        assert_eq!(c.id, 2, "refused submits burned no ids");
+        assert!(c.stream.wait().unwrap().is_done());
+        let m = gw.join().unwrap();
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.migrated, 0, "shedding reclaims nothing from the queue");
+    }
+
+    /// Queue migration round-trip: a reclaim sweep on a busy gateway
+    /// surrenders exactly its *queued* request — never the in-flight lane
+    /// — and resubmitting it to a second gateway completes the client's
+    /// original stream, with both engines' metrics conserving the move.
+    #[test]
+    fn reclaimed_queued_request_resubmits_and_completes_elsewhere() {
+        let a = Gateway::spawn(
+            "mig-a",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        let mut b = Gateway::spawn(
+            "mig-b",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        // Fleet-unique ids, as a router would arrange them.
+        b.share_id_counter(a.next_id.clone());
+        let p0: Vec<i32> = (0..96).map(|i| i % 32).collect();
+        let t0 = a.submit(p0, 8, SamplingParams::greedy(), None).unwrap();
+        loop {
+            match t0.stream.next_event() {
+                Some(StreamEvent::Started { .. }) => break,
+                Some(_) => continue,
+                None => panic!("stream closed before Started"),
+            }
+        }
+        // t0 holds gateway A's only lane (a 96-step slow prefill); t1
+        // must wait in the queue — reclaimable.  Retry the sweep until
+        // the worker has ingressed t1: a reclaim that races ahead of the
+        // ingress drain legitimately comes back empty.
+        let t1 = a.submit((0..16).collect(), 2, SamplingParams::greedy(), None).unwrap();
+        let mut subs = Vec::new();
+        for _ in 0..50 {
+            subs = a.reclaim_queued(4);
+            if !subs.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(subs.len(), 1, "only the queued request is surrendered");
+        assert_eq!(subs[0].req.id, t1.id);
+        assert_eq!(a.in_flight(), 1, "the in-flight request stays put");
+        for sub in subs {
+            b.resubmit(sub).unwrap();
+        }
+        assert!(t1.stream.wait().unwrap().is_done(), "the migrated stream completes on B");
+        assert!(t0.stream.wait().unwrap().is_done());
+        let ma = a.join().unwrap();
+        let mb = b.join().unwrap();
+        assert_eq!((ma.completed, ma.migrated), (1, 1), "A: one served, one surrendered");
+        assert_eq!((mb.completed, mb.migrated), (1, 0), "B: the migrant completed");
+        // An idle gateway's reclaim comes back empty, promptly.
+        let idle = Gateway::spawn(
+            "mig-idle",
+            GatewayConfig::default(),
+            EngineSpec::stub(prefill_stub_spec()),
+        )
+        .unwrap();
+        assert!(idle.reclaim_queued(4).is_empty());
+        idle.join().unwrap();
+    }
+
+    /// The prefix cache through the full gateway stack: an exact repeat
+    /// of a served prompt hits, the completion tokens are bit-identical,
+    /// and the hit/cached-bytes series land in the shared registry.
+    #[test]
+    fn prefix_cache_gateway_hits_and_publishes_metrics() {
+        let obs = Obs::default();
+        let spec = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            batch_slots: 1,
+            ..Default::default()
+        };
+        let gw = Gateway::spawn_with_obs(
+            "pfx",
+            GatewayConfig::default(),
+            EngineSpec::stub(spec).with_prefix_cache(Some(32)),
+            Some(obs.clone()),
+        )
+        .unwrap();
+        assert_eq!(gw.prefix_cache_block(), Some(32));
+        let prompt: Vec<i32> = (0..64).map(|i| i % 16).collect();
+        let t0 = gw.submit(prompt.clone(), 4, SamplingParams::greedy(), None).unwrap();
+        let c0 = t0.stream.wait().unwrap().completion().unwrap();
+        let t1 = gw.submit(prompt.clone(), 4, SamplingParams::greedy(), None).unwrap();
+        let c1 = t1.stream.wait().unwrap().completion().unwrap();
+        assert_eq!(c0.tokens, c1.tokens, "a cache hit changes the schedule, never the tokens");
+        gw.join().unwrap();
+        let reg = &obs.registry;
+        assert_eq!(reg.get("clover_prefix_hits_total{gateway=\"pfx\"}"), Some(1.0));
+        assert_eq!(reg.get("clover_prefix_hit_tokens_total{gateway=\"pfx\"}"), Some(32.0));
+        // Request 0's donated 64-token prompt: 4 pages resident at
+        // 2·L·H·r·4 = 128 B/token × 16 = 2048 B each.
+        assert_eq!(reg.get("clover_prefix_cached_bytes{gateway=\"pfx\"}"), Some(8192.0));
+        let sink = obs.trace.lock().unwrap();
+        let hit_span = sink.spans().find(|s| s.id == t1.id).expect("span for the hit");
+        assert_eq!(hit_span.prefix_hit_tokens, Some(32));
+    }
+
+    /// Prefix caching and a speculative draft pair are mutually exclusive
+    /// on one engine — the combination fails the spawn, not the first
+    /// request.
+    #[test]
+    fn prefix_cache_plus_speculative_fails_spawn() {
+        let target = StubSpec {
+            n_layers: 1,
+            n_heads: 2,
+            rank: 8,
+            vocab: 16,
+            max_positions: 128,
+            ..Default::default()
+        };
+        let draft = StubSpec { rank: 4, ..target.clone() };
+        let err = Gateway::spawn(
+            "pfx-spec",
+            GatewayConfig::default(),
+            EngineSpec::stub(target)
+                .with_prefix_cache(Some(32))
+                .with_speculative(
+                    DraftSource::Stub(draft),
+                    SpecConfig { draft_len: 4, adaptive: true },
+                ),
+        )
+        .err()
+        .expect("prefix cache + speculative pair must be refused");
+        assert!(err.to_string().contains("mutually exclusive"), "{err:#}");
     }
 }

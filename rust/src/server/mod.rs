@@ -25,14 +25,18 @@
 //!   and the [`CancelRegistry`] the gateway keeps them in; the engine
 //!   retires cancelled sessions between decode steps, freeing their KV
 //!   lane for the next waiter without skipping a step.
-//! * [`router`] — rank-aware dispatch across several gateways (e.g. dense
-//!   / r=8 / r=4).  Each request goes to the gateway minimizing
-//!   `(in_flight + 1 + queued_prefill_tokens) ×
-//!   KvConfig::bytes_per_token`: pending prefill is weighted in *tokens*
-//!   (a 512-token prompt is 256× the work of a 2-token one), and pruning
-//!   rank shrinks per-token KV cost by r/d, so pruned engines absorb
-//!   proportionally more of the queue before costing as much as their
-//!   dense sibling.
+//! * [`router`] — the fleet scheduler: rank-aware dispatch across several
+//!   gateways (e.g. dense / r=8 / r=4).  Each request goes to the gateway
+//!   minimizing `(in_flight + 1 + queued_prefill_tokens + fresh_prompt_tokens)
+//!   × KvConfig::bytes_per_token`: pending prefill is weighted in *tokens*
+//!   (a 512-token prompt is 256× the work of a 2-token one), pruning
+//!   rank shrinks per-token KV cost by r/d, and a prompt's
+//!   `fresh_prompt_tokens` are discounted by the prefix its shadow
+//!   directory says a gateway already caches ([`Router::pick_for`]).  On
+//!   top of placement: queued-request migration off saturated engines
+//!   ([`Router::rebalance`]), interactive-vs-batch degradation
+//!   ([`Router::submit_classed`], [`TrafficClass`]), and load shedding
+//!   ([`SubmitError::Overloaded`] at `GatewayConfig::max_pending`).
 //!
 //! Engines behind a gateway run the chunked-prefill slab API by default
 //! (cap it per engine with [`EngineSpec::with_prefill_chunk`]); a
@@ -60,5 +64,5 @@ pub use gateway::{
     DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, ParamSource, SpecSpec, SubmitError,
     Ticket,
 };
-pub use router::Router;
+pub use router::{Router, TrafficClass};
 pub use stream::{RequestStream, StreamEvent, StreamOutcome, TryNext};

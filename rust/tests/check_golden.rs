@@ -190,4 +190,75 @@ fn engine_spec_combinations_fire_stable_codes() {
     };
     let r = check_spec(&clean_speculative_pair);
     assert!(r.is_empty(), "legal combination flagged:\n{}", r.render_text());
+
+    // Scheduler-v2 prefix-cache flags (tiny fixture: 16-token pages at
+    // 4096 B, ladder [8], 64-token window → full-window worst 16384 B).
+    let prefix_block_misaligned = ServeSpec {
+        prefix_cache_block: Some(24), // 24 % 16 != 0, though ladder rung 8 tiles it
+        kv_memory_budget: Some(16_384),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&prefix_block_misaligned)), ["CLV034"]);
+
+    let prefix_beside_speculative = ServeSpec {
+        prefix_cache_block: Some(32),
+        speculative: Some((4, clover::serve::SpecConfig { draft_len: 4, adaptive: true })),
+        kv_memory_budget: Some(1_000_000),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&prefix_beside_speculative)), ["CLV035"]);
+
+    let prefix_without_budget =
+        ServeSpec { prefix_cache_block: Some(32), ..Default::default() };
+    let r = check_spec(&prefix_without_budget);
+    assert_eq!(codes(&r), ["CLV036"]);
+    assert!(!r.has_errors(), "CLV036 is a warning, not an error");
+
+    // Budget holds one resident page (no CLV029) but not one cached
+    // 2-page block (8192 B) nor a full window — CLV030 + CLV036 co-fire.
+    let prefix_budget_below_block = ServeSpec {
+        prefix_cache_block: Some(32),
+        kv_memory_budget: Some(4_096),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&prefix_budget_below_block)), ["CLV030", "CLV036"]);
+
+    let clean_prefix_cache = ServeSpec {
+        prefix_cache_block: Some(32),
+        kv_memory_budget: Some(16_384),
+        ..Default::default()
+    };
+    let r = check_spec(&clean_prefix_cache);
+    assert!(r.is_empty(), "legal prefix-cache flags flagged:\n{}", r.render_text());
+}
+
+/// Seeded-bad scheduler-flag combinations pinned as golden fixtures, like
+/// the manifest/bench corpus: the compact `CODE severity locus` form keeps
+/// the CLV034–CLV036 wiring stable under message rewording.
+#[test]
+fn prefix_scheduler_flag_fixtures_match_goldens() {
+    let m = Manifest::load(fixtures().join("good")).unwrap();
+    let cases: [(&str, ServeSpec); 2] = [
+        (
+            "bad_prefix_flags",
+            ServeSpec {
+                prefix_cache_block: Some(24),
+                speculative: Some((4, clover::serve::SpecConfig { draft_len: 4, adaptive: true })),
+                ..Default::default()
+            },
+        ),
+        (
+            "warn_prefix_budget",
+            ServeSpec {
+                prefix_cache_block: Some(32),
+                kv_memory_budget: Some(4_096),
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, spec) in cases {
+        let mut report = Report::new();
+        check::check_engine_spec(&mut report, &m, &spec, "<flags>");
+        assert_golden(&mut report, &fixtures().join(format!("{name}.expected")));
+    }
 }

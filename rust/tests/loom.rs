@@ -11,6 +11,11 @@
 //! 3. **Speculative rollback vs slot free** — a rejected draft's rollback
 //!    on one slot must not disturb a concurrent free of another slot;
 //!    pages never resurrect, accounting never goes negative.
+//! 4. **COW refcount decrement vs lane free** — prefix-cache eviction
+//!    dropping its pins races the attached lane zeroing its table
+//!    entries; every column is decremented exactly once per holder, frees
+//!    exactly when the last reference lets go, and never resurrects
+//!    (`serve/kv.rs`, `serve/prefix.rs`).
 //!
 //! With `--features loom` the shared state uses the loom types through
 //! [`clover::util::sync`] and `loom::model` drives schedule exploration
@@ -22,7 +27,7 @@
 
 use std::time::Instant;
 
-use clover::serve::{KvCodecSpec, KvConfig, KvManager, PAGE_TOKENS};
+use clover::serve::{KvCodecSpec, KvConfig, KvManager, PagedKvStore, PAGE_TOKENS};
 use clover::server::CancelRegistry;
 use clover::util::sync::{thread, Arc, Mutex};
 
@@ -159,5 +164,61 @@ fn speculative_rollback_vs_slot_free_is_isolated() {
         assert_eq!(kv.live_pages(), 1, "one page for the rolled-back slot, none resurrected");
         assert_eq!(kv.free_slots(), 1, "slot B stays free");
         assert_eq!(kv.live_bytes(), kv.config().bytes_per_page());
+    });
+}
+
+/// Protocol 4: the prefix cache evicting its pins while the attached lane
+/// frees.  Setup mirrors the engine: lane 0 prefilled two pages, the
+/// cache pinned them (`share_prefix`), lane 1 attached them COW
+/// (`attach_prefix`) — each column holds three references.  Eviction
+/// (`release_cols`) and lane churn (`zero_lane`) then land in either
+/// order; the columns must survive on exactly the donor's reference, free
+/// exactly once when the donor lets go, and never resurrect.
+#[test]
+fn cow_refcount_decrement_vs_lane_free_frees_exactly_once() {
+    model(|| {
+        let codec = KvCodecSpec::Identity.build(2, 4).unwrap();
+        let mut init = PagedKvStore::new(2, 2, 2, 2 * PAGE_TOKENS, 2, codec);
+        init.write_vec(0, 0, 0, 0, 0, &[1.0, 2.0, 3.0, 4.0]); // donor prefill
+        init.write_vec(0, 0, 0, 0, PAGE_TOKENS, &[5.0, 6.0, 7.0, 8.0]);
+        let cols = init.share_prefix(0, 2); // cache pins: refs 2 + 2
+        init.attach_prefix(1, &cols).unwrap(); // hit lane: refs 3 + 3
+        let store = Arc::new(Mutex::new(init));
+
+        // LRU eviction under memory pressure drops the cache's pins...
+        let evictor = {
+            let store = Arc::clone(&store);
+            let cols = cols.clone();
+            thread::spawn(move || lock(&store).release_cols(&cols))
+        };
+        // ...while the attached request cancels mid-prefill and its lane
+        // zeroes — the exact race the engine runs between decode steps.
+        let laner = {
+            let store = Arc::clone(&store);
+            thread::spawn(move || lock(&store).zero_lane(1))
+        };
+        evictor.join().unwrap();
+        laner.join().unwrap();
+
+        {
+            let store = lock(&store);
+            for &c in &cols {
+                assert_eq!(store.col_refs(c), 1, "only the donor lane still holds column {c}");
+            }
+            assert_eq!(store.live_columns(), 2, "both pages survive on the donor's reference");
+        }
+        // The donor retires last: every column frees now, and a stale
+        // attach on the freed ids must refuse — no resurrection.
+        let mut store = lock(&store);
+        store.zero_lane(0);
+        for &c in &cols {
+            assert_eq!(store.col_refs(c), 0, "column {c} freed with its last reference");
+        }
+        assert_eq!(store.live_columns(), 0, "nothing resurrected");
+        assert_eq!(store.stored_bytes(), 0, "all buffers returned");
+        assert!(
+            store.attach_prefix(1, &cols).is_err(),
+            "attaching freed columns must refuse, not resurrect"
+        );
     });
 }

@@ -64,7 +64,8 @@ def require(doc, keys, path="$"):
 
 def check_serve(doc):
     yield from require(doc, ["bench", "preset", "prefill", "speculative", "kv_codec",
-                             "layer_budgets", "obs", "engines", "pjrt_skipped"])
+                             "layer_budgets", "obs", "prefix_cache", "engines",
+                             "pjrt_skipped"])
     prefill = doc.get("prefill", {})
     yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
                        "$.prefill")
@@ -207,6 +208,57 @@ def check_serve(doc):
         yield (f"$.obs.gateway: registry counters {gw.get('registry_completed')!r}/"
                f"{gw.get('registry_generated_tokens')!r} disagree with the engine's "
                f"{gw.get('completed')!r}/{gw.get('generated_tokens')!r}")
+    pc = doc.get("prefix_cache", {})
+    yield from require(
+        pc,
+        ["backend", "mix", "requests", "prompt_tokens", "block", "memory_budget_bytes",
+         "sweep", "tight_budget"],
+        "$.prefix_cache")
+    pc_sweep = pc.get("sweep", [])
+    if not pc_sweep:
+        yield "$.prefix_cache.sweep: empty — the share sweep was not benched"
+    prev_on = None
+    for i, row in enumerate(pc_sweep):
+        yield from require(
+            row,
+            ["share", "hot_requests", "prefix_hits", "prefix_hit_tokens",
+             "ttft_mean_cache_on_s", "ttft_mean_cache_off_s", "tokens_per_s_cache_on",
+             "tokens_per_s_cache_off", "cached_bytes", "evicted_bytes",
+             "bit_identical_to_cold"],
+            f"$.prefix_cache.sweep[{i}]")
+        if not row.get("bit_identical_to_cold", False):
+            yield (f"$.prefix_cache.sweep[{i}]: cached serve diverged from the cold "
+                   "prefill trace — the bit-identity invariant is broken")
+        share = _metric(row, "share")
+        on = _metric(row, "ttft_mean_cache_on_s")
+        off = _metric(row, "ttft_mean_cache_off_s")
+        # The acceptance bar: at share >= 0.5 the cache must win TTFT
+        # outright at the same memory budget.
+        if share is not None and share >= 0.5 and on is not None and off is not None \
+                and on >= off:
+            yield (f"$.prefix_cache.sweep[{i}]: cache-on mean TTFT {on:g}s >= "
+                   f"cache-off {off:g}s at share {share:g} — the prefix cache "
+                   "is not paying")
+        # And monotone: raising the share at fixed memory never hurts TTFT
+        # (virtual-time stub, so this is deterministic, not noise).
+        if on is not None and prev_on is not None and on > prev_on + 1e-9:
+            yield (f"$.prefix_cache.sweep[{i}]: cache-on mean TTFT {on:g}s rose "
+                   f"above the previous share's {prev_on:g}s — TTFT must improve "
+                   "monotonically with the prefix share")
+        if on is not None:
+            prev_on = on
+    tight = pc.get("tight_budget", {})
+    yield from require(
+        tight, ["share", "memory_budget_bytes", "evicted_bytes", "bit_identical_to_cold"],
+        "$.prefix_cache.tight_budget")
+    ev = _metric(tight, "evicted_bytes")
+    if tight and (ev is None or ev <= 0):
+        yield (f"$.prefix_cache.tight_budget: evicted_bytes "
+               f"{tight.get('evicted_bytes')!r} not > 0 — the tight budget never "
+               "forced an eviction")
+    if tight and not tight.get("bit_identical_to_cold", False):
+        yield ("$.prefix_cache.tight_budget: eviction under pressure broke "
+               "bit-identity to the cold trace")
     if not doc.get("pjrt_skipped", True):
         for i, eng in enumerate(doc.get("engines", [])):
             yield from require(
@@ -333,13 +385,17 @@ BASELINE_SECTIONS = [
     ("prefill", "chunks", "chunk"),
     ("speculative", "sweep", "draft_len"),
     ("kv_codec", "codecs", "codec"),
+    ("prefix_cache", "sweep", "share"),
 ]
 # Fresh value must keep >= 85% of the baseline (throughput-like metrics).
-DOWN_METRICS = ["tokens_per_s", "max_concurrent_lanes"]
+DOWN_METRICS = ["tokens_per_s", "max_concurrent_lanes", "tokens_per_s_cache_on",
+                "prefix_hits"]
 # Fresh value must stay <= 115% of the baseline (work-per-token metrics;
 # step counts are deterministic on the stub, so growth is a scheduling
-# regression, not noise).
-UP_METRICS = ["dense_steps_per_token", "prefill_steps", "decode_steps"]
+# regression, not noise — and the prefix sweep runs on virtual time, so
+# its TTFT is exact).
+UP_METRICS = ["dense_steps_per_token", "prefill_steps", "decode_steps",
+              "ttft_mean_cache_on_s"]
 
 
 def _metric(row, key):
