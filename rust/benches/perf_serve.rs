@@ -43,6 +43,15 @@
 //!   acceptance bar (cache-on beats cache-off at share ≥ 0.5, monotone
 //!   TTFT, bit-identity to cold) reads this section.  Always on (stub
 //!   backend).
+//! * `fault_recovery` — goodput under injected faults, on virtual time:
+//!   a transient-rate sweep (0 / 1% / 5%) under the retry policy on a
+//!   manual `Clock` (the acceptance bars: zero lost requests at every
+//!   rate, goodput at 1% ≥ 0.9× fault-free, bit-identical rows), a
+//!   supervised-recovery drill (scheduled backend death, engine rebuilt
+//!   and replayed losslessly — restarts read back from the registry),
+//!   and a fleet-failover drill (a doomed engine's orphans re-homed to a
+//!   sibling through `Router::fail_over`, breaker forced Open).  Always
+//!   on (stub backend).
 //! * `engines` — tokens/s, TTFT, p50/p99 latency, fused steps, KV peak
 //!   bytes, marshal/execute split per engine×admission-mode, against the
 //!   compiled artifacts.  Skipped (with `pjrt_skipped: true`) when no
@@ -566,6 +575,283 @@ fn bench_prefix_cache() -> Result<Json> {
     Ok(Json::Obj(o))
 }
 
+/// Goodput under injected faults, plus the two recovery drills — the
+/// chaos-readiness section `scripts/check_bench.py` holds the bars to.
+///
+/// * **Rates sweep** — the same 16-request trace served at transient
+///   fault rates 0 / 1% / 5% under `RetryPolicy { budget: 3, backoff:
+///   1ms }` on a manual [`Clock`] with a 4 ms step delay, so "goodput"
+///   is exact virtual time: a faulted attempt costs only its backoff
+///   (the step committed nothing), never a lost request.  Bars: zero
+///   lost requests at every rate, goodput at the 1% rate ≥ 0.9×
+///   fault-free, every completed row bit-identical to the fault-free
+///   serve.
+/// * **Supervised recovery** — a gateway whose backend is scheduled to
+///   die fatally at step 6 (`max_restarts: 2`): the supervisor rebuilds
+///   the engine, defuses the spent death, and replays from the replay
+///   book.  Restarts are read back from the shared registry
+///   (`clover_engine_restarts_total`), and the recovered rows must be
+///   bit-identical to an unfaulted gateway's.
+/// * **Fleet failover** — a doomed engine (`max_restarts: 0`, orphan
+///   parking on) beside a healthy sibling under a [`Router`]: a sidecar
+///   polls `fail_over()` while the client drains, the doomed breaker is
+///   forced Open, and every orphan completes on the sibling —
+///   bit-identically, because replay resubmits `prompt ⧺ streamed`.
+fn bench_fault_recovery() -> Result<Json> {
+    use clover::obs::Clock;
+    use clover::runtime::stub::FaultPlan;
+    use clover::serve::{RetryPolicy, ServeMetrics};
+    use clover::server::{
+        EngineSpec, Gateway, GatewayConfig, Health, Obs, Router, StreamOutcome,
+    };
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    const REQS: usize = 16;
+    const PROMPT: usize = 8;
+    const MAX_NEW: usize = 16;
+    /// Fault-schedule seed: deterministic, and chosen so neither sweep
+    /// rate ever faults the same step twice in a row (the retry budget
+    /// is never spent — nothing dies mid-sweep).
+    const FAULT_SEED: u64 = 7;
+    let retry = RetryPolicy { budget: 3, backoff: Duration::from_millis(1) };
+
+    // ---- transient-rate sweep, virtual time -------------------------
+    let mk_spec = |clock: Clock, rate: f64| StubSpec {
+        batch_slots: BATCH_SLOTS,
+        step_delay: Duration::from_millis(4),
+        clock,
+        fault_plan: FaultPlan {
+            seed: FAULT_SEED,
+            transient_rate: rate,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mk_reqs = |now: Instant| -> Vec<Request> {
+        (0..REQS as u64)
+            .map(|id| {
+                Request::greedy(
+                    id,
+                    (0..PROMPT as i32).map(|p| (p * 3 + id as i32) % 32).collect(),
+                    MAX_NEW,
+                    now,
+                )
+            })
+            .collect()
+    };
+    let run_rate = |rate: f64| -> Result<(Vec<Completion>, ServeMetrics)> {
+        let clock = Clock::manual();
+        let engine = Engine::new_stub(mk_spec(clock.clone(), rate)).with_retry_policy(retry);
+        engine.serve_all(mk_reqs(clock.now()), policy())
+    };
+    // Fault-free oracle: rows keyed by each prompt's distinguishing
+    // first token (id % 32 — distinct across the 16 requests).
+    let (base_c, base_m) = run_rate(0.0)?;
+    let base_goodput = base_m.tokens_per_s();
+    let base_rows: HashMap<i32, Vec<i32>> =
+        base_c.iter().map(|c| (c.tokens[0], c.tokens.clone())).collect();
+    let mut rates = Vec::new();
+    for rate in [0.0, 0.01, 0.05] {
+        let (c, m) = run_rate(rate)?;
+        let terminal = m.completed + m.cancelled + m.failed + m.migrated;
+        let lost = REQS as f64 - terminal as f64;
+        let goodput = m.tokens_per_s();
+        let bit_identical = c
+            .iter()
+            .all(|x| base_rows.get(&x.tokens[0]).map_or(false, |b| *b == x.tokens));
+        println!(
+            "fault rate {rate:4.2}: {:2} completed, {} failed, {lost:.0} lost \
+             | {:2} faults, {:2} retries | {goodput:7.1} tok/s virtual \
+             ({:.3}x fault-free) | bit-identical {bit_identical}",
+            m.completed,
+            m.failed,
+            m.step_faults,
+            m.step_retries,
+            goodput / base_goodput.max(1e-12),
+        );
+        let mut o = BTreeMap::new();
+        o.insert("transient_rate".to_string(), Json::Num(rate));
+        o.insert("completed".to_string(), Json::Num(m.completed as f64));
+        o.insert("failed".to_string(), Json::Num(m.failed as f64));
+        o.insert("lost".to_string(), Json::Num(lost));
+        o.insert("step_faults".to_string(), Json::Num(m.step_faults as f64));
+        o.insert("step_retries".to_string(), Json::Num(m.step_retries as f64));
+        o.insert("generated_tokens".to_string(), Json::Num(m.generated_tokens as f64));
+        o.insert("wall_s".to_string(), Json::Num(m.wall_s));
+        o.insert("goodput_tokens_per_s".to_string(), Json::Num(goodput));
+        o.insert(
+            "goodput_vs_fault_free".to_string(),
+            Json::Num(goodput / base_goodput.max(1e-12)),
+        );
+        o.insert("ttft_p50_s".to_string(), Json::Num(m.ttft_p50_s));
+        o.insert("ttft_p99_s".to_string(), Json::Num(m.ttft_p99_s));
+        o.insert("bit_identical_to_fault_free".to_string(), Json::Bool(bit_identical));
+        rates.push(Json::Obj(o));
+    }
+
+    // ---- supervised recovery drill ----------------------------------
+    // One gateway serve: submit 8 requests, wait out every stream, and
+    // return (completed rows, failed count) — conservation means the two
+    // always sum to 8.
+    const SUP_REQS: usize = 8;
+    let serve_rows =
+        |name: &str, cfg: GatewayConfig, spec: StubSpec, obs: Option<Obs>| -> Result<(Vec<Vec<i32>>, usize)> {
+            let gw = Gateway::spawn_with_obs(name, cfg, EngineSpec::stub(spec), obs)?;
+            let mut tickets = Vec::new();
+            for i in 0..SUP_REQS as i32 {
+                tickets.push(
+                    gw.submit(vec![10 + i, 2, 3], 8, SamplingParams::greedy(), None)
+                        .map_err(|e| anyhow::anyhow!("{name} submit: {e}"))?,
+                );
+            }
+            let mut done = Vec::new();
+            let mut failed = 0usize;
+            for t in tickets {
+                match t.stream.wait()? {
+                    StreamOutcome::Done(c) => done.push(c.tokens),
+                    StreamOutcome::Cancelled { .. } | StreamOutcome::Failed { .. } => failed += 1,
+                }
+            }
+            gw.join()?;
+            Ok((done, failed))
+        };
+    let row_map = |rows: &[Vec<i32>]| -> HashMap<i32, Vec<i32>> {
+        rows.iter().map(|r| (r[0], r.clone())).collect()
+    };
+    let identical_to = |rows: &[Vec<i32>], want: &HashMap<i32, Vec<i32>>| -> bool {
+        rows.iter().all(|r| want.get(&r[0]).map_or(false, |w| w == r))
+    };
+
+    let (clean, _) = serve_rows("fault-clean", GatewayConfig::default(), StubSpec::default(), None)?;
+    let want = row_map(&clean);
+    let obs = Obs::default();
+    let doomed_spec = StubSpec {
+        step_delay: Duration::from_millis(2),
+        fault_plan: FaultPlan {
+            seed: FAULT_SEED,
+            fatal_after_steps: Some(6),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let (recovered, rec_failed) = serve_rows(
+        "fault-sup",
+        GatewayConfig { max_restarts: 2, ..Default::default() },
+        doomed_spec,
+        Some(obs.clone()),
+    )?;
+    // Submit-to-drained for the whole faulted serve: the death, the
+    // rebuild, the replay, and the resumed decode (wall clock — the
+    // gateway thread is real time).
+    let recovery_s = t0.elapsed().as_secs_f64();
+    let restarts = obs
+        .registry
+        .get("clover_engine_restarts_total{gateway=\"fault-sup\"}")
+        .unwrap_or(0.0);
+    let rec_identical = identical_to(&recovered, &want);
+    let rec_lost = SUP_REQS as f64 - (recovered.len() + rec_failed) as f64;
+    println!(
+        "recovery   : backend died at step 6, {restarts:.0} restart(s), drained in {recovery_s:.3}s \
+         | {} completed, {rec_failed} failed, {rec_lost:.0} lost | bit-identical {rec_identical}",
+        recovered.len(),
+    );
+    let mut rec = BTreeMap::new();
+    rec.insert("requests".to_string(), Json::Num(SUP_REQS as f64));
+    rec.insert("restarts".to_string(), Json::Num(restarts));
+    rec.insert("recovery_s".to_string(), Json::Num(recovery_s));
+    rec.insert("completed".to_string(), Json::Num(recovered.len() as f64));
+    rec.insert("failed".to_string(), Json::Num(rec_failed as f64));
+    rec.insert("lost".to_string(), Json::Num(rec_lost));
+    rec.insert("bit_identical".to_string(), Json::Bool(rec_identical));
+
+    // ---- fleet failover drill ---------------------------------------
+    let doomed = Gateway::spawn(
+        "fault-fo-a",
+        GatewayConfig { max_restarts: 0, failover: true, ..Default::default() },
+        EngineSpec::stub(StubSpec {
+            step_delay: Duration::from_millis(2),
+            fault_plan: FaultPlan {
+                seed: FAULT_SEED,
+                fatal_after_steps: Some(4),
+                ..Default::default()
+            },
+            ..Default::default()
+        }),
+    )?;
+    let sibling =
+        Gateway::spawn("fault-fo-b", GatewayConfig::default(), EngineSpec::stub(StubSpec::default()))?;
+    let router = Router::new(vec![doomed, sibling])?;
+    let mut tickets = Vec::new();
+    for i in 0..SUP_REQS as i32 {
+        let (_, t) = router
+            .submit(vec![10 + i, 2, 3], 8, SamplingParams::greedy(), None)
+            .map_err(|e| anyhow::anyhow!("failover submit: {e}"))?;
+        tickets.push(t);
+    }
+    // The failover sweep needs a live caller while the client blocks in
+    // `wait`: poll it from a scoped sidecar until the streams drain.
+    let drained = AtomicBool::new(false);
+    let moved = AtomicUsize::new(0);
+    // Collect the raw waits first and only `?` after the sidecar has been
+    // released — an early return inside the scope would leave it looping
+    // and hang the scope join.
+    let outcomes: Vec<Result<StreamOutcome>> = std::thread::scope(|s| {
+        s.spawn(|| {
+            while !drained.load(Ordering::SeqCst) {
+                moved.fetch_add(router.fail_over(), Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let outs: Vec<_> = tickets.into_iter().map(|t| t.stream.wait()).collect();
+        drained.store(true, Ordering::SeqCst);
+        outs
+    });
+    let mut fo_done = Vec::new();
+    let mut fo_failed = 0usize;
+    for outcome in outcomes {
+        match outcome? {
+            StreamOutcome::Done(c) => fo_done.push(c.tokens),
+            StreamOutcome::Cancelled { .. } | StreamOutcome::Failed { .. } => fo_failed += 1,
+        }
+    }
+    let failed_over = moved.load(Ordering::SeqCst);
+    let breaker_open = router.health(0) == Health::Open;
+    let fo_identical = identical_to(&fo_done, &want);
+    let fo_lost = SUP_REQS as f64 - (fo_done.len() + fo_failed) as f64;
+    // The doomed worker died by design; the router's join surfaces it.
+    let _ = router.join();
+    println!(
+        "failover   : {failed_over} orphan(s) re-homed, breaker open {breaker_open} \
+         | {} completed, {fo_failed} failed, {fo_lost:.0} lost | bit-identical {fo_identical}",
+        fo_done.len(),
+    );
+    let mut fo = BTreeMap::new();
+    fo.insert("requests".to_string(), Json::Num(SUP_REQS as f64));
+    fo.insert("failed_over".to_string(), Json::Num(failed_over as f64));
+    fo.insert("breaker_open".to_string(), Json::Bool(breaker_open));
+    fo.insert("completed".to_string(), Json::Num(fo_done.len() as f64));
+    fo.insert("failed".to_string(), Json::Num(fo_failed as f64));
+    fo.insert("lost".to_string(), Json::Num(fo_lost));
+    fo.insert("bit_identical".to_string(), Json::Bool(fo_identical));
+
+    let mut o = BTreeMap::new();
+    o.insert("backend".to_string(), Json::Str("stub".to_string()));
+    o.insert("fault_seed".to_string(), Json::Num(FAULT_SEED as f64));
+    o.insert("requests".to_string(), Json::Num(REQS as f64));
+    o.insert("prompt_tokens".to_string(), Json::Num(PROMPT as f64));
+    o.insert("max_new".to_string(), Json::Num(MAX_NEW as f64));
+    let mut r = BTreeMap::new();
+    r.insert("budget".to_string(), Json::Num(retry.budget as f64));
+    r.insert("backoff_ms".to_string(), Json::Num(retry.backoff.as_millis() as f64));
+    o.insert("retry".to_string(), Json::Obj(r));
+    o.insert("rates".to_string(), Json::Arr(rates));
+    o.insert("recovery".to_string(), Json::Obj(rec));
+    o.insert("failover".to_string(), Json::Obj(fo));
+    Ok(Json::Obj(o))
+}
+
 /// Observability taps: tokens/s untapped vs tapped (the <5% overhead
 /// bar), span-reconstructed aggregates vs the engine's own
 /// [`clover::serve::ServeMetrics`] (the fidelity bar), and the dumps the
@@ -850,6 +1136,10 @@ fn main() -> Result<()> {
     // Radix prefix cache: TTFT vs share under a Zipf-head mix, virtual
     // time, runs everywhere.
     root.insert("prefix_cache".to_string(), bench_prefix_cache()?);
+
+    // Fault injection: goodput under transient faults, supervised
+    // recovery, and fleet failover — always on (stub backend).
+    root.insert("fault_recovery".to_string(), bench_fault_recovery()?);
 
     // End-to-end engines need the compiled artifacts + live PJRT.
     match Runtime::new("artifacts") {

@@ -147,7 +147,7 @@ fn check_serve(report: &mut Report, path: &str, doc: &Json) {
     require(report, path, doc, "$", &["preset", "prefill", "speculative", "kv_codec"]);
     require(report, path, doc, "$", &["layer_budgets"]);
     soft(report, path, doc, "$", &["obs", "engines", "pjrt_skipped"]);
-    soft(report, path, doc, "$", &["prefix_cache"]);
+    soft(report, path, doc, "$", &["prefix_cache", "fault_recovery"]);
 
     if let Some(prefill) = doc.get("prefill") {
         require(report, path, prefill, "$.prefill", &["chunks"]);
@@ -287,6 +287,59 @@ fn check_serve(report: &mut Report, path: &str, doc: &Json) {
                         );
                     }
                     _ => soft(report, path, row, &locus, &["bit_identical_to_cold"]),
+                }
+            }
+        }
+    }
+
+    if let Some(fr) = doc.get("fault_recovery") {
+        if !matches!(fr, Json::Null) {
+            require(report, path, fr, "$.fault_recovery", &["rates", "recovery", "failover"]);
+            let rates = fr.get("rates").and_then(|r| r.as_arr().ok()).unwrap_or(&[]);
+            // The sweep rows carry `bit_identical_to_fault_free`, the
+            // two drills carry `bit_identical` — same invariant.
+            let rows: Vec<(String, &Json, &str)> = rates
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    (format!("$.fault_recovery.rates[{i}]"), row, "bit_identical_to_fault_free")
+                })
+                .chain(fr.get("recovery").map(|r| {
+                    ("$.fault_recovery.recovery".to_string(), r, "bit_identical")
+                }))
+                .chain(fr.get("failover").map(|r| {
+                    ("$.fault_recovery.failover".to_string(), r, "bit_identical")
+                }))
+                .collect();
+            for (locus, row, bit_key) in rows {
+                // The conservation bar: no fault plan may lose a request.
+                match row.get("lost") {
+                    Some(Json::Num(n)) if *n != 0.0 => {
+                        report.push(
+                            44,
+                            path,
+                            &locus,
+                            format!("lost {n} != 0 — a request vanished without a terminal event"),
+                            "the conservation ledger must balance under every fault plan",
+                        );
+                    }
+                    Some(Json::Num(_)) => {}
+                    _ => soft(report, path, row, &locus, &["lost"]),
+                }
+                match row.get(bit_key) {
+                    Some(Json::Bool(true)) => {}
+                    Some(Json::Bool(false)) => {
+                        report.push(
+                            44,
+                            path,
+                            &locus,
+                            "recovered rows diverged from the fault-free serve — the \
+                             bit-identity invariant is broken"
+                                .to_string(),
+                            "replay must resume from prompt \u{29fa} streamed; bisect the replay book",
+                        );
+                    }
+                    _ => soft(report, path, row, &locus, &[bit_key]),
                 }
             }
         }

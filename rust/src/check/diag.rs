@@ -46,7 +46,8 @@ const E: Severity = Severity::Error;
 const W: Severity = Severity::Warning;
 
 /// The full `CLV0xx` catalog.  Grouped: 001–016 manifest geometry,
-/// 020–036 serve/engine-spec combinations, 040–045 bench documents.
+/// 020–039 serve/engine-spec combinations (037–039 are the chaos /
+/// robustness flags), 040–045 bench documents.
 pub const CATALOG: &[CatalogEntry] = &[
     CatalogEntry { code: 1, severity: E, title: "artifacts manifest unreadable" },
     CatalogEntry { code: 2, severity: E, title: "manifest is not valid JSON" },
@@ -81,6 +82,9 @@ pub const CATALOG: &[CatalogEntry] = &[
     CatalogEntry { code: 34, severity: E, title: "prefix cache block misaligned with pages or ladder" },
     CatalogEntry { code: 35, severity: E, title: "prefix cache illegal beside a speculative pair" },
     CatalogEntry { code: 36, severity: W, title: "prefix cache without a workable eviction budget" },
+    CatalogEntry { code: 37, severity: E, title: "fault plan spec violates the schema" },
+    CatalogEntry { code: 38, severity: E, title: "circuit-breaker thresholds out of order" },
+    CatalogEntry { code: 39, severity: W, title: "retry backoff cannot finish inside the deadline" },
     CatalogEntry { code: 40, severity: E, title: "bench document unreadable or unparsable" },
     CatalogEntry { code: 41, severity: E, title: "bench document shape unrecognized" },
     CatalogEntry { code: 42, severity: E, title: "bench document missing a required key" },

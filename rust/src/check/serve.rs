@@ -1,9 +1,11 @@
-//! Engine-spec and run-config checks (`CLV020`–`CLV036`).
+//! Engine-spec and run-config checks (`CLV020`–`CLV039`).
 //!
 //! [`ServeSpec`] is the static mirror of the flag surface an engine spawn
 //! consumes (`clover serve`, `EngineSpec`, the gateway worker): preset,
 //! batch slots, chunk-ladder cap, speculative draft pair, KV codec +
-//! budgets, per-step token budget, prefix-cache block.  [`check_engine_spec`] cross-validates
+//! budgets, per-step token budget, prefix-cache block, and the chaos /
+//! robustness flags (fault plan, retry policy, circuit-breaker
+//! thresholds).  [`check_engine_spec`] cross-validates
 //! the combination against the manifest *before* anything spawns — the
 //! same rules the engine builders enforce with `bail!` at construction,
 //! surfaced as diagnostics with stable codes instead of a panic-shaped
@@ -15,8 +17,9 @@
 
 use crate::config::RunConfig;
 use crate::model::Manifest;
+use crate::runtime::stub::FaultPlan;
 use crate::serve::kv::{KvSpecError, PAGE_TOKENS};
-use crate::serve::{KvCodecSpec, KvConfig, SpecConfig};
+use crate::serve::{KvCodecSpec, KvConfig, RetryPolicy, SpecConfig};
 
 use super::diag::Report;
 
@@ -42,6 +45,18 @@ pub struct ServeSpec {
     /// `--prefix-cache-block`: radix prefix cache block size in tokens
     /// (`None` = cache off).
     pub prefix_cache_block: Option<usize>,
+    /// `--fault-plan` spec string, unparsed (`None` = no injection armed).
+    pub fault_plan: Option<String>,
+    /// `--retry-budget`: transient-step retries after the first attempt.
+    pub retry_budget: usize,
+    /// `--retry-backoff-ms`: base backoff, doubled each retry.
+    pub retry_backoff_ms: u64,
+    /// `--breaker-degraded` / `--breaker-open` EWMA thresholds
+    /// (`None` = router breaker left at defaults, nothing to validate).
+    pub breaker: Option<(f64, f64)>,
+    /// `--deadline-ms` per-request deadline (feasibility input for the
+    /// retry-backoff check; `None` = requests never expire).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for ServeSpec {
@@ -57,6 +72,11 @@ impl Default for ServeSpec {
             speculative: None,
             temperature: 0.0,
             prefix_cache_block: None,
+            fault_plan: None,
+            retry_budget: RetryPolicy::default().budget,
+            retry_backoff_ms: RetryPolicy::default().backoff.as_millis() as u64,
+            breaker: None,
+            deadline_ms: None,
         }
     }
 }
@@ -65,6 +85,64 @@ impl Default for ServeSpec {
 /// flags in the diagnostics (`<flags>` for the CLI, a config path when
 /// the spec came from a file); loci are the flags themselves.
 pub fn check_engine_spec(report: &mut Report, manifest: &Manifest, spec: &ServeSpec, label: &str) {
+    // -- chaos / robustness flags (CLV037–CLV039) -------------------------
+    // Validated before the manifest lookup: none of these need geometry,
+    // and a typo'd fault plan should surface even against a bad preset.
+    if let Some(plan) = &spec.fault_plan {
+        if let Err(e) = FaultPlan::parse(plan) {
+            report.push(
+                37,
+                label,
+                "--fault-plan",
+                e.to_string(),
+                "keys: seed, transient, spike, spike-factor, poison, fatal-after, crash-after \
+                 (rates in 0..=1); or `off`",
+            );
+        }
+    }
+    if let Some((degraded, open)) = spec.breaker {
+        // Negated comparison (not `||` of violations) so a NaN threshold
+        // also fails: the EWMA must walk Healthy → Degraded → Open.
+        if !(degraded > 0.0 && degraded < open && open <= 1.0) {
+            report.push(
+                38,
+                label,
+                "--breaker-open",
+                format!(
+                    "breaker thresholds must satisfy 0 < degraded ({degraded}) < open \
+                     ({open}) <= 1 — the fault-rate EWMA walks Healthy → Degraded → Open \
+                     in that order"
+                ),
+                "e.g. --breaker-degraded 0.1 --breaker-open 0.5",
+            );
+        }
+    }
+    if let Some(deadline) = spec.deadline_ms {
+        if spec.retry_budget > 0 {
+            // Worst-case backoff burned before the engine gives up on a
+            // transient storm: base × (2^budget − 1), saturating — a
+            // budget past 63 doublings is past any real deadline anyway.
+            let doublings =
+                1u64.checked_shl(spec.retry_budget as u32).map_or(u64::MAX, |v| v - 1);
+            let worst = spec.retry_backoff_ms.saturating_mul(doublings);
+            if worst >= deadline {
+                report.push(
+                    39,
+                    label,
+                    "--retry-budget",
+                    format!(
+                        "a transient storm burns up to {worst} ms of backoff ({} retries \
+                         doubling from {} ms) before the engine gives up — at or past the \
+                         {deadline} ms request deadline, a retried request expires \
+                         mid-backoff instead of recovering",
+                        spec.retry_budget, spec.retry_backoff_ms
+                    ),
+                    "shrink --retry-budget/--retry-backoff-ms or raise --deadline-ms",
+                );
+            }
+        }
+    }
+
     let Ok(entry) = manifest.config(&spec.preset) else {
         report.push(
             20,

@@ -36,13 +36,18 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod model;
+// The serving spine must never panic a worker thread on a poisoned lock
+// or a sloppy parse: `unwrap` is denied outright in the four modules a
+// gateway worker executes — `runtime` (stub + PJRT backends), `serve`
+// (engine), `server` (gateway/router), and `obs` (metrics/trace sinks
+// shared across worker threads).  Tests are exempted via
+// `allow-unwrap-in-tests` in `clippy.toml`.
+#[deny(clippy::unwrap_used)]
 pub mod obs;
 pub mod peft;
 pub mod report;
+#[deny(clippy::unwrap_used)]
 pub mod runtime;
-// The serving spine must never panic a worker thread on a poisoned lock
-// or a sloppy parse: `unwrap` is denied outright in `serve`/`server`
-// (tests are exempted via `allow-unwrap-in-tests` in `clippy.toml`).
 #[deny(clippy::unwrap_used)]
 pub mod serve;
 #[deny(clippy::unwrap_used)]

@@ -18,6 +18,9 @@
 //!                  [--trace-out trace.json] [--metrics-json m.json]
 //!                  [--stream] [--gap-ms N] [--deadline-ms N] [--cancel-ms N] [--queue N]
 //!                  [--stats-interval SECS]
+//!                  [--fault-plan k=v,...] [--retry-budget N] [--retry-backoff-ms M]
+//!                  [--max-restarts N] [--breaker-degraded X] [--breaker-open Y]
+//!                  [--breaker-probe-ms N]
 //! clover golden    [--preset tiny]          # replay golden fixtures
 //! clover check     [paths...] [--format text|json] [--check-files]
 //!                  [--artifacts DIR] [--preset tiny] [+ the serve flags]
@@ -32,12 +35,14 @@ use clover::coordinator::experiments::{self, ExpOpts};
 use clover::coordinator::{self, ops};
 use clover::model::{load_params, save_params, Checkpoint, Manifest};
 use clover::obs::{Registry, TraceSink};
+use clover::runtime::stub::FaultPlan;
 use clover::runtime::{golden, Runtime};
 use clover::serve::{
-    Admission, BatchPolicy, Engine, KvCodecSpec, Request, SamplingParams, SpecConfig,
+    Admission, BatchPolicy, Engine, KvCodecSpec, Request, RetryPolicy, SamplingParams, SpecConfig,
 };
 use clover::server::{
-    DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, StreamEvent, SubmitError, TryNext,
+    BreakerConfig, DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, StreamEvent, SubmitError,
+    TryNext,
 };
 use clover::util::human_bytes;
 
@@ -318,6 +323,62 @@ fn speculative_flags(args: &Args) -> Result<Option<(usize, SpecConfig)>> {
     Ok(Some((rank, cfg)))
 }
 
+/// Parse `--fault-plan key=value,...` (chaos testing; stub backend only —
+/// see `FaultPlan::parse` for the schema: seed, transient_rate,
+/// spike_rate, spike_factor, poison_rate, fatal_after_steps,
+/// crash_after_steps).  `CLOVER_FAULT_SEED` overrides the seed so CI can
+/// sweep a deterministic matrix without editing flags.
+fn fault_plan_flag(args: &Args) -> Result<Option<FaultPlan>> {
+    let Some(spec) = args.get("fault-plan") else { return Ok(None) };
+    let plan = FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!("--fault-plan {spec}: {e}"))?;
+    Ok(Some(plan.with_env_seed()))
+}
+
+/// Per-step retry policy from `--retry-budget N` / `--retry-backoff-ms M`
+/// (defaults from [`RetryPolicy::default`]: 3 attempts, 1ms base backoff).
+fn retry_policy_flags(args: &Args) -> Result<RetryPolicy> {
+    let dflt = RetryPolicy::default();
+    Ok(RetryPolicy {
+        budget: args.usize_or("retry-budget", dflt.budget)?,
+        backoff: std::time::Duration::from_millis(
+            args.usize_or("retry-backoff-ms", dflt.backoff.as_millis() as usize)? as u64,
+        ),
+    })
+}
+
+/// Circuit-breaker tuning from `--breaker-degraded X` / `--breaker-open Y`
+/// / `--breaker-probe-ms N` (router fleets; `clover check` validates the
+/// same ordering constraint as CLV038).  Returns `None` when no breaker
+/// flag is present.
+fn breaker_flags(args: &Args) -> Result<Option<BreakerConfig>> {
+    if args.get("breaker-degraded").is_none()
+        && args.get("breaker-open").is_none()
+        && args.get("breaker-probe-ms").is_none()
+    {
+        return Ok(None);
+    }
+    let dflt = BreakerConfig::default();
+    let cfg = BreakerConfig {
+        alpha: dflt.alpha,
+        degraded_threshold: args.f64_or("breaker-degraded", dflt.degraded_threshold)?,
+        open_threshold: args.f64_or("breaker-open", dflt.open_threshold)?,
+        probe_after: std::time::Duration::from_millis(
+            args.usize_or("breaker-probe-ms", dflt.probe_after.as_millis() as usize)? as u64,
+        ),
+    };
+    if !(cfg.degraded_threshold > 0.0
+        && cfg.degraded_threshold < cfg.open_threshold
+        && cfg.open_threshold <= 1.0)
+    {
+        bail!(
+            "breaker thresholds must satisfy 0 < degraded ({}) < open ({}) <= 1",
+            cfg.degraded_threshold,
+            cfg.open_threshold,
+        );
+    }
+    Ok(Some(cfg))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     if args.get("stream").is_some() {
@@ -337,7 +398,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .with_max_step_tokens(max_step_tokens_flag(args)?)
         .with_kv_codec(kv_codec.clone())?
         .with_kv_memory_budget(kv_memory_budget_flag(args)?)
-        .with_prefix_cache(prefix_cache_block_flag(args)?)?;
+        .with_prefix_cache(prefix_cache_block_flag(args)?)?
+        .with_retry_policy(retry_policy_flags(args)?);
+    if let Some(plan) = fault_plan_flag(args)? {
+        // Refused on PJRT engines — fault injection drives chaos tests on
+        // the stub, never devices; the error says so.
+        engine = engine.with_fault_plan(plan)?;
+    }
     let speculative = speculative_flags(args)?;
     if let Some((draft_rank, spec_cfg)) = &speculative {
         // Self-speculative pair: the draft is the checkpoint's own dense
@@ -493,12 +560,20 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     let kv_codec = kv_codec_flags(args)?;
     let prefix_block = prefix_cache_block_flag(args)?;
     let max_pending = max_pending_flag(args)?;
+    let retry = retry_policy_flags(args)?;
+    let breaker = breaker_flags(args)?;
     let mut spec =
         EngineSpec::checkpoint(&cfg.model.artifacts_dir, &cfg.model.preset, batch, ckpt_path)
             .with_prefill_chunk(prefill_chunk_flag(args)?)
             .with_max_step_tokens(max_step_tokens_flag(args)?)
             .with_kv_codec(kv_codec.clone())
-            .with_prefix_cache(prefix_block);
+            .with_prefix_cache(prefix_block)
+            .with_retry_policy(retry);
+    if let Some(plan) = fault_plan_flag(args)? {
+        // Refused on the checkpoint backing — fault injection drives
+        // chaos tests on the stub, never devices; the error says so.
+        spec = spec.with_fault_plan(plan)?;
+    }
     if let Some((draft_rank, spec_cfg)) = &speculative {
         let draft = DraftSource::PrunedRank { rank: *draft_rank };
         spec = spec.with_speculative(draft, spec_cfg.clone());
@@ -515,6 +590,7 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         .map(Duration::from_secs_f64);
     let obs = (trace_out.is_some() || metrics_json.is_some() || stats_interval.is_some())
         .then(Obs::default);
+    let max_restarts = args.usize_or("max-restarts", GatewayConfig::default().max_restarts)?;
     let gateway = Gateway::spawn_with_obs(
         "serve",
         GatewayConfig {
@@ -524,12 +600,15 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
                 max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
             },
             max_pending,
+            max_restarts,
+            ..GatewayConfig::default()
         },
         spec,
         obs.clone(),
     )?;
     println!(
-        "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}{}{}",
+        "gateway up: rank {}{} | kv codec {} | {} B KV/token | queue {queue_capacity}{}{} | \
+         retry budget {} ({}ms backoff) | {} restarts",
         gateway.rank(),
         gateway
             .draft_rank()
@@ -543,7 +622,20 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         max_pending
             .map(|n| format!(" | shed beyond {n} pending"))
             .unwrap_or_default(),
+        retry.budget,
+        retry.backoff.as_millis(),
+        max_restarts,
     );
+    if let Some(b) = &breaker {
+        // A single-gateway stream has no router to trip, but the flags are
+        // validated here (and by `clover check`) exactly as a fleet would.
+        println!(
+            "breaker: degraded > {} | open > {} | probe after {}ms",
+            b.degraded_threshold,
+            b.open_threshold,
+            b.probe_after.as_millis(),
+        );
+    }
 
     let sampling = SamplingParams {
         temperature: args.f64_or("temperature", 0.0)? as f32,
@@ -589,6 +681,7 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
     // Mux all event streams onto stdout until every request is terminal.
     let mut done = 0usize;
     let mut cancelled = 0usize;
+    let mut failed = 0usize;
     let mut next_stats = stats_interval.map(|iv| Instant::now() + iv);
     while !streams.is_empty() {
         if let (Some(at), Some(o)) = (next_stats, obs.as_ref()) {
@@ -645,12 +738,19 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
                                 tokens.len()
                             );
                         }
+                        StreamEvent::Failed { id, reason, tokens, step } => {
+                            println!(
+                                "[req {id:>3}] FAILED ({reason:?}) at step {step} with {} tokens \
+                                 — restart budget spent or lane poisoned",
+                                tokens.len()
+                            );
+                        }
                     }
                     if ev.is_terminal() {
-                        if matches!(ev, StreamEvent::Done { .. }) {
-                            done += 1;
-                        } else {
-                            cancelled += 1;
+                        match ev {
+                            StreamEvent::Done { .. } => done += 1,
+                            StreamEvent::Failed { .. } => failed += 1,
+                            _ => cancelled += 1,
                         }
                         return false;
                     }
@@ -667,7 +767,13 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     }
 
-    let metrics = gateway.join()?;
+    // A worker that died for good (restart budget spent) surfaces its
+    // error here — report it but still flush the trace/metrics dumps,
+    // which are exactly what a post-mortem wants.
+    let metrics = gateway.join().unwrap_or_else(|e| {
+        eprintln!("gateway worker died: {e:#}");
+        Default::default()
+    });
     if let Some(o) = &obs {
         let mut sink = o.trace.lock().expect("trace sink poisoned");
         if let Some((reason, dump)) = sink.take_dump() {
@@ -694,9 +800,10 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         }
     }
     println!(
-        "served {} done + {} cancelled + {} shed | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
+        "served {} done + {} cancelled + {} failed + {} shed | {} generated tokens | {:.1} tok/s | {} decode steps | peak KV {} | freed KV {}",
         done,
         cancelled,
+        failed,
         shed,
         metrics.generated_tokens,
         metrics.tokens_per_s(),
@@ -704,6 +811,15 @@ fn cmd_serve_stream(args: &Args, cfg: &RunConfig) -> Result<()> {
         human_bytes(metrics.kv_peak_bytes),
         human_bytes(metrics.kv_freed_bytes),
     );
+    if metrics.step_faults > 0 || metrics.failed > 0 {
+        println!(
+            "chaos: {} step faults | {} retried | {} lanes quarantined | {} requests failed",
+            metrics.step_faults,
+            metrics.step_retries,
+            metrics.quarantined_lanes,
+            metrics.failed,
+        );
+    }
     if prefix_block.is_some() {
         println!(
             "prefix cache: {} hits skipped {} prefill tokens | cached {} | evicted {}",
@@ -826,6 +942,29 @@ fn cmd_check(args: &Args) -> Result<()> {
             prefix_cache_block: prefix_cache_block_flag(args)?,
             speculative: speculative_flags(args)?,
             temperature: args.f64_or("temperature", 0.0)?,
+            // Chaos flags ride through raw: `check_engine_spec` parses and
+            // classifies them (CLV037–CLV039) instead of bailing here.
+            fault_plan: args.get("fault-plan").map(str::to_string),
+            retry_budget: args.usize_or("retry-budget", RetryPolicy::default().budget)?,
+            retry_backoff_ms: args.usize_or(
+                "retry-backoff-ms",
+                RetryPolicy::default().backoff.as_millis() as usize,
+            )? as u64,
+            breaker: if args.get("breaker-degraded").is_some()
+                || args.get("breaker-open").is_some()
+            {
+                let dflt = BreakerConfig::default();
+                Some((
+                    args.f64_or("breaker-degraded", dflt.degraded_threshold)?,
+                    args.f64_or("breaker-open", dflt.open_threshold)?,
+                ))
+            } else {
+                None
+            },
+            deadline_ms: args
+                .get("deadline-ms")
+                .map(|v| v.parse::<u64>().with_context(|| format!("--deadline-ms {v}")))
+                .transpose()?,
         };
         check::check_engine_spec(&mut report, m, &spec, "<flags>");
     }

@@ -72,19 +72,19 @@ impl Registry {
 
     /// Add `v` to a (monotonic) counter series, creating it at zero.
     pub fn counter_add(&self, series: &str, v: f64) {
-        let mut s = self.series.lock().unwrap();
+        let mut s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         *s.counters.entry(series.to_string()).or_insert(0.0) += v;
     }
 
     /// Set a gauge series to `v`.
     pub fn gauge_set(&self, series: &str, v: f64) {
-        let mut s = self.series.lock().unwrap();
+        let mut s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         s.gauges.insert(series.to_string(), v);
     }
 
     /// Add `v` (may be negative) to a gauge series, creating it at zero.
     pub fn gauge_add(&self, series: &str, v: f64) {
-        let mut s = self.series.lock().unwrap();
+        let mut s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         *s.gauges.entry(series.to_string()).or_insert(0.0) += v;
     }
 
@@ -92,25 +92,25 @@ impl Registry {
     /// bucket layout on first use (later calls may pass the same bounds
     /// or `&[]` to reuse the existing layout).
     pub fn observe(&self, series: &str, bounds: &[f64], v: f64) {
-        let mut s = self.series.lock().unwrap();
+        let mut s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         s.hists.entry(series.to_string()).or_insert_with(|| Hist::new(bounds)).observe(v);
     }
 
     /// Current value of a counter or gauge series (tests, stats lines).
     pub fn get(&self, series: &str) -> Option<f64> {
-        let s = self.series.lock().unwrap();
+        let s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         s.counters.get(series).or_else(|| s.gauges.get(series)).copied()
     }
 
     /// Snapshot of a histogram series.
     pub fn hist(&self, series: &str) -> Option<Hist> {
-        self.series.lock().unwrap().hists.get(series).cloned()
+        self.series.lock().unwrap_or_else(|e| e.into_inner()).hists.get(series).cloned()
     }
 
     /// Prometheus text exposition (format 0.0.4): `# TYPE` per family,
     /// one line per series, histogram `_bucket`/`_sum`/`_count` expansion.
     pub fn prometheus_text(&self) -> String {
-        let s = self.series.lock().unwrap();
+        let s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         let mut out = String::new();
         let mut last_family = String::new();
         let mut typed = |out: &mut String, family: &str, kind: &str| {
@@ -153,7 +153,7 @@ impl Registry {
     /// JSON dump: `{"counters": {...}, "gauges": {...}, "histograms":
     /// {series: {"bounds": [...], "counts": [...], "sum": s, "count": n}}}`.
     pub fn to_json(&self) -> Json {
-        let s = self.series.lock().unwrap();
+        let s = self.series.lock().unwrap_or_else(|e| e.into_inner());
         let num_map =
             |m: &BTreeMap<String, f64>| m.iter().map(|(k, v)| (k.clone(), Json::Num(*v)));
         let mut hists = BTreeMap::new();

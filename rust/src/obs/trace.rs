@@ -24,7 +24,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::json::Json;
 use crate::serve::engine::percentile;
-use crate::serve::{Cancellation, CancelReason, Completion, Request, StepHook};
+use crate::serve::{Cancellation, CancelReason, Completion, FailReason, Request, StepHook};
 
 /// One engine step as observed by the tap (see module docs).
 #[derive(Clone, Debug)]
@@ -49,6 +49,9 @@ pub struct StepEvent {
     pub decode_tokens: usize,
     pub draft_tokens: usize,
     pub verify_tokens: usize,
+    /// Transient-fault retries this step burned before succeeding (0 on
+    /// the untroubled path).
+    pub retries: usize,
     /// KV accounting after the step.
     pub kv_live_bytes: usize,
     pub kv_freed_bytes: usize,
@@ -82,6 +85,9 @@ pub enum SpanPoint {
     Done { generated: usize },
     /// Cancelled (user or deadline) with `generated` tokens so far.
     Cancelled { generated: usize },
+    /// Failed terminally (backend death or a poisoned lane) with
+    /// `generated` tokens so far.
+    Failed { generated: usize },
 }
 
 /// Timestamped [`SpanPoint`] for one request.
@@ -112,6 +118,8 @@ pub struct RequestSpan {
     pub end_s: Option<f64>,
     pub generated: usize,
     pub cancelled: bool,
+    /// The request ended in a `Failed` terminal (fault path).
+    pub failed: bool,
 }
 
 impl RequestSpan {
@@ -126,6 +134,7 @@ impl RequestSpan {
 pub struct ReconMetrics {
     pub completed: usize,
     pub cancelled: usize,
+    pub failed: usize,
     pub generated_tokens: usize,
     pub ttft_p50_s: f64,
     pub ttft_p99_s: f64,
@@ -136,6 +145,10 @@ pub struct ReconMetrics {
 const STORM_WINDOW_S: f64 = 1.0;
 const STORM_THRESHOLD: usize = 8;
 
+/// Fault-storm detector: `Failed` terminals are rarer and graver than
+/// cancels, so the threshold is lower (same sliding window).
+const FAULT_STORM_THRESHOLD: usize = 4;
+
 /// Flight recorder + span assembler (see module docs).
 #[derive(Debug)]
 pub struct TraceSink {
@@ -145,6 +158,7 @@ pub struct TraceSink {
     steps_seen: usize,
     spans: BTreeMap<u64, RequestSpan>,
     cancel_times: VecDeque<f64>,
+    fault_times: VecDeque<f64>,
     dump_reason: Option<String>,
 }
 
@@ -163,6 +177,7 @@ impl TraceSink {
             steps_seen: 0,
             spans: BTreeMap::new(),
             cancel_times: VecDeque::new(),
+            fault_times: VecDeque::new(),
             dump_reason: None,
         }
     }
@@ -217,6 +232,25 @@ impl TraceSink {
                     self.dump_reason = Some(format!(
                         "cancel-storm: {} cancels within {STORM_WINDOW_S}s",
                         self.cancel_times.len()
+                    ));
+                }
+            }
+            SpanPoint::Failed { generated } => {
+                span.end_s = Some(ev.t_s);
+                span.generated = generated;
+                span.failed = true;
+                self.fault_times.push_back(ev.t_s);
+                while let Some(&t0) = self.fault_times.front() {
+                    if ev.t_s - t0 > STORM_WINDOW_S {
+                        self.fault_times.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if self.fault_times.len() >= FAULT_STORM_THRESHOLD && self.dump_reason.is_none() {
+                    self.dump_reason = Some(format!(
+                        "fault-storm: {} request failures within {STORM_WINDOW_S}s",
+                        self.fault_times.len()
                     ));
                 }
             }
@@ -276,12 +310,16 @@ impl TraceSink {
                 m.cancelled += 1;
                 continue;
             }
+            if s.failed {
+                m.failed += 1;
+                continue;
+            }
             m.completed += 1;
             m.generated_tokens += s.generated;
             let queued = s.queued_s.unwrap_or(end);
             ttfts.push(s.first_token_s.unwrap_or(end) - queued);
         }
-        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ttfts.sort_by(f64::total_cmp);
         m.ttft_p50_s = percentile(&ttfts, 0.50);
         m.ttft_p99_s = percentile(&ttfts, 0.99);
         m
@@ -306,6 +344,7 @@ impl TraceSink {
             args.insert("decode_tokens".into(), Json::Num(ev.decode_tokens as f64));
             args.insert("draft_tokens".into(), Json::Num(ev.draft_tokens as f64));
             args.insert("verify_tokens".into(), Json::Num(ev.verify_tokens as f64));
+            args.insert("retries".into(), Json::Num(ev.retries as f64));
             args.insert("kv_live_bytes".into(), Json::Num(ev.kv_live_bytes as f64));
             args.insert("kv_freed_bytes".into(), Json::Num(ev.kv_freed_bytes as f64));
             args.insert("kv_cached_bytes".into(), Json::Num(ev.kv_cached_bytes as f64));
@@ -326,6 +365,9 @@ impl TraceSink {
             let mut args = BTreeMap::new();
             args.insert("generated".into(), Json::Num(s.generated as f64));
             args.insert("cancelled".into(), Json::Bool(s.cancelled));
+            if s.failed {
+                args.insert("failed".into(), Json::Bool(true));
+            }
             args.insert("prefill_chunks".into(), Json::Num(s.prefill_chunks.len() as f64));
             args.insert("spec_rounds".into(), Json::Num(s.spec_rounds.len() as f64));
             if let Some(hit) = s.prefix_hit_tokens {
@@ -481,6 +523,11 @@ impl StepHook for TeeHook<'_> {
         self.observer.on_cancelled(id, tokens, reason, step);
     }
 
+    fn on_failed(&mut self, id: u64, tokens: Vec<i32>, reason: FailReason, step: usize) {
+        self.primary.on_failed(id, tokens.clone(), reason, step);
+        self.observer.on_failed(id, tokens, reason, step);
+    }
+
     fn on_step(&mut self, ev: &StepEvent) {
         self.primary.on_step(ev);
         self.observer.on_step(ev);
@@ -510,6 +557,7 @@ mod tests {
             decode_tokens: 1,
             draft_tokens: 0,
             verify_tokens: 0,
+            retries: 0,
             kv_live_bytes: 1024,
             kv_freed_bytes: 0,
             kv_cached_bytes: 0,
@@ -580,6 +628,32 @@ mod tests {
         let Json::Obj(other) = &root["otherData"] else { panic!() };
         assert_eq!(other["dump_reason"], Json::Str(reason));
         assert!(storm.take_dump().is_none(), "trigger is consumed");
+    }
+
+    #[test]
+    fn failed_spans_close_count_and_storm_arms_a_dump() {
+        let mut sink = TraceSink::default();
+        sink.record_span(&span(1, 0.0, SpanPoint::Queued));
+        sink.record_span(&span(1, 0.2, SpanPoint::Failed { generated: 3 }));
+        assert_eq!(sink.open_spans(), 0, "Failed is terminal");
+        let s = sink.span(1).unwrap();
+        assert!(s.failed && !s.cancelled);
+        assert_eq!(s.generated, 3);
+        let m = sink.reconstruct();
+        assert_eq!((m.completed, m.cancelled, m.failed), (0, 0, 1));
+        assert!(sink.take_dump().is_none(), "one failure is not a storm");
+        for i in 2..=FAULT_STORM_THRESHOLD as u64 {
+            sink.record_span(&span(i, 0.2 + i as f64 * 0.01, SpanPoint::Failed { generated: 0 }));
+        }
+        let (reason, _) = sink.take_dump().expect("fault storm arms a dump");
+        assert!(reason.contains("fault-storm"), "got: {reason}");
+
+        let mut quiet = TraceSink::default();
+        for i in 0..2 * FAULT_STORM_THRESHOLD {
+            let t = i as f64 * 10.0;
+            quiet.record_span(&span(i as u64, t, SpanPoint::Failed { generated: 0 }));
+        }
+        assert!(quiet.take_dump().is_none(), "spread-out failures are not a storm");
     }
 
     #[test]

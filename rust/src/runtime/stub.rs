@@ -54,13 +54,239 @@
 //! window to race against deterministically; `width_delay` adds a further
 //! per-slab-token latency so step cost scales with slab width (what the
 //! `--max-step-tokens` admission budget trades against).
+//!
+//! ## Fault injection
+//!
+//! [`FaultPlan`] turns the stub into a chaos backend: a seeded, purely
+//! deterministic schedule of transient step errors, fatal backend death,
+//! an injected worker panic, latency spikes, and poisoned (non-finite)
+//! logits rows.  Every decision is a pure function of
+//! `(plan.seed, step number)` — two stubs with the same spec fail at the
+//! same steps, so every recovery test in CI replays bit-for-bit.  The
+//! `CLOVER_FAULT_SEED` environment variable (read by
+//! [`FaultPlan::env_seed`], never implicitly) lets the CI chaos lane run
+//! the same suite under a matrix of seeds.
 
 use anyhow::{bail, Result};
+use std::fmt;
 use std::time::Duration;
 
 use crate::obs::Clock;
 use crate::serve::kv::{KvCodecSpec, PagedKvStore, PAGE_TOKENS};
 use crate::tensor::Tensor;
+
+/// Salt mixed into every fault decision so fault rolls never collide with
+/// the model-weight hash streams (which also consume `spec.seed`).
+const FAULT_SALT: u64 = 0xFA17_BAD0;
+
+/// Per-decision channels: each fault class rolls an independent uniform,
+/// so e.g. raising the spike rate never shifts *which* steps take a
+/// transient fault.
+const CH_TRANSIENT: u64 = 1;
+const CH_SPIKE: u64 = 2;
+const CH_POISON: u64 = 3;
+const CH_POISON_LANE: u64 = 4;
+
+/// A deterministic, seeded fault-injection schedule for [`StubModel`].
+///
+/// Every decision is a pure function of `(seed, step number, channel)`:
+/// the n-th call to [`StubModel::step`] either succeeds, fails
+/// transiently, spikes its latency, or poisons one lane's logits — and
+/// does so identically on every run and every host.  That is what makes
+/// recovery properties testable: a retried step re-rolls a *new* step
+/// number (the counter advances on every attempt), so a transient fault
+/// followed by a retry succeeds or fails by the schedule, not by chance.
+///
+/// `fatal_after_steps` / `crash_after_steps` model backend death: the
+/// first turns every later step into [`StepFault::Fatal`] (a dead device
+/// that keeps answering with errors), the second panics the calling
+/// thread (a worker crash the gateway supervisor must `catch_unwind`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the fault schedule — independent of the model seed, so
+    /// the same workload can be replayed under many fault schedules.
+    pub seed: u64,
+    /// Probability in [0, 1] that a step returns [`StepFault::Transient`]
+    /// before touching the cache.
+    pub transient_rate: f64,
+    /// Probability in [0, 1] that a step's artificial latency is
+    /// multiplied by `spike_factor`.
+    pub spike_rate: f64,
+    /// Latency multiplier for spiked steps (≥ 1).
+    pub spike_factor: u32,
+    /// Probability in [0, 1] that one lane's logits rows come back
+    /// non-finite (NaN) — the cache is still written, mirroring a real
+    /// numerical blow-up after the KV append.
+    pub poison_rate: f64,
+    /// After this many successful-or-failed steps, the backend dies: the
+    /// offending step and every later one return [`StepFault::Fatal`].
+    pub fatal_after_steps: Option<u64>,
+    /// After this many steps, the step call panics outright — the
+    /// injected worker crash the gateway supervisor recovers from.
+    pub crash_after_steps: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            transient_rate: 0.0,
+            spike_rate: 0.0,
+            spike_factor: 10,
+            poison_rate: 0.0,
+            fatal_after_steps: None,
+            crash_after_steps: None,
+        }
+    }
+}
+
+/// A malformed `--fault-plan` spec — typed so `clover check` can surface
+/// the exact locus instead of a stringly error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultPlanError {
+    /// A `key=value` entry whose key is not in the schema.
+    UnknownKey(String),
+    /// A value that failed to parse for its key's type.
+    BadValue { key: String, value: String },
+    /// A rate outside [0, 1].
+    RateOutOfRange { key: String, value: String },
+    /// An entry missing its `=` separator.
+    MissingValue(String),
+}
+
+impl fmt::Display for FaultPlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::UnknownKey(k) => write!(
+                f,
+                "unknown fault-plan key `{k}` (known: seed, transient, spike, \
+                 spike-factor, poison, fatal-after, crash-after)"
+            ),
+            Self::BadValue { key, value } => {
+                write!(f, "fault-plan key `{key}`: cannot parse `{value}`")
+            }
+            Self::RateOutOfRange { key, value } => {
+                write!(f, "fault-plan rate `{key}={value}` outside [0, 1]")
+            }
+            Self::MissingValue(e) => write!(f, "fault-plan entry `{e}` is missing `=value`"),
+        }
+    }
+}
+
+impl std::error::Error for FaultPlanError {}
+
+impl FaultPlan {
+    /// True when the plan injects nothing — the engine skips all fault
+    /// bookkeeping for no-op plans.
+    pub fn is_noop(&self) -> bool {
+        self.transient_rate == 0.0
+            && self.spike_rate == 0.0
+            && self.poison_rate == 0.0
+            && self.fatal_after_steps.is_none()
+            && self.crash_after_steps.is_none()
+    }
+
+    /// Parse a `key=value,...` spec, e.g.
+    /// `seed=7,transient=0.01,spike=0.05,spike-factor=20,poison=0.001,fatal-after=500`.
+    /// The empty string, `off`, and `none` all mean the no-op plan.
+    pub fn parse(s: &str) -> std::result::Result<Self, FaultPlanError> {
+        let s = s.trim();
+        let mut plan = Self::default();
+        if s.is_empty() || s == "off" || s == "none" {
+            return Ok(plan);
+        }
+        for entry in s.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = entry.split_once('=') else {
+                return Err(FaultPlanError::MissingValue(entry.to_string()));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let bad = || FaultPlanError::BadValue { key: key.into(), value: value.into() };
+            let rate = || -> std::result::Result<f64, FaultPlanError> {
+                let r: f64 = value.parse().map_err(|_| bad())?;
+                if !(0.0..=1.0).contains(&r) || !r.is_finite() {
+                    return Err(FaultPlanError::RateOutOfRange {
+                        key: key.into(),
+                        value: value.into(),
+                    });
+                }
+                Ok(r)
+            };
+            match key {
+                "seed" => plan.seed = value.parse().map_err(|_| bad())?,
+                "transient" => plan.transient_rate = rate()?,
+                "spike" => plan.spike_rate = rate()?,
+                "spike-factor" => {
+                    plan.spike_factor = value.parse().map_err(|_| bad())?;
+                    if plan.spike_factor == 0 {
+                        return Err(bad());
+                    }
+                }
+                "poison" => plan.poison_rate = rate()?,
+                "fatal-after" => {
+                    plan.fatal_after_steps = Some(value.parse().map_err(|_| bad())?)
+                }
+                "crash-after" => {
+                    plan.crash_after_steps = Some(value.parse().map_err(|_| bad())?)
+                }
+                _ => return Err(FaultPlanError::UnknownKey(key.to_string())),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The CI chaos lane's seed override: `CLOVER_FAULT_SEED` if set and
+    /// parseable.  Never read implicitly — callers opt in.
+    pub fn env_seed() -> Option<u64> {
+        std::env::var("CLOVER_FAULT_SEED").ok()?.trim().parse().ok()
+    }
+
+    /// Apply the `CLOVER_FAULT_SEED` override, if present.
+    pub fn with_env_seed(mut self) -> Self {
+        if let Some(seed) = Self::env_seed() {
+            self.seed = seed;
+        }
+        self
+    }
+
+    /// Uniform in [0, 1) for `(channel, step)` — the schedule's only
+    /// source of randomness.
+    fn roll(&self, channel: u64, step: u64) -> f64 {
+        f64::from(h01(mix(&[self.seed ^ FAULT_SALT, channel, step]))) + 0.5
+    }
+
+    /// Which lane a poison event at `step` hits, for `b` lanes.
+    fn poison_lane(&self, step: u64, b: usize) -> usize {
+        (mix(&[self.seed ^ FAULT_SALT, CH_POISON_LANE, step]) % b.max(1) as u64) as usize
+    }
+}
+
+/// A fault injected by a [`FaultPlan`] — the typed payload the engine's
+/// retry layer classifies by downcast.  Transient faults are worth
+/// retrying (the next attempt rolls a fresh step number); fatal faults
+/// mean the backend is gone and every in-flight request must fail or be
+/// replayed elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepFault {
+    /// One step failed; the backend is still alive.
+    Transient { step: u64 },
+    /// The backend is dead; all subsequent steps fail too.
+    Fatal { step: u64 },
+}
+
+impl fmt::Display for StepFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Transient { step } => write!(f, "injected transient fault at step {step}"),
+            Self::Fatal { step } => write!(f, "injected fatal backend death at step {step}"),
+        }
+    }
+}
+
+impl std::error::Error for StepFault {}
 
 /// Shape + behaviour of a stub engine — the stub analogue of picking a
 /// `decode_b{B}` artifact family from the manifest.
@@ -94,6 +320,9 @@ pub struct StubSpec {
     /// speed.  `Engine::new_stub` adopts this clock as the engine clock,
     /// so one spec field puts the whole serve on a shared timeline.
     pub clock: Clock,
+    /// Seeded fault-injection schedule (no-op by default) — see
+    /// [`FaultPlan`].
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for StubSpec {
@@ -110,6 +339,7 @@ impl Default for StubSpec {
             step_delay: Duration::ZERO,
             width_delay: Duration::ZERO,
             clock: Clock::wall(),
+            fault_plan: FaultPlan::default(),
         }
     }
 }
@@ -184,6 +414,11 @@ fn write_value(seed: u64, salt: usize, l: usize, h: usize, k: usize, pos: usize,
 pub struct StubModel {
     spec: StubSpec,
     store: PagedKvStore,
+    /// Count of `step` calls (including ones that faulted) — the clock
+    /// the [`FaultPlan`] schedule runs on.
+    steps: u64,
+    /// Latched by `fatal_after_steps`: once dead, every step fails.
+    dead: bool,
 }
 
 impl StubModel {
@@ -207,7 +442,7 @@ impl StubModel {
             spec.batch_slots,
             codec,
         );
-        Ok(Self { spec, store })
+        Ok(Self { spec, store, steps: 0, dead: false })
     }
 
     pub fn spec(&self) -> &StubSpec {
@@ -231,7 +466,7 @@ impl StubModel {
     /// the same pair (the pad-by-repeat convention for short slabs) is a
     /// no-op — exactly the idempotence contract of the slab artifacts.
     fn write(&mut self, lane: usize, pos: usize, token: i32) {
-        let Self { spec, store } = self;
+        let Self { spec, store, .. } = self;
         let mut coeffs = vec![0.0f32; spec.rank];
         for salt in 0..2 {
             for l in 0..spec.n_layers {
@@ -299,7 +534,34 @@ impl StubModel {
     /// from.
     pub fn step(&mut self, width: usize, toks: &[i32], poss: &[i32]) -> Result<Tensor> {
         let (b, vocab, cmax) = (self.spec.batch_slots, self.spec.vocab, self.spec.max_positions);
-        let delay = self.spec.step_delay + self.spec.width_delay * width as u32;
+        let mut delay = self.spec.step_delay + self.spec.width_delay * width as u32;
+        // Fault schedule first: a faulted step consumes a step number but
+        // never touches the cache, so a retried slab rewrites from a
+        // clean (committed) state.  Argument validation stays below —
+        // caller bugs must not be maskable by a fault plan.
+        let plan = self.spec.fault_plan.clone();
+        self.steps += 1;
+        let step_no = self.steps;
+        let mut poison = None;
+        if !plan.is_noop() {
+            if plan.crash_after_steps.is_some_and(|n| step_no > n) {
+                panic!("injected worker crash at stub step {step_no}");
+            }
+            if self.dead || plan.fatal_after_steps.is_some_and(|n| step_no > n) {
+                self.dead = true;
+                return Err(StepFault::Fatal { step: step_no }.into());
+            }
+            if plan.transient_rate > 0.0 && plan.roll(CH_TRANSIENT, step_no) < plan.transient_rate
+            {
+                return Err(StepFault::Transient { step: step_no }.into());
+            }
+            if plan.spike_rate > 0.0 && plan.roll(CH_SPIKE, step_no) < plan.spike_rate {
+                delay *= plan.spike_factor;
+            }
+            if plan.poison_rate > 0.0 && plan.roll(CH_POISON, step_no) < plan.poison_rate {
+                poison = Some(plan.poison_lane(step_no, b));
+            }
+        }
         if !self.spec.widths().contains(&width) {
             bail!("stub: no program for slab width {width} (have {:?})", self.spec.widths());
         }
@@ -327,6 +589,12 @@ impl StubModel {
                 let at = (lane * width + j) * vocab;
                 self.logits_into(lane, pos, &mut logits[at..at + vocab]);
             }
+        }
+        // Poison lands *after* the cache writes: the KV append happened,
+        // only the readout blew up — the engine must quarantine the lane,
+        // not trust a rollback to scrub it.
+        if let Some(lane) = poison {
+            logits[lane * width * vocab..(lane + 1) * width * vocab].fill(f32::NAN);
         }
         self.spec.clock.sleep(delay);
         let shape = if width == 1 { vec![b, vocab] } else { vec![b, width, vocab] };
@@ -734,5 +1002,182 @@ mod tests {
         assert!(real.elapsed() < Duration::from_secs(2), "delay must not block");
         // step_delay + 1 × width_delay, burned entirely on the timeline.
         assert_eq!(clock.secs_since_epoch(clock.now()), 3.0);
+    }
+
+    #[test]
+    fn fault_plan_parse_roundtrips_and_rejects() {
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("off").unwrap().is_noop());
+        let p = FaultPlan::parse(
+            "seed=7, transient=0.25, spike=0.5, spike-factor=20, poison=0.1, \
+             fatal-after=100, crash-after=200",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.transient_rate, 0.25);
+        assert_eq!(p.spike_rate, 0.5);
+        assert_eq!(p.spike_factor, 20);
+        assert_eq!(p.poison_rate, 0.1);
+        assert_eq!(p.fatal_after_steps, Some(100));
+        assert_eq!(p.crash_after_steps, Some(200));
+        assert!(!p.is_noop());
+        assert!(matches!(
+            FaultPlan::parse("bogus=1"),
+            Err(FaultPlanError::UnknownKey(_))
+        ));
+        assert!(matches!(
+            FaultPlan::parse("transient=1.5"),
+            Err(FaultPlanError::RateOutOfRange { .. })
+        ));
+        assert!(matches!(
+            FaultPlan::parse("transient=-0.1"),
+            Err(FaultPlanError::RateOutOfRange { .. })
+        ));
+        assert!(matches!(
+            FaultPlan::parse("seed=abc"),
+            Err(FaultPlanError::BadValue { .. })
+        ));
+        assert!(matches!(
+            FaultPlan::parse("spike-factor=0"),
+            Err(FaultPlanError::BadValue { .. })
+        ));
+        assert!(matches!(
+            FaultPlan::parse("transient"),
+            Err(FaultPlanError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn transient_faults_are_deterministic_and_leave_cache_untouched() {
+        let mk = || StubSpec {
+            fault_plan: FaultPlan { seed: 11, transient_rate: 0.3, ..Default::default() },
+            ..spec()
+        };
+        let run = |mut m: StubModel| {
+            let mut faulted = Vec::new();
+            let mut last = None;
+            for i in 0..40i32 {
+                match m.step(1, &[3, 0], &[i % 30, 0]) {
+                    Ok(lg) => last = Some(lg.data().to_vec()),
+                    Err(e) => {
+                        let f = e.downcast_ref::<StepFault>().copied();
+                        assert!(
+                            matches!(f, Some(StepFault::Transient { .. })),
+                            "expected a transient fault, got {e:#}"
+                        );
+                        faulted.push(i);
+                    }
+                }
+            }
+            (faulted, last)
+        };
+        let (f1, l1) = run(StubModel::new(mk()));
+        let (f2, l2) = run(StubModel::new(mk()));
+        assert!(!f1.is_empty(), "rate 0.3 over 40 steps must fault at least once");
+        assert!(f1.len() < 40, "rate 0.3 must not fault every step");
+        assert_eq!(f1, f2, "fault schedule must be deterministic");
+        assert_eq!(l1, l2, "logits after identical schedules must match");
+        // A transient fault leaves the cache unwritten: replay the same
+        // workload skipping faulted attempts on a fault-free stub and the
+        // caches agree bit-for-bit.
+        let mut faulty = StubModel::new(mk());
+        let mut clean = StubModel::new(spec());
+        for i in 0..40i32 {
+            if faulty.step(1, &[3, 0], &[i % 30, 0]).is_ok() {
+                clean.step(1, &[3, 0], &[i % 30, 0]).unwrap();
+            }
+        }
+        assert_eq!(faulty.caches()[0].data(), clean.caches()[0].data());
+    }
+
+    #[test]
+    fn fatal_after_steps_latches_dead() {
+        let mut m = StubModel::new(StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(2), ..Default::default() },
+            ..spec()
+        });
+        assert!(m.step(1, &[3, 0], &[0, 0]).is_ok());
+        assert!(m.step(1, &[3, 0], &[1, 0]).is_ok());
+        for i in 0..3 {
+            let e = m.step(1, &[3, 0], &[2 + i, 0]).unwrap_err();
+            assert!(
+                matches!(e.downcast_ref::<StepFault>(), Some(StepFault::Fatal { .. })),
+                "dead backend must stay dead, got {e:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn crash_after_steps_panics() {
+        let r = std::panic::catch_unwind(|| {
+            let mut m = StubModel::new(StubSpec {
+                fault_plan: FaultPlan { crash_after_steps: Some(1), ..Default::default() },
+                ..spec()
+            });
+            m.step(1, &[3, 0], &[0, 0]).unwrap();
+            let _ = m.step(1, &[3, 0], &[1, 0]);
+        });
+        assert!(r.is_err(), "step past crash-after must panic");
+    }
+
+    #[test]
+    fn spike_multiplies_delay_on_schedule() {
+        let clock = Clock::manual();
+        let mut s = spec();
+        s.step_delay = Duration::from_millis(1);
+        s.clock = clock.clone();
+        s.fault_plan = FaultPlan { seed: 3, spike_rate: 0.5, spike_factor: 10, ..Default::default() };
+        let mut m = StubModel::new(s);
+        let mut costs = Vec::new();
+        for i in 0..20i32 {
+            let t0 = clock.secs_since_epoch(clock.now());
+            m.step(1, &[3, 0], &[i, 0]).unwrap();
+            costs.push(clock.secs_since_epoch(clock.now()) - t0);
+        }
+        let spiked = costs.iter().filter(|&&c| c > 0.005).count();
+        assert!(spiked > 0, "some steps must spike");
+        assert!(spiked < 20, "not every step may spike");
+    }
+
+    #[test]
+    fn poison_nans_exactly_one_lane_and_cache_is_still_written() {
+        let mut s = spec();
+        s.fault_plan = FaultPlan { seed: 5, poison_rate: 0.4, ..Default::default() };
+        let mut m = StubModel::new(s);
+        let mut clean = StubModel::new(spec());
+        let mut saw_poison = false;
+        for i in 0..20i32 {
+            let lg = m.step(1, &[3, 4], &[i, i]).unwrap();
+            clean.step(1, &[3, 4], &[i, i]).unwrap();
+            let bad_lanes: Vec<usize> = (0..2)
+                .filter(|&lane| lg.data()[lane * 16..(lane + 1) * 16].iter().any(|v| v.is_nan()))
+                .collect();
+            if !bad_lanes.is_empty() {
+                saw_poison = true;
+                assert_eq!(bad_lanes.len(), 1, "poison hits exactly one lane");
+                let lane = bad_lanes[0];
+                assert!(
+                    lg.data()[lane * 16..(lane + 1) * 16].iter().all(|v| v.is_nan()),
+                    "the whole poisoned row is NaN"
+                );
+            }
+        }
+        assert!(saw_poison, "rate 0.4 over 20 steps must poison at least once");
+        // The cache writes happened despite the poisoned readouts.
+        assert_eq!(m.caches()[0].data(), clean.caches()[0].data());
+    }
+
+    #[test]
+    fn env_seed_override_applies() {
+        // Serialized via the env var name being unique to this test run
+        // is not possible; keep it simple — set, read, restore.
+        let prev = std::env::var("CLOVER_FAULT_SEED").ok();
+        std::env::set_var("CLOVER_FAULT_SEED", "42");
+        let p = FaultPlan { seed: 1, transient_rate: 0.1, ..Default::default() }.with_env_seed();
+        assert_eq!(p.seed, 42);
+        match prev {
+            Some(v) => std::env::set_var("CLOVER_FAULT_SEED", v),
+            None => std::env::remove_var("CLOVER_FAULT_SEED"),
+        }
     }
 }

@@ -51,11 +51,11 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, HashSet};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::model::params::ParamSet;
 use crate::obs::{Clock, SpanEvent, SpanPoint, StepEvent};
-use crate::runtime::stub::{StubModel, StubSpec};
+use crate::runtime::stub::{FaultPlan, StepFault, StubModel, StubSpec};
 use crate::runtime::{DecodeSession, Runtime};
 use crate::tensor::{Tensor, Value};
 use crate::util::argmax;
@@ -326,6 +326,83 @@ pub struct Cancellation {
     pub reason: CancelReason,
 }
 
+/// Why a request reached the `Failed` terminal.  The distinction matters
+/// to the supervisor above: a [`FailReason::Backend`] request died with
+/// the engine and is *losslessly replayable* on a rebuilt one, while a
+/// [`FailReason::Poisoned`] request failed individually on a healthy
+/// engine — replaying it would just poison another lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// The step backend died (fatal step error, or a transient fault that
+    /// outlived the retry budget) and took every in-flight request with
+    /// it.
+    Backend,
+    /// This lane's logits came back non-finite; the lane is quarantined
+    /// ([`KvManager::quarantine`]) and only this request fails.
+    Poisoned,
+}
+
+/// A failed backend step, classified for the retry layer: transient
+/// faults are retried with exponential backoff under [`RetryPolicy`];
+/// fatal errors (and transient ones that exhaust the budget) kill the
+/// serve — every in-flight request fails with [`FailReason::Backend`]
+/// and `serve_*` returns the underlying error for the supervisor.
+///
+/// Classification is by downcast: a
+/// [`StepFault::Transient`](crate::runtime::stub::StepFault) anywhere in
+/// the chain is transient; everything else — [`StepFault::Fatal`], PJRT
+/// execution errors, shape mismatches — is fatal, because a step
+/// executor gives no general way to tell a blip from a dead device, and
+/// retrying an unknown error against a corrupt backend is worse than
+/// failing over.
+#[derive(Debug)]
+pub enum StepError {
+    /// Worth retrying: the backend is believed alive.
+    Transient(anyhow::Error),
+    /// The backend is gone (or the retry budget is spent).
+    Fatal(anyhow::Error),
+}
+
+impl StepError {
+    /// Classify a raw step error (see the type docs).
+    pub fn classify(e: anyhow::Error) -> Self {
+        match e.downcast_ref::<StepFault>() {
+            Some(StepFault::Transient { .. }) => Self::Transient(e),
+            _ => Self::Fatal(e),
+        }
+    }
+
+    /// Unwrap the underlying error.
+    pub fn into_inner(self) -> anyhow::Error {
+        match self {
+            Self::Transient(e) | Self::Fatal(e) => e,
+        }
+    }
+}
+
+/// Per-step retry policy for transient backend faults (`clover serve
+/// --retry-budget N`): attempt `1 + budget` times total, sleeping
+/// `backoff × 2^attempt` on the engine clock between attempts — on a
+/// manual clock the backoff burns *virtual* time, so recovery tests and
+/// benches are deterministic and instant.  Retrying a step is safe by
+/// the same idempotence contract padding relies on: a failed step wrote
+/// either nothing (the stub's fault model) or the same pure-function
+/// values a retry rewrites, and session/KV state only advances after a
+/// step succeeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = fail fast).
+    pub budget: usize,
+    /// Initial backoff, doubled each retry.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { budget: 3, backoff: Duration::from_millis(1) }
+    }
+}
+
 /// Per-step observer and control surface threaded through the engine loop.
 ///
 /// The engine only *returns* finished [`Completion`]s; everything live —
@@ -366,6 +443,14 @@ pub trait StepHook {
     /// A request was cancelled; `tokens` is the partial row (prompt +
     /// whatever was generated before retirement).
     fn on_cancelled(&mut self, _id: u64, _tokens: Vec<i32>, _reason: CancelReason, _step: usize) {}
+
+    /// A request failed terminally: the backend died under it
+    /// ([`FailReason::Backend`] — the serve is about to return an error,
+    /// and a supervisor may replay the request losslessly on a rebuilt
+    /// engine) or its lane was quarantined after poisoned logits
+    /// ([`FailReason::Poisoned`] — the engine keeps serving).  `tokens`
+    /// is the partial row, like `on_cancelled`.
+    fn on_failed(&mut self, _id: u64, _tokens: Vec<i32>, _reason: FailReason, _step: usize) {}
 
     /// Opt in to the observability taps below.  The engine only assembles
     /// [`StepEvent`]/[`SpanEvent`] payloads (lane census, token mix, KV
@@ -445,6 +530,20 @@ pub struct ServeMetrics {
     /// Requests surrendered from the queue to a coordinating scheduler
     /// (cross-engine migration) — neither completed nor cancelled here.
     pub migrated: usize,
+    /// Requests that reached the `Failed` terminal: lanes quarantined
+    /// after poisoned logits, plus every request the backend's death took
+    /// down.  Conserved alongside completed/cancelled/migrated:
+    /// `completed + cancelled + migrated + failed == enqueued`.
+    pub failed: usize,
+    /// Step attempts that returned a backend fault (transient or fatal,
+    /// target and draft alike).
+    pub step_faults: usize,
+    /// Transient-fault retries dispatched under the [`RetryPolicy`]
+    /// (successful or not).
+    pub step_retries: usize,
+    /// KV lanes retired for the serve's lifetime after poisoned logits
+    /// ([`KvManager::quarantine`]).
+    pub quarantined_lanes: usize,
     /// Admissions that attached cached prefix blocks instead of
     /// prefilling them.
     pub prefix_hits: usize,
@@ -537,6 +636,9 @@ pub struct Engine<'rt> {
     /// Radix prefix-cache block width in tokens (None = caching off; see
     /// [`Engine::with_prefix_cache`]).  Stub backing only.
     prefix_cache_block: Option<usize>,
+    /// Transient-fault retry policy for every step dispatch (target,
+    /// draft, and mirror steps alike); see [`RetryPolicy`].
+    retry: RetryPolicy,
     /// Time source for every `now` the step loop takes (cancellation
     /// sweeps, TTFT/latency stamps, wall_s) and for trace timestamps.
     /// Wall by default; [`Engine::new_stub`] adopts the spec's clock so a
@@ -600,6 +702,7 @@ impl<'rt> Engine<'rt> {
             max_step_tokens: None,
             kv_memory_budget: None,
             prefix_cache_block: None,
+            retry: RetryPolicy::default(),
             clock: Clock::wall(),
         })
     }
@@ -630,6 +733,7 @@ impl<'rt> Engine<'rt> {
             max_step_tokens: None,
             kv_memory_budget: None,
             prefix_cache_block: None,
+            retry: RetryPolicy::default(),
             clock,
         }
     }
@@ -754,6 +858,36 @@ impl<'rt> Engine<'rt> {
     /// The configured prefix-cache block width (None = caching off).
     pub fn prefix_cache_block(&self) -> Option<usize> {
         self.prefix_cache_block
+    }
+
+    /// Set the transient-fault retry policy (`clover serve
+    /// --retry-budget N`): up to `retry.budget` re-dispatches of a
+    /// failed step with exponential backoff starting at
+    /// `retry.backoff`.  A failed step committed nothing — the KV
+    /// cursor only advances and sessions only observe logits after a
+    /// step returns Ok — so a retry re-runs the identical fused step.
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Arm a deterministic fault schedule on the stub target backing
+    /// (`clover serve --fault-plan SPEC`): transient step errors,
+    /// fatal backend death, latency spikes, and poisoned-logits rows,
+    /// every one a pure function of `(plan.seed, step)` — see
+    /// [`FaultPlan`].  Stub backing only: compiled engines fail on
+    /// their own schedule.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Result<Self> {
+        let Backing::Stub(spec) = &mut self.backing else {
+            bail!("--fault-plan requires the stub backing — fault injection drives chaos tests, not devices");
+        };
+        spec.fault_plan = plan;
+        Ok(self)
+    }
+
+    /// The retry policy in force (budget + base backoff).
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
     }
 
     /// Batch lanes of the fixed-shape step artifacts — the fleet
@@ -1342,6 +1476,24 @@ impl<'rt> Engine<'rt> {
                     }
                     break; // everything completed at admission time
                 }
+                // Every lane retired poisoned: nothing queued can ever be
+                // admitted again.  Fail the backlog (each request gets
+                // its terminal event) before reporting the engine dead.
+                if kv.quarantined() == b {
+                    fail_all(
+                        &mut lanes,
+                        &mut batcher,
+                        &mut kv,
+                        &mut kv_reservations,
+                        &mut prefix,
+                        &mut lane_pins,
+                        &mut metrics,
+                        hook,
+                        &self.clock,
+                        wants_obs,
+                    );
+                    bail!("all {b} KV lanes quarantined — backend unusable");
+                }
                 bail!("scheduler stalled: free lanes but nothing admissible");
             }
             // Zero re-assigned lanes so no stale KV rows survive a slot
@@ -1397,7 +1549,33 @@ impl<'rt> Engine<'rt> {
                             poss[lane] = p as i32;
                         }
                     }
-                    let logits = draft.step(1, toks, poss)?;
+                    let retries0 = metrics.step_retries;
+                    let logits = match step_with_retry(
+                        draft,
+                        1,
+                        &toks,
+                        &poss,
+                        &self.retry,
+                        &self.clock,
+                        &mut metrics,
+                    ) {
+                        Ok(logits) => logits,
+                        Err(e) => {
+                            fail_all(
+                                &mut lanes,
+                                &mut batcher,
+                                &mut kv,
+                                &mut kv_reservations,
+                                &mut prefix,
+                                &mut lane_pins,
+                                &mut metrics,
+                                hook,
+                                &self.clock,
+                                wants_obs,
+                            );
+                            return Err(e.into_inner().context("draft backend died mid-serve"));
+                        }
+                    };
                     let mut drafted_now = 0usize;
                     for (lane, slot) in lanes.iter_mut().enumerate() {
                         let Some(sess) = slot else { continue };
@@ -1424,6 +1602,7 @@ impl<'rt> Engine<'rt> {
                             decode_tokens: 0,
                             draft_tokens: drafted_now,
                             verify_tokens: 0,
+                            retries: metrics.step_retries - retries0,
                             kv_live_bytes: kv.live_bytes(),
                             kv_freed_bytes: kv.freed_bytes(),
                             kv_cached_bytes: kv.cache_pages() * target_page_bytes,
@@ -1461,11 +1640,52 @@ impl<'rt> Engine<'rt> {
             // idempotent by the pad-by-repeat contract).
             let mirror =
                 draft_backend.is_some() && lanes.iter().flatten().any(|s| s.spec_enabled());
-            let mirror_args = mirror.then(|| (toks.clone(), poss.clone()));
-            let logits = backend.step(w, toks, poss)?;
-            if let Some((mtoks, mposs)) = mirror_args {
+            let retries0 = metrics.step_retries;
+            let logits = match step_with_retry(
+                &mut backend,
+                w,
+                &toks,
+                &poss,
+                &self.retry,
+                &self.clock,
+                &mut metrics,
+            ) {
+                Ok(logits) => logits,
+                Err(e) => {
+                    fail_all(
+                        &mut lanes,
+                        &mut batcher,
+                        &mut kv,
+                        &mut kv_reservations,
+                        &mut prefix,
+                        &mut lane_pins,
+                        &mut metrics,
+                        hook,
+                        &self.clock,
+                        wants_obs,
+                    );
+                    return Err(e.into_inner().context("backend died mid-serve"));
+                }
+            };
+            if mirror {
                 let draft = draft_backend.as_mut().expect("mirror implies a draft");
-                let _ = draft.step(w, mtoks, mposs)?;
+                if let Err(e) =
+                    step_with_retry(draft, w, &toks, &poss, &self.retry, &self.clock, &mut metrics)
+                {
+                    fail_all(
+                        &mut lanes,
+                        &mut batcher,
+                        &mut kv,
+                        &mut kv_reservations,
+                        &mut prefix,
+                        &mut lane_pins,
+                        &mut metrics,
+                        hook,
+                        &self.clock,
+                        wants_obs,
+                    );
+                    return Err(e.into_inner().context("draft backend died mid-serve"));
+                }
             }
             metrics.decode_steps += 1;
 
@@ -1476,12 +1696,60 @@ impl<'rt> Engine<'rt> {
             let (mut mix_prefill, mut mix_decode, mut mix_verify) = (0usize, 0usize, 0usize);
             let lanes_live = plan.slabs.iter().flatten().count();
             for lane in 0..b {
-                let Some(sess) = lanes[lane].as_mut() else { continue };
+                if lanes[lane].is_none() {
+                    continue;
+                }
                 let slab = plan.slabs[lane].as_ref().expect("occupied lane planned");
                 let taken = slab.len;
                 if taken == 0 {
                     continue; // budget-deferred: fed a pad, consumed nothing
                 }
+                // ---- poisoned-logits quarantine ----
+                // A non-finite readout row means the backend corrupted
+                // this lane (the stub's poison fault; a NaN storm on a
+                // real device).  The KV append already happened — only
+                // the readout blew up — so the accounting stays honest
+                // (advance, then quarantine: the lane's private bytes
+                // free, the slot never reallocates) and the request
+                // fails *individually* with [`FailReason::Poisoned`]:
+                // unlike a backend death, replaying it verbatim would
+                // just poison another lane.
+                if logits_row(&logits, lane, taken - 1, self.vocab)
+                    .iter()
+                    .any(|v| !v.is_finite())
+                {
+                    let sess = lanes[lane].take().expect("lane occupied");
+                    if let Some(trie) = prefix.as_mut() {
+                        trie.unpin(&lane_pins[lane]);
+                        lane_pins[lane].clear();
+                        if let Some(store) = backend.stub_store_mut() {
+                            store.zero_lane(lane);
+                        }
+                    }
+                    kv.advance_by(sess.slot(), taken)?;
+                    kv.quarantine(sess.slot())?;
+                    kv_reservations.remove(&sess.id());
+                    metrics.failed += 1;
+                    metrics.quarantined_lanes += 1;
+                    let gen = sess.generated();
+                    metrics.generated_tokens += gen;
+                    let id = sess.id();
+                    hook.on_failed(
+                        id,
+                        sess.into_tokens(),
+                        FailReason::Poisoned,
+                        metrics.decode_steps,
+                    );
+                    if wants_obs {
+                        hook.on_span(&SpanEvent {
+                            id,
+                            t_s: self.clock.secs_since_epoch(now),
+                            point: SpanPoint::Failed { generated: gen },
+                        });
+                    }
+                    continue;
+                }
+                let sess = lanes[lane].as_mut().expect("lane occupied");
                 let prefill_part = if sess.verify_len().is_some() {
                     0
                 } else {
@@ -1625,6 +1893,7 @@ impl<'rt> Engine<'rt> {
                     decode_tokens: mix_decode,
                     draft_tokens: 0,
                     verify_tokens: mix_verify,
+                    retries: metrics.step_retries - retries0,
                     kv_live_bytes: kv.live_bytes(),
                     kv_freed_bytes: kv.freed_bytes(),
                     kv_cached_bytes: kv.cache_pages() * target_page_bytes,
@@ -1635,20 +1904,27 @@ impl<'rt> Engine<'rt> {
 
         // Conservation: every slot returned, every request accounted for —
         // completed or cancelled, never lost.
-        if kv.free_slots() != b {
-            bail!("KV slot leak: {}/{} free after drain", kv.free_slots(), b);
+        if kv.free_slots() + kv.quarantined() != b {
+            bail!(
+                "KV slot leak: {}/{} free ({} quarantined) after drain",
+                kv.free_slots(),
+                b,
+                kv.quarantined()
+            );
         }
         let (enq, adm) = batcher.counters();
         if enq != adm + batcher.removed()
-            || metrics.completed + metrics.cancelled + metrics.migrated != enq as usize
+            || metrics.completed + metrics.cancelled + metrics.migrated + metrics.failed
+                != enq as usize
         {
             bail!(
                 "request conservation violated: enqueued {enq}, admitted {adm}, \
-                 removed {}, completed {}, cancelled {}, migrated {}",
+                 removed {}, completed {}, cancelled {}, migrated {}, failed {}",
                 batcher.removed(),
                 metrics.completed,
                 metrics.cancelled,
-                metrics.migrated
+                metrics.migrated,
+                metrics.failed
             );
         }
 
@@ -1691,6 +1967,115 @@ fn logits_row(logits: &Tensor, lane: usize, idx: usize, vocab: usize) -> &[f32] 
             &logits.data()[at..at + vocab]
         }
         d => unreachable!("step logits must be [B, V] or [B, W, V], got rank {d}"),
+    }
+}
+
+/// Dispatch one fused step through the transient-fault retry loop: a
+/// [`StepError::Transient`] classification re-dispatches the identical
+/// step after exponential backoff (base `retry.backoff`, doubling per
+/// attempt) up to `retry.budget` retries; a [`StepError::Fatal`]
+/// classification — or a transient fault that outlives the budget —
+/// returns `Err` for the caller to fail the serve.  Re-dispatch is safe
+/// because a failed step committed nothing: the stub injects transient
+/// faults before its cache writes, and sessions / KV cursors only
+/// observe a step after it returns Ok.
+fn step_with_retry(
+    backend: &mut StepBackend,
+    width: usize,
+    toks: &[i32],
+    poss: &[i32],
+    retry: &RetryPolicy,
+    clock: &Clock,
+    metrics: &mut ServeMetrics,
+) -> std::result::Result<Tensor, StepError> {
+    let mut attempt = 0usize;
+    loop {
+        match backend.step(width, toks.to_vec(), poss.to_vec()) {
+            Ok(logits) => return Ok(logits),
+            Err(e) => match StepError::classify(e) {
+                StepError::Fatal(e) => return Err(StepError::Fatal(e)),
+                StepError::Transient(e) => {
+                    metrics.step_faults += 1;
+                    if attempt >= retry.budget {
+                        return Err(StepError::Fatal(e.context(format!(
+                            "transient fault persisted past the {}-attempt retry budget",
+                            retry.budget
+                        ))));
+                    }
+                    clock.sleep(retry.backoff * (1u32 << attempt.min(16) as u32));
+                    metrics.step_retries += 1;
+                    attempt += 1;
+                }
+            },
+        }
+    }
+}
+
+/// Fail every live lane and every queued request with
+/// [`FailReason::Backend`]: the backend died (fatal fault, exhausted
+/// retry budget, or every lane quarantined), so nothing held here can
+/// make progress.  Sessions hand their partial rows to
+/// [`StepHook::on_failed`] — the gateway supervisor's replay book — and
+/// count as `failed`, keeping the conservation invariant (`completed +
+/// cancelled + migrated + failed == enqueued`) intact on the error
+/// path.  Queued requests leave through `reclaim_newest`, so the
+/// batcher's own `enqueued == admitted + removed` ledger stays
+/// balanced too.
+#[allow(clippy::too_many_arguments)]
+fn fail_all(
+    lanes: &mut [Option<Session>],
+    batcher: &mut Batcher,
+    kv: &mut KvManager,
+    kv_reservations: &mut HashMap<u64, usize>,
+    prefix: &mut Option<PrefixCache>,
+    lane_pins: &mut [Vec<usize>],
+    metrics: &mut ServeMetrics,
+    hook: &mut dyn StepHook,
+    clock: &Clock,
+    wants_obs: bool,
+) {
+    let step = metrics.decode_steps;
+    let now = clock.now();
+    for lane in 0..lanes.len() {
+        let Some(sess) = lanes[lane].take() else { continue };
+        if let Some(trie) = prefix.as_mut() {
+            trie.unpin(&lane_pins[lane]);
+            lane_pins[lane].clear();
+        }
+        let _ = kv.free(sess.slot());
+        kv_reservations.remove(&sess.id());
+        metrics.failed += 1;
+        let gen = sess.generated();
+        metrics.generated_tokens += gen;
+        let id = sess.id();
+        hook.on_failed(id, sess.into_tokens(), FailReason::Backend, step);
+        if wants_obs {
+            hook.on_span(&SpanEvent {
+                id,
+                t_s: clock.secs_since_epoch(now),
+                point: SpanPoint::Failed { generated: gen },
+            });
+        }
+    }
+    while let Some(req) = batcher.reclaim_newest() {
+        metrics.failed += 1;
+        let arrived = req.arrived;
+        let id = req.id;
+        hook.on_failed(id, req.prompt, FailReason::Backend, step);
+        if wants_obs {
+            // Failed while still queued: open the span at its arrival
+            // stamp so the timeline shows the queue wait it paid.
+            hook.on_span(&SpanEvent {
+                id,
+                t_s: clock.secs_since_epoch(arrived),
+                point: SpanPoint::Queued,
+            });
+            hook.on_span(&SpanEvent {
+                id,
+                t_s: clock.secs_since_epoch(now),
+                point: SpanPoint::Failed { generated: 0 },
+            });
+        }
     }
 }
 
@@ -3284,5 +3669,258 @@ mod tests {
         assert_eq!(m.completed, 2);
         let done: Vec<u64> = out.iter().map(|c| c.id).collect();
         assert_eq!(done, vec![0, 1], "survivors complete locally");
+    }
+
+    // ---- fault injection: retry, fail-all, quarantine (stub-backed) ----
+
+    /// Collects `Failed` terminal events — the gateway supervisor's view
+    /// of a dying engine.
+    #[derive(Default)]
+    struct FailHook {
+        failed: Vec<(u64, Vec<i32>, FailReason, usize)>,
+    }
+
+    impl StepHook for FailHook {
+        fn on_failed(&mut self, id: u64, tokens: Vec<i32>, reason: FailReason, step: usize) {
+            self.failed.push((id, tokens, reason, step));
+        }
+    }
+
+    #[test]
+    fn transient_faults_retry_to_bit_identical_output() {
+        // Seed 4 at rate 0.25 first faults at step 5 and never runs more
+        // than 3 consecutive faults — inside the default 3-retry budget,
+        // so every fault is absorbed by a retry.  A retried step commits
+        // nothing twice (the stub faults before its cache writes; the
+        // session only observes logits after Ok), so the output is
+        // bit-identical to the fault-free run.
+        let (base, bm) = Engine::new_stub(stub_spec()).serve_all(codec_reqs(4), policy()).unwrap();
+        let plan = FaultPlan { seed: 4, transient_rate: 0.25, ..FaultPlan::default() };
+        let engine = Engine::new_stub(stub_spec()).with_fault_plan(plan).unwrap();
+        let (out, m) = engine.serve_all(codec_reqs(4), policy()).unwrap();
+        assert_eq!(bm.completed, 4);
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.failed, 0);
+        assert!(m.step_faults > 0, "seed 4 must fault within this serve");
+        assert_eq!(m.step_retries, m.step_faults, "every fault was retried, none fatal");
+        for (a, b) in out.iter().zip(&base) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {}: retries must not change tokens", a.id);
+        }
+    }
+
+    #[test]
+    fn fatal_backend_death_fails_everything_with_terminal_events() {
+        // The backend dies at step 4 (`fatal_after_steps: 3`): the serve
+        // returns Err, and every request — holding a lane or still
+        // queued — gets exactly one Failed(Backend) event carrying its
+        // partial row, which is a prefix of the fault-free output: the
+        // supervisor can replay it losslessly.
+        let spec = StubSpec { batch_slots: 2, ..stub_spec() };
+        let (base, _) = Engine::new_stub(spec.clone()).serve_all(codec_reqs(4), policy()).unwrap();
+        let plan = FaultPlan { seed: 1, fatal_after_steps: Some(3), ..FaultPlan::default() };
+        let engine = Engine::new_stub(spec).with_fault_plan(plan).unwrap();
+        let mut hook = FailHook::default();
+        let err = engine
+            .serve_hooked(codec_reqs(4), policy(), Admission::Continuous, &mut hook)
+            .unwrap_err();
+        assert!(err.to_string().contains("died mid-serve"), "{err:#}");
+        assert_eq!(hook.failed.len(), 4, "every request got a terminal event");
+        let mut ids: Vec<u64> = hook.failed.iter().map(|f| f.0).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3], "each exactly once");
+        for (id, partial, reason, _) in &hook.failed {
+            assert_eq!(*reason, FailReason::Backend, "request {id}");
+            let full = &base.iter().find(|c| c.id == *id).expect("in base").tokens;
+            assert!(
+                partial.len() <= full.len() && full[..partial.len()] == partial[..],
+                "request {id}: partial row must be a replayable prefix of the \
+                 fault-free output"
+            );
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_fatal() {
+        // transient_rate 1.0: every attempt faults, the default 3-retry
+        // budget exhausts, and the error names the budget — while the
+        // in-flight requests still get their terminal events.
+        let plan = FaultPlan { seed: 9, transient_rate: 1.0, ..FaultPlan::default() };
+        let engine = Engine::new_stub(stub_spec()).with_fault_plan(plan).unwrap();
+        let mut hook = FailHook::default();
+        let err = engine
+            .serve_hooked(codec_reqs(2), policy(), Admission::Continuous, &mut hook)
+            .unwrap_err();
+        assert!(err.to_string().contains("died mid-serve"), "{err:#}");
+        assert!(format!("{err:#}").contains("retry budget"), "{err:#}");
+        assert_eq!(hook.failed.len(), 2);
+        assert!(hook.failed.iter().all(|f| f.2 == FailReason::Backend));
+    }
+
+    #[test]
+    fn poisoned_lane_quarantines_and_backlog_fails() {
+        // poison_rate 1.0 on a single-lane engine: step 1 NaNs lane 0's
+        // readout.  The victim fails *individually* (Poisoned — replaying
+        // it verbatim would poison another lane), the lane is quarantined
+        // rather than freed, and with every lane quarantined the queued
+        // request can never be admitted: it fails too (Backend — that one
+        // *is* replayable) and the serve reports the engine unusable.
+        let spec = StubSpec {
+            batch_slots: 1,
+            fault_plan: FaultPlan { seed: 7, poison_rate: 1.0, ..FaultPlan::default() },
+            ..stub_spec()
+        };
+        let engine = Engine::new_stub(spec);
+        let mut hook = FailHook::default();
+        let err = engine
+            .serve_hooked(codec_reqs(2), policy(), Admission::Continuous, &mut hook)
+            .unwrap_err();
+        assert!(err.to_string().contains("quarantined"), "{err:#}");
+        assert_eq!(hook.failed.len(), 2);
+        assert_eq!((hook.failed[0].0, hook.failed[0].2), (0, FailReason::Poisoned));
+        assert_eq!((hook.failed[1].0, hook.failed[1].2), (1, FailReason::Backend));
+    }
+
+    /// Cancels `id` (reason Deadline) once the virtual clock passes
+    /// `deadline` — modelling a deadline expiry that lands *inside* a
+    /// retry backoff window, where the backoff sleep is what carries the
+    /// clock past the deadline.
+    struct DeadlineHook {
+        id: u64,
+        deadline: Instant,
+        fired: bool,
+        started: Vec<(u64, usize)>,
+        cancelled: Vec<(u64, Vec<i32>, CancelReason, usize)>,
+    }
+
+    impl StepHook for DeadlineHook {
+        fn take_cancellations(&mut self, now: Instant) -> Vec<Cancellation> {
+            if !self.fired && now >= self.deadline {
+                self.fired = true;
+                return vec![Cancellation { id: self.id, reason: CancelReason::Deadline }];
+            }
+            Vec::new()
+        }
+
+        fn on_started(&mut self, id: u64, _lane: usize, step: usize) {
+            self.started.push((id, step));
+        }
+
+        fn on_cancelled(&mut self, id: u64, tokens: Vec<i32>, reason: CancelReason, step: usize) {
+            self.cancelled.push((id, tokens, reason, step));
+        }
+    }
+
+    #[test]
+    fn deadline_expiry_during_retry_backoff_cancels_exactly_once() {
+        // Seed 15 at rate 0.4 faults the very first attempt, so the 1 ms
+        // backoff sleep is the only thing that moves the manual clock
+        // past the 500 µs deadline: the expiry lands during a retry
+        // backoff window by construction.  The retried step still
+        // completes (committing nothing twice), the cancel retires the
+        // lane at the next poll — exactly one terminal event — and the
+        // waiter reclaims the lane in the same iteration.
+        let clock = Clock::manual();
+        let spec = StubSpec {
+            batch_slots: 1,
+            chunk_widths: vec![1],
+            clock: clock.clone(),
+            fault_plan: FaultPlan { seed: 15, transient_rate: 0.4, ..FaultPlan::default() },
+            ..stub_spec()
+        };
+        let engine = Engine::new_stub(spec)
+            .with_retry_policy(RetryPolicy { budget: 8, backoff: Duration::from_millis(1) });
+        let now = clock.now();
+        let reqs = vec![
+            Request::greedy(0, (0..8).collect(), 4, now),
+            Request::greedy(1, vec![7], 2, now),
+        ];
+        let mut hook = DeadlineHook {
+            id: 0,
+            deadline: now + Duration::from_micros(500),
+            fired: false,
+            started: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let (out, m) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+        assert!(m.step_retries >= 1, "the first attempt must have been retried");
+        assert_eq!(hook.cancelled.len(), 1, "exactly one terminal event for id 0");
+        let (cid, _, reason, cancel_step) = &hook.cancelled[0];
+        assert_eq!((*cid, *reason), (0, CancelReason::Deadline));
+        let waiter = hook
+            .started
+            .iter()
+            .find(|&&(id, _)| id == 1)
+            .map(|&(_, step)| step)
+            .expect("waiter admitted");
+        assert_eq!(waiter, *cancel_step, "same-iteration lane reclaim");
+        assert_eq!(out.iter().map(|c| c.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!((m.completed, m.cancelled, m.failed), (1, 1, 0));
+    }
+
+    #[test]
+    fn deadline_expiry_during_verify_slab_retry_cancels_exactly_once() {
+        // Speculative pair on one lane, target fault seed 8 at rate 0.4:
+        // target step 1 (prefill) is clean, target step 2 — the round's
+        // *verify slab* — faults and retries, and that backoff is what
+        // carries the manual clock past the deadline.  The cancel lands
+        // at the next poll, mid-round: one terminal event, the waiter
+        // reclaims the lane (and its mirrored draft lane) in the same
+        // iteration, and the drain's KV + request conservation checks
+        // pass (serve returns Ok).
+        let clock = Clock::manual();
+        let target = StubSpec {
+            batch_slots: 1,
+            fault_plan: FaultPlan { seed: 8, transient_rate: 0.4, ..FaultPlan::default() },
+            ..spec_target_spec()
+        };
+        let draft = StubSpec { rank: 4, batch_slots: 1, ..spec_target_spec() };
+        let engine = Engine::new_stub(target)
+            .with_speculative_stub(draft, SpecConfig::default())
+            .unwrap()
+            .with_retry_policy(RetryPolicy { budget: 8, backoff: Duration::from_millis(1) })
+            .with_clock(clock.clone());
+        let now = clock.now();
+        let spec_req = Request {
+            id: 0,
+            prompt: (0..8).collect(),
+            max_new: 12,
+            arrived: now,
+            sampling: SamplingParams::speculative_greedy(),
+        };
+        let reqs = vec![spec_req, Request::greedy(1, vec![7], 2, now)];
+        let mut hook = DeadlineHook {
+            id: 0,
+            deadline: now + Duration::from_micros(500),
+            fired: false,
+            started: Vec::new(),
+            cancelled: Vec::new(),
+        };
+        let (out, m) = engine
+            .serve_hooked(reqs, policy(), Admission::Continuous, &mut hook)
+            .unwrap();
+        assert!(m.step_retries >= 1, "the verify slab must have been retried");
+        assert!(m.spec_rounds >= 1, "the cancel landed after a verify round ran");
+        assert_eq!(hook.cancelled.len(), 1, "exactly one terminal event for id 0");
+        let (cid, partial, reason, cancel_step) = &hook.cancelled[0];
+        assert_eq!((*cid, *reason), (0, CancelReason::Deadline));
+        assert!(partial.len() > 8, "the round's accepted tokens are in the partial row");
+        let waiter = hook
+            .started
+            .iter()
+            .find(|&&(id, _)| id == 1)
+            .map(|&(_, step)| step)
+            .expect("waiter admitted");
+        assert_eq!(waiter, *cancel_step, "same-iteration lane + draft-lane reclaim");
+        assert_eq!((m.completed, m.cancelled, m.failed), (1, 1, 0));
+        // The survivor's output matches a clean fault-free serve bit for
+        // bit — no stale speculative or fault state leaked into its lane.
+        let clean = Engine::new_stub(StubSpec { batch_slots: 1, ..spec_target_spec() });
+        let (cc, _) = clean
+            .serve_all(vec![Request::greedy(1, vec![7], 2, Instant::now())], policy())
+            .unwrap();
+        assert_eq!(out[0].tokens, cc[0].tokens);
     }
 }

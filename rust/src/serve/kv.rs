@@ -347,13 +347,18 @@ pub struct KvManager {
     cache_pages: usize,
     peak_bytes: usize,
     freed_bytes: usize,
+    /// Lanes retired from the pool for the engine's lifetime (poisoned
+    /// logits rows): their bytes are freed but [`KvManager::allocate`]
+    /// never hands them out again.  See [`KvManager::quarantine`].
+    quarantined: Vec<bool>,
 }
 
 impl KvManager {
     pub fn new(cfg: KvConfig) -> Self {
         let page_bytes = cfg.bytes_per_page();
         let slots = vec![None; cfg.batch_slots];
-        Self { cfg, page_bytes, slots, cache_pages: 0, peak_bytes: 0, freed_bytes: 0 }
+        let quarantined = vec![false; cfg.batch_slots];
+        Self { cfg, page_bytes, slots, cache_pages: 0, peak_bytes: 0, freed_bytes: 0, quarantined }
     }
 
     pub fn config(&self) -> &KvConfig {
@@ -371,7 +376,7 @@ impl KvManager {
             bail!("request {id} already has a slot");
         }
         for (i, s) in self.slots.iter_mut().enumerate() {
-            if s.is_none() {
+            if s.is_none() && !self.quarantined[i] {
                 *s = Some(Slot { id, pages: 0, positions: 0, shared_pages: 0 });
                 return Ok(i);
             }
@@ -457,6 +462,30 @@ impl KvManager {
         }
     }
 
+    /// Retire slot `slot` from the pool for the manager's lifetime: its
+    /// privately-owned bytes are freed exactly like [`KvManager::free`],
+    /// but the lane is never allocated again — the containment move for a
+    /// poisoned-logits lane, where the cache rows can no longer be
+    /// trusted and a rollback cannot scrub what a later occupant would
+    /// read.  Returns the request id the slot carried.  Conservation
+    /// shifts from `free_slots() == B` to
+    /// `free_slots() + quarantined() == B` at drain.
+    pub fn quarantine(&mut self, slot: usize) -> Result<u64> {
+        match self.slots.get_mut(slot).and_then(|s| s.take()) {
+            Some(s) => {
+                self.freed_bytes += (s.pages - s.shared_pages) * self.page_bytes;
+                self.quarantined[slot] = true;
+                Ok(s.id)
+            }
+            None => bail!("quarantine of unallocated slot {slot}"),
+        }
+    }
+
+    /// Lanes retired by [`KvManager::quarantine`].
+    pub fn quarantined(&self) -> usize {
+        self.quarantined.iter().filter(|&&q| q).count()
+    }
+
     /// Attach a cached prefix of `pages` pages to freshly-allocated slot
     /// `slot`: positions jump to `pages · PAGE_TOKENS` without charging
     /// this slot a byte — the pages are the cache's, counted once in
@@ -540,8 +569,14 @@ impl KvManager {
         self.freed_bytes
     }
 
+    /// Slots currently allocatable — quarantined lanes are *not* free;
+    /// drain-time conservation is `free_slots() + quarantined() == B`.
     pub fn free_slots(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_none()).count()
+        self.slots
+            .iter()
+            .zip(&self.quarantined)
+            .filter(|(s, &q)| s.is_none() && !q)
+            .count()
     }
 
     /// Positions recorded for `slot`; 0 for a free slot *or* an
@@ -1159,6 +1194,35 @@ mod tests {
             kv.allocate(i).unwrap();
         }
         assert!(kv.allocate(99).is_err());
+    }
+
+    #[test]
+    fn quarantine_retires_lane_and_frees_bytes() {
+        let mut kv = KvManager::new(cfg(8));
+        let a = kv.allocate(1).unwrap();
+        let b = kv.allocate(2).unwrap();
+        assert_eq!((a, b), (0, 1));
+        kv.advance_by(a, PAGE_TOKENS + 1).unwrap();
+        let freed0 = kv.freed_bytes();
+        // Quarantine frees the bytes like `free`...
+        assert_eq!(kv.quarantine(a).unwrap(), 1);
+        assert_eq!(kv.freed_bytes(), freed0 + 2 * kv.config().bytes_per_page());
+        assert_eq!(kv.quarantined(), 1);
+        // ...but the lane never returns to the pool: the next allocate
+        // skips it, and conservation is free + quarantined + live == B.
+        let c = kv.allocate(3).unwrap();
+        assert_ne!(c, a, "quarantined lane must not be reallocated");
+        assert!(kv.quarantine(a).is_err(), "double quarantine rejected");
+        kv.free(b).unwrap();
+        kv.free(c).unwrap();
+        assert_eq!(kv.free_slots() + kv.quarantined(), 4);
+        // Quarantining every lane exhausts the batch.
+        for lane in [b, c, 3] {
+            let s = kv.allocate(10 + lane as u64).unwrap();
+            kv.quarantine(s).unwrap();
+        }
+        assert_eq!(kv.quarantined(), 4);
+        assert!(kv.allocate(99).is_err(), "all lanes quarantined: batch full");
     }
 
     #[test]

@@ -137,7 +137,7 @@
 //! its batcher ([`Batcher::reclaim_newest`], `StepHook::reclaim_requests`
 //! / `on_reclaimed`), and the router re-places them on an idle
 //! rank-variant — `ServeMetrics::migrated` keeps the conservation
-//! invariant `completed + cancelled + migrated == enqueued`, and the
+//! invariant `completed + cancelled + migrated + failed == enqueued`, and the
 //! receiving gateway stamps `SpanPoint::Migrated` on the request's
 //! timeline.  Beyond a configured in-flight depth the gateway sheds load
 //! instead (`SubmitError::Overloaded`) — refused before any state is
@@ -223,8 +223,16 @@
 //!                            (prefill chunks consume prompt)     Span: PrefillChunk*
 //!    ◀─────────── Token{pos,id} ◀── on_token   (per sampled      Span: FirstToken
 //!                                               token)           Span: SpecRound*
+//!                 ·· step fault ─▶ Retry (backoff, ≤ budget) ··  StepEvent.retries
 //!    ◀─────────── Done{completion} | Cancelled ◀── on_done/      Span: Done |
 //!                                        on_cancelled            Span: Cancelled
+//!    ◀─────────── Failed{reason} ◀── on_failed  (poisoned lane   Span: Failed
+//!                    │               or backend death)
+//!                    └─▶ Backend failures replay on the rebuilt
+//!                        engine or FAIL OVER to a sibling rank
+//!                        (supervisor + router breaker — no event
+//!                        reaches the client until the replay's
+//!                        own terminal)
 //!  cancel token ─▶ control channel ──▶ take_cancellations (between steps)
 //! ```
 //!
@@ -245,10 +253,21 @@
 //! on completion (graceful shutdown drains accepted work to completion),
 //! `Cancelled` on token fire or deadline expiry, including cancels that
 //! land while the request is still prefilling (partial row = prompt, no
-//! tokens).  `server::Router` multiplexes this across several gateways
+//! tokens), or `Failed` when a poisoned lane retires it individually.
+//! Transient step faults never surface at all: the engine retries the
+//! identical fused step under [`engine::RetryPolicy`] (a failed step
+//! committed nothing — KV cursors and sessions only advance after Ok),
+//! and a backend death fails every held request with
+//! `FailReason::Backend`, whose partial rows the gateway supervisor
+//! replays losslessly on the rebuilt engine — the conservation invariant
+//! is `completed + cancelled + migrated + failed == enqueued` at every
+//! level.  `server::Router` multiplexes this across several gateways
 //! whose engines were compiled at different CLOVER pruning ranks, routing
 //! each request by (queue depth + pending prefill tokens) × per-rank KV
-//! cost ([`KvConfig::bytes_per_token`]).
+//! cost ([`KvConfig::bytes_per_token`]), tracking per-engine health with
+//! a fault-rate circuit breaker (Healthy/Degraded/Open, probe-driven
+//! half-open) and failing a dead engine's queued + replayable requests
+//! over to sibling ranks — see `docs/ROBUSTNESS.md`.
 
 pub mod batcher;
 pub mod engine;
@@ -259,8 +278,8 @@ pub mod session;
 
 pub use batcher::{BatchPolicy, Batcher, Request};
 pub use engine::{
-    chunk_width, Admission, Cancellation, CancelReason, Completion, Engine, LaneSlab, NoHook,
-    ServeMetrics, SpecConfig, StepHook, StepPlan,
+    chunk_width, Admission, Cancellation, CancelReason, Completion, Engine, FailReason, LaneSlab,
+    NoHook, RetryPolicy, ServeMetrics, SpecConfig, StepError, StepHook, StepPlan,
 };
 pub use kv::{
     FactoredCodec, IdentityCodec, KvCodecSpec, KvConfig, KvManager, KvSpecError, PageCodec,

@@ -27,14 +27,15 @@
 //! [`ServeMetrics`] comes back — so the engine's metrics account for
 //! every accepted request, pre-cancelled ones included.
 
-use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 // Sync primitives come through the shim so the loom lane models the
 // worker's protocols with the same types this build links.
-use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::thread::{self, JoinHandle};
 use crate::util::sync::{Arc, Mutex};
 
@@ -42,11 +43,11 @@ use crate::coordinator::ops;
 use crate::model::params::ParamSet;
 use crate::model::{decode_params_for_checkpoint, load_params, Checkpoint};
 use crate::obs::{Clock, Registry, SpanEvent, SpanPoint, StepEvent, TraceSink};
-use crate::runtime::stub::StubSpec;
+use crate::runtime::stub::{FaultPlan, StubSpec};
 use crate::runtime::Runtime;
 use crate::serve::{
-    BatchPolicy, CancelReason, Cancellation, Completion, Engine, KvCodecSpec, Request,
-    SamplingParams, ServeMetrics, SpecConfig, StepHook,
+    BatchPolicy, CancelReason, Cancellation, Completion, Engine, FailReason, KvCodecSpec, Request,
+    RetryPolicy, SamplingParams, ServeMetrics, SpecConfig, StepHook,
 };
 
 use super::cancel::{CancelRegistry, CancelToken};
@@ -131,6 +132,9 @@ pub struct EngineSpec {
     /// stamping.  Wall by default; a [`Clock::manual`] makes the gateway
     /// fully virtual-time — see [`crate::obs::clock`].
     pub clock: Clock,
+    /// Transient-fault retry policy for the worker's engine (CLI
+    /// `--retry-budget`) — see [`Engine::with_retry_policy`].
+    pub retry: RetryPolicy,
 }
 
 impl EngineSpec {
@@ -146,6 +150,7 @@ impl EngineSpec {
             kv_codec: KvCodecSpec::Identity,
             prefix_cache_block: None,
             clock: Clock::wall(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -167,6 +172,7 @@ impl EngineSpec {
             kv_codec: KvCodecSpec::Identity,
             prefix_cache_block: None,
             clock: Clock::wall(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -182,6 +188,7 @@ impl EngineSpec {
             kv_codec: KvCodecSpec::Identity,
             prefix_cache_block: None,
             clock: Clock::wall(),
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -203,6 +210,7 @@ impl EngineSpec {
             kv_codec: KvCodecSpec::Identity,
             prefix_cache_block: None,
             clock,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -248,6 +256,90 @@ impl EngineSpec {
         self.clock = clock;
         self
     }
+
+    /// Retry transient step faults under `retry` (CLI `--retry-budget`)
+    /// instead of the default 3-attempt / 1ms-backoff policy.
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Arm the stub backend's deterministic fault plan (CLI
+    /// `--fault-plan`).  Stub engines only — fault injection drives chaos
+    /// tests, not devices — so any other source fails here, at spec
+    /// construction, not inside the worker.
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Result<Self> {
+        let ParamSource::Stub(spec) = &mut self.source else {
+            bail!("--fault-plan requires the stub backing — fault injection drives chaos tests, not devices");
+        };
+        spec.fault_plan = plan;
+        Ok(self)
+    }
+}
+
+/// The replacement engine a supervisor builds must not inherit its
+/// predecessor's death sentence: scheduled fatal/crash faults fire once
+/// per plan, while transient noise, latency spikes, and poisoned rows
+/// keep running (they are exactly what the retry and quarantine layers
+/// absorb).  No-op for artifact engines.
+fn defuse_fault_plan(spec: &mut EngineSpec) {
+    if let ParamSource::Stub(s) = &mut spec.source {
+        s.fault_plan.fatal_after_steps = None;
+        s.fault_plan.crash_after_steps = None;
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` cover
+/// everything `panic!` in this crate produces).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
+/// Build the worker's engine from its spec (plus the thread's [`Runtime`]
+/// for artifact engines).  Called once at spawn and again on every
+/// supervisor restart — the runtime outlives the engines it backs.
+fn build_worker_engine<'rt>(spec: &EngineSpec, rt: Option<&'rt Runtime>) -> Result<Engine<'rt>> {
+    let engine = if let ParamSource::Stub(stub_spec) = &spec.source {
+        let mut engine = Engine::new_stub(stub_spec.clone())
+            .with_prefill_chunk(spec.prefill_chunk)
+            .with_max_step_tokens(spec.max_step_tokens)
+            .with_kv_codec(spec.kv_codec.clone())
+            .and_then(|e| e.with_prefix_cache(spec.prefix_cache_block))?;
+        if let Some(sp) = &spec.speculative {
+            let DraftSource::Stub(draft) = &sp.draft else {
+                bail!("stub engines take DraftSource::Stub drafts");
+            };
+            engine = engine.with_speculative_stub(draft.clone(), sp.cfg.clone())?;
+        }
+        engine
+    } else {
+        let rt = rt.ok_or_else(|| anyhow!("artifact engines need a Runtime"))?;
+        let (params, program) = build_params(spec, rt)?;
+        let mut engine = Engine::new(rt, &spec.preset, &program, params)?
+            .with_prefill_chunk(spec.prefill_chunk)
+            .with_max_step_tokens(spec.max_step_tokens)
+            .with_kv_codec(spec.kv_codec.clone())?
+            .with_prefix_cache(spec.prefix_cache_block)?;
+        if let Some(sp) = &spec.speculative {
+            engine = match &sp.draft {
+                DraftSource::Stub(_) => {
+                    bail!("PJRT engines take DraftSource::PrunedRank drafts")
+                }
+                DraftSource::PrunedRank { rank } => {
+                    let (dparams, dprog) = build_draft(spec, rt, *rank)?;
+                    engine.with_speculative(&dprog, dparams, sp.cfg.clone())?
+                }
+            };
+        }
+        engine
+    };
+    // The spec's clock wins over a StubSpec's own, so `with_clock` on the
+    // EngineSpec rules every timeline.
+    Ok(engine.with_retry_policy(spec.retry).with_clock(spec.clock.clone()))
 }
 
 /// Shared observability sinks a gateway publishes into: a metrics
@@ -335,6 +427,20 @@ pub struct GatewayConfig {
     /// `None` (the default) keeps the classic behaviour: backpressure
     /// only, via the bounded ingress channel.
     pub max_pending: Option<usize>,
+    /// Supervisor restart budget: how many times a dead engine (fatal
+    /// step error or a panic caught around the serve loop) is rebuilt
+    /// with every interrupted request replayed losslessly — resubmitted
+    /// as prompt ⧺ already-streamed tokens, so the client's stream simply
+    /// resumes.  `0` disables supervision: a backend death delivers a
+    /// terminal [`StreamEvent::Failed`] to every in-flight request.
+    pub max_restarts: usize,
+    /// When the engine is dead for good (restart budget spent, or a
+    /// rebuild itself failed), park the interrupted requests as
+    /// resubmittable orphans ([`Gateway::take_orphans`]) for a
+    /// [`super::Router`] to fail over to sibling engines, instead of
+    /// failing them out.  Leave off for a solo gateway — parked orphans
+    /// that nobody collects would strand their client streams.
+    pub failover: bool,
 }
 
 impl Default for GatewayConfig {
@@ -343,6 +449,8 @@ impl Default for GatewayConfig {
             queue_capacity: 64,
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
             max_pending: None,
+            max_restarts: 2,
+            failover: false,
         }
     }
 }
@@ -396,6 +504,20 @@ pub(crate) struct Submission {
     migrated: bool,
 }
 
+impl Submission {
+    /// Last resort when no engine is left to serve an orphan: deliver its
+    /// terminal `Failed` directly so the client's stream still ends with
+    /// exactly one terminal event instead of a silent disconnect.
+    pub(crate) fn fail(self, reason: FailReason) {
+        let _ = self.events.send(StreamEvent::Failed {
+            id: self.req.id,
+            reason,
+            tokens: self.req.prompt,
+            step: 0,
+        });
+    }
+}
+
 /// Control-plane messages (unbounded channel).
 pub(crate) enum Ctrl {
     Cancel(u64),
@@ -437,7 +559,24 @@ pub struct Gateway {
     /// Shared with the worker's engine so submit arrival stamps and
     /// deadlines live on the same timeline the engine measures against.
     clock: Clock,
+    /// Cleared by the worker on every exit path (drain, death past the
+    /// restart budget) — the router's liveness probe.
+    alive: Arc<AtomicBool>,
+    /// Replayable requests a dead worker parked for router failover
+    /// (`GatewayConfig::failover`); drained by [`Gateway::take_orphans`].
+    orphans: Arc<Mutex<Vec<Submission>>>,
     worker: Option<JoinHandle<Result<ServeMetrics>>>,
+}
+
+/// Clears the shared liveness flag when the worker thread exits, on
+/// *every* path — normal drain, death past the restart budget, and any
+/// unwind that escapes the supervisor's `catch_unwind`.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
 }
 
 impl Gateway {
@@ -479,9 +618,15 @@ impl Gateway {
         let worker_in_flight = in_flight.clone();
         let worker_queued_prefill = queued_prefill.clone();
         let worker_obs = obs.map(|o| ObsWiring::new(o, name));
+        let alive = Arc::new(AtomicBool::new(true));
+        let orphans: Arc<Mutex<Vec<Submission>>> = Arc::new(Mutex::new(Vec::new()));
+        let (max_restarts, failover) = (cfg.max_restarts, cfg.failover);
+        let worker_alive = alive.clone();
+        let worker_orphans = orphans.clone();
         let worker = thread::Builder::new()
             .name(format!("gateway-{name}"))
             .spawn(move || -> Result<ServeMetrics> {
+                let _alive = AliveGuard(worker_alive);
                 let mut hook = GatewayHook {
                     submit_rx: Some(submit_rx),
                     ctrl_rx,
@@ -496,105 +641,84 @@ impl Gateway {
                     reclaim_reply: None,
                     clock: spec.clock.clone(),
                     obs: worker_obs,
+                    book: HashMap::new(),
+                    supervised: max_restarts > 0 || failover,
+                    orphans: worker_orphans,
                 };
+                let mut spec = spec;
                 // Stub engines have no runtime at all; artifact engines own
                 // a Runtime for the thread's lifetime (the PJRT handles are
-                // born and die here).
-                if let ParamSource::Stub(stub_spec) = &spec.source {
-                    let built = Engine::new_stub(stub_spec.clone())
-                        .with_prefill_chunk(spec.prefill_chunk)
-                        .with_max_step_tokens(spec.max_step_tokens)
-                        .with_kv_codec(spec.kv_codec.clone())
-                        .and_then(|e| e.with_prefix_cache(spec.prefix_cache_block));
-                    let mut engine = match built {
-                        Ok(e) => e,
+                // born and die here) — it outlives the engines the
+                // supervisor rebuilds on top of it.
+                let rt = if matches!(spec.source, ParamSource::Stub(_)) {
+                    None
+                } else {
+                    match Runtime::new(&spec.artifacts_dir) {
+                        Ok(rt) => Some(rt),
                         Err(e) => {
                             let _ = ready_tx.send(Err(format!("{e:#}")));
                             return Err(e);
                         }
-                    };
-                    if let Some(sp) = &spec.speculative {
-                        let DraftSource::Stub(draft) = &sp.draft else {
-                            let msg = "stub engines take DraftSource::Stub drafts".to_string();
-                            let _ = ready_tx.send(Err(msg.clone()));
-                            bail!(msg);
-                        };
-                        let built = engine.with_speculative_stub(draft.clone(), sp.cfg.clone());
-                        engine = match built {
-                            Ok(e) => e,
-                            Err(e) => {
-                                let _ = ready_tx.send(Err(format!("{e:#}")));
-                                return Err(e);
-                            }
-                        };
                     }
-                    // The spec's clock wins over the StubSpec's own, so
-                    // `with_clock` on the EngineSpec rules every timeline.
-                    let engine = engine.with_clock(spec.clock.clone());
-                    let _ = ready_tx.send(Ok(Ready {
-                        rank: engine.kv_config().rank,
-                        kv_bytes_per_token: engine.kv_bytes_per_token_total(),
-                        draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
+                };
+                let mut ready_tx = Some(ready_tx);
+                let mut restarts_left = max_restarts;
+                // The supervisor loop: build an engine, serve until it
+                // drains (done) or dies (rebuild, replay the interrupted
+                // requests, and keep serving — budget permitting).
+                loop {
+                    let engine = match build_worker_engine(&spec, rt.as_ref()) {
+                        Ok(e) => e,
+                        Err(e) => {
+                            return if let Some(tx) = ready_tx.take() {
+                                // First build: the error surfaces from spawn.
+                                let _ = tx.send(Err(format!("{e:#}")));
+                                Err(e)
+                            } else {
+                                // A rebuild failed mid-supervision: no
+                                // replacement engine is coming.
+                                let e = e.context("rebuilding the supervised engine");
+                                hook.engine_lost(failover);
+                                hook.shutdown_dump();
+                                Err(e)
+                            };
+                        }
+                    };
+                    if let Some(tx) = ready_tx.take() {
+                        let _ = tx.send(Ok(Ready {
+                            rank: engine.kv_config().rank,
+                            kv_bytes_per_token: engine.kv_bytes_per_token_total(),
+                            draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
+                        }));
+                    }
+                    // The panic guard turns a crashing backend (or any
+                    // unwind escaping the step loop) into the same shape as
+                    // a fatal step error, so both death modes recover
+                    // through the same replay path.
+                    let served = catch_unwind(AssertUnwindSafe(|| {
+                        engine.serve_open(policy.clone(), &mut hook)
                     }));
-                    let result = engine.serve_open(policy, &mut hook);
+                    let died = match served {
+                        Ok(Ok(metrics)) => {
+                            hook.shutdown_dump();
+                            return Ok(metrics);
+                        }
+                        Ok(Err(e)) => e,
+                        Err(payload) => {
+                            anyhow!("worker panicked mid-serve: {}", panic_msg(payload.as_ref()))
+                        }
+                    };
+                    if restarts_left > 0 {
+                        restarts_left -= 1;
+                        defuse_fault_plan(&mut spec);
+                        hook.note_restart();
+                        hook.stage_replays();
+                        continue;
+                    }
+                    hook.engine_lost(failover);
                     hook.shutdown_dump();
-                    return result;
+                    return Err(died);
                 }
-                let rt = match Runtime::new(&spec.artifacts_dir) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return Err(e);
-                    }
-                };
-                let (params, program) = match build_params(&spec, &rt) {
-                    Ok(x) => x,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return Err(e);
-                    }
-                };
-                let built = Engine::new(&rt, &spec.preset, &program, params).and_then(|x| {
-                    x.with_prefill_chunk(spec.prefill_chunk)
-                        .with_max_step_tokens(spec.max_step_tokens)
-                        .with_kv_codec(spec.kv_codec.clone())?
-                        .with_prefix_cache(spec.prefix_cache_block)
-                });
-                let mut engine = match built {
-                    Ok(x) => x,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return Err(e);
-                    }
-                };
-                if let Some(sp) = &spec.speculative {
-                    let built = match &sp.draft {
-                        DraftSource::Stub(_) => {
-                            Err(anyhow::anyhow!("PJRT engines take DraftSource::PrunedRank drafts"))
-                        }
-                        DraftSource::PrunedRank { rank } => {
-                            build_draft(&spec, &rt, *rank).and_then(|(dparams, dprog)| {
-                                engine.with_speculative(&dprog, dparams, sp.cfg.clone())
-                            })
-                        }
-                    };
-                    engine = match built {
-                        Ok(e) => e,
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(format!("{e:#}")));
-                            return Err(e);
-                        }
-                    };
-                }
-                let engine = engine.with_clock(spec.clock.clone());
-                let _ = ready_tx.send(Ok(Ready {
-                    rank: engine.kv_config().rank,
-                    kv_bytes_per_token: engine.kv_bytes_per_token_total(),
-                    draft_rank: engine.draft_kv_config().map(|kc| kc.rank),
-                }));
-                let result = engine.serve_open(policy, &mut hook);
-                hook.shutdown_dump();
-                result
             })
             .context("spawning gateway worker thread")?;
         match ready_rx.recv() {
@@ -613,6 +737,8 @@ impl Gateway {
                 queued_prefill,
                 submitted: AtomicUsize::new(0),
                 clock,
+                alive,
+                orphans,
                 worker: Some(worker),
             }),
             Ok(Err(msg)) => {
@@ -620,8 +746,21 @@ impl Gateway {
                 bail!("gateway {name} failed to start: {msg}")
             }
             Err(_) => {
-                let _ = worker.join();
-                bail!("gateway {name} worker died during startup")
+                // The worker died before reporting ready: surface its real
+                // error — or its panic payload — instead of a generic
+                // "died during startup".
+                match worker.join() {
+                    Ok(Ok(_)) => {
+                        bail!("gateway {name} worker exited during startup without reporting ready")
+                    }
+                    Ok(Err(e)) => {
+                        Err(e.context(format!("gateway {name} worker died during startup")))
+                    }
+                    Err(payload) => bail!(
+                        "gateway {name} worker panicked during startup: {}",
+                        panic_msg(payload.as_ref())
+                    ),
+                }
             }
         }
     }
@@ -667,6 +806,22 @@ impl Gateway {
     /// The load-shedding cap, when configured.
     pub fn max_pending(&self) -> Option<usize> {
         self.max_pending
+    }
+
+    /// Is the worker thread still serving?  Cleared on every exit path —
+    /// graceful drain and death past the restart budget alike — so a
+    /// router can detect a dead engine without joining it.
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    /// Drain the replayable requests a dead worker parked for failover
+    /// (`GatewayConfig::failover`).  Each keeps its fleet-unique id, its
+    /// client stream, its deadline, and the tokens already streamed
+    /// (merged into the prompt), so resubmitting it to a sibling gateway
+    /// resumes the client's stream losslessly.
+    pub(crate) fn take_orphans(&self) -> Vec<Submission> {
+        std::mem::take(&mut *self.orphans.lock().unwrap_or_else(|e| e.into_inner()))
     }
 
     /// Requests accepted and not yet terminal (queued + decoding).
@@ -801,16 +956,19 @@ impl Gateway {
     /// changes.  Blocks on the bounded ingress like `submit`; the
     /// load-shedding cap is *not* applied (the router only migrates
     /// toward spare capacity, and refusing here would strand the client's
-    /// stream).
-    pub(crate) fn resubmit(&self, mut sub: Submission) -> std::result::Result<(), SubmitError> {
+    /// stream).  A closed ingress (this gateway died too) hands the
+    /// submission *back* so the caller can try a sibling or deliver a
+    /// terminal `Failed` — dropping it would strand the client's stream
+    /// without a terminal event.
+    pub(crate) fn resubmit(&self, mut sub: Submission) -> std::result::Result<(), Submission> {
         sub.migrated = true;
         let prompt_len = sub.req.prompt.len();
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.queued_prefill.fetch_add(prompt_len, Ordering::SeqCst);
-        if self.submit_tx.send(sub).is_err() {
+        if let Err(mpsc::SendError(sub)) = self.submit_tx.send(sub) {
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
             self.queued_prefill.fetch_sub(prompt_len, Ordering::SeqCst);
-            return Err(SubmitError::Closed);
+            return Err(sub);
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
         Ok(())
@@ -837,7 +995,11 @@ impl Gateway {
         let worker = self.worker.take().expect("gateway joined once");
         match worker.join() {
             Ok(result) => result,
-            Err(_) => bail!("gateway {} worker panicked", self.name),
+            // The supervisor catches serve-loop panics; reaching here
+            // means the worker's own plumbing unwound.
+            Err(payload) => {
+                bail!("gateway {} worker panicked: {}", self.name, panic_msg(payload.as_ref()))
+            }
         }
     }
 }
@@ -880,6 +1042,31 @@ struct GatewayHook {
     /// (`None` for a tap-less gateway — the engine then skips event
     /// assembly entirely via `wants_step_events`).
     obs: Option<ObsWiring>,
+    /// Lossless-replay book: one [`ReplayState`] per live request while
+    /// supervision is on, fed by `accept` and `on_token`, dropped at the
+    /// terminal event.  After an engine death this is the complete record
+    /// of what each interrupted client was promised and has already seen.
+    book: HashMap<u64, ReplayState>,
+    /// `max_restarts > 0 || failover` — whether the book is maintained
+    /// and `Backend` failures are withheld from clients for replay.
+    supervised: bool,
+    /// Shared with the handle ([`Gateway::take_orphans`]): requests a
+    /// dead-for-good worker parked for router failover.
+    orphans: Arc<Mutex<Vec<Submission>>>,
+}
+
+/// Everything needed to resubmit one interrupted request losslessly.
+#[derive(Clone)]
+struct ReplayState {
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampling: SamplingParams,
+    arrived: Instant,
+    /// Tokens already delivered to the client's stream.  A replay
+    /// resubmits `prompt ⧺ streamed` with the token budget reduced by
+    /// `streamed.len()`, so the engine regenerates nothing the client has
+    /// seen and the resumed stream carries no duplicates.
+    streamed: Vec<i32>,
 }
 
 /// Worker-side wiring of an [`Obs`] pair: the series names are rendered
@@ -902,6 +1089,9 @@ struct ObsWiring {
     s_prefix_cached_bytes: String,
     s_prefix_evicted_total: String,
     s_migrated_total: String,
+    s_failed_total: String,
+    s_step_retries_total: String,
+    s_restarts_total: String,
     drafted: u64,
     accepted: u64,
     /// Last seen cumulative eviction total — the step event carries a
@@ -929,6 +1119,9 @@ impl ObsWiring {
             s_prefix_cached_bytes: s("clover_prefix_cached_bytes"),
             s_prefix_evicted_total: s("clover_prefix_evicted_bytes_total"),
             s_migrated_total: s("clover_migrated_total"),
+            s_failed_total: s("clover_failed_total"),
+            s_step_retries_total: s("clover_step_retries_total"),
+            s_restarts_total: s("clover_engine_restarts_total"),
             drafted: 0,
             accepted: 0,
             evicted_seen: 0,
@@ -981,6 +1174,18 @@ impl GatewayHook {
         self.streams.insert(sub.req.id, sub.events);
         self.pending_prefill.insert(sub.req.id, sub.req.prompt.len());
         self.deadlines.insert(sub.req.id, sub.deadline);
+        if self.supervised {
+            self.book.insert(
+                sub.req.id,
+                ReplayState {
+                    prompt: sub.req.prompt.clone(),
+                    max_new: sub.req.max_new,
+                    sampling: sub.req.sampling.clone(),
+                    arrived: sub.req.arrived,
+                    streamed: Vec::new(),
+                },
+            );
+        }
         self.backlog.push((sub.req, sub.deadline));
     }
 
@@ -1054,10 +1259,159 @@ impl GatewayHook {
         self.registry.retire(id);
         self.prefill_done(id);
         self.deadlines.remove(&id);
+        self.book.remove(&id);
         if let Some(tx) = self.streams.remove(&id) {
             let _ = tx.send(ev);
             self.in_flight.fetch_sub(1, Ordering::SeqCst);
         }
+    }
+
+    /// Deliver a terminal `Failed` (counted in `clover_failed_total` —
+    /// the counter tracks client-visible failures, not every backend
+    /// death the supervisor absorbs).
+    fn fail_event(&mut self, id: u64, reason: FailReason, tokens: Vec<i32>, step: usize) {
+        if let Some(w) = &self.obs {
+            w.obs.registry.counter_add(&w.s_failed_total, 1.0);
+        }
+        self.terminal(id, StreamEvent::Failed { id, reason, tokens, step });
+    }
+
+    /// The supervisor is about to rebuild the engine: count the restart
+    /// and arm a flight dump so the fault window's trace survives.
+    fn note_restart(&mut self) {
+        if let Some(w) = &self.obs {
+            w.obs.registry.counter_add(&w.s_restarts_total, 1.0);
+            w.obs
+                .trace
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .request_dump("supervisor-restart");
+        }
+    }
+
+    /// The engine died: rebuild every interrupted request — prompt plus
+    /// already-streamed tokens, remaining token budget — and queue it for
+    /// the replacement engine, ordered by `(arrived, id)` so admission
+    /// order is deterministic across the restart.  Requests still in the
+    /// backlog (accepted but never handed to the dead engine) are left
+    /// there untouched; cancel tracking survives because `poll_ingress`
+    /// re-tracks ids at hand-off and [`CancelRegistry::track`] is
+    /// idempotent.
+    fn stage_replays(&mut self) {
+        let queued: HashSet<u64> = self.backlog.iter().map(|(r, _)| r.id).collect();
+        let mut replays: Vec<(u64, ReplayState)> = self
+            .book
+            .iter()
+            .filter(|(id, _)| !queued.contains(id) && self.streams.contains_key(id))
+            .map(|(id, st)| (*id, st.clone()))
+            .collect();
+        replays.sort_by_key(|(id, st)| (st.arrived, *id));
+        for (id, st) in replays {
+            let mut prompt = st.prompt;
+            prompt.extend_from_slice(&st.streamed);
+            let req = Request {
+                id,
+                prompt,
+                max_new: st.max_new.saturating_sub(st.streamed.len()),
+                arrived: st.arrived,
+                sampling: st.sampling,
+            };
+            let deadline = self.deadlines.get(&id).copied().flatten();
+            self.backlog.push((req, deadline));
+        }
+    }
+
+    /// The engine is dead for good.  With `failover` on, park every
+    /// interrupted request as a resubmittable orphan for the router;
+    /// otherwise deliver a terminal `Failed` to each so no client stream
+    /// is stranded.
+    fn engine_lost(&mut self, failover: bool) {
+        // Submissions still buffered in the ingress channel would die with
+        // it — accept them first so they are parked or failed like
+        // everything else, never silently disconnected.
+        self.sweep_submits();
+        if failover {
+            self.park_orphans();
+        } else {
+            self.fail_out_survivors();
+        }
+    }
+
+    /// Deliver a terminal `Failed{Backend}` to every request still live —
+    /// in dead lanes, in the dead engine's batcher, and in the backlog
+    /// alike.  The partial row is prompt ⧺ streamed from the book (empty
+    /// prompt only for unsupervised gateways, which never reach here —
+    /// their failures were delivered by `on_failed` directly).
+    fn fail_out_survivors(&mut self) {
+        // Backlogged requests never touched an engine: their partial row
+        // is their own untouched prompt.
+        for (req, _) in std::mem::take(&mut self.backlog) {
+            self.fail_event(req.id, FailReason::Backend, req.prompt, 0);
+        }
+        let mut ids: Vec<u64> = self.streams.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let tokens = match self.book.get(&id) {
+                Some(st) => {
+                    let mut t = st.prompt.clone();
+                    t.extend_from_slice(&st.streamed);
+                    t
+                }
+                None => Vec::new(),
+            };
+            self.fail_event(id, FailReason::Backend, tokens, 0);
+        }
+        self.book.clear();
+    }
+
+    /// Rebuild every live request as a replay-shaped [`Submission`] —
+    /// stream sender, deadline, and merged prompt intact — and park it
+    /// for [`Gateway::take_orphans`].  Mirrors `on_reclaimed`: the
+    /// requests leave this gateway's accounting entirely.  Returns how
+    /// many were parked.
+    fn park_orphans(&mut self) -> usize {
+        let mut subs: Vec<Submission> = Vec::new();
+        // Backlogged requests first: accepted but never handed to any
+        // engine, so their prompts are already submission-shaped.
+        for (req, deadline) in std::mem::take(&mut self.backlog) {
+            let id = req.id;
+            self.book.remove(&id);
+            self.registry.retire(id);
+            self.deadlines.remove(&id);
+            if let Some(n) = self.pending_prefill.remove(&id) {
+                self.queued_prefill.fetch_sub(n, Ordering::SeqCst);
+            }
+            let Some(events) = self.streams.remove(&id) else { continue };
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            subs.push(Submission { req, deadline, events, migrated: true });
+        }
+        // Then every interrupted in-flight request, replay-shaped.
+        let mut book: Vec<(u64, ReplayState)> = self.book.drain().collect();
+        book.sort_by_key(|(id, st)| (st.arrived, *id));
+        for (id, st) in book {
+            let deadline = self.deadlines.remove(&id).flatten();
+            self.registry.retire(id);
+            if let Some(n) = self.pending_prefill.remove(&id) {
+                self.queued_prefill.fetch_sub(n, Ordering::SeqCst);
+            }
+            let Some(events) = self.streams.remove(&id) else { continue };
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            let mut prompt = st.prompt;
+            prompt.extend_from_slice(&st.streamed);
+            let req = Request {
+                id,
+                prompt,
+                max_new: st.max_new.saturating_sub(st.streamed.len()),
+                arrived: st.arrived,
+                sampling: st.sampling,
+            };
+            subs.push(Submission { req, deadline, events, migrated: true });
+        }
+        let n = subs.len();
+        if n > 0 {
+            self.orphans.lock().unwrap_or_else(|e| e.into_inner()).extend(subs);
+        }
+        n
     }
 }
 
@@ -1125,6 +1479,7 @@ impl StepHook for GatewayHook {
         let id = req.id;
         let deadline = self.deadlines.remove(&id).flatten();
         self.registry.retire(id);
+        self.book.remove(&id);
         if let Some(n) = self.pending_prefill.remove(&id) {
             self.queued_prefill.fetch_sub(n, Ordering::SeqCst);
         }
@@ -1147,6 +1502,11 @@ impl StepHook for GatewayHook {
     fn on_token(&mut self, id: u64, pos: usize, token: i32, step: usize) {
         // First sampled token == prefill complete.
         self.prefill_done(id);
+        if self.supervised {
+            if let Some(st) = self.book.get_mut(&id) {
+                st.streamed.push(token);
+            }
+        }
         if let Some(tx) = self.streams.get(&id) {
             let _ = tx.send(StreamEvent::Token { id, pos, token, step });
         }
@@ -1160,6 +1520,21 @@ impl StepHook for GatewayHook {
         self.terminal(id, StreamEvent::Cancelled { id, reason, tokens, step });
     }
 
+    fn on_failed(&mut self, id: u64, tokens: Vec<i32>, reason: FailReason, step: usize) {
+        match reason {
+            // Replayable under supervision: the engine is about to die
+            // and the supervisor will resubmit this request from the book
+            // — the client's stream simply pauses, so no event goes out
+            // and all per-request state stays live.
+            FailReason::Backend if self.supervised => {}
+            // Poisoned lanes are individual failures on a healthy engine
+            // (replaying one would just poison another lane), and Backend
+            // deaths without a supervisor have no replacement engine
+            // coming: both are terminal for the client.
+            _ => self.fail_event(id, reason, tokens, step),
+        }
+    }
+
     fn wants_step_events(&self) -> bool {
         self.obs.is_some()
     }
@@ -1168,6 +1543,9 @@ impl StepHook for GatewayHook {
         let Some(w) = &mut self.obs else { return };
         let reg = &w.obs.registry;
         reg.counter_add(&w.s_steps_total, 1.0);
+        if ev.retries > 0 {
+            reg.counter_add(&w.s_step_retries_total, ev.retries as f64);
+        }
         reg.gauge_set(&w.s_kv_live_bytes, ev.kv_live_bytes as f64);
         reg.gauge_set(&w.s_prefix_cached_bytes, ev.kv_cached_bytes as f64);
         if ev.prefix_evicted_bytes > w.evicted_seen {
@@ -1793,7 +2171,7 @@ mod tests {
         assert_eq!(subs[0].req.id, t1.id);
         assert_eq!(a.in_flight(), 1, "the in-flight request stays put");
         for sub in subs {
-            b.resubmit(sub).unwrap();
+            assert!(b.resubmit(sub).is_ok());
         }
         assert!(t1.stream.wait().unwrap().is_done(), "the migrated stream completes on B");
         assert!(t0.stream.wait().unwrap().is_done());
@@ -1851,6 +2229,241 @@ mod tests {
         let sink = obs.trace.lock().unwrap();
         let hit_span = sink.spans().find(|s| s.id == t1.id).expect("span for the hit");
         assert_eq!(hit_span.prefix_hit_tokens, Some(32));
+    }
+
+    // ---- chaos: supervision, replay, failover ----
+
+    #[test]
+    fn panic_msg_extracts_str_and_string_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("plain str")).expect_err("panics");
+        assert_eq!(panic_msg(p.as_ref()), "plain str");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 7)).expect_err("panics");
+        assert_eq!(panic_msg(p.as_ref()), "formatted 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).expect_err("panics");
+        assert_eq!(panic_msg(p.as_ref()), "non-string panic payload");
+    }
+
+    /// Serve the same 4 greedy requests through a gateway built on `spec`
+    /// and return each completion's full token row, in submit order.
+    fn serve_rows(name: &str, cfg: GatewayConfig, spec: StubSpec) -> Vec<Vec<i32>> {
+        let gw = Gateway::spawn(name, cfg, EngineSpec::stub(spec)).expect("spawn");
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                gw.submit(vec![1 + i, 2, 3], 8, SamplingParams::greedy(), None).expect("submit")
+            })
+            .collect();
+        let rows = tickets
+            .into_iter()
+            .map(|t| {
+                t.stream
+                    .wait()
+                    .expect("terminal event")
+                    .completion()
+                    .expect("completes despite faults")
+                    .tokens
+            })
+            .collect();
+        gw.join().expect("supervised worker drains cleanly");
+        rows
+    }
+
+    /// Tentpole: a mid-serve fatal backend death is invisible to clients.
+    /// The supervisor rebuilds the engine (fault plan defused) and
+    /// replays every interrupted request as prompt ⧺ streamed tokens —
+    /// completions are bit-identical to a fault-free run, and the restart
+    /// is visible in the shared registry.
+    #[test]
+    fn supervisor_replays_fatal_death_bit_identical() {
+        let spec = StubSpec { max_positions: 64, ..Default::default() };
+        let clean = serve_rows("sup-clean", GatewayConfig::default(), spec.clone());
+        let faulty = StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(4), ..Default::default() },
+            ..spec
+        };
+        let obs = Obs::default();
+        let gw = Gateway::spawn_with_obs(
+            "sup",
+            GatewayConfig::default(),
+            EngineSpec::stub(faulty),
+            Some(obs.clone()),
+        )
+        .expect("spawn");
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                gw.submit(vec![1 + i, 2, 3], 8, SamplingParams::greedy(), None).expect("submit")
+            })
+            .collect();
+        let rows: Vec<Vec<i32>> = tickets
+            .into_iter()
+            .map(|t| {
+                let mut streamed = Vec::new();
+                let mut done = None;
+                while let Some(ev) = t.stream.next_event() {
+                    match ev {
+                        StreamEvent::Token { token, .. } => streamed.push(token),
+                        StreamEvent::Done { completion } => {
+                            done = Some(completion);
+                            break;
+                        }
+                        StreamEvent::Cancelled { id, .. } | StreamEvent::Failed { id, .. } => {
+                            panic!("request {id} must survive the death")
+                        }
+                        _ => {}
+                    }
+                }
+                let c = done.expect("Done despite the mid-serve death");
+                // The resumed stream carries no duplicate tokens: streamed
+                // events reassemble exactly the generated suffix.
+                assert_eq!(streamed.as_slice(), &c.tokens[3..], "request {}", c.id);
+                c.tokens
+            })
+            .collect();
+        gw.join().expect("replacement engine drains cleanly");
+        assert_eq!(rows, clean, "replay is lossless and bit-identical");
+        assert_eq!(
+            obs.registry.get("clover_engine_restarts_total{gateway=\"sup\"}"),
+            Some(1.0),
+            "the fatal fault cost exactly one supervised restart"
+        );
+        assert_eq!(
+            obs.registry.get("clover_failed_total{gateway=\"sup\"}"),
+            None,
+            "no client-visible failure was recorded"
+        );
+    }
+
+    /// A backend *panic* (crash fault) recovers through the same replay
+    /// path as a fatal error: `catch_unwind` contains it, the rebuilt
+    /// engine finishes everything, and outputs stay bit-identical.
+    #[test]
+    fn supervisor_recovers_backend_panic_mid_serve() {
+        let spec = StubSpec { max_positions: 64, ..Default::default() };
+        let clean = serve_rows("crash-clean", GatewayConfig::default(), spec.clone());
+        let crashing = StubSpec {
+            fault_plan: FaultPlan { crash_after_steps: Some(3), ..Default::default() },
+            ..spec
+        };
+        let rows = serve_rows("crash", GatewayConfig::default(), crashing);
+        assert_eq!(rows, clean, "a caught panic replays as losslessly as an error");
+    }
+
+    /// Restart budget spent: the supervisor stops rebuilding and every
+    /// surviving request gets exactly one terminal `Failed{Backend}`
+    /// whose partial row is prompt ⧺ streamed — no stream is stranded,
+    /// and `join` surfaces the underlying retry-budget error.
+    #[test]
+    fn restart_budget_spent_fails_survivors_with_terminal_events() {
+        // Every step faults transiently, so every engine incarnation dies
+        // on its first step once the per-step retry budget is spent.
+        let spec = StubSpec {
+            fault_plan: FaultPlan { seed: 1, transient_rate: 1.0, ..Default::default() },
+            ..Default::default()
+        };
+        let gw = Gateway::spawn(
+            "doom",
+            GatewayConfig { max_restarts: 1, ..Default::default() },
+            EngineSpec::stub(spec),
+        )
+        .expect("spawn succeeds — death comes on the first step, not at build");
+        let t = gw.submit(vec![1, 2], 4, SamplingParams::greedy(), None).expect("submit");
+        match t.stream.wait().expect("terminal event despite the dead worker") {
+            StreamOutcome::Failed { id, reason, tokens } => {
+                assert_eq!((id, reason), (0, FailReason::Backend));
+                assert_eq!(tokens, vec![1, 2], "no token ever streamed: the row is the prompt");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(gw.in_flight(), 0, "the terminal event released the request");
+        let err = gw.join().expect_err("the worker dies with its backend");
+        assert!(format!("{err:#}").contains("retry budget"), "{err:#}");
+    }
+
+    /// Without supervision (`max_restarts: 0`), a backend death is
+    /// delivered directly: the engine's own `on_failed` reaches the
+    /// client as `Failed{Backend}` with the partial row it salvaged.
+    #[test]
+    fn unsupervised_backend_death_fails_clients_directly() {
+        let spec = StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(2), ..Default::default() },
+            ..Default::default()
+        };
+        let gw = Gateway::spawn(
+            "unsup",
+            GatewayConfig { max_restarts: 0, ..Default::default() },
+            EngineSpec::stub(spec),
+        )
+        .expect("spawn");
+        let t = gw.submit(vec![1, 2, 3], 8, SamplingParams::greedy(), None).expect("submit");
+        match t.stream.wait().expect("terminal event") {
+            StreamOutcome::Failed { reason, tokens, .. } => {
+                assert_eq!(reason, FailReason::Backend);
+                assert_eq!(&tokens[..3], &[1, 2, 3], "row starts with the prompt");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        gw.join().expect_err("unsupervised death surfaces from join");
+    }
+
+    /// Failover parking: a dead-for-good worker parks its interrupted
+    /// requests as resubmittable orphans — merged prompt, live stream,
+    /// fleet-unique id — and a sibling gateway finishes them, with the
+    /// client seeing one Done bit-identical to an undisturbed run.
+    #[test]
+    fn dead_gateway_parks_orphans_for_failover() {
+        let clean = serve_rows("orph-clean", GatewayConfig::default(), StubSpec::default());
+        // Slow steps: all four submits land before the step-4 death, so
+        // none races the dying ingress.
+        let spec = StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(4), ..Default::default() },
+            step_delay: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let doomed = Gateway::spawn(
+            "orph",
+            GatewayConfig { max_restarts: 0, failover: true, ..Default::default() },
+            EngineSpec::stub(spec),
+        )
+        .expect("spawn");
+        let mut sibling =
+            Gateway::spawn("orph-sib", GatewayConfig::default(), EngineSpec::stub(StubSpec::default()))
+                .expect("spawn sibling");
+        sibling.share_id_counter(doomed.next_id.clone());
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                doomed
+                    .submit(vec![1 + i, 2, 3], 8, SamplingParams::greedy(), None)
+                    .expect("submit")
+            })
+            .collect();
+        // The fatal fault fires within a few steps; the worker parks its
+        // orphans and exits.
+        for _ in 0..500 {
+            if !doomed.is_alive() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!doomed.is_alive(), "the fatal fault must kill the unsupervised worker");
+        let orphans = doomed.take_orphans();
+        assert!(!orphans.is_empty(), "interrupted requests are parked, not failed");
+        assert!(doomed.take_orphans().is_empty(), "take_orphans drains");
+        for sub in orphans {
+            assert!(sibling.resubmit(sub).is_ok(), "sibling accepts the orphan");
+        }
+        let rows: Vec<Vec<i32>> = tickets
+            .into_iter()
+            .map(|t| {
+                t.stream
+                    .wait()
+                    .expect("terminal event")
+                    .completion()
+                    .expect("orphans complete on the sibling")
+                    .tokens
+            })
+            .collect();
+        assert_eq!(rows, clean, "failover is lossless and bit-identical");
+        sibling.join().expect("sibling drains");
+        let _ = doomed.join().expect_err("the doomed worker died");
     }
 
     /// Prefix caching and a speculative draft pair are mutually exclusive

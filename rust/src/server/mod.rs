@@ -64,5 +64,5 @@ pub use gateway::{
     DraftSource, EngineSpec, Gateway, GatewayConfig, Obs, ParamSource, SpecSpec, SubmitError,
     Ticket,
 };
-pub use router::{Router, TrafficClass};
+pub use router::{BreakerConfig, Health, Router, TrafficClass};
 pub use stream::{RequestStream, StreamEvent, StreamOutcome, TryNext};

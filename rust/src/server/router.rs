@@ -63,15 +63,43 @@
 //!   keeps its cost-min pick and simply queues.  Load shedding
 //!   ([`SubmitError::Overloaded`], `GatewayConfig::max_pending`)
 //!   propagates to the caller for both classes.
+//!
+//! ## Health: circuit breakers and engine failover
+//!
+//! Each gateway carries a router-side circuit breaker driven by an EWMA
+//! of recent request outcomes ([`Router::note_result`]) plus the
+//! worker's liveness flag:
+//!
+//! ```text
+//! Healthy ──ewma > degraded_threshold──▶ Degraded (score ×2)
+//! Degraded ──ewma > open_threshold────▶ Open     (unroutable)
+//! Open ──probe_after elapsed──▶ half-open: ONE probe request allowed
+//!       probe succeeds → Degraded/Healthy;  probe fails → Open re-arms
+//! ```
+//!
+//! [`Router::pick`]/[`Router::pick_for`] route around `Open` gateways
+//! (falling back to the full fleet only when *nothing* is routable, so a
+//! caller still gets a deterministic pick), and weight a `Degraded`
+//! gateway's score ×2 so traffic drains away before the breaker opens.
+//!
+//! **Failover** ([`Router::fail_over`]): a gateway whose worker died for
+//! good (`Gateway::is_alive` false — restart budget spent with
+//! `GatewayConfig::failover` set) has parked its interrupted requests as
+//! replayable orphans.  The sweep marks the dead engine `Open`, drains
+//! its orphans, and resubmits each — original id, live client stream,
+//! merged `prompt ⧺ streamed` — to the cheapest live sibling, preferring
+//! the lower compiled rank under pressure.  With no live sibling left the
+//! orphan's stream gets a terminal `Failed` instead of a silent
+//! disconnect, preserving the exactly-one-terminal-event contract.
 
 use anyhow::{bail, Result};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::obs::Registry;
-use crate::serve::{chain_hashes, SamplingParams, ServeMetrics};
+use crate::serve::{chain_hashes, FailReason, SamplingParams, ServeMetrics};
 
 use super::gateway::{Gateway, SubmitError, Ticket};
 
@@ -82,6 +110,70 @@ use super::gateway::{Gateway, SubmitError, Ticket};
 pub enum TrafficClass {
     Interactive,
     Batch,
+}
+
+/// Routing health of one gateway, as its circuit breaker sees it (module
+/// docs, *Health*).  Exported as `clover_router_health` (0/1/2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Fault EWMA below the degraded threshold: full traffic.
+    Healthy,
+    /// Elevated fault rate: still routable, score weighted ×2 so traffic
+    /// drains toward healthier siblings.
+    Degraded,
+    /// Breaker tripped (fault EWMA past the open threshold, or the
+    /// worker died): unroutable except for a single half-open probe
+    /// after [`BreakerConfig::probe_after`].
+    Open,
+}
+
+/// Circuit-breaker tuning (one config for the whole fleet).  Thresholds
+/// are fault *rates* in `[0, 1]` and must be ordered
+/// `0 < degraded_threshold < open_threshold <= 1` — `clover check`
+/// validates CLI-provided values before a server ever starts.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// EWMA smoothing factor: weight of the newest outcome.
+    pub alpha: f64,
+    /// Fault EWMA above this marks the gateway [`Health::Degraded`].
+    pub degraded_threshold: f64,
+    /// Fault EWMA above this trips the breaker to [`Health::Open`].
+    pub open_threshold: f64,
+    /// How long an open breaker waits before admitting one half-open
+    /// probe request.
+    pub probe_after: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        // alpha 0.2 ≈ a ~5-request memory: 4 consecutive failures from
+        // healthy (EWMA 0.59) trip the breaker, a single blip (0.2) only
+        // degrades.
+        Self {
+            alpha: 0.2,
+            degraded_threshold: 0.1,
+            open_threshold: 0.5,
+            probe_after: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Mutable breaker state for one gateway.
+struct BreakerState {
+    /// EWMA of request outcomes (0 = success, 1 = failure).
+    ewma: f64,
+    health: Health,
+    /// When the breaker last tripped; `probe_after` is measured from here.
+    opened_at: Option<Instant>,
+    /// A half-open probe has been routed and has not reported back yet —
+    /// at most one probe is in flight per open breaker.
+    probe_in_flight: bool,
+}
+
+impl BreakerState {
+    fn new() -> Self {
+        Self { ewma: 0.0, health: Health::Healthy, opened_at: None, probe_in_flight: false }
+    }
 }
 
 pub struct Router {
@@ -95,6 +187,12 @@ pub struct Router {
     /// Interactive submissions placed on a lower rank than their
     /// preferred (saturated) gateway.
     degraded: AtomicUsize,
+    /// Per-gateway circuit breakers (module docs, *Health*).
+    breakers: Vec<Mutex<BreakerState>>,
+    breaker_cfg: BreakerConfig,
+    /// Orphans of dead engines re-homed onto siblings by
+    /// [`Router::fail_over`].
+    failed_over: AtomicUsize,
 }
 
 impl Router {
@@ -110,12 +208,22 @@ impl Router {
             g.share_id_counter(ids.clone());
         }
         let dirs = gateways.iter().map(|_| Mutex::new(HashSet::new())).collect();
+        let breakers = gateways.iter().map(|_| Mutex::new(BreakerState::new())).collect();
         Ok(Self {
             gateways,
             dirs,
             migrated: AtomicUsize::new(0),
             degraded: AtomicUsize::new(0),
+            breakers,
+            breaker_cfg: BreakerConfig::default(),
+            failed_over: AtomicUsize::new(0),
         })
+    }
+
+    /// Replace the fleet's breaker tuning (builder style, before traffic).
+    pub fn with_breaker(mut self, cfg: BreakerConfig) -> Self {
+        self.breaker_cfg = cfg;
+        self
     }
 
     pub fn gateways(&self) -> &[Gateway] {
@@ -130,14 +238,106 @@ impl Router {
             * g.kv_bytes_per_token() as u128
     }
 
+    /// Current breaker verdict for gateway `i`.
+    pub fn health(&self, i: usize) -> Health {
+        self.breakers[i].lock().unwrap_or_else(|e| e.into_inner()).health
+    }
+
+    /// Fault-rate EWMA for gateway `i` (exported as
+    /// `clover_router_fault_ewma`).
+    pub fn fault_ewma(&self, i: usize) -> f64 {
+        self.breakers[i].lock().unwrap_or_else(|e| e.into_inner()).ewma
+    }
+
+    /// Report one request outcome observed on gateway `i` and advance its
+    /// breaker: `ok` is "the stream ended in `Done` or a client cancel",
+    /// false is a backend-attributed failure.  Drives the state machine in
+    /// the module docs — including closing an open breaker when its
+    /// half-open probe succeeds.
+    pub fn note_result(&self, i: usize, ok: bool) {
+        let cfg = self.breaker_cfg;
+        let mut b = self.breakers[i].lock().unwrap_or_else(|e| e.into_inner());
+        b.probe_in_flight = false;
+        b.ewma = cfg.alpha * if ok { 0.0 } else { 1.0 } + (1.0 - cfg.alpha) * b.ewma;
+        match b.health {
+            Health::Open => {
+                if ok {
+                    // The half-open probe came back: close the breaker
+                    // (to Degraded while the EWMA is still elevated).
+                    b.health = if b.ewma > cfg.degraded_threshold {
+                        Health::Degraded
+                    } else {
+                        Health::Healthy
+                    };
+                    b.opened_at = None;
+                } else {
+                    // Failed probe: re-arm the open timer.
+                    b.opened_at = Some(Instant::now());
+                }
+            }
+            Health::Healthy | Health::Degraded => {
+                if b.ewma > cfg.open_threshold {
+                    b.health = Health::Open;
+                    b.opened_at = Some(Instant::now());
+                } else if b.ewma > cfg.degraded_threshold {
+                    b.health = Health::Degraded;
+                } else {
+                    b.health = Health::Healthy;
+                }
+            }
+        }
+    }
+
+    /// Can the router place traffic on gateway `i` right now?  Dead
+    /// workers never; open breakers only as a half-open probe (one at a
+    /// time, `probe_after` past the trip).
+    fn routable(&self, i: usize) -> bool {
+        if !self.gateways[i].is_alive() {
+            return false;
+        }
+        let b = self.breakers[i].lock().unwrap_or_else(|e| e.into_inner());
+        match b.health {
+            Health::Healthy | Health::Degraded => true,
+            Health::Open => {
+                !b.probe_in_flight
+                    && b.opened_at.map_or(true, |t| t.elapsed() >= self.breaker_cfg.probe_after)
+            }
+        }
+    }
+
+    /// If gateway `i`'s breaker is open, the submission about to be placed
+    /// there is its half-open probe — record that so only one flies.
+    fn note_probe(&self, i: usize) {
+        let mut b = self.breakers[i].lock().unwrap_or_else(|e| e.into_inner());
+        if b.health == Health::Open {
+            b.probe_in_flight = true;
+        }
+    }
+
+    /// Breaker weight on gateway `i`'s score: a degraded engine looks
+    /// twice as expensive, so traffic drains away before the breaker
+    /// opens.
+    fn health_weight(&self, i: usize) -> u128 {
+        match self.health(i) {
+            Health::Degraded => 2,
+            Health::Healthy | Health::Open => 1,
+        }
+    }
+
+    /// Cost-min index over the routable subset of the fleet; only when
+    /// *nothing* is routable (whole fleet open/dead) does the pick fall
+    /// back to every gateway, so callers still get a deterministic index.
+    fn pick_among<F: Fn(usize) -> u128>(&self, cost: F) -> usize {
+        (0..self.gateways.len())
+            .filter(|&i| self.routable(i))
+            .min_by_key(|&i| cost(i))
+            .or_else(|| (0..self.gateways.len()).min_by_key(|&i| cost(i)))
+            .expect("router is non-empty")
+    }
+
     /// Index of the gateway the next request would go to, prompt unseen.
     pub fn pick(&self) -> usize {
-        self.gateways
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, g)| Self::score(g))
-            .map(|(i, _)| i)
-            .expect("router is non-empty")
+        self.pick_among(|i| self.health_weight(i) * Self::score(&self.gateways[i]))
     }
 
     /// A gateway with more accepted requests than KV lanes has a queue —
@@ -155,7 +355,7 @@ impl Router {
         let Some(block) = self.gateways[i].prefix_cache_block() else {
             return 0;
         };
-        let dir = self.dirs[i].lock().unwrap();
+        let dir = self.dirs[i].lock().unwrap_or_else(|e| e.into_inner());
         let mut hit = 0;
         for h in chain_hashes(prompt, block) {
             if !dir.contains(&h) {
@@ -180,16 +380,17 @@ impl Router {
     /// prefix-cache affinity (a directory-matched prefix prefills from
     /// cache, so only the cold tail is weighed).
     pub fn pick_for(&self, prompt: &[i32]) -> usize {
-        (0..self.gateways.len())
-            .min_by_key(|&i| self.score_for(i, prompt))
-            .expect("router is non-empty")
+        self.pick_among(|i| self.health_weight(i) * self.score_for(i, prompt))
     }
 
     /// Record `prompt`'s chain hashes in gateway `i`'s shadow directory
     /// (no-op for gateways without a prefix cache).
     fn note_prompt(&self, i: usize, prompt: &[i32]) {
         if let Some(block) = self.gateways[i].prefix_cache_block() {
-            self.dirs[i].lock().unwrap().extend(chain_hashes(prompt, block));
+            self.dirs[i]
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .extend(chain_hashes(prompt, block));
         }
     }
 
@@ -228,8 +429,8 @@ impl Router {
         let mut idx = preferred;
         if class == TrafficClass::Interactive && Self::saturated(&self.gateways[preferred]) {
             let fallback = (0..self.gateways.len())
-                .filter(|&j| !Self::saturated(&self.gateways[j]))
-                .min_by_key(|&j| self.score_for(j, &prompt));
+                .filter(|&j| self.routable(j) && !Self::saturated(&self.gateways[j]))
+                .min_by_key(|&j| self.health_weight(j) * self.score_for(j, &prompt));
             if let Some(j) = fallback {
                 if self.gateways[j].rank() < self.gateways[preferred].rank() {
                     self.degraded.fetch_add(1, Ordering::Relaxed);
@@ -237,13 +438,16 @@ impl Router {
                 idx = j;
             }
         }
+        // Placing traffic on an open breaker means this request *is* the
+        // half-open probe — record it so only one flies at a time.
+        self.note_probe(idx);
         let hashes = self
             .gateways[idx]
             .prefix_cache_block()
             .map(|block| chain_hashes(&prompt, block));
         let ticket = self.gateways[idx].submit(prompt, max_new, sampling, deadline)?;
         if let Some(hs) = hashes {
-            self.dirs[idx].lock().unwrap().extend(hs);
+            self.dirs[idx].lock().unwrap_or_else(|e| e.into_inner()).extend(hs);
         }
         Ok((idx, ticket))
     }
@@ -291,14 +495,77 @@ impl Router {
                             .min_by_key(|&j| self.score_for(j, &prompt))
                     });
                 let Some(j) = target else { break };
-                if self.gateways[j].resubmit(sub).is_ok() {
-                    self.note_prompt(j, &prompt);
-                    moved += 1;
+                match self.gateways[j].resubmit(sub) {
+                    Ok(()) => {
+                        self.note_prompt(j, &prompt);
+                        moved += 1;
+                    }
+                    // The target's ingress closed under us (its worker
+                    // died): the submission comes back, and the client
+                    // still gets its one terminal event.
+                    Err(sub) => sub.fail(FailReason::Backend),
                 }
             }
         }
         self.migrated.fetch_add(moved, Ordering::Relaxed);
         moved
+    }
+
+    /// One failover sweep (module docs, *Failover*): every dead gateway is
+    /// marked [`Health::Open`] and its parked orphans — interrupted
+    /// requests with their original id, live client stream, and merged
+    /// `prompt ⧺ streamed` row — are resubmitted to the cheapest live
+    /// sibling, lower compiled rank winning ties (shedding quality, not
+    /// requests, under pressure).  An orphan no live sibling will take
+    /// gets a terminal `Failed{Backend}` so its stream never dangles.
+    /// Returns the number re-homed; the running total is exported as
+    /// `clover_router_failed_over_total`.
+    pub fn fail_over(&self) -> usize {
+        let mut moved = 0;
+        for i in 0..self.gateways.len() {
+            if self.gateways[i].is_alive() {
+                continue;
+            }
+            {
+                let mut b = self.breakers[i].lock().unwrap_or_else(|e| e.into_inner());
+                if b.health != Health::Open {
+                    b.health = Health::Open;
+                    b.opened_at = Some(Instant::now());
+                    b.ewma = 1.0;
+                }
+            }
+            for orphan in self.gateways[i].take_orphans() {
+                let prompt = orphan.req.prompt.clone();
+                let mut targets: Vec<usize> = (0..self.gateways.len())
+                    .filter(|&j| j != i && self.routable(j))
+                    .collect();
+                targets.sort_by_key(|&j| (self.score_for(j, &prompt), self.gateways[j].rank()));
+                let mut orphan = Some(orphan);
+                for j in targets {
+                    let Some(sub) = orphan.take() else { break };
+                    match self.gateways[j].resubmit(sub) {
+                        Ok(()) => {
+                            self.note_prompt(j, &prompt);
+                            moved += 1;
+                        }
+                        // That sibling died between the liveness check and
+                        // the send — try the next one.
+                        Err(back) => orphan = Some(back),
+                    }
+                }
+                if let Some(sub) = orphan {
+                    sub.fail(FailReason::Backend);
+                }
+            }
+        }
+        self.failed_over.fetch_add(moved, Ordering::Relaxed);
+        moved
+    }
+
+    /// Orphans of dead engines re-homed by [`Router::fail_over`], over
+    /// this router's lifetime.
+    pub fn failed_over_total(&self) -> usize {
+        self.failed_over.load(Ordering::Relaxed)
     }
 
     /// Queued requests moved between gateways by [`Router::rebalance`],
@@ -343,6 +610,20 @@ impl Router {
             reg.gauge_set(&format!("clover_router_submitted{labels}"), g.submitted() as f64);
             reg.gauge_set(&format!("clover_router_score{labels}"), Self::score(g) as f64);
         }
+        for (i, g) in self.gateways.iter().enumerate() {
+            let labels = format!("{{gateway=\"{}\",rank=\"{}\"}}", g.name(), g.rank());
+            let health = match self.health(i) {
+                Health::Healthy => 0.0,
+                Health::Degraded => 1.0,
+                Health::Open => 2.0,
+            };
+            reg.gauge_set(&format!("clover_router_health{labels}"), health);
+            reg.gauge_set(&format!("clover_router_fault_ewma{labels}"), self.fault_ewma(i));
+            reg.gauge_set(
+                &format!("clover_router_alive{labels}"),
+                if g.is_alive() { 1.0 } else { 0.0 },
+            );
+        }
         for (g, dir) in self.gateways.iter().zip(&self.dirs) {
             if g.prefix_cache_block().is_none() {
                 continue;
@@ -350,11 +631,12 @@ impl Router {
             let labels = format!("{{gateway=\"{}\",rank=\"{}\"}}", g.name(), g.rank());
             reg.gauge_set(
                 &format!("clover_router_prefix_dir_blocks{labels}"),
-                dir.lock().unwrap().len() as f64,
+                dir.lock().unwrap_or_else(|e| e.into_inner()).len() as f64,
             );
         }
         reg.gauge_set("clover_router_migrated_total", self.migrated_total() as f64);
         reg.gauge_set("clover_router_degraded_total", self.degraded_total() as f64);
+        reg.gauge_set("clover_router_failed_over_total", self.failed_over_total() as f64);
     }
 
     /// One-shot Prometheus text of the routing gauges (stats lines, CLI).
@@ -385,9 +667,10 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::stub::StubSpec;
+    use crate::runtime::stub::{FaultPlan, StubSpec};
     use crate::serve::SamplingParams;
     use crate::server::gateway::{EngineSpec, GatewayConfig};
+    use crate::server::stream::StreamOutcome;
     use std::time::Duration;
 
     /// Single-lane, single-token-ladder stub with a slow step: requests
@@ -697,5 +980,177 @@ mod tests {
         assert_eq!(metrics["r8"].completed, 2);
         assert_eq!(metrics["r4"].completed, 2);
         assert_eq!(metrics["r4"].migrated, 0);
+    }
+
+    /// Fault storm on gateway 0: one failure degrades it (score ×2 drains
+    /// traffic), four open the breaker (unroutable while the probe timer
+    /// runs), and the health/EWMA gauges export the whole episode.
+    #[test]
+    fn breaker_trips_on_fault_storm_and_routes_around() {
+        let spec = || EngineSpec::stub(StubSpec::default());
+        let router = Router::new(vec![
+            Gateway::spawn("bk-a", GatewayConfig::default(), spec()).unwrap(),
+            Gateway::spawn("bk-b", GatewayConfig::default(), spec()).unwrap(),
+        ])
+        .unwrap()
+        .with_breaker(BreakerConfig {
+            probe_after: Duration::from_secs(3600),
+            ..Default::default()
+        });
+        assert_eq!(router.pick(), 0, "idle fleet ties to construction order");
+        router.note_result(0, false);
+        assert_eq!(router.health(0), Health::Degraded, "one blip only degrades");
+        assert_eq!(router.pick(), 1, "a degraded engine costs double — traffic drains");
+        assert_eq!(router.pick_for(&[1, 2, 3]), 1);
+        for _ in 0..3 {
+            router.note_result(0, false);
+        }
+        assert_eq!(router.health(0), Health::Open, "four consecutive faults trip the breaker");
+        assert_eq!(router.pick(), 1, "an open breaker is unroutable before probe_after");
+        let reg = crate::obs::Registry::new();
+        router.export_metrics(&reg);
+        assert_eq!(reg.get("clover_router_health{gateway=\"bk-a\",rank=\"4\"}"), Some(2.0));
+        assert_eq!(reg.get("clover_router_health{gateway=\"bk-b\",rank=\"4\"}"), Some(0.0));
+        assert_eq!(reg.get("clover_router_alive{gateway=\"bk-a\",rank=\"4\"}"), Some(1.0));
+        let ewma = reg.get("clover_router_fault_ewma{gateway=\"bk-a\",rank=\"4\"}").unwrap();
+        assert!((ewma - 0.5904).abs() < 1e-9, "1 - 0.8^4, got {ewma}");
+        router.join().unwrap();
+    }
+
+    /// Half-open: past `probe_after` exactly one request is routed to the
+    /// open engine as a probe; its success closes the breaker back to
+    /// Degraded and a run of clean traffic restores Healthy.
+    #[test]
+    fn half_open_probe_closes_breaker() {
+        let spec = || EngineSpec::stub(StubSpec::default());
+        let router = Router::new(vec![
+            Gateway::spawn("hp-a", GatewayConfig::default(), spec()).unwrap(),
+            Gateway::spawn("hp-b", GatewayConfig::default(), spec()).unwrap(),
+        ])
+        .unwrap()
+        .with_breaker(BreakerConfig { probe_after: Duration::ZERO, ..Default::default() });
+        for _ in 0..4 {
+            router.note_result(0, false);
+        }
+        assert_eq!(router.health(0), Health::Open);
+        // probe_after ZERO: the open engine is immediately probe-eligible,
+        // and at equal score the tie-break sends the next submit there.
+        let (idx, t) = router.submit(vec![1, 2, 3], 2, SamplingParams::greedy(), None).unwrap();
+        assert_eq!(idx, 0, "the open engine admits one half-open probe");
+        assert_eq!(router.pick(), 1, "only one probe flies at a time");
+        assert!(t.stream.wait().unwrap().is_done());
+        router.note_result(0, true);
+        assert_eq!(router.health(0), Health::Degraded, "a good probe closes to Degraded first");
+        for _ in 0..20 {
+            router.note_result(0, true);
+        }
+        assert_eq!(router.health(0), Health::Healthy, "clean traffic restores full health");
+        router.join().unwrap();
+    }
+
+    /// The chaos acceptance scenario: an engine dies for good mid-decode
+    /// with `failover` set, the router marks it Open and re-homes its
+    /// parked orphans onto the live sibling — original ids, live streams,
+    /// completions bit-identical to a run that never saw the death.
+    #[test]
+    fn dead_engine_fails_over_orphans_to_sibling() {
+        // Reference rows from an undisturbed engine of the same spec.
+        let clean_gw =
+            Gateway::spawn("fo-clean", GatewayConfig::default(), EngineSpec::stub(StubSpec::default()))
+                .unwrap();
+        let clean: Vec<Vec<i32>> = (0..3)
+            .map(|i| {
+                clean_gw
+                    .submit(vec![1 + i, 2, 3], 8, SamplingParams::greedy(), None)
+                    .unwrap()
+                    .stream
+                    .wait()
+                    .unwrap()
+                    .completion()
+                    .unwrap()
+                    .tokens
+            })
+            .collect();
+        clean_gw.join().unwrap();
+        // Slow steps: all three submits land before the step-4 death, so
+        // none races the dying ingress.
+        let doomed = EngineSpec::stub(StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(4), ..Default::default() },
+            step_delay: Duration::from_millis(2),
+            ..Default::default()
+        });
+        let router = Router::new(vec![
+            Gateway::spawn(
+                "fo-a",
+                GatewayConfig { max_restarts: 0, failover: true, ..Default::default() },
+                doomed,
+            )
+            .unwrap(),
+            Gateway::spawn("fo-b", GatewayConfig::default(), EngineSpec::stub(StubSpec::default()))
+                .unwrap(),
+        ])
+        .unwrap();
+        let g = router.gateways();
+        let tickets: Vec<_> = (0..3)
+            .map(|i| g[0].submit(vec![1 + i, 2, 3], 8, SamplingParams::greedy(), None).unwrap())
+            .collect();
+        for _ in 0..500 {
+            if !g[0].is_alive() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!g[0].is_alive(), "the fatal fault kills the unrestartable worker");
+        let moved = router.fail_over();
+        assert_eq!(moved, 3, "every interrupted request re-homes");
+        assert_eq!(router.failed_over_total(), 3);
+        assert_eq!(router.health(0), Health::Open, "the dead engine is out of rotation");
+        assert_eq!(router.pick(), 1, "new traffic routes around the corpse");
+        let rows: Vec<Vec<i32>> = tickets
+            .into_iter()
+            .map(|t| t.stream.wait().unwrap().completion().unwrap().tokens)
+            .collect();
+        assert_eq!(rows, clean, "failover is lossless and bit-identical");
+        assert_eq!(router.fail_over(), 0, "a second sweep finds nothing to move");
+        // Joining the fleet surfaces the dead worker's underlying error.
+        assert!(router.join().is_err());
+    }
+
+    /// Last-engine-standing dies: with nowhere to re-home the orphans,
+    /// the sweep delivers each stream a terminal `Failed{Backend}` —
+    /// never a silent disconnect.
+    #[test]
+    fn fail_over_with_no_sibling_fails_streams_terminally() {
+        let doomed = EngineSpec::stub(StubSpec {
+            fault_plan: FaultPlan { fatal_after_steps: Some(2), ..Default::default() },
+            step_delay: Duration::from_millis(2),
+            ..Default::default()
+        });
+        let router = Router::new(vec![Gateway::spawn(
+            "solo",
+            GatewayConfig { max_restarts: 0, failover: true, ..Default::default() },
+            doomed,
+        )
+        .unwrap()])
+        .unwrap();
+        let g = router.gateways();
+        let tickets: Vec<_> = (0..2)
+            .map(|i| g[0].submit(vec![1 + i, 2], 8, SamplingParams::greedy(), None).unwrap())
+            .collect();
+        for _ in 0..500 {
+            if !g[0].is_alive() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!g[0].is_alive());
+        assert_eq!(router.fail_over(), 0, "no sibling can take the orphans");
+        for t in tickets {
+            match t.stream.wait().unwrap() {
+                StreamOutcome::Failed { reason, .. } => assert_eq!(reason, FailReason::Backend),
+                other => panic!("expected terminal Failed, got {other:?}"),
+            }
+        }
+        assert!(router.join().is_err());
     }
 }

@@ -5,13 +5,18 @@
 //!
 //! ```text
 //! Queued → Started → Token{pos,id} … → Done{completion}
-//!                  └──────────────────▶ Cancelled{reason, partial tokens}
+//!                  ├──────────────────▶ Cancelled{reason, partial tokens}
+//!                  └──────────────────▶ Failed{reason, partial tokens}
 //! ```
 //!
 //! `Queued` is sent at submission time (before the worker ever sees the
 //! request), `Token` events arrive as tokens are sampled — *not* at wave
-//! end — and exactly one terminal event (`Done` or `Cancelled`) closes
-//! every stream the gateway accepted.  A stream that ends without a
+//! end — and exactly one terminal event (`Done`, `Cancelled`, or
+//! `Failed`) closes every stream the gateway accepted.  `Failed` is rare
+//! by design: a request on a dying engine is *replayed* by the gateway
+//! supervisor (its stream simply resumes), so `Failed` only reaches a
+//! client when the failure is unrecoverable — a poisoned lane, or a
+//! supervisor out of restart budget.  A stream that ends without a
 //! terminal event means the gateway itself died; [`RequestStream::wait`]
 //! surfaces that as an error instead of hanging.
 
@@ -19,7 +24,7 @@ use anyhow::{bail, Result};
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::serve::{CancelReason, Completion};
+use crate::serve::{CancelReason, Completion, FailReason};
 
 /// One moment in a request's lifecycle.  `step` fields carry the engine's
 /// global decode-step counter at the event, which is what the bench uses
@@ -39,6 +44,11 @@ pub enum StreamEvent {
     /// Terminal: retired early; `tokens` is the partial row (prompt +
     /// whatever was generated before retirement).
     Cancelled { id: u64, reason: CancelReason, tokens: Vec<i32>, step: usize },
+    /// Terminal: the request failed unrecoverably; `tokens` is the
+    /// partial row, like `Cancelled`.  Replayable failures (a backend
+    /// death under a live supervisor) never reach the stream — the
+    /// request resumes on the rebuilt or sibling engine instead.
+    Failed { id: u64, reason: FailReason, tokens: Vec<i32>, step: usize },
 }
 
 impl StreamEvent {
@@ -47,14 +57,19 @@ impl StreamEvent {
             StreamEvent::Queued { id }
             | StreamEvent::Started { id, .. }
             | StreamEvent::Token { id, .. }
-            | StreamEvent::Cancelled { id, .. } => *id,
+            | StreamEvent::Cancelled { id, .. }
+            | StreamEvent::Failed { id, .. } => *id,
             StreamEvent::Done { completion } => completion.id,
         }
     }
 
-    /// `Done` or `Cancelled` — the stream carries nothing after these.
+    /// `Done`, `Cancelled`, or `Failed` — the stream carries nothing
+    /// after these.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, StreamEvent::Done { .. } | StreamEvent::Cancelled { .. })
+        matches!(
+            self,
+            StreamEvent::Done { .. } | StreamEvent::Cancelled { .. } | StreamEvent::Failed { .. }
+        )
     }
 }
 
@@ -63,6 +78,7 @@ impl StreamEvent {
 pub enum StreamOutcome {
     Done(Completion),
     Cancelled { id: u64, reason: CancelReason, tokens: Vec<i32> },
+    Failed { id: u64, reason: FailReason, tokens: Vec<i32> },
 }
 
 impl StreamOutcome {
@@ -71,20 +87,25 @@ impl StreamOutcome {
     }
 
     /// The token row this request produced (full on `Done`, partial on
-    /// `Cancelled`).
+    /// `Cancelled` / `Failed`).
     pub fn tokens(&self) -> &[i32] {
         match self {
             StreamOutcome::Done(c) => &c.tokens,
-            StreamOutcome::Cancelled { tokens, .. } => tokens,
+            StreamOutcome::Cancelled { tokens, .. } | StreamOutcome::Failed { tokens, .. } => {
+                tokens
+            }
         }
     }
 
-    /// Unwrap the completion, erroring on a cancelled request.
+    /// Unwrap the completion, erroring on a cancelled or failed request.
     pub fn completion(self) -> Result<Completion> {
         match self {
             StreamOutcome::Done(c) => Ok(c),
             StreamOutcome::Cancelled { id, reason, .. } => {
                 bail!("request {id} was cancelled ({reason:?})")
+            }
+            StreamOutcome::Failed { id, reason, .. } => {
+                bail!("request {id} failed ({reason:?})")
             }
         }
     }
@@ -143,6 +164,9 @@ impl RequestStream {
                 StreamEvent::Cancelled { id, reason, tokens, .. } => {
                     return Ok(StreamOutcome::Cancelled { id, reason, tokens })
                 }
+                StreamEvent::Failed { id, reason, tokens, .. } => {
+                    return Ok(StreamOutcome::Failed { id, reason, tokens })
+                }
                 _ => {}
             }
         }
@@ -174,8 +198,29 @@ mod tests {
                 ttft_s: 0.1,
                 queue_wait_s: 0.0,
                 steps: 2,
+                prefill_steps: 1,
                 finished_step: 2,
             },
+        }
+    }
+
+    #[test]
+    fn wait_surfaces_failure() {
+        let s = push_all(vec![
+            StreamEvent::Queued { id: 7 },
+            StreamEvent::Failed {
+                id: 7,
+                reason: FailReason::Poisoned,
+                tokens: vec![1, 2],
+                step: 3,
+            },
+        ]);
+        match s.wait().unwrap() {
+            StreamOutcome::Failed { id, reason, tokens } => {
+                assert_eq!((id, reason), (7, FailReason::Poisoned));
+                assert_eq!(tokens, vec![1, 2]);
+            }
+            other => panic!("expected failure, got {other:?}"),
         }
     }
 

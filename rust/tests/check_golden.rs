@@ -230,6 +230,97 @@ fn engine_spec_combinations_fire_stable_codes() {
     };
     let r = check_spec(&clean_prefix_cache);
     assert!(r.is_empty(), "legal prefix-cache flags flagged:\n{}", r.render_text());
+
+    // Chaos / robustness flags (CLV037–CLV039).
+    let fault_plan_unknown_key = ServeSpec {
+        fault_plan: Some("seed=7,flaky=0.5".into()),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&fault_plan_unknown_key)), ["CLV037"]);
+
+    let fault_plan_rate_out_of_range = ServeSpec {
+        fault_plan: Some("transient=1.5".into()),
+        ..Default::default()
+    };
+    assert_eq!(codes(&check_spec(&fault_plan_rate_out_of_range)), ["CLV037"]);
+
+    let clean_fault_plan = ServeSpec {
+        fault_plan: Some("seed=7,transient=0.01,fatal-after=500".into()),
+        ..Default::default()
+    };
+    let r = check_spec(&clean_fault_plan);
+    assert!(r.is_empty(), "legal fault plan flagged:\n{}", r.render_text());
+
+    let breaker_inverted = ServeSpec { breaker: Some((0.5, 0.1)), ..Default::default() };
+    assert_eq!(codes(&check_spec(&breaker_inverted)), ["CLV038"]);
+
+    let breaker_degraded_zero = ServeSpec { breaker: Some((0.0, 0.5)), ..Default::default() };
+    assert_eq!(codes(&check_spec(&breaker_degraded_zero)), ["CLV038"]);
+
+    let breaker_open_above_one = ServeSpec { breaker: Some((0.1, 1.5)), ..Default::default() };
+    assert_eq!(codes(&check_spec(&breaker_open_above_one)), ["CLV038"]);
+
+    let clean_breaker = ServeSpec { breaker: Some((0.1, 0.5)), ..Default::default() };
+    let r = check_spec(&clean_breaker);
+    assert!(r.is_empty(), "legal breaker thresholds flagged:\n{}", r.render_text());
+
+    // 10 retries doubling from 100 ms: worst 102_300 ms of backoff, far
+    // past a 1 s deadline — the request expires mid-backoff every time.
+    let retry_starves_deadline = ServeSpec {
+        retry_budget: 10,
+        retry_backoff_ms: 100,
+        deadline_ms: Some(1_000),
+        ..Default::default()
+    };
+    let r = check_spec(&retry_starves_deadline);
+    assert_eq!(codes(&r), ["CLV039"]);
+    assert!(!r.has_errors(), "CLV039 is a warning, not an error");
+
+    // Default policy (3 retries from 1 ms → 7 ms worst) fits easily.
+    let feasible_retry = ServeSpec { deadline_ms: Some(1_000), ..Default::default() };
+    let r = check_spec(&feasible_retry);
+    assert!(r.is_empty(), "feasible retry-vs-deadline flagged:\n{}", r.render_text());
+
+    // No deadline ⇒ nothing to be infeasible against, however large.
+    let no_deadline = ServeSpec {
+        retry_budget: 64, // also exercises the shl-overflow saturation path
+        retry_backoff_ms: 60_000,
+        ..Default::default()
+    };
+    let r = check_spec(&no_deadline);
+    assert!(r.is_empty(), "retry policy without a deadline flagged:\n{}", r.render_text());
+}
+
+/// Seeded-bad chaos-flag combinations pinned as golden fixtures, like the
+/// prefix-scheduler set above: CLV037–CLV039 wiring stays stable under
+/// message rewording.
+#[test]
+fn chaos_flag_fixtures_match_goldens() {
+    let m = Manifest::load(fixtures().join("good")).unwrap();
+    let cases: [(&str, ServeSpec); 3] = [
+        (
+            "bad_fault_plan",
+            ServeSpec {
+                fault_plan: Some("transient=lots,spike-factor=0".into()),
+                ..Default::default()
+            },
+        ),
+        ("bad_breaker", ServeSpec { breaker: Some((0.9, 0.2)), ..Default::default() }),
+        (
+            "warn_retry_deadline",
+            ServeSpec {
+                retry_budget: 8,
+                retry_backoff_ms: 50,
+                deadline_ms: Some(2_000),
+                ..Default::default()
+            },
+        ),
+    ];
+    for (name, spec) in cases {
+        let mut report = Report::new();
+        check::check_engine_spec(&mut report, &m, &spec, "<flags>");
+        assert_golden(&mut report, &fixtures().join(format!("{name}.expected")));
+    }
 }
 
 /// Seeded-bad scheduler-flag combinations pinned as golden fixtures, like

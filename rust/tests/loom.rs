@@ -1,4 +1,4 @@
-//! Schedule-exploration models for the three protocols the serving spine
+//! Schedule-exploration models for the five protocols the serving spine
 //! only property-tests elsewhere:
 //!
 //! 1. **Ingress admission vs cancel** — a cancel rides an unbounded
@@ -16,6 +16,11 @@
 //!    entries; every column is decremented exactly once per holder, frees
 //!    exactly when the last reference lets go, and never resurrects
 //!    (`serve/kv.rs`, `serve/prefix.rs`).
+//! 5. **Worker death vs in-flight submit** — a terminal engine death
+//!    sweeps the ingress and drops the receiver while a submit races the
+//!    hand-off; the submission resolves exactly once — swept with one
+//!    terminal, refused at send, or disconnected with its stream — never
+//!    twice and never stranded (`server/gateway.rs`).
 //!
 //! With `--features loom` the shared state uses the loom types through
 //! [`clover::util::sync`] and `loom::model` drives schedule exploration
@@ -220,5 +225,94 @@ fn cow_refcount_decrement_vs_lane_free_frees_exactly_once() {
             store.attach_prefix(1, &cols).is_err(),
             "attaching freed columns must refuse, not resurrect"
         );
+    });
+}
+
+/// Protocol 5: worker death racing an in-flight submit (`gateway.rs`
+/// `engine_lost` + worker exit vs `submit_inner`).  The ingress is a
+/// bounded channel only the worker can drain; on a terminal engine death
+/// the worker sweeps it (terminal `Failed`/park for everything buffered),
+/// then exits, dropping the receiver — after which a send fails back to
+/// the submitter, who never got a ticket.  The race window is a send
+/// landing *between* the final sweep and the receiver drop: that
+/// submission is dropped with the channel, which closes its event stream
+/// — the client's `wait()` observes the closure as an error.  Whichever
+/// interleaving runs, the submission must land in **exactly one** bucket:
+/// swept (one terminal event), refused (send error, no ticket state), or
+/// disconnected (stream closed, no terminal) — never two, never none
+/// (none would be a client hung on a stream nobody will ever feed).
+#[test]
+fn worker_death_vs_inflight_submit_resolves_exactly_once() {
+    /// The ingress as the worker and submitter both see it: the buffered
+    /// queue plus whether the receiver is still alive.
+    struct Ingress {
+        queue: Vec<u64>,
+        open: bool,
+    }
+
+    model(|| {
+        let ingress = Arc::new(Mutex::new(Ingress { queue: Vec::new(), open: true }));
+        // Terminal-`Failed` ids from the death sweep (order irrelevant).
+        let swept = Arc::new(Mutex::new(Vec::<u64>::new()));
+        // Ids dropped with the receiver — their event stream closed.
+        let disconnected = Arc::new(Mutex::new(Vec::<u64>::new()));
+
+        // Submitter: `submit_inner`'s send against a possibly-dying
+        // worker.  Returns whether a ticket was issued.
+        let submitter = {
+            let ingress = Arc::clone(&ingress);
+            thread::spawn(move || {
+                let mut ch = lock(&ingress);
+                if ch.open {
+                    ch.queue.push(7);
+                    true // send succeeded: the caller holds a live ticket
+                } else {
+                    false // SubmitError::Closed: no id, no stream
+                }
+            })
+        };
+
+        // Worker death path: `engine_lost` sweeps the ingress (delivering
+        // a terminal per buffered submission), the supervisor loop runs
+        // one more sweep on the way out (shutdown drain — a swept id must
+        // NOT get a second terminal), then the receiver drops: the
+        // channel closes and anything still buffered disconnects.
+        let worker = {
+            let ingress = Arc::clone(&ingress);
+            let swept = Arc::clone(&swept);
+            let disconnected = Arc::clone(&disconnected);
+            thread::spawn(move || {
+                for _ in 0..2 {
+                    let drained: Vec<u64> = lock(&ingress).queue.drain(..).collect();
+                    lock(&swept).extend(drained);
+                }
+                let mut ch = lock(&ingress);
+                ch.open = false;
+                lock(&disconnected).extend(ch.queue.drain(..));
+            })
+        };
+
+        let ticketed = submitter.join().unwrap();
+        worker.join().unwrap();
+
+        let swept = lock(&swept);
+        let disconnected = lock(&disconnected);
+        assert!(lock(&ingress).queue.is_empty(), "nothing may stay buffered past death");
+        let terminals = swept.iter().filter(|&&id| id == 7).count();
+        let closures = disconnected.iter().filter(|&&id| id == 7).count();
+        if ticketed {
+            assert_eq!(
+                terminals + closures,
+                1,
+                "a ticketed submission resolves exactly once \
+                 (terminals {terminals}, closures {closures})"
+            );
+        } else {
+            assert_eq!(
+                (terminals, closures),
+                (0, 0),
+                "a refused submission left state behind"
+            );
+        }
     });
 }

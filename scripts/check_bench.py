@@ -64,8 +64,8 @@ def require(doc, keys, path="$"):
 
 def check_serve(doc):
     yield from require(doc, ["bench", "preset", "prefill", "speculative", "kv_codec",
-                             "layer_budgets", "obs", "prefix_cache", "engines",
-                             "pjrt_skipped"])
+                             "layer_budgets", "obs", "prefix_cache", "fault_recovery",
+                             "engines", "pjrt_skipped"])
     prefill = doc.get("prefill", {})
     yield from require(prefill, ["backend", "prompt_tokens", "ladder", "chunks"],
                        "$.prefill")
@@ -259,6 +259,70 @@ def check_serve(doc):
     if tight and not tight.get("bit_identical_to_cold", False):
         yield ("$.prefix_cache.tight_budget: eviction under pressure broke "
                "bit-identity to the cold trace")
+    fr = doc.get("fault_recovery", {})
+    yield from require(
+        fr, ["backend", "fault_seed", "requests", "retry", "rates", "recovery",
+             "failover"],
+        "$.fault_recovery")
+    fr_rates = fr.get("rates", [])
+    if not fr_rates:
+        yield "$.fault_recovery.rates: empty — the transient-rate sweep was not benched"
+    if fr_rates and not any(_metric(r, "transient_rate") == 0.0 for r in fr_rates):
+        yield "$.fault_recovery.rates: no fault-free (rate 0) row to compare against"
+    for i, row in enumerate(fr_rates):
+        yield from require(
+            row,
+            ["transient_rate", "completed", "failed", "lost", "step_faults",
+             "step_retries", "goodput_tokens_per_s", "goodput_vs_fault_free",
+             "ttft_p99_s", "bit_identical_to_fault_free"],
+            f"$.fault_recovery.rates[{i}]")
+        # The conservation bar: no injection rate may lose a request —
+        # every accepted request ends in exactly one terminal event.
+        if _metric(row, "lost") != 0:
+            yield (f"$.fault_recovery.rates[{i}]: lost {row.get('lost')!r} != 0 — "
+                   "a request vanished without a terminal event")
+        if not row.get("bit_identical_to_fault_free", False):
+            yield (f"$.fault_recovery.rates[{i}]: completed rows diverged from the "
+                   "fault-free serve — retry broke the bit-identity invariant")
+        rate = _metric(row, "transient_rate")
+        ratio = _metric(row, "goodput_vs_fault_free")
+        # The goodput bar: at a 1% transient rate, retries must keep >=
+        # 90% of fault-free goodput (virtual time, so this is exact).
+        if rate is not None and abs(rate - 0.01) < 1e-12 \
+                and (ratio is None or ratio < 0.9):
+            yield (f"$.fault_recovery.rates[{i}]: goodput_vs_fault_free "
+                   f"{row.get('goodput_vs_fault_free')!r} < 0.9 at the 1% transient "
+                   "rate — recovery costs more than the bar allows")
+    rec = fr.get("recovery", {})
+    yield from require(
+        rec, ["requests", "restarts", "recovery_s", "completed", "failed", "lost",
+              "bit_identical"],
+        "$.fault_recovery.recovery")
+    if rec:
+        if _metric(rec, "lost") != 0:
+            yield (f"$.fault_recovery.recovery: lost {rec.get('lost')!r} != 0 — "
+                   "supervision dropped a request")
+        restarts = _metric(rec, "restarts")
+        if restarts is None or restarts < 1:
+            yield (f"$.fault_recovery.recovery: restarts {rec.get('restarts')!r} < 1 "
+                   "— the scheduled death never exercised the supervisor")
+        if not rec.get("bit_identical", False):
+            yield ("$.fault_recovery.recovery: replayed rows diverged from the clean "
+                   "gateway — recovery is not lossless")
+    fo = fr.get("failover", {})
+    yield from require(
+        fo, ["requests", "failed_over", "breaker_open", "completed", "failed", "lost",
+             "bit_identical"],
+        "$.fault_recovery.failover")
+    if fo:
+        if _metric(fo, "lost") != 0:
+            yield (f"$.fault_recovery.failover: lost {fo.get('lost')!r} != 0 — "
+                   "failover dropped a request")
+        if not fo.get("breaker_open", False):
+            yield "$.fault_recovery.failover: the dead engine's breaker is not Open"
+        if not fo.get("bit_identical", False):
+            yield ("$.fault_recovery.failover: re-homed rows diverged from the clean "
+                   "gateway — failover is not lossless")
     if not doc.get("pjrt_skipped", True):
         for i, eng in enumerate(doc.get("engines", [])):
             yield from require(
@@ -386,10 +450,11 @@ BASELINE_SECTIONS = [
     ("speculative", "sweep", "draft_len"),
     ("kv_codec", "codecs", "codec"),
     ("prefix_cache", "sweep", "share"),
+    ("fault_recovery", "rates", "transient_rate"),
 ]
 # Fresh value must keep >= 85% of the baseline (throughput-like metrics).
 DOWN_METRICS = ["tokens_per_s", "max_concurrent_lanes", "tokens_per_s_cache_on",
-                "prefix_hits"]
+                "prefix_hits", "goodput_vs_fault_free"]
 # Fresh value must stay <= 115% of the baseline (work-per-token metrics;
 # step counts are deterministic on the stub, so growth is a scheduling
 # regression, not noise — and the prefix sweep runs on virtual time, so
